@@ -1,0 +1,87 @@
+//! Ablation: homing granularity (DESIGN.md §5).
+//!
+//! The paper argues hash-for-home at *cache-line* granularity is too fine
+//! for sequential array computation. This ablation isolates granularity by
+//! running the micro-benchmark access pattern with the input homed four
+//! ways: line-hashed, page-hashed, stranded on tile 0, and localised
+//! (chunk-per-worker). Expected: line-hash ≈ page-hash ≫ tile-0 hot spot,
+//! and localisation beating all of them once reuse amortises the copy —
+//! i.e. the win comes from *placement on the consumer*, and chunk
+//! granularity is what makes that placement possible.
+//!
+//! Run: `cargo bench --bench ablation_granularity`
+//! Env: TILESIM_SIZE (default 1M), TILESIM_REPS (default 16), TILESIM_OUT.
+
+use tilesim::arch::TileId;
+use tilesim::coordinator::localise::{build_program, LocaliseConfig, ELEM_BYTES};
+use tilesim::harness::SweepTable;
+use tilesim::mem::{AllocKind, HashPolicy, Homing, MemConfig, Placement};
+use tilesim::sched::StaticMapper;
+use tilesim::sim::{Engine, EngineConfig, Loc, TraceBuilder};
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+struct Scan {
+    passes: u32,
+}
+
+impl tilesim::coordinator::ChunkKernel for Scan {
+    fn emit(&self, t: &mut TraceBuilder, chunk: Loc, bytes: u64, _i: usize) {
+        for _ in 0..self.passes {
+            t.read(chunk, bytes);
+        }
+    }
+}
+
+/// Run the scan with the input explicitly homed via `homing`.
+fn run_with_homing(elems: u64, threads: usize, passes: u32, homing: Homing, localised: bool) -> f64 {
+    let mut e = Engine::new(EngineConfig::tilepro64(MemConfig {
+        hash_policy: HashPolicy::None,
+        striping: true,
+    }));
+    let input = e
+        .alloc
+        .alloc_with(
+            TileId(0),
+            elems * ELEM_BYTES,
+            AllocKind::Heap,
+            homing,
+            Placement::Striped,
+        )
+        .expect("alloc");
+    let p = build_program(&input, elems, &LocaliseConfig { threads, localised }, &Scan { passes });
+    e.run(&p, &mut StaticMapper::new()).expect("run").seconds()
+}
+
+fn main() {
+    let elems = env_u64("TILESIM_SIZE", 1_000_000);
+    let passes = env_u64("TILESIM_REPS", 16) as u32;
+    let threads = 63;
+    let mut table = SweepTable::new(
+        &format!("Ablation: homing granularity, {elems} ints, {threads} threads (exec time, s)"),
+        "passes",
+        vec![
+            "line-hash".into(),
+            "page-hash".into(),
+            "tile0-home".into(),
+            "localised".into(),
+        ],
+    );
+    for p in [1u32, passes / 2, passes] {
+        let p = p.max(1);
+        table.push_row(
+            p.to_string(),
+            vec![
+                run_with_homing(elems, threads, p, Homing::HashForHome, false),
+                run_with_homing(elems, threads, p, Homing::PageHash, false),
+                run_with_homing(elems, threads, p, Homing::Single(TileId(0)), false),
+                run_with_homing(elems, threads, p, Homing::Single(TileId(0)), true),
+            ],
+        );
+    }
+    println!("{}", table.render());
+    let out = std::env::var("TILESIM_OUT").unwrap_or_else(|_| "bench_results".into());
+    table.save(&out, "ablation_granularity").expect("save failed");
+}

@@ -1,0 +1,63 @@
+//! Ablation: Tile Linux migration rate (DESIGN.md §5).
+//!
+//! The paper attributes much of the static-mapping win to avoided thread
+//! migrations. This sweep varies the modelled load-balancer migration
+//! probability from 0 (≈ static placement with a randomised initial map)
+//! upward, on the Case 1 merge sort. Expected: execution time grows
+//! monotonically-ish with migration rate; localised runs suffer *more* per
+//! migration (their chunk homing is stranded on the old tile).
+//!
+//! Run: `cargo bench --bench ablation_migration`
+//! Env: TILESIM_SIZE (default 2M), TILESIM_OUT.
+
+use tilesim::harness::SweepTable;
+use tilesim::mem::{HashPolicy, MemConfig};
+use tilesim::sched::{TileLinuxConfig, TileLinuxScheduler};
+use tilesim::sim::{Engine, EngineConfig};
+use tilesim::workloads::mergesort::{self, MergesortConfig, Variant};
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn run(elems: u64, variant: Variant, policy: HashPolicy, prob: f64) -> (f64, u64) {
+    let mut e = Engine::new(EngineConfig::tilepro64(MemConfig {
+        hash_policy: policy,
+        striping: true,
+    }));
+    let p = mergesort::build(
+        &mut e,
+        &MergesortConfig {
+            elems,
+            threads: 64,
+            variant,
+        },
+    );
+    let mut sched = TileLinuxScheduler::new(TileLinuxConfig {
+        migrate_prob: prob,
+        ..Default::default()
+    });
+    let stats = e.run(&p, &mut sched).expect("run");
+    (stats.seconds(), stats.migrations)
+}
+
+fn main() {
+    let elems = env_u64("TILESIM_SIZE", 2_000_000);
+    let mut table = SweepTable::new(
+        &format!("Ablation: migration probability, merge sort {elems} ints, 64 threads"),
+        "migrate_prob",
+        vec![
+            "case1-like (s)".into(),
+            "migrations".into(),
+            "localised (s)".into(),
+        ],
+    );
+    for prob in [0.0, 0.1, 0.2, 0.4, 0.8] {
+        let (t_nl, migr) = run(elems, Variant::NonLocalised, HashPolicy::AllButStack, prob);
+        let (t_loc, _) = run(elems, Variant::Localised, HashPolicy::None, prob);
+        table.push_row(format!("{prob:.1}"), vec![t_nl, migr as f64, t_loc]);
+    }
+    println!("{}", table.render());
+    let out = std::env::var("TILESIM_OUT").unwrap_or_else(|_| "bench_results".into());
+    table.save(&out, "ablation_migration").expect("save failed");
+}

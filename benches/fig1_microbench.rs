@@ -1,0 +1,32 @@
+//! Fig. 1: micro-benchmark execution time vs repetition count.
+//!
+//! Paper setup: 1 M integers over 63 threads on the TILEPro64 @ 860 MHz;
+//! *localised* (static mapping + `ucache_hash=none`) vs *non-localised*
+//! (Tile Linux default mapping + hash-for-home). Expected shape: the
+//! localised line is flatter — its marginal cost per repetition is a local
+//! L2 pass — so the gap widens as repetitions grow; at 1 repetition the
+//! copy is not amortised and non-localised wins.
+//!
+//! Run: `cargo bench --bench fig1_microbench`
+//! Env: TILESIM_SIZE (elements, default 1M), TILESIM_OUT (json dir).
+
+use tilesim::coordinator::experiment;
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let elems = env_u64("TILESIM_SIZE", 1_000_000);
+    let reps = [1u32, 2, 4, 8, 16, 32, 64];
+    let table = experiment::fig1(elems, 63, &reps, experiment::DEFAULT_SEED);
+    println!("{}", table.render());
+    let ratio_last = table.rows.last().map(|(_, v)| v[0] / v[1]).unwrap_or(0.0);
+    println!(
+        "non-localised / localised at {} reps: {:.2}x (paper: grows with repetitions)",
+        reps.last().unwrap(),
+        ratio_last
+    );
+    let out = std::env::var("TILESIM_OUT").unwrap_or_else(|_| "bench_results".into());
+    table.save(&out, "fig1").expect("save failed");
+}

@@ -1,0 +1,32 @@
+//! Fig. 2: merge-sort speed-up for all 8 Table 1 cases vs thread count.
+//!
+//! Paper setup: 100 M integers, striping enabled, speed-up base = Case 1 at
+//! one thread. We default to 4 M (the simulator is cycle-approximate, not
+//! the silicon; the shape's size dependence is charted by fig3): expected
+//! ordering at high thread counts: localised+static (7, 8) on top, then
+//! non-localised static/linux under hash (3, 1), with non-localised under
+//! local homing (2, 4) collapsing on the tile-0 hot spot.
+//!
+//! Run: `cargo bench --bench fig2_speedup`
+//! Env: TILESIM_SIZE (default 4M), TILESIM_OUT.
+
+use tilesim::coordinator::experiment;
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let elems = env_u64("TILESIM_SIZE", 4_000_000);
+    let threads = [1usize, 2, 4, 8, 16, 32, 64];
+    let table = experiment::fig2(elems, &threads, experiment::DEFAULT_SEED);
+    println!("{}", table.render());
+    if let Some((_, last)) = table.rows.last() {
+        println!(
+            "at 64 threads: case8 {:.2}x vs case3 {:.2}x vs case2 {:.2}x (paper: 8 ≥ 7 > 3 ≫ 2)",
+            last[7], last[2], last[1]
+        );
+    }
+    let out = std::env::var("TILESIM_OUT").unwrap_or_else(|_| "bench_results".into());
+    table.save(&out, "fig2").expect("save failed");
+}

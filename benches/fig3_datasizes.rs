@@ -1,0 +1,38 @@
+//! Fig. 3: execution time of the best cases across input sizes (§5.2),
+//! 64 threads, striping enabled, plus the *intermediate step* series
+//! (Case 3 + ext_scr merge without copy-back).
+//!
+//! Expected shape (the paper's key size claim): while the working set fits
+//! the aggregate distributed L3 (64 × 64 KB = 4 MB ⇒ ~1 M ints), hash-based
+//! cases are competitive; as the input grows past it, Case 8
+//! (localised + local homing) pulls ahead of every hash-for-home style.
+//! The intermediate step helps Case 3 but is second-order vs localisation.
+//!
+//! Run: `cargo bench --bench fig3_datasizes`
+//! Env: TILESIM_SIZES (comma list, default 1,2,4,8 M), TILESIM_OUT.
+
+use tilesim::coordinator::experiment;
+
+fn main() {
+    let sizes: Vec<u64> = std::env::var("TILESIM_SIZES")
+        .ok()
+        .map(|s| {
+            s.split(',')
+                .map(|x| x.trim().parse().expect("bad TILESIM_SIZES"))
+                .collect()
+        })
+        .unwrap_or_else(|| vec![1_000_000, 2_000_000, 4_000_000, 8_000_000]);
+    let table = experiment::fig3(&sizes, 64, experiment::DEFAULT_SEED);
+    println!("{}", table.render());
+    if let (Some((_, first)), Some((_, last))) = (table.rows.first(), table.rows.last()) {
+        println!(
+            "case8/case3 time ratio: {:.2} at {} elems -> {:.2} at {} elems (paper: falls with size)",
+            first[4] / first[0],
+            sizes.first().unwrap(),
+            last[4] / last[0],
+            sizes.last().unwrap()
+        );
+    }
+    let out = std::env::var("TILESIM_OUT").unwrap_or_else(|_| "bench_results".into());
+    table.save(&out, "fig3").expect("save failed");
+}

@@ -1,0 +1,40 @@
+//! Fig. 4: influence of memory striping under static mapping (§5.3).
+//!
+//! Expected shape: moving 16→32 threads, striping helps (ordered static
+//! mapping parks threads 0–31 on the top half of the chip, which only
+//! reaches 2 of the 4 controllers without striping); at 64 threads all
+//! controllers are used either way and the effect shrinks or reverses.
+//! With caching on, striping is mostly transparent overall — the paper's
+//! closing point.
+//!
+//! Run: `cargo bench --bench fig4_striping`
+//! Env: TILESIM_SIZE (default 2M), TILESIM_OUT.
+
+use tilesim::coordinator::experiment;
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let elems = env_u64("TILESIM_SIZE", 2_000_000);
+    let threads = [16usize, 32, 64];
+    let table = experiment::fig4(elems, &threads, experiment::DEFAULT_SEED);
+    println!("{}", table.render());
+    // Striping benefit at 32 threads for the DRAM-bound case 8.
+    if table.rows.len() >= 2 {
+        let row32 = &table.rows[1].1;
+        println!(
+            "case8 at 32 threads: striped {:.4}s vs non-striped {:.4}s (paper: striping helps here)",
+            row32[2], row32[3]
+        );
+    }
+    let out = std::env::var("TILESIM_OUT").unwrap_or_else(|_| "bench_results".into());
+    table.save(&out, "fig4").expect("save failed");
+
+    // The paper's closing observation: with caches OFF the striping effect
+    // is "much more observable". Smaller input — every access is DRAM.
+    let off = experiment::fig4_cache_off(elems / 8, &threads, experiment::DEFAULT_SEED);
+    println!("{}", off.render());
+    off.save(&out, "fig4_cache_off").expect("save failed");
+}

@@ -1,0 +1,77 @@
+//! §Perf: wall-clock throughput of the simulator itself (line events per
+//! second) and of the PJRT request path (keys sorted per second).
+//!
+//! This is the harness used for the EXPERIMENTS.md §Perf iteration log —
+//! it measures *our* implementation, not the simulated machine.
+//!
+//! Run: `cargo bench --bench perf_engine`
+//! Env: TILESIM_SIZE (default 2M), TILESIM_SKIP_PJRT=1 to skip the sorter.
+
+use std::time::Instant;
+
+use tilesim::coordinator::{case, experiment};
+use tilesim::harness::time_it;
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let elems = env_u64("TILESIM_SIZE", 2_000_000);
+
+    // --- L3 engine throughput on the fig2 workhorse (case 8, 64 threads).
+    let c8 = case(8);
+    let stats = experiment::run_mergesort(&c8, elems, 64, true, experiment::DEFAULT_SEED);
+    let events = stats.line_accesses;
+    let t = time_it(1, 3, || {
+        let s = experiment::run_mergesort(&c8, elems, 64, true, experiment::DEFAULT_SEED);
+        std::hint::black_box(s.makespan_cycles);
+    });
+    println!("{}", t.summary("engine: mergesort case8 64t"));
+    println!(
+        "engine throughput: {:.1} M line-events/s ({} events/run)",
+        events as f64 / t.min_s / 1e6,
+        events
+    );
+
+    // --- also the disaster case (hot-spot path stresses the directory).
+    let c2 = case(2);
+    let stats2 = experiment::run_mergesort(&c2, elems, 64, true, experiment::DEFAULT_SEED);
+    let t2 = time_it(0, 2, || {
+        let s = experiment::run_mergesort(&c2, elems, 64, true, experiment::DEFAULT_SEED);
+        std::hint::black_box(s.makespan_cycles);
+    });
+    println!("{}", t2.summary("engine: mergesort case2 64t"));
+    println!(
+        "engine throughput: {:.1} M line-events/s ({} events/run)",
+        stats2.line_accesses as f64 / t2.min_s / 1e6,
+        stats2.line_accesses
+    );
+
+    // --- request path: PJRT chunked sorter throughput.
+    if std::env::var("TILESIM_SKIP_PJRT").is_err() {
+        let dir = tilesim::runtime::artifacts_dir();
+        match tilesim::runtime::ArtifactSet::load(&dir) {
+            Ok(set) => {
+                let sorter = tilesim::runtime::ChunkedSorter::new(&set).expect("sorter");
+                let mut rng = tilesim::util::rng::Rng::new(7);
+                let data = rng.i32_vec(tilesim::runtime::BATCH);
+                // Warm + measure single-batch dispatch latency.
+                let _ = sorter.sort_batch(&data).expect("sort");
+                let t0 = Instant::now();
+                let iters = 5;
+                for _ in 0..iters {
+                    std::hint::black_box(sorter.sort_batch(&data).expect("sort"));
+                }
+                let per = t0.elapsed().as_secs_f64() / iters as f64;
+                println!(
+                    "pjrt sorter: {:.2} ms / {} keys = {:.2} M keys/s",
+                    per * 1e3,
+                    tilesim::runtime::BATCH,
+                    tilesim::runtime::BATCH as f64 / per / 1e6
+                );
+            }
+            Err(e) => println!("pjrt sorter: skipped ({e}) — run `make artifacts`"),
+        }
+    }
+}

@@ -1,0 +1,27 @@
+//! Table 1: all eight cases at a fixed thread count — execution times and
+//! speed-ups vs Case 1, the tabular companion to Fig. 2.
+//!
+//! Run: `cargo bench --bench table1_cases`
+//! Env: TILESIM_SIZE (default 4M), TILESIM_THREADS (default 64), TILESIM_OUT.
+
+use tilesim::coordinator::experiment;
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let elems = env_u64("TILESIM_SIZE", 4_000_000);
+    let threads = env_u64("TILESIM_THREADS", 64) as usize;
+    let table = experiment::table1_times(elems, threads, experiment::DEFAULT_SEED);
+    println!("{}", table.render());
+    let best = table
+        .rows
+        .iter()
+        .min_by(|a, b| a.1[0].partial_cmp(&b.1[0]).unwrap())
+        .map(|(name, _)| name.clone())
+        .unwrap_or_default();
+    println!("fastest case: {best} (paper: case 8, then 7 and 3)");
+    let out = std::env::var("TILESIM_OUT").unwrap_or_else(|_| "bench_results".into());
+    table.save(&out, "table1").expect("save failed");
+}

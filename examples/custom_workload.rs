@@ -1,0 +1,79 @@
+//! Custom workload: the localisation API on *your* computation.
+//!
+//! The paper claims Algorithm 1 generalises to "any parallelisable array
+//! computation where each part of the array is accessed multiple times".
+//! This example writes a new kernel (an iterative 3-point stencil) against
+//! `coordinator::localise::ChunkKernel`, then measures conventional vs
+//! localised under both hash policies — the user-facing workflow for
+//! adopting the technique.
+//!
+//! Run: `cargo run --release --example custom_workload`
+
+use tilesim::arch::TileId;
+use tilesim::coordinator::localise::{build_program, ChunkKernel, LocaliseConfig, ELEM_BYTES};
+use tilesim::mem::{HashPolicy, MemConfig};
+use tilesim::sched::StaticMapper;
+use tilesim::sim::{Engine, EngineConfig, Loc, TraceBuilder};
+
+/// Your computation: `sweeps` Jacobi smoothing passes over the chunk.
+struct Smoother {
+    sweeps: u32,
+}
+
+impl ChunkKernel for Smoother {
+    fn emit(&self, t: &mut TraceBuilder, chunk: Loc, bytes: u64, _thread: usize) {
+        let elems = bytes / ELEM_BYTES;
+        for _ in 0..self.sweeps {
+            t.read(chunk, bytes) // read neighbourhood
+                .compute(elems * 3) // 3-point update
+                .write(chunk, bytes); // write smoothed values
+        }
+    }
+    fn name(&self) -> &'static str {
+        "jacobi-smoother"
+    }
+}
+
+fn run(policy: HashPolicy, localised: bool, elems: u64, sweeps: u32) -> f64 {
+    let mut engine = Engine::new(EngineConfig::tilepro64(MemConfig {
+        hash_policy: policy,
+        striping: true,
+    }));
+    // The input is produced by the "main thread" (tile 0) — the worst case
+    // for data placement, exactly like the paper's array0.
+    let input = engine.prealloc_touched(TileId(0), elems * ELEM_BYTES);
+    let program = build_program(
+        &input,
+        elems,
+        &LocaliseConfig {
+            threads: 63,
+            localised,
+        },
+        &Smoother { sweeps },
+    );
+    engine
+        .run(&program, &mut StaticMapper::new())
+        .expect("run failed")
+        .seconds()
+}
+
+fn main() {
+    let elems = 1_000_000u64;
+    let sweeps = 16u32;
+    println!("jacobi smoother, {elems} cells, {sweeps} sweeps, 63 threads:\n");
+    println!("{:<28}{:>14}{:>14}", "configuration", "time (s)", "speed-up");
+    let base = run(HashPolicy::AllButStack, false, elems, sweeps);
+    for (label, policy, localised) in [
+        ("conventional + hash", HashPolicy::AllButStack, false),
+        ("conventional + none", HashPolicy::None, false),
+        ("localised + hash", HashPolicy::AllButStack, true),
+        ("localised + none", HashPolicy::None, true),
+    ] {
+        let t = run(policy, localised, elems, sweeps);
+        println!("{label:<28}{t:>14.4}{:>13.2}x", base / t);
+    }
+    println!(
+        "\nThe same ChunkKernel ran unmodified under every policy — no\n\
+         architecture-specific API, exactly the paper's portability claim."
+    );
+}

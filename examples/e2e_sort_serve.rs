@@ -1,0 +1,96 @@
+//! End-to-end driver (DESIGN.md §4 E2E): the full system on a real
+//! workload, all three layers composing.
+//!
+//! A batch-sort "service": the rust coordinator (L3) receives sort
+//! requests of random sizes, chunk-dispatches them to the AOT-compiled
+//! JAX/Pallas sorter (L2/L1) over PJRT, k-way merges the results, verifies
+//! every response against std sort, and reports latency/throughput
+//! percentiles. In parallel it replays the same total workload on the
+//! simulated TILEPro64 under Case 1 vs Case 8 to report the paper's
+//! headline metric on this exact workload.
+//!
+//! Run: `cargo run --release --example e2e_sort_serve`
+//! Env: E2E_REQUESTS (default 24), E2E_MAX_KEYS (default 200_000).
+
+use std::time::Instant;
+
+use tilesim::coordinator::{case, experiment};
+use tilesim::runtime::{ArtifactSet, ChunkedSorter};
+use tilesim::util::rng::Rng;
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let n_requests = env_u64("E2E_REQUESTS", 24) as usize;
+    let max_keys = env_u64("E2E_MAX_KEYS", 200_000) as usize;
+
+    // --- real serving path ------------------------------------------------
+    let dir = tilesim::runtime::artifacts_dir();
+    let set = ArtifactSet::load(&dir).expect("artifacts missing — run `make artifacts`");
+    let sorter = ChunkedSorter::new(&set).expect("full_sort artifact");
+
+    let mut rng = Rng::new(2014);
+    let mut latencies = Vec::with_capacity(n_requests);
+    let mut total_keys = 0usize;
+    let t_all = Instant::now();
+    for req in 0..n_requests {
+        let n = rng.range(1_000, max_keys as u64) as usize;
+        let data = rng.i32_vec(n);
+        let t0 = Instant::now();
+        let (sorted, metrics) = sorter.sort(&data).expect("sort failed");
+        let dt = t0.elapsed().as_secs_f64();
+        // Verify EVERY response.
+        let mut want = data.clone();
+        want.sort_unstable();
+        assert_eq!(sorted, want, "request {req}: wrong result");
+        latencies.push(dt);
+        total_keys += n;
+        if req < 3 {
+            println!(
+                "req {req}: {n} keys in {:.1} ms ({} PJRT dispatches, {} padded)",
+                dt * 1e3,
+                metrics.dispatches,
+                metrics.padded
+            );
+        }
+    }
+    let wall = t_all.elapsed().as_secs_f64();
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| latencies[(p * (latencies.len() - 1) as f64) as usize];
+    println!(
+        "\nserved {n_requests} requests / {total_keys} keys in {wall:.2}s \
+         ({:.1} k keys/s) — all responses verified",
+        total_keys as f64 / wall / 1e3
+    );
+    println!(
+        "latency: p50 {:.1} ms, p90 {:.1} ms, max {:.1} ms",
+        pct(0.5) * 1e3,
+        pct(0.9) * 1e3,
+        pct(1.0) * 1e3
+    );
+
+    // --- simulated counterpart: the paper's metric on this workload -------
+    println!("\nsimulated TILEPro64 on the same total workload ({total_keys} ints):");
+    let base = experiment::run_mergesort(
+        &case(1),
+        total_keys as u64,
+        64,
+        true,
+        experiment::DEFAULT_SEED,
+    );
+    let loc = experiment::run_mergesort(
+        &case(8),
+        total_keys as u64,
+        64,
+        true,
+        experiment::DEFAULT_SEED,
+    );
+    println!(
+        "  case 1 {:.1} ms vs case 8 {:.1} ms -> localisation speed-up {:.2}x",
+        base.seconds() * 1e3,
+        loc.seconds() * 1e3,
+        base.seconds() / loc.seconds()
+    );
+}

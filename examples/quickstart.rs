@@ -1,0 +1,48 @@
+//! Quickstart: the paper's result in 30 seconds.
+//!
+//! 1. Simulate the conventional style (Case 1) and the fully localised
+//!    style (Case 8) on a 1 M-integer parallel merge sort.
+//! 2. Sort real data through the AOT-compiled Pallas bitonic kernels via
+//!    PJRT, proving the three-layer stack composes.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use tilesim::coordinator::{case, experiment};
+use tilesim::runtime::{ArtifactSet, ChunkedSorter};
+use tilesim::util::rng::Rng;
+
+fn main() {
+    // --- 1. the simulated experiment -------------------------------------
+    let elems = 1_000_000u64;
+    let threads = 64usize;
+    println!("merge sort, {elems} ints, {threads} threads on the simulated TILEPro64:\n");
+    let base = experiment::run_mergesort(&case(1), elems, threads, true, experiment::DEFAULT_SEED);
+    let loc = experiment::run_mergesort(&case(8), elems, threads, true, experiment::DEFAULT_SEED);
+    println!("  {:<42} {:.3} ms", case(1).label(), base.seconds() * 1e3);
+    println!("  {:<42} {:.3} ms", case(8).label(), loc.seconds() * 1e3);
+    println!(
+        "\n  localisation speed-up: {:.2}x  (hits: {:.0}% local vs {:.0}% local)\n",
+        base.seconds() / loc.seconds(),
+        loc.local_hit_rate() * 100.0,
+        base.local_hit_rate() * 100.0,
+    );
+
+    // --- 2. the real compute path ----------------------------------------
+    let dir = tilesim::runtime::artifacts_dir();
+    match ArtifactSet::load(&dir) {
+        Ok(set) => {
+            let sorter = ChunkedSorter::new(&set).expect("full_sort artifact");
+            let mut rng = Rng::new(1);
+            let data = rng.i32_vec(100_000);
+            let t0 = std::time::Instant::now();
+            let (sorted, m) = sorter.sort(&data).expect("sort");
+            assert!(sorted.windows(2).all(|w| w[0] <= w[1]));
+            println!(
+                "PJRT path: sorted 100k keys via Pallas bitonic kernels in {:.1} ms ({} dispatches)",
+                t0.elapsed().as_secs_f64() * 1e3,
+                m.dispatches
+            );
+        }
+        Err(e) => println!("PJRT path skipped ({e}); run `make artifacts` first"),
+    }
+}

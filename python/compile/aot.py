@@ -1,0 +1,77 @@
+"""AOT compile path: lower the L2 model to HLO text artifacts.
+
+HLO *text* (not `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProtos with 64-bit instruction ids which the rust side's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids, so text round-trips cleanly. See /opt/xla-example/README.md.
+
+Run once via `make artifacts` (no-op when inputs are unchanged); python is
+never on the rust request path.
+
+Usage: cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import pathlib
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import export_specs
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_json(s) -> dict:
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def lower_all(out_dir: pathlib.Path) -> dict:
+    """Lower every export spec, write <name>.hlo.txt files and a manifest.
+
+    The manifest records input shapes/dtypes plus a content hash per
+    artifact so the rust runtime can validate what it loads (runtime's
+    ArtifactSet checks the manifest at startup).
+    """
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest = {"artifacts": []}
+    for name, fn, example_args in export_specs():
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        path = out_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "file": path.name,
+                "inputs": [_spec_json(s) for s in example_args],
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+                "bytes": len(text),
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"wrote {out_dir / 'manifest.json'}")
+    return manifest
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    args = parser.parse_args()
+    lower_all(pathlib.Path(args.out_dir))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""L1 Pallas kernel: per-chunk bitonic sort.
+
+This is the TPU re-think of the paper's *localisation* step (DESIGN.md
+SS Hardware-Adaptation): on the TILEPro64 each thread `memcpy`s its chunk into
+a freshly allocated array so the chunk is homed on the local tile; on TPU the
+BlockSpec below copies one chunk per grid step HBM->VMEM, and the whole
+O(C log^2 C) compare-exchange network then runs out of VMEM with no further
+HBM traffic. Coarse-grained locality (one chunk per grid step) instead of
+fine-grained "hash for home" (line-by-line HBM streaming).
+
+Pallas is run with interpret=True: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret-mode lowers to plain HLO that the rust runtime's
+PJRT CPU client executes directly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _compare_exchange(x: jax.Array, k: int, j: int) -> jax.Array:
+    """One vectorised stage of the bitonic network over a 1-D power-of-two array.
+
+    Element i is paired with i^j; the pair sorts ascending when bit k of i is
+    0 (the classic bitonic direction rule), so after all (k, j) stages the
+    array is ascending.
+    """
+    n = x.shape[-1]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    partner = idx ^ j
+    px = x[..., partner]
+    is_lower = (idx & j) == 0
+    dir_up = (idx & k) == 0
+    keep_min = jnp.logical_xor(is_lower, jnp.logical_not(dir_up))
+    lo = jnp.minimum(x, px)
+    hi = jnp.maximum(x, px)
+    return jnp.where(keep_min, lo, hi)
+
+
+def bitonic_sort_1d(x: jax.Array) -> jax.Array:
+    """Full bitonic sort of a 1-D power-of-two-length array, ascending.
+
+    Stages are unrolled at trace time (length is static), which is exactly
+    what a hand-scheduled TPU kernel would do: the network shape is known at
+    compile time, so there is no data-dependent control flow on the VPU.
+    """
+    n = x.shape[-1]
+    if n & (n - 1):
+        raise ValueError(f"bitonic sort needs a power-of-two length, got {n}")
+    k = 2
+    while k <= n:
+        j = k // 2
+        while j >= 1:
+            x = _compare_exchange(x, k, j)
+            j //= 2
+        k *= 2
+    return x
+
+
+def _sort_chunk_kernel(x_ref, o_ref):
+    """Pallas kernel body: sort one (1, C) chunk resident in VMEM."""
+    row = x_ref[0, :]
+    o_ref[0, :] = bitonic_sort_1d(row)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sort_chunks(x: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """Sort each row of a (num_chunks, C) array independently (ascending).
+
+    Grid iterates over chunks; BlockSpec (1, C) is the HBM->VMEM
+    "localisation" copy. VMEM footprint per grid step: 2 * C * itemsize
+    (input block + output block), far under the ~16 MiB VMEM budget for any
+    C we export.
+    """
+    num_chunks, chunk = x.shape
+    return pl.pallas_call(
+        _sort_chunk_kernel,
+        out_shape=jax.ShapeDtypeStruct((num_chunks, chunk), x.dtype),
+        grid=(num_chunks,),
+        in_specs=[pl.BlockSpec((1, chunk), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, chunk), lambda i: (i, 0)),
+        interpret=interpret,
+    )(x)

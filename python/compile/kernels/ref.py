@@ -1,0 +1,30 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Everything here is the "obviously correct" formulation (jnp.sort / concat +
+sort); pytest and hypothesis compare the kernels against these on swept
+shapes and dtypes. Nothing in this file is ever exported to HLO.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sort_chunks_ref(x: jax.Array) -> jax.Array:
+    """Row-wise ascending sort of a (num_chunks, C) array."""
+    return jnp.sort(x, axis=-1)
+
+
+def merge_pass_ref(x: jax.Array) -> jax.Array:
+    """Merge row pairs (2i, 2i+1) of a (num_runs, R) array of ascending runs."""
+    num_runs, run = x.shape
+    paired = x.reshape(num_runs // 2, 2 * run)
+    merged = jnp.sort(paired, axis=-1)
+    return merged.reshape(num_runs, run)
+
+
+def full_sort_ref(x: jax.Array) -> jax.Array:
+    """Globally ascending sort of a (num_chunks, C) array, row-major layout."""
+    flat = jnp.sort(x.reshape(-1))
+    return flat.reshape(x.shape)

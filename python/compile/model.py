@@ -1,0 +1,129 @@
+"""L2 JAX model: the chunked sorter and the analytical NUCA latency model.
+
+The sorter mirrors the paper's merge-sort structure exactly: the input array
+is split into num_chunks runs, each run is sorted locally (the Pallas chunk
+kernel = the per-thread `mergesort_serial` on a localised copy), then a
+log2(num_chunks)-level reduction tree of pairwise merges (the Pallas merge
+kernel = the `merge` function) produces the sorted array.
+
+The latency model is a vectorised closed form of the rust event simulator's
+per-access cost (rust/src/arch/params.rs mirrors these constants); the rust
+integration tests execute the exported HLO and cross-check it against the
+event-driven path, so the two layers cannot silently drift apart.
+
+Everything here is build-time Python: `aot.py` lowers these functions once to
+HLO text and the rust coordinator executes the artifacts via PJRT.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.bitonic import sort_chunks
+from .kernels.merge import merge_pass
+
+# ---------------------------------------------------------------------------
+# Chunked sorter (calls the L1 Pallas kernels)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def full_sort(x: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """Globally sort a (num_chunks, C) array ascending in row-major order.
+
+    num_chunks and C must be powers of two. The merge tree reshapes between
+    levels so the same pairwise-merge kernel handles every level; the level
+    loop is unrolled at trace time (static shapes), so the lowered HLO is a
+    straight-line pipeline of pallas calls XLA can schedule back-to-back.
+    """
+    num_chunks, chunk = x.shape
+    if num_chunks & (num_chunks - 1) or chunk & (chunk - 1):
+        raise ValueError(f"full_sort needs power-of-two dims, got {x.shape}")
+    y = sort_chunks(x, interpret=interpret)
+    levels = int(math.log2(num_chunks))
+    runs, run = num_chunks, chunk
+    for _ in range(levels):
+        y = merge_pass(y.reshape(runs, run), interpret=interpret)
+        runs //= 2
+        run *= 2
+    return y.reshape(num_chunks, chunk)
+
+
+# ---------------------------------------------------------------------------
+# Analytical NUCA latency model (TILEPro64 DDC)
+# ---------------------------------------------------------------------------
+# These constants are the single source of truth shared with
+# rust/src/arch/params.rs (see LatencyParams::TILEPRO64). Units: cycles at
+# 860 MHz, per cache-line (64 B) access.
+
+L1_HIT_CYCLES = 2.0
+L2_HIT_CYCLES = 8.0
+NOC_HEADER_CYCLES = 6.0
+NOC_HOP_CYCLES = 1.0
+DDR_CYCLES = 88.0
+
+LEVEL_L1 = 0
+LEVEL_L2 = 1
+LEVEL_HOME = 2  # remote home tile's L2 = the distributed "L3"
+LEVEL_DDR = 3
+
+
+def latency_model(
+    req_xy: jax.Array,  # (N, 2) i32 — requesting tile (x, y)
+    dst_xy: jax.Array,  # (N, 2) i32 — home tile (level 2) or controller attach (level 3)
+    level: jax.Array,  # (N,) i32 — hit level per access (LEVEL_*)
+    contention: jax.Array,  # (N,) f32 — additive queueing cycles (link + home/ctrl)
+) -> tuple[jax.Array, jax.Array]:
+    """Per-access latency (cycles) and the batch total.
+
+    Level 2 pays round-trip mesh hops to the home tile plus the home L2
+    lookup; level 3 pays hops to the memory controller plus DRAM. XY routing
+    makes hop count the Manhattan distance.
+    """
+    hops = jnp.abs(req_xy - dst_xy).sum(axis=-1).astype(jnp.float32)
+    mesh = NOC_HEADER_CYCLES + 2.0 * NOC_HOP_CYCLES * hops
+    per = jnp.select(
+        [level == LEVEL_L1, level == LEVEL_L2, level == LEVEL_HOME],
+        [
+            jnp.full_like(mesh, L1_HIT_CYCLES),
+            jnp.full_like(mesh, L2_HIT_CYCLES),
+            L2_HIT_CYCLES + mesh,
+        ],
+        DDR_CYCLES + mesh,
+    )
+    per = per + contention
+    return per, jnp.sum(per)
+
+
+# ---------------------------------------------------------------------------
+# Export specs (consumed by aot.py and mirrored in artifacts/manifest.json)
+# ---------------------------------------------------------------------------
+
+# Shapes chosen so the rust request path sorts 64 Ki keys per executable
+# dispatch; N=1024 accesses per latency-model batch.
+SORT_NUM_CHUNKS = 64
+SORT_CHUNK = 1024
+LATENCY_BATCH = 1024
+
+
+def export_specs():
+    """(name, fn, example_args) for every artifact aot.py emits."""
+    i32 = jnp.int32
+    f32 = jnp.float32
+    s = jax.ShapeDtypeStruct
+    chunks = s((SORT_NUM_CHUNKS, SORT_CHUNK), i32)
+    n = LATENCY_BATCH
+    return [
+        ("sort_chunks", lambda x: (sort_chunks(x),), (chunks,)),
+        ("merge_pass", lambda x: (merge_pass(x),), (chunks,)),
+        ("full_sort", lambda x: (full_sort(x),), (chunks,)),
+        (
+            "latency_model",
+            lambda r, d, l, c: latency_model(r, d, l, c),
+            (s((n, 2), i32), s((n, 2), i32), s((n,), i32), s((n,), f32)),
+        ),
+    ]

@@ -1,0 +1,73 @@
+"""AOT path: artifacts are valid HLO text with a consistent manifest.
+
+Uses small export shapes would be ideal, but the AOT path must be tested as
+shipped, so this lowers the real specs once (module-scoped) and checks
+structure; the numeric round-trip through PJRT is covered on the rust side
+(rust/tests/integration_runtime.rs).
+"""
+
+import hashlib
+import json
+import pathlib
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def artifacts(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    manifest = aot.lower_all(out)
+    return out, manifest
+
+
+def test_all_artifacts_written(artifacts):
+    out, manifest = artifacts
+    names = {a["name"] for a in manifest["artifacts"]}
+    assert names == {"sort_chunks", "merge_pass", "full_sort", "latency_model"}
+    for a in manifest["artifacts"]:
+        assert (out / a["file"]).exists()
+
+
+def test_hlo_text_has_entry_computation(artifacts):
+    out, manifest = artifacts
+    for a in manifest["artifacts"]:
+        text = (out / a["file"]).read_text()
+        assert "ENTRY" in text, a["name"]
+        assert "HloModule" in text, a["name"]
+
+
+def test_hlo_is_plain_hlo_no_custom_calls(artifacts):
+    # interpret=True pallas must lower to plain HLO the CPU PJRT client can
+    # run; a Mosaic custom-call here would break the rust runtime.
+    out, manifest = artifacts
+    for a in manifest["artifacts"]:
+        text = (out / a["file"]).read_text()
+        assert "tpu_custom_call" not in text, a["name"]
+        assert "mosaic" not in text.lower(), a["name"]
+
+
+def test_manifest_hashes_match_files(artifacts):
+    out, manifest = artifacts
+    for a in manifest["artifacts"]:
+        text = (out / a["file"]).read_text()
+        assert hashlib.sha256(text.encode()).hexdigest() == a["sha256"]
+        assert len(text) == a["bytes"]
+
+
+def test_manifest_json_round_trips(artifacts):
+    out, manifest = artifacts
+    on_disk = json.loads((out / "manifest.json").read_text())
+    assert on_disk == manifest
+
+
+def test_manifest_input_shapes(artifacts):
+    _, manifest = artifacts
+    by_name = {a["name"]: a for a in manifest["artifacts"]}
+    assert by_name["full_sort"]["inputs"] == [
+        {"shape": [64, 1024], "dtype": "int32"}
+    ]
+    lat = by_name["latency_model"]["inputs"]
+    assert [i["shape"] for i in lat] == [[1024, 2], [1024, 2], [1024], [1024]]
+    assert [i["dtype"] for i in lat] == ["int32", "int32", "int32", "float32"]

@@ -1,0 +1,103 @@
+"""L1 kernel correctness: Pallas chunk sorter vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes (power-of-two chunk lengths, arbitrary chunk
+counts) and dtypes; fixed cases pin down the degenerate corners.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.bitonic import bitonic_sort_1d, sort_chunks
+from compile.kernels.ref import sort_chunks_ref
+
+DTYPES = [jnp.int32, jnp.float32]
+
+
+def _rand(shape, dtype, seed):
+    rng = np.random.default_rng(seed)
+    if dtype == jnp.int32:
+        return jnp.asarray(rng.integers(-(2**31), 2**31 - 1, size=shape, dtype=np.int64).astype(np.int32))
+    return jnp.asarray(rng.standard_normal(shape).astype(np.float32) * 1e3)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("chunk", [1, 2, 8, 64, 256])
+def test_sort_chunks_matches_ref(dtype, chunk):
+    x = _rand((4, chunk), dtype, seed=chunk)
+    got = sort_chunks(x)
+    want = sort_chunks_ref(x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_sort_single_chunk_identity_when_sorted():
+    x = jnp.arange(128, dtype=jnp.int32)[None, :]
+    np.testing.assert_array_equal(np.asarray(sort_chunks(x)), np.asarray(x))
+
+
+def test_sort_reversed():
+    x = jnp.arange(64, dtype=jnp.int32)[::-1][None, :]
+    np.testing.assert_array_equal(np.asarray(sort_chunks(x))[0], np.arange(64))
+
+
+def test_sort_all_equal():
+    x = jnp.full((3, 32), 7, dtype=jnp.int32)
+    np.testing.assert_array_equal(np.asarray(sort_chunks(x)), np.asarray(x))
+
+
+def test_sort_with_duplicates_and_negatives():
+    x = jnp.asarray([[3, -1, 3, 0, -1, 7, 7, -8]], dtype=jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(sort_chunks(x))[0], np.sort(np.asarray(x)[0])
+    )
+
+
+def test_sort_int32_extremes():
+    lo, hi = -(2**31), 2**31 - 1
+    x = jnp.asarray([[hi, lo, 0, -1, 1, hi, lo, 0]], dtype=jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(sort_chunks(x))[0], np.sort(np.asarray(x)[0])
+    )
+
+
+def test_bitonic_rejects_non_power_of_two():
+    with pytest.raises(ValueError):
+        bitonic_sort_1d(jnp.zeros(24, dtype=jnp.int32))
+
+
+def test_sort_is_permutation():
+    x = _rand((2, 128), jnp.int32, seed=9)
+    got = np.asarray(sort_chunks(x))
+    for r in range(2):
+        assert sorted(np.asarray(x)[r].tolist()) == got[r].tolist()
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    log_chunk=st.integers(min_value=0, max_value=8),
+    num_chunks=st.integers(min_value=1, max_value=6),
+    dtype_ix=st.integers(min_value=0, max_value=1),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_sort_chunks_hypothesis(log_chunk, num_chunks, dtype_ix, seed):
+    dtype = DTYPES[dtype_ix]
+    x = _rand((num_chunks, 1 << log_chunk), dtype, seed)
+    got = sort_chunks(x)
+    want = sort_chunks_ref(x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    values=st.lists(
+        st.integers(min_value=-(2**31), max_value=2**31 - 1),
+        min_size=16,
+        max_size=16,
+    )
+)
+def test_bitonic_1d_arbitrary_values(values):
+    x = jnp.asarray(values, dtype=jnp.int32)
+    got = np.asarray(bitonic_sort_1d(x))
+    np.testing.assert_array_equal(got, np.sort(np.asarray(values, dtype=np.int32)))

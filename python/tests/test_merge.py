@@ -1,0 +1,83 @@
+"""L1 kernel correctness: Pallas pairwise merge vs the pure-jnp oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.merge import bitonic_merge_1d, merge_pass, merge_sorted_pair
+from compile.kernels.ref import merge_pass_ref
+
+
+def _sorted_runs(num_runs, run, seed, dtype=jnp.int32):
+    rng = np.random.default_rng(seed)
+    if dtype == jnp.int32:
+        x = rng.integers(-(2**20), 2**20, size=(num_runs, run)).astype(np.int32)
+    else:
+        x = rng.standard_normal((num_runs, run)).astype(np.float32)
+    return jnp.asarray(np.sort(x, axis=-1))
+
+
+@pytest.mark.parametrize("run", [1, 4, 32, 128])
+@pytest.mark.parametrize("num_runs", [2, 4, 8])
+def test_merge_pass_matches_ref(num_runs, run):
+    x = _sorted_runs(num_runs, run, seed=num_runs * 1000 + run)
+    got = merge_pass(x)
+    want = merge_pass_ref(x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_merge_pass_float32():
+    x = _sorted_runs(4, 64, seed=5, dtype=jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(merge_pass(x)), np.asarray(merge_pass_ref(x))
+    )
+
+
+def test_merge_sorted_pair_disjoint_ranges():
+    a = jnp.arange(0, 8, dtype=jnp.int32)
+    b = jnp.arange(100, 108, dtype=jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(merge_sorted_pair(a, b)), np.concatenate([a, b])
+    )
+    # Order of the pair must not matter.
+    np.testing.assert_array_equal(
+        np.asarray(merge_sorted_pair(b, a)), np.concatenate([a, b])
+    )
+
+
+def test_merge_sorted_pair_interleaved():
+    a = jnp.asarray([0, 2, 4, 6], dtype=jnp.int32)
+    b = jnp.asarray([1, 3, 5, 7], dtype=jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(merge_sorted_pair(a, b)), np.arange(8)
+    )
+
+
+def test_merge_pass_rejects_odd_runs():
+    with pytest.raises(ValueError):
+        merge_pass(jnp.zeros((3, 8), dtype=jnp.int32))
+
+
+def test_bitonic_merge_rejects_non_power_of_two():
+    with pytest.raises(ValueError):
+        bitonic_merge_1d(jnp.zeros(12, dtype=jnp.int32))
+
+
+def test_merge_with_duplicates_across_runs():
+    x = jnp.asarray([[1, 1, 5, 5], [1, 5, 5, 9]], dtype=jnp.int32)
+    got = np.asarray(merge_pass(x)).reshape(-1)
+    np.testing.assert_array_equal(got, np.asarray([1, 1, 1, 5, 5, 5, 5, 9]))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    log_run=st.integers(min_value=0, max_value=7),
+    pairs=st.integers(min_value=1, max_value=4),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_merge_pass_hypothesis(log_run, pairs, seed):
+    x = _sorted_runs(2 * pairs, 1 << log_run, seed)
+    got = merge_pass(x)
+    want = merge_pass_ref(x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

@@ -1,0 +1,114 @@
+"""L2 model correctness: full sorter composition and the NUCA latency model."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.ref import full_sort_ref
+from compile.model import full_sort, latency_model
+
+
+@pytest.mark.parametrize("num_chunks,chunk", [(1, 8), (2, 4), (4, 16), (8, 64)])
+def test_full_sort_matches_ref(num_chunks, chunk):
+    rng = np.random.default_rng(num_chunks * 100 + chunk)
+    x = jnp.asarray(rng.integers(-(2**30), 2**30, size=(num_chunks, chunk)).astype(np.int32))
+    got = full_sort(x)
+    want = full_sort_ref(x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_full_sort_rejects_non_power_of_two():
+    with pytest.raises(ValueError):
+        full_sort(jnp.zeros((3, 8), dtype=jnp.int32))
+
+
+def test_full_sort_is_global_permutation():
+    rng = np.random.default_rng(0)
+    x = rng.integers(0, 100, size=(4, 32)).astype(np.int32)
+    got = np.asarray(full_sort(jnp.asarray(x))).reshape(-1)
+    np.testing.assert_array_equal(got, np.sort(x.reshape(-1)))
+    assert (np.diff(got) >= 0).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    log_nc=st.integers(min_value=0, max_value=3),
+    log_c=st.integers(min_value=0, max_value=5),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_full_sort_hypothesis(log_nc, log_c, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(
+        rng.integers(-(2**31), 2**31 - 1, size=(1 << log_nc, 1 << log_c), dtype=np.int64).astype(np.int32)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(full_sort(x)), np.asarray(full_sort_ref(x))
+    )
+
+
+# ---------------------------------------------------------------------------
+# Latency model
+# ---------------------------------------------------------------------------
+
+
+def _lat(req, dst, level, cont=0.0):
+    r = jnp.asarray([req], dtype=jnp.int32)
+    d = jnp.asarray([dst], dtype=jnp.int32)
+    l = jnp.asarray([level], dtype=jnp.int32)
+    c = jnp.asarray([cont], dtype=jnp.float32)
+    per, total = latency_model(r, d, l, c)
+    assert float(total) == pytest.approx(float(per[0]))
+    return float(per[0])
+
+
+def test_latency_l1_hit():
+    assert _lat((0, 0), (0, 0), model.LEVEL_L1) == model.L1_HIT_CYCLES
+
+
+def test_latency_l2_hit_ignores_distance():
+    assert _lat((0, 0), (7, 7), model.LEVEL_L2) == model.L2_HIT_CYCLES
+
+
+def test_latency_home_hit_local_home():
+    # Home on the requesting tile: no hops, but still header + home L2.
+    want = model.L2_HIT_CYCLES + model.NOC_HEADER_CYCLES
+    assert _lat((3, 4), (3, 4), model.LEVEL_HOME) == want
+
+
+def test_latency_home_hit_scales_with_manhattan_distance():
+    base = _lat((0, 0), (0, 0), model.LEVEL_HOME)
+    one = _lat((0, 0), (1, 0), model.LEVEL_HOME)
+    diag = _lat((0, 0), (3, 4), model.LEVEL_HOME)
+    assert one - base == 2 * model.NOC_HOP_CYCLES
+    assert diag - base == 2 * model.NOC_HOP_CYCLES * 7
+
+
+def test_latency_ddr_dominates_home():
+    home = _lat((0, 0), (7, 7), model.LEVEL_HOME)
+    ddr = _lat((0, 0), (7, 7), model.LEVEL_DDR)
+    assert ddr > home
+
+
+def test_latency_contention_is_additive():
+    base = _lat((2, 2), (5, 5), model.LEVEL_HOME)
+    loaded = _lat((2, 2), (5, 5), model.LEVEL_HOME, cont=37.5)
+    assert loaded == pytest.approx(base + 37.5)
+
+
+def test_latency_batch_total_is_sum():
+    rng = np.random.default_rng(1)
+    n = 64
+    req = jnp.asarray(rng.integers(0, 8, size=(n, 2)), dtype=jnp.int32)
+    dst = jnp.asarray(rng.integers(0, 8, size=(n, 2)), dtype=jnp.int32)
+    lvl = jnp.asarray(rng.integers(0, 4, size=(n,)), dtype=jnp.int32)
+    cont = jnp.asarray(rng.random(n), dtype=jnp.float32)
+    per, total = latency_model(req, dst, lvl, cont)
+    assert float(total) == pytest.approx(float(np.asarray(per).sum()), rel=1e-6)
+    assert (np.asarray(per) >= model.L1_HIT_CYCLES).all()
+
+
+def test_export_specs_cover_all_artifacts():
+    names = [name for name, _, _ in model.export_specs()]
+    assert names == ["sort_chunks", "merge_pass", "full_sort", "latency_model"]

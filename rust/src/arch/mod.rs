@@ -1,0 +1,11 @@
+//! Architecture description of the simulated manycore: the 8×8 tile mesh,
+//! memory-controller placement, and the latency/capacity parameter set.
+
+pub mod params;
+pub mod topology;
+
+pub use params::{CacheGeometry, HitLevel, LatencyParams, CLOCK_HZ, LINE_BYTES, PAGE_BYTES};
+pub use topology::{
+    controllers, hops, nearest_controller, Controller, Coord, TileId, GRID_H, GRID_W,
+    NUM_CONTROLLERS, NUM_TILES,
+};

@@ -1,0 +1,186 @@
+//! Latency and capacity parameters of the simulated chip.
+//!
+//! `LatencyParams::TILEPRO64` is the single source of truth shared with the
+//! L2 analytical model (`python/compile/model.py` mirrors these constants);
+//! `rust/tests/integration_runtime.rs` executes the AOT'd latency model and
+//! cross-checks it against `access_cycles` below, so drift fails CI.
+
+use super::topology::{hops, TileId};
+
+/// Core clock of the evaluation platform (860 MHz per the paper's Fig. 1).
+pub const CLOCK_HZ: f64 = 860.0e6;
+
+/// Cache line size in bytes (TILEPro64 L2 line).
+pub const LINE_BYTES: u64 = 64;
+
+/// Page size for homing decisions (TILEPro64 large user pages).
+pub const PAGE_BYTES: u64 = 64 * 1024;
+
+/// Where an access was satisfied.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HitLevel {
+    /// Requester's own L1D.
+    L1,
+    /// Requester's own L2.
+    L2,
+    /// The line's home tile L2 — the distributed "L3" of DDC.
+    Home { home: TileId },
+    /// DRAM behind a memory controller (attach tile recorded for hops).
+    Ddr { ctrl_attach: TileId },
+}
+
+#[derive(Clone, Debug)]
+pub struct LatencyParams {
+    pub l1_hit: u64,
+    pub l2_hit: u64,
+    /// Fixed NoC packetisation overhead per remote round trip.
+    pub noc_header: u64,
+    /// Cycles per mesh hop (one direction).
+    pub noc_hop: u64,
+    /// DRAM access latency (row activation + transfer), excluding the mesh.
+    pub ddr: u64,
+    /// Cycles a store to a *remotely homed* line costs the issuing thread:
+    /// stores are posted through the store buffer (write-through to home),
+    /// so the mesh round trip is hidden; bandwidth is billed at the home
+    /// port by the contention model instead.
+    pub store_post: u64,
+    /// Home-tile L2 service occupancy per request (bandwidth term used by
+    /// the contention model, not added to an uncontended access).
+    pub home_service: u64,
+    /// Memory-controller service occupancy per line.
+    pub ctrl_service: u64,
+    /// OS cost of migrating a thread (save/restore, run-queue latency).
+    pub migration_cost: u64,
+    /// Per-element ALU cost for workload "compute" phases (e.g. one merge
+    /// comparison), in cycles.
+    pub compute_per_elem: u64,
+}
+
+impl LatencyParams {
+    pub const TILEPRO64: LatencyParams = LatencyParams {
+        l1_hit: 2,
+        l2_hit: 8,
+        noc_header: 6,
+        noc_hop: 1,
+        ddr: 88,
+        // Sustained remote-store rate is limited by the (shallow) store
+        // buffer: roughly one line per local-L2-write time, slightly
+        // cheaper because the writer never waits for the ack.
+        store_post: 6,
+        home_service: 2,
+        ctrl_service: 4,
+        migration_cost: 30_000,
+        compute_per_elem: 1,
+    };
+
+    /// Uncontended cycles for one cache-line access satisfied at `level`,
+    /// requested from `req`. Matches `latency_model` in the L2 model.
+    #[inline]
+    pub fn access_cycles(&self, req: TileId, level: HitLevel) -> u64 {
+        match level {
+            HitLevel::L1 => self.l1_hit,
+            HitLevel::L2 => self.l2_hit,
+            HitLevel::Home { home } => {
+                self.l2_hit + self.noc_header + 2 * self.noc_hop * hops(req, home) as u64
+            }
+            HitLevel::Ddr { ctrl_attach } => {
+                self.ddr + self.noc_header + 2 * self.noc_hop * hops(req, ctrl_attach) as u64
+            }
+        }
+    }
+
+    /// Convert simulated cycles to seconds at the platform clock.
+    #[inline]
+    pub fn cycles_to_seconds(&self, cycles: u64) -> f64 {
+        cycles as f64 / CLOCK_HZ
+    }
+}
+
+/// Cache geometry. TILEPro64: 8 KB L1D (2-way), 64 KB unified L2 (4-way),
+/// 64 B lines.
+#[derive(Clone, Copy, Debug)]
+pub struct CacheGeometry {
+    pub l1_bytes: u64,
+    pub l1_ways: usize,
+    pub l2_bytes: u64,
+    pub l2_ways: usize,
+}
+
+impl CacheGeometry {
+    pub const TILEPRO64: CacheGeometry = CacheGeometry {
+        l1_bytes: 8 * 1024,
+        l1_ways: 2,
+        l2_bytes: 64 * 1024,
+        l2_ways: 4,
+    };
+
+    pub fn l1_sets(&self) -> usize {
+        (self.l1_bytes / LINE_BYTES) as usize / self.l1_ways
+    }
+
+    pub fn l2_sets(&self) -> usize {
+        (self.l2_bytes / LINE_BYTES) as usize / self.l2_ways
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::topology::Coord;
+
+    const P: LatencyParams = LatencyParams::TILEPRO64;
+
+    #[test]
+    fn l1_is_cheapest() {
+        let t = TileId(0);
+        let far = TileId::from_coord(Coord { x: 7, y: 7 });
+        let l1 = P.access_cycles(t, HitLevel::L1);
+        let l2 = P.access_cycles(t, HitLevel::L2);
+        let l3 = P.access_cycles(t, HitLevel::Home { home: far });
+        let ddr = P.access_cycles(t, HitLevel::Ddr { ctrl_attach: far });
+        assert!(l1 < l2 && l2 < l3 && l3 < ddr);
+    }
+
+    #[test]
+    fn home_hit_on_own_tile_still_pays_header() {
+        // DDC: even a local-home "L3" lookup goes through the coherence
+        // engine, so it costs more than a plain L2 hit.
+        let t = TileId(9);
+        let local_home = P.access_cycles(t, HitLevel::Home { home: t });
+        assert_eq!(local_home, P.l2_hit + P.noc_header);
+    }
+
+    #[test]
+    fn home_latency_scales_with_distance() {
+        let t = TileId(0);
+        let near = P.access_cycles(t, HitLevel::Home { home: TileId(1) });
+        let far = P.access_cycles(
+            t,
+            HitLevel::Home { home: TileId::from_coord(Coord { x: 7, y: 7 }) },
+        );
+        assert_eq!(far - near, 2 * P.noc_hop * 13);
+    }
+
+    #[test]
+    fn cycles_to_seconds_at_860mhz() {
+        let s = P.cycles_to_seconds(860_000_000);
+        assert!((s - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn geometry_sets() {
+        let g = CacheGeometry::TILEPRO64;
+        assert_eq!(g.l1_sets(), 64);
+        assert_eq!(g.l2_sets(), 256);
+    }
+
+    #[test]
+    fn matches_python_constants() {
+        // Mirror of python/compile/model.py — change both together.
+        assert_eq!(P.l1_hit, 2);
+        assert_eq!(P.l2_hit, 8);
+        assert_eq!(P.noc_header, 6);
+        assert_eq!(P.noc_hop, 1);
+        assert_eq!(P.ddr, 88);
+    }
+}

@@ -1,0 +1,154 @@
+//! Chip topology: the 8×8 tile grid, XY mesh routing, and memory-controller
+//! placement of the simulated TILEPro64.
+
+/// Mesh width (tiles per row).
+pub const GRID_W: u32 = 8;
+/// Mesh height (rows).
+pub const GRID_H: u32 = 8;
+/// Total tiles. Tile Linux reserves one tile for itself, so user code gets
+/// at most `NUM_TILES - 1 = 63` worker threads — the paper's "maximum
+/// numbers of cores available".
+pub const NUM_TILES: u32 = GRID_W * GRID_H;
+/// Number of DDR memory controllers (TILEPro64 has 4).
+pub const NUM_CONTROLLERS: u32 = 4;
+
+/// A tile (core) id in row-major order: `id = y * GRID_W + x`.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub struct TileId(pub u32);
+
+/// Mesh coordinates.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct Coord {
+    pub x: u32,
+    pub y: u32,
+}
+
+impl TileId {
+    #[inline]
+    pub fn coord(self) -> Coord {
+        Coord {
+            x: self.0 % GRID_W,
+            y: self.0 / GRID_W,
+        }
+    }
+
+    #[inline]
+    pub fn from_coord(c: Coord) -> TileId {
+        debug_assert!(c.x < GRID_W && c.y < GRID_H);
+        TileId(c.y * GRID_W + c.x)
+    }
+
+    #[inline]
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+
+    pub fn all() -> impl Iterator<Item = TileId> {
+        (0..NUM_TILES).map(TileId)
+    }
+}
+
+/// XY dimension-order routing hop count == Manhattan distance. This is what
+/// both the event simulator and the AOT'd latency model (L2) use, so they
+/// agree by construction.
+#[inline]
+pub fn hops(a: TileId, b: TileId) -> u32 {
+    let ca = a.coord();
+    let cb = b.coord();
+    ca.x.abs_diff(cb.x) + ca.y.abs_diff(cb.y)
+}
+
+/// A memory controller and its mesh attach point.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Controller {
+    pub id: u32,
+    /// The tile whose mesh port the controller hangs off.
+    pub attach: TileId,
+}
+
+/// TILEPro64 places two controllers on the top edge and two on the bottom;
+/// we attach them at columns 2 and 5 of rows 0 and 7. Rows 0–3 are
+/// therefore "near" controllers 0/1 and far from 2/3 — the asymmetry behind
+/// the paper's Fig. 4 striping discussion.
+pub fn controllers() -> [Controller; NUM_CONTROLLERS as usize] {
+    [
+        Controller { id: 0, attach: TileId::from_coord(Coord { x: 2, y: 0 }) },
+        Controller { id: 1, attach: TileId::from_coord(Coord { x: 5, y: 0 }) },
+        Controller { id: 2, attach: TileId::from_coord(Coord { x: 2, y: 7 }) },
+        Controller { id: 3, attach: TileId::from_coord(Coord { x: 5, y: 7 }) },
+    ]
+}
+
+/// Nearest controller to a tile (used for non-striped page placement: the
+/// hypervisor allocates a page's DRAM behind one controller, picked by
+/// proximity to the allocating/homing tile).
+pub fn nearest_controller(t: TileId) -> Controller {
+    let cs = controllers();
+    *cs.iter()
+        .min_by_key(|c| (hops(t, c.attach), c.id))
+        .expect("non-empty controller set")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coord_round_trip() {
+        for t in TileId::all() {
+            assert_eq!(TileId::from_coord(t.coord()), t);
+        }
+    }
+
+    #[test]
+    fn hops_is_manhattan() {
+        let a = TileId::from_coord(Coord { x: 0, y: 0 });
+        let b = TileId::from_coord(Coord { x: 7, y: 7 });
+        assert_eq!(hops(a, b), 14);
+        assert_eq!(hops(a, a), 0);
+        assert_eq!(hops(a, b), hops(b, a));
+    }
+
+    #[test]
+    fn hops_triangle_inequality() {
+        let a = TileId(3);
+        let b = TileId(42);
+        let c = TileId(60);
+        assert!(hops(a, c) <= hops(a, b) + hops(b, c));
+    }
+
+    #[test]
+    fn sixty_four_tiles() {
+        assert_eq!(TileId::all().count(), 64);
+    }
+
+    #[test]
+    fn controllers_attach_to_edges() {
+        for c in controllers() {
+            let y = c.attach.coord().y;
+            assert!(y == 0 || y == GRID_H - 1);
+        }
+    }
+
+    #[test]
+    fn upper_rows_map_to_top_controllers() {
+        // The paper: threads on rows 0..3 (cores 0..31) only reach the two
+        // top controllers in non-striping mode.
+        for t in TileId::all().filter(|t| t.coord().y < 4) {
+            assert!(nearest_controller(t).id < 2, "tile {t:?}");
+        }
+        for t in TileId::all().filter(|t| t.coord().y >= 4) {
+            assert!(nearest_controller(t).id >= 2, "tile {t:?}");
+        }
+    }
+
+    #[test]
+    fn nearest_controller_is_deterministic_tiebreak() {
+        // Column 3.5 midpoint ties are broken by controller id.
+        for t in TileId::all() {
+            let c1 = nearest_controller(t);
+            let c2 = nearest_controller(t);
+            assert_eq!(c1, c2);
+        }
+    }
+}

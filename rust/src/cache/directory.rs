@@ -1,0 +1,215 @@
+//! Home-tile coherence directory.
+//!
+//! DDC serves coherence through the home tile: it tracks which tiles hold a
+//! copy of each line and, on a write, invalidates every other sharer (paper
+//! §2: "If another tile writes new data to the cache line, the home tile is
+//! responsible to invalidate all copies"). Sharer sets are 64-bit masks —
+//! one bit per tile — so the whole directory is a hash map of u64s.
+
+use crate::arch::{hops, TileId};
+use crate::mem::LineId;
+
+/// Sharer masks stored in a dense vector indexed by line id: the allocator
+/// bump-allocates a compact address space, and the workloads stream
+/// sequentially, so adjacent entries share (host) cache lines — an order of
+/// magnitude faster than any hash map on the per-line-event hot path.
+#[derive(Default)]
+pub struct Directory {
+    sharers: Vec<u64>,
+    tracked: usize,
+    pub invalidations_sent: u64,
+}
+
+/// Result of a write's coherence action.
+#[derive(Debug, PartialEq, Eq)]
+pub struct InvalidationFanout {
+    /// Tiles whose copies were invalidated (excludes the writer).
+    pub victims: Vec<TileId>,
+    /// Mesh distance from home to the farthest victim (latency critical path).
+    pub max_hops_from_home: u32,
+}
+
+impl Directory {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    fn slot_mut(&mut self, line: LineId) -> &mut u64 {
+        let ix = line.0 as usize;
+        if ix >= self.sharers.len() {
+            self.sharers.resize(ix + 1, 0);
+        }
+        &mut self.sharers[ix]
+    }
+
+    #[inline]
+    fn mask_of(&self, line: LineId) -> u64 {
+        self.sharers.get(line.0 as usize).copied().unwrap_or(0)
+    }
+
+    /// Record that `tile` now caches `line`.
+    #[inline]
+    pub fn add_sharer(&mut self, line: LineId, tile: TileId) {
+        let was_zero = {
+            let slot = self.slot_mut(line);
+            let w = *slot == 0;
+            *slot |= 1u64 << tile.index();
+            w
+        };
+        if was_zero {
+            self.tracked += 1;
+        }
+    }
+
+    /// Remove one sharer (e.g. on eviction notification or purge).
+    pub fn remove_sharer(&mut self, line: LineId, tile: TileId) {
+        if let Some(mask) = self.sharers.get_mut(line.0 as usize) {
+            let was = *mask;
+            *mask &= !(1u64 << tile.index());
+            if was != 0 && *mask == 0 {
+                self.tracked -= 1;
+            }
+        }
+    }
+
+    pub fn sharers_of(&self, line: LineId) -> Vec<TileId> {
+        let mask = self.mask_of(line);
+        (0..64)
+            .filter(|&i| mask & (1u64 << i) != 0)
+            .map(|i| TileId(i as u32))
+            .collect()
+    }
+
+    pub fn sharer_count(&self, line: LineId) -> u32 {
+        self.mask_of(line).count_ones()
+    }
+
+    /// Write by `writer` to `line` homed at `home`: every other sharer is
+    /// invalidated; the writer remains the sole sharer.
+    pub fn write_invalidate(
+        &mut self,
+        line: LineId,
+        home: TileId,
+        writer: TileId,
+    ) -> InvalidationFanout {
+        let writer_bit = 1u64 << writer.index();
+        let mask = {
+            let slot = self.slot_mut(line);
+            let m = *slot;
+            *slot = writer_bit;
+            m
+        };
+        if mask == 0 {
+            self.tracked += 1;
+        }
+        let others = mask & !writer_bit;
+        if others == 0 {
+            return InvalidationFanout {
+                victims: Vec::new(),
+                max_hops_from_home: 0,
+            };
+        }
+        let mut victims = Vec::with_capacity(others.count_ones() as usize);
+        let mut max_h = 0;
+        let mut m = others;
+        while m != 0 {
+            let i = m.trailing_zeros();
+            m &= m - 1;
+            let t = TileId(i);
+            max_h = max_h.max(hops(home, t));
+            victims.push(t);
+        }
+        self.invalidations_sent += victims.len() as u64;
+        InvalidationFanout {
+            victims,
+            max_hops_from_home: max_h,
+        }
+    }
+
+    /// Drop all directory state for lines in `[first, last]` (region free).
+    pub fn purge_line_range(&mut self, first: LineId, last: LineId) {
+        let lo = first.0 as usize;
+        let hi = (last.0 as usize + 1).min(self.sharers.len());
+        for slot in self.sharers.get_mut(lo..hi).unwrap_or(&mut []) {
+            if *slot != 0 {
+                self.tracked -= 1;
+                *slot = 0;
+            }
+        }
+    }
+
+    pub fn tracked_lines(&self) -> usize {
+        self.tracked
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_and_list_sharers() {
+        let mut d = Directory::new();
+        d.add_sharer(LineId(1), TileId(0));
+        d.add_sharer(LineId(1), TileId(63));
+        assert_eq!(d.sharers_of(LineId(1)), vec![TileId(0), TileId(63)]);
+        assert_eq!(d.sharer_count(LineId(1)), 2);
+    }
+
+    #[test]
+    fn add_is_idempotent() {
+        let mut d = Directory::new();
+        d.add_sharer(LineId(1), TileId(5));
+        d.add_sharer(LineId(1), TileId(5));
+        assert_eq!(d.sharer_count(LineId(1)), 1);
+    }
+
+    #[test]
+    fn write_invalidates_others_keeps_writer() {
+        let mut d = Directory::new();
+        for t in [0u32, 7, 12] {
+            d.add_sharer(LineId(9), TileId(t));
+        }
+        let f = d.write_invalidate(LineId(9), TileId(0), TileId(7));
+        assert_eq!(f.victims, vec![TileId(0), TileId(12)]);
+        assert_eq!(d.sharers_of(LineId(9)), vec![TileId(7)]);
+        assert_eq!(d.invalidations_sent, 2);
+    }
+
+    #[test]
+    fn write_with_no_sharers_is_free() {
+        let mut d = Directory::new();
+        let f = d.write_invalidate(LineId(1), TileId(0), TileId(3));
+        assert!(f.victims.is_empty());
+        assert_eq!(f.max_hops_from_home, 0);
+        assert_eq!(d.sharers_of(LineId(1)), vec![TileId(3)]);
+    }
+
+    #[test]
+    fn fanout_hops_is_max_distance() {
+        let mut d = Directory::new();
+        d.add_sharer(LineId(2), TileId(0)); // corner (0,0)
+        d.add_sharer(LineId(2), TileId(63)); // corner (7,7): 14 hops from 0
+        let f = d.write_invalidate(LineId(2), TileId(0), TileId(1));
+        assert_eq!(f.max_hops_from_home, 14);
+    }
+
+    #[test]
+    fn remove_sharer_cleans_up() {
+        let mut d = Directory::new();
+        d.add_sharer(LineId(3), TileId(1));
+        d.remove_sharer(LineId(3), TileId(1));
+        assert_eq!(d.tracked_lines(), 0);
+    }
+
+    #[test]
+    fn purge_range_drops_state() {
+        let mut d = Directory::new();
+        d.add_sharer(LineId(10), TileId(1));
+        d.add_sharer(LineId(20), TileId(1));
+        d.purge_line_range(LineId(0), LineId(15));
+        assert_eq!(d.sharer_count(LineId(10)), 0);
+        assert_eq!(d.sharer_count(LineId(20)), 1);
+    }
+}

@@ -1,0 +1,312 @@
+//! The DDC lookup path.
+//!
+//! **Loads**: requester L1 → requester L2 → home tile L2 (the distributed
+//! "L3") → DDR; read-allocate into the requester's caches, sharer recorded
+//! at the home directory.
+//!
+//! **Stores**: TILEPro64 stores are write-through to the *home* cache — a
+//! store to a remotely-homed line is posted over the mesh to the home tile
+//! (fire-and-forget via the store buffer; bandwidth-limited at the home
+//! port, not latency-limited) and does **not** allocate in the writer's
+//! private caches. A store to a locally-homed line writes the writer's own
+//! L2 (which *is* the home/L3 for that line). Either way the home
+//! invalidates every other sharer. This asymmetry is why the paper's
+//! localisation matters: re-homing data on the tile that uses it turns both
+//! loads and stores into local L2 traffic.
+
+use crate::arch::{CacheGeometry, TileId, NUM_TILES};
+use crate::cache::directory::Directory;
+use crate::cache::set_assoc::SetAssoc;
+use crate::mem::LineId;
+
+/// Per-tile private caches.
+pub struct TileCaches {
+    pub l1: SetAssoc,
+    pub l2: SetAssoc,
+}
+
+impl TileCaches {
+    fn new(geom: &CacheGeometry) -> Self {
+        TileCaches {
+            l1: SetAssoc::new(geom.l1_sets(), geom.l1_ways),
+            l2: SetAssoc::new(geom.l2_sets(), geom.l2_ways),
+        }
+    }
+}
+
+/// Where a load was satisfied. Unlike [`HitLevel`] this carries no
+/// controller attach point — the cache walk doesn't need it, and resolving
+/// the controller costs a page-table lookup the engine only pays on the
+/// DDR path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReadPlace {
+    L1,
+    L2,
+    Home { home: TileId },
+    Ddr,
+}
+
+/// Where a store landed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WriteLevel {
+    /// Line homed on the writing tile: write into own L2.
+    LocalL2,
+    /// Remotely homed: posted to the home tile's L2 over the mesh.
+    RemotePost { home: TileId },
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct WriteOutcome {
+    pub level: WriteLevel,
+    /// Copies invalidated at other tiles.
+    pub invalidated: u32,
+    /// Home→farthest-victim distance (critical path of the fan-out).
+    pub invalidation_hops: u32,
+}
+
+/// All 64 tiles' caches plus the coherence directory.
+pub struct CacheSystem {
+    tiles: Vec<TileCaches>,
+    pub directory: Directory,
+}
+
+impl CacheSystem {
+    pub fn new(geom: &CacheGeometry) -> Self {
+        CacheSystem {
+            tiles: (0..NUM_TILES).map(|_| TileCaches::new(geom)).collect(),
+            directory: Directory::new(),
+        }
+    }
+
+    /// Load `line` from `req`; `home` from the page table.
+    ///
+    /// The L2 is the *home* cache: only locally-homed lines allocate in the
+    /// requester's L2. A remotely-homed line is served by its home tile's
+    /// L2 and cached locally in the small L1 only — so a working set larger
+    /// than L1 keeps paying the remote-home latency on every pass. This is
+    /// the architectural fact the paper's localisation exploits (re-homing
+    /// a chunk locally lets the 64 KB L2 absorb it).
+    pub fn read(&mut self, req: TileId, line: LineId, home: TileId) -> ReadPlace {
+        let rc = &mut self.tiles[req.index()];
+        let place = if rc.l1.probe(line) {
+            ReadPlace::L1
+        } else if home == req {
+            if rc.l2.probe(line) {
+                rc.l1.insert(line);
+                ReadPlace::L2
+            } else {
+                // We are the home and our L2 missed ⇒ straight to DRAM
+                // (paper §2: local homing sends L2 misses directly to DDR).
+                rc.l2.insert(line);
+                rc.l1.insert(line);
+                ReadPlace::Ddr
+            }
+        } else {
+            // Remote home: probe the home's L2 — the "L3" hit. Fill only
+            // our L1 with the returned line.
+            let home_hit = self.tiles[home.index()].l2.probe(line);
+            if !home_hit {
+                self.tiles[home.index()].l2.insert(line);
+            }
+            self.tiles[req.index()].l1.insert(line);
+            if home_hit {
+                ReadPlace::Home { home }
+            } else {
+                ReadPlace::Ddr
+            }
+        };
+        self.directory.add_sharer(line, req);
+        place
+    }
+
+    /// Store to `line` from `req`.
+    pub fn write(&mut self, req: TileId, line: LineId, home: TileId) -> WriteOutcome {
+        let level = if home == req {
+            // Own L2 is the home cache: write-allocate there (write-back to
+            // DRAM is asynchronous and not billed to the store).
+            let rc = &mut self.tiles[req.index()];
+            rc.l2.insert(line);
+            WriteLevel::LocalL2
+        } else {
+            // Post to the home tile; the home caches the line on our
+            // behalf. Do NOT allocate locally (no write-allocate for
+            // remote stores on this machine). An existing local copy stays
+            // valid — the writer remains a sharer.
+            self.tiles[home.index()].l2.insert(line);
+            WriteLevel::RemotePost { home }
+        };
+        let fan = self.directory.write_invalidate(line, home, req);
+        for victim in &fan.victims {
+            let vc = &mut self.tiles[victim.index()];
+            vc.l1.invalidate(line);
+            vc.l2.invalidate(line);
+        }
+        WriteOutcome {
+            level,
+            invalidated: fan.victims.len() as u32,
+            invalidation_hops: fan.max_hops_from_home,
+        }
+    }
+
+    /// Drop all cached copies and directory state for a freed region.
+    pub fn purge_line_range(&mut self, first: LineId, last: LineId) {
+        for t in &mut self.tiles {
+            t.l1.purge_line_range(first, last);
+            t.l2.purge_line_range(first, last);
+        }
+        self.directory.purge_line_range(first, last);
+    }
+
+    pub fn tile(&self, t: TileId) -> &TileCaches {
+        &self.tiles[t.index()]
+    }
+
+    /// Aggregate (hits, misses) over all private caches (reporting).
+    pub fn totals(&self) -> (u64, u64) {
+        self.tiles.iter().fold((0, 0), |(h, m), t| {
+            (h + t.l1.hits + t.l2.hits, m + t.l1.misses + t.l2.misses)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::CacheGeometry;
+
+    fn sys() -> CacheSystem {
+        CacheSystem::new(&CacheGeometry::TILEPRO64)
+    }
+
+    #[test]
+    fn cold_local_home_goes_to_ddr_then_hits_l1() {
+        let mut s = sys();
+        assert_eq!(s.read(TileId(0), LineId(1), TileId(0)), ReadPlace::Ddr);
+        assert_eq!(s.read(TileId(0), LineId(1), TileId(0)), ReadPlace::L1);
+    }
+
+    #[test]
+    fn remote_home_ddc_l3_hit() {
+        let mut s = sys();
+        let home = TileId(9);
+        s.read(home, LineId(7), home); // home fills its L2
+        assert_eq!(s.read(TileId(0), LineId(7), home), ReadPlace::Home { home });
+    }
+
+    #[test]
+    fn remote_cold_miss_fills_home_l2() {
+        let mut s = sys();
+        let home = TileId(9);
+        assert_eq!(s.read(TileId(0), LineId(7), home), ReadPlace::Ddr);
+        // A second remote requester now hits the home "L3".
+        assert_eq!(s.read(TileId(1), LineId(7), home), ReadPlace::Home { home });
+    }
+
+    #[test]
+    fn local_store_writes_own_l2() {
+        let mut s = sys();
+        let out = s.write(TileId(5), LineId(8), TileId(5));
+        assert_eq!(out.level, WriteLevel::LocalL2);
+        // The line is now in our L2: a read hits locally.
+        let place = s.read(TileId(5), LineId(8), TileId(5));
+        assert!(matches!(place, ReadPlace::L2 | ReadPlace::L1));
+    }
+
+    #[test]
+    fn remote_store_posts_and_does_not_allocate_locally() {
+        let mut s = sys();
+        let home = TileId(9);
+        let out = s.write(TileId(0), LineId(4), home);
+        assert_eq!(out.level, WriteLevel::RemotePost { home });
+        assert!(!s.tile(TileId(0)).l2.contains(LineId(4)));
+        // ...but the home now caches it: a read from a third tile is an L3 hit.
+        assert_eq!(s.read(TileId(1), LineId(4), home), ReadPlace::Home { home });
+    }
+
+    #[test]
+    fn write_invalidates_remote_copies() {
+        let mut s = sys();
+        let home = TileId(4);
+        s.read(TileId(1), LineId(3), home);
+        s.read(TileId(2), LineId(3), home);
+        assert_eq!(s.read(TileId(2), LineId(3), home), ReadPlace::L1);
+        let out = s.write(TileId(1), LineId(3), home);
+        assert!(out.invalidated >= 1);
+        // Tile 2 re-reads: must refetch (stale copy purged).
+        let place = s.read(TileId(2), LineId(3), home);
+        assert_ne!(place, ReadPlace::L1, "stale copy survived");
+    }
+
+    #[test]
+    fn single_writer_invalidates_nothing() {
+        let mut s = sys();
+        s.write(TileId(5), LineId(8), TileId(5));
+        let out = s.write(TileId(5), LineId(8), TileId(5));
+        assert_eq!(out.invalidated, 0);
+    }
+
+    #[test]
+    fn purge_forces_refetch() {
+        let mut s = sys();
+        s.read(TileId(0), LineId(5), TileId(0));
+        s.purge_line_range(LineId(0), LineId(10));
+        assert_eq!(s.read(TileId(0), LineId(5), TileId(0)), ReadPlace::Ddr);
+    }
+
+    #[test]
+    fn capacity_thrash_evicts() {
+        let mut s = sys();
+        let t = TileId(0);
+        let cap = s.tile(t).l2.capacity_lines();
+        for l in 0..(cap * 4) {
+            s.read(t, LineId(l), t);
+        }
+        assert_eq!(
+            s.read(t, LineId(0), t),
+            ReadPlace::Ddr,
+            "line 0 should have been evicted"
+        );
+    }
+
+    #[test]
+    fn working_set_fitting_l2_stays_resident() {
+        // A 768-line (48 KB) stream fits the 64 KB L2: second pass must not
+        // touch DRAM. This is the localisation win in miniature.
+        let mut s = sys();
+        let t = TileId(0);
+        for l in 0..768 {
+            s.read(t, LineId(l), t);
+        }
+        for l in 0..768 {
+            let place = s.read(t, LineId(l), t);
+            assert!(
+                matches!(place, ReadPlace::L1 | ReadPlace::L2),
+                "line {l} fell out: {place:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn remote_lines_fill_l1_only() {
+        let mut s = sys();
+        let home = TileId(9);
+        for l in 0..1000 {
+            s.read(TileId(0), LineId(l), home);
+        }
+        assert_eq!(
+            s.tile(TileId(0)).l2.resident_lines(),
+            0,
+            "remote lines must not allocate in the reader L2"
+        );
+        assert!(s.tile(TileId(0)).l1.resident_lines() > 0);
+    }
+
+    #[test]
+    fn totals_count_hits_and_misses() {
+        let mut s = sys();
+        s.read(TileId(0), LineId(0), TileId(0));
+        s.read(TileId(0), LineId(0), TileId(0));
+        let (h, m) = s.totals();
+        assert!(h >= 1 && m >= 1);
+    }
+}

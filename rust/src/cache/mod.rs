@@ -1,0 +1,10 @@
+//! Dynamic Distributed Cache (DDC) model: per-tile set-associative L1/L2,
+//! the home-tile "L3" union, and the coherence directory.
+
+pub mod directory;
+pub mod hierarchy;
+pub mod set_assoc;
+
+pub use directory::{Directory, InvalidationFanout};
+pub use hierarchy::{CacheSystem, ReadPlace, TileCaches, WriteLevel, WriteOutcome};
+pub use set_assoc::SetAssoc;

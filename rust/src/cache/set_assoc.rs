@@ -1,0 +1,230 @@
+//! Generic set-associative LRU cache over line ids (timing-only: the
+//! simulator tracks presence, not data).
+
+use crate::mem::LineId;
+
+#[derive(Clone, Copy, Debug)]
+struct Way {
+    tag: u64, // full line id (cheap and unambiguous)
+    lru: u64, // last-touch timestamp
+    valid: bool,
+}
+
+const EMPTY: Way = Way {
+    tag: 0,
+    lru: 0,
+    valid: false,
+};
+
+/// Set-associative cache with true-LRU replacement.
+pub struct SetAssoc {
+    sets: usize,
+    ways: usize,
+    data: Vec<Way>,
+    tick: u64,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl SetAssoc {
+    pub fn new(sets: usize, ways: usize) -> Self {
+        assert!(sets.is_power_of_two(), "sets must be a power of two");
+        assert!(ways >= 1);
+        SetAssoc {
+            sets,
+            ways,
+            data: vec![EMPTY; sets * ways],
+            tick: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    #[inline]
+    fn set_of(&self, line: LineId) -> usize {
+        (line.0 as usize) & (self.sets - 1)
+    }
+
+    #[inline]
+    fn set_slice(&mut self, line: LineId) -> &mut [Way] {
+        let base = self.set_of(line) * self.ways;
+        &mut self.data[base..base + self.ways]
+    }
+
+    /// Probe without inserting. Hit updates LRU.
+    #[inline]
+    pub fn probe(&mut self, line: LineId) -> bool {
+        self.tick += 1;
+        let tick = self.tick;
+        for slot in self.set_slice(line) {
+            if slot.valid && slot.tag == line.0 {
+                slot.lru = tick;
+                self.hits += 1;
+                return true;
+            }
+        }
+        self.misses += 1;
+        false
+    }
+
+    /// Insert (fill) a line; returns the evicted line if any. Single pass:
+    /// refresh on hit, otherwise fill the best way (empty beats LRU).
+    #[inline]
+    pub fn insert(&mut self, line: LineId) -> Option<LineId> {
+        self.tick += 1;
+        let tick = self.tick;
+        let slots = self.set_slice(line);
+        let mut victim = 0usize;
+        let mut victim_key = u64::MAX; // invalid ways compare as key 0
+        for (w, slot) in slots.iter().enumerate() {
+            if slot.valid && slot.tag == line.0 {
+                slots[w].lru = tick;
+                return None;
+            }
+            let key = if slot.valid { slot.lru.max(1) } else { 0 };
+            if key < victim_key {
+                victim_key = key;
+                victim = w;
+            }
+        }
+        let slot = &mut slots[victim];
+        let evicted = if slot.valid { Some(LineId(slot.tag)) } else { None };
+        *slot = Way {
+            tag: line.0,
+            lru: tick,
+            valid: true,
+        };
+        evicted
+    }
+
+    /// Remove a line if present (coherence invalidation). Returns whether it
+    /// was present.
+    #[inline]
+    pub fn invalidate(&mut self, line: LineId) -> bool {
+        for slot in self.set_slice(line) {
+            if slot.valid && slot.tag == line.0 {
+                slot.valid = false;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Drop every line in `[first, last]` (page purge on free).
+    pub fn purge_line_range(&mut self, first: LineId, last: LineId) -> u64 {
+        let mut purged = 0;
+        for slot in &mut self.data {
+            if slot.valid && slot.tag >= first.0 && slot.tag <= last.0 {
+                slot.valid = false;
+                purged += 1;
+            }
+        }
+        purged
+    }
+
+    pub fn contains(&self, line: LineId) -> bool {
+        let set = (line.0 as usize) & (self.sets - 1);
+        (0..self.ways).any(|w| {
+            let s = self.data[set * self.ways + w];
+            s.valid && s.tag == line.0
+        })
+    }
+
+    pub fn resident_lines(&self) -> u64 {
+        self.data.iter().filter(|w| w.valid).count() as u64
+    }
+
+    pub fn capacity_lines(&self) -> u64 {
+        (self.sets * self.ways) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn miss_then_hit() {
+        let mut c = SetAssoc::new(4, 2);
+        assert!(!c.probe(LineId(5)));
+        c.insert(LineId(5));
+        assert!(c.probe(LineId(5)));
+        assert_eq!(c.hits, 1);
+        assert_eq!(c.misses, 1);
+    }
+
+    #[test]
+    fn lru_evicts_oldest() {
+        let mut c = SetAssoc::new(1, 2); // one set, two ways
+        c.insert(LineId(0));
+        c.insert(LineId(1));
+        c.probe(LineId(0)); // 0 is now MRU
+        let evicted = c.insert(LineId(2)).unwrap();
+        assert_eq!(evicted, LineId(1));
+        assert!(c.contains(LineId(0)) && c.contains(LineId(2)));
+    }
+
+    #[test]
+    fn set_conflict_only_within_set() {
+        let mut c = SetAssoc::new(4, 1);
+        c.insert(LineId(0));
+        c.insert(LineId(1)); // different set — no eviction
+        assert!(c.contains(LineId(0)));
+        assert_eq!(c.insert(LineId(4)), Some(LineId(0))); // same set as 0
+    }
+
+    #[test]
+    fn reinsert_refreshes_without_eviction() {
+        let mut c = SetAssoc::new(1, 2);
+        c.insert(LineId(0));
+        c.insert(LineId(1));
+        assert_eq!(c.insert(LineId(0)), None);
+        // 1 is LRU now.
+        assert_eq!(c.insert(LineId(2)), Some(LineId(1)));
+    }
+
+    #[test]
+    fn invalidate_removes() {
+        let mut c = SetAssoc::new(4, 2);
+        c.insert(LineId(9));
+        assert!(c.invalidate(LineId(9)));
+        assert!(!c.contains(LineId(9)));
+        assert!(!c.invalidate(LineId(9)));
+    }
+
+    #[test]
+    fn purge_range() {
+        let mut c = SetAssoc::new(16, 2);
+        for l in 0..10 {
+            c.insert(LineId(l));
+        }
+        let purged = c.purge_line_range(LineId(3), LineId(6));
+        assert_eq!(purged, 4);
+        assert!(c.contains(LineId(2)) && c.contains(LineId(7)));
+        assert!(!c.contains(LineId(4)));
+    }
+
+    #[test]
+    fn capacity_and_residency() {
+        let mut c = SetAssoc::new(8, 2);
+        assert_eq!(c.capacity_lines(), 16);
+        for l in 0..100 {
+            c.insert(LineId(l));
+        }
+        assert!(c.resident_lines() <= 16);
+    }
+
+    #[test]
+    fn working_set_within_capacity_all_hits() {
+        // 64-set 2-way = 128 lines; a 64-line working set must not thrash.
+        let mut c = SetAssoc::new(64, 2);
+        for l in 0..64 {
+            c.insert(LineId(l));
+        }
+        for _ in 0..3 {
+            for l in 0..64 {
+                assert!(c.probe(LineId(l)), "line {l} should stay resident");
+            }
+        }
+    }
+}

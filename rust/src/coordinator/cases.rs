@@ -1,0 +1,153 @@
+//! Table 1: the 8-case design of experiments.
+//!
+//! The paper moves "smoothly from the conventional programming approach
+//! towards the completely localised technique by changing one parameter at
+//! a time": programming style × mapper × hash policy.
+
+use crate::mem::{HashPolicy, MemConfig};
+use crate::sched::{Scheduler, StaticMapper, TileLinuxScheduler};
+use crate::sim::EngineConfig;
+use crate::workloads::mergesort::Variant;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MapperKind {
+    TileLinux,
+    Static,
+}
+
+impl MapperKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            MapperKind::TileLinux => "Tile Linux",
+            MapperKind::Static => "Static Mapper",
+        }
+    }
+
+    /// Instantiate the scheduler (Tile Linux is seeded for replayability).
+    pub fn scheduler(self, seed: u64) -> Box<dyn Scheduler> {
+        match self {
+            MapperKind::TileLinux => Box::new(TileLinuxScheduler::with_seed(seed)),
+            MapperKind::Static => Box::new(StaticMapper::new()),
+        }
+    }
+}
+
+/// One row of Table 1.
+#[derive(Clone, Copy, Debug)]
+pub struct CaseSpec {
+    /// 1-based case id as in the paper.
+    pub id: u8,
+    pub localised: bool,
+    pub mapper: MapperKind,
+    pub hash: HashPolicy,
+}
+
+impl CaseSpec {
+    pub fn label(&self) -> String {
+        format!(
+            "Case {}: {} | {} | {}",
+            self.id,
+            if self.localised { "Localised" } else { "Non-localised" },
+            self.mapper.label(),
+            match self.hash {
+                HashPolicy::AllButStack => "All but stack",
+                HashPolicy::None => "None",
+            }
+        )
+    }
+
+    pub fn short(&self) -> String {
+        format!("case{}", self.id)
+    }
+
+    /// Merge-sort variant this case runs (localised cases use Algorithm 4).
+    pub fn mergesort_variant(&self) -> Variant {
+        if self.localised {
+            Variant::Localised
+        } else {
+            Variant::NonLocalised
+        }
+    }
+
+    /// Engine configuration for this case (striping per Fig. 2: enabled).
+    pub fn engine_config(&self, striping: bool) -> EngineConfig {
+        EngineConfig::tilepro64(MemConfig {
+            hash_policy: self.hash,
+            striping,
+        })
+    }
+}
+
+/// The eight cases exactly as in Table 1.
+pub fn table1() -> [CaseSpec; 8] {
+    use HashPolicy::*;
+    use MapperKind::*;
+    [
+        CaseSpec { id: 1, localised: false, mapper: TileLinux, hash: AllButStack },
+        CaseSpec { id: 2, localised: false, mapper: TileLinux, hash: None },
+        CaseSpec { id: 3, localised: false, mapper: Static, hash: AllButStack },
+        CaseSpec { id: 4, localised: false, mapper: Static, hash: None },
+        CaseSpec { id: 5, localised: true, mapper: TileLinux, hash: AllButStack },
+        CaseSpec { id: 6, localised: true, mapper: TileLinux, hash: None },
+        CaseSpec { id: 7, localised: true, mapper: Static, hash: AllButStack },
+        CaseSpec { id: 8, localised: true, mapper: Static, hash: None },
+    ]
+}
+
+pub fn case(id: u8) -> CaseSpec {
+    table1()[(id - 1) as usize]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eight_distinct_cases() {
+        let cases = table1();
+        assert_eq!(cases.len(), 8);
+        for (i, c) in cases.iter().enumerate() {
+            assert_eq!(c.id as usize, i + 1);
+        }
+        // All combinations distinct.
+        let mut keys: Vec<_> = cases
+            .iter()
+            .map(|c| (c.localised, c.mapper == MapperKind::Static, c.hash == HashPolicy::None))
+            .collect();
+        keys.sort();
+        keys.dedup();
+        assert_eq!(keys.len(), 8);
+    }
+
+    #[test]
+    fn matches_paper_table1() {
+        // Spot-check the paper's rows.
+        let c1 = case(1);
+        assert!(!c1.localised && c1.mapper == MapperKind::TileLinux && c1.hash == HashPolicy::AllButStack);
+        let c4 = case(4);
+        assert!(!c4.localised && c4.mapper == MapperKind::Static && c4.hash == HashPolicy::None);
+        let c8 = case(8);
+        assert!(c8.localised && c8.mapper == MapperKind::Static && c8.hash == HashPolicy::None);
+    }
+
+    #[test]
+    fn localised_cases_use_algorithm4() {
+        assert_eq!(case(8).mergesort_variant(), Variant::Localised);
+        assert_eq!(case(3).mergesort_variant(), Variant::NonLocalised);
+    }
+
+    #[test]
+    fn labels_render() {
+        assert_eq!(
+            case(8).label(),
+            "Case 8: Localised | Static Mapper | None"
+        );
+        assert_eq!(case(2).short(), "case2");
+    }
+
+    #[test]
+    fn schedulers_instantiate() {
+        assert_eq!(MapperKind::Static.scheduler(0).label(), "static");
+        assert_eq!(MapperKind::TileLinux.scheduler(0).label(), "tile-linux");
+    }
+}

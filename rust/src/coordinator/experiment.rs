@@ -1,0 +1,403 @@
+//! Experiment drivers: one function per paper artefact (Fig. 1–4, Table 1).
+//!
+//! Each driver sweeps the paper's parameter grid, runs the simulator, and
+//! returns a `SweepTable` whose rows/series mirror the published figure.
+//! The bench binaries and the `repro` CLI are thin wrappers around these.
+
+use crate::coordinator::cases::{table1, CaseSpec};
+use crate::harness::SweepTable;
+use crate::mem::HashPolicy;
+use crate::sim::{Engine, RunStats};
+use crate::workloads::{mergesort, microbench};
+
+/// Default seed for Tile Linux scheduling in experiments.
+pub const DEFAULT_SEED: u64 = 2014;
+
+/// Run the micro-benchmark for one configuration.
+pub fn run_microbench(case: &CaseSpec, elems: u64, threads: usize, reps: u32, seed: u64) -> RunStats {
+    let mut engine = Engine::new(case.engine_config(true));
+    let program = microbench::build(
+        &mut engine,
+        &microbench::MicrobenchConfig {
+            elems,
+            threads,
+            reps,
+            localised: case.localised,
+        },
+    );
+    let mut sched = case.mapper.scheduler(seed);
+    engine.run(&program, sched.as_mut()).expect("microbench run failed")
+}
+
+/// Run merge sort for one configuration.
+pub fn run_mergesort(
+    case: &CaseSpec,
+    elems: u64,
+    threads: usize,
+    striping: bool,
+    seed: u64,
+) -> RunStats {
+    run_mergesort_variant(case, case.mergesort_variant(), elems, threads, striping, seed)
+}
+
+/// Merge sort with an explicit variant (Fig. 3's intermediate-step series).
+pub fn run_mergesort_variant(
+    case: &CaseSpec,
+    variant: mergesort::Variant,
+    elems: u64,
+    threads: usize,
+    striping: bool,
+    seed: u64,
+) -> RunStats {
+    let mut engine = Engine::new(case.engine_config(striping));
+    let program = mergesort::build(
+        &mut engine,
+        &mergesort::MergesortConfig {
+            elems,
+            threads,
+            variant,
+        },
+    );
+    let mut sched = case.mapper.scheduler(seed);
+    engine.run(&program, sched.as_mut()).expect("mergesort run failed")
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 1 — micro-benchmark execution time vs repetitions
+// ---------------------------------------------------------------------------
+
+/// Paper setup: 1 M integers, 63 threads; localised (static map, hash
+/// disabled) vs non-localised (Tile Linux default mapping, hash-for-home).
+pub fn fig1(elems: u64, threads: usize, reps_sweep: &[u32], seed: u64) -> SweepTable {
+    let localised = CaseSpec {
+        id: 8,
+        localised: true,
+        mapper: crate::coordinator::cases::MapperKind::Static,
+        hash: HashPolicy::None,
+    };
+    let non_localised = CaseSpec {
+        id: 1,
+        localised: false,
+        mapper: crate::coordinator::cases::MapperKind::TileLinux,
+        hash: HashPolicy::AllButStack,
+    };
+    let mut t = SweepTable::new(
+        &format!("Fig.1 micro-benchmark, {elems} ints, {threads} threads (exec time, s)"),
+        "repetitions",
+        vec!["non-localised".into(), "localised".into()],
+    );
+    for &reps in reps_sweep {
+        let nl = run_microbench(&non_localised, elems, threads, reps, seed);
+        let lo = run_microbench(&localised, elems, threads, reps, seed);
+        t.push_row(reps.to_string(), vec![nl.seconds(), lo.seconds()]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 2 / Table 1 — merge-sort speed-up, all 8 cases × thread counts
+// ---------------------------------------------------------------------------
+
+/// Speed-up for every Table 1 case over the thread sweep. The base (1.0)
+/// is Case 1 at a single thread, exactly as in §5.1: "execution time with
+/// a single thread under the default hashing scheme and the default Linux
+/// scheduling policy".
+pub fn fig2(elems: u64, thread_sweep: &[usize], seed: u64) -> SweepTable {
+    let cases = table1();
+    let base = run_mergesort(&cases[0], elems, 1, true, seed).makespan_cycles as f64;
+    let mut t = SweepTable::new(
+        &format!("Fig.2 merge sort speed-up, {elems} ints (base: case 1 @ 1 thread)"),
+        "threads",
+        cases.iter().map(|c| c.short()).collect(),
+    );
+    for &threads in thread_sweep {
+        let row = cases
+            .iter()
+            .map(|c| base / run_mergesort(c, elems, threads, true, seed).makespan_cycles as f64)
+            .collect();
+        t.push_row(threads.to_string(), row);
+    }
+    t
+}
+
+/// Table 1 rendered as execution times at a fixed thread count.
+pub fn table1_times(elems: u64, threads: usize, seed: u64) -> SweepTable {
+    let mut t = SweepTable::new(
+        &format!("Table 1 cases: merge sort of {elems} ints, {threads} threads (exec time, s)"),
+        "case",
+        vec!["seconds".into(), "speedup_vs_case1".into()],
+    );
+    let cases = table1();
+    let c1 = run_mergesort(&cases[0], elems, threads, true, seed).makespan_cycles as f64;
+    for c in &cases {
+        let s = run_mergesort(c, elems, threads, true, seed);
+        t.push_row(c.short(), vec![s.seconds(), c1 / s.makespan_cycles as f64]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 3 — best cases across input sizes (+ intermediate step)
+// ---------------------------------------------------------------------------
+
+/// §5.2: cases 3, 4, 7, 8 plus "case 3 + intermediate step", 64 threads,
+/// sweeping the input size. Execution time in seconds.
+pub fn fig3(sizes: &[u64], threads: usize, seed: u64) -> SweepTable {
+    let cases = table1();
+    let series: Vec<String> = vec![
+        "case3".into(),
+        "case3+interm".into(),
+        "case4".into(),
+        "case7".into(),
+        "case8".into(),
+    ];
+    let mut t = SweepTable::new(
+        &format!("Fig.3 exec time vs input size, {threads} threads (s)"),
+        "elems",
+        series,
+    );
+    for &elems in sizes {
+        let c3 = run_mergesort(&cases[2], elems, threads, true, seed);
+        let c3i = run_mergesort_variant(
+            &cases[2],
+            mergesort::Variant::NonLocalisedIntermediate,
+            elems,
+            threads,
+            true,
+            seed,
+        );
+        let c4 = run_mergesort(&cases[3], elems, threads, true, seed);
+        let c7 = run_mergesort(&cases[6], elems, threads, true, seed);
+        let c8 = run_mergesort(&cases[7], elems, threads, true, seed);
+        t.push_row(
+            elems.to_string(),
+            vec![c3.seconds(), c3i.seconds(), c4.seconds(), c7.seconds(), c8.seconds()],
+        );
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 4 — memory striping, static mapping
+// ---------------------------------------------------------------------------
+
+/// §5.3: execution time with striping on/off over the thread sweep, static
+/// mapping, for the non-localised (hash) and localised (none) styles.
+pub fn fig4(elems: u64, thread_sweep: &[usize], seed: u64) -> SweepTable {
+    let cases = table1();
+    let c3 = &cases[2]; // non-localised, static, hash
+    let c8 = &cases[7]; // localised, static, none
+    let mut t = SweepTable::new(
+        &format!("Fig.4 striping influence, static mapping, {elems} ints (exec time, s)"),
+        "threads",
+        vec![
+            "case3 striped".into(),
+            "case3 non-striped".into(),
+            "case8 striped".into(),
+            "case8 non-striped".into(),
+        ],
+    );
+    for &threads in thread_sweep {
+        t.push_row(
+            threads.to_string(),
+            vec![
+                run_mergesort(c3, elems, threads, true, seed).seconds(),
+                run_mergesort(c3, elems, threads, false, seed).seconds(),
+                run_mergesort(c8, elems, threads, true, seed).seconds(),
+                run_mergesort(c8, elems, threads, false, seed).seconds(),
+            ],
+        );
+    }
+    t
+}
+
+/// Fig. 4's closing observation: "the effect of memory striping is
+/// considerable when caching is turned off across the system". Same sweep
+/// as fig4 but with the caches disabled — every access is a DRAM
+/// transaction, so controller reach/contention dominates.
+pub fn fig4_cache_off(elems: u64, thread_sweep: &[usize], seed: u64) -> SweepTable {
+    let c3 = crate::coordinator::cases::case(3);
+    let mut t = SweepTable::new(
+        &format!("Fig.4 ablation: caches OFF, static mapping, {elems} ints (exec time, s)"),
+        "threads",
+        vec!["striped".into(), "non-striped".into()],
+    );
+    for &threads in thread_sweep {
+        let run = |striping: bool| {
+            let mut engine =
+                Engine::new(c3.engine_config(striping).without_caches());
+            let program = mergesort::build(
+                &mut engine,
+                &mergesort::MergesortConfig {
+                    elems,
+                    threads,
+                    variant: mergesort::Variant::NonLocalised,
+                },
+            );
+            let mut sched = c3.mapper.scheduler(seed);
+            engine
+                .run(&program, sched.as_mut())
+                .expect("cache-off run failed")
+                .seconds()
+        };
+        t.push_row(threads.to_string(), vec![run(true), run(false)]);
+    }
+    t
+}
+
+/// §2's three homing classes head-to-head on the repeated-scan kernel:
+/// local homing (first touch by the worker), remote homing (one fixed
+/// other tile), and hash-for-home — plus the localised fix.
+pub fn homing_classes(elems: u64, threads: usize, passes: u32) -> SweepTable {
+    use crate::coordinator::localise::{build_program, LocaliseConfig, ELEM_BYTES};
+    use crate::mem::{AllocKind, Homing, Placement};
+    use crate::sim::{Loc, TraceBuilder};
+
+    struct Scan(u32);
+    impl crate::coordinator::ChunkKernel for Scan {
+        fn emit(&self, t: &mut TraceBuilder, chunk: Loc, bytes: u64, _i: usize) {
+            for _ in 0..self.0 {
+                t.read(chunk, bytes);
+            }
+        }
+    }
+
+    let run = |homing: Homing, localised: bool| {
+        let mut e = Engine::new(crate::sim::EngineConfig::tilepro64(crate::mem::MemConfig {
+            hash_policy: HashPolicy::None,
+            striping: true,
+        }));
+        let input = e
+            .alloc
+            .alloc_with(
+                crate::arch::TileId(0),
+                elems * ELEM_BYTES,
+                AllocKind::Heap,
+                homing,
+                Placement::Striped,
+            )
+            .expect("alloc");
+        let p = build_program(
+            &input,
+            elems,
+            &LocaliseConfig { threads, localised },
+            &Scan(passes),
+        );
+        e.run(&p, &mut crate::sched::StaticMapper::new())
+            .expect("run")
+            .seconds()
+    };
+    let mut t = SweepTable::new(
+        &format!("Homing classes (paper §2), {elems} ints, {threads} threads, {passes} passes (s)"),
+        "class",
+        vec!["seconds".into()],
+    );
+    t.push_row("local (first touch)", vec![run(Homing::FirstTouch, false)]);
+    t.push_row(
+        "remote (tile 63)",
+        vec![run(Homing::Single(crate::arch::TileId(63)), false)],
+    );
+    t.push_row("hash-for-home", vec![run(Homing::HashForHome, false)]);
+    t.push_row("localised", vec![run(Homing::FirstTouch, true)]);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::cases::case;
+
+    const N: u64 = 1 << 14; // small sizes keep unit tests quick
+
+    #[test]
+    fn fig1_table_shape() {
+        let t = fig1(1 << 14, 8, &[1, 4], DEFAULT_SEED);
+        assert_eq!(t.rows.len(), 2);
+        assert_eq!(t.series.len(), 2);
+        assert!(t.rows.iter().all(|(_, v)| v.iter().all(|&x| x > 0.0)));
+    }
+
+    #[test]
+    fn fig1_gap_grows_with_reps() {
+        let t = fig1(1 << 15, 8, &[1, 16], DEFAULT_SEED);
+        let gap = |row: &Vec<f64>| row[0] / row[1]; // non-loc / loc
+        let g1 = gap(&t.rows[0].1);
+        let g16 = gap(&t.rows[1].1);
+        assert!(g16 > g1, "gap must grow with repetitions: {g1} -> {g16}");
+    }
+
+    #[test]
+    fn fig2_case8_beats_case2() {
+        // The tile-0 hot spot needs a sort bigger than tile 0's L2 to bite;
+        // use a larger input than the other smoke tests.
+        let t = fig2(1 << 18, &[16], DEFAULT_SEED);
+        let row = &t.rows[0].1;
+        let (case2, case8) = (row[1], row[7]);
+        assert!(
+            case8 > case2 * 1.8,
+            "case 8 speedup {case8} must dwarf case 2 {case2}"
+        );
+    }
+
+    #[test]
+    fn fig2_static_beats_tile_linux() {
+        // Needs a run long enough for load-balancer ticks to fire (the
+        // paper's runs are seconds long; migrations are the whole point).
+        let t = fig2(1 << 20, &[8], DEFAULT_SEED);
+        let row = &t.rows[0].1;
+        // case3 (static) vs case1 (linux), both non-localised hash.
+        assert!(row[2] > row[0], "static {} vs linux {}", row[2], row[0]);
+    }
+
+    #[test]
+    fn table1_times_has_8_rows() {
+        let t = table1_times(N, 4, DEFAULT_SEED);
+        assert_eq!(t.rows.len(), 8);
+    }
+
+    #[test]
+    fn fig3_has_five_series() {
+        let t = fig3(&[N], 4, DEFAULT_SEED);
+        assert_eq!(t.series.len(), 5);
+        assert_eq!(t.rows.len(), 1);
+    }
+
+    #[test]
+    fn fig4_runs_both_modes() {
+        let t = fig4(N, &[4], DEFAULT_SEED);
+        assert_eq!(t.rows[0].1.len(), 4);
+    }
+
+    #[test]
+    fn fig4_cache_off_striping_matters_more() {
+        // Caches off: striping's relative effect at 32 threads must exceed
+        // its cached counterpart (the paper's "much more observable").
+        let off = fig4_cache_off(1 << 16, &[32], DEFAULT_SEED);
+        let row = &off.rows[0].1;
+        let rel_off = (row[1] - row[0]) / row[0];
+        let on = fig4(1 << 16, &[32], DEFAULT_SEED);
+        let r = &on.rows[0].1;
+        let rel_on = (r[1] - r[0]).abs() / r[0];
+        assert!(
+            rel_off > rel_on,
+            "cache-off striping effect {rel_off:.3} must exceed cached {rel_on:.3}"
+        );
+    }
+
+    #[test]
+    fn homing_classes_order() {
+        let t = homing_classes(1 << 16, 16, 8);
+        let secs: Vec<f64> = t.rows.iter().map(|(_, v)| v[0]).collect();
+        // localised fastest; remote single-tile the worst of the reads.
+        let (_local, remote, hash, localised) = (secs[0], secs[1], secs[2], secs[3]);
+        assert!(localised < hash, "localised {localised} vs hash {hash}");
+        assert!(remote > hash, "remote hot spot {remote} vs hash {hash}");
+    }
+
+    #[test]
+    fn run_helpers_deterministic() {
+        let a = run_mergesort(&case(1), N, 4, true, 7).makespan_cycles;
+        let b = run_mergesort(&case(1), N, 4, true, 7).makespan_cycles;
+        assert_eq!(a, b, "same seed must replay identically");
+    }
+}

@@ -1,0 +1,12 @@
+//! The coordinator: the paper's contribution as a first-class feature.
+//!
+//! - [`localise`] — Algorithm 1 as a reusable API over any chunk kernel.
+//! - [`cases`] — the Table 1 experiment matrix.
+//! - [`experiment`] — drivers that regenerate every figure/table.
+
+pub mod cases;
+pub mod experiment;
+pub mod localise;
+
+pub use cases::{case, table1, CaseSpec, MapperKind};
+pub use localise::{build_program, ChunkKernel, LocaliseConfig};

@@ -1,0 +1,173 @@
+//! Benchmark harness (no criterion in the offline environment).
+//!
+//! Two kinds of measurement coexist in this repo's benches:
+//!
+//! 1. **Simulated time** — the paper's numbers: cycles reported by the NUCA
+//!    engine, converted to seconds at 860 MHz. Deterministic, so a single
+//!    run is exact; `SweepTable` renders these as the paper's tables/figures.
+//! 2. **Wall-clock time** — how fast *our* simulator/runtime executes
+//!    (EXPERIMENTS.md §Perf). `time_it` does warmup + repeated timing and
+//!    reports min/mean/p50.
+
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Wall-clock measurement of a closure.
+pub struct Timing {
+    pub iters: usize,
+    pub min_s: f64,
+    pub mean_s: f64,
+    pub p50_s: f64,
+}
+
+impl Timing {
+    pub fn summary(&self, label: &str) -> String {
+        format!(
+            "{label}: min {:.3} ms, mean {:.3} ms, p50 {:.3} ms ({} iters)",
+            self.min_s * 1e3,
+            self.mean_s * 1e3,
+            self.p50_s * 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Warmup then time `iters` runs of `f`.
+pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    Timing {
+        iters: n,
+        min_s: samples[0],
+        mean_s: samples.iter().sum::<f64>() / n as f64,
+        p50_s: samples[n / 2],
+    }
+}
+
+/// A table of sweep results, rendered like the paper's figures: one row per
+/// x-value, one column per series.
+pub struct SweepTable {
+    pub title: String,
+    pub x_label: String,
+    pub series: Vec<String>,
+    pub rows: Vec<(String, Vec<f64>)>,
+}
+
+impl SweepTable {
+    pub fn new(title: &str, x_label: &str, series: Vec<String>) -> Self {
+        SweepTable {
+            title: title.to_string(),
+            x_label: x_label.to_string(),
+            series,
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push_row(&mut self, x: impl Into<String>, values: Vec<f64>) {
+        assert_eq!(values.len(), self.series.len(), "row width mismatch");
+        self.rows.push((x.into(), values));
+    }
+
+    /// Render a fixed-width text table (what the bench binaries print).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("\n== {} ==\n", self.title));
+        let w = 14usize;
+        out.push_str(&format!("{:>w$}", self.x_label, w = w));
+        for s in &self.series {
+            out.push_str(&format!("{s:>w$}", w = w));
+        }
+        out.push('\n');
+        for (x, vals) in &self.rows {
+            out.push_str(&format!("{x:>w$}", w = w));
+            for v in vals {
+                if v.abs() >= 1000.0 {
+                    out.push_str(&format!("{v:>w$.0}", w = w));
+                } else {
+                    out.push_str(&format!("{v:>w$.3}", w = w));
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("title", Json::str(self.title.clone())),
+            ("x_label", Json::str(self.x_label.clone())),
+            (
+                "series",
+                Json::arr(self.series.iter().map(|s| Json::str(s.clone()))),
+            ),
+            (
+                "rows",
+                Json::arr(self.rows.iter().map(|(x, vals)| {
+                    Json::obj(vec![
+                        ("x", Json::str(x.clone())),
+                        ("values", Json::arr(vals.iter().map(|v| Json::num(*v)))),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    /// Write JSON next to the text output so EXPERIMENTS.md can cite files.
+    pub fn save(&self, dir: &str, name: &str) -> std::io::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let path = format!("{dir}/{name}.json");
+        std::fs::write(&path, self.to_json().encode())?;
+        eprintln!("saved {path}");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_counts_iters() {
+        let mut n = 0usize;
+        let t = time_it(2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(t.iters, 5);
+        assert!(t.min_s <= t.mean_s + 1e-12);
+    }
+
+    #[test]
+    fn sweep_table_renders_all_rows() {
+        let mut t = SweepTable::new("T", "x", vec!["a".into(), "b".into()]);
+        t.push_row("1", vec![1.0, 2.0]);
+        t.push_row("2", vec![3.0, 4.0]);
+        let s = t.render();
+        assert!(s.contains("== T =="));
+        assert!(s.lines().count() >= 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn sweep_table_rejects_ragged_rows() {
+        let mut t = SweepTable::new("T", "x", vec!["a".into()]);
+        t.push_row("1", vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn sweep_table_json_round_trip() {
+        let mut t = SweepTable::new("T", "x", vec!["a".into()]);
+        t.push_row("1", vec![1.5]);
+        let j = t.to_json();
+        let parsed = crate::util::json::parse(&j.encode()).unwrap();
+        assert_eq!(parsed.get("title").unwrap().as_str().unwrap(), "T");
+    }
+}

@@ -1,0 +1,31 @@
+//! # tilesim — cache-aware parallel programming for manycore processors
+//!
+//! A reproduction of Tousimojarad & Vanderbauwhede, *Cache-aware Parallel
+//! Programming for Manycore Processors* (CS.DC 2014): the *localisation*
+//! programming technique for NUCA manycores, validated on a from-scratch
+//! cycle-approximate simulator of the Tilera TILEPro64 (8×8 mesh, DDC
+//! distributed home caches, 4 striped memory controllers), plus a
+//! Rust+JAX+Pallas compute runtime whose AOT-compiled sorting kernels
+//! mirror the paper's merge-sort workload on the request path.
+//!
+//! Layer map (DESIGN.md §3):
+//! - **L3 (this crate)** — the coordinator: simulator substrates
+//!   ([`arch`], [`mem`], [`cache`], [`noc`], [`sim`], [`sched`]), the
+//!   localisation API and experiment matrix ([`coordinator`]), the paper's
+//!   workloads ([`workloads`]), and the PJRT runtime ([`runtime`]).
+//! - **L2/L1 (python/compile)** — JAX chunked sorter calling Pallas bitonic
+//!   kernels, AOT-lowered to `artifacts/*.hlo.txt`, executed by
+//!   [`runtime`] with Python never on the request path.
+
+pub mod arch;
+pub mod cache;
+pub mod coordinator;
+pub mod harness;
+pub mod mem;
+pub mod metrics;
+pub mod noc;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod util;
+pub mod workloads;

@@ -1,0 +1,243 @@
+//! `repro` — the leader CLI: run the paper's experiments on the simulated
+//! TILEPro64 and exercise the PJRT request path.
+//!
+//! Subcommands:
+//!   info                         chip + artifact summary
+//!   microbench [flags]           one micro-benchmark run (Alg. 2)
+//!   mergesort  [flags]           one merge-sort run (Alg. 3/4)
+//!   sort       [flags]           REAL sort via the AOT'd Pallas kernels
+//!   experiment <fig1|fig2|fig3|fig4|table1|all> [flags]
+//!
+//! Common flags: --size N (supports k/m/ki/mi suffixes), --threads N,
+//! --reps N, --case 1..8, --seed S, --no-striping, --json, --out DIR.
+
+use tilesim::coordinator::{case, experiment, table1};
+use tilesim::harness::SweepTable;
+use tilesim::util::cli::{parse_usize, Args};
+use tilesim::workloads::mergesort::Variant;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+const VALUE_FLAGS: &[&str] = &[
+    "size", "threads", "reps", "case", "seed", "out", "sizes", "variant", "digit-bits",
+];
+const BOOL_FLAGS: &[&str] = &["json", "no-striping", "no-cache", "localised", "help", "heatmap"];
+
+fn run(argv: &[String]) -> Result<(), Box<dyn std::error::Error>> {
+    let args = Args::parse(argv, VALUE_FLAGS, BOOL_FLAGS)?;
+    if args.flag("help") || args.positional().is_empty() {
+        print_usage();
+        return Ok(());
+    }
+    let seed = args.u64("seed", experiment::DEFAULT_SEED)?;
+    match args.positional()[0].as_str() {
+        "info" => info(),
+        "microbench" => {
+            let c = case(args.usize("case", 8)? as u8);
+            let stats = experiment::run_microbench(
+                &c,
+                args.usize("size", 1_000_000)? as u64,
+                args.usize("threads", 63)?,
+                args.usize("reps", 16)? as u32,
+                seed,
+            );
+            emit_stats(&args, &c.label(), &stats);
+            Ok(())
+        }
+        "mergesort" => {
+            let c = case(args.usize("case", 8)? as u8);
+            let variant = match args.get("variant") {
+                None => c.mergesort_variant(),
+                Some("non-localised") => Variant::NonLocalised,
+                Some("intermediate") => Variant::NonLocalisedIntermediate,
+                Some("localised") => Variant::Localised,
+                Some(v) => return Err(format!("unknown variant {v}").into()),
+            };
+            let mut engine_cfg = c.engine_config(!args.flag("no-striping"));
+            if args.flag("no-cache") {
+                engine_cfg = engine_cfg.without_caches();
+            }
+            let mut engine = tilesim::sim::Engine::new(engine_cfg);
+            let program = tilesim::workloads::mergesort::build(
+                &mut engine,
+                &tilesim::workloads::mergesort::MergesortConfig {
+                    elems: args.usize("size", 10_000_000)? as u64,
+                    threads: args.usize("threads", 64)?,
+                    variant,
+                },
+            );
+            let mut sched = c.mapper.scheduler(seed);
+            let stats = engine.run(&program, sched.as_mut())?;
+            emit_stats(&args, &c.label(), &stats);
+            Ok(())
+        }
+        "radix" => {
+            let c = case(args.usize("case", 8)? as u8);
+            let mut engine = tilesim::sim::Engine::new(c.engine_config(!args.flag("no-striping")));
+            let program = tilesim::workloads::radix::build(
+                &mut engine,
+                &tilesim::workloads::radix::RadixConfig {
+                    elems: args.usize("size", 1_000_000)? as u64,
+                    threads: args.usize("threads", 63)?,
+                    digit_bits: args.usize("digit-bits", 8)? as u32,
+                    localised: c.localised,
+                },
+            );
+            let mut sched = c.mapper.scheduler(seed);
+            let stats = engine.run(&program, sched.as_mut())?;
+            emit_stats(&args, &format!("radix sort — {}", c.label()), &stats);
+            Ok(())
+        }
+        "homing" => {
+            let t = experiment::homing_classes(
+                args.usize("size", 1_000_000)? as u64,
+                args.usize("threads", 63)?,
+                args.usize("reps", 16)? as u32,
+            );
+            println!("{}", t.render());
+            Ok(())
+        }
+        "sort" => sort_real(&args),
+        "experiment" => {
+            let which = args
+                .positional()
+                .get(1)
+                .map(|s| s.as_str())
+                .unwrap_or("all");
+            let size = args.usize("size", 4_000_000)? as u64;
+            let threads_all = [1usize, 2, 4, 8, 16, 32, 64];
+            let out = args.get("out").map(|s| s.to_string());
+            let mut tables: Vec<(String, SweepTable)> = Vec::new();
+            if which == "fig1" || which == "all" {
+                tables.push((
+                    "fig1".into(),
+                    experiment::fig1(
+                        args.usize("size", 1_000_000)? as u64,
+                        63,
+                        &[1, 2, 4, 8, 16, 32, 64],
+                        seed,
+                    ),
+                ));
+            }
+            if which == "fig2" || which == "all" {
+                tables.push(("fig2".into(), experiment::fig2(size, &threads_all, seed)));
+            }
+            if which == "table1" || which == "all" {
+                tables.push((
+                    "table1".into(),
+                    experiment::table1_times(size, args.usize("threads", 64)?, seed),
+                ));
+            }
+            if which == "fig3" || which == "all" {
+                let sizes: Vec<u64> = match args.get("sizes") {
+                    Some(s) => s
+                        .split(',')
+                        .map(|x| parse_usize(x).map(|v| v as u64))
+                        .collect::<Option<Vec<_>>>()
+                        .ok_or("bad --sizes list")?,
+                    None => vec![1_000_000, 2_000_000, 4_000_000, 8_000_000],
+                };
+                tables.push(("fig3".into(), experiment::fig3(&sizes, 64, seed)));
+            }
+            if which == "fig4" || which == "all" {
+                tables.push((
+                    "fig4".into(),
+                    experiment::fig4(size, &[16, 32, 64], seed),
+                ));
+            }
+            if tables.is_empty() {
+                return Err(format!("unknown experiment '{which}'").into());
+            }
+            for (name, t) in &tables {
+                println!("{}", t.render());
+                if let Some(dir) = &out {
+                    t.save(dir, name)?;
+                }
+            }
+            Ok(())
+        }
+        other => {
+            print_usage();
+            Err(format!("unknown command '{other}'").into())
+        }
+    }
+}
+
+fn info() -> Result<(), Box<dyn std::error::Error>> {
+    println!("tilesim: simulated TILEPro64 — 8x8 mesh, 64 tiles @ 860 MHz");
+    println!("caches: 8 KB L1D (2-way), 64 KB L2 (4-way), 64 B lines, DDC home caches");
+    println!("memory: 4 controllers, 8 KB striping, 64 KB pages, first-touch homing under ucache_hash=none");
+    println!("\nTable 1 cases:");
+    for c in table1() {
+        println!("  {}", c.label());
+    }
+    let dir = tilesim::runtime::artifacts_dir();
+    match tilesim::runtime::ArtifactSet::load(&dir) {
+        Ok(set) => {
+            println!("\nartifacts ({}): {}", dir.display(), set.names().join(", "));
+        }
+        Err(e) => println!("\nartifacts: not loaded ({e}) — run `make artifacts`"),
+    }
+    Ok(())
+}
+
+fn sort_real(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
+    use std::time::Instant;
+    let n = args.usize("size", 1_000_000)?;
+    let seed = args.u64("seed", 42)?;
+    let dir = tilesim::runtime::artifacts_dir();
+    let set = tilesim::runtime::ArtifactSet::load(&dir)?;
+    let sorter = tilesim::runtime::ChunkedSorter::new(&set)?;
+    let mut rng = tilesim::util::rng::Rng::new(seed);
+    let data = rng.i32_vec(n);
+    let t0 = Instant::now();
+    let (sorted, metrics) = sorter.sort(&data)?;
+    let dt = t0.elapsed().as_secs_f64();
+    assert!(sorted.windows(2).all(|w| w[0] <= w[1]), "output not sorted!");
+    let mut check = data.clone();
+    check.sort_unstable();
+    assert_eq!(sorted, check, "output mismatch vs std sort");
+    println!(
+        "sorted {n} i32s via PJRT in {:.1} ms ({} dispatches, {} padded) — verified against std sort",
+        dt * 1e3,
+        metrics.dispatches,
+        metrics.padded
+    );
+    Ok(())
+}
+
+fn emit_stats(args: &Args, label: &str, stats: &tilesim::sim::RunStats) {
+    if args.flag("json") {
+        println!("{}", stats.to_json().encode());
+    } else {
+        println!("{label}");
+        println!("  {}", stats.summary());
+        if args.flag("heatmap") {
+            println!("{}", tilesim::metrics::home_heatmap(stats));
+            println!(
+                "home-traffic concentration: {:.3} (0 = spread, 1 = one hot tile)",
+                tilesim::metrics::home_concentration(stats)
+            );
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "usage: repro <info|microbench|mergesort|radix|homing|sort|experiment> [flags]\n\
+         experiments: repro experiment <fig1|fig2|fig3|fig4|table1|all> [--size N] [--out DIR]\n\
+         flags: --size N --threads N --reps N --case 1..8 --seed S --variant v\n\
+                --digit-bits B --no-striping --no-cache --heatmap --json\n\
+                --out DIR --sizes a,b,c"
+    );
+}

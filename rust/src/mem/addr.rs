@@ -1,0 +1,137 @@
+//! Virtual addresses and line/page arithmetic.
+//!
+//! The TILEPro64 exposes a 32-bit virtual / 36-bit physical space; the
+//! simulator uses a flat 36-bit space with 64 B lines and 64 KB pages.
+
+use crate::arch::{LINE_BYTES, PAGE_BYTES};
+
+/// Simulated virtual address.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub struct VAddr(pub u64);
+
+/// Cache-line index (addr / 64).
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub struct LineId(pub u64);
+
+/// Page index (addr / 64 KiB).
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub struct PageId(pub u64);
+
+impl VAddr {
+    #[inline]
+    pub fn line(self) -> LineId {
+        LineId(self.0 / LINE_BYTES)
+    }
+
+    #[inline]
+    pub fn page(self) -> PageId {
+        PageId(self.0 / PAGE_BYTES)
+    }
+
+    #[inline]
+    pub fn offset(self, bytes: u64) -> VAddr {
+        VAddr(self.0 + bytes)
+    }
+}
+
+impl LineId {
+    #[inline]
+    pub fn addr(self) -> VAddr {
+        VAddr(self.0 * LINE_BYTES)
+    }
+
+    #[inline]
+    pub fn page(self) -> PageId {
+        PageId(self.0 * LINE_BYTES / PAGE_BYTES)
+    }
+}
+
+impl PageId {
+    #[inline]
+    pub fn addr(self) -> VAddr {
+        VAddr(self.0 * PAGE_BYTES)
+    }
+}
+
+/// Iterate the line ids touched by `[addr, addr + bytes)`.
+pub fn lines_in_range(addr: VAddr, bytes: u64) -> impl Iterator<Item = LineId> {
+    let first = addr.0 / LINE_BYTES;
+    let last = if bytes == 0 {
+        first // empty: yields nothing via the range below
+    } else {
+        (addr.0 + bytes - 1) / LINE_BYTES + 1
+    };
+    (first..last).map(LineId)
+}
+
+/// Number of lines touched by `[addr, addr + bytes)` (O(1)).
+pub fn line_count(addr: VAddr, bytes: u64) -> u64 {
+    if bytes == 0 {
+        return 0;
+    }
+    (addr.0 + bytes - 1) / LINE_BYTES - addr.0 / LINE_BYTES + 1
+}
+
+/// Pages overlapped by `[addr, addr + bytes)`.
+pub fn pages_in_range(addr: VAddr, bytes: u64) -> impl Iterator<Item = PageId> {
+    let first = addr.0 / PAGE_BYTES;
+    let last = if bytes == 0 {
+        first
+    } else {
+        (addr.0 + bytes - 1) / PAGE_BYTES + 1
+    };
+    (first..last).map(PageId)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_and_page_of_addr() {
+        let a = VAddr(64 * 1024 + 65);
+        assert_eq!(a.line(), LineId(1025));
+        assert_eq!(a.page(), PageId(1));
+    }
+
+    #[test]
+    fn lines_in_range_aligned() {
+        let ls: Vec<_> = lines_in_range(VAddr(0), 256).collect();
+        assert_eq!(ls, vec![LineId(0), LineId(1), LineId(2), LineId(3)]);
+    }
+
+    #[test]
+    fn lines_in_range_unaligned_straddles() {
+        // [60, 70) straddles lines 0 and 1.
+        let ls: Vec<_> = lines_in_range(VAddr(60), 10).collect();
+        assert_eq!(ls, vec![LineId(0), LineId(1)]);
+    }
+
+    #[test]
+    fn lines_in_range_empty() {
+        assert_eq!(lines_in_range(VAddr(100), 0).count(), 0);
+        assert_eq!(line_count(VAddr(100), 0), 0);
+    }
+
+    #[test]
+    fn line_count_matches_iterator() {
+        for (addr, bytes) in [(0u64, 1u64), (63, 2), (64, 64), (1, 10_000), (4096, 65_536)] {
+            assert_eq!(
+                line_count(VAddr(addr), bytes),
+                lines_in_range(VAddr(addr), bytes).count() as u64,
+                "addr={addr} bytes={bytes}"
+            );
+        }
+    }
+
+    #[test]
+    fn pages_in_range_spans_boundary() {
+        let ps: Vec<_> = pages_in_range(VAddr(64 * 1024 - 1), 2).collect();
+        assert_eq!(ps, vec![PageId(0), PageId(1)]);
+    }
+
+    #[test]
+    fn single_byte_is_one_line() {
+        assert_eq!(line_count(VAddr(127), 1), 1);
+    }
+}

@@ -1,0 +1,310 @@
+//! Per-tile heap allocator over the simulated address space.
+//!
+//! Allocation is the *mechanism of the paper's technique*: a thread that
+//! `new[]`s a chunk gets pages whose homing is decided by the boot-time
+//! `HashPolicy` and the allocating tile — so copying a chunk into a fresh
+//! allocation from the worker thread is exactly what re-homes it (Algorithm
+//! 1 step 4). Freeing (step 5) recycles address space and purges stale
+//! cache state (the engine hooks `free` for that).
+
+use crate::arch::{TileId, PAGE_BYTES};
+use crate::mem::addr::VAddr;
+use crate::mem::homing::{AllocKind, HashPolicy, Homing};
+use crate::mem::page::{PageAttr, PageFault, PageTable};
+use crate::mem::striping::Placement;
+use std::collections::BTreeMap;
+
+/// One live allocation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Region {
+    pub addr: VAddr,
+    /// Requested bytes (page-rounded internally).
+    pub bytes: u64,
+    /// Tile that performed the allocation.
+    pub tile: TileId,
+    pub kind: AllocKind,
+}
+
+impl Region {
+    /// Sub-range of this region, `elems` of `esize` bytes from `start_elem`.
+    pub fn slice(&self, start_elem: u64, elems: u64, esize: u64) -> (VAddr, u64) {
+        let off = start_elem * esize;
+        let len = elems * esize;
+        debug_assert!(off + len <= self.bytes, "slice out of bounds");
+        (self.addr.offset(off), len)
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum AllocError {
+    #[error("page fault: {0}")]
+    Page(#[from] PageFault),
+    #[error("free of unknown address {0:?}")]
+    UnknownFree(VAddr),
+    #[error("zero-byte allocation")]
+    Zero,
+}
+
+/// Boot-time memory configuration (the knobs of Table 1 / Fig. 4).
+#[derive(Clone, Copy, Debug)]
+pub struct MemConfig {
+    pub hash_policy: HashPolicy,
+    pub striping: bool,
+}
+
+pub struct Allocator {
+    pub table: PageTable,
+    config: MemConfig,
+    next: u64,
+    /// Size-class free lists (rounded bytes → addresses), so the paper's
+    /// alloc/free-per-level merge pattern reuses address space instead of
+    /// growing without bound.
+    free: BTreeMap<u64, Vec<VAddr>>,
+    live: BTreeMap<VAddr, Region>,
+    /// Cumulative counters for reports.
+    pub allocs: u64,
+    pub frees: u64,
+}
+
+impl Allocator {
+    pub fn new(config: MemConfig) -> Self {
+        Allocator {
+            table: PageTable::new(),
+            config,
+            // Start above the null page.
+            next: PAGE_BYTES,
+            free: BTreeMap::new(),
+            live: BTreeMap::new(),
+            allocs: 0,
+            frees: 0,
+        }
+    }
+
+    pub fn config(&self) -> MemConfig {
+        self.config
+    }
+
+    fn rounded(bytes: u64) -> u64 {
+        bytes.div_ceil(PAGE_BYTES) * PAGE_BYTES
+    }
+
+    /// Allocate `bytes` from `tile`; homing/placement follow the boot
+    /// config (what `new[]` does in the paper's code).
+    pub fn alloc(&mut self, tile: TileId, bytes: u64, kind: AllocKind) -> Result<Region, AllocError> {
+        let homing = self.config.hash_policy.homing_for(tile, kind);
+        let placement = if self.config.striping {
+            Placement::Striped
+        } else if matches!(homing, Homing::FirstTouch) {
+            // Non-striped placement follows the page's eventual home.
+            Placement::FirstTouchNearest
+        } else {
+            // Stacks and hashed pages: DRAM placed near the allocating tile.
+            Placement::fixed_near(tile)
+        };
+        self.alloc_with(tile, bytes, kind, homing, placement)
+    }
+
+    /// Allocate with explicit homing/placement (remote homing experiments
+    /// and tests use this; the public API path goes through `alloc`).
+    pub fn alloc_with(
+        &mut self,
+        tile: TileId,
+        bytes: u64,
+        kind: AllocKind,
+        homing: Homing,
+        placement: Placement,
+    ) -> Result<Region, AllocError> {
+        if bytes == 0 {
+            return Err(AllocError::Zero);
+        }
+        let rounded = Self::rounded(bytes);
+        let addr = match self.free.get_mut(&rounded).and_then(|v| v.pop()) {
+            Some(a) => a,
+            None => {
+                let a = VAddr(self.next);
+                self.next += rounded;
+                a
+            }
+        };
+        self.table
+            .map_region(addr, rounded, PageAttr { homing, placement })?;
+        let region = Region {
+            addr,
+            bytes,
+            tile,
+            kind,
+        };
+        self.live.insert(addr, region);
+        self.allocs += 1;
+        Ok(region)
+    }
+
+    /// Free a region; returns it so the cache layer can purge its lines.
+    pub fn free(&mut self, addr: VAddr) -> Result<Region, AllocError> {
+        let region = self
+            .live
+            .remove(&addr)
+            .ok_or(AllocError::UnknownFree(addr))?;
+        let rounded = Self::rounded(region.bytes);
+        self.table.unmap_region(region.addr, rounded);
+        self.free.entry(rounded).or_default().push(addr);
+        self.frees += 1;
+        Ok(region)
+    }
+
+    pub fn live_regions(&self) -> usize {
+        self.live.len()
+    }
+
+    /// Total address space handed out (high-water mark), for reports.
+    pub fn high_water_bytes(&self) -> u64 {
+        self.next - PAGE_BYTES
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::addr::LineId;
+
+    fn alloc_default(policy: HashPolicy, striping: bool) -> Allocator {
+        Allocator::new(MemConfig {
+            hash_policy: policy,
+            striping,
+        })
+    }
+
+    #[test]
+    fn heap_alloc_hash_policy_all_but_stack() {
+        let mut a = alloc_default(HashPolicy::AllButStack, true);
+        let heap = a.alloc(TileId(3), 1024, AllocKind::Heap).unwrap();
+        let stack = a.alloc(TileId(3), 1024, AllocKind::Stack).unwrap();
+        // Heap pages hash across tiles; stack pages home on tile 3.
+        let homes: std::collections::HashSet<_> = (0..512)
+            .map(|i| {
+                a.table
+                    .home_of_line(LineId(heap.addr.line().0 + i))
+                    .unwrap()
+                    .unwrap()
+            })
+            .collect();
+        assert!(homes.len() > 16);
+        assert_eq!(
+            a.table.home_of_line(stack.addr.line()).unwrap(),
+            Some(TileId(3))
+        );
+    }
+
+    #[test]
+    fn heap_alloc_policy_none_homes_at_first_touch() {
+        let mut a = alloc_default(HashPolicy::None, true);
+        let r = a.alloc(TileId(9), 256 * 1024, AllocKind::Heap).unwrap();
+        // Unresolved until touched…
+        assert_eq!(a.table.home_of_line(r.addr.line()).unwrap(), None);
+        // …then homed on the toucher, NOT the allocator: this is the
+        // localisation mechanism (worker copies ⇒ worker-homed pages).
+        let home = a.table.resolve_home(r.addr.line(), TileId(22)).unwrap();
+        assert_eq!(home, TileId(22));
+        for i in [1u64, 100, 1000] {
+            assert_eq!(
+                a.table
+                    .resolve_home(LineId(r.addr.line().0 + i), TileId(50))
+                    .unwrap(),
+                TileId(22),
+                "same page stays on first toucher"
+            );
+        }
+    }
+
+    #[test]
+    fn regions_do_not_overlap() {
+        let mut a = alloc_default(HashPolicy::None, true);
+        let r1 = a.alloc(TileId(0), 100, AllocKind::Heap).unwrap();
+        let r2 = a.alloc(TileId(1), 100, AllocKind::Heap).unwrap();
+        let end1 = r1.addr.0 + Allocator::rounded(r1.bytes);
+        assert!(r2.addr.0 >= end1 || r1.addr.0 >= r2.addr.0 + Allocator::rounded(r2.bytes));
+    }
+
+    #[test]
+    fn free_then_realloc_reuses_address_and_rehomes() {
+        let mut a = alloc_default(HashPolicy::None, true);
+        let r1 = a.alloc(TileId(0), PAGE_BYTES, AllocKind::Heap).unwrap();
+        a.table.resolve_home(r1.addr.line(), TileId(0)).unwrap();
+        a.free(r1.addr).unwrap();
+        let r2 = a.alloc(TileId(5), PAGE_BYTES, AllocKind::Heap).unwrap();
+        assert_eq!(r1.addr, r2.addr);
+        // Fresh pages: first-touch decides again (step 4 of Algorithm 1).
+        assert_eq!(a.table.home_of_line(r2.addr.line()).unwrap(), None);
+        assert_eq!(
+            a.table.resolve_home(r2.addr.line(), TileId(5)).unwrap(),
+            TileId(5)
+        );
+    }
+
+    #[test]
+    fn double_free_errors() {
+        let mut a = alloc_default(HashPolicy::None, true);
+        let r = a.alloc(TileId(0), 64, AllocKind::Heap).unwrap();
+        a.free(r.addr).unwrap();
+        assert!(a.free(r.addr).is_err());
+    }
+
+    #[test]
+    fn zero_alloc_errors() {
+        let mut a = alloc_default(HashPolicy::None, true);
+        assert!(a.alloc(TileId(0), 0, AllocKind::Heap).is_err());
+    }
+
+    #[test]
+    fn striping_mode_reflected_in_controller() {
+        let mut s = alloc_default(HashPolicy::None, true);
+        let r = s.alloc(TileId(0), 64 * 1024, AllocKind::Heap).unwrap();
+        let c0 = s.table.controller_of_line(r.addr.line()).unwrap();
+        let c1 = s
+            .table
+            .controller_of_line(r.addr.offset(8 * 1024).line())
+            .unwrap();
+        assert_ne!(c0, c1, "striped region must alternate controllers");
+
+        let mut ns = alloc_default(HashPolicy::None, false);
+        let r = ns.alloc(TileId(63), 64 * 1024, AllocKind::Heap).unwrap();
+        // Resolve by first touch from tile 63 (bottom row → controller 2/3).
+        ns.table.resolve_home(r.addr.line(), TileId(63)).unwrap();
+        let c0 = ns.table.controller_of_line(r.addr.line()).unwrap();
+        let c1 = ns
+            .table
+            .controller_of_line(r.addr.offset(8 * 1024).line())
+            .unwrap();
+        assert_eq!(c0, c1, "non-striped region stays on one controller");
+        assert!(c0 >= 2, "placed near the touching tile");
+    }
+
+    #[test]
+    fn non_striped_hashed_heap_places_near_allocator() {
+        let mut ns = alloc_default(HashPolicy::AllButStack, false);
+        let r = ns.alloc(TileId(0), 64 * 1024, AllocKind::Heap).unwrap();
+        let c = ns.table.controller_of_line(r.addr.line()).unwrap();
+        assert!(c < 2, "tile 0 is near the top controllers");
+    }
+
+    #[test]
+    fn slice_arithmetic() {
+        let mut a = alloc_default(HashPolicy::None, true);
+        let r = a.alloc(TileId(0), 4096, AllocKind::Heap).unwrap();
+        let (addr, len) = r.slice(10, 20, 4);
+        assert_eq!(addr.0, r.addr.0 + 40);
+        assert_eq!(len, 80);
+    }
+
+    #[test]
+    fn live_region_count_tracks() {
+        let mut a = alloc_default(HashPolicy::None, true);
+        let r1 = a.alloc(TileId(0), 64, AllocKind::Heap).unwrap();
+        let _r2 = a.alloc(TileId(0), 64, AllocKind::Heap).unwrap();
+        assert_eq!(a.live_regions(), 2);
+        a.free(r1.addr).unwrap();
+        assert_eq!(a.live_regions(), 1);
+        assert_eq!(a.allocs, 2);
+        assert_eq!(a.frees, 1);
+    }
+}

@@ -1,0 +1,190 @@
+//! DDC homing: which tile serves as the coherence home ("L3") for a line.
+//!
+//! Three classes (paper §2): *local homing* (page homed on the tile that
+//! uses it), *remote homing* (homed on some other single tile), and *hash
+//! for home* (line-granularity hashing across all tiles). The Tile Linux
+//! boot option `ucache_hash` selects the default for user memory:
+//! `all-but-stack` (hash everything except stacks) or `none` (single-tile
+//! homing).
+//!
+//! Crucially, under `none` a heap page's home is decided by **first touch**
+//! (the page faults in from the toucher's tile), like NUMA first-touch
+//! placement. This is the mechanism the paper's localisation exploits: the
+//! input array initialised by `main()` is stuck on tile 0, but a chunk
+//! copied into a worker's fresh `new int[n]` is first-touched — and
+//! therefore homed — on the worker's own tile (Algorithm 1 step 4).
+
+use crate::arch::{TileId, NUM_TILES};
+use crate::mem::addr::LineId;
+use crate::util::rng::mix64;
+
+/// Homing of one page.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Homing {
+    /// Entire page homed on one tile (local homing when it's the using
+    /// tile, remote homing otherwise — same mechanism).
+    Single(TileId),
+    /// Hashed across all tiles at cache-line granularity.
+    HashForHome,
+    /// Hashed across tiles at *page* granularity (not a TILEPro64 mode;
+    /// used by the granularity ablation to quantify the paper's "hash for
+    /// home at line granularity is too fine-grained" argument).
+    PageHash,
+    /// Not yet resolved: the first access will home the page on the
+    /// accessing tile (`ucache_hash=none` fault-in behaviour).
+    FirstTouch,
+}
+
+impl Homing {
+    /// Effective home tile of a line, if already determined. The hash must
+    /// be a pure function of the line address (hardware hashes the PA).
+    #[inline]
+    pub fn home_of(self, line: LineId) -> Option<TileId> {
+        match self {
+            Homing::Single(t) => Some(t),
+            Homing::HashForHome => {
+                Some(TileId((mix64(line.0) % NUM_TILES as u64) as u32))
+            }
+            Homing::PageHash => {
+                Some(TileId((mix64(line.page().0) % NUM_TILES as u64) as u32))
+            }
+            Homing::FirstTouch => None,
+        }
+    }
+
+    /// Resolve first-touch homing against the touching tile.
+    #[inline]
+    pub fn resolved(self, toucher: TileId) -> Homing {
+        match self {
+            Homing::FirstTouch => Homing::Single(toucher),
+            h => h,
+        }
+    }
+}
+
+/// The `ucache_hash` boot option.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HashPolicy {
+    /// Default: hash-for-home for all user memory except stacks.
+    AllButStack,
+    /// `ucache_hash=none`: single-tile homing, assigned at first touch.
+    None,
+}
+
+/// What kind of allocation is being homed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AllocKind {
+    Heap,
+    Stack,
+}
+
+impl HashPolicy {
+    /// Homing the hypervisor assigns to a fresh page allocated from `tile`
+    /// (paper §5: stacks are always homed on the task's tile; heap pages
+    /// hash under `all-but-stack` or first-touch under `none`).
+    #[inline]
+    pub fn homing_for(self, tile: TileId, kind: AllocKind) -> Homing {
+        match (self, kind) {
+            (HashPolicy::AllButStack, AllocKind::Heap) => Homing::HashForHome,
+            (HashPolicy::AllButStack, AllocKind::Stack) => Homing::Single(tile),
+            (HashPolicy::None, AllocKind::Heap) => Homing::FirstTouch,
+            (HashPolicy::None, AllocKind::Stack) => Homing::Single(tile),
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            HashPolicy::AllButStack => "all-but-stack",
+            HashPolicy::None => "none",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_homing_is_constant() {
+        let h = Homing::Single(TileId(5));
+        for l in 0..100 {
+            assert_eq!(h.home_of(LineId(l)), Some(TileId(5)));
+        }
+    }
+
+    #[test]
+    fn hash_for_home_is_deterministic() {
+        let h = Homing::HashForHome;
+        assert_eq!(h.home_of(LineId(123)), h.home_of(LineId(123)));
+    }
+
+    #[test]
+    fn hash_for_home_spreads_lines() {
+        let h = Homing::HashForHome;
+        let mut seen = std::collections::HashSet::new();
+        for l in 0..1024 {
+            seen.insert(h.home_of(LineId(l)).unwrap());
+        }
+        // A 1024-line region should touch nearly every tile.
+        assert!(seen.len() > 56, "only {} tiles used", seen.len());
+    }
+
+    #[test]
+    fn hash_for_home_balances_load() {
+        let h = Homing::HashForHome;
+        let mut counts = [0u32; 64];
+        for l in 0..64_000 {
+            counts[h.home_of(LineId(l)).unwrap().index()] += 1;
+        }
+        let (min, max) = (
+            *counts.iter().min().unwrap(),
+            *counts.iter().max().unwrap(),
+        );
+        assert!(max < min * 2, "imbalanced: min={min} max={max}");
+    }
+
+    #[test]
+    fn page_hash_constant_within_page_varies_across() {
+        let h = Homing::PageHash;
+        let lines_per_page = (crate::arch::PAGE_BYTES / crate::arch::LINE_BYTES) as u64;
+        let first = h.home_of(LineId(0)).unwrap();
+        for l in 0..lines_per_page {
+            assert_eq!(h.home_of(LineId(l)).unwrap(), first);
+        }
+        let homes: std::collections::HashSet<_> = (0..64)
+            .map(|p| h.home_of(LineId(p * lines_per_page)).unwrap())
+            .collect();
+        assert!(homes.len() > 32, "pages should spread: {}", homes.len());
+    }
+
+    #[test]
+    fn first_touch_unresolved_then_resolves() {
+        let h = Homing::FirstTouch;
+        assert_eq!(h.home_of(LineId(0)), None);
+        let r = h.resolved(TileId(9));
+        assert_eq!(r, Homing::Single(TileId(9)));
+        assert_eq!(r.home_of(LineId(0)), Some(TileId(9)));
+        // Resolution is sticky: a later toucher doesn't re-home.
+        assert_eq!(r.resolved(TileId(1)), Homing::Single(TileId(9)));
+    }
+
+    #[test]
+    fn policy_all_but_stack() {
+        let p = HashPolicy::AllButStack;
+        assert_eq!(p.homing_for(TileId(3), AllocKind::Heap), Homing::HashForHome);
+        assert_eq!(
+            p.homing_for(TileId(3), AllocKind::Stack),
+            Homing::Single(TileId(3))
+        );
+    }
+
+    #[test]
+    fn policy_none_heap_is_first_touch() {
+        let p = HashPolicy::None;
+        assert_eq!(p.homing_for(TileId(7), AllocKind::Heap), Homing::FirstTouch);
+        assert_eq!(
+            p.homing_for(TileId(7), AllocKind::Stack),
+            Homing::Single(TileId(7))
+        );
+    }
+}

@@ -1,0 +1,15 @@
+//! Simulated memory system: addressing, DDC homing, page table, per-tile
+//! allocator, and controller striping — the substrate the paper's
+//! programming technique manipulates.
+
+pub mod addr;
+pub mod alloc;
+pub mod homing;
+pub mod page;
+pub mod striping;
+
+pub use addr::{line_count, lines_in_range, pages_in_range, LineId, PageId, VAddr};
+pub use alloc::{AllocError, Allocator, MemConfig, Region};
+pub use homing::{AllocKind, HashPolicy, Homing};
+pub use page::{PageAttr, PageFault, PageTable};
+pub use striping::{Placement, STRIPE_BYTES};

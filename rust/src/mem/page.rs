@@ -1,0 +1,246 @@
+//! Page table: per-page homing and controller placement metadata, with
+//! first-touch resolution (the fault-in path of `ucache_hash=none`).
+
+use crate::arch::{nearest_controller, TileId};
+use crate::mem::addr::{LineId, PageId, VAddr};
+use crate::mem::homing::Homing;
+use crate::mem::striping::Placement;
+
+/// Metadata the hypervisor attaches to a mapped page.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PageAttr {
+    pub homing: Homing,
+    pub placement: Placement,
+}
+
+/// Page table over the simulated address space. The allocator hands out
+/// addresses from a compact bump region, so a dense vector indexed by page
+/// id beats a tree by an order of magnitude on the hot resolve path (the
+/// engine touches it for every simulated cache line).
+#[derive(Default, Debug)]
+pub struct PageTable {
+    pages: Vec<Option<PageAttr>>,
+    mapped: usize,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum PageFault {
+    #[error("unmapped address {0:?}")]
+    Unmapped(VAddr),
+    #[error("double map of page {0:?}")]
+    DoubleMap(PageId),
+}
+
+impl PageTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    fn slot(&self, page: PageId) -> Option<&Option<PageAttr>> {
+        self.pages.get(page.0 as usize)
+    }
+
+    /// Map every page overlapping `[addr, addr+bytes)` with `attr`.
+    pub fn map_region(&mut self, addr: VAddr, bytes: u64, attr: PageAttr) -> Result<(), PageFault> {
+        for p in crate::mem::addr::pages_in_range(addr, bytes) {
+            let ix = p.0 as usize;
+            if ix >= self.pages.len() {
+                self.pages.resize(ix + 1, None);
+            }
+            if self.pages[ix].is_some() {
+                return Err(PageFault::DoubleMap(p));
+            }
+            self.pages[ix] = Some(attr);
+            self.mapped += 1;
+        }
+        Ok(())
+    }
+
+    pub fn unmap_region(&mut self, addr: VAddr, bytes: u64) {
+        for p in crate::mem::addr::pages_in_range(addr, bytes) {
+            if let Some(slot) = self.pages.get_mut(p.0 as usize) {
+                if slot.take().is_some() {
+                    self.mapped -= 1;
+                }
+            }
+        }
+    }
+
+    pub fn attr_of(&self, page: PageId) -> Option<PageAttr> {
+        self.slot(page).copied().flatten()
+    }
+
+    /// Home tile of a line, resolving first-touch homing (and first-touch
+    /// DRAM placement) against `toucher` — the fault-in path. This is the
+    /// engine's hottest lookup: one call per simulated cache line.
+    #[inline]
+    pub fn resolve_home(&mut self, line: LineId, toucher: TileId) -> Result<TileId, PageFault> {
+        let attr = self
+            .pages
+            .get_mut(line.page().0 as usize)
+            .and_then(|s| s.as_mut())
+            .ok_or(PageFault::Unmapped(line.addr()))?;
+        if matches!(attr.homing, Homing::FirstTouch) {
+            attr.homing = attr.homing.resolved(toucher);
+        }
+        if matches!(attr.placement, Placement::FirstTouchNearest) {
+            attr.placement = Placement::Fixed(nearest_controller(toucher).id);
+        }
+        Ok(attr
+            .homing
+            .home_of(line)
+            .expect("homing resolved above"))
+    }
+
+    /// Home of a line if already determined (read-only; tests/reports).
+    pub fn home_of_line(&self, line: LineId) -> Result<Option<TileId>, PageFault> {
+        let attr = self
+            .attr_of(line.page())
+            .ok_or(PageFault::Unmapped(line.addr()))?;
+        Ok(attr.homing.home_of(line))
+    }
+
+    /// Pre-resolve every page of a region as touched by `tile` (models
+    /// `main()` initialising an array before the parallel section).
+    pub fn touch_region(&mut self, addr: VAddr, bytes: u64, tile: TileId) {
+        for p in crate::mem::addr::pages_in_range(addr, bytes) {
+            if let Some(attr) = self.pages.get_mut(p.0 as usize).and_then(|s| s.as_mut()) {
+                if matches!(attr.homing, Homing::FirstTouch) {
+                    attr.homing = attr.homing.resolved(tile);
+                }
+                if matches!(attr.placement, Placement::FirstTouchNearest) {
+                    attr.placement = Placement::Fixed(nearest_controller(tile).id);
+                }
+            }
+        }
+    }
+
+    /// DRAM controller behind a line (must be resolved or striped/fixed).
+    #[inline]
+    pub fn controller_of_line(&self, line: LineId) -> Result<u32, PageFault> {
+        let attr = self
+            .attr_of(line.page())
+            .ok_or(PageFault::Unmapped(line.addr()))?;
+        Ok(attr.placement.controller_of(line.addr()))
+    }
+
+    pub fn mapped_pages(&self) -> usize {
+        self.mapped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::PAGE_BYTES;
+    use crate::mem::homing::Homing;
+
+    fn attr(t: u32) -> PageAttr {
+        PageAttr {
+            homing: Homing::Single(TileId(t)),
+            placement: Placement::Fixed(0),
+        }
+    }
+
+    fn ft_attr() -> PageAttr {
+        PageAttr {
+            homing: Homing::FirstTouch,
+            placement: Placement::FirstTouchNearest,
+        }
+    }
+
+    #[test]
+    fn map_and_lookup() {
+        let mut pt = PageTable::new();
+        pt.map_region(VAddr(0), 2 * PAGE_BYTES, attr(4)).unwrap();
+        assert_eq!(pt.home_of_line(LineId(0)).unwrap(), Some(TileId(4)));
+        assert_eq!(
+            pt.home_of_line(VAddr(2 * PAGE_BYTES - 1).line()).unwrap(),
+            Some(TileId(4))
+        );
+        assert!(pt.home_of_line(VAddr(2 * PAGE_BYTES).line()).is_err());
+    }
+
+    #[test]
+    fn double_map_rejected() {
+        let mut pt = PageTable::new();
+        pt.map_region(VAddr(0), PAGE_BYTES, attr(1)).unwrap();
+        assert!(pt.map_region(VAddr(0), 1, attr(2)).is_err());
+    }
+
+    #[test]
+    fn unmap_releases() {
+        let mut pt = PageTable::new();
+        pt.map_region(VAddr(0), PAGE_BYTES, attr(1)).unwrap();
+        pt.unmap_region(VAddr(0), PAGE_BYTES);
+        assert_eq!(pt.mapped_pages(), 0);
+        pt.map_region(VAddr(0), PAGE_BYTES, attr(2)).unwrap();
+        assert_eq!(pt.home_of_line(LineId(0)).unwrap(), Some(TileId(2)));
+    }
+
+    #[test]
+    fn first_touch_resolves_to_toucher() {
+        let mut pt = PageTable::new();
+        pt.map_region(VAddr(0), PAGE_BYTES, ft_attr()).unwrap();
+        assert_eq!(pt.home_of_line(LineId(0)).unwrap(), None);
+        let home = pt.resolve_home(LineId(0), TileId(13)).unwrap();
+        assert_eq!(home, TileId(13));
+        // Sticky: a different tile touching later does not re-home.
+        let home = pt.resolve_home(LineId(1), TileId(50)).unwrap();
+        assert_eq!(home, TileId(13), "page homing is per-page and sticky");
+        // Placement resolved to tile 13's nearest controller.
+        assert!(pt.controller_of_line(LineId(0)).is_ok());
+    }
+
+    #[test]
+    fn touch_region_pre_resolves() {
+        let mut pt = PageTable::new();
+        pt.map_region(VAddr(0), 2 * PAGE_BYTES, ft_attr()).unwrap();
+        pt.touch_region(VAddr(0), 2 * PAGE_BYTES, TileId(0));
+        assert_eq!(pt.home_of_line(LineId(0)).unwrap(), Some(TileId(0)));
+        let far_line = VAddr(PAGE_BYTES).line();
+        assert_eq!(pt.home_of_line(far_line).unwrap(), Some(TileId(0)));
+    }
+
+    #[test]
+    fn different_pages_home_independently() {
+        let mut pt = PageTable::new();
+        pt.map_region(VAddr(0), 2 * PAGE_BYTES, ft_attr()).unwrap();
+        pt.resolve_home(LineId(0), TileId(3)).unwrap();
+        let second_page_line = VAddr(PAGE_BYTES).line();
+        let home = pt.resolve_home(second_page_line, TileId(7)).unwrap();
+        assert_eq!(home, TileId(7));
+        assert_eq!(pt.home_of_line(LineId(0)).unwrap(), Some(TileId(3)));
+    }
+
+    #[test]
+    fn hash_for_home_line_granularity() {
+        let mut pt = PageTable::new();
+        pt.map_region(
+            VAddr(0),
+            PAGE_BYTES,
+            PageAttr {
+                homing: Homing::HashForHome,
+                placement: Placement::Striped,
+            },
+        )
+        .unwrap();
+        let homes: std::collections::HashSet<_> = (0..1024)
+            .map(|l| pt.home_of_line(LineId(l)).unwrap().unwrap())
+            .collect();
+        assert!(homes.len() > 32, "hash-for-home must spread within a page");
+    }
+
+    #[test]
+    fn unmapped_controller_faults() {
+        let pt = PageTable::new();
+        assert!(pt.controller_of_line(LineId(99)).is_err());
+    }
+
+    #[test]
+    fn resolve_on_unmapped_faults() {
+        let mut pt = PageTable::new();
+        assert!(pt.resolve_home(LineId(5), TileId(0)).is_err());
+    }
+}

@@ -1,0 +1,114 @@
+//! Memory striping across the four DDR controllers.
+//!
+//! Paper §5.3: pages are either allocated behind one specific controller
+//! (non-striping: picked by proximity to the page's tile, i.e. first
+//! toucher) or striped across all controllers in 8 KB chunks (the default;
+//! "Linux boots believing it has a single controller four times larger").
+
+use crate::arch::{nearest_controller, TileId, NUM_CONTROLLERS};
+use crate::mem::addr::VAddr;
+
+/// Striping chunk size (8 KB per the TILEPro64 manual).
+pub const STRIPE_BYTES: u64 = 8 * 1024;
+
+/// Controller placement of one allocation region.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Placement {
+    /// Whole region behind one controller.
+    Fixed(u32),
+    /// Round-robin 8 KB chunks over all controllers.
+    Striped,
+    /// Non-striped but not yet placed: resolved to `Fixed(nearest)` when
+    /// the page is first touched (see `PageTable::resolve_home`).
+    FirstTouchNearest,
+}
+
+impl Placement {
+    /// Placement for a fresh region in the given boot mode. Non-striped
+    /// placement is deferred to first touch; callers that already know the
+    /// owning tile (stacks, pre-touched arrays) resolve immediately via
+    /// [`Placement::fixed_near`].
+    pub fn for_alloc(striping_enabled: bool) -> Placement {
+        if striping_enabled {
+            Placement::Striped
+        } else {
+            Placement::FirstTouchNearest
+        }
+    }
+
+    pub fn fixed_near(tile: TileId) -> Placement {
+        Placement::Fixed(nearest_controller(tile).id)
+    }
+
+    /// Which controller serves the DRAM behind `addr`. Unresolved
+    /// placement defaults to controller 0 (only reachable if a region is
+    /// queried without ever being accessed).
+    #[inline]
+    pub fn controller_of(self, addr: VAddr) -> u32 {
+        match self {
+            Placement::Fixed(c) => c,
+            Placement::Striped => ((addr.0 / STRIPE_BYTES) % NUM_CONTROLLERS as u64) as u32,
+            Placement::FirstTouchNearest => 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Coord;
+
+    #[test]
+    fn striped_round_robins_8k_chunks() {
+        let p = Placement::Striped;
+        assert_eq!(p.controller_of(VAddr(0)), 0);
+        assert_eq!(p.controller_of(VAddr(8 * 1024)), 1);
+        assert_eq!(p.controller_of(VAddr(16 * 1024)), 2);
+        assert_eq!(p.controller_of(VAddr(24 * 1024)), 3);
+        assert_eq!(p.controller_of(VAddr(32 * 1024)), 0);
+    }
+
+    #[test]
+    fn striped_constant_within_chunk() {
+        let p = Placement::Striped;
+        assert_eq!(p.controller_of(VAddr(1)), p.controller_of(VAddr(8 * 1024 - 1)));
+    }
+
+    #[test]
+    fn fixed_ignores_address() {
+        let p = Placement::Fixed(2);
+        for a in [0u64, 9999, 1 << 30] {
+            assert_eq!(p.controller_of(VAddr(a)), 2);
+        }
+    }
+
+    #[test]
+    fn fixed_near_upper_rows_use_top_controllers() {
+        let top = TileId::from_coord(Coord { x: 0, y: 0 });
+        let bottom = TileId::from_coord(Coord { x: 7, y: 7 });
+        match Placement::fixed_near(top) {
+            Placement::Fixed(c) => assert!(c < 2),
+            _ => panic!("expected fixed"),
+        }
+        match Placement::fixed_near(bottom) {
+            Placement::Fixed(c) => assert!(c >= 2),
+            _ => panic!("expected fixed"),
+        }
+    }
+
+    #[test]
+    fn for_alloc_modes() {
+        assert_eq!(Placement::for_alloc(true), Placement::Striped);
+        assert_eq!(Placement::for_alloc(false), Placement::FirstTouchNearest);
+    }
+
+    #[test]
+    fn striped_balances_over_large_region() {
+        let p = Placement::Striped;
+        let mut counts = [0u32; 4];
+        for chunk in 0..4096u64 {
+            counts[p.controller_of(VAddr(chunk * STRIPE_BYTES)) as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 1024), "{counts:?}");
+    }
+}

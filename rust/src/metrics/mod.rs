@@ -1,0 +1,101 @@
+//! Reporting helpers: the per-tile home-traffic heatmap that makes the
+//! paper's hot-spot story visible (`repro heatmap`), plus small summary
+//! statistics used by the CLI and examples.
+
+use crate::arch::{GRID_H, GRID_W};
+use crate::sim::RunStats;
+
+/// Render the 8×8 grid of home-port request counts as an ASCII heatmap.
+/// Intensity characters: ` .:-=+*#%@` scaled to the max tile.
+pub fn home_heatmap(stats: &RunStats) -> String {
+    let counts = &stats.tile_home_requests;
+    let max = counts.iter().copied().max().unwrap_or(0);
+    let ramp: &[u8] = b" .:-=+*#%@";
+    let mut out = String::new();
+    out.push_str("home-port requests per tile (rows = mesh y):\n");
+    for y in 0..GRID_H {
+        out.push_str("  ");
+        for x in 0..GRID_W {
+            let n = counts
+                .get((y * GRID_W + x) as usize)
+                .copied()
+                .unwrap_or(0);
+            let ix = if max == 0 {
+                0
+            } else {
+                ((n as f64 / max as f64) * (ramp.len() - 1) as f64).round() as usize
+            };
+            out.push(ramp[ix] as char);
+            out.push(ramp[ix] as char); // double-width for aspect ratio
+        }
+        out.push('\n');
+    }
+    let total: u64 = counts.iter().sum();
+    out.push_str(&format!(
+        "  total {total} requests, hottest tile {max} ({:.1}% of traffic)\n",
+        if total == 0 { 0.0 } else { 100.0 * max as f64 / total as f64 }
+    ));
+    out
+}
+
+/// Gini-style concentration of home traffic in [0, 1]: 0 = perfectly
+/// spread (hash-for-home's goal), →1 = single hot tile (the disaster).
+pub fn home_concentration(stats: &RunStats) -> f64 {
+    let counts = &stats.tile_home_requests;
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let max = counts.iter().copied().max().unwrap_or(0);
+    let n = counts.len() as f64;
+    // Normalised max-share: (max/total - 1/n) / (1 - 1/n).
+    (max as f64 / total as f64 - 1.0 / n) / (1.0 - 1.0 / n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats_with(counts: Vec<u64>) -> RunStats {
+        RunStats {
+            tile_home_requests: counts,
+            ..RunStats::default()
+        }
+    }
+
+    #[test]
+    fn heatmap_renders_8_rows() {
+        let s = stats_with(vec![5; 64]);
+        let map = home_heatmap(&s);
+        assert_eq!(map.lines().count(), 10); // header + 8 rows + footer
+    }
+
+    #[test]
+    fn heatmap_handles_empty() {
+        let s = stats_with(vec![0; 64]);
+        let map = home_heatmap(&s);
+        assert!(map.contains("total 0 requests"));
+    }
+
+    #[test]
+    fn concentration_uniform_is_zero() {
+        let s = stats_with(vec![10; 64]);
+        assert!(home_concentration(&s).abs() < 1e-9);
+    }
+
+    #[test]
+    fn concentration_single_hot_tile_is_one() {
+        let mut counts = vec![0u64; 64];
+        counts[0] = 1000;
+        let s = stats_with(counts);
+        assert!((home_concentration(&s) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn concentration_orders_hot_vs_spread() {
+        let mut hot = vec![1u64; 64];
+        hot[0] = 1000;
+        let spread = vec![16u64; 64];
+        assert!(home_concentration(&stats_with(hot)) > home_concentration(&stats_with(spread)));
+    }
+}

@@ -1,0 +1,7 @@
+//! Mesh interconnect: XY routing and shared-resource queueing contention.
+
+pub mod contention;
+pub mod routing;
+
+pub use contention::{ContentionConfig, ContentionModel};
+pub use routing::xy_path;

@@ -1,0 +1,71 @@
+//! XY dimension-order routing over the 8×8 mesh.
+//!
+//! Latency uses the hop count (`arch::hops`); the explicit path is used by
+//! tests and by the link-occupancy accounting in the contention model.
+
+use crate::arch::{Coord, TileId};
+
+/// Tiles traversed from `src` to `dst` under XY routing (X first, then Y),
+/// inclusive of both endpoints.
+pub fn xy_path(src: TileId, dst: TileId) -> Vec<TileId> {
+    let a = src.coord();
+    let b = dst.coord();
+    let mut path = Vec::with_capacity((a.x.abs_diff(b.x) + a.y.abs_diff(b.y) + 1) as usize);
+    let mut x = a.x;
+    let y = a.y;
+    path.push(src);
+    while x != b.x {
+        if x < b.x {
+            x += 1;
+        } else {
+            x -= 1;
+        }
+        path.push(TileId::from_coord(Coord { x, y }));
+    }
+    let mut y = a.y;
+    while y != b.y {
+        if y < b.y {
+            y += 1;
+        } else {
+            y -= 1;
+        }
+        path.push(TileId::from_coord(Coord { x: b.x, y }));
+    }
+    path
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::hops;
+
+    #[test]
+    fn path_length_is_hops_plus_one() {
+        for (a, b) in [(0u32, 63u32), (5, 5), (7, 56), (10, 17)] {
+            let p = xy_path(TileId(a), TileId(b));
+            assert_eq!(p.len() as u32, hops(TileId(a), TileId(b)) + 1);
+            assert_eq!(p[0], TileId(a));
+            assert_eq!(*p.last().unwrap(), TileId(b));
+        }
+    }
+
+    #[test]
+    fn path_moves_x_first() {
+        let p = xy_path(TileId(0), TileId(63)); // (0,0) -> (7,7)
+        // After the first 7 steps we must be at (7,0).
+        assert_eq!(p[7].coord(), Coord { x: 7, y: 0 });
+    }
+
+    #[test]
+    fn adjacent_steps_are_neighbours() {
+        let p = xy_path(TileId(3), TileId(60));
+        for w in p.windows(2) {
+            assert_eq!(hops(w[0], w[1]), 1);
+        }
+    }
+
+    #[test]
+    fn self_path_is_singleton() {
+        assert_eq!(xy_path(TileId(9), TileId(9)), vec![TileId(9)]);
+    }
+}

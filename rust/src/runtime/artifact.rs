@@ -1,0 +1,222 @@
+//! AOT artifact loading: `artifacts/manifest.json` + `*.hlo.txt` → compiled
+//! PJRT executables.
+//!
+//! Python runs once at build time (`make artifacts`); this module is the
+//! only bridge, and it loads HLO *text* — see python/compile/aot.py for why
+//! text (xla_extension 0.5.1 rejects jax ≥0.5's 64-bit-id protos).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{self, Json};
+
+#[derive(Debug, thiserror::Error)]
+pub enum ArtifactError {
+    #[error("io error reading {path}: {source}")]
+    Io {
+        path: PathBuf,
+        source: std::io::Error,
+    },
+    #[error("manifest parse error: {0}")]
+    Manifest(#[from] json::ParseError),
+    #[error("manifest missing field {0}")]
+    MissingField(&'static str),
+    #[error("unknown artifact '{0}' (have: {1})")]
+    Unknown(String, String),
+    #[error("artifact {name}: size mismatch (manifest {expected} B, file {actual} B)")]
+    SizeMismatch {
+        name: String,
+        expected: usize,
+        actual: usize,
+    },
+    #[error("xla error: {0}")]
+    Xla(#[from] xla::Error),
+}
+
+/// Input spec recorded by aot.py.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct InputSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl InputSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Manifest entry for one artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<InputSpec>,
+    pub bytes: usize,
+}
+
+/// Parsed manifest.
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest, ArtifactError> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|source| ArtifactError::Io {
+            path: path.clone(),
+            source,
+        })?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest, ArtifactError> {
+        let v = json::parse(text)?;
+        let arts = v
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or(ArtifactError::MissingField("artifacts"))?;
+        let mut artifacts = Vec::new();
+        for a in arts {
+            let name = a
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or(ArtifactError::MissingField("name"))?
+                .to_string();
+            let file = a
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or(ArtifactError::MissingField("file"))?
+                .to_string();
+            let bytes = a
+                .get("bytes")
+                .and_then(Json::as_usize)
+                .ok_or(ArtifactError::MissingField("bytes"))?;
+            let mut inputs = Vec::new();
+            for i in a
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or(ArtifactError::MissingField("inputs"))?
+            {
+                let shape = i
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .ok_or(ArtifactError::MissingField("shape"))?
+                    .iter()
+                    .map(|j| j.as_usize().unwrap_or(0))
+                    .collect();
+                let dtype = i
+                    .get("dtype")
+                    .and_then(Json::as_str)
+                    .ok_or(ArtifactError::MissingField("dtype"))?
+                    .to_string();
+                inputs.push(InputSpec { shape, dtype });
+            }
+            artifacts.push(ArtifactMeta {
+                name,
+                file,
+                inputs,
+                bytes,
+            });
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+}
+
+/// All compiled executables, keyed by artifact name. One PJRT client is
+/// shared; each artifact compiles once at startup and is reused for every
+/// request (python never runs again).
+pub struct ArtifactSet {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl ArtifactSet {
+    /// Load and compile every artifact in `dir`.
+    pub fn load(dir: &Path) -> Result<ArtifactSet, ArtifactError> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut executables = HashMap::new();
+        for meta in &manifest.artifacts {
+            let path = dir.join(&meta.file);
+            let text = std::fs::read_to_string(&path).map_err(|source| ArtifactError::Io {
+                path: path.clone(),
+                source,
+            })?;
+            if text.len() != meta.bytes {
+                return Err(ArtifactError::SizeMismatch {
+                    name: meta.name.clone(),
+                    expected: meta.bytes,
+                    actual: text.len(),
+                });
+            }
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().expect("utf-8 artifact path"),
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            executables.insert(meta.name.clone(), exe);
+        }
+        Ok(ArtifactSet {
+            client,
+            manifest,
+            executables,
+        })
+    }
+
+    pub fn executable(&self, name: &str) -> Result<&xla::PjRtLoadedExecutable, ArtifactError> {
+        self.executables.get(name).ok_or_else(|| {
+            ArtifactError::Unknown(
+                name.to_string(),
+                self.executables
+                    .keys()
+                    .cloned()
+                    .collect::<Vec<_>>()
+                    .join(", "),
+            )
+        })
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.manifest.artifacts.iter().map(|a| a.name.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{"artifacts":[
+        {"name":"full_sort","file":"full_sort.hlo.txt","bytes":7,
+         "inputs":[{"shape":[64,1024],"dtype":"int32"}],"sha256":"x"},
+        {"name":"latency_model","file":"latency_model.hlo.txt","bytes":3,
+         "inputs":[{"shape":[1024,2],"dtype":"int32"},{"shape":[1024],"dtype":"float32"}],
+         "sha256":"y"}]}"#;
+
+    #[test]
+    fn parse_manifest() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let fs = m.get("full_sort").unwrap();
+        assert_eq!(fs.inputs[0].shape, vec![64, 1024]);
+        assert_eq!(fs.inputs[0].elems(), 65536);
+        assert_eq!(fs.inputs[0].dtype, "int32");
+        assert!(m.get("nope").is_none());
+    }
+
+    #[test]
+    fn parse_rejects_missing_fields() {
+        assert!(Manifest::parse(r#"{"artifacts":[{"name":"a"}]}"#).is_err());
+        assert!(Manifest::parse(r#"{}"#).is_err());
+    }
+
+    #[test]
+    fn load_missing_dir_errors() {
+        assert!(Manifest::load(Path::new("/nonexistent-dir-xyz")).is_err());
+    }
+}

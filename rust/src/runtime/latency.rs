@@ -1,0 +1,116 @@
+//! PJRT wrapper for the AOT'd analytical NUCA latency model (L2).
+//!
+//! The rust event simulator and the JAX closed form share constants by
+//! construction; `integration_runtime.rs` executes this wrapper against
+//! `arch::LatencyParams::access_cycles` on random batches so any drift
+//! between the layers fails tests.
+
+use crate::arch::{HitLevel, TileId};
+use crate::runtime::artifact::{ArtifactError, ArtifactSet};
+
+/// Batch size exported by python/compile/model.py (LATENCY_BATCH).
+pub const LATENCY_BATCH: usize = 1024;
+
+/// Hit-level encoding shared with the python model.
+pub const LEVEL_L1: i32 = 0;
+pub const LEVEL_L2: i32 = 1;
+pub const LEVEL_HOME: i32 = 2;
+pub const LEVEL_DDR: i32 = 3;
+
+/// One access descriptor for the batch model.
+#[derive(Clone, Copy, Debug)]
+pub struct AccessDesc {
+    pub req: TileId,
+    /// Home tile (level 2) or controller attach tile (level 3); ignored
+    /// for levels 0/1.
+    pub dst: TileId,
+    pub level: i32,
+    pub contention: f32,
+}
+
+impl AccessDesc {
+    /// Build from the simulator's HitLevel (zero contention term).
+    pub fn from_hit(req: TileId, level: HitLevel) -> AccessDesc {
+        let (dst, lvl) = match level {
+            HitLevel::L1 => (req, LEVEL_L1),
+            HitLevel::L2 => (req, LEVEL_L2),
+            HitLevel::Home { home } => (home, LEVEL_HOME),
+            HitLevel::Ddr { ctrl_attach } => (ctrl_attach, LEVEL_DDR),
+        };
+        AccessDesc {
+            req,
+            dst,
+            level: lvl,
+            contention: 0.0,
+        }
+    }
+}
+
+pub struct LatencyModel<'a> {
+    set: &'a ArtifactSet,
+}
+
+impl<'a> LatencyModel<'a> {
+    pub fn new(set: &'a ArtifactSet) -> Result<Self, ArtifactError> {
+        set.executable("latency_model")?;
+        Ok(LatencyModel { set })
+    }
+
+    /// Evaluate a batch (padded/truncated to LATENCY_BATCH internally).
+    /// Returns (per-access cycles for the first `n`, batch total of the
+    /// padded batch — pads are L1 accesses).
+    pub fn batch(&self, accesses: &[AccessDesc]) -> Result<(Vec<f32>, f32), ArtifactError> {
+        let n = accesses.len().min(LATENCY_BATCH);
+        let mut req = Vec::with_capacity(LATENCY_BATCH * 2);
+        let mut dst = Vec::with_capacity(LATENCY_BATCH * 2);
+        let mut level = Vec::with_capacity(LATENCY_BATCH);
+        let mut cont = Vec::with_capacity(LATENCY_BATCH);
+        for i in 0..LATENCY_BATCH {
+            let a = accesses.get(i).copied().unwrap_or(AccessDesc {
+                req: TileId(0),
+                dst: TileId(0),
+                level: LEVEL_L1,
+                contention: 0.0,
+            });
+            let rc = a.req.coord();
+            let dc = a.dst.coord();
+            req.push(rc.x as i32);
+            req.push(rc.y as i32);
+            dst.push(dc.x as i32);
+            dst.push(dc.y as i32);
+            level.push(a.level);
+            cont.push(a.contention);
+        }
+        let exe = self.set.executable("latency_model")?;
+        let req_l = xla::Literal::vec1(&req).reshape(&[LATENCY_BATCH as i64, 2])?;
+        let dst_l = xla::Literal::vec1(&dst).reshape(&[LATENCY_BATCH as i64, 2])?;
+        let lvl_l = xla::Literal::vec1(&level);
+        let cont_l = xla::Literal::vec1(&cont);
+        let result =
+            exe.execute::<xla::Literal>(&[req_l, dst_l, lvl_l, cont_l])?[0][0].to_literal_sync()?;
+        let (per_l, total_l) = result.to_tuple2()?;
+        let per: Vec<f32> = per_l.to_vec::<f32>()?;
+        let total = total_l.get_first_element::<f32>()?;
+        Ok((per[..n].to_vec(), total))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn access_desc_from_hit_levels() {
+        let a = AccessDesc::from_hit(TileId(3), HitLevel::L1);
+        assert_eq!(a.level, LEVEL_L1);
+        let a = AccessDesc::from_hit(TileId(3), HitLevel::Home { home: TileId(60) });
+        assert_eq!(a.level, LEVEL_HOME);
+        assert_eq!(a.dst, TileId(60));
+        let a = AccessDesc::from_hit(
+            TileId(3),
+            HitLevel::Ddr { ctrl_attach: TileId(2) },
+        );
+        assert_eq!(a.level, LEVEL_DDR);
+        assert_eq!(a.dst, TileId(2));
+    }
+}

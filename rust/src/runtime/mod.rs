@@ -1,0 +1,31 @@
+//! PJRT runtime: loads the AOT artifacts (HLO text) once and executes them
+//! on the request path. Python is build-time only.
+
+pub mod artifact;
+pub mod latency;
+pub mod sorter;
+
+pub use artifact::{ArtifactError, ArtifactSet, Manifest};
+pub use latency::{AccessDesc, LatencyModel, LATENCY_BATCH};
+pub use sorter::{ChunkedSorter, SortMetrics, BATCH, CHUNK, NUM_CHUNKS};
+
+use std::path::PathBuf;
+
+/// Locate the artifacts directory: $TILESIM_ARTIFACTS, else ./artifacts
+/// relative to the workspace root.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("TILESIM_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    // Look upward from CWD for an `artifacts/manifest.json`.
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !cur.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}

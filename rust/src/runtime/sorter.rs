@@ -1,0 +1,119 @@
+//! The request-path sorter: executes the AOT-compiled chunked sorter
+//! (L1 Pallas bitonic kernels composed by the L2 JAX model) via PJRT.
+//!
+//! The exported executable sorts a fixed (64 × 1024) i32 batch per
+//! dispatch; arbitrary lengths are handled by padding the tail batch with
+//! `i32::MAX` sentinels and k-way merging batch results in rust — the same
+//! chunk-then-merge structure the paper's merge sort uses, with the chunk
+//! work on the accelerator and the coordination in rust.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::runtime::artifact::{ArtifactError, ArtifactSet};
+
+/// Batch geometry — must match python/compile/model.py's export specs.
+pub const NUM_CHUNKS: usize = 64;
+pub const CHUNK: usize = 1024;
+pub const BATCH: usize = NUM_CHUNKS * CHUNK;
+
+pub struct ChunkedSorter<'a> {
+    set: &'a ArtifactSet,
+}
+
+#[derive(Debug, Default, Clone, Copy)]
+pub struct SortMetrics {
+    pub dispatches: u64,
+    /// Elements padded in the tail batch.
+    pub padded: u64,
+}
+
+impl<'a> ChunkedSorter<'a> {
+    pub fn new(set: &'a ArtifactSet) -> Result<Self, ArtifactError> {
+        // Fail fast if the artifact is missing or has unexpected geometry.
+        let meta = set
+            .manifest
+            .get("full_sort")
+            .ok_or_else(|| ArtifactError::Unknown("full_sort".into(), String::new()))?;
+        assert_eq!(
+            meta.inputs[0].shape,
+            vec![NUM_CHUNKS, CHUNK],
+            "full_sort artifact shape drifted from runtime constants"
+        );
+        set.executable("full_sort")?;
+        Ok(ChunkedSorter { set })
+    }
+
+    /// Sort exactly one batch (BATCH elements) on the accelerator.
+    pub fn sort_batch(&self, data: &[i32]) -> Result<Vec<i32>, ArtifactError> {
+        assert_eq!(data.len(), BATCH, "sort_batch needs exactly {BATCH} elems");
+        let exe = self.set.executable("full_sort")?;
+        let lit = xla::Literal::vec1(data).reshape(&[NUM_CHUNKS as i64, CHUNK as i64])?;
+        let result = exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<i32>()?)
+    }
+
+    /// Sort any slice: pad → per-batch accelerator sorts → k-way merge.
+    pub fn sort(&self, data: &[i32]) -> Result<(Vec<i32>, SortMetrics), ArtifactError> {
+        let mut metrics = SortMetrics::default();
+        if data.is_empty() {
+            return Ok((Vec::new(), metrics));
+        }
+        let nbatches = data.len().div_ceil(BATCH);
+        let mut runs: Vec<Vec<i32>> = Vec::with_capacity(nbatches);
+        for b in 0..nbatches {
+            let lo = b * BATCH;
+            let hi = (lo + BATCH).min(data.len());
+            let mut batch = data[lo..hi].to_vec();
+            metrics.padded += (BATCH - batch.len()) as u64;
+            batch.resize(BATCH, i32::MAX);
+            let sorted = self.sort_batch(&batch)?;
+            metrics.dispatches += 1;
+            runs.push(sorted);
+        }
+        // K-way merge of the sorted runs, dropping pad sentinels beyond the
+        // original length.
+        let mut heap: BinaryHeap<Reverse<(i32, usize, usize)>> = runs
+            .iter()
+            .enumerate()
+            .map(|(r, run)| Reverse((run[0], r, 0)))
+            .collect();
+        let mut out = Vec::with_capacity(data.len());
+        while out.len() < data.len() {
+            let Reverse((v, r, i)) = heap.pop().expect("merge underflow");
+            out.push(v);
+            if i + 1 < runs[r].len() {
+                heap.push(Reverse((runs[r][i + 1], r, i + 1)));
+            }
+        }
+        Ok((out, metrics))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // PJRT-backed tests live in rust/tests/integration_runtime.rs (they
+    // need built artifacts); here we only test the pure-rust merge logic
+    // via a stub that mimics batch sorting.
+
+    #[test]
+    fn kway_merge_logic() {
+        // Reimplement the merge locally over pre-sorted runs to pin the
+        // algorithm (the integration test exercises the real path).
+        let runs = [vec![1, 4, 7], vec![2, 5, 8], vec![0, 3, 6]];
+        let mut heap: std::collections::BinaryHeap<std::cmp::Reverse<(i32, usize, usize)>> = runs
+            .iter()
+            .enumerate()
+            .map(|(r, run)| std::cmp::Reverse((run[0], r, 0)))
+            .collect();
+        let mut out = Vec::new();
+        while let Some(std::cmp::Reverse((v, r, i))) = heap.pop() {
+            out.push(v);
+            if i + 1 < runs[r].len() {
+                heap.push(std::cmp::Reverse((runs[r][i + 1], r, i + 1)));
+            }
+        }
+        assert_eq!(out, (0..9).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,27 @@
+//! Thread→tile placement: the paper's second building block.
+//!
+//! `StaticMapper` pins thread i to core i (the `STATIC_MAPPING` /
+//! `sched_setaffinity` path of Algorithm 3); `TileLinuxScheduler` models the
+//! stock SMP Linux behaviour — reasonable initial spread but periodic
+//! load-balancing migrations that cost time and flush cache locality.
+
+pub mod static_map;
+pub mod tile_linux;
+
+use crate::arch::TileId;
+
+/// Placement policy consulted by the engine.
+pub trait Scheduler {
+    /// Tile a thread starts on.
+    fn initial_tile(&mut self, tid: usize) -> TileId;
+
+    /// Called periodically per thread (roughly every scheduling quantum);
+    /// returning `Some(t)` migrates the thread to `t` (costing
+    /// `LatencyParams::migration_cost` and all cache locality).
+    fn maybe_migrate(&mut self, tid: usize, current: TileId, now_cycles: u64) -> Option<TileId>;
+
+    fn label(&self) -> &'static str;
+}
+
+pub use static_map::StaticMapper;
+pub use tile_linux::{TileLinuxConfig, TileLinuxScheduler};

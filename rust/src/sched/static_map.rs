@@ -1,0 +1,62 @@
+//! Static ordered mapping: thread i pinned to core `i % 64`, forever.
+//!
+//! This is Algorithm 3's `STATIC_MAPPING` block: each leaf thread takes the
+//! next counter value and `sched_setaffinity`s itself onto that core — "in
+//! the ordered way", deliberately, so Fig. 4's controller-utilisation
+//! asymmetry (threads 0–31 fill the top half of the chip) is reproduced.
+
+use super::Scheduler;
+use crate::arch::{TileId, NUM_TILES};
+
+#[derive(Default)]
+pub struct StaticMapper;
+
+impl StaticMapper {
+    pub fn new() -> Self {
+        StaticMapper
+    }
+}
+
+impl Scheduler for StaticMapper {
+    fn initial_tile(&mut self, tid: usize) -> TileId {
+        TileId((tid as u32) % NUM_TILES)
+    }
+
+    fn maybe_migrate(&mut self, _tid: usize, _current: TileId, _now: u64) -> Option<TileId> {
+        None
+    }
+
+    fn label(&self) -> &'static str {
+        "static"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordered_pinning() {
+        let mut s = StaticMapper::new();
+        assert_eq!(s.initial_tile(0), TileId(0));
+        assert_eq!(s.initial_tile(31), TileId(31));
+        assert_eq!(s.initial_tile(64), TileId(0)); // wraps
+    }
+
+    #[test]
+    fn never_migrates() {
+        let mut s = StaticMapper::new();
+        for now in [0u64, 1_000_000, u64::MAX / 2] {
+            assert_eq!(s.maybe_migrate(3, TileId(3), now), None);
+        }
+    }
+
+    #[test]
+    fn first_32_threads_fill_upper_half() {
+        // The Fig. 4 premise: threads 0..31 sit on rows 0..3 (top half).
+        let mut s = StaticMapper::new();
+        for tid in 0..32 {
+            assert!(s.initial_tile(tid).coord().y < 4);
+        }
+    }
+}

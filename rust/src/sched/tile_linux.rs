@@ -1,0 +1,165 @@
+//! Tile Linux (SMP Linux 2.6.26) scheduler model.
+//!
+//! The paper's observation (§4): "The Tile Linux tries to migrate the
+//! threads during the execution time, and those migrations are costly not
+//! only in terms of cache misses but also because of the resulting delay."
+//! We model exactly that: a decent initial spread (the kernel does balance
+//! run queues), then periodic load-balancer ticks that, with some
+//! probability, bounce a thread to another core. Every parameter is
+//! seeded/deterministic so experiments replay exactly; the migration rate
+//! is swept in `benches/ablation_migration.rs`.
+
+use super::Scheduler;
+use crate::arch::{TileId, NUM_TILES};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct TileLinuxConfig {
+    /// Load-balancer tick interval per thread, in cycles (~1.2 ms at
+    /// 860 MHz ≈ the 2.6-era rebalance period on this core count).
+    pub check_interval: u64,
+    /// Probability a tick moves the thread.
+    pub migrate_prob: f64,
+    pub seed: u64,
+}
+
+impl Default for TileLinuxConfig {
+    fn default() -> Self {
+        TileLinuxConfig {
+            check_interval: 1_000_000,
+            migrate_prob: 0.20,
+            seed: 0x7115_11EC,
+        }
+    }
+}
+
+pub struct TileLinuxScheduler {
+    cfg: TileLinuxConfig,
+    rng: Rng,
+    /// Initial placement permutation (kernel spreads across idle cores but
+    /// in an order the application cannot rely on).
+    perm: Vec<u32>,
+    next_check: Vec<u64>,
+    pub migrations: u64,
+}
+
+impl TileLinuxScheduler {
+    pub fn new(cfg: TileLinuxConfig) -> Self {
+        let mut rng = Rng::new(cfg.seed);
+        let mut perm: Vec<u32> = (0..NUM_TILES).collect();
+        rng.shuffle(&mut perm);
+        TileLinuxScheduler {
+            cfg,
+            rng,
+            perm,
+            next_check: Vec::new(),
+            migrations: 0,
+        }
+    }
+
+    pub fn with_seed(seed: u64) -> Self {
+        Self::new(TileLinuxConfig {
+            seed,
+            ..Default::default()
+        })
+    }
+}
+
+impl Scheduler for TileLinuxScheduler {
+    fn initial_tile(&mut self, tid: usize) -> TileId {
+        if self.next_check.len() <= tid {
+            self.next_check.resize(tid + 1, self.cfg.check_interval);
+        }
+        TileId(self.perm[tid % NUM_TILES as usize])
+    }
+
+    fn maybe_migrate(&mut self, tid: usize, current: TileId, now: u64) -> Option<TileId> {
+        if tid >= self.next_check.len() || now < self.next_check[tid] {
+            return None;
+        }
+        self.next_check[tid] = now + self.cfg.check_interval;
+        if !self.rng.chance(self.cfg.migrate_prob) {
+            return None;
+        }
+        // Load balancer picks another core; it doesn't know about home
+        // caches (that's the paper's point), so the target is arbitrary.
+        let mut target = TileId(self.rng.below(NUM_TILES as u64) as u32);
+        if target == current {
+            target = TileId((target.0 + 1) % NUM_TILES);
+        }
+        self.migrations += 1;
+        Some(target)
+    }
+
+    fn label(&self) -> &'static str {
+        "tile-linux"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_placement() {
+        let mut a = TileLinuxScheduler::with_seed(1);
+        let mut b = TileLinuxScheduler::with_seed(1);
+        for tid in 0..64 {
+            assert_eq!(a.initial_tile(tid), b.initial_tile(tid));
+        }
+    }
+
+    #[test]
+    fn initial_placement_is_a_spread() {
+        let mut s = TileLinuxScheduler::with_seed(2);
+        let tiles: std::collections::HashSet<_> = (0..64).map(|t| s.initial_tile(t)).collect();
+        assert_eq!(tiles.len(), 64, "kernel spreads threads over all cores");
+    }
+
+    #[test]
+    fn migrations_happen_over_time() {
+        let mut s = TileLinuxScheduler::with_seed(3);
+        let t0 = s.initial_tile(0);
+        let mut migrated = 0;
+        let mut tile = t0;
+        for step in 1..200u64 {
+            if let Some(n) = s.maybe_migrate(0, tile, step * 2_000_000) {
+                tile = n;
+                migrated += 1;
+            }
+        }
+        assert!(migrated > 10, "expected migrations, got {migrated}");
+        assert_eq!(s.migrations, migrated);
+    }
+
+    #[test]
+    fn no_migration_before_interval() {
+        let mut s = TileLinuxScheduler::with_seed(4);
+        let t = s.initial_tile(0);
+        assert_eq!(s.maybe_migrate(0, t, 10), None);
+    }
+
+    #[test]
+    fn migration_never_targets_current_tile() {
+        let mut s = TileLinuxScheduler::with_seed(5);
+        let mut tile = s.initial_tile(0);
+        for step in 1..500u64 {
+            if let Some(n) = s.maybe_migrate(0, tile, step * 2_000_000) {
+                assert_ne!(n, tile);
+                tile = n;
+            }
+        }
+    }
+
+    #[test]
+    fn zero_probability_never_migrates() {
+        let mut s = TileLinuxScheduler::new(TileLinuxConfig {
+            migrate_prob: 0.0,
+            ..Default::default()
+        });
+        let t = s.initial_tile(0);
+        for step in 1..100u64 {
+            assert_eq!(s.maybe_migrate(0, t, step * 10_000_000), None);
+        }
+    }
+}

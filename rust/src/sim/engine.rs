@@ -1,0 +1,690 @@
+//! The replay engine: executes a `Program` against the simulated memory
+//! system in cycle order.
+//!
+//! Threads are replayed min-clock-first from a binary heap, in bounded
+//! quanta (line events), so cross-thread interleaving — and therefore the
+//! contention counters — track simulated time. Every line access walks the
+//! DDC lookup path (cache::hierarchy), pays the uncontended latency
+//! (arch::params), plus queueing at the home tile / memory controller
+//! (noc::contention), plus invalidation fan-out on writes.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::arch::{
+    controllers, CacheGeometry, Controller, HitLevel, LatencyParams, TileId, NUM_TILES,
+};
+use crate::cache::CacheSystem;
+use crate::mem::{AllocKind, Allocator, MemConfig, Region, VAddr};
+use crate::noc::{ContentionConfig, ContentionModel};
+use crate::sched::Scheduler;
+use crate::sim::stats::RunStats;
+use crate::sim::trace::{Loc, Op, Program};
+
+/// Hypervisor page-allocation overhead (per call + per page): `new int[n]`
+/// is not free, which is why localisation must *amortise* the copy+alloc
+/// over enough reuse (Fig. 1's small-repetition regime).
+const ALLOC_BASE_CYCLES: u64 = 600;
+const ALLOC_PER_PAGE_CYCLES: u64 = 120;
+const FREE_BASE_CYCLES: u64 = 300;
+
+/// Max line events a thread processes per scheduling turn. Small enough to
+/// interleave threads faithfully, large enough to amortise heap traffic.
+const QUANTUM_LINES: u64 = 128;
+
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    pub mem: MemConfig,
+    pub contention: ContentionConfig,
+    pub params: LatencyParams,
+    pub geometry: CacheGeometry,
+    /// Fig. 4 ablation: with caches off every access goes to DRAM (routed
+    /// via its home tile), which is where "the effect of memory striping is
+    /// considerable" per the paper's closing discussion.
+    pub caches_enabled: bool,
+}
+
+impl EngineConfig {
+    pub fn tilepro64(mem: MemConfig) -> Self {
+        EngineConfig {
+            mem,
+            contention: ContentionConfig::default(),
+            params: LatencyParams::TILEPRO64,
+            geometry: CacheGeometry::TILEPRO64,
+            caches_enabled: true,
+        }
+    }
+
+    pub fn without_caches(mut self) -> Self {
+        self.caches_enabled = false;
+        self
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum EngineError {
+    #[error("program validation failed: {0}")]
+    Invalid(#[from] crate::sim::trace::ProgramError),
+    #[error("thread {thread}: use of unbound slot {slot}")]
+    UnboundSlot { thread: usize, slot: u32 },
+    #[error("thread {thread}: allocation failed: {source}")]
+    Alloc {
+        thread: usize,
+        source: crate::mem::AllocError,
+    },
+    #[error("access to unmapped address {0:?}")]
+    Unmapped(VAddr),
+    #[error("deadlock: threads {0:?} blocked forever")]
+    Deadlock(Vec<usize>),
+}
+
+struct ThreadState {
+    tile: TileId,
+    clock: u64,
+    /// Index of the next op.
+    pc: usize,
+    /// Lines already processed within the current (partially done) op.
+    progress: u64,
+    done: bool,
+}
+
+/// The engine also exposes the pre-run allocator so workloads can set up
+/// shared input arrays (the `main()`-scope `new int[ARRAY_SZ]` of Alg. 3,
+/// allocated from tile 0 before threads start).
+pub struct Engine {
+    pub alloc: Allocator,
+    caches: CacheSystem,
+    contention: ContentionModel,
+    params: LatencyParams,
+    ctrl_table: [Controller; 4],
+    caches_enabled: bool,
+    stats: RunStats,
+}
+
+impl Engine {
+    pub fn new(cfg: EngineConfig) -> Self {
+        Engine {
+            alloc: Allocator::new(cfg.mem),
+            caches: CacheSystem::new(&cfg.geometry),
+            contention: ContentionModel::new(cfg.contention),
+            params: cfg.params,
+            ctrl_table: controllers(),
+            caches_enabled: cfg.caches_enabled,
+            stats: RunStats {
+                tile_home_requests: vec![0; crate::arch::NUM_TILES as usize],
+                ..RunStats::default()
+            },
+        }
+    }
+
+    /// Allocate a shared input array before the run (from `tile`, heap).
+    /// First-touch homing remains unresolved — workers fault pages in.
+    pub fn prealloc(&mut self, tile: TileId, bytes: u64) -> Region {
+        self.alloc
+            .alloc(tile, bytes, AllocKind::Heap)
+            .expect("prealloc failed")
+    }
+
+    /// Allocate *and initialise* an array from `tile` (models `main()`
+    /// writing the input before the parallel section): under
+    /// `ucache_hash=none` every page first-touch homes on `tile` — the
+    /// "whole array stuck on one tile" starting point of the paper.
+    pub fn prealloc_touched(&mut self, tile: TileId, bytes: u64) -> Region {
+        let r = self.prealloc(tile, bytes);
+        self.alloc.table.touch_region(r.addr, r.bytes, tile);
+        r
+    }
+
+    pub fn params(&self) -> &LatencyParams {
+        &self.params
+    }
+
+    /// Simulate one line access from `tile` at `now`; returns cycles.
+    /// First-touch pages fault in here (homed on `tile`).
+    fn line_access(
+        &mut self,
+        tile: TileId,
+        line: crate::mem::LineId,
+        write: bool,
+        now: u64,
+    ) -> Result<u64, EngineError> {
+        let home = self
+            .alloc
+            .table
+            .resolve_home(line, tile)
+            .map_err(|_| EngineError::Unmapped(line.addr()))?;
+        self.stats.line_accesses += 1;
+        if !self.caches_enabled {
+            return self.uncached_access(tile, line, home, write, now);
+        }
+        if write {
+            return Ok(self.store(tile, line, home, now));
+        }
+        self.load(tile, line, home, now)
+    }
+
+    /// Caches-off mode (Fig. 4 ablation): every access is a DRAM
+    /// transaction routed via the line's home tile.
+    fn uncached_access(
+        &mut self,
+        tile: TileId,
+        line: crate::mem::LineId,
+        home: TileId,
+        write: bool,
+        now: u64,
+    ) -> Result<u64, EngineError> {
+        self.stats.ddr_accesses += 1;
+        let ctrl = self
+            .alloc
+            .table
+            .controller_of_line(line)
+            .map_err(|_| EngineError::Unmapped(line.addr()))?;
+        let ctrl_attach = self.ctrl_table[ctrl as usize].attach;
+        let base = if write {
+            // Posted store still pays controller occupancy, not latency.
+            self.params.store_post
+        } else {
+            self.params
+                .access_cycles(tile, HitLevel::Ddr { ctrl_attach })
+        };
+        let mut cycles = base;
+        if home != tile {
+            self.stats.tile_home_requests[home.index()] += 1;
+            cycles += self
+                .contention
+                .home_request(home, now, self.params.home_service);
+        }
+        cycles += self
+            .contention
+            .ctrl_request(ctrl, now, self.params.ctrl_service);
+        Ok(cycles)
+    }
+
+    fn load(
+        &mut self,
+        tile: TileId,
+        line: crate::mem::LineId,
+        home: TileId,
+        now: u64,
+    ) -> Result<u64, EngineError> {
+        let place = self.caches.read(tile, line, home);
+        let cycles = match place {
+            crate::cache::ReadPlace::L1 => {
+                self.stats.l1_hits += 1;
+                self.params.access_cycles(tile, HitLevel::L1)
+            }
+            crate::cache::ReadPlace::L2 => {
+                self.stats.l2_hits += 1;
+                self.params.access_cycles(tile, HitLevel::L2)
+            }
+            crate::cache::ReadPlace::Home { home } => {
+                self.stats.home_hits += 1;
+                self.stats.tile_home_requests[home.index()] += 1;
+                self.params.access_cycles(tile, HitLevel::Home { home })
+                    + self
+                        .contention
+                        .home_request(home, now, self.params.home_service)
+            }
+            crate::cache::ReadPlace::Ddr => {
+                self.stats.ddr_accesses += 1;
+                // Only the DRAM path needs the controller (lazy lookup —
+                // this is the engine's hottest function).
+                let ctrl = self
+                    .alloc
+                    .table
+                    .controller_of_line(line)
+                    .map_err(|_| EngineError::Unmapped(line.addr()))?;
+                let ctrl_attach = self.ctrl_table[ctrl as usize].attach;
+                let mut c = self
+                    .params
+                    .access_cycles(tile, HitLevel::Ddr { ctrl_attach });
+                // A miss on a remotely-homed line is routed *via* the home
+                // tile (DDC), occupying its port on the way to DRAM.
+                if home != tile {
+                    self.stats.tile_home_requests[home.index()] += 1;
+                    c += self
+                        .contention
+                        .home_request(home, now, self.params.home_service);
+                }
+                c + self
+                    .contention
+                    .ctrl_request(ctrl, now, self.params.ctrl_service)
+            }
+        };
+        Ok(cycles)
+    }
+
+    fn store(&mut self, tile: TileId, line: crate::mem::LineId, home: TileId, now: u64) -> u64 {
+        let out = self.caches.write(tile, line, home);
+        let mut cycles = match out.level {
+            crate::cache::WriteLevel::LocalL2 => {
+                self.stats.l2_hits += 1;
+                self.params.l2_hit
+            }
+            crate::cache::WriteLevel::RemotePost { home } => {
+                // Posted store: issuing cost is small, but the home port
+                // bandwidth is consumed — that queueing is the hot-spot
+                // mechanism of the non-localised disaster case.
+                self.stats.home_hits += 1;
+                self.stats.tile_home_requests[home.index()] += 1;
+                self.params.store_post
+                    + self
+                        .contention
+                        .home_request(home, now, self.params.home_service)
+            }
+        };
+        if out.invalidated > 0 {
+            self.stats.invalidations += out.invalidated as u64;
+            cycles += self.params.noc_header + self.params.noc_hop * out.invalidation_hops as u64;
+        }
+        cycles
+    }
+
+    /// Replay `program` under `sched`; consumes the engine's cache/alloc
+    /// state (call on a fresh engine per experiment).
+    pub fn run(
+        mut self,
+        program: &Program,
+        sched: &mut dyn Scheduler,
+    ) -> Result<RunStats, EngineError> {
+        program.validate()?;
+        let n = program.threads.len();
+        assert!(n <= 4 * NUM_TILES as usize, "too many threads");
+
+        let mut threads: Vec<ThreadState> = (0..n)
+            .map(|tid| ThreadState {
+                tile: sched.initial_tile(tid),
+                clock: 0,
+                pc: 0,
+                progress: 0,
+                done: program.threads[tid].is_empty(),
+            })
+            .collect();
+        let mut slots: Vec<Option<Region>> = vec![None; program.num_slots as usize];
+        let mut signal_time: Vec<Option<u64>> = vec![None; program.num_events as usize];
+        let mut waiters: Vec<Vec<usize>> = vec![Vec::new(); program.num_events as usize];
+
+        let mut heap: BinaryHeap<Reverse<(u64, usize)>> = threads
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| !t.done)
+            .map(|(tid, t)| Reverse((t.clock, tid)))
+            .collect();
+
+        while let Some(Reverse((clock, tid))) = heap.pop() {
+            // Stale heap entry (thread was re-queued by a signal).
+            if threads[tid].done || threads[tid].clock != clock {
+                continue;
+            }
+
+            // Scheduler tick: Tile Linux may migrate the thread here.
+            if let Some(new_tile) = sched.maybe_migrate(tid, threads[tid].tile, clock) {
+                threads[tid].tile = new_tile;
+                threads[tid].clock += self.params.migration_cost;
+                self.stats.migrations += 1;
+                heap.push(Reverse((threads[tid].clock, tid)));
+                continue;
+            }
+
+            let mut budget = QUANTUM_LINES;
+            let mut blocked = false;
+            while budget > 0 && !threads[tid].done {
+                let op = program.threads[tid][threads[tid].pc];
+                match self.step_op(tid, &mut threads, &mut slots, &mut signal_time, op)? {
+                    StepResult::Progress(lines) => {
+                        budget = budget.saturating_sub(lines.max(1));
+                    }
+                    StepResult::Blocked(event) => {
+                        waiters[event as usize].push(tid);
+                        blocked = true;
+                        break;
+                    }
+                    StepResult::Signalled(event) => {
+                        budget = budget.saturating_sub(1);
+                        // Wake waiters: their clock joins the signal time.
+                        let now = signal_time[event as usize].unwrap();
+                        for w in waiters[event as usize].drain(..) {
+                            threads[w].clock = threads[w].clock.max(now);
+                            heap.push(Reverse((threads[w].clock, w)));
+                        }
+                    }
+                }
+                if threads[tid].pc >= program.threads[tid].len() {
+                    threads[tid].done = true;
+                }
+            }
+            if !threads[tid].done && !blocked {
+                heap.push(Reverse((threads[tid].clock, tid)));
+            }
+        }
+
+        let undone: Vec<usize> = threads
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| !t.done)
+            .map(|(tid, _)| tid)
+            .collect();
+        if !undone.is_empty() {
+            return Err(EngineError::Deadlock(undone));
+        }
+
+        self.stats.makespan_cycles = threads.iter().map(|t| t.clock).max().unwrap_or(0);
+        self.stats.thread_cycles = threads.iter().map(|t| t.clock).collect();
+        self.stats.home_queue_cycles = self.contention.home_delay_cycles;
+        self.stats.ctrl_queue_cycles = self.contention.ctrl_delay_cycles;
+        self.stats.allocs = self.alloc.allocs;
+        self.stats.frees = self.alloc.frees;
+        Ok(self.stats)
+    }
+
+    fn resolve(
+        &self,
+        tid: usize,
+        slots: &[Option<Region>],
+        loc: Loc,
+    ) -> Result<VAddr, EngineError> {
+        match loc {
+            Loc::Abs(a) => Ok(a),
+            Loc::Slot { slot, offset } => slots[slot as usize]
+                .map(|r| r.addr.offset(offset))
+                .ok_or(EngineError::UnboundSlot { thread: tid, slot }),
+        }
+    }
+
+    fn step_op(
+        &mut self,
+        tid: usize,
+        threads: &mut [ThreadState],
+        slots: &mut [Option<Region>],
+        signal_time: &mut [Option<u64>],
+        op: Op,
+    ) -> Result<StepResult, EngineError> {
+        let (tile, clock0, progress) = {
+            let t = &threads[tid];
+            (t.tile, t.clock, t.progress)
+        };
+        match op {
+            Op::Read { loc, bytes } | Op::Write { loc, bytes } => {
+                let write = matches!(op, Op::Write { .. });
+                let addr = self.resolve(tid, slots, loc)?;
+                let total_lines = crate::mem::line_count(addr, bytes);
+                let remaining = total_lines - progress;
+                let batch = remaining.min(QUANTUM_LINES);
+                // Line ids of a range are contiguous: resume at
+                // first + progress in O(1) instead of re-skipping the
+                // iterator (which made long ranges quadratic).
+                let first = addr.line().0 + progress;
+                let mut cycles = 0u64;
+                for l in first..first + batch {
+                    cycles +=
+                        self.line_access(tile, crate::mem::LineId(l), write, clock0 + cycles)?;
+                }
+                let t = &mut threads[tid];
+                t.clock += cycles;
+                if progress + batch >= total_lines {
+                    t.progress = 0;
+                    t.pc += 1;
+                } else {
+                    t.progress = progress + batch;
+                }
+                Ok(StepResult::Progress(batch))
+            }
+            Op::Copy { src, dst, bytes } => {
+                // Per-line interleave of read+write, like memcpy.
+                let s = self.resolve(tid, slots, src)?;
+                let d = self.resolve(tid, slots, dst)?;
+                let total_lines = crate::mem::line_count(d, bytes);
+                let remaining = total_lines - progress;
+                let batch = remaining.min(QUANTUM_LINES / 2);
+                let src_first = s.line().0 + progress;
+                let dst_first = d.line().0 + progress;
+                let mut cycles = 0u64;
+                for i in 0..batch {
+                    cycles += self.line_access(
+                        tile,
+                        crate::mem::LineId(src_first + i),
+                        false,
+                        clock0 + cycles,
+                    )?;
+                    cycles += self.line_access(
+                        tile,
+                        crate::mem::LineId(dst_first + i),
+                        true,
+                        clock0 + cycles,
+                    )?;
+                }
+                let t = &mut threads[tid];
+                t.clock += cycles;
+                if progress + batch >= total_lines {
+                    t.progress = 0;
+                    t.pc += 1;
+                } else {
+                    t.progress = progress + batch;
+                }
+                Ok(StepResult::Progress(batch * 2))
+            }
+            Op::Compute { cycles } => {
+                let t = &mut threads[tid];
+                t.clock += cycles;
+                self.stats.compute_cycles += cycles;
+                t.pc += 1;
+                // Compute is cheap to simulate; bill one budget unit.
+                Ok(StepResult::Progress(1))
+            }
+            Op::Alloc { slot, bytes, kind } => {
+                let region = self
+                    .alloc
+                    .alloc(tile, bytes, kind)
+                    .map_err(|source| EngineError::Alloc { thread: tid, source })?;
+                slots[slot as usize] = Some(region);
+                let pages = bytes.div_ceil(crate::arch::PAGE_BYTES);
+                let t = &mut threads[tid];
+                t.clock += ALLOC_BASE_CYCLES + ALLOC_PER_PAGE_CYCLES * pages;
+                t.pc += 1;
+                Ok(StepResult::Progress(1))
+            }
+            Op::Free { slot } => {
+                let region = slots[slot as usize]
+                    .take()
+                    .ok_or(EngineError::UnboundSlot { thread: tid, slot })?;
+                let freed = self
+                    .alloc
+                    .free(region.addr)
+                    .map_err(|source| EngineError::Alloc { thread: tid, source })?;
+                // Freed pages lose all cache + directory state.
+                let first = freed.addr.line();
+                let last = VAddr(freed.addr.0 + freed.bytes - 1).line();
+                self.caches.purge_line_range(first, last);
+                let t = &mut threads[tid];
+                t.clock += FREE_BASE_CYCLES;
+                t.pc += 1;
+                Ok(StepResult::Progress(1))
+            }
+            Op::Signal { event } => {
+                let t = &mut threads[tid];
+                t.pc += 1;
+                signal_time[event as usize] = Some(t.clock);
+                Ok(StepResult::Signalled(event))
+            }
+            Op::Wait { event } => {
+                match signal_time[event as usize] {
+                    Some(s) => {
+                        let t = &mut threads[tid];
+                        t.clock = t.clock.max(s);
+                        t.pc += 1;
+                        Ok(StepResult::Progress(1))
+                    }
+                    None => Ok(StepResult::Blocked(event)),
+                }
+            }
+        }
+    }
+}
+
+enum StepResult {
+    Progress(u64),
+    Blocked(u32),
+    Signalled(u32),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::HashPolicy;
+    use crate::sched::StaticMapper;
+    use crate::sim::trace::TraceBuilder;
+
+    fn engine(policy: HashPolicy) -> Engine {
+        Engine::new(EngineConfig::tilepro64(MemConfig {
+            hash_policy: policy,
+            striping: true,
+        }))
+    }
+
+    #[test]
+    fn single_thread_read_costs_cycles() {
+        let mut e = engine(HashPolicy::None);
+        let r = e.prealloc(TileId(0), 4096);
+        let mut b = TraceBuilder::new();
+        b.read(Loc::Abs(r.addr), 4096);
+        let p = Program::from_builders(vec![b], 0, 0);
+        let stats = e.run(&p, &mut StaticMapper::new()).unwrap();
+        assert_eq!(stats.line_accesses, 64);
+        assert_eq!(stats.ddr_accesses, 64, "cold read misses to DDR");
+        assert!(stats.makespan_cycles > 64 * 88);
+    }
+
+    #[test]
+    fn rereads_hit_cache() {
+        let mut e = engine(HashPolicy::None);
+        let r = e.prealloc(TileId(0), 4096);
+        let mut b = TraceBuilder::new();
+        b.read(Loc::Abs(r.addr), 4096).read(Loc::Abs(r.addr), 4096);
+        let p = Program::from_builders(vec![b], 0, 0);
+        let stats = e.run(&p, &mut StaticMapper::new()).unwrap();
+        assert_eq!(stats.l1_hits, 64, "second pass must hit L1");
+    }
+
+    #[test]
+    fn alloc_binds_slot_and_rehomes() {
+        // Thread on tile 5 allocates (policy none): pages home on tile 5,
+        // so repeat reads are local.
+        let e = engine(HashPolicy::None);
+        let mut b = TraceBuilder::new();
+        b.alloc(0, 4096, AllocKind::Heap)
+            .write(Loc::Slot { slot: 0, offset: 0 }, 4096)
+            .read(Loc::Slot { slot: 0, offset: 0 }, 4096);
+        // Put the thread on tile 5 via tid=5.
+        let empty = TraceBuilder::new();
+        let p = Program::from_builders(
+            vec![empty.clone(), empty.clone(), empty.clone(), empty.clone(), empty, b],
+            1,
+            0,
+        );
+        let stats = e.run(&p, &mut StaticMapper::new()).unwrap();
+        // The write first-touch homes the pages on tile 5 and fills its L2;
+        // the re-read must be all local (L1/L2), no DDR, no remote home.
+        assert_eq!(stats.l1_hits + stats.l2_hits, 128, "local alloc must stay local");
+        assert_eq!(stats.ddr_accesses, 0);
+    }
+
+    #[test]
+    fn free_purges_cache() {
+        let e = engine(HashPolicy::None);
+        let mut b = TraceBuilder::new();
+        b.alloc(0, 4096, AllocKind::Heap)
+            .write(Loc::Slot { slot: 0, offset: 0 }, 4096)
+            .free(0)
+            .alloc(1, 4096, AllocKind::Heap)
+            .read(Loc::Slot { slot: 1, offset: 0 }, 4096);
+        let p = Program::from_builders(vec![b], 2, 0);
+        let stats = e.run(&p, &mut StaticMapper::new()).unwrap();
+        // The re-alloc reuses the same pages (64 lines), but the purge
+        // means the read must go to DDR (no stale hits from the writes).
+        assert_eq!(stats.ddr_accesses, 64);
+        assert_eq!(stats.l1_hits, 0);
+    }
+
+    #[test]
+    fn signal_wait_orders_clocks() {
+        let mut e = engine(HashPolicy::None);
+        let r = e.prealloc(TileId(0), 1 << 20);
+        // Thread 0: long read then signal. Thread 1: wait then tiny read.
+        let mut b0 = TraceBuilder::new();
+        b0.read(Loc::Abs(r.addr), 1 << 20).signal(0);
+        let mut b1 = TraceBuilder::new();
+        b1.wait(0).read(Loc::Abs(r.addr), 64);
+        let p = Program::from_builders(vec![b0, b1], 0, 1);
+        let stats = e.run(&p, &mut StaticMapper::new()).unwrap();
+        // Thread 1 must finish after thread 0 signalled.
+        assert!(stats.thread_cycles[1] >= stats.thread_cycles[0] - 1000);
+    }
+
+    #[test]
+    fn deadlock_detected() {
+        let mut b = TraceBuilder::new();
+        b.wait(0); // nobody signals
+        let p = Program::from_builders(vec![b], 0, 1);
+        let e = engine(HashPolicy::None);
+        match e.run(&p, &mut StaticMapper::new()) {
+            Err(EngineError::Deadlock(t)) => assert_eq!(t, vec![0]),
+            other => panic!("expected deadlock, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unbound_slot_is_error() {
+        let mut b = TraceBuilder::new();
+        b.read(Loc::Slot { slot: 0, offset: 0 }, 64);
+        let p = Program::from_builders(vec![b], 1, 0);
+        let e = engine(HashPolicy::None);
+        assert!(matches!(
+            e.run(&p, &mut StaticMapper::new()),
+            Err(EngineError::UnboundSlot { .. })
+        ));
+    }
+
+    #[test]
+    fn unmapped_access_is_error() {
+        let mut b = TraceBuilder::new();
+        b.read(Loc::Abs(VAddr(1 << 30)), 64);
+        let p = Program::from_builders(vec![b], 0, 0);
+        let e = engine(HashPolicy::None);
+        assert!(matches!(
+            e.run(&p, &mut StaticMapper::new()),
+            Err(EngineError::Unmapped(_))
+        ));
+    }
+
+    #[test]
+    fn hash_for_home_spreads_home_hits() {
+        // Two threads stream the same shared array twice; under
+        // hash-for-home the second pass hits remote homes spread over the
+        // chip rather than one tile.
+        let mut e = engine(HashPolicy::AllButStack);
+        let r = e.prealloc(TileId(0), 1 << 20);
+        let mk = |addr| {
+            let mut b = TraceBuilder::new();
+            b.read(Loc::Abs(addr), 1 << 20);
+            b
+        };
+        let p = Program::from_builders(vec![mk(r.addr), mk(r.addr)], 0, 0);
+        let stats = e.run(&p, &mut StaticMapper::new()).unwrap();
+        assert!(stats.home_hits > 0, "expected remote-home L3 hits");
+    }
+
+    #[test]
+    fn makespan_is_max_thread_clock() {
+        let mut e = engine(HashPolicy::None);
+        let r = e.prealloc(TileId(0), 1 << 16);
+        let mut b0 = TraceBuilder::new();
+        b0.read(Loc::Abs(r.addr), 1 << 16);
+        let b1 = TraceBuilder::new(); // empty
+        let p = Program::from_builders(vec![b0, b1], 0, 0);
+        let stats = e.run(&p, &mut StaticMapper::new()).unwrap();
+        assert_eq!(
+            stats.makespan_cycles,
+            *stats.thread_cycles.iter().max().unwrap()
+        );
+    }
+}

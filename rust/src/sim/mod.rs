@@ -1,0 +1,9 @@
+//! Cycle-approximate replay simulation: traces, the engine, and run stats.
+
+pub mod engine;
+pub mod stats;
+pub mod trace;
+
+pub use engine::{Engine, EngineConfig, EngineError};
+pub use stats::RunStats;
+pub use trace::{Loc, Op, Program, ProgramError, TraceBuilder};

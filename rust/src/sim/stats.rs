@@ -1,0 +1,142 @@
+//! Run statistics: everything the experiment harness reports.
+
+use crate::arch::{LatencyParams, CLOCK_HZ};
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, Default)]
+pub struct RunStats {
+    /// Wall time of the parallel run = max over threads of finish time.
+    pub makespan_cycles: u64,
+    pub thread_cycles: Vec<u64>,
+    pub line_accesses: u64,
+    pub l1_hits: u64,
+    pub l2_hits: u64,
+    /// Remote-home "L3" hits.
+    pub home_hits: u64,
+    pub ddr_accesses: u64,
+    pub invalidations: u64,
+    pub migrations: u64,
+    pub home_queue_cycles: u64,
+    pub ctrl_queue_cycles: u64,
+    pub compute_cycles: u64,
+    pub allocs: u64,
+    pub frees: u64,
+    /// Remote requests served by each tile's home port (64 entries) — the
+    /// hot-spot heatmap of `metrics::heatmap`.
+    pub tile_home_requests: Vec<u64>,
+}
+
+impl RunStats {
+    pub fn seconds(&self) -> f64 {
+        self.makespan_cycles as f64 / CLOCK_HZ
+    }
+
+    pub fn seconds_with(&self, params: &LatencyParams) -> f64 {
+        params.cycles_to_seconds(self.makespan_cycles)
+    }
+
+    /// Fraction of line accesses satisfied in the requester's own caches.
+    pub fn local_hit_rate(&self) -> f64 {
+        if self.line_accesses == 0 {
+            return 0.0;
+        }
+        (self.l1_hits + self.l2_hits) as f64 / self.line_accesses as f64
+    }
+
+    pub fn ddr_rate(&self) -> f64 {
+        if self.line_accesses == 0 {
+            return 0.0;
+        }
+        self.ddr_accesses as f64 / self.line_accesses as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("makespan_cycles", Json::num(self.makespan_cycles as f64)),
+            ("seconds", Json::num(self.seconds())),
+            ("line_accesses", Json::num(self.line_accesses as f64)),
+            ("l1_hits", Json::num(self.l1_hits as f64)),
+            ("l2_hits", Json::num(self.l2_hits as f64)),
+            ("home_hits", Json::num(self.home_hits as f64)),
+            ("ddr_accesses", Json::num(self.ddr_accesses as f64)),
+            ("invalidations", Json::num(self.invalidations as f64)),
+            ("migrations", Json::num(self.migrations as f64)),
+            ("home_queue_cycles", Json::num(self.home_queue_cycles as f64)),
+            ("ctrl_queue_cycles", Json::num(self.ctrl_queue_cycles as f64)),
+            ("compute_cycles", Json::num(self.compute_cycles as f64)),
+            ("allocs", Json::num(self.allocs as f64)),
+            ("frees", Json::num(self.frees as f64)),
+            (
+                "tile_home_requests",
+                Json::arr(self.tile_home_requests.iter().map(|&n| Json::num(n as f64))),
+            ),
+        ])
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{:.3} ms | {} accesses | hits L1 {:.1}% L2 {:.1}% home {:.1}% ddr {:.1}% | {} inval | {} migr | queue home {} ctrl {}",
+            self.seconds() * 1e3,
+            self.line_accesses,
+            pct(self.l1_hits, self.line_accesses),
+            pct(self.l2_hits, self.line_accesses),
+            pct(self.home_hits, self.line_accesses),
+            pct(self.ddr_accesses, self.line_accesses),
+            self.invalidations,
+            self.migrations,
+            self.home_queue_cycles,
+            self.ctrl_queue_cycles,
+        )
+    }
+}
+
+fn pct(n: u64, d: u64) -> f64 {
+    if d == 0 {
+        0.0
+    } else {
+        100.0 * n as f64 / d as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seconds_at_clock() {
+        let s = RunStats {
+            makespan_cycles: 860_000,
+            ..Default::default()
+        };
+        assert!((s.seconds() - 1e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hit_rates() {
+        let s = RunStats {
+            line_accesses: 100,
+            l1_hits: 50,
+            l2_hits: 25,
+            ddr_accesses: 10,
+            ..Default::default()
+        };
+        assert!((s.local_hit_rate() - 0.75).abs() < 1e-12);
+        assert!((s.ddr_rate() - 0.10).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_stats_rates_are_zero() {
+        let s = RunStats::default();
+        assert_eq!(s.local_hit_rate(), 0.0);
+        assert_eq!(s.ddr_rate(), 0.0);
+    }
+
+    #[test]
+    fn json_has_all_keys() {
+        let j = RunStats::default().to_json();
+        for k in ["makespan_cycles", "seconds", "migrations", "ddr_accesses"] {
+            assert!(j.get(k).is_some(), "missing {k}");
+        }
+    }
+}

@@ -1,0 +1,315 @@
+//! Workload traces: the instruction set of the simulator.
+//!
+//! A workload (micro-benchmark, merge sort, …) is *generated* as one op
+//! sequence per thread, then replayed by the engine in cycle order. Ops
+//! reference dynamic allocations symbolically via slots — the address (and
+//! therefore the homing!) of `new int[n]` is only known at replay time,
+//! because it depends on which tile the thread occupies when the Alloc
+//! executes (migrations move threads). This is precisely the mechanism the
+//! paper's localisation exploits.
+//!
+//! Cross-thread synchronisation uses Signal/Wait events (the fork–join of
+//! OpenMP nested sections); slots live in a program-global namespace so a
+//! parent thread can merge arrays its children allocated (Algorithm 4),
+//! with happens-before provided by the events.
+
+use crate::mem::{AllocKind, VAddr};
+
+/// A memory location: absolute (pre-allocated input arrays) or an offset
+/// into a replay-time allocation slot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Loc {
+    Abs(VAddr),
+    Slot { slot: u32, offset: u64 },
+}
+
+impl Loc {
+    pub fn offset(self, bytes: u64) -> Loc {
+        match self {
+            Loc::Abs(a) => Loc::Abs(a.offset(bytes)),
+            Loc::Slot { slot, offset } => Loc::Slot {
+                slot,
+                offset: offset + bytes,
+            },
+        }
+    }
+}
+
+/// One simulated operation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    /// Sequential read of `[loc, loc+bytes)`.
+    Read { loc: Loc, bytes: u64 },
+    /// Sequential write of `[loc, loc+bytes)`.
+    Write { loc: Loc, bytes: u64 },
+    /// memcpy: per-line interleaved read of src / write of dst.
+    Copy { src: Loc, dst: Loc, bytes: u64 },
+    /// Pure ALU work.
+    Compute { cycles: u64 },
+    /// Allocate `bytes` on the thread's *current* tile into `slot`.
+    Alloc {
+        slot: u32,
+        bytes: u64,
+        kind: AllocKind,
+    },
+    /// Free the region in `slot` (purges caches — Algorithm 1 step 5).
+    Free { slot: u32 },
+    /// Signal completion event `event`.
+    Signal { event: u32 },
+    /// Block until `event` is signalled; clock joins to the signal time.
+    Wait { event: u32 },
+}
+
+/// Builder for one thread's op list.
+#[derive(Default, Clone)]
+pub struct TraceBuilder {
+    ops: Vec<Op>,
+}
+
+impl TraceBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn read(&mut self, loc: Loc, bytes: u64) -> &mut Self {
+        if bytes > 0 {
+            self.ops.push(Op::Read { loc, bytes });
+        }
+        self
+    }
+
+    pub fn write(&mut self, loc: Loc, bytes: u64) -> &mut Self {
+        if bytes > 0 {
+            self.ops.push(Op::Write { loc, bytes });
+        }
+        self
+    }
+
+    pub fn copy(&mut self, src: Loc, dst: Loc, bytes: u64) -> &mut Self {
+        if bytes > 0 {
+            self.ops.push(Op::Copy { src, dst, bytes });
+        }
+        self
+    }
+
+    pub fn compute(&mut self, cycles: u64) -> &mut Self {
+        if cycles > 0 {
+            self.ops.push(Op::Compute { cycles });
+        }
+        self
+    }
+
+    pub fn alloc(&mut self, slot: u32, bytes: u64, kind: AllocKind) -> &mut Self {
+        self.ops.push(Op::Alloc { slot, bytes, kind });
+        self
+    }
+
+    pub fn free(&mut self, slot: u32) -> &mut Self {
+        self.ops.push(Op::Free { slot });
+        self
+    }
+
+    pub fn signal(&mut self, event: u32) -> &mut Self {
+        self.ops.push(Op::Signal { event });
+        self
+    }
+
+    pub fn wait(&mut self, event: u32) -> &mut Self {
+        self.ops.push(Op::Wait { event });
+        self
+    }
+
+    pub fn ops(&self) -> &[Op] {
+        &self.ops
+    }
+
+    pub fn into_ops(self) -> Vec<Op> {
+        self.ops
+    }
+}
+
+/// A complete multi-thread workload.
+pub struct Program {
+    pub threads: Vec<Vec<Op>>,
+    pub num_slots: u32,
+    pub num_events: u32,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ProgramError {
+    #[error("thread {thread} op {op}: slot {slot} out of range ({num_slots})")]
+    SlotRange {
+        thread: usize,
+        op: usize,
+        slot: u32,
+        num_slots: u32,
+    },
+    #[error("thread {thread} op {op}: event {event} out of range ({num_events})")]
+    EventRange {
+        thread: usize,
+        op: usize,
+        event: u32,
+        num_events: u32,
+    },
+    #[error("event {0} signalled more than once")]
+    DoubleSignal(u32),
+}
+
+impl Program {
+    pub fn new(threads: Vec<Vec<Op>>, num_slots: u32, num_events: u32) -> Self {
+        Program {
+            threads,
+            num_slots,
+            num_events,
+        }
+    }
+
+    pub fn from_builders(builders: Vec<TraceBuilder>, num_slots: u32, num_events: u32) -> Self {
+        Program::new(
+            builders.into_iter().map(|b| b.into_ops()).collect(),
+            num_slots,
+            num_events,
+        )
+    }
+
+    /// Static validation: slot/event indices in range, events signalled at
+    /// most once (the engine's Wait assumes single-shot events).
+    pub fn validate(&self) -> Result<(), ProgramError> {
+        let mut signals = vec![0u32; self.num_events as usize];
+        for (t, ops) in self.threads.iter().enumerate() {
+            for (i, op) in ops.iter().enumerate() {
+                let check_loc = |loc: &Loc| -> Option<u32> {
+                    match loc {
+                        Loc::Slot { slot, .. } if *slot >= self.num_slots => Some(*slot),
+                        _ => None,
+                    }
+                };
+                let bad_slot = match op {
+                    Op::Read { loc, .. } | Op::Write { loc, .. } => check_loc(loc),
+                    Op::Copy { src, dst, .. } => check_loc(src).or(check_loc(dst)),
+                    Op::Alloc { slot, .. } | Op::Free { slot } if *slot >= self.num_slots => {
+                        Some(*slot)
+                    }
+                    _ => None,
+                };
+                if let Some(slot) = bad_slot {
+                    return Err(ProgramError::SlotRange {
+                        thread: t,
+                        op: i,
+                        slot,
+                        num_slots: self.num_slots,
+                    });
+                }
+                match op {
+                    Op::Signal { event } | Op::Wait { event } => {
+                        if *event >= self.num_events {
+                            return Err(ProgramError::EventRange {
+                                thread: t,
+                                op: i,
+                                event: *event,
+                                num_events: self.num_events,
+                            });
+                        }
+                        if let Op::Signal { event } = op {
+                            signals[*event as usize] += 1;
+                            if signals[*event as usize] > 1 {
+                                return Err(ProgramError::DoubleSignal(*event));
+                            }
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Total bytes moved by Read/Write/Copy ops (for traffic reports).
+    pub fn traffic_bytes(&self) -> u64 {
+        self.threads
+            .iter()
+            .flatten()
+            .map(|op| match op {
+                Op::Read { bytes, .. } | Op::Write { bytes, .. } => *bytes,
+                Op::Copy { bytes, .. } => 2 * bytes,
+                _ => 0,
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_collects_ops_in_order() {
+        let mut b = TraceBuilder::new();
+        b.alloc(0, 64, AllocKind::Heap)
+            .write(Loc::Slot { slot: 0, offset: 0 }, 64)
+            .free(0)
+            .signal(0);
+        assert_eq!(b.ops().len(), 4);
+        assert!(matches!(b.ops()[0], Op::Alloc { .. }));
+        assert!(matches!(b.ops()[3], Op::Signal { .. }));
+    }
+
+    #[test]
+    fn zero_byte_ops_elided() {
+        let mut b = TraceBuilder::new();
+        b.read(Loc::Abs(VAddr(0)), 0).compute(0);
+        assert!(b.ops().is_empty());
+    }
+
+    #[test]
+    fn loc_offset_arithmetic() {
+        assert_eq!(Loc::Abs(VAddr(100)).offset(28), Loc::Abs(VAddr(128)));
+        assert_eq!(
+            Loc::Slot { slot: 2, offset: 8 }.offset(8),
+            Loc::Slot { slot: 2, offset: 16 }
+        );
+    }
+
+    #[test]
+    fn validate_accepts_well_formed() {
+        let mut b = TraceBuilder::new();
+        b.alloc(0, 64, AllocKind::Heap).signal(0);
+        let mut b2 = TraceBuilder::new();
+        b2.wait(0).read(Loc::Slot { slot: 0, offset: 0 }, 64);
+        let p = Program::from_builders(vec![b, b2], 1, 1);
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_bad_slot() {
+        let mut b = TraceBuilder::new();
+        b.read(Loc::Slot { slot: 9, offset: 0 }, 64);
+        let p = Program::from_builders(vec![b], 1, 0);
+        assert!(matches!(p.validate(), Err(ProgramError::SlotRange { .. })));
+    }
+
+    #[test]
+    fn validate_rejects_bad_event() {
+        let mut b = TraceBuilder::new();
+        b.wait(3);
+        let p = Program::from_builders(vec![b], 0, 1);
+        assert!(matches!(p.validate(), Err(ProgramError::EventRange { .. })));
+    }
+
+    #[test]
+    fn validate_rejects_double_signal() {
+        let mut b = TraceBuilder::new();
+        b.signal(0).signal(0);
+        let p = Program::from_builders(vec![b], 0, 1);
+        assert!(matches!(p.validate(), Err(ProgramError::DoubleSignal(0))));
+    }
+
+    #[test]
+    fn traffic_counts_copy_twice() {
+        let mut b = TraceBuilder::new();
+        b.read(Loc::Abs(VAddr(0)), 100)
+            .copy(Loc::Abs(VAddr(0)), Loc::Abs(VAddr(4096)), 50);
+        let p = Program::from_builders(vec![b], 0, 0);
+        assert_eq!(p.traffic_bytes(), 200);
+    }
+}

@@ -1,0 +1,193 @@
+//! Tiny CLI argument parser (no clap in the offline environment).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+//! Unknown flags are an error so typos in experiment sweeps fail loudly
+//! instead of silently running the wrong configuration.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown flag --{0}")]
+    UnknownFlag(String),
+    #[error("flag --{0} expects a value")]
+    MissingValue(String),
+    #[error("invalid value for --{0}: {1}")]
+    BadValue(String, String),
+}
+
+/// Declarative spec: flag names that take values vs boolean switches.
+pub struct Args {
+    values: BTreeMap<String, String>,
+    switches: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv` (without the program name). `value_flags` lists flags
+    /// that consume a value; `bool_flags` are presence-only switches.
+    pub fn parse(
+        argv: &[String],
+        value_flags: &[&str],
+        bool_flags: &[&str],
+    ) -> Result<Args, CliError> {
+        let mut values = BTreeMap::new();
+        let mut switches = Vec::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let arg = &argv[i];
+            if let Some(stripped) = arg.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                if bool_flags.contains(&name.as_str()) {
+                    if inline.is_some() {
+                        return Err(CliError::BadValue(name, "switch takes no value".into()));
+                    }
+                    switches.push(name);
+                } else if value_flags.contains(&name.as_str()) {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError::MissingValue(name.clone()))?
+                        }
+                    };
+                    values.insert(name, v);
+                } else {
+                    return Err(CliError::UnknownFlag(name));
+                }
+            } else {
+                positional.push(arg.clone());
+            }
+            i += 1;
+        }
+        Ok(Args {
+            values,
+            switches,
+            positional,
+        })
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize(&self, name: &str, default: usize) -> Result<usize, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => parse_usize(v)
+                .ok_or_else(|| CliError::BadValue(name.to_string(), v.to_string())),
+        }
+    }
+
+    pub fn u64(&self, name: &str, default: u64) -> Result<u64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError::BadValue(name.to_string(), v.to_string())),
+        }
+    }
+
+    pub fn f64(&self, name: &str, default: f64) -> Result<f64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError::BadValue(name.to_string(), v.to_string())),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+/// Accepts plain integers plus `k`/`m`/`g` suffixes (binary-ish decimal:
+/// 1k = 1000) and `ki`/`mi` (1024-based), e.g. `--size 100m`.
+pub fn parse_usize(s: &str) -> Option<usize> {
+    let lower = s.to_ascii_lowercase();
+    let (digits, mult): (&str, usize) = if let Some(d) = lower.strip_suffix("ki") {
+        (d, 1 << 10)
+    } else if let Some(d) = lower.strip_suffix("mi") {
+        (d, 1 << 20)
+    } else if let Some(d) = lower.strip_suffix("gi") {
+        (d, 1 << 30)
+    } else if let Some(d) = lower.strip_suffix('k') {
+        (d, 1_000)
+    } else if let Some(d) = lower.strip_suffix('m') {
+        (d, 1_000_000)
+    } else if let Some(d) = lower.strip_suffix('g') {
+        (d, 1_000_000_000)
+    } else {
+        (lower.as_str(), 1)
+    };
+    digits.parse::<usize>().ok().map(|n| n * mult)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|w| w.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_values_and_switches() {
+        let a = Args::parse(
+            &argv("--size 100m --json --threads=32 run"),
+            &["size", "threads"],
+            &["json"],
+        )
+        .unwrap();
+        assert_eq!(a.usize("size", 0).unwrap(), 100_000_000);
+        assert_eq!(a.usize("threads", 0).unwrap(), 32);
+        assert!(a.flag("json"));
+        assert_eq!(a.positional(), &["run".to_string()]);
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        assert!(Args::parse(&argv("--nope"), &[], &[]).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(&argv("--size"), &["size"], &[]).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&argv(""), &["size"], &[]).unwrap();
+        assert_eq!(a.usize("size", 7).unwrap(), 7);
+        assert_eq!(a.get_or("size", "x"), "x");
+    }
+
+    #[test]
+    fn size_suffixes() {
+        assert_eq!(parse_usize("64ki"), Some(65536));
+        assert_eq!(parse_usize("1m"), Some(1_000_000));
+        assert_eq!(parse_usize("12"), Some(12));
+        assert_eq!(parse_usize("bad"), None);
+    }
+
+    #[test]
+    fn bad_numeric_value_errors() {
+        let a = Args::parse(&argv("--size nope"), &["size"], &[]).unwrap();
+        assert!(a.usize("size", 0).is_err());
+    }
+}

@@ -1,0 +1,7 @@
+//! Shared utilities built from scratch for the offline environment:
+//! deterministic PRNG, JSON, CLI parsing, and a property-test driver.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;

@@ -1,0 +1,125 @@
+//! Lightweight property-testing driver (no proptest in the offline env).
+//!
+//! `check` runs a property over many seeded random cases and, on failure,
+//! reports the seed so the case replays deterministically:
+//!
+//! ```ignore
+//! prop::check("sorted output", 256, |rng| {
+//!     let xs = rng.i32_vec(rng.below(100) as usize);
+//!     let ys = sort(&xs);
+//!     prop::assert_holds(is_sorted(&ys), "not sorted")
+//! });
+//! ```
+//!
+//! No shrinking — cases are generated small-biased instead (sizes drawn from
+//! a distribution weighted toward edge sizes 0/1/2), which in practice keeps
+//! counterexamples readable.
+
+use crate::util::rng::Rng;
+
+pub type PropResult = Result<(), String>;
+
+pub fn assert_holds(cond: bool, msg: &str) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.to_string())
+    }
+}
+
+pub fn assert_eq_dbg<T: PartialEq + std::fmt::Debug>(a: T, b: T, what: &str) -> PropResult {
+    if a == b {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a:?} != {b:?}"))
+    }
+}
+
+/// Run `cases` seeded random trials of `prop`. Panics (test failure) with
+/// the failing seed embedded in the message.
+pub fn check<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> PropResult,
+{
+    // Base seed can be pinned via TILESIM_PROP_SEED to replay a failure.
+    let base = std::env::var("TILESIM_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE_u64);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case} (replay with TILESIM_PROP_SEED={base}, \
+                 case seed {seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Size generator biased toward edge cases: 0, 1, 2 appear often; the rest
+/// is log-uniform up to `max`.
+pub fn size_biased(rng: &mut Rng, max: usize) -> usize {
+    match rng.below(8) {
+        0 => 0,
+        1 => 1,
+        2 => 2,
+        3 => max,
+        _ => {
+            if max < 2 {
+                return max;
+            }
+            let bits = 64 - (max as u64).leading_zeros() as u64;
+            let b = rng.below(bits) + 1;
+            (rng.below((1u64 << b).min(max as u64)) as usize).min(max)
+        }
+    }
+}
+
+/// Power-of-two size up to `max` (the bitonic/merge workloads need these).
+pub fn pow2_biased(rng: &mut Rng, max_log2: u32) -> usize {
+    1usize << rng.below(max_log2 as u64 + 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        check("tautology", 50, |_| Ok(()));
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'contradiction' failed")]
+    fn failing_property_panics_with_seed() {
+        check("contradiction", 5, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn size_biased_in_range() {
+        let mut rng = Rng::new(1);
+        for _ in 0..1000 {
+            assert!(size_biased(&mut rng, 100) <= 100);
+        }
+    }
+
+    #[test]
+    fn size_biased_hits_edges() {
+        let mut rng = Rng::new(2);
+        let sizes: Vec<usize> = (0..200).map(|_| size_biased(&mut rng, 50)).collect();
+        assert!(sizes.contains(&0));
+        assert!(sizes.contains(&1));
+        assert!(sizes.contains(&50));
+    }
+
+    #[test]
+    fn pow2_is_power_of_two() {
+        let mut rng = Rng::new(3);
+        for _ in 0..100 {
+            let n = pow2_biased(&mut rng, 10);
+            assert!(n.is_power_of_two() && n <= 1024);
+        }
+    }
+}

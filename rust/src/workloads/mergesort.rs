@@ -1,0 +1,385 @@
+//! Parallel recursive merge sort (Algorithms 3 & 4, Figs. 2–4).
+//!
+//! The trace generator mirrors the paper's OpenMP nested-sections recursion
+//! exactly: `threads` splits into `threads/2` + `threads − threads/2`
+//! subtrees over the two array halves; each leaf runs the serial merge sort
+//! on its chunk; each internal node's merge runs on the subtree's leftmost
+//! thread after joining the right subtree (a Wait on its completion event).
+//!
+//! Three variants:
+//! - `NonLocalised` — Algorithm 3: leaves sort slices of the shared
+//!   `array0` using slices of the shared `scratch0`, merges write `scratch0`
+//!   then memcpy back into `array0`.
+//! - `NonLocalisedIntermediate` — Algorithm 3 + only the *intermediate
+//!   step* of Algorithm 4 (§5.2): merges allocate a fresh `ext_scr` and skip
+//!   the copy-back; leaf sorting is unchanged.
+//! - `Localised` — Algorithm 4: each leaf copies its chunk into a fresh
+//!   local array (`input_cpy`, re-homed by first touch) and sorts there
+//!   with a local scratch; merges allocate `ext_scr` and free their inputs
+//!   at the next level (Algorithm 1 step 5).
+
+use crate::arch::{LatencyParams, TileId};
+use crate::mem::AllocKind;
+use crate::sim::{Engine, Loc, Program, TraceBuilder};
+
+pub const ELEM_BYTES: u64 = 4;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variant {
+    NonLocalised,
+    NonLocalisedIntermediate,
+    Localised,
+}
+
+impl Variant {
+    pub fn label(self) -> &'static str {
+        match self {
+            Variant::NonLocalised => "non-localised",
+            Variant::NonLocalisedIntermediate => "non-localised+interm",
+            Variant::Localised => "localised",
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct MergesortConfig {
+    /// Elements to sort (paper: up to 100 M).
+    pub elems: u64,
+    /// Leaf threads (paper: 1..64).
+    pub threads: usize,
+    pub variant: Variant,
+}
+
+/// Result location of a subtree sort (where the sorted run lives).
+#[derive(Clone, Copy)]
+struct SortedRun {
+    loc: Loc,
+    /// Slot to free once consumed by the parent merge (localised variants).
+    slot: Option<u32>,
+    bytes: u64,
+}
+
+struct Builder<'a> {
+    traces: Vec<TraceBuilder>,
+    next_slot: u32,
+    next_event: u32,
+    array0: Loc,
+    scratch0: Loc,
+    variant: Variant,
+    compute_per_elem: u64,
+    _engine: &'a Engine,
+}
+
+impl<'a> Builder<'a> {
+    fn slot(&mut self) -> u32 {
+        let s = self.next_slot;
+        self.next_slot += 1;
+        s
+    }
+
+    fn event(&mut self) -> u32 {
+        let e = self.next_event;
+        self.next_event += 1;
+        e
+    }
+
+    /// Emit the *depth-first* serial merge-sort recursion over
+    /// `[input, input+elems)` with `scratch` as the auxiliary array
+    /// (`mergesort_serial`). Depth-first order is what gives real merge
+    /// sort its cache behaviour — small subranges are sorted completely
+    /// (staying resident in whatever cache level can hold them) before the
+    /// recursion moves on; only the top levels stream the whole chunk.
+    /// Below `SERIAL_BASE` elements the subrange fits L1 many times over,
+    /// so we emit one materialisation pass plus the equivalent ALU+L1 work.
+    fn serial_sort(&mut self, tid: usize, input: Loc, scratch: Loc, elems: u64) {
+        const SERIAL_BASE: u64 = 256;
+        let bytes = elems * ELEM_BYTES;
+        if elems <= SERIAL_BASE {
+            let levels = 64 - (elems.max(2) - 1).leading_zeros() as u64; // ceil(log2)
+            let t = &mut self.traces[tid];
+            t.read(input, bytes)
+                .write(scratch, bytes)
+                .copy(scratch, input, bytes)
+                // Remaining levels run inside L1: 1 compare + ~2cy L1 access
+                // per element per level.
+                .compute(levels * elems * (self.compute_per_elem + 2));
+            return;
+        }
+        let half = elems / 2;
+        self.serial_sort(tid, input, scratch, half);
+        self.serial_sort(
+            tid,
+            input.offset(half * ELEM_BYTES),
+            scratch.offset(half * ELEM_BYTES),
+            elems - half,
+        );
+        // Merge the two sorted halves: read both, write scratch, copy back.
+        let t = &mut self.traces[tid];
+        t.read(input, bytes)
+            .compute(elems * self.compute_per_elem)
+            .write(scratch, bytes)
+            .copy(scratch, input, bytes);
+    }
+
+    /// Leaf of the parallel recursion: serial-sort this thread's chunk.
+    fn leaf(&mut self, tid: usize, off: u64, elems: u64) -> SortedRun {
+        let bytes = elems * ELEM_BYTES;
+        match self.variant {
+            Variant::NonLocalised | Variant::NonLocalisedIntermediate => {
+                let input = self.array0.offset(off * ELEM_BYTES);
+                let scratch = self.scratch0.offset(off * ELEM_BYTES);
+                self.serial_sort(tid, input, scratch, elems);
+                SortedRun {
+                    loc: input,
+                    slot: None,
+                    bytes,
+                }
+            }
+            Variant::Localised => {
+                // int* input_cpy = new int[size]; memcpy(...); sort it
+                // against a local scratch; return input_cpy (freed by the
+                // parent merge).
+                let cpy = self.slot();
+                let scr = self.slot();
+                let input = self.array0.offset(off * ELEM_BYTES);
+                let cpy_loc = Loc::Slot { slot: cpy, offset: 0 };
+                let scr_loc = Loc::Slot { slot: scr, offset: 0 };
+                {
+                    let t = &mut self.traces[tid];
+                    t.alloc(cpy, bytes, AllocKind::Heap)
+                        .copy(input, cpy_loc, bytes)
+                        .alloc(scr, bytes, AllocKind::Heap);
+                }
+                self.serial_sort(tid, cpy_loc, scr_loc, elems);
+                self.traces[tid].free(scr);
+                SortedRun {
+                    loc: cpy_loc,
+                    slot: Some(cpy),
+                    bytes,
+                }
+            }
+        }
+    }
+
+    /// Merge two sorted runs on thread `tid` (`merge`). `off` is the
+    /// element offset of the pair in the original array (for the shared
+    /// scratch slice of the non-localised variant).
+    fn merge(&mut self, tid: usize, off: u64, left: SortedRun, right: SortedRun) -> SortedRun {
+        let bytes = left.bytes + right.bytes;
+        let elems = bytes / ELEM_BYTES;
+        let compute = elems * self.compute_per_elem;
+        match self.variant {
+            Variant::NonLocalised => {
+                // merge(): read both halves, write the shared scratch, then
+                // memcpy(input1, scratch, ...) back.
+                let scratch = self.scratch0.offset(off * ELEM_BYTES);
+                let dst = left.loc;
+                let t = &mut self.traces[tid];
+                t.read(left.loc, left.bytes)
+                    .read(right.loc, right.bytes)
+                    .compute(compute)
+                    .write(scratch, bytes)
+                    .copy(scratch, dst, bytes);
+                SortedRun {
+                    loc: dst,
+                    slot: None,
+                    bytes,
+                }
+            }
+            Variant::NonLocalisedIntermediate | Variant::Localised => {
+                // Intermediate step: int* ext_scr = new int[sz1+sz2]; merge
+                // into it; free the previous level's arrays; return ext_scr.
+                let ext = self.slot();
+                let ext_loc = Loc::Slot { slot: ext, offset: 0 };
+                let t = &mut self.traces[tid];
+                t.alloc(ext, bytes, AllocKind::Heap)
+                    .read(left.loc, left.bytes)
+                    .read(right.loc, right.bytes)
+                    .compute(compute)
+                    .write(ext_loc, bytes);
+                if let Some(s) = left.slot {
+                    t.free(s);
+                }
+                if let Some(s) = right.slot {
+                    t.free(s);
+                }
+                SortedRun {
+                    loc: ext_loc,
+                    slot: Some(ext),
+                    bytes,
+                }
+            }
+        }
+    }
+
+    /// `mergesort_parallel_omp`: recurse over `[off, off+elems)` with
+    /// `threads` leaf threads starting at `tid_lo`. Returns the sorted run.
+    fn node(&mut self, tid_lo: usize, threads: usize, off: u64, elems: u64) -> SortedRun {
+        if threads == 1 {
+            return self.leaf(tid_lo, off, elems);
+        }
+        let lt = threads / 2;
+        let rt = threads - lt;
+        let le = elems / 2;
+        let re = elems - le;
+        // Left subtree continues on this thread; right subtree's leftmost
+        // thread signals its completion.
+        let left = self.node(tid_lo, lt, off, le);
+        let right = self.node(tid_lo + lt, rt, off + le, re);
+        let ev = self.event();
+        self.traces[tid_lo + lt].signal(ev);
+        self.traces[tid_lo].wait(ev);
+        self.merge(tid_lo, off, left, right)
+    }
+}
+
+/// Build the merge-sort program against `engine`'s memory system.
+///
+/// `array0` is initialised by `main` on tile 0 (first-touch strands it
+/// there under `ucache_hash=none`); `scratch0` is allocated but *not*
+/// initialised, so its pages fault in from whichever worker touches them
+/// first — exactly the Linux behaviour the paper's cases inherit.
+pub fn build(engine: &mut Engine, cfg: &MergesortConfig) -> Program {
+    assert!(cfg.threads >= 1);
+    assert!(cfg.elems >= cfg.threads as u64 * 2, "chunks must be non-trivial");
+    let bytes = cfg.elems * ELEM_BYTES;
+    let array0 = engine.prealloc_touched(TileId(0), bytes);
+    let scratch0 = engine.prealloc(TileId(0), bytes);
+
+    let params: &LatencyParams = engine.params();
+    let mut b = Builder {
+        traces: vec![TraceBuilder::new(); cfg.threads],
+        next_slot: 0,
+        next_event: 0,
+        array0: Loc::Abs(array0.addr),
+        scratch0: Loc::Abs(scratch0.addr),
+        variant: cfg.variant,
+        compute_per_elem: params.compute_per_elem,
+        _engine: engine,
+    };
+    let root = b.node(0, cfg.threads, 0, cfg.elems);
+    // main(): the caller takes ownership of the result; the localised
+    // variants' final ext_scr stays live (swapped into array0 in the C++).
+    let _ = root;
+    let (slots, events) = (b.next_slot, b.next_event);
+    Program::from_builders(b.traces, slots.max(1), events.max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::{HashPolicy, MemConfig};
+    use crate::sched::StaticMapper;
+    use crate::sim::EngineConfig;
+
+    fn engine(policy: HashPolicy) -> Engine {
+        Engine::new(EngineConfig::tilepro64(MemConfig {
+            hash_policy: policy,
+            striping: true,
+        }))
+    }
+
+    fn run(policy: HashPolicy, variant: Variant, elems: u64, threads: usize) -> crate::sim::RunStats {
+        let mut e = engine(policy);
+        let p = build(
+            &mut e,
+            &MergesortConfig {
+                elems,
+                threads,
+                variant,
+            },
+        );
+        p.validate().unwrap();
+        e.run(&p, &mut StaticMapper::new()).unwrap()
+    }
+
+    #[test]
+    fn all_variants_build_and_run() {
+        for v in [
+            Variant::NonLocalised,
+            Variant::NonLocalisedIntermediate,
+            Variant::Localised,
+        ] {
+            let stats = run(HashPolicy::AllButStack, v, 1 << 14, 4);
+            assert!(stats.makespan_cycles > 0, "{v:?}");
+            assert!(stats.line_accesses > 0, "{v:?}");
+        }
+    }
+
+    #[test]
+    fn odd_thread_counts_supported() {
+        for t in [1usize, 3, 5, 7] {
+            let stats = run(HashPolicy::AllButStack, Variant::NonLocalised, 1 << 12, t);
+            assert!(stats.makespan_cycles > 0, "threads={t}");
+        }
+    }
+
+    #[test]
+    fn parallel_is_faster_than_serial() {
+        let s1 = run(HashPolicy::AllButStack, Variant::NonLocalised, 1 << 16, 1);
+        let s16 = run(HashPolicy::AllButStack, Variant::NonLocalised, 1 << 16, 16);
+        assert!(
+            s16.makespan_cycles * 2 < s1.makespan_cycles,
+            "16 threads {} vs 1 thread {}",
+            s16.makespan_cycles,
+            s1.makespan_cycles
+        );
+    }
+
+    #[test]
+    fn localised_wins_under_local_homing() {
+        // Fig. 2's Case 8 vs Case 4 essence (both static-mapped, hash=none).
+        let non_loc = run(HashPolicy::None, Variant::NonLocalised, 1 << 16, 16);
+        let loc = run(HashPolicy::None, Variant::Localised, 1 << 16, 16);
+        assert!(
+            loc.makespan_cycles < non_loc.makespan_cycles,
+            "localised {} vs non-localised {}",
+            loc.makespan_cycles,
+            non_loc.makespan_cycles
+        );
+    }
+
+    #[test]
+    fn localised_competitive_under_hash() {
+        let non_loc = run(HashPolicy::AllButStack, Variant::NonLocalised, 1 << 16, 16);
+        let loc = run(HashPolicy::AllButStack, Variant::Localised, 1 << 16, 16);
+        let ratio = loc.makespan_cycles as f64 / non_loc.makespan_cycles as f64;
+        assert!(ratio < 1.25, "localised under hash ratio {ratio}");
+    }
+
+    #[test]
+    fn intermediate_step_reduces_traffic() {
+        // Skipping the copy-back must strictly reduce line accesses.
+        let plain = run(HashPolicy::AllButStack, Variant::NonLocalised, 1 << 15, 8);
+        let interm = run(
+            HashPolicy::AllButStack,
+            Variant::NonLocalisedIntermediate,
+            1 << 15,
+            8,
+        );
+        assert!(interm.line_accesses < plain.line_accesses);
+    }
+
+    #[test]
+    fn localised_frees_everything_but_root() {
+        let stats = run(HashPolicy::None, Variant::Localised, 1 << 14, 8);
+        // 8 leaves × (cpy + scr) + 7 merges × ext = 23 allocs (+2 preallocs);
+        // everything freed except the root ext_scr.
+        assert_eq!(stats.allocs, 2 + 23);
+        assert_eq!(stats.frees, 22);
+    }
+
+    #[test]
+    fn reduction_tree_events_match_internal_nodes() {
+        let mut e = engine(HashPolicy::None);
+        let p = build(
+            &mut e,
+            &MergesortConfig {
+                elems: 1 << 12,
+                threads: 8,
+                variant: Variant::NonLocalised,
+            },
+        );
+        assert_eq!(p.num_events, 7, "8 leaves -> 7 internal joins");
+    }
+}

@@ -1,0 +1,195 @@
+//! The paper's micro-benchmark (Algorithm 2, Fig. 1).
+//!
+//! Two arrays of 1 M integers; each of 63 threads repeatedly copies its
+//! part of the input to the corresponding part of the output. The
+//! *localised* variant first copies its input part into a freshly
+//! allocated local array (re-homing it on the worker's tile under
+//! `ucache_hash=none`) and streams from that copy instead.
+
+use crate::arch::TileId;
+use crate::mem::AllocKind;
+use crate::sim::{Engine, Loc, Program, TraceBuilder};
+
+pub const ELEM_BYTES: u64 = 4;
+
+#[derive(Clone, Copy, Debug)]
+pub struct MicrobenchConfig {
+    /// Array length in elements (paper: 1_000_000).
+    pub elems: u64,
+    /// Worker threads (paper: 63).
+    pub threads: usize,
+    /// Copy repetitions per thread (Fig. 1's x-axis).
+    pub reps: u32,
+    /// Algorithm 2's two variants.
+    pub localised: bool,
+}
+
+impl Default for MicrobenchConfig {
+    fn default() -> Self {
+        MicrobenchConfig {
+            elems: 1_000_000,
+            threads: 63,
+            reps: 16,
+            localised: false,
+        }
+    }
+}
+
+/// Element range `[start, end)` of thread `i` out of `m` (paper: each part
+/// is `input_size / num_threads`, remainder to the last thread).
+pub fn part_bounds(elems: u64, threads: usize, i: usize) -> (u64, u64) {
+    let m = threads as u64;
+    let base = elems / m;
+    let start = base * i as u64;
+    let end = if i + 1 == threads { elems } else { start + base };
+    (start, end)
+}
+
+/// Build the micro-benchmark program against `engine`'s memory system.
+///
+/// The input array is initialised by `main` (tile 0) — under first-touch
+/// that strands it on tile 0; the output array is only ever touched by the
+/// workers. This matches the C++: `main` fills `input`, workers fill
+/// `output`.
+pub fn build(engine: &mut Engine, cfg: &MicrobenchConfig) -> Program {
+    assert!(cfg.threads >= 1 && cfg.elems >= cfg.threads as u64);
+    let input = engine.prealloc_touched(TileId(0), cfg.elems * ELEM_BYTES);
+    let output = engine.prealloc(TileId(0), cfg.elems * ELEM_BYTES);
+
+    let mut builders = Vec::with_capacity(cfg.threads);
+    for i in 0..cfg.threads {
+        let (start, end) = part_bounds(cfg.elems, cfg.threads, i);
+        let bytes = (end - start) * ELEM_BYTES;
+        let in_part = Loc::Abs(input.addr.offset(start * ELEM_BYTES));
+        let out_part = Loc::Abs(output.addr.offset(start * ELEM_BYTES));
+        let mut b = TraceBuilder::new();
+        if cfg.localised {
+            // ---- Algorithm 2, localised: ----
+            // int* input_cpy = new int[size];
+            // memcpy(input_cpy, input1, size*sizeof(int));
+            // repetitive_copy(input_cpy, output, size);
+            // free(input_cpy);
+            let slot = i as u32;
+            b.alloc(slot, bytes, AllocKind::Heap);
+            b.copy(in_part, Loc::Slot { slot, offset: 0 }, bytes);
+            for _ in 0..cfg.reps {
+                b.copy(Loc::Slot { slot, offset: 0 }, out_part, bytes);
+            }
+            b.free(slot);
+        } else {
+            // ---- Algorithm 2, non-localised: repetitive_copy(input1, output, size);
+            for _ in 0..cfg.reps {
+                b.copy(in_part, out_part, bytes);
+            }
+        }
+        builders.push(b);
+    }
+    Program::from_builders(builders, cfg.threads as u32, 0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::{HashPolicy, MemConfig};
+    use crate::sched::StaticMapper;
+    use crate::sim::EngineConfig;
+
+    fn engine(policy: HashPolicy) -> Engine {
+        Engine::new(EngineConfig::tilepro64(MemConfig {
+            hash_policy: policy,
+            striping: true,
+        }))
+    }
+
+    fn cfg(localised: bool, reps: u32) -> MicrobenchConfig {
+        MicrobenchConfig {
+            elems: 64 * 1024, // keep unit tests fast
+            threads: 16,
+            reps,
+            localised,
+        }
+    }
+
+    #[test]
+    fn part_bounds_cover_exactly() {
+        let (elems, threads) = (1_000_000u64, 63usize);
+        let mut covered = 0;
+        for i in 0..threads {
+            let (s, e) = part_bounds(elems, threads, i);
+            assert!(e > s);
+            assert_eq!(s, covered);
+            covered = e;
+        }
+        assert_eq!(covered, elems);
+    }
+
+    #[test]
+    fn program_validates_both_variants() {
+        for localised in [false, true] {
+            let mut e = engine(HashPolicy::None);
+            let p = build(&mut e, &cfg(localised, 3));
+            p.validate().unwrap();
+            assert_eq!(p.threads.len(), 16);
+        }
+    }
+
+    #[test]
+    fn localised_variant_allocates_and_frees() {
+        let mut e = engine(HashPolicy::None);
+        let p = build(&mut e, &cfg(true, 2));
+        let stats = e.run(&p, &mut StaticMapper::new()).unwrap();
+        assert_eq!(stats.allocs, 2 + 16); // input+output preallocs + 16 copies
+        assert_eq!(stats.frees, 16);
+    }
+
+    #[test]
+    fn localised_beats_non_localised_under_local_homing() {
+        // The paper's headline (Fig. 1): with hash disabled and enough
+        // repetitions, localisation wins clearly.
+        let mut e1 = engine(HashPolicy::None);
+        let p1 = build(&mut e1, &cfg(false, 16));
+        let non_loc = e1.run(&p1, &mut StaticMapper::new()).unwrap();
+
+        let mut e2 = engine(HashPolicy::None);
+        let p2 = build(&mut e2, &cfg(true, 16));
+        let loc = e2.run(&p2, &mut StaticMapper::new()).unwrap();
+
+        assert!(
+            loc.makespan_cycles * 2 < non_loc.makespan_cycles,
+            "localised {} vs non-localised {}",
+            loc.makespan_cycles,
+            non_loc.makespan_cycles
+        );
+    }
+
+    #[test]
+    fn localisation_neutral_under_hash_for_home() {
+        // Paper §5: localisation "does not lose the competition" under
+        // hash-for-home (within copy-overhead slack).
+        let mut e1 = engine(HashPolicy::AllButStack);
+        let p1 = build(&mut e1, &cfg(false, 16));
+        let non_loc = e1.run(&p1, &mut StaticMapper::new()).unwrap();
+
+        let mut e2 = engine(HashPolicy::AllButStack);
+        let p2 = build(&mut e2, &cfg(true, 16));
+        let loc = e2.run(&p2, &mut StaticMapper::new()).unwrap();
+
+        let ratio = loc.makespan_cycles as f64 / non_loc.makespan_cycles as f64;
+        assert!(ratio < 1.3, "localised must not lose badly under hash: {ratio}");
+    }
+
+    #[test]
+    fn single_rep_favours_non_localised() {
+        // Fig. 1 at very low repetition counts: the copy isn't amortised.
+        let mut e1 = engine(HashPolicy::None);
+        let p1 = build(&mut e1, &cfg(false, 1));
+        let non_loc = e1.run(&p1, &mut StaticMapper::new()).unwrap();
+
+        let mut e2 = engine(HashPolicy::None);
+        let p2 = build(&mut e2, &cfg(true, 1));
+        let loc = e2.run(&p2, &mut StaticMapper::new()).unwrap();
+
+        // The localised run does strictly more memory work at reps=1.
+        assert!(loc.line_accesses > non_loc.line_accesses);
+    }
+}

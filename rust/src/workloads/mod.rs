@@ -1,0 +1,9 @@
+//! The paper's workloads as trace generators: the micro-benchmark
+//! (Algorithm 2), parallel merge sort (Algorithms 3/4), the radix-sort
+//! comparison baseline (related work [3]), and additional array kernels
+//! expressed through the generic localisation API.
+
+pub mod array_kernels;
+pub mod mergesort;
+pub mod microbench;
+pub mod radix;

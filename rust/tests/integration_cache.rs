@@ -1,0 +1,158 @@
+//! Integration: DDC cache system + coherence over realistic access mixes.
+
+use tilesim::arch::{CacheGeometry, TileId};
+use tilesim::cache::{CacheSystem, ReadPlace, WriteLevel};
+use tilesim::mem::{Homing, LineId};
+
+fn sys() -> CacheSystem {
+    CacheSystem::new(&CacheGeometry::TILEPRO64)
+}
+
+#[test]
+fn distributed_l3_is_union_of_l2s() {
+    // A 2 MB hash-homed array can't fit one L2 but fits the union: after a
+    // full streaming pass by one reader, a second reader's misses are
+    // mostly Home hits, not DDR.
+    let mut s = sys();
+    let homing = Homing::HashForHome;
+    let lines = (2u64 << 20) / 64;
+    for l in 0..lines {
+        let line = LineId(l);
+        let home = homing.home_of(line).unwrap();
+        s.read(TileId(0), line, home);
+    }
+    let mut home_hits = 0;
+    let mut ddr = 0;
+    for l in 0..lines {
+        let line = LineId(l);
+        let home = homing.home_of(line).unwrap();
+        match s.read(TileId(1), line, home) {
+            ReadPlace::Home { .. } => home_hits += 1,
+            ReadPlace::Ddr { .. } => ddr += 1,
+            _ => {}
+        }
+    }
+    assert!(
+        home_hits > ddr * 5,
+        "union L3 should serve the re-read: {home_hits} home vs {ddr} ddr"
+    );
+}
+
+#[test]
+fn single_home_tile_cannot_hold_large_array() {
+    // Same 2 MB array homed on ONE tile: the second reader mostly misses
+    // to DDR — the case 2 disaster in cache terms.
+    let mut s = sys();
+    let home = TileId(0);
+    let lines = (2u64 << 20) / 64;
+    for l in 0..lines {
+        s.read(TileId(0), LineId(l), home);
+    }
+    let mut home_hits = 0u64;
+    let mut ddr = 0u64;
+    for l in 0..lines {
+        match s.read(TileId(1), LineId(l), home) {
+            ReadPlace::Home { .. } => home_hits += 1,
+            ReadPlace::Ddr { .. } => ddr += 1,
+            _ => {}
+        }
+    }
+    assert!(
+        ddr > home_hits * 5,
+        "single 64 KB home can't hold 2 MB: {home_hits} home vs {ddr} ddr"
+    );
+}
+
+#[test]
+fn remote_reader_does_not_pollute_its_l2() {
+    let mut s = sys();
+    let home = TileId(9);
+    for l in 0..1000 {
+        s.read(TileId(0), LineId(l), home);
+    }
+    assert_eq!(
+        s.tile(TileId(0)).l2.resident_lines(),
+        0,
+        "remote lines must not allocate in the reader's L2"
+    );
+    assert!(s.tile(TileId(0)).l1.resident_lines() > 0);
+    assert!(s.tile(home).l2.resident_lines() > 0, "home L2 caches them");
+}
+
+#[test]
+fn producer_consumer_coherence() {
+    // Producer writes lines homed on itself; consumer reads them (home
+    // hits); producer overwrites; consumer must see invalidations (its L1
+    // copies die) and refetch.
+    let mut s = sys();
+    let producer = TileId(3);
+    let consumer = TileId(60);
+    for l in 0..64 {
+        assert_eq!(
+            s.write(producer, LineId(l), producer).level,
+            WriteLevel::LocalL2
+        );
+    }
+    for l in 0..64 {
+        let out = s.read(consumer, LineId(l), producer);
+        assert_eq!(out, ReadPlace::Home { home: producer });
+    }
+    // Consumer's L1 now warm.
+    for l in 0..16 {
+        assert_eq!(s.read(consumer, LineId(l), producer), ReadPlace::L1);
+    }
+    // Overwrite invalidates the consumer's copies.
+    let mut invalidated = 0;
+    for l in 0..64 {
+        invalidated += s.write(producer, LineId(l), producer).invalidated;
+    }
+    assert!(invalidated >= 16, "consumer copies must be invalidated");
+    for l in 0..16 {
+        let out = s.read(consumer, LineId(l), producer);
+        assert_ne!(out, ReadPlace::L1, "line {l}: stale L1 copy survived");
+    }
+}
+
+#[test]
+fn false_sharing_ping_pong() {
+    // Two writers alternating on the same line invalidate each other every
+    // time — the classic pathology the directory must capture.
+    let mut s = sys();
+    let home = TileId(0);
+    let line = LineId(7);
+    let mut total_inv = 0;
+    for i in 0..20 {
+        let writer = if i % 2 == 0 { TileId(1) } else { TileId(2) };
+        // Writer reads first (gets a copy), then writes.
+        s.read(writer, line, home);
+        total_inv += s.write(writer, line, home).invalidated;
+    }
+    assert!(total_inv >= 18, "ping-pong must invalidate nearly every round");
+}
+
+#[test]
+fn purge_cleans_all_tiles_and_directory() {
+    let mut s = sys();
+    for t in 0..8u32 {
+        for l in 0..32 {
+            s.read(TileId(t), LineId(l), TileId(0));
+        }
+    }
+    s.purge_line_range(LineId(0), LineId(31));
+    for t in 0..8u32 {
+        assert_eq!(s.tile(TileId(t)).l1.resident_lines(), 0, "tile {t} L1");
+    }
+    assert_eq!(s.directory.tracked_lines(), 0);
+}
+
+#[test]
+fn totals_are_consistent() {
+    let mut s = sys();
+    for l in 0..100 {
+        s.read(TileId(0), LineId(l), TileId(0));
+        s.read(TileId(0), LineId(l), TileId(0));
+    }
+    let (hits, misses) = s.totals();
+    assert!(hits >= 100);
+    assert!(misses >= 100);
+}

@@ -1,0 +1,203 @@
+//! Integration: the paper's headline *shapes* at moderate scale. These are
+//! the claims EXPERIMENTS.md reports; if one breaks, the reproduction is
+//! broken even if every mechanism test passes.
+
+use tilesim::coordinator::{case, experiment};
+use tilesim::workloads::mergesort::Variant;
+
+const SEED: u64 = experiment::DEFAULT_SEED;
+
+/// Moderate size: big enough for every mechanism (hot spots, L2 overflow,
+/// migrations) to engage, small enough for CI.
+const N: u64 = 1 << 20;
+
+#[test]
+fn shape_fig1_localisation_wins_and_gap_grows() {
+    let t = experiment::fig1(256_000, 63, &[1, 8, 32], SEED);
+    let gap = |i: usize| t.rows[i].1[0] / t.rows[i].1[1]; // non-loc / loc
+    assert!(gap(2) > 1.15, "localisation must win at 32 reps: {}", gap(2));
+    assert!(gap(2) > gap(0), "gap must grow with reps");
+}
+
+#[test]
+fn shape_fig2_localised_static_tops_the_chart() {
+    let t = experiment::fig2(N, &[32], SEED);
+    let row = &t.rows[0].1;
+    let best_localised = row[6].max(row[7]); // case 7 or 8
+    for (i, &v) in row.iter().enumerate().take(4) {
+        assert!(
+            best_localised > v,
+            "localised+static must beat case {}: {} vs {}",
+            i + 1,
+            best_localised,
+            v
+        );
+    }
+}
+
+#[test]
+fn shape_fig2_local_homing_disaster_without_localisation() {
+    let t = experiment::fig2(N, &[32], SEED);
+    let row = &t.rows[0].1;
+    // Case 4 (static, none, non-localised) must trail case 3 (static,
+    // hash) clearly — the tile-0 hot spot.
+    assert!(
+        row[2] > row[3] * 1.2,
+        "case3 {} must clearly beat case4 {}",
+        row[2],
+        row[3]
+    );
+}
+
+#[test]
+fn shape_speedup_scales_with_threads_for_good_cases() {
+    let t = experiment::fig2(N, &[1, 8, 64], SEED);
+    for case_ix in [2usize, 6, 7] {
+        let s1 = t.rows[0].1[case_ix];
+        let s8 = t.rows[1].1[case_ix];
+        let s64 = t.rows[2].1[case_ix];
+        assert!(s8 > s1 * 2.0, "case {} must scale 1->8", case_ix + 1);
+        assert!(s64 > s8, "case {} must keep scaling 8->64", case_ix + 1);
+    }
+}
+
+#[test]
+fn shape_fig3_case8_overtakes_hash_with_size() {
+    // Ratio of case8/case3 execution time must fall as size grows (the
+    // aggregate-L3 crossover).
+    let t = experiment::fig3(&[1 << 19, 1 << 22], 64, SEED);
+    let ratio_small = t.rows[0].1[4] / t.rows[0].1[0];
+    let ratio_big = t.rows[1].1[4] / t.rows[1].1[0];
+    assert!(
+        ratio_big < ratio_small,
+        "case8 must gain on case3 with size: {ratio_small} -> {ratio_big}"
+    );
+    assert!(ratio_big < 1.0, "case8 must win outright at 4M: {ratio_big}");
+}
+
+#[test]
+fn shape_fig3_intermediate_step_helps_but_less_than_localisation() {
+    // At 4M (past the aggregate-L3 crossover) full localisation must beat
+    // the intermediate-step-only optimisation; below it they are close
+    // (paper Fig. 3 shows the same convergence at small sizes).
+    let t = experiment::fig3(&[1 << 22], 64, SEED);
+    let row = &t.rows[0].1; // [case3, case3+interm, case4, case7, case8]
+    assert!(row[1] < row[0], "intermediate step must help case 3");
+    assert!(row[4] < row[1], "full localisation must beat it at 4M");
+}
+
+#[test]
+fn shape_fig4_striping_helps_at_32_threads_non_striped_upper_half() {
+    let t = experiment::fig4(N, &[32], SEED);
+    let row = &t.rows[0].1; // [c3 striped, c3 non, c8 striped, c8 non]
+    // Case 8 is the DRAM-facing case: striping must help at 32 threads
+    // (threads 0..31 reach only 2 controllers without striping).
+    assert!(
+        row[3] > row[2],
+        "case8: non-striped {} must be slower than striped {} at 32t",
+        row[3],
+        row[2]
+    );
+}
+
+#[test]
+fn shape_fig4_striping_transparent_when_cache_absorbs() {
+    // For case 3 (hash, everything in distributed L3) striping is near
+    // transparent — within 15%.
+    let t = experiment::fig4(N, &[64], SEED);
+    let row = &t.rows[0].1;
+    let rel = (row[1] - row[0]).abs() / row[0];
+    assert!(rel < 0.15, "case3 striping effect should be small: {rel}");
+}
+
+#[test]
+fn shape_migrations_are_costly_for_both_styles() {
+    // §4: "the Tile Linux tries to migrate the threads during the
+    // execution time, and those migrations are costly not only in terms of
+    // cache misses but also because of the resulting delay." At test scale
+    // runs are shorter than the default rebalance interval, so use an
+    // aggressive load balancer to surface the effect the paper sees on
+    // seconds-long runs.
+    use tilesim::mem::MemConfig;
+    use tilesim::sched::{StaticMapper, TileLinuxConfig, TileLinuxScheduler};
+    use tilesim::sim::{Engine, EngineConfig};
+    use tilesim::workloads::mergesort::{self, MergesortConfig};
+
+    let run = |variant: Variant, policy, migrating: bool| {
+        let mut e = Engine::new(EngineConfig::tilepro64(MemConfig {
+            hash_policy: policy,
+            striping: true,
+        }));
+        let p = mergesort::build(
+            &mut e,
+            &MergesortConfig {
+                elems: N,
+                threads: 32,
+                variant,
+            },
+        );
+        if migrating {
+            let mut s = TileLinuxScheduler::new(TileLinuxConfig {
+                check_interval: 100_000,
+                migrate_prob: 0.5,
+                seed: SEED,
+            });
+            e.run(&p, &mut s).unwrap()
+        } else {
+            e.run(&p, &mut StaticMapper::new()).unwrap()
+        }
+    };
+    use tilesim::mem::HashPolicy;
+    let loc_static = run(Variant::Localised, HashPolicy::None, false);
+    let loc_churn = run(Variant::Localised, HashPolicy::None, true);
+    let nl_static = run(Variant::NonLocalised, HashPolicy::AllButStack, false);
+    let nl_churn = run(Variant::NonLocalised, HashPolicy::AllButStack, true);
+    assert!(loc_churn.migrations > 0 && nl_churn.migrations > 0);
+    let loc_penalty = loc_churn.makespan_cycles as f64 / loc_static.makespan_cycles as f64;
+    let nonloc_penalty = nl_churn.makespan_cycles as f64 / nl_static.makespan_cycles as f64;
+    assert!(
+        loc_penalty > 1.1 && nonloc_penalty > 1.1,
+        "migrations must cost real time: localised {loc_penalty:.3}, \
+         non-localised {nonloc_penalty:.3}"
+    );
+}
+
+#[test]
+fn shape_variants_consistent_across_seeds() {
+    // The qualitative ordering (case 8 beats case 2) must hold for several
+    // Tile Linux seeds — it cannot be a lucky schedule.
+    for seed in [1u64, 7, 2014] {
+        let c2 = experiment::run_mergesort(&case(2), N / 2, 32, true, seed);
+        let c8 = experiment::run_mergesort(&case(8), N / 2, 32, true, seed);
+        assert!(
+            (c8.makespan_cycles as f64) * 1.5 < c2.makespan_cycles as f64,
+            "seed {seed}: case8 {} vs case2 {}",
+            c8.makespan_cycles,
+            c2.makespan_cycles
+        );
+    }
+}
+
+#[test]
+fn shape_intermediate_for_local_homing_is_poor() {
+    // §5.2: "The intermediate step has a poor performance (close to that
+    // of Case 4) for the local homing policy" — ext_scr allocated by the
+    // merging thread cannot amortise, while the non-localised leaf still
+    // hammers tile 0.
+    let interm_none = experiment::run_mergesort_variant(
+        &case(4),
+        Variant::NonLocalisedIntermediate,
+        N,
+        32,
+        true,
+        SEED,
+    );
+    let c4 = experiment::run_mergesort(&case(4), N, 32, true, SEED);
+    let c8 = experiment::run_mergesort(&case(8), N, 32, true, SEED);
+    let to_c4 = interm_none.makespan_cycles as f64 / c4.makespan_cycles as f64;
+    assert!(
+        (0.5..1.2).contains(&to_c4),
+        "intermediate+none should be near case 4: ratio {to_c4}"
+    );
+    assert!(interm_none.makespan_cycles > c8.makespan_cycles);
+}

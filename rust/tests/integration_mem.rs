@@ -1,0 +1,155 @@
+//! Integration: allocator + page table + homing + striping acting together.
+
+use tilesim::arch::{TileId, PAGE_BYTES};
+use tilesim::mem::{
+    AllocKind, Allocator, HashPolicy, Homing, LineId, MemConfig, Placement, VAddr,
+};
+
+fn alloc(policy: HashPolicy, striping: bool) -> Allocator {
+    Allocator::new(MemConfig {
+        hash_policy: policy,
+        striping,
+    })
+}
+
+#[test]
+fn localisation_rehomes_through_alloc_copy_free_cycle() {
+    // The full Algorithm 1 memory story: main's array stuck on tile 0,
+    // worker allocates + first-touches a copy, frees it, and the reused
+    // pages re-home for the next worker.
+    let mut a = alloc(HashPolicy::None, true);
+    let input = a.alloc(TileId(0), 1 << 20, AllocKind::Heap).unwrap();
+    a.table.touch_region(input.addr, input.bytes, TileId(0));
+    assert_eq!(
+        a.table.home_of_line(input.addr.line()).unwrap(),
+        Some(TileId(0))
+    );
+
+    let worker = TileId(42);
+    let copy = a.alloc(worker, 1 << 16, AllocKind::Heap).unwrap();
+    assert_eq!(a.table.resolve_home(copy.addr.line(), worker).unwrap(), worker);
+
+    a.free(copy.addr).unwrap();
+    let copy2 = a.alloc(TileId(7), 1 << 16, AllocKind::Heap).unwrap();
+    assert_eq!(copy2.addr, copy.addr, "free list reuses the region");
+    assert_eq!(
+        a.table.resolve_home(copy2.addr.line(), TileId(7)).unwrap(),
+        TileId(7),
+        "re-homed on the new first toucher"
+    );
+}
+
+#[test]
+fn many_allocations_never_overlap() {
+    let mut a = alloc(HashPolicy::AllButStack, true);
+    let mut regions = Vec::new();
+    for i in 0..200u64 {
+        let r = a
+            .alloc(TileId((i % 64) as u32), (i + 1) * 1000, AllocKind::Heap)
+            .unwrap();
+        regions.push(r);
+    }
+    let mut spans: Vec<(u64, u64)> = regions
+        .iter()
+        .map(|r| (r.addr.0, r.addr.0 + r.bytes))
+        .collect();
+    spans.sort();
+    for w in spans.windows(2) {
+        assert!(w[0].1 <= w[1].0, "overlap: {w:?}");
+    }
+}
+
+#[test]
+fn hash_policy_spreads_while_none_first_touches() {
+    let mut hashed = alloc(HashPolicy::AllButStack, true);
+    let r = hashed.alloc(TileId(0), PAGE_BYTES, AllocKind::Heap).unwrap();
+    let homes: std::collections::HashSet<_> = (0..1024)
+        .map(|i| {
+            hashed
+                .table
+                .home_of_line(LineId(r.addr.line().0 + i))
+                .unwrap()
+                .unwrap()
+        })
+        .collect();
+    assert!(homes.len() > 48, "hash-for-home spreads: {}", homes.len());
+
+    let mut ft = alloc(HashPolicy::None, true);
+    let r = ft.alloc(TileId(0), PAGE_BYTES, AllocKind::Heap).unwrap();
+    let toucher = TileId(55);
+    let homes: std::collections::HashSet<_> = (0..1024)
+        .map(|i| ft.table.resolve_home(LineId(r.addr.line().0 + i), toucher).unwrap())
+        .collect();
+    assert_eq!(homes.len(), 1);
+    assert!(homes.contains(&toucher));
+}
+
+#[test]
+fn striping_vs_fixed_controller_traffic_split() {
+    // Striped: a 1 MB region touches all four controllers roughly equally.
+    let mut s = alloc(HashPolicy::None, true);
+    let r = s.alloc(TileId(0), 1 << 20, AllocKind::Heap).unwrap();
+    let mut counts = [0u32; 4];
+    for i in 0..(1 << 20) / 64 {
+        counts[s.table.controller_of_line(LineId(r.addr.line().0 + i)).unwrap() as usize] += 1;
+    }
+    let (min, max) = (counts.iter().min().unwrap(), counts.iter().max().unwrap());
+    assert!(max - min <= max / 2, "striping should balance: {counts:?}");
+
+    // Non-striped: single controller after first touch.
+    let mut ns = alloc(HashPolicy::None, false);
+    let r = ns.alloc(TileId(0), 1 << 20, AllocKind::Heap).unwrap();
+    ns.table.touch_region(r.addr, r.bytes, TileId(0));
+    let c0 = ns.table.controller_of_line(r.addr.line()).unwrap();
+    for i in [100u64, 5_000, 16_000] {
+        assert_eq!(
+            ns.table.controller_of_line(LineId(r.addr.line().0 + i)).unwrap(),
+            c0
+        );
+    }
+}
+
+#[test]
+fn stack_allocations_home_on_owner_under_both_policies() {
+    for policy in [HashPolicy::AllButStack, HashPolicy::None] {
+        let mut a = alloc(policy, true);
+        let r = a.alloc(TileId(9), 8 * 1024, AllocKind::Stack).unwrap();
+        assert_eq!(
+            a.table.home_of_line(r.addr.line()).unwrap(),
+            Some(TileId(9)),
+            "{policy:?}"
+        );
+    }
+}
+
+#[test]
+fn explicit_remote_homing_supported() {
+    // Remote homing (paper class II): page homed on a tile that is neither
+    // the allocator nor the toucher.
+    let mut a = alloc(HashPolicy::None, true);
+    let r = a
+        .alloc_with(
+            TileId(0),
+            4096,
+            AllocKind::Heap,
+            Homing::Single(TileId(33)),
+            Placement::Striped,
+        )
+        .unwrap();
+    assert_eq!(a.table.resolve_home(r.addr.line(), TileId(5)).unwrap(), TileId(33));
+}
+
+#[test]
+fn page_rounding_accounts_high_water() {
+    let mut a = alloc(HashPolicy::None, true);
+    a.alloc(TileId(0), 1, AllocKind::Heap).unwrap();
+    assert_eq!(a.high_water_bytes(), PAGE_BYTES);
+    a.alloc(TileId(0), PAGE_BYTES + 1, AllocKind::Heap).unwrap();
+    assert_eq!(a.high_water_bytes(), 3 * PAGE_BYTES);
+}
+
+#[test]
+fn unmapped_lookup_fails_cleanly() {
+    let a = alloc(HashPolicy::None, true);
+    assert!(a.table.home_of_line(VAddr(1 << 30).line()).is_err());
+}

@@ -1,0 +1,91 @@
+//! Integration: routing + contention + latency parameters.
+
+use tilesim::arch::{hops, LatencyParams, HitLevel, TileId};
+use tilesim::noc::{xy_path, ContentionConfig, ContentionModel};
+
+#[test]
+fn latency_grows_with_route_length() {
+    let p = LatencyParams::TILEPRO64;
+    let req = TileId(0);
+    let mut last = 0;
+    for dst in [0u32, 1, 9, 27, 63] {
+        let lat = p.access_cycles(req, HitLevel::Home { home: TileId(dst) });
+        assert!(lat >= last, "latency must be monotone in distance");
+        last = lat;
+    }
+}
+
+#[test]
+fn route_length_matches_latency_hops() {
+    let p = LatencyParams::TILEPRO64;
+    for (a, b) in [(0u32, 63u32), (5, 58), (12, 12)] {
+        let path = xy_path(TileId(a), TileId(b));
+        let lat = p.access_cycles(TileId(a), HitLevel::Home { home: TileId(b) });
+        let expect = p.l2_hit + p.noc_header + 2 * p.noc_hop * (path.len() as u64 - 1);
+        assert_eq!(lat, expect);
+    }
+}
+
+#[test]
+fn hot_home_throughput_limited_to_service_rate() {
+    // Simulate 64 requesters in lockstep rounds hammering one home; the
+    // aggregate completion rate must approach 1 line / service cycles.
+    let mut m = ContentionModel::new(ContentionConfig::default());
+    let service = 2u64;
+    let mut clocks = vec![0u64; 64];
+    for _round in 0..200 {
+        for t in 0..64 {
+            let d = m.home_request(TileId(0), clocks[t], service);
+            clocks[t] += 20 + d; // 20cy of base latency per access
+        }
+    }
+    let makespan = *clocks.iter().max().unwrap();
+    let total_reqs = 64 * 200;
+    let ideal_serialised = total_reqs * service;
+    assert!(
+        makespan as f64 >= ideal_serialised as f64 * 0.85,
+        "hot port must serialise: makespan {makespan} vs floor {ideal_serialised}"
+    );
+}
+
+#[test]
+fn spread_homes_scale_linearly() {
+    // Same load spread over 64 homes: makespan stays near per-thread work.
+    let mut m = ContentionModel::new(ContentionConfig::default());
+    let mut clocks = vec![0u64; 64];
+    for _round in 0..200 {
+        for t in 0..64 {
+            let d = m.home_request(TileId(t as u32), clocks[t], 2);
+            clocks[t] += 20 + d;
+        }
+    }
+    let makespan = *clocks.iter().max().unwrap();
+    assert!(
+        makespan <= 200 * 22 + 1000,
+        "no queueing expected when spread: {makespan}"
+    );
+}
+
+#[test]
+fn controllers_are_parallel_resources() {
+    let mut m = ContentionModel::new(ContentionConfig::default());
+    // Saturate controller 0.
+    for _ in 0..10_000 {
+        m.ctrl_request(0, 0, 4);
+    }
+    // Controllers 1-3 unaffected.
+    for c in 1..4 {
+        assert_eq!(m.ctrl_request(c, 0, 4), 0);
+    }
+}
+
+#[test]
+fn mesh_is_symmetric_and_bounded() {
+    for a in 0..64u32 {
+        for b in 0..64u32 {
+            let h = hops(TileId(a), TileId(b));
+            assert_eq!(h, hops(TileId(b), TileId(a)));
+            assert!(h <= 14);
+        }
+    }
+}

@@ -1,0 +1,173 @@
+//! Integration: the PJRT request path against real AOT artifacts.
+//!
+//! Requires `make artifacts` (skipped with a message otherwise, so plain
+//! `cargo test` works before the python side has run).
+
+use tilesim::arch::{HitLevel, LatencyParams, TileId};
+use tilesim::runtime::{
+    artifacts_dir, AccessDesc, ArtifactSet, ChunkedSorter, LatencyModel, BATCH,
+};
+use tilesim::util::rng::Rng;
+
+fn load() -> Option<ArtifactSet> {
+    let dir = artifacts_dir();
+    match ArtifactSet::load(&dir) {
+        Ok(set) => Some(set),
+        Err(e) => {
+            eprintln!("SKIP runtime tests: {e} (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+#[test]
+fn artifacts_manifest_lists_all_four() {
+    let Some(set) = load() else { return };
+    let mut names = set.names();
+    names.sort();
+    assert_eq!(
+        names,
+        vec!["full_sort", "latency_model", "merge_pass", "sort_chunks"]
+    );
+}
+
+#[test]
+fn sorter_sorts_one_batch_exactly() {
+    let Some(set) = load() else { return };
+    let sorter = ChunkedSorter::new(&set).unwrap();
+    let mut rng = Rng::new(3);
+    let data = rng.i32_vec(BATCH);
+    let got = sorter.sort_batch(&data).unwrap();
+    let mut want = data;
+    want.sort_unstable();
+    assert_eq!(got, want, "PJRT bitonic sorter != std sort");
+}
+
+#[test]
+fn sorter_handles_arbitrary_lengths() {
+    let Some(set) = load() else { return };
+    let sorter = ChunkedSorter::new(&set).unwrap();
+    let mut rng = Rng::new(4);
+    for n in [0usize, 1, 1000, BATCH - 1, BATCH, BATCH + 1, 3 * BATCH + 17] {
+        let data = rng.i32_vec(n);
+        let (got, metrics) = sorter.sort(&data).unwrap();
+        let mut want = data;
+        want.sort_unstable();
+        assert_eq!(got, want, "n={n}");
+        assert_eq!(metrics.dispatches as usize, n.div_ceil(BATCH));
+    }
+}
+
+#[test]
+fn sorter_handles_extremes_and_duplicates() {
+    let Some(set) = load() else { return };
+    let sorter = ChunkedSorter::new(&set).unwrap();
+    let mut data = vec![i32::MAX; BATCH / 2];
+    data.extend(vec![i32::MIN; BATCH / 2]);
+    data.extend(vec![0i32; 100]);
+    let (got, _) = sorter.sort(&data).unwrap();
+    let mut want = data;
+    want.sort_unstable();
+    assert_eq!(got, want);
+}
+
+#[test]
+fn latency_model_matches_rust_params_exactly() {
+    // The cross-layer drift check: the AOT'd JAX closed form must agree
+    // with arch::LatencyParams on every hit level and random tile pairs.
+    let Some(set) = load() else { return };
+    let model = LatencyModel::new(&set).unwrap();
+    let params = LatencyParams::TILEPRO64;
+    let mut rng = Rng::new(5);
+    let mut accesses = Vec::new();
+    let mut expected = Vec::new();
+    for _ in 0..256 {
+        let req = TileId(rng.below(64) as u32);
+        let dst = TileId(rng.below(64) as u32);
+        let level = match rng.below(4) {
+            0 => HitLevel::L1,
+            1 => HitLevel::L2,
+            2 => HitLevel::Home { home: dst },
+            _ => HitLevel::Ddr { ctrl_attach: dst },
+        };
+        expected.push(params.access_cycles(req, level) as f32);
+        accesses.push(AccessDesc::from_hit(req, level));
+    }
+    let (per, total) = model.batch(&accesses).unwrap();
+    for (i, (got, want)) in per.iter().zip(&expected).enumerate() {
+        assert!(
+            (got - want).abs() < 1e-3,
+            "access {i}: jax {got} vs rust {want} ({:?})",
+            accesses[i]
+        );
+    }
+    // Total covers the whole padded batch (pads are L1 = 2.0 cycles).
+    let pad = (1024 - accesses.len()) as f32 * 2.0;
+    let want_total: f32 = expected.iter().sum::<f32>() + pad;
+    assert!(
+        (total - want_total).abs() / want_total < 1e-5,
+        "total {total} vs {want_total}"
+    );
+}
+
+#[test]
+fn latency_model_contention_term_is_additive() {
+    let Some(set) = load() else { return };
+    let model = LatencyModel::new(&set).unwrap();
+    let base = AccessDesc {
+        req: TileId(0),
+        dst: TileId(63),
+        level: tilesim::runtime::latency::LEVEL_HOME,
+        contention: 0.0,
+    };
+    let loaded = AccessDesc {
+        contention: 123.5,
+        ..base
+    };
+    let (per, _) = model.batch(&[base, loaded]).unwrap();
+    assert!((per[1] - per[0] - 123.5).abs() < 1e-3);
+}
+
+#[test]
+fn manifest_rejects_truncated_artifact() {
+    // Corrupt a copy of the artifacts dir: size mismatch must fail load.
+    let Some(_) = load() else { return };
+    let src = artifacts_dir();
+    let dst = std::env::temp_dir().join(format!("tilesim-corrupt-{}", std::process::id()));
+    std::fs::create_dir_all(&dst).unwrap();
+    for entry in std::fs::read_dir(&src).unwrap() {
+        let entry = entry.unwrap();
+        if entry.file_name().to_string_lossy().ends_with(".stamp") {
+            continue;
+        }
+        std::fs::copy(entry.path(), dst.join(entry.file_name())).unwrap();
+    }
+    // Truncate one artifact.
+    let victim = dst.join("merge_pass.hlo.txt");
+    let text = std::fs::read_to_string(&victim).unwrap();
+    std::fs::write(&victim, &text[..text.len() / 2]).unwrap();
+    let msg = match ArtifactSet::load(&dst) {
+        Ok(_) => panic!("corrupted artifacts must not load"),
+        Err(err) => format!("{err}"),
+    };
+    assert!(msg.contains("size mismatch"), "got: {msg}");
+    std::fs::remove_dir_all(&dst).ok();
+}
+
+#[test]
+fn e2e_throughput_smoke() {
+    // The end-to-end path moves real data at a sane rate (sanity bound
+    // only; perf numbers live in benches/perf_engine.rs).
+    let Some(set) = load() else { return };
+    let sorter = ChunkedSorter::new(&set).unwrap();
+    let mut rng = Rng::new(6);
+    let data = rng.i32_vec(2 * BATCH);
+    let t0 = std::time::Instant::now();
+    let (sorted, _) = sorter.sort(&data).unwrap();
+    let dt = t0.elapsed();
+    assert!(sorted.windows(2).all(|w| w[0] <= w[1]));
+    assert!(
+        dt.as_secs() < 30,
+        "2-batch sort took {dt:?} — request path is broken"
+    );
+}

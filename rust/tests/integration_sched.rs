@@ -1,0 +1,114 @@
+//! Integration: schedulers driving the engine — migration costs are real
+//! and visible, static pinning is stable.
+
+use tilesim::arch::TileId;
+use tilesim::mem::{HashPolicy, MemConfig};
+use tilesim::sched::{Scheduler, StaticMapper, TileLinuxConfig, TileLinuxScheduler};
+use tilesim::sim::{Engine, EngineConfig, Loc, Program, TraceBuilder};
+
+fn long_running_program(e: &mut Engine, threads: usize) -> Program {
+    let r = e.prealloc_touched(TileId(0), 1 << 22);
+    let mut builders = Vec::new();
+    let part = (1u64 << 22) / threads as u64;
+    for i in 0..threads as u64 {
+        let mut b = TraceBuilder::new();
+        for _ in 0..64 {
+            b.read(Loc::Abs(r.addr.offset(i * part)), part);
+        }
+        builders.push(b);
+    }
+    Program::from_builders(builders, 0, 0)
+}
+
+fn engine() -> Engine {
+    Engine::new(EngineConfig::tilepro64(MemConfig {
+        hash_policy: HashPolicy::AllButStack,
+        striping: true,
+    }))
+}
+
+#[test]
+fn tile_linux_migrates_on_long_runs_static_never() {
+    let mut e1 = engine();
+    let p1 = long_running_program(&mut e1, 16);
+    let s_linux = e1.run(&p1, &mut TileLinuxScheduler::with_seed(3)).unwrap();
+    assert!(s_linux.migrations > 0, "long run must see migrations");
+
+    let mut e2 = engine();
+    let p2 = long_running_program(&mut e2, 16);
+    let s_static = e2.run(&p2, &mut StaticMapper::new()).unwrap();
+    assert_eq!(s_static.migrations, 0);
+}
+
+#[test]
+fn migrations_cost_time() {
+    // Same program under migrate_prob 0 vs 0.9: heavy migration must be
+    // slower (direct cost + locality loss).
+    let run = |prob: f64| {
+        let mut e = engine();
+        let p = long_running_program(&mut e, 16);
+        let mut sched = TileLinuxScheduler::new(TileLinuxConfig {
+            migrate_prob: prob,
+            seed: 11,
+            ..Default::default()
+        });
+        e.run(&p, &mut sched).unwrap()
+    };
+    let calm = run(0.0);
+    let churny = run(0.9);
+    assert!(churny.migrations > calm.migrations);
+    assert!(
+        churny.makespan_cycles > calm.makespan_cycles,
+        "churn {} !> calm {}",
+        churny.makespan_cycles,
+        calm.makespan_cycles
+    );
+}
+
+#[test]
+fn migration_strands_first_touch_locality() {
+    // A thread that first-touched its data locally, then migrates, pays
+    // remote-home latency afterwards: DDR/home accesses must appear in the
+    // post-migration phase.
+    let e = Engine::new(EngineConfig::tilepro64(MemConfig {
+        hash_policy: HashPolicy::None,
+        striping: true,
+    }));
+    let mut b = TraceBuilder::new();
+    b.alloc(0, 1 << 16, tilesim::mem::AllocKind::Heap)
+        .write(Loc::Slot { slot: 0, offset: 0 }, 1 << 16);
+    for _ in 0..128 {
+        b.read(Loc::Slot { slot: 0, offset: 0 }, 1 << 16);
+    }
+    let p = Program::from_builders(vec![b], 1, 0);
+    // Aggressive migration so it certainly fires mid-run.
+    let mut sched = TileLinuxScheduler::new(TileLinuxConfig {
+        check_interval: 200_000,
+        migrate_prob: 1.0,
+        seed: 5,
+    });
+    let stats = e.run(&p, &mut sched).unwrap();
+    assert!(stats.migrations > 0);
+    assert!(
+        stats.home_hits + stats.ddr_accesses > (1 << 16) / 64,
+        "post-migration reads must be remote: {} home, {} ddr",
+        stats.home_hits,
+        stats.ddr_accesses
+    );
+}
+
+#[test]
+fn static_mapper_is_ordered_and_dense() {
+    let mut s = StaticMapper::new();
+    let tiles: Vec<_> = (0..64).map(|t| s.initial_tile(t)).collect();
+    for (i, t) in tiles.iter().enumerate() {
+        assert_eq!(t.index(), i);
+    }
+}
+
+#[test]
+fn tile_linux_initial_spread_covers_chip_at_64_threads() {
+    let mut s = TileLinuxScheduler::with_seed(9);
+    let tiles: std::collections::HashSet<_> = (0..64).map(|t| s.initial_tile(t)).collect();
+    assert_eq!(tiles.len(), 64);
+}

@@ -1,0 +1,162 @@
+//! Integration: the replay engine end-to-end — fork–join programs,
+//! failure injection, determinism, accounting identities.
+
+use tilesim::arch::TileId;
+use tilesim::mem::{AllocKind, HashPolicy, MemConfig};
+use tilesim::sched::{StaticMapper, TileLinuxScheduler};
+use tilesim::sim::{Engine, EngineConfig, EngineError, Loc, Program, TraceBuilder};
+
+fn engine(policy: HashPolicy) -> Engine {
+    Engine::new(EngineConfig::tilepro64(MemConfig {
+        hash_policy: policy,
+        striping: true,
+    }))
+}
+
+#[test]
+fn fork_join_diamond() {
+    // t0 produces, t1 and t2 consume after a signal, t3 joins both.
+    let mut e = engine(HashPolicy::None);
+    let shared = e.prealloc_touched(TileId(0), 1 << 16);
+    let mut t0 = TraceBuilder::new();
+    t0.write(Loc::Abs(shared.addr), 1 << 16).signal(0);
+    let mk_consumer = |ev_in: u32, ev_out: u32| {
+        let mut b = TraceBuilder::new();
+        b.wait(ev_in).read(Loc::Abs(shared.addr), 1 << 16).signal(ev_out);
+        b
+    };
+    let mut t3 = TraceBuilder::new();
+    t3.wait(1).wait(2).compute(100);
+    let p = Program::from_builders(
+        vec![t0, mk_consumer(0, 1), mk_consumer(0, 2), t3],
+        0,
+        3,
+    );
+    let stats = e.run(&p, &mut StaticMapper::new()).unwrap();
+    // join thread must finish last-ish: after both consumers' signals.
+    let t3_end = stats.thread_cycles[3];
+    assert!(t3_end >= stats.thread_cycles[1].min(stats.thread_cycles[2]));
+}
+
+#[test]
+fn deadlock_cycle_detected() {
+    let mut a = TraceBuilder::new();
+    a.wait(0).signal(1);
+    let mut b = TraceBuilder::new();
+    b.wait(1).signal(0);
+    let p = Program::from_builders(vec![a, b], 0, 2);
+    match engine(HashPolicy::None).run(&p, &mut StaticMapper::new()) {
+        Err(EngineError::Deadlock(mut t)) => {
+            t.sort();
+            assert_eq!(t, vec![0, 1]);
+        }
+        other => panic!("expected deadlock, got {other:?}"),
+    }
+}
+
+#[test]
+fn double_free_is_reported() {
+    let mut b = TraceBuilder::new();
+    b.alloc(0, 4096, AllocKind::Heap).free(0).free(0);
+    let p = Program::from_builders(vec![b], 1, 0);
+    assert!(matches!(
+        engine(HashPolicy::None).run(&p, &mut StaticMapper::new()),
+        Err(EngineError::UnboundSlot { .. })
+    ));
+}
+
+#[test]
+fn accounting_identity_hits_sum_to_accesses() {
+    let mut e = engine(HashPolicy::AllButStack);
+    let r = e.prealloc_touched(TileId(0), 1 << 18);
+    let mut builders = Vec::new();
+    for i in 0..8u64 {
+        let mut b = TraceBuilder::new();
+        let part = Loc::Abs(r.addr.offset(i * (1 << 15)));
+        b.read(part, 1 << 15).copy(part, part, 1 << 14);
+        builders.push(b);
+    }
+    let p = Program::from_builders(builders, 0, 0);
+    let stats = e.run(&p, &mut StaticMapper::new()).unwrap();
+    assert_eq!(
+        stats.l1_hits + stats.l2_hits + stats.home_hits + stats.ddr_accesses,
+        stats.line_accesses,
+        "every access must be attributed to exactly one level"
+    );
+}
+
+#[test]
+fn runs_are_bit_deterministic() {
+    let build = || {
+        let mut e = engine(HashPolicy::AllButStack);
+        let r = e.prealloc_touched(TileId(0), 1 << 18);
+        let mut builders = Vec::new();
+        for i in 0..16u64 {
+            let mut b = TraceBuilder::new();
+            b.read(Loc::Abs(r.addr.offset(i * (1 << 14))), 1 << 14)
+                .compute(1000)
+                .write(Loc::Abs(r.addr.offset(i * (1 << 14))), 1 << 14);
+            builders.push(b);
+        }
+        (e, Program::from_builders(builders, 0, 0))
+    };
+    let (e1, p1) = build();
+    let (e2, p2) = build();
+    let s1 = e1.run(&p1, &mut TileLinuxScheduler::with_seed(7)).unwrap();
+    let s2 = e2.run(&p2, &mut TileLinuxScheduler::with_seed(7)).unwrap();
+    assert_eq!(s1.makespan_cycles, s2.makespan_cycles);
+    assert_eq!(s1.thread_cycles, s2.thread_cycles);
+    assert_eq!(s1.migrations, s2.migrations);
+}
+
+#[test]
+fn different_seeds_change_linux_schedule() {
+    let build = || {
+        let mut e = engine(HashPolicy::AllButStack);
+        let r = e.prealloc_touched(TileId(0), 1 << 20);
+        let mut builders = Vec::new();
+        for i in 0..16u64 {
+            let mut b = TraceBuilder::new();
+            for _ in 0..32 {
+                b.read(Loc::Abs(r.addr.offset(i * (1 << 16))), 1 << 16);
+            }
+            builders.push(b);
+        }
+        (e, Program::from_builders(builders, 0, 0))
+    };
+    let (e1, p1) = build();
+    let (e2, p2) = build();
+    let s1 = e1.run(&p1, &mut TileLinuxScheduler::with_seed(1)).unwrap();
+    let s2 = e2.run(&p2, &mut TileLinuxScheduler::with_seed(2)).unwrap();
+    assert_ne!(
+        (s1.makespan_cycles, s1.migrations),
+        (s2.makespan_cycles, s2.migrations),
+        "different seeds should differ somewhere"
+    );
+}
+
+#[test]
+fn empty_program_completes() {
+    let p = Program::from_builders(vec![TraceBuilder::new(); 4], 0, 0);
+    let stats = engine(HashPolicy::None)
+        .run(&p, &mut StaticMapper::new())
+        .unwrap();
+    assert_eq!(stats.makespan_cycles, 0);
+    assert_eq!(stats.line_accesses, 0);
+}
+
+#[test]
+fn makespan_dominated_by_slowest_thread() {
+    let mut e = engine(HashPolicy::None);
+    let r = e.prealloc_touched(TileId(0), 1 << 20);
+    let mut heavy = TraceBuilder::new();
+    for _ in 0..8 {
+        heavy.read(Loc::Abs(r.addr), 1 << 20);
+    }
+    let mut light = TraceBuilder::new();
+    light.read(Loc::Abs(r.addr), 64);
+    let p = Program::from_builders(vec![heavy, light], 0, 0);
+    let stats = e.run(&p, &mut StaticMapper::new()).unwrap();
+    assert_eq!(stats.makespan_cycles, stats.thread_cycles[0]);
+    assert!(stats.thread_cycles[1] < stats.thread_cycles[0] / 10);
+}

@@ -1,0 +1,174 @@
+//! Integration: workload trace generators — traffic accounting, reduction
+//! tree structure, variant relationships.
+
+use tilesim::coordinator::{case, experiment};
+use tilesim::mem::{HashPolicy, MemConfig};
+use tilesim::sched::StaticMapper;
+use tilesim::sim::{Engine, EngineConfig};
+use tilesim::workloads::mergesort::{self, MergesortConfig, Variant};
+use tilesim::workloads::microbench::{self, MicrobenchConfig};
+
+fn engine(policy: HashPolicy) -> Engine {
+    Engine::new(EngineConfig::tilepro64(MemConfig {
+        hash_policy: policy,
+        striping: true,
+    }))
+}
+
+#[test]
+fn microbench_traffic_scales_linearly_with_reps() {
+    let stats = |reps| {
+        let mut e = engine(HashPolicy::None);
+        let p = microbench::build(
+            &mut e,
+            &MicrobenchConfig {
+                elems: 1 << 16,
+                threads: 8,
+                reps,
+                localised: false,
+            },
+        );
+        e.run(&p, &mut StaticMapper::new()).unwrap()
+    };
+    let s4 = stats(4);
+    let s8 = stats(8);
+    assert_eq!(s8.line_accesses, 2 * s4.line_accesses);
+}
+
+#[test]
+fn localised_microbench_adds_exactly_one_copy_pass() {
+    let count = |localised| {
+        let mut e = engine(HashPolicy::None);
+        let p = microbench::build(
+            &mut e,
+            &MicrobenchConfig {
+                elems: 1 << 16,
+                threads: 8,
+                reps: 4,
+                localised,
+            },
+        );
+        e.run(&p, &mut StaticMapper::new()).unwrap().line_accesses
+    };
+    let non_loc = count(false);
+    let loc = count(true);
+    // One extra copy pass = 2 * elems/16 lines.
+    assert_eq!(loc - non_loc, 2 * (1 << 16) / 16);
+}
+
+#[test]
+fn mergesort_thread_sweep_same_traffic_order() {
+    // Total traffic should not balloon with thread count (same total work,
+    // one extra merge level per doubling).
+    let lines = |threads| {
+        let mut e = engine(HashPolicy::AllButStack);
+        let p = mergesort::build(
+            &mut e,
+            &MergesortConfig {
+                elems: 1 << 16,
+                threads,
+                variant: Variant::NonLocalised,
+            },
+        );
+        e.run(&p, &mut StaticMapper::new()).unwrap().line_accesses
+    };
+    let t1 = lines(1);
+    let t16 = lines(16);
+    assert!(t16 < t1 * 2, "16-thread traffic {t16} vs serial {t1}");
+}
+
+#[test]
+fn localised_variant_result_slot_chain_is_consistent() {
+    // The root result of the localised tree is the last live slot: allocs
+    // == frees + live (root ext_scr + nothing else).
+    for threads in [2usize, 4, 8, 16] {
+        let mut e = engine(HashPolicy::None);
+        let p = mergesort::build(
+            &mut e,
+            &MergesortConfig {
+                elems: 1 << 14,
+                threads,
+                variant: Variant::Localised,
+            },
+        );
+        let stats = e.run(&p, &mut StaticMapper::new()).unwrap();
+        // 2 preallocs (array0 + scratch0) + workload allocs.
+        assert_eq!(
+            stats.allocs - stats.frees,
+            2 + 1,
+            "threads={threads}: exactly the root ext_scr must stay live"
+        );
+    }
+}
+
+#[test]
+fn intermediate_variant_sits_between() {
+    // Traffic: intermediate < plain non-localised (no copy-back).
+    // Allocation count: intermediate > plain (ext_scr per merge).
+    let run = |variant| {
+        let mut e = engine(HashPolicy::AllButStack);
+        let p = mergesort::build(
+            &mut e,
+            &MergesortConfig {
+                elems: 1 << 15,
+                threads: 8,
+                variant,
+            },
+        );
+        e.run(&p, &mut StaticMapper::new()).unwrap()
+    };
+    let plain = run(Variant::NonLocalised);
+    let interm = run(Variant::NonLocalisedIntermediate);
+    assert!(interm.line_accesses < plain.line_accesses);
+    assert!(interm.allocs > plain.allocs);
+}
+
+#[test]
+fn one_thread_equals_pure_serial_sort() {
+    // With one thread there are no events/waits and no parallel merges.
+    let mut e = engine(HashPolicy::AllButStack);
+    let p = mergesort::build(
+        &mut e,
+        &MergesortConfig {
+            elems: 1 << 12,
+            threads: 1,
+            variant: Variant::NonLocalised,
+        },
+    );
+    assert_eq!(p.threads.len(), 1);
+    let stats = e.run(&p, &mut StaticMapper::new()).unwrap();
+    assert!(stats.makespan_cycles > 0);
+}
+
+#[test]
+fn experiment_helpers_cover_all_cases() {
+    for id in 1..=8u8 {
+        let c = case(id);
+        let stats = experiment::run_mergesort(&c, 1 << 13, 4, true, experiment::DEFAULT_SEED);
+        assert!(stats.makespan_cycles > 0, "case {id}");
+    }
+}
+
+#[test]
+fn microbench_63_threads_uneven_tail_part() {
+    // 1M is not divisible by 63: the last thread gets the remainder, and
+    // the program must still cover every element exactly once per rep.
+    let mut e = engine(HashPolicy::None);
+    let elems = 1_000_000u64;
+    let p = microbench::build(
+        &mut e,
+        &MicrobenchConfig {
+            elems,
+            threads: 63,
+            reps: 1,
+            localised: false,
+        },
+    );
+    let stats = e.run(&p, &mut StaticMapper::new()).unwrap();
+    // One rep = read n + write n at line granularity; parts are
+    // line-unaligned so allow per-thread straddle slack (+1 line per
+    // boundary per stream).
+    let lines = elems * 4 / 64;
+    assert!(stats.line_accesses >= 2 * lines);
+    assert!(stats.line_accesses <= 2 * lines + 4 * 63);
+}

@@ -1,0 +1,200 @@
+//! Property tests over the substrates (own driver — see util::prop).
+
+use tilesim::arch::{hops, CacheGeometry, TileId, NUM_TILES, PAGE_BYTES};
+use tilesim::cache::{CacheSystem, SetAssoc};
+use tilesim::mem::{
+    AllocKind, Allocator, HashPolicy, Homing, LineId, MemConfig, VAddr,
+};
+use tilesim::noc::xy_path;
+use tilesim::util::json::{parse, Json};
+use tilesim::util::prop::{self, assert_holds};
+
+#[test]
+fn prop_allocator_never_overlaps_and_frees_are_reusable() {
+    prop::check("allocator non-overlap", 64, |rng| {
+        let mut a = Allocator::new(MemConfig {
+            hash_policy: if rng.chance(0.5) {
+                HashPolicy::AllButStack
+            } else {
+                HashPolicy::None
+            },
+            striping: rng.chance(0.5),
+        });
+        let mut live: Vec<(u64, u64)> = Vec::new();
+        let mut addrs = Vec::new();
+        for _ in 0..rng.range(1, 60) {
+            if !addrs.is_empty() && rng.chance(0.3) {
+                let ix = rng.below(addrs.len() as u64) as usize;
+                let addr: VAddr = addrs.swap_remove(ix);
+                a.free(addr).map_err(|e| e.to_string())?;
+                live.retain(|&(s, _)| s != addr.0);
+            } else {
+                let bytes = rng.range(1, 4 * PAGE_BYTES);
+                let tile = TileId(rng.below(NUM_TILES as u64) as u32);
+                let r = a.alloc(tile, bytes, AllocKind::Heap).map_err(|e| e.to_string())?;
+                let rounded = bytes.div_ceil(PAGE_BYTES) * PAGE_BYTES;
+                for &(s, e) in &live {
+                    assert_holds(
+                        r.addr.0 >= e || s >= r.addr.0 + rounded,
+                        "regions overlap",
+                    )?;
+                }
+                live.push((r.addr.0, r.addr.0 + rounded));
+                addrs.push(r.addr);
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_homing_is_deterministic_and_in_range() {
+    prop::check("homing determinism", 128, |rng| {
+        let homing = match rng.below(3) {
+            0 => Homing::Single(TileId(rng.below(64) as u32)),
+            1 => Homing::HashForHome,
+            _ => Homing::PageHash,
+        };
+        let line = LineId(rng.next_u64() % (1 << 30));
+        let h1 = homing.home_of(line);
+        let h2 = homing.home_of(line);
+        assert_holds(h1 == h2, "homing not deterministic")?;
+        assert_holds(h1.unwrap().0 < NUM_TILES, "home out of range")
+    });
+}
+
+#[test]
+fn prop_cache_contains_iff_inserted_not_evicted_or_invalidated() {
+    // Model-based check of SetAssoc against a naive per-set LRU model.
+    prop::check("set-assoc vs model", 48, |rng| {
+        let sets = 1usize << rng.below(4); // 1..8 sets
+        let ways = 1 + rng.below(3) as usize;
+        let mut cache = SetAssoc::new(sets, ways);
+        let mut model: Vec<Vec<u64>> = vec![Vec::new(); sets]; // MRU at end
+        for _ in 0..200 {
+            let line = LineId(rng.below(64));
+            let set = (line.0 as usize) % sets;
+            match rng.below(3) {
+                0 => {
+                    cache.insert(line);
+                    let s = &mut model[set];
+                    s.retain(|&l| l != line.0);
+                    s.push(line.0);
+                    if s.len() > ways {
+                        s.remove(0);
+                    }
+                }
+                1 => {
+                    let hit = cache.probe(line);
+                    let in_model = model[set].contains(&line.0);
+                    assert_holds(hit == in_model, "probe disagrees with model")?;
+                    if in_model {
+                        let s = &mut model[set];
+                        s.retain(|&l| l != line.0);
+                        s.push(line.0);
+                    }
+                }
+                _ => {
+                    cache.invalidate(line);
+                    model[set].retain(|&l| l != line.0);
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_coherence_single_writer_no_stale_l1() {
+    // After any write, no OTHER tile may hit the written line in its L1.
+    prop::check("no stale copies", 32, |rng| {
+        let mut sys = CacheSystem::new(&CacheGeometry::TILEPRO64);
+        let tiles: Vec<TileId> = (0..4).map(|_| TileId(rng.below(64) as u32)).collect();
+        let homes: Vec<TileId> = (0..8).map(|_| TileId(rng.below(64) as u32)).collect();
+        for _ in 0..300 {
+            let t = tiles[rng.below(tiles.len() as u64) as usize];
+            let line = LineId(rng.below(16));
+            let home = homes[(line.0 % homes.len() as u64) as usize];
+            if rng.chance(0.4) {
+                sys.write(t, line, home);
+                // Every other tile must now MISS in its private caches —
+                // except the home tile, whose L2 *is* the coherent home
+                // copy (that's DDC working as designed, not staleness).
+                for &other in &tiles {
+                    if other != t && other != home {
+                        assert_holds(
+                            !sys.tile(other).l1.contains(line)
+                                && !sys.tile(other).l2.contains(line),
+                            "stale private copy after write",
+                        )?;
+                    }
+                }
+            } else {
+                sys.read(t, line, home);
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_xy_route_valid() {
+    prop::check("xy routing", 256, |rng| {
+        let a = TileId(rng.below(64) as u32);
+        let b = TileId(rng.below(64) as u32);
+        let path = xy_path(a, b);
+        assert_holds(path[0] == a && *path.last().unwrap() == b, "endpoints")?;
+        assert_holds(path.len() as u32 == hops(a, b) + 1, "length")?;
+        for w in path.windows(2) {
+            assert_holds(hops(w[0], w[1]) == 1, "non-adjacent step")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_round_trips() {
+    fn gen_json(rng: &mut tilesim::util::rng::Rng, depth: u32) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.chance(0.5)),
+            2 => Json::num((rng.next_u32() as f64) / 8.0),
+            3 => Json::str(format!("s{}-\"x\\y\n", rng.below(1000))),
+            4 => Json::arr((0..rng.below(4)).map(|_| gen_json(rng, depth - 1))),
+            _ => Json::obj(
+                (0..rng.below(4))
+                    .map(|i| (Box::leak(format!("k{i}").into_boxed_str()) as &str, gen_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    prop::check("json round trip", 128, |rng| {
+        let v = gen_json(rng, 3);
+        let text = v.encode();
+        let back = parse(&text).map_err(|e| e.to_string())?;
+        prop::assert_eq_dbg(back, v, "round trip")
+    });
+}
+
+#[test]
+fn prop_first_touch_is_sticky_per_page() {
+    prop::check("first touch sticky", 64, |rng| {
+        let mut a = Allocator::new(MemConfig {
+            hash_policy: HashPolicy::None,
+            striping: true,
+        });
+        let r = a
+            .alloc(TileId(0), rng.range(1, 3 * PAGE_BYTES), AllocKind::Heap)
+            .map_err(|e| e.to_string())?;
+        let first_toucher = TileId(rng.below(64) as u32);
+        let line = r.addr.line();
+        let home = a.table.resolve_home(line, first_toucher).map_err(|e| e.to_string())?;
+        prop::assert_eq_dbg(home, first_toucher, "first touch")?;
+        for _ in 0..10 {
+            let other = TileId(rng.below(64) as u32);
+            let h = a.table.resolve_home(line, other).map_err(|e| e.to_string())?;
+            prop::assert_eq_dbg(h, first_toucher, "re-touch must not re-home")?;
+        }
+        Ok(())
+    });
+}
