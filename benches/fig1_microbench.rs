@@ -8,8 +8,10 @@
 //! copy is not amortised and non-localised wins.
 //!
 //! Run: `cargo bench --bench fig1_microbench`
-//! Env: TILESIM_SIZE (elements, default 1M), TILESIM_OUT (json dir).
+//! Env: TILESIM_SIZE (elements, default 1M), TILESIM_OUT (json dir),
+//!      TILESIM_JOBS (worker threads, default: all cores).
 
+use tilesim::coordinator::batch::BatchRunner;
 use tilesim::coordinator::experiment;
 
 fn env_u64(name: &str, default: u64) -> u64 {
@@ -19,7 +21,14 @@ fn env_u64(name: &str, default: u64) -> u64 {
 fn main() {
     let elems = env_u64("TILESIM_SIZE", 1_000_000);
     let reps = [1u32, 2, 4, 8, 16, 32, 64];
-    let table = experiment::fig1(elems, 63, &reps, experiment::DEFAULT_SEED);
+    let runner = BatchRunner::auto();
+    eprintln!("fig1: sweeping on {} worker(s)", runner.jobs());
+    let table = runner.table(&experiment::fig1_spec(
+        elems,
+        63,
+        &reps,
+        experiment::DEFAULT_SEED,
+    ));
     println!("{}", table.render());
     let ratio_last = table.rows.last().map(|(_, v)| v[0] / v[1]).unwrap_or(0.0);
     println!(

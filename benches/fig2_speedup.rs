@@ -8,8 +8,9 @@
 //! local homing (2, 4) collapsing on the tile-0 hot spot.
 //!
 //! Run: `cargo bench --bench fig2_speedup`
-//! Env: TILESIM_SIZE (default 4M), TILESIM_OUT.
+//! Env: TILESIM_SIZE (default 4M), TILESIM_OUT, TILESIM_JOBS.
 
+use tilesim::coordinator::batch::BatchRunner;
 use tilesim::coordinator::experiment;
 
 fn env_u64(name: &str, default: u64) -> u64 {
@@ -19,7 +20,13 @@ fn env_u64(name: &str, default: u64) -> u64 {
 fn main() {
     let elems = env_u64("TILESIM_SIZE", 4_000_000);
     let threads = [1usize, 2, 4, 8, 16, 32, 64];
-    let table = experiment::fig2(elems, &threads, experiment::DEFAULT_SEED);
+    let runner = BatchRunner::auto();
+    eprintln!("fig2: sweeping on {} worker(s)", runner.jobs());
+    let table = runner.table(&experiment::fig2_spec(
+        elems,
+        &threads,
+        experiment::DEFAULT_SEED,
+    ));
     println!("{}", table.render());
     if let Some((_, last)) = table.rows.last() {
         println!(

@@ -9,8 +9,10 @@
 //! The intermediate step helps Case 3 but is second-order vs localisation.
 //!
 //! Run: `cargo bench --bench fig3_datasizes`
-//! Env: TILESIM_SIZES (comma list, default 1,2,4,8 M), TILESIM_OUT.
+//! Env: TILESIM_SIZES (comma list, default 1,2,4,8 M), TILESIM_OUT,
+//!      TILESIM_JOBS.
 
+use tilesim::coordinator::batch::BatchRunner;
 use tilesim::coordinator::experiment;
 
 fn main() {
@@ -22,7 +24,9 @@ fn main() {
                 .collect()
         })
         .unwrap_or_else(|| vec![1_000_000, 2_000_000, 4_000_000, 8_000_000]);
-    let table = experiment::fig3(&sizes, 64, experiment::DEFAULT_SEED);
+    let runner = BatchRunner::auto();
+    eprintln!("fig3: sweeping on {} worker(s)", runner.jobs());
+    let table = runner.table(&experiment::fig3_spec(&sizes, 64, experiment::DEFAULT_SEED));
     println!("{}", table.render());
     if let (Some((_, first)), Some((_, last))) = (table.rows.first(), table.rows.last()) {
         println!(

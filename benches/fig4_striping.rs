@@ -8,8 +8,9 @@
 //! closing point.
 //!
 //! Run: `cargo bench --bench fig4_striping`
-//! Env: TILESIM_SIZE (default 2M), TILESIM_OUT.
+//! Env: TILESIM_SIZE (default 2M), TILESIM_OUT, TILESIM_JOBS.
 
+use tilesim::coordinator::batch::BatchRunner;
 use tilesim::coordinator::experiment;
 
 fn env_u64(name: &str, default: u64) -> u64 {
@@ -19,7 +20,9 @@ fn env_u64(name: &str, default: u64) -> u64 {
 fn main() {
     let elems = env_u64("TILESIM_SIZE", 2_000_000);
     let threads = [16usize, 32, 64];
-    let table = experiment::fig4(elems, &threads, experiment::DEFAULT_SEED);
+    let runner = BatchRunner::auto();
+    eprintln!("fig4: sweeping on {} worker(s)", runner.jobs());
+    let table = runner.table(&experiment::fig4_spec(elems, &threads, experiment::DEFAULT_SEED));
     println!("{}", table.render());
     // Striping benefit at 32 threads for the DRAM-bound case 8.
     if table.rows.len() >= 2 {
@@ -34,7 +37,11 @@ fn main() {
 
     // The paper's closing observation: with caches OFF the striping effect
     // is "much more observable". Smaller input — every access is DRAM.
-    let off = experiment::fig4_cache_off(elems / 8, &threads, experiment::DEFAULT_SEED);
+    let off = runner.table(&experiment::fig4_cache_off_spec(
+        elems / 8,
+        &threads,
+        experiment::DEFAULT_SEED,
+    ));
     println!("{}", off.render());
     off.save(&out, "fig4_cache_off").expect("save failed");
 }

@@ -1,16 +1,21 @@
 //! §Perf: wall-clock throughput of the simulator itself (line events per
-//! second) and of the PJRT request path (keys sorted per second).
+//! second), of the batch worker pool (sweep runs per second at 1 vs N
+//! jobs — written to BENCH_batch.json so the perf trajectory is recorded
+//! per PR), and of the PJRT request path (keys sorted per second).
 //!
 //! This is the harness used for the EXPERIMENTS.md §Perf iteration log —
 //! it measures *our* implementation, not the simulated machine.
 //!
 //! Run: `cargo bench --bench perf_engine`
-//! Env: TILESIM_SIZE (default 2M), TILESIM_SKIP_PJRT=1 to skip the sorter.
+//! Env: TILESIM_SIZE (default 2M), TILESIM_SKIP_PJRT=1 to skip the sorter,
+//!      TILESIM_BENCH_OUT (default BENCH_batch.json).
 
 use std::time::Instant;
 
+use tilesim::coordinator::batch::BatchRunner;
 use tilesim::coordinator::{case, experiment};
 use tilesim::harness::time_it;
+use tilesim::util::json::Json;
 
 fn env_u64(name: &str, default: u64) -> u64 {
     std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
@@ -47,6 +52,50 @@ fn main() {
         stats2.line_accesses as f64 / t2.min_s / 1e6,
         stats2.line_accesses
     );
+
+    // --- batch pool: full table1 sweep at 1 job vs all cores. The sweep
+    // is the unit of work every figure replays, so this is the number the
+    // scaling PRs move; BENCH_batch.json records it per PR.
+    let sweep_elems = (elems / 8).max(1 << 14);
+    let spec = experiment::table1_spec(sweep_elems, 16, experiment::DEFAULT_SEED);
+    let runs = spec.runs.len() + 1; // + baseline
+    let t_serial = time_it(0, 2, || {
+        std::hint::black_box(BatchRunner::new(1).run(&spec).results.len());
+    });
+    let pool = BatchRunner::new(0);
+    let t_pool = time_it(0, 2, || {
+        std::hint::black_box(pool.run(&spec).results.len());
+    });
+    let speedup = t_serial.min_s / t_pool.min_s;
+    println!("{}", t_serial.summary("batch: table1 sweep, 1 job"));
+    println!(
+        "{}",
+        t_pool.summary(&format!("batch: table1 sweep, {} jobs", pool.jobs()))
+    );
+    println!(
+        "batch pool: {runs} runs/sweep, {:.2}x speedup on {} workers",
+        speedup,
+        pool.jobs()
+    );
+    let bench_json = Json::obj(vec![
+        ("bench", Json::str("batch_table1_sweep")),
+        ("elems", Json::num(sweep_elems as f64)),
+        ("runs_per_sweep", Json::num(runs as f64)),
+        ("jobs", Json::num(pool.jobs() as f64)),
+        ("serial_min_s", Json::num(t_serial.min_s)),
+        ("serial_mean_s", Json::num(t_serial.mean_s)),
+        ("pool_min_s", Json::num(t_pool.min_s)),
+        ("pool_mean_s", Json::num(t_pool.mean_s)),
+        ("speedup", Json::num(speedup)),
+        (
+            "runs_per_second",
+            Json::num(runs as f64 / t_pool.min_s),
+        ),
+    ]);
+    let bench_path =
+        std::env::var("TILESIM_BENCH_OUT").unwrap_or_else(|_| "BENCH_batch.json".into());
+    std::fs::write(&bench_path, bench_json.encode()).expect("write BENCH_batch.json");
+    println!("wrote {bench_path}");
 
     // --- request path: PJRT chunked sorter throughput.
     if std::env::var("TILESIM_SKIP_PJRT").is_err() {

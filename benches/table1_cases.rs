@@ -2,8 +2,10 @@
 //! speed-ups vs Case 1, the tabular companion to Fig. 2.
 //!
 //! Run: `cargo bench --bench table1_cases`
-//! Env: TILESIM_SIZE (default 4M), TILESIM_THREADS (default 64), TILESIM_OUT.
+//! Env: TILESIM_SIZE (default 4M), TILESIM_THREADS (default 64),
+//!      TILESIM_OUT, TILESIM_JOBS.
 
+use tilesim::coordinator::batch::BatchRunner;
 use tilesim::coordinator::experiment;
 
 fn env_u64(name: &str, default: u64) -> u64 {
@@ -13,7 +15,13 @@ fn env_u64(name: &str, default: u64) -> u64 {
 fn main() {
     let elems = env_u64("TILESIM_SIZE", 4_000_000);
     let threads = env_u64("TILESIM_THREADS", 64) as usize;
-    let table = experiment::table1_times(elems, threads, experiment::DEFAULT_SEED);
+    let runner = BatchRunner::auto();
+    eprintln!("table1: sweeping on {} worker(s)", runner.jobs());
+    let table = runner.table(&experiment::table1_spec(
+        elems,
+        threads,
+        experiment::DEFAULT_SEED,
+    ));
     println!("{}", table.render());
     let best = table
         .rows

@@ -1,0 +1,506 @@
+//! Parallel batch execution of the experiment matrix.
+//!
+//! The paper's figures are grids of *independent* simulator runs (case ×
+//! elems × threads × variant × seed), and every run is deterministic given
+//! its `RunSpec` — so the sweep itself is an embarrassingly parallel
+//! workload. This module shards an explicit [`SweepSpec`] across host cores
+//! with a scoped-thread worker pool (std only), collects per-run
+//! [`RunStats`] into a [`ResultStore`], and renders both the paper-style
+//! [`SweepTable`] text and machine-readable JSON.
+//!
+//! Determinism is load-bearing: results are keyed by run index, not by
+//! completion order, so `--jobs 1` and `--jobs N` produce byte-identical
+//! JSON (`rust/tests/batch_determinism.rs` pins this).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::coordinator::cases::case;
+use crate::harness::SweepTable;
+use crate::sim::{Engine, RunStats};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::workloads::{mergesort, microbench, radix};
+
+/// Which trace generator a run replays.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Workload {
+    /// Algorithm 2 with `reps` copy repetitions (Fig. 1).
+    Microbench { reps: u32 },
+    /// Algorithms 3/4 (Figs. 2–4, Table 1).
+    Mergesort { variant: mergesort::Variant },
+    /// The related-work radix baseline.
+    Radix { digit_bits: u32 },
+}
+
+impl Workload {
+    pub fn label(&self) -> String {
+        match self {
+            Workload::Microbench { reps } => format!("microbench/r{reps}"),
+            Workload::Mergesort { variant } => format!("mergesort/{}", variant.label()),
+            Workload::Radix { digit_bits } => format!("radix/b{digit_bits}"),
+        }
+    }
+}
+
+/// One fully-specified simulator run. Everything the engine needs is here;
+/// two equal specs always replay to identical [`RunStats`].
+#[derive(Clone, Debug)]
+pub struct RunSpec {
+    /// Table 1 case id (1..=8) — picks mapper, hash policy, and whether the
+    /// localised programming style applies.
+    pub case_id: u8,
+    pub workload: Workload,
+    pub elems: u64,
+    pub threads: usize,
+    pub striping: bool,
+    /// Fig. 4's cache-off ablation.
+    pub caches: bool,
+    pub seed: u64,
+}
+
+impl RunSpec {
+    /// Convenience: merge sort for `case_id` with the case's own variant.
+    pub fn mergesort(case_id: u8, elems: u64, threads: usize, seed: u64) -> RunSpec {
+        RunSpec {
+            case_id,
+            workload: Workload::Mergesort {
+                variant: case(case_id).mergesort_variant(),
+            },
+            elems,
+            threads,
+            striping: true,
+            caches: true,
+            seed,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        format!(
+            "case{} {} n={} t={}{}{} s={}",
+            self.case_id,
+            self.workload.label(),
+            self.elems,
+            self.threads,
+            if self.striping { "" } else { " nostripe" },
+            if self.caches { "" } else { " nocache" },
+            self.seed
+        )
+    }
+
+    /// Build and replay this run on a fresh engine.
+    pub fn execute(&self) -> RunStats {
+        let c = case(self.case_id);
+        let mut cfg = c.engine_config(self.striping);
+        if !self.caches {
+            cfg = cfg.without_caches();
+        }
+        let mut engine = Engine::new(cfg);
+        let program = match self.workload {
+            Workload::Microbench { reps } => microbench::build(
+                &mut engine,
+                &microbench::MicrobenchConfig {
+                    elems: self.elems,
+                    threads: self.threads,
+                    reps,
+                    localised: c.localised,
+                },
+            ),
+            Workload::Mergesort { variant } => mergesort::build(
+                &mut engine,
+                &mergesort::MergesortConfig {
+                    elems: self.elems,
+                    threads: self.threads,
+                    variant,
+                },
+            ),
+            Workload::Radix { digit_bits } => radix::build(
+                &mut engine,
+                &radix::RadixConfig {
+                    elems: self.elems,
+                    threads: self.threads,
+                    digit_bits,
+                    localised: c.localised,
+                },
+            ),
+        };
+        let mut sched = c.mapper.scheduler(self.seed);
+        engine
+            .run(&program, sched.as_mut())
+            .expect("batch run failed")
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("case", Json::num(self.case_id as f64)),
+            ("workload", Json::str(self.workload.label())),
+            ("elems", Json::num(self.elems as f64)),
+            ("threads", Json::num(self.threads as f64)),
+            ("striping", Json::Bool(self.striping)),
+            ("caches", Json::Bool(self.caches)),
+            // Seeds are full-range u64 (derive_seeds): a JSON double would
+            // round them and break replay-from-record, so emit as a string.
+            ("seed", Json::str(self.seed.to_string())),
+        ])
+    }
+}
+
+/// How grid cells are rendered from run stats.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Metric {
+    /// Cell = simulated seconds of the run at that cell.
+    Seconds,
+    /// Cell = baseline makespan / run makespan (Fig. 2 speed-ups).
+    SpeedupVsBaseline,
+    /// One run per row rendered as two columns: seconds and speed-up vs
+    /// the baseline (Table 1).
+    SecondsAndSpeedup,
+}
+
+impl Metric {
+    fn label(&self) -> &'static str {
+        match self {
+            Metric::Seconds => "seconds",
+            Metric::SpeedupVsBaseline => "speedup_vs_baseline",
+            Metric::SecondsAndSpeedup => "seconds_and_speedup",
+        }
+    }
+}
+
+/// An explicit, fully-expanded sweep: a `row_labels.len() × series.len()`
+/// grid of [`RunSpec`]s (row-major) plus an optional baseline run.
+pub struct SweepSpec {
+    pub title: String,
+    pub x_label: String,
+    pub series: Vec<String>,
+    pub row_labels: Vec<String>,
+    /// Grid cells, row-major (`runs[r * series.len() + c]`), except under
+    /// [`Metric::SecondsAndSpeedup`] where there is one run per row.
+    pub runs: Vec<RunSpec>,
+    pub baseline: Option<RunSpec>,
+    pub metric: Metric,
+}
+
+impl SweepSpec {
+    /// Runs per row under this spec's metric.
+    fn runs_per_row(&self) -> usize {
+        match self.metric {
+            Metric::SecondsAndSpeedup => 1,
+            _ => self.series.len(),
+        }
+    }
+
+    /// Check the grid shape; panics early instead of mis-rendering later.
+    pub fn validate(&self) {
+        assert_eq!(
+            self.runs.len(),
+            self.row_labels.len() * self.runs_per_row(),
+            "sweep grid shape mismatch: {} runs for {} rows × {} per row",
+            self.runs.len(),
+            self.row_labels.len(),
+            self.runs_per_row()
+        );
+        if matches!(
+            self.metric,
+            Metric::SpeedupVsBaseline | Metric::SecondsAndSpeedup
+        ) {
+            assert!(self.baseline.is_some(), "metric requires a baseline run");
+        }
+    }
+
+    /// The explicit cross-product grid: one series per (case, workload)
+    /// combination, one row per (elems, threads, seed) point. Seeds come
+    /// pre-derived (see [`derive_seeds`]).
+    pub fn grid(
+        title: &str,
+        cases: &[u8],
+        workloads: &[Workload],
+        elems: &[u64],
+        threads: &[usize],
+        seeds: &[u64],
+    ) -> SweepSpec {
+        assert!(
+            !cases.is_empty() && !workloads.is_empty(),
+            "empty series axes"
+        );
+        assert!(
+            !elems.is_empty() && !threads.is_empty() && !seeds.is_empty(),
+            "empty row axes"
+        );
+        let mut series = Vec::new();
+        for &c in cases {
+            for w in workloads {
+                series.push(format!("case{c}/{}", w.label()));
+            }
+        }
+        let mut row_labels = Vec::new();
+        let mut runs = Vec::new();
+        for &n in elems {
+            for &t in threads {
+                for &s in seeds {
+                    row_labels.push(format!("{n}x{t}@{s}"));
+                    for &c in cases {
+                        for w in workloads {
+                            runs.push(RunSpec {
+                                case_id: c,
+                                workload: *w,
+                                elems: n,
+                                threads: t,
+                                striping: true,
+                                caches: true,
+                                seed: s,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        SweepSpec {
+            title: title.to_string(),
+            x_label: "elems x threads @ seed".to_string(),
+            series,
+            row_labels,
+            runs,
+            baseline: None,
+            metric: Metric::Seconds,
+        }
+    }
+}
+
+/// Per-run deterministic seeds derived from a base seed via `util::rng` —
+/// independent of worker count and scheduling order.
+pub fn derive_seeds(base: u64, n: usize) -> Vec<u64> {
+    let mut rng = Rng::new(base);
+    (0..n).map(|_| rng.next_u64()).collect()
+}
+
+/// Stats for every run of a sweep, index-aligned with `spec.runs`.
+pub struct ResultStore {
+    pub results: Vec<RunStats>,
+    pub baseline: Option<RunStats>,
+}
+
+impl ResultStore {
+    /// Render the paper-style table for `spec` (the spec this store was
+    /// produced from).
+    pub fn table(&self, spec: &SweepSpec) -> SweepTable {
+        spec.validate();
+        let mut t = SweepTable::new(&spec.title, &spec.x_label, spec.series.clone());
+        let base = self
+            .baseline
+            .as_ref()
+            .map(|b| b.makespan_cycles as f64)
+            .unwrap_or(0.0);
+        let per_row = spec.runs_per_row();
+        for (r, label) in spec.row_labels.iter().enumerate() {
+            let cells = &self.results[r * per_row..(r + 1) * per_row];
+            let row = match spec.metric {
+                Metric::Seconds => cells.iter().map(|s| s.seconds()).collect(),
+                Metric::SpeedupVsBaseline => cells
+                    .iter()
+                    .map(|s| base / s.makespan_cycles as f64)
+                    .collect(),
+                Metric::SecondsAndSpeedup => {
+                    let s = &cells[0];
+                    vec![s.seconds(), base / s.makespan_cycles as f64]
+                }
+            };
+            t.push_row(label.clone(), row);
+        }
+        t
+    }
+
+    /// Full machine-readable record: every spec + stats pair, the baseline,
+    /// and the rendered table. Byte-identical across worker counts.
+    pub fn to_json(&self, spec: &SweepSpec) -> Json {
+        let runs = spec
+            .runs
+            .iter()
+            .zip(&self.results)
+            .map(|(r, s)| Json::obj(vec![("spec", r.to_json()), ("stats", s.to_json())]))
+            .collect::<Vec<_>>();
+        let baseline = match (&spec.baseline, &self.baseline) {
+            (Some(r), Some(s)) => Json::obj(vec![("spec", r.to_json()), ("stats", s.to_json())]),
+            _ => Json::Null,
+        };
+        Json::obj(vec![
+            ("title", Json::str(spec.title.clone())),
+            ("metric", Json::str(spec.metric.label())),
+            ("baseline", baseline),
+            ("runs", Json::arr(runs)),
+            ("table", self.table(spec).to_json()),
+        ])
+    }
+}
+
+/// The scoped-thread worker pool that shards runs across host cores.
+pub struct BatchRunner {
+    jobs: usize,
+}
+
+impl BatchRunner {
+    /// `jobs = 0` means one worker per available host core.
+    pub fn new(jobs: usize) -> BatchRunner {
+        let jobs = if jobs == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        } else {
+            jobs
+        };
+        BatchRunner { jobs }
+    }
+
+    /// Honour `TILESIM_JOBS` if set, else use every host core. This is the
+    /// default path for the experiment drivers and bench binaries.
+    pub fn auto() -> BatchRunner {
+        let jobs = std::env::var("TILESIM_JOBS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0);
+        BatchRunner::new(jobs)
+    }
+
+    pub fn jobs(&self) -> usize {
+        self.jobs
+    }
+
+    /// Execute every run of `spec` (baseline included) across the pool.
+    pub fn run(&self, spec: &SweepSpec) -> ResultStore {
+        spec.validate();
+        let mut all: Vec<&RunSpec> = spec.runs.iter().collect();
+        if let Some(b) = &spec.baseline {
+            all.push(b);
+        }
+        let mut stats = execute_all(&all, self.jobs);
+        let baseline = spec.baseline.as_ref().map(|_| stats.pop().expect("baseline"));
+        ResultStore {
+            results: stats,
+            baseline,
+        }
+    }
+
+    /// Shorthand: run the sweep and render its table.
+    pub fn table(&self, spec: &SweepSpec) -> SweepTable {
+        self.run(spec).table(spec)
+    }
+}
+
+impl Default for BatchRunner {
+    fn default() -> Self {
+        BatchRunner::auto()
+    }
+}
+
+/// Shard `runs` over `jobs` workers; results are index-aligned with the
+/// input regardless of which worker ran what.
+fn execute_all(runs: &[&RunSpec], jobs: usize) -> Vec<RunStats> {
+    let jobs = jobs.max(1).min(runs.len().max(1));
+    if jobs == 1 {
+        return runs.iter().map(|r| r.execute()).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let per_worker: Vec<Vec<(usize, RunStats)>> = std::thread::scope(|s| {
+        let workers: Vec<_> = (0..jobs)
+            .map(|_| {
+                s.spawn(|| {
+                    let mut local = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= runs.len() {
+                            break;
+                        }
+                        local.push((i, runs[i].execute()));
+                    }
+                    local
+                })
+            })
+            .collect();
+        workers
+            .into_iter()
+            .map(|w| w.join().expect("batch worker panicked"))
+            .collect()
+    });
+    let mut out: Vec<Option<RunStats>> = vec![None; runs.len()];
+    for (i, stats) in per_worker.into_iter().flatten() {
+        out[i] = Some(stats);
+    }
+    out.into_iter()
+        .map(|o| o.expect("worker pool dropped a run"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec() -> SweepSpec {
+        SweepSpec::grid(
+            "tiny",
+            &[1, 8],
+            &[Workload::Mergesort {
+                variant: mergesort::Variant::NonLocalised,
+            }],
+            &[1 << 12],
+            &[2, 4],
+            &[7],
+        )
+    }
+
+    #[test]
+    fn grid_expands_full_cross_product() {
+        let spec = tiny_spec();
+        assert_eq!(spec.series.len(), 2);
+        assert_eq!(spec.row_labels.len(), 2);
+        assert_eq!(spec.runs.len(), 4);
+        spec.validate();
+    }
+
+    #[test]
+    fn spec_execution_is_deterministic() {
+        let spec = RunSpec::mergesort(8, 1 << 12, 4, 42);
+        let a = spec.execute();
+        let b = spec.execute();
+        assert_eq!(a.makespan_cycles, b.makespan_cycles);
+        assert_eq!(a.thread_cycles, b.thread_cycles);
+    }
+
+    #[test]
+    fn pool_results_are_index_aligned() {
+        let spec = tiny_spec();
+        let serial = BatchRunner::new(1).run(&spec);
+        let parallel = BatchRunner::new(4).run(&spec);
+        for (a, b) in serial.results.iter().zip(&parallel.results) {
+            assert_eq!(a.makespan_cycles, b.makespan_cycles);
+            assert_eq!(a.line_accesses, b.line_accesses);
+        }
+    }
+
+    #[test]
+    fn derive_seeds_is_stable_and_distinct() {
+        let a = derive_seeds(2014, 8);
+        let b = derive_seeds(2014, 8);
+        assert_eq!(a, b);
+        let mut uniq = a.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), 8, "derived seeds must be distinct");
+        assert_ne!(derive_seeds(2015, 8), a);
+    }
+
+    #[test]
+    fn table_renders_grid_shape() {
+        let spec = tiny_spec();
+        let t = BatchRunner::new(2).table(&spec);
+        assert_eq!(t.rows.len(), 2);
+        assert_eq!(t.series.len(), 2);
+        assert!(t.rows.iter().all(|(_, v)| v.iter().all(|&x| x > 0.0)));
+    }
+
+    #[test]
+    #[should_panic(expected = "sweep grid shape mismatch")]
+    fn malformed_grid_is_rejected() {
+        let mut spec = tiny_spec();
+        spec.runs.pop();
+        BatchRunner::new(1).run(&spec);
+    }
+}

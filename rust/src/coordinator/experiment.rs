@@ -1,9 +1,15 @@
 //! Experiment drivers: one function per paper artefact (Fig. 1–4, Table 1).
 //!
-//! Each driver sweeps the paper's parameter grid, runs the simulator, and
-//! returns a `SweepTable` whose rows/series mirror the published figure.
-//! The bench binaries and the `repro` CLI are thin wrappers around these.
+//! Each driver is now a thin *sweep-spec builder*: `figN_spec` expands the
+//! paper's parameter grid into an explicit [`SweepSpec`] and `figN` executes
+//! it through the [`batch`] worker pool (parallel across host cores,
+//! deterministic regardless of `--jobs`), returning the same `SweepTable`
+//! the sequential drivers used to produce. The bench binaries and the
+//! `repro` CLI are thin wrappers around these.
+//!
+//! [`batch`]: crate::coordinator::batch
 
+use crate::coordinator::batch::{BatchRunner, Metric, RunSpec, SweepSpec, Workload};
 use crate::coordinator::cases::{table1, CaseSpec};
 use crate::harness::SweepTable;
 use crate::mem::HashPolicy;
@@ -66,32 +72,39 @@ pub fn run_mergesort_variant(
 // Fig. 1 — micro-benchmark execution time vs repetitions
 // ---------------------------------------------------------------------------
 
-/// Paper setup: 1 M integers, 63 threads; localised (static map, hash
-/// disabled) vs non-localised (Tile Linux default mapping, hash-for-home).
-pub fn fig1(elems: u64, threads: usize, reps_sweep: &[u32], seed: u64) -> SweepTable {
-    let localised = CaseSpec {
-        id: 8,
-        localised: true,
-        mapper: crate::coordinator::cases::MapperKind::Static,
-        hash: HashPolicy::None,
+/// Paper setup: 1 M integers, 63 threads; localised (case 8: static map,
+/// hash disabled) vs non-localised (case 1: Tile Linux default mapping,
+/// hash-for-home), expressed as an explicit sweep grid.
+pub fn fig1_spec(elems: u64, threads: usize, reps_sweep: &[u32], seed: u64) -> SweepSpec {
+    let mb = |case_id: u8, reps: u32| RunSpec {
+        case_id,
+        workload: Workload::Microbench { reps },
+        elems,
+        threads,
+        striping: true,
+        caches: true,
+        seed,
     };
-    let non_localised = CaseSpec {
-        id: 1,
-        localised: false,
-        mapper: crate::coordinator::cases::MapperKind::TileLinux,
-        hash: HashPolicy::AllButStack,
-    };
-    let mut t = SweepTable::new(
-        &format!("Fig.1 micro-benchmark, {elems} ints, {threads} threads (exec time, s)"),
-        "repetitions",
-        vec!["non-localised".into(), "localised".into()],
-    );
+    let mut runs = Vec::new();
+    let mut row_labels = Vec::new();
     for &reps in reps_sweep {
-        let nl = run_microbench(&non_localised, elems, threads, reps, seed);
-        let lo = run_microbench(&localised, elems, threads, reps, seed);
-        t.push_row(reps.to_string(), vec![nl.seconds(), lo.seconds()]);
+        row_labels.push(reps.to_string());
+        runs.push(mb(1, reps));
+        runs.push(mb(8, reps));
     }
-    t
+    SweepSpec {
+        title: format!("Fig.1 micro-benchmark, {elems} ints, {threads} threads (exec time, s)"),
+        x_label: "repetitions".into(),
+        series: vec!["non-localised".into(), "localised".into()],
+        row_labels,
+        runs,
+        baseline: None,
+        metric: Metric::Seconds,
+    }
+}
+
+pub fn fig1(elems: u64, threads: usize, reps_sweep: &[u32], seed: u64) -> SweepTable {
+    BatchRunner::auto().table(&fig1_spec(elems, threads, reps_sweep, seed))
 }
 
 // ---------------------------------------------------------------------------
@@ -102,38 +115,52 @@ pub fn fig1(elems: u64, threads: usize, reps_sweep: &[u32], seed: u64) -> SweepT
 /// is Case 1 at a single thread, exactly as in §5.1: "execution time with
 /// a single thread under the default hashing scheme and the default Linux
 /// scheduling policy".
-pub fn fig2(elems: u64, thread_sweep: &[usize], seed: u64) -> SweepTable {
+pub fn fig2_spec(elems: u64, thread_sweep: &[usize], seed: u64) -> SweepSpec {
     let cases = table1();
-    let base = run_mergesort(&cases[0], elems, 1, true, seed).makespan_cycles as f64;
-    let mut t = SweepTable::new(
-        &format!("Fig.2 merge sort speed-up, {elems} ints (base: case 1 @ 1 thread)"),
-        "threads",
-        cases.iter().map(|c| c.short()).collect(),
-    );
+    let mut runs = Vec::new();
+    let mut row_labels = Vec::new();
     for &threads in thread_sweep {
-        let row = cases
-            .iter()
-            .map(|c| base / run_mergesort(c, elems, threads, true, seed).makespan_cycles as f64)
-            .collect();
-        t.push_row(threads.to_string(), row);
+        row_labels.push(threads.to_string());
+        for c in &cases {
+            runs.push(RunSpec::mergesort(c.id, elems, threads, seed));
+        }
     }
-    t
+    SweepSpec {
+        title: format!("Fig.2 merge sort speed-up, {elems} ints (base: case 1 @ 1 thread)"),
+        x_label: "threads".into(),
+        series: cases.iter().map(|c| c.short()).collect(),
+        row_labels,
+        runs,
+        baseline: Some(RunSpec::mergesort(1, elems, 1, seed)),
+        metric: Metric::SpeedupVsBaseline,
+    }
+}
+
+pub fn fig2(elems: u64, thread_sweep: &[usize], seed: u64) -> SweepTable {
+    BatchRunner::auto().table(&fig2_spec(elems, thread_sweep, seed))
 }
 
 /// Table 1 rendered as execution times at a fixed thread count.
-pub fn table1_times(elems: u64, threads: usize, seed: u64) -> SweepTable {
-    let mut t = SweepTable::new(
-        &format!("Table 1 cases: merge sort of {elems} ints, {threads} threads (exec time, s)"),
-        "case",
-        vec!["seconds".into(), "speedup_vs_case1".into()],
-    );
+pub fn table1_spec(elems: u64, threads: usize, seed: u64) -> SweepSpec {
     let cases = table1();
-    let c1 = run_mergesort(&cases[0], elems, threads, true, seed).makespan_cycles as f64;
-    for c in &cases {
-        let s = run_mergesort(c, elems, threads, true, seed);
-        t.push_row(c.short(), vec![s.seconds(), c1 / s.makespan_cycles as f64]);
+    SweepSpec {
+        title: format!(
+            "Table 1 cases: merge sort of {elems} ints, {threads} threads (exec time, s)"
+        ),
+        x_label: "case".into(),
+        series: vec!["seconds".into(), "speedup_vs_case1".into()],
+        row_labels: cases.iter().map(|c| c.short()).collect(),
+        runs: cases
+            .iter()
+            .map(|c| RunSpec::mergesort(c.id, elems, threads, seed))
+            .collect(),
+        baseline: Some(RunSpec::mergesort(1, elems, threads, seed)),
+        metric: Metric::SecondsAndSpeedup,
     }
-    t
+}
+
+pub fn table1_times(elems: u64, threads: usize, seed: u64) -> SweepTable {
+    BatchRunner::auto().table(&table1_spec(elems, threads, seed))
 }
 
 // ---------------------------------------------------------------------------
@@ -142,39 +169,41 @@ pub fn table1_times(elems: u64, threads: usize, seed: u64) -> SweepTable {
 
 /// §5.2: cases 3, 4, 7, 8 plus "case 3 + intermediate step", 64 threads,
 /// sweeping the input size. Execution time in seconds.
-pub fn fig3(sizes: &[u64], threads: usize, seed: u64) -> SweepTable {
-    let cases = table1();
-    let series: Vec<String> = vec![
-        "case3".into(),
-        "case3+interm".into(),
-        "case4".into(),
-        "case7".into(),
-        "case8".into(),
-    ];
-    let mut t = SweepTable::new(
-        &format!("Fig.3 exec time vs input size, {threads} threads (s)"),
-        "elems",
-        series,
-    );
+pub fn fig3_spec(sizes: &[u64], threads: usize, seed: u64) -> SweepSpec {
+    let mut runs = Vec::new();
+    let mut row_labels = Vec::new();
     for &elems in sizes {
-        let c3 = run_mergesort(&cases[2], elems, threads, true, seed);
-        let c3i = run_mergesort_variant(
-            &cases[2],
-            mergesort::Variant::NonLocalisedIntermediate,
-            elems,
-            threads,
-            true,
-            seed,
-        );
-        let c4 = run_mergesort(&cases[3], elems, threads, true, seed);
-        let c7 = run_mergesort(&cases[6], elems, threads, true, seed);
-        let c8 = run_mergesort(&cases[7], elems, threads, true, seed);
-        t.push_row(
-            elems.to_string(),
-            vec![c3.seconds(), c3i.seconds(), c4.seconds(), c7.seconds(), c8.seconds()],
-        );
+        row_labels.push(elems.to_string());
+        runs.push(RunSpec::mergesort(3, elems, threads, seed));
+        runs.push(RunSpec {
+            workload: Workload::Mergesort {
+                variant: mergesort::Variant::NonLocalisedIntermediate,
+            },
+            ..RunSpec::mergesort(3, elems, threads, seed)
+        });
+        runs.push(RunSpec::mergesort(4, elems, threads, seed));
+        runs.push(RunSpec::mergesort(7, elems, threads, seed));
+        runs.push(RunSpec::mergesort(8, elems, threads, seed));
     }
-    t
+    SweepSpec {
+        title: format!("Fig.3 exec time vs input size, {threads} threads (s)"),
+        x_label: "elems".into(),
+        series: vec![
+            "case3".into(),
+            "case3+interm".into(),
+            "case4".into(),
+            "case7".into(),
+            "case8".into(),
+        ],
+        row_labels,
+        runs,
+        baseline: None,
+        metric: Metric::Seconds,
+    }
+}
+
+pub fn fig3(sizes: &[u64], threads: usize, seed: u64) -> SweepTable {
+    BatchRunner::auto().table(&fig3_spec(sizes, threads, seed))
 }
 
 // ---------------------------------------------------------------------------
@@ -183,66 +212,70 @@ pub fn fig3(sizes: &[u64], threads: usize, seed: u64) -> SweepTable {
 
 /// §5.3: execution time with striping on/off over the thread sweep, static
 /// mapping, for the non-localised (hash) and localised (none) styles.
-pub fn fig4(elems: u64, thread_sweep: &[usize], seed: u64) -> SweepTable {
-    let cases = table1();
-    let c3 = &cases[2]; // non-localised, static, hash
-    let c8 = &cases[7]; // localised, static, none
-    let mut t = SweepTable::new(
-        &format!("Fig.4 striping influence, static mapping, {elems} ints (exec time, s)"),
-        "threads",
-        vec![
+pub fn fig4_spec(elems: u64, thread_sweep: &[usize], seed: u64) -> SweepSpec {
+    let with_striping = |case_id: u8, threads: usize, striping: bool| RunSpec {
+        striping,
+        ..RunSpec::mergesort(case_id, elems, threads, seed)
+    };
+    let mut runs = Vec::new();
+    let mut row_labels = Vec::new();
+    for &threads in thread_sweep {
+        row_labels.push(threads.to_string());
+        runs.push(with_striping(3, threads, true));
+        runs.push(with_striping(3, threads, false));
+        runs.push(with_striping(8, threads, true));
+        runs.push(with_striping(8, threads, false));
+    }
+    SweepSpec {
+        title: format!("Fig.4 striping influence, static mapping, {elems} ints (exec time, s)"),
+        x_label: "threads".into(),
+        series: vec![
             "case3 striped".into(),
             "case3 non-striped".into(),
             "case8 striped".into(),
             "case8 non-striped".into(),
         ],
-    );
-    for &threads in thread_sweep {
-        t.push_row(
-            threads.to_string(),
-            vec![
-                run_mergesort(c3, elems, threads, true, seed).seconds(),
-                run_mergesort(c3, elems, threads, false, seed).seconds(),
-                run_mergesort(c8, elems, threads, true, seed).seconds(),
-                run_mergesort(c8, elems, threads, false, seed).seconds(),
-            ],
-        );
+        row_labels,
+        runs,
+        baseline: None,
+        metric: Metric::Seconds,
     }
-    t
+}
+
+pub fn fig4(elems: u64, thread_sweep: &[usize], seed: u64) -> SweepTable {
+    BatchRunner::auto().table(&fig4_spec(elems, thread_sweep, seed))
 }
 
 /// Fig. 4's closing observation: "the effect of memory striping is
 /// considerable when caching is turned off across the system". Same sweep
 /// as fig4 but with the caches disabled — every access is a DRAM
 /// transaction, so controller reach/contention dominates.
-pub fn fig4_cache_off(elems: u64, thread_sweep: &[usize], seed: u64) -> SweepTable {
-    let c3 = crate::coordinator::cases::case(3);
-    let mut t = SweepTable::new(
-        &format!("Fig.4 ablation: caches OFF, static mapping, {elems} ints (exec time, s)"),
-        "threads",
-        vec!["striped".into(), "non-striped".into()],
-    );
+pub fn fig4_cache_off_spec(elems: u64, thread_sweep: &[usize], seed: u64) -> SweepSpec {
+    let cache_off = |threads: usize, striping: bool| RunSpec {
+        striping,
+        caches: false,
+        ..RunSpec::mergesort(3, elems, threads, seed)
+    };
+    let mut runs = Vec::new();
+    let mut row_labels = Vec::new();
     for &threads in thread_sweep {
-        let run = |striping: bool| {
-            let mut engine =
-                Engine::new(c3.engine_config(striping).without_caches());
-            let program = mergesort::build(
-                &mut engine,
-                &mergesort::MergesortConfig {
-                    elems,
-                    threads,
-                    variant: mergesort::Variant::NonLocalised,
-                },
-            );
-            let mut sched = c3.mapper.scheduler(seed);
-            engine
-                .run(&program, sched.as_mut())
-                .expect("cache-off run failed")
-                .seconds()
-        };
-        t.push_row(threads.to_string(), vec![run(true), run(false)]);
+        row_labels.push(threads.to_string());
+        runs.push(cache_off(threads, true));
+        runs.push(cache_off(threads, false));
     }
-    t
+    SweepSpec {
+        title: format!("Fig.4 ablation: caches OFF, static mapping, {elems} ints (exec time, s)"),
+        x_label: "threads".into(),
+        series: vec!["striped".into(), "non-striped".into()],
+        row_labels,
+        runs,
+        baseline: None,
+        metric: Metric::Seconds,
+    }
+}
+
+pub fn fig4_cache_off(elems: u64, thread_sweep: &[usize], seed: u64) -> SweepTable {
+    BatchRunner::auto().table(&fig4_cache_off_spec(elems, thread_sweep, seed))
 }
 
 /// §2's three homing classes head-to-head on the repeated-scan kernel:

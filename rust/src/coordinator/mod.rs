@@ -2,11 +2,16 @@
 //!
 //! - [`localise`] — Algorithm 1 as a reusable API over any chunk kernel.
 //! - [`cases`] — the Table 1 experiment matrix.
-//! - [`experiment`] — drivers that regenerate every figure/table.
+//! - [`experiment`] — sweep-spec builders that regenerate every
+//!   figure/table through the batch pool.
+//! - [`batch`] — the parallel sweep executor: `SweepSpec` grids sharded
+//!   across host cores into a deterministic `ResultStore`.
 
+pub mod batch;
 pub mod cases;
 pub mod experiment;
 pub mod localise;
 
+pub use batch::{derive_seeds, BatchRunner, Metric, ResultStore, RunSpec, SweepSpec, Workload};
 pub use cases::{case, table1, CaseSpec, MapperKind};
 pub use localise::{build_program, ChunkKernel, LocaliseConfig};

@@ -7,12 +7,14 @@
 //!   mergesort  [flags]           one merge-sort run (Alg. 3/4)
 //!   sort       [flags]           REAL sort via the AOT'd Pallas kernels
 //!   experiment <fig1|fig2|fig3|fig4|table1|all> [flags]
+//!   batch      <fig…|all|grid>   parallel sweeps over the worker pool
 //!
 //! Common flags: --size N (supports k/m/ki/mi suffixes), --threads N,
-//! --reps N, --case 1..8, --seed S, --no-striping, --json, --out DIR.
+//! --reps N, --case 1..8, --seed S, --jobs N, --no-striping, --json,
+//! --out DIR.
 
+use tilesim::coordinator::batch::{derive_seeds, BatchRunner, SweepSpec, Workload};
 use tilesim::coordinator::{case, experiment, table1};
-use tilesim::harness::SweepTable;
 use tilesim::util::cli::{parse_usize, Args};
 use tilesim::workloads::mergesort::Variant;
 
@@ -29,7 +31,20 @@ fn main() {
 }
 
 const VALUE_FLAGS: &[&str] = &[
-    "size", "threads", "reps", "case", "seed", "out", "sizes", "variant", "digit-bits",
+    "size",
+    "threads",
+    "reps",
+    "case",
+    "seed",
+    "out",
+    "sizes",
+    "variant",
+    "digit-bits",
+    "jobs",
+    "cases",
+    "threads-list",
+    "workload",
+    "seeds",
 ];
 const BOOL_FLAGS: &[&str] = &["json", "no-striping", "no-cache", "localised", "help", "heatmap"];
 
@@ -114,51 +129,11 @@ fn run(argv: &[String]) -> Result<(), Box<dyn std::error::Error>> {
                 .get(1)
                 .map(|s| s.as_str())
                 .unwrap_or("all");
-            let size = args.usize("size", 4_000_000)? as u64;
-            let threads_all = [1usize, 2, 4, 8, 16, 32, 64];
+            let specs = figure_specs(which, &args, seed)?;
+            let runner = BatchRunner::new(args.usize("jobs", 0)?);
             let out = args.get("out").map(|s| s.to_string());
-            let mut tables: Vec<(String, SweepTable)> = Vec::new();
-            if which == "fig1" || which == "all" {
-                tables.push((
-                    "fig1".into(),
-                    experiment::fig1(
-                        args.usize("size", 1_000_000)? as u64,
-                        63,
-                        &[1, 2, 4, 8, 16, 32, 64],
-                        seed,
-                    ),
-                ));
-            }
-            if which == "fig2" || which == "all" {
-                tables.push(("fig2".into(), experiment::fig2(size, &threads_all, seed)));
-            }
-            if which == "table1" || which == "all" {
-                tables.push((
-                    "table1".into(),
-                    experiment::table1_times(size, args.usize("threads", 64)?, seed),
-                ));
-            }
-            if which == "fig3" || which == "all" {
-                let sizes: Vec<u64> = match args.get("sizes") {
-                    Some(s) => s
-                        .split(',')
-                        .map(|x| parse_usize(x).map(|v| v as u64))
-                        .collect::<Option<Vec<_>>>()
-                        .ok_or("bad --sizes list")?,
-                    None => vec![1_000_000, 2_000_000, 4_000_000, 8_000_000],
-                };
-                tables.push(("fig3".into(), experiment::fig3(&sizes, 64, seed)));
-            }
-            if which == "fig4" || which == "all" {
-                tables.push((
-                    "fig4".into(),
-                    experiment::fig4(size, &[16, 32, 64], seed),
-                ));
-            }
-            if tables.is_empty() {
-                return Err(format!("unknown experiment '{which}'").into());
-            }
-            for (name, t) in &tables {
+            for (name, spec) in &specs {
+                let t = runner.table(spec);
                 println!("{}", t.render());
                 if let Some(dir) = &out {
                     t.save(dir, name)?;
@@ -166,11 +141,176 @@ fn run(argv: &[String]) -> Result<(), Box<dyn std::error::Error>> {
             }
             Ok(())
         }
+        "batch" => batch_cmd(&args, seed),
         other => {
             print_usage();
             Err(format!("unknown command '{other}'").into())
         }
     }
+}
+
+/// Expand a figure selector into named sweep specs (shared by the
+/// `experiment` and `batch` subcommands).
+fn figure_specs(
+    which: &str,
+    args: &Args,
+    seed: u64,
+) -> Result<Vec<(String, SweepSpec)>, Box<dyn std::error::Error>> {
+    let size = args.usize("size", 4_000_000)? as u64;
+    let threads_all = [1usize, 2, 4, 8, 16, 32, 64];
+    let mut specs: Vec<(String, SweepSpec)> = Vec::new();
+    if which == "fig1" || which == "all" {
+        specs.push((
+            "fig1".into(),
+            experiment::fig1_spec(
+                args.usize("size", 1_000_000)? as u64,
+                63,
+                &[1, 2, 4, 8, 16, 32, 64],
+                seed,
+            ),
+        ));
+    }
+    if which == "fig2" || which == "all" {
+        specs.push(("fig2".into(), experiment::fig2_spec(size, &threads_all, seed)));
+    }
+    if which == "table1" || which == "all" {
+        specs.push((
+            "table1".into(),
+            experiment::table1_spec(size, args.usize("threads", 64)?, seed),
+        ));
+    }
+    if which == "fig3" || which == "all" {
+        let sizes: Vec<u64> = match args.get("sizes") {
+            Some(s) => {
+                parse_list(s, |x| parse_usize(x).map(|v| v as u64)).ok_or("bad --sizes list")?
+            }
+            None => vec![1_000_000, 2_000_000, 4_000_000, 8_000_000],
+        };
+        specs.push(("fig3".into(), experiment::fig3_spec(&sizes, 64, seed)));
+    }
+    if which == "fig4" || which == "all" {
+        specs.push(("fig4".into(), experiment::fig4_spec(size, &[16, 32, 64], seed)));
+    }
+    if specs.is_empty() {
+        return Err(format!("unknown experiment '{which}'").into());
+    }
+    Ok(specs)
+}
+
+/// `repro batch <fig…|all|grid>`: run sweeps through the worker pool and
+/// emit machine-readable results. `--jobs N` shards across N host threads
+/// (0 = all cores); output is byte-identical for every N.
+fn batch_cmd(args: &Args, seed: u64) -> Result<(), Box<dyn std::error::Error>> {
+    let which = args
+        .positional()
+        .get(1)
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let runner = BatchRunner::new(args.usize("jobs", 0)?);
+    let out = args.get("out").map(|s| s.to_string());
+    let specs = if which == "grid" {
+        vec![("grid".to_string(), grid_spec(args, seed)?)]
+    } else {
+        figure_specs(which, args, seed)?
+    };
+    eprintln!("batch: {} sweep(s) on {} worker(s)", specs.len(), runner.jobs());
+    for (name, spec) in &specs {
+        let store = runner.run(spec);
+        if args.flag("json") {
+            println!("{}", store.to_json(spec).encode());
+        } else {
+            println!("{}", store.table(spec).render());
+        }
+        if let Some(dir) = &out {
+            store.table(spec).save(dir, name)?;
+            let path = format!("{dir}/{name}_runs.json");
+            std::fs::write(&path, store.to_json(spec).encode())?;
+            eprintln!("saved {path}");
+        }
+    }
+    Ok(())
+}
+
+/// Build the explicit case × elems × threads × variant × seed grid from
+/// `--cases`, `--sizes`, `--threads-list`, `--workload`/`--variant`, and
+/// `--seeds` (count derived from the base `--seed` via `util::rng`).
+fn grid_spec(args: &Args, seed: u64) -> Result<SweepSpec, Box<dyn std::error::Error>> {
+    let cases: Vec<u8> = parse_list(args.get("cases").unwrap_or("1,3,8"), |s| {
+        s.parse::<u8>().ok().filter(|c| (1..=8).contains(c))
+    })
+    .ok_or("bad --cases list (want ids 1..8)")?;
+    let sizes: Vec<u64> = parse_list(args.get("sizes").unwrap_or("1m"), |s| {
+        parse_usize(s).map(|v| v as u64)
+    })
+    .ok_or("bad --sizes list")?;
+    let threads: Vec<usize> = parse_list(args.get("threads-list").unwrap_or("64"), parse_usize)
+        .ok_or("bad --threads-list")?;
+    let workloads: Vec<Workload> = match args.get("workload").unwrap_or("mergesort") {
+        "mergesort" => {
+            parse_list(args.get("variant").unwrap_or("non-localised,localised"), |v| {
+                Some(Workload::Mergesort {
+                    variant: match v {
+                        "non-localised" => Variant::NonLocalised,
+                        "intermediate" => Variant::NonLocalisedIntermediate,
+                        "localised" => Variant::Localised,
+                        _ => return None,
+                    },
+                })
+            })
+            .ok_or("bad --variant list")?
+        }
+        "microbench" => vec![Workload::Microbench {
+            reps: args.usize("reps", 16)? as u32,
+        }],
+        "radix" => {
+            let digit_bits = args.usize("digit-bits", 8)? as u32;
+            if !(1..=16).contains(&digit_bits) {
+                return Err("bad --digit-bits: want 1..=16".into());
+            }
+            vec![Workload::Radix { digit_bits }]
+        }
+        w => return Err(format!("unknown --workload {w}").into()),
+    };
+    // Validate the grid up front: the trace builders assert on degenerate
+    // inputs, and a panic inside a pool worker is a much worse error
+    // message than a CLI Err.
+    let max_threads = *threads.iter().max().expect("non-empty");
+    let min_elems = *sizes.iter().min().expect("non-empty");
+    if threads.contains(&0) {
+        return Err("bad --threads-list: thread counts must be >= 1".into());
+    }
+    let min_required = if workloads
+        .iter()
+        .any(|w| matches!(w, Workload::Mergesort { .. }))
+    {
+        2 * max_threads as u64
+    } else {
+        max_threads as u64
+    };
+    if min_elems < min_required {
+        return Err(format!(
+            "bad grid: smallest --sizes value {min_elems} is below the minimum \
+             {min_required} needed for {max_threads} threads"
+        )
+        .into());
+    }
+    let seeds = derive_seeds(seed, args.usize("seeds", 1)?.max(1));
+    let title = format!(
+        "Batch grid: {} cases x {} sizes x {} thread counts x {} workloads x {} seeds",
+        cases.len(),
+        sizes.len(),
+        threads.len(),
+        workloads.len(),
+        seeds.len()
+    );
+    Ok(SweepSpec::grid(
+        &title, &cases, &workloads, &sizes, &threads, &seeds,
+    ))
+}
+
+fn parse_list<T>(s: &str, parse: impl Fn(&str) -> Option<T>) -> Option<Vec<T>> {
+    let items: Option<Vec<T>> = s.split(',').map(|x| parse(x.trim())).collect();
+    items.filter(|v| !v.is_empty())
 }
 
 fn info() -> Result<(), Box<dyn std::error::Error>> {
@@ -234,10 +374,14 @@ fn emit_stats(args: &Args, label: &str, stats: &tilesim::sim::RunStats) {
 
 fn print_usage() {
     println!(
-        "usage: repro <info|microbench|mergesort|radix|homing|sort|experiment> [flags]\n\
+        "usage: repro <info|microbench|mergesort|radix|homing|sort|experiment|batch> [flags]\n\
          experiments: repro experiment <fig1|fig2|fig3|fig4|table1|all> [--size N] [--out DIR]\n\
+         batch:       repro batch <fig1|fig2|fig3|fig4|table1|all|grid>\n\
+                      [--jobs N] [--out DIR] [--json]\n\
+                      grid axes: --cases 1,3,8 --sizes 1m,4m --threads-list 16,64\n\
+                      --workload mergesort|microbench|radix --variant a,b --seeds K\n\
          flags: --size N --threads N --reps N --case 1..8 --seed S --variant v\n\
-                --digit-bits B --no-striping --no-cache --heatmap --json\n\
+                --digit-bits B --jobs N --no-striping --no-cache --heatmap --json\n\
                 --out DIR --sizes a,b,c"
     );
 }

@@ -35,14 +35,36 @@ impl Region {
     }
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum AllocError {
-    #[error("page fault: {0}")]
-    Page(#[from] PageFault),
-    #[error("free of unknown address {0:?}")]
+    Page(PageFault),
     UnknownFree(VAddr),
-    #[error("zero-byte allocation")]
     Zero,
+}
+
+impl std::fmt::Display for AllocError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AllocError::Page(e) => write!(f, "page fault: {e}"),
+            AllocError::UnknownFree(a) => write!(f, "free of unknown address {a:?}"),
+            AllocError::Zero => write!(f, "zero-byte allocation"),
+        }
+    }
+}
+
+impl std::error::Error for AllocError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            AllocError::Page(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<PageFault> for AllocError {
+    fn from(e: PageFault) -> AllocError {
+        AllocError::Page(e)
+    }
 }
 
 /// Boot-time memory configuration (the knobs of Table 1 / Fig. 4).

@@ -23,13 +23,22 @@ pub struct PageTable {
     mapped: usize,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum PageFault {
-    #[error("unmapped address {0:?}")]
     Unmapped(VAddr),
-    #[error("double map of page {0:?}")]
     DoubleMap(PageId),
 }
+
+impl std::fmt::Display for PageFault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PageFault::Unmapped(a) => write!(f, "unmapped address {a:?}"),
+            PageFault::DoubleMap(p) => write!(f, "double map of page {p:?}"),
+        }
+    }
+}
+
+impl std::error::Error for PageFault {}
 
 impl PageTable {
     pub fn new() -> Self {

@@ -8,29 +8,71 @@
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
+use crate::runtime::xla;
 use crate::util::json::{self, Json};
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ArtifactError {
-    #[error("io error reading {path}: {source}")]
     Io {
         path: PathBuf,
         source: std::io::Error,
     },
-    #[error("manifest parse error: {0}")]
-    Manifest(#[from] json::ParseError),
-    #[error("manifest missing field {0}")]
+    Manifest(json::ParseError),
     MissingField(&'static str),
-    #[error("unknown artifact '{0}' (have: {1})")]
     Unknown(String, String),
-    #[error("artifact {name}: size mismatch (manifest {expected} B, file {actual} B)")]
     SizeMismatch {
         name: String,
         expected: usize,
         actual: usize,
     },
-    #[error("xla error: {0}")]
-    Xla(#[from] xla::Error),
+    Xla(xla::Error),
+}
+
+impl std::fmt::Display for ArtifactError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ArtifactError::Io { path, source } => {
+                write!(f, "io error reading {}: {source}", path.display())
+            }
+            ArtifactError::Manifest(e) => write!(f, "manifest parse error: {e}"),
+            ArtifactError::MissingField(name) => write!(f, "manifest missing field {name}"),
+            ArtifactError::Unknown(name, have) => {
+                write!(f, "unknown artifact '{name}' (have: {have})")
+            }
+            ArtifactError::SizeMismatch {
+                name,
+                expected,
+                actual,
+            } => write!(
+                f,
+                "artifact {name}: size mismatch (manifest {expected} B, file {actual} B)"
+            ),
+            ArtifactError::Xla(e) => write!(f, "xla error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ArtifactError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ArtifactError::Io { source, .. } => Some(source),
+            ArtifactError::Manifest(e) => Some(e),
+            ArtifactError::Xla(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<json::ParseError> for ArtifactError {
+    fn from(e: json::ParseError) -> ArtifactError {
+        ArtifactError::Manifest(e)
+    }
+}
+
+impl From<xla::Error> for ArtifactError {
+    fn from(e: xla::Error) -> ArtifactError {
+        ArtifactError::Xla(e)
+    }
 }
 
 /// Input spec recorded by aot.py.

@@ -7,6 +7,7 @@
 
 use crate::arch::{HitLevel, TileId};
 use crate::runtime::artifact::{ArtifactError, ArtifactSet};
+use crate::runtime::xla;
 
 /// Batch size exported by python/compile/model.py (LATENCY_BATCH).
 pub const LATENCY_BATCH: usize = 1024;

@@ -4,6 +4,7 @@
 pub mod artifact;
 pub mod latency;
 pub mod sorter;
+pub mod xla;
 
 pub use artifact::{ArtifactError, ArtifactSet, Manifest};
 pub use latency::{AccessDesc, LatencyModel, LATENCY_BATCH};

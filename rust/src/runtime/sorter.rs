@@ -11,6 +11,7 @@ use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
 use crate::runtime::artifact::{ArtifactError, ArtifactSet};
+use crate::runtime::xla;
 
 /// Batch geometry — must match python/compile/model.py's export specs.
 pub const NUM_CHUNKS: usize = 64;

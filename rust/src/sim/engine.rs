@@ -61,21 +61,48 @@ impl EngineConfig {
     }
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum EngineError {
-    #[error("program validation failed: {0}")]
-    Invalid(#[from] crate::sim::trace::ProgramError),
-    #[error("thread {thread}: use of unbound slot {slot}")]
+    Invalid(crate::sim::trace::ProgramError),
     UnboundSlot { thread: usize, slot: u32 },
-    #[error("thread {thread}: allocation failed: {source}")]
     Alloc {
         thread: usize,
         source: crate::mem::AllocError,
     },
-    #[error("access to unmapped address {0:?}")]
     Unmapped(VAddr),
-    #[error("deadlock: threads {0:?} blocked forever")]
     Deadlock(Vec<usize>),
+}
+
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineError::Invalid(e) => write!(f, "program validation failed: {e}"),
+            EngineError::UnboundSlot { thread, slot } => {
+                write!(f, "thread {thread}: use of unbound slot {slot}")
+            }
+            EngineError::Alloc { thread, source } => {
+                write!(f, "thread {thread}: allocation failed: {source}")
+            }
+            EngineError::Unmapped(a) => write!(f, "access to unmapped address {a:?}"),
+            EngineError::Deadlock(tids) => write!(f, "deadlock: threads {tids:?} blocked forever"),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            EngineError::Invalid(e) => Some(e),
+            EngineError::Alloc { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+impl From<crate::sim::trace::ProgramError> for EngineError {
+    fn from(e: crate::sim::trace::ProgramError) -> EngineError {
+        EngineError::Invalid(e)
+    }
 }
 
 struct ThreadState {

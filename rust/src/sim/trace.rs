@@ -135,25 +135,50 @@ pub struct Program {
     pub num_events: u32,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ProgramError {
-    #[error("thread {thread} op {op}: slot {slot} out of range ({num_slots})")]
     SlotRange {
         thread: usize,
         op: usize,
         slot: u32,
         num_slots: u32,
     },
-    #[error("thread {thread} op {op}: event {event} out of range ({num_events})")]
     EventRange {
         thread: usize,
         op: usize,
         event: u32,
         num_events: u32,
     },
-    #[error("event {0} signalled more than once")]
     DoubleSignal(u32),
 }
+
+impl std::fmt::Display for ProgramError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProgramError::SlotRange {
+                thread,
+                op,
+                slot,
+                num_slots,
+            } => write!(
+                f,
+                "thread {thread} op {op}: slot {slot} out of range ({num_slots})"
+            ),
+            ProgramError::EventRange {
+                thread,
+                op,
+                event,
+                num_events,
+            } => write!(
+                f,
+                "thread {thread} op {op}: event {event} out of range ({num_events})"
+            ),
+            ProgramError::DoubleSignal(ev) => write!(f, "event {ev} signalled more than once"),
+        }
+    }
+}
+
+impl std::error::Error for ProgramError {}
 
 impl Program {
     pub fn new(threads: Vec<Vec<Op>>, num_slots: u32, num_events: u32) -> Self {

@@ -6,15 +6,24 @@
 
 use std::collections::BTreeMap;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("unknown flag --{0}")]
     UnknownFlag(String),
-    #[error("flag --{0} expects a value")]
     MissingValue(String),
-    #[error("invalid value for --{0}: {1}")]
     BadValue(String, String),
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::UnknownFlag(name) => write!(f, "unknown flag --{name}"),
+            CliError::MissingValue(name) => write!(f, "flag --{name} expects a value"),
+            CliError::BadValue(name, v) => write!(f, "invalid value for --{name}: {v}"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 /// Declarative spec: flag names that take values vs boolean switches.
 pub struct Args {

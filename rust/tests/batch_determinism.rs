@@ -1,0 +1,88 @@
+//! The batch orchestrator's core contract: an identical `SweepSpec` + seed
+//! must yield byte-identical `ResultStore` JSON at `--jobs 1` and
+//! `--jobs N`. Every downstream consumer (EXPERIMENTS.md numbers, the CI
+//! perf trajectory, sweep diffing between PRs) leans on this.
+
+use tilesim::coordinator::batch::{derive_seeds, BatchRunner, SweepSpec, Workload};
+use tilesim::coordinator::experiment;
+use tilesim::workloads::mergesort::Variant;
+
+const SEED: u64 = experiment::DEFAULT_SEED;
+
+#[test]
+fn table1_sweep_json_identical_across_jobs() {
+    let spec = experiment::table1_spec(1 << 14, 4, SEED);
+    let serial = BatchRunner::new(1).run(&spec).to_json(&spec).encode();
+    for jobs in [2usize, 4, 8] {
+        let parallel = BatchRunner::new(jobs).run(&spec).to_json(&spec).encode();
+        assert_eq!(serial, parallel, "jobs={jobs} changed the sweep JSON");
+    }
+}
+
+#[test]
+fn grid_sweep_json_identical_across_jobs() {
+    let spec = SweepSpec::grid(
+        "determinism grid",
+        &[1, 4, 8],
+        &[
+            Workload::Mergesort {
+                variant: Variant::NonLocalised,
+            },
+            Workload::Mergesort {
+                variant: Variant::Localised,
+            },
+        ],
+        &[1 << 12, 1 << 13],
+        &[2, 4],
+        &derive_seeds(SEED, 2),
+    );
+    assert_eq!(spec.runs.len(), 3 * 2 * 2 * 2 * 2, "full cross product");
+    let a = BatchRunner::new(1).run(&spec).to_json(&spec).encode();
+    let b = BatchRunner::new(8).run(&spec).to_json(&spec).encode();
+    assert_eq!(a, b, "grid sweep must not depend on worker count");
+}
+
+#[test]
+fn microbench_grid_deterministic_too() {
+    let spec = SweepSpec::grid(
+        "microbench grid",
+        &[1, 8],
+        &[Workload::Microbench { reps: 3 }],
+        &[1 << 13],
+        &[4],
+        &derive_seeds(7, 1),
+    );
+    let a = BatchRunner::new(1).run(&spec).to_json(&spec).encode();
+    let b = BatchRunner::new(4).run(&spec).to_json(&spec).encode();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn fig_spec_tables_match_across_jobs() {
+    // The rendered tables (what the paper figures are built from) must be
+    // identical too — same floats, same order.
+    let spec = experiment::fig1_spec(1 << 13, 4, &[1, 4], SEED);
+    let t1 = BatchRunner::new(1).table(&spec);
+    let tn = BatchRunner::new(4).table(&spec);
+    assert_eq!(t1.render(), tn.render());
+    assert_eq!(t1.to_json().encode(), tn.to_json().encode());
+}
+
+#[test]
+fn derived_seeds_are_reproducible() {
+    assert_eq!(derive_seeds(SEED, 16), derive_seeds(SEED, 16));
+    // A prefix of a longer derivation equals the shorter one: run count
+    // changes must not reshuffle earlier runs' seeds.
+    assert_eq!(derive_seeds(SEED, 16)[..8], derive_seeds(SEED, 8)[..]);
+}
+
+#[test]
+fn repeated_sweeps_are_bit_identical() {
+    // Same spec executed twice through the pool: not just equal tables but
+    // equal raw stats (migrations, queue cycles — everything in the JSON).
+    let spec = experiment::fig2_spec(1 << 13, &[4], SEED);
+    let runner = BatchRunner::new(4);
+    let a = runner.run(&spec).to_json(&spec).encode();
+    let b = runner.run(&spec).to_json(&spec).encode();
+    assert_eq!(a, b);
+}
