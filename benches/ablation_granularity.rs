@@ -28,10 +28,11 @@ struct Scan {
 }
 
 impl tilesim::coordinator::ChunkKernel for Scan {
-    fn emit(&self, t: &mut TraceBuilder, chunk: Loc, bytes: u64, _i: usize) {
-        for _ in 0..self.passes {
-            t.read(chunk, bytes);
-        }
+    fn steps(&self) -> u32 {
+        self.passes
+    }
+    fn emit_step(&self, t: &mut TraceBuilder, chunk: Loc, bytes: u64, _i: usize, _s: u32) {
+        t.read(chunk, bytes);
     }
 }
 
@@ -51,8 +52,13 @@ fn run_with_homing(elems: u64, threads: usize, passes: u32, homing: Homing, loca
             Placement::Striped,
         )
         .expect("alloc");
-    let p = build_program(&input, elems, &LocaliseConfig { threads, localised }, &Scan { passes });
-    e.run(&p, &mut StaticMapper::new()).expect("run").seconds()
+    let mut p = build_program(
+        &input,
+        elems,
+        &LocaliseConfig { threads, localised },
+        std::rc::Rc::new(Scan { passes }),
+    );
+    e.run(&mut p, &mut StaticMapper::new()).expect("run").seconds()
 }
 
 fn main() {

@@ -25,7 +25,7 @@ fn run(elems: u64, variant: Variant, policy: HashPolicy, prob: f64) -> (f64, u64
         hash_policy: policy,
         striping: true,
     }));
-    let p = mergesort::build(
+    let mut p = mergesort::build(
         &mut e,
         &MergesortConfig {
             elems,
@@ -37,7 +37,7 @@ fn run(elems: u64, variant: Variant, policy: HashPolicy, prob: f64) -> (f64, u64
         migrate_prob: prob,
         ..Default::default()
     });
-    let stats = e.run(&p, &mut sched).expect("run");
+    let stats = e.run(&mut p, &mut sched).expect("run");
     (stats.seconds(), stats.migrations)
 }
 

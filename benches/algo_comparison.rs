@@ -23,7 +23,7 @@ fn env_u64(name: &str, default: u64) -> u64 {
 fn run_radix(case_id: u8, elems: u64, threads: usize, seed: u64) -> f64 {
     let c = case(case_id);
     let mut engine = Engine::new(c.engine_config(true));
-    let program = radix::build(
+    let mut program = radix::build(
         &mut engine,
         &RadixConfig {
             elems,
@@ -33,7 +33,7 @@ fn run_radix(case_id: u8, elems: u64, threads: usize, seed: u64) -> f64 {
         },
     );
     let mut sched = c.mapper.scheduler(seed);
-    engine.run(&program, sched.as_mut()).expect("radix run").seconds()
+    engine.run(&mut program, sched.as_mut()).expect("radix run").seconds()
 }
 
 fn main() {

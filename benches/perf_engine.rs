@@ -1,24 +1,80 @@
 //! §Perf: wall-clock throughput of the simulator itself (line events per
-//! second), of the batch worker pool (sweep runs per second at 1 vs N
-//! jobs — written to BENCH_batch.json so the perf trajectory is recorded
-//! per PR), and of the PJRT request path (keys sorted per second).
+//! second), of the streaming replay pipeline (page-run fast path vs the
+//! per-line reference walk, written to BENCH_engine.json), of the batch
+//! worker pool (sweep runs per second at 1 vs N jobs — BENCH_batch.json),
+//! and of the PJRT request path (keys sorted per second).
 //!
 //! This is the harness used for the EXPERIMENTS.md §Perf iteration log —
 //! it measures *our* implementation, not the simulated machine.
 //!
 //! Run: `cargo bench --bench perf_engine`
 //! Env: TILESIM_SIZE (default 2M), TILESIM_SKIP_PJRT=1 to skip the sorter,
-//!      TILESIM_BENCH_OUT (default BENCH_batch.json).
+//!      TILESIM_BENCH_OUT (default BENCH_batch.json),
+//!      TILESIM_BENCH_ENGINE_OUT (default BENCH_engine.json).
 
+use std::rc::Rc;
 use std::time::Instant;
 
+use tilesim::arch::TileId;
 use tilesim::coordinator::batch::BatchRunner;
-use tilesim::coordinator::{case, experiment};
+use tilesim::coordinator::localise::{build_program, LocaliseConfig, ELEM_BYTES};
+use tilesim::coordinator::{case, experiment, ChunkKernel};
 use tilesim::harness::time_it;
+use tilesim::mem::{HashPolicy, MemConfig};
+use tilesim::sched::StaticMapper;
+use tilesim::sim::{Engine, EngineConfig, Loc, Program, RunStats, TraceBuilder};
 use tilesim::util::json::Json;
 
 fn env_u64(name: &str, default: u64) -> u64 {
     std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Sequential-access microbench: every thread repeatedly scans its chunk.
+/// This is the page-run fast path's home turf (long same-home runs) and
+/// the workload the replay-throughput trajectory tracks.
+struct Scan {
+    passes: u32,
+}
+
+impl ChunkKernel for Scan {
+    fn steps(&self) -> u32 {
+        self.passes
+    }
+    fn emit_step(&self, t: &mut TraceBuilder, chunk: Loc, bytes: u64, _i: usize, _s: u32) {
+        t.read(chunk, bytes);
+    }
+    fn name(&self) -> &'static str {
+        "seq-scan"
+    }
+}
+
+const SCAN_THREADS: usize = 16;
+const SCAN_PASSES: u32 = 8;
+
+/// One scan replay; returns the run stats and the program's resident
+/// (streamed) trace bytes after the run.
+fn scan_replay(elems: u64, page_runs: bool) -> (RunStats, u64) {
+    let mut cfg = EngineConfig::tilepro64(MemConfig {
+        hash_policy: HashPolicy::None,
+        striping: true,
+    });
+    if !page_runs {
+        cfg = cfg.without_page_runs();
+    }
+    let mut e = Engine::new(cfg);
+    let input = e.prealloc_touched(TileId(0), elems * ELEM_BYTES);
+    let mut p = build_program(
+        &input,
+        elems,
+        &LocaliseConfig {
+            threads: SCAN_THREADS,
+            localised: false,
+        },
+        Rc::new(Scan { passes: SCAN_PASSES }),
+    );
+    let stats = e.run(&mut p, &mut StaticMapper::new()).expect("scan run");
+    let resident = p.resident_trace_bytes();
+    (stats, resident)
 }
 
 fn main() {
@@ -53,6 +109,77 @@ fn main() {
         stats2.line_accesses
     );
 
+    // --- replay throughput: sequential-access microbench through the
+    // page-run fast path vs the per-line reference walk, plus peak trace
+    // bytes streamed vs recorded. This is the BENCH_engine.json record the
+    // streaming-pipeline PRs move.
+    let scan_elems = elems / 2;
+    let (scan_stats, streamed_peak) = scan_replay(scan_elems, true);
+    let scan_lines = scan_stats.line_accesses;
+    // Symmetric warmup/iteration counts: the recorded speedup must not be
+    // biased by cold-start noise on either side.
+    let t_fast = time_it(1, 2, || {
+        std::hint::black_box(scan_replay(scan_elems, true).0.makespan_cycles);
+    });
+    let t_ref = time_it(1, 2, || {
+        std::hint::black_box(scan_replay(scan_elems, false).0.makespan_cycles);
+    });
+    let fast_lps = scan_lines as f64 / t_fast.min_s;
+    let ref_lps = scan_lines as f64 / t_ref.min_s;
+    let speedup = fast_lps / ref_lps;
+    // Recorded (materialised) trace size for the same program.
+    let recorded_bytes = {
+        let mut e = Engine::new(EngineConfig::tilepro64(MemConfig {
+            hash_policy: HashPolicy::None,
+            striping: true,
+        }));
+        let input = e.prealloc_touched(TileId(0), scan_elems * ELEM_BYTES);
+        let mut p = build_program(
+            &input,
+            scan_elems,
+            &LocaliseConfig {
+                threads: SCAN_THREADS,
+                localised: false,
+            },
+            Rc::new(Scan { passes: SCAN_PASSES }),
+        );
+        Program::from_ops(p.record(), p.num_slots, p.num_events).resident_trace_bytes()
+    };
+    println!("{}", t_fast.summary("replay: seq-scan, page-run fast path"));
+    println!("{}", t_ref.summary("replay: seq-scan, per-line reference walk"));
+    println!(
+        "replay throughput: fast {:.1} M lines/s vs reference {:.1} M lines/s = {:.2}x \
+         | trace bytes: streamed peak {} vs recorded {}",
+        fast_lps / 1e6,
+        ref_lps / 1e6,
+        speedup,
+        streamed_peak,
+        recorded_bytes
+    );
+    let engine_json = Json::obj(vec![
+        ("bench", Json::str("replay_throughput")),
+        ("workload", Json::str("seq-scan microbench")),
+        ("elems", Json::num(scan_elems as f64)),
+        ("threads", Json::num(SCAN_THREADS as f64)),
+        ("passes", Json::num(SCAN_PASSES as f64)),
+        ("lines_per_run", Json::num(scan_lines as f64)),
+        ("fast_min_s", Json::num(t_fast.min_s)),
+        ("fast_lines_per_sec", Json::num(fast_lps)),
+        ("reference_min_s", Json::num(t_ref.min_s)),
+        ("reference_lines_per_sec", Json::num(ref_lps)),
+        ("speedup_vs_per_line_walk", Json::num(speedup)),
+        ("streamed_peak_trace_bytes", Json::num(streamed_peak as f64)),
+        ("recorded_trace_bytes", Json::num(recorded_bytes as f64)),
+        (
+            "mergesort_case8_lines_per_sec",
+            Json::num(events as f64 / t.min_s),
+        ),
+    ]);
+    let engine_path = std::env::var("TILESIM_BENCH_ENGINE_OUT")
+        .unwrap_or_else(|_| "BENCH_engine.json".into());
+    std::fs::write(&engine_path, engine_json.encode()).expect("write BENCH_engine.json");
+    println!("wrote {engine_path}");
+
     // --- batch pool: full table1 sweep at 1 job vs all cores. The sweep
     // is the unit of work every figure replays, so this is the number the
     // scaling PRs move; BENCH_batch.json records it per PR.
@@ -66,7 +193,7 @@ fn main() {
     let t_pool = time_it(0, 2, || {
         std::hint::black_box(pool.run(&spec).results.len());
     });
-    let speedup = t_serial.min_s / t_pool.min_s;
+    let pool_speedup = t_serial.min_s / t_pool.min_s;
     println!("{}", t_serial.summary("batch: table1 sweep, 1 job"));
     println!(
         "{}",
@@ -74,7 +201,7 @@ fn main() {
     );
     println!(
         "batch pool: {runs} runs/sweep, {:.2}x speedup on {} workers",
-        speedup,
+        pool_speedup,
         pool.jobs()
     );
     let bench_json = Json::obj(vec![
@@ -86,7 +213,7 @@ fn main() {
         ("serial_mean_s", Json::num(t_serial.mean_s)),
         ("pool_min_s", Json::num(t_pool.min_s)),
         ("pool_mean_s", Json::num(t_pool.mean_s)),
-        ("speedup", Json::num(speedup)),
+        ("speedup", Json::num(pool_speedup)),
         (
             "runs_per_second",
             Json::num(runs as f64 / t_pool.min_s),

@@ -21,13 +21,16 @@ struct Smoother {
 }
 
 impl ChunkKernel for Smoother {
-    fn emit(&self, t: &mut TraceBuilder, chunk: Loc, bytes: u64, _thread: usize) {
+    /// One sweep per emission step: the streaming trace pipeline buffers a
+    /// single sweep no matter how many the config asks for.
+    fn steps(&self) -> u32 {
+        self.sweeps
+    }
+    fn emit_step(&self, t: &mut TraceBuilder, chunk: Loc, bytes: u64, _thread: usize, _s: u32) {
         let elems = bytes / ELEM_BYTES;
-        for _ in 0..self.sweeps {
-            t.read(chunk, bytes) // read neighbourhood
-                .compute(elems * 3) // 3-point update
-                .write(chunk, bytes); // write smoothed values
-        }
+        t.read(chunk, bytes) // read neighbourhood
+            .compute(elems * 3) // 3-point update
+            .write(chunk, bytes); // write smoothed values
     }
     fn name(&self) -> &'static str {
         "jacobi-smoother"
@@ -42,17 +45,17 @@ fn run(policy: HashPolicy, localised: bool, elems: u64, sweeps: u32) -> f64 {
     // The input is produced by the "main thread" (tile 0) — the worst case
     // for data placement, exactly like the paper's array0.
     let input = engine.prealloc_touched(TileId(0), elems * ELEM_BYTES);
-    let program = build_program(
+    let mut program = build_program(
         &input,
         elems,
         &LocaliseConfig {
             threads: 63,
             localised,
         },
-        &Smoother { sweeps },
+        std::rc::Rc::new(Smoother { sweeps }),
     );
     engine
-        .run(&program, &mut StaticMapper::new())
+        .run(&mut program, &mut StaticMapper::new())
         .expect("run failed")
         .seconds()
 }

@@ -85,25 +85,25 @@ impl Directory {
         self.mask_of(line).count_ones()
     }
 
-    /// Write by `writer` to `line` homed at `home`: every other sharer is
-    /// invalidated; the writer remains the sole sharer.
-    pub fn write_invalidate(
-        &mut self,
-        line: LineId,
-        home: TileId,
-        writer: TileId,
-    ) -> InvalidationFanout {
+    /// Fast-path write claim: make `writer` the sole sharer of `line` and
+    /// return the mask of *other* previous sharers (0 in the common
+    /// private-stream case — no fan-out, no allocation). The page-run bulk
+    /// path calls this per line and only expands the fan-out when needed.
+    #[inline]
+    pub fn write_claim(&mut self, line: LineId, writer: TileId) -> u64 {
         let writer_bit = 1u64 << writer.index();
-        let mask = {
-            let slot = self.slot_mut(line);
-            let m = *slot;
-            *slot = writer_bit;
-            m
-        };
+        let slot = self.slot_mut(line);
+        let mask = *slot;
+        *slot = writer_bit;
         if mask == 0 {
             self.tracked += 1;
         }
-        let others = mask & !writer_bit;
+        mask & !writer_bit
+    }
+
+    /// Expand an other-sharer mask (from [`write_claim`](Self::write_claim))
+    /// into the invalidation fan-out and account it.
+    pub fn fanout(&mut self, others: u64, home: TileId) -> InvalidationFanout {
         if others == 0 {
             return InvalidationFanout {
                 victims: Vec::new(),
@@ -125,6 +125,18 @@ impl Directory {
             victims,
             max_hops_from_home: max_h,
         }
+    }
+
+    /// Write by `writer` to `line` homed at `home`: every other sharer is
+    /// invalidated; the writer remains the sole sharer.
+    pub fn write_invalidate(
+        &mut self,
+        line: LineId,
+        home: TileId,
+        writer: TileId,
+    ) -> InvalidationFanout {
+        let others = self.write_claim(line, writer);
+        self.fanout(others, home)
     }
 
     /// Drop all directory state for lines in `[first, last]` (region free).

@@ -148,6 +148,113 @@ impl CacheSystem {
         }
     }
 
+    /// Bulk load of `count` sequential lines from `first`, all homed on
+    /// `home` (the page-run fast path — one call per same-home run instead
+    /// of one per line). `on_line` is invoked per line, in order, with the
+    /// line's [`ReadPlace`]; per-line cache/directory state transitions are
+    /// identical to calling [`read`](Self::read) in a loop.
+    pub fn read_run(
+        &mut self,
+        req: TileId,
+        first: LineId,
+        count: u64,
+        home: TileId,
+        mut on_line: impl FnMut(LineId, ReadPlace),
+    ) {
+        // An L1 hit needs no directory touch: a line enters the L1 only
+        // through a read that records the sharer, and every path that
+        // clears the sharer bit (write invalidation, free purge) also
+        // drops the L1 copy — so L1-resident ⇒ sharer bit already set.
+        // (L2 hits don't share the invariant: the home L2 also holds lines
+        // on behalf of *remote* requesters.)
+        if home == req {
+            for i in 0..count {
+                let line = LineId(first.0 + i);
+                let rc = &mut self.tiles[req.index()];
+                let place = if rc.l1.probe(line) {
+                    ReadPlace::L1
+                } else {
+                    let place = if rc.l2.touch(line) {
+                        ReadPlace::L2
+                    } else {
+                        // Home L2 missed ⇒ straight to DRAM (paper §2:
+                        // local homing sends L2 misses directly to DDR).
+                        ReadPlace::Ddr
+                    };
+                    rc.l1.insert(line);
+                    self.directory.add_sharer(line, req);
+                    place
+                };
+                on_line(line, place);
+            }
+        } else {
+            for i in 0..count {
+                let line = LineId(first.0 + i);
+                let place = if self.tiles[req.index()].l1.probe(line) {
+                    ReadPlace::L1
+                } else {
+                    // Remote home: probe-and-fill the home's L2 (the "L3"),
+                    // fill only our L1 with the returned line.
+                    let home_hit = self.tiles[home.index()].l2.touch(line);
+                    self.tiles[req.index()].l1.insert(line);
+                    self.directory.add_sharer(line, req);
+                    if home_hit {
+                        ReadPlace::Home { home }
+                    } else {
+                        ReadPlace::Ddr
+                    }
+                };
+                on_line(line, place);
+            }
+        }
+    }
+
+    /// Bulk store of `count` sequential same-home lines (page-run fast
+    /// path). Invalidation fan-out is computed per line, exactly as
+    /// [`write`](Self::write) would; the common no-other-sharer case skips
+    /// the fan-out allocation entirely.
+    pub fn write_run(
+        &mut self,
+        req: TileId,
+        first: LineId,
+        count: u64,
+        home: TileId,
+        mut on_line: impl FnMut(LineId, WriteOutcome),
+    ) {
+        let level = if home == req {
+            WriteLevel::LocalL2
+        } else {
+            WriteLevel::RemotePost { home }
+        };
+        for i in 0..count {
+            let line = LineId(first.0 + i);
+            // The home L2 caches the line either way (own L2 *is* the home
+            // cache when local; posted fill when remote).
+            self.tiles[home.index()].l2.insert(line);
+            let others = self.directory.write_claim(line, req);
+            let out = if others == 0 {
+                WriteOutcome {
+                    level,
+                    invalidated: 0,
+                    invalidation_hops: 0,
+                }
+            } else {
+                let fan = self.directory.fanout(others, home);
+                for victim in &fan.victims {
+                    let vc = &mut self.tiles[victim.index()];
+                    vc.l1.invalidate(line);
+                    vc.l2.invalidate(line);
+                }
+                WriteOutcome {
+                    level,
+                    invalidated: fan.victims.len() as u32,
+                    invalidation_hops: fan.max_hops_from_home,
+                }
+            };
+            on_line(line, out);
+        }
+    }
+
     /// Drop all cached copies and directory state for a freed region.
     pub fn purge_line_range(&mut self, first: LineId, last: LineId) {
         for t in &mut self.tiles {
@@ -299,6 +406,64 @@ mod tests {
             "remote lines must not allocate in the reader L2"
         );
         assert!(s.tile(TileId(0)).l1.resident_lines() > 0);
+    }
+
+    #[test]
+    fn read_run_matches_per_line_reads() {
+        // Same access pattern through the bulk call and the per-line walk:
+        // identical ReadPlace sequence and identical final cache state.
+        for home in [TileId(0), TileId(9)] {
+            let req = TileId(0);
+            let mut bulk = sys();
+            let mut perline = sys();
+            // Warm partially so the run sees a mix of hits and misses.
+            for l in 0..100 {
+                bulk.read(req, LineId(l * 2), home);
+                perline.read(req, LineId(l * 2), home);
+            }
+            let mut places = Vec::new();
+            bulk.read_run(req, LineId(0), 300, home, |_, p| places.push(p));
+            for (i, l) in (0..300).enumerate() {
+                assert_eq!(
+                    perline.read(req, LineId(l), home),
+                    places[i],
+                    "home {home:?} line {l}"
+                );
+            }
+            assert_eq!(bulk.totals(), perline.totals(), "home {home:?}");
+        }
+    }
+
+    #[test]
+    fn write_run_matches_per_line_writes() {
+        for home in [TileId(0), TileId(9)] {
+            let req = TileId(1);
+            let mut bulk = sys();
+            let mut perline = sys();
+            // Seed sharers so some writes fan out invalidations.
+            for s in [TileId(2), TileId(3)] {
+                for l in 0..50 {
+                    bulk.read(s, LineId(l * 3), home);
+                    perline.read(s, LineId(l * 3), home);
+                }
+            }
+            let mut outs = Vec::new();
+            bulk.write_run(req, LineId(0), 160, home, |_, o| {
+                outs.push((o.level, o.invalidated, o.invalidation_hops))
+            });
+            for (i, l) in (0..160).enumerate() {
+                let o = perline.write(req, LineId(l), home);
+                assert_eq!(
+                    (o.level, o.invalidated, o.invalidation_hops),
+                    outs[i],
+                    "home {home:?} line {l}"
+                );
+            }
+            assert_eq!(
+                bulk.directory.invalidations_sent,
+                perline.directory.invalidations_sent
+            );
+        }
     }
 
     #[test]

@@ -95,7 +95,7 @@ impl RunSpec {
             cfg = cfg.without_caches();
         }
         let mut engine = Engine::new(cfg);
-        let program = match self.workload {
+        let mut program = match self.workload {
             Workload::Microbench { reps } => microbench::build(
                 &mut engine,
                 &microbench::MicrobenchConfig {
@@ -125,7 +125,7 @@ impl RunSpec {
         };
         let mut sched = c.mapper.scheduler(self.seed);
         engine
-            .run(&program, sched.as_mut())
+            .run(&mut program, sched.as_mut())
             .expect("batch run failed")
     }
 

@@ -22,7 +22,7 @@ pub const DEFAULT_SEED: u64 = 2014;
 /// Run the micro-benchmark for one configuration.
 pub fn run_microbench(case: &CaseSpec, elems: u64, threads: usize, reps: u32, seed: u64) -> RunStats {
     let mut engine = Engine::new(case.engine_config(true));
-    let program = microbench::build(
+    let mut program = microbench::build(
         &mut engine,
         &microbench::MicrobenchConfig {
             elems,
@@ -32,7 +32,9 @@ pub fn run_microbench(case: &CaseSpec, elems: u64, threads: usize, reps: u32, se
         },
     );
     let mut sched = case.mapper.scheduler(seed);
-    engine.run(&program, sched.as_mut()).expect("microbench run failed")
+    engine
+        .run(&mut program, sched.as_mut())
+        .expect("microbench run failed")
 }
 
 /// Run merge sort for one configuration.
@@ -56,7 +58,7 @@ pub fn run_mergesort_variant(
     seed: u64,
 ) -> RunStats {
     let mut engine = Engine::new(case.engine_config(striping));
-    let program = mergesort::build(
+    let mut program = mergesort::build(
         &mut engine,
         &mergesort::MergesortConfig {
             elems,
@@ -65,7 +67,9 @@ pub fn run_mergesort_variant(
         },
     );
     let mut sched = case.mapper.scheduler(seed);
-    engine.run(&program, sched.as_mut()).expect("mergesort run failed")
+    engine
+        .run(&mut program, sched.as_mut())
+        .expect("mergesort run failed")
 }
 
 // ---------------------------------------------------------------------------
@@ -285,13 +289,15 @@ pub fn homing_classes(elems: u64, threads: usize, passes: u32) -> SweepTable {
     use crate::coordinator::localise::{build_program, LocaliseConfig, ELEM_BYTES};
     use crate::mem::{AllocKind, Homing, Placement};
     use crate::sim::{Loc, TraceBuilder};
+    use std::rc::Rc;
 
     struct Scan(u32);
     impl crate::coordinator::ChunkKernel for Scan {
-        fn emit(&self, t: &mut TraceBuilder, chunk: Loc, bytes: u64, _i: usize) {
-            for _ in 0..self.0 {
-                t.read(chunk, bytes);
-            }
+        fn steps(&self) -> u32 {
+            self.0
+        }
+        fn emit_step(&self, t: &mut TraceBuilder, chunk: Loc, bytes: u64, _i: usize, _s: u32) {
+            t.read(chunk, bytes);
         }
     }
 
@@ -310,13 +316,13 @@ pub fn homing_classes(elems: u64, threads: usize, passes: u32) -> SweepTable {
                 Placement::Striped,
             )
             .expect("alloc");
-        let p = build_program(
+        let mut p = build_program(
             &input,
             elems,
             &LocaliseConfig { threads, localised },
-            &Scan(passes),
+            Rc::new(Scan(passes)),
         );
-        e.run(&p, &mut crate::sched::StaticMapper::new())
+        e.run(&mut p, &mut crate::sched::StaticMapper::new())
             .expect("run")
             .seconds()
     };

@@ -4,22 +4,38 @@
 //! architecture-specific library: (1) divide the array into m parts, (2)
 //! assign each part to a thread, (3) map threads to cores, (4) copy each
 //! part into a freshly allocated array (re-homing it on the worker's tile),
-//! (5) free it when done. `LocalisedRunner` packages steps 1–5 over any
+//! (5) free it when done. [`build_program`] packages steps 1–5 over any
 //! per-chunk kernel; the extra workloads (map/stencil/histogram/reduce) are
 //! all expressed through it, demonstrating the claimed generality.
+//!
+//! Kernels emit *lazily*: a kernel declares how many emission steps it has
+//! (typically its pass/sweep count) and appends one step's ops at a time,
+//! so a thread's trace is streamed through a bounded buffer instead of
+//! materialised up front — arbitrarily large pass counts cost no host RAM.
+
+use std::rc::Rc;
 
 use crate::mem::{AllocKind, Region};
+use crate::sim::trace::{OpSource, SegmentGen, SegmentSource};
 use crate::sim::{Engine, Loc, Program, TraceBuilder};
 use crate::workloads::microbench::part_bounds;
 
 pub const ELEM_BYTES: u64 = 4;
 
-/// A per-chunk computation. `emit` receives the thread's trace builder,
-/// the location of its (possibly localised) chunk, the chunk size in
-/// bytes, and the thread index — and appends whatever access pattern the
-/// kernel performs on that chunk.
+/// A per-chunk computation, emitted step by step. `emit_step` receives the
+/// thread's (batch) trace builder, the location of its (possibly
+/// localised) chunk, the chunk size in bytes, the thread index, and the
+/// step index in `0..steps()` — and appends that step's access pattern.
+/// One step should be a bounded batch (a pass, a sweep, …): it is the unit
+/// the streaming trace pipeline buffers.
 pub trait ChunkKernel {
-    fn emit(&self, t: &mut TraceBuilder, chunk: Loc, bytes: u64, thread: usize);
+    /// Number of emission steps (default: a single step).
+    fn steps(&self) -> u32 {
+        1
+    }
+
+    /// Append step `step`'s ops for `thread`'s chunk.
+    fn emit_step(&self, t: &mut TraceBuilder, chunk: Loc, bytes: u64, thread: usize, step: u32);
 
     /// Human-readable name (reports).
     fn name(&self) -> &'static str {
@@ -27,12 +43,12 @@ pub trait ChunkKernel {
     }
 }
 
-/// Blanket impl so closures can be used as kernels.
+/// Blanket impl so closures can be used as single-step kernels.
 impl<F> ChunkKernel for F
 where
     F: Fn(&mut TraceBuilder, Loc, u64, usize),
 {
-    fn emit(&self, t: &mut TraceBuilder, chunk: Loc, bytes: u64, thread: usize) {
+    fn emit_step(&self, t: &mut TraceBuilder, chunk: Loc, bytes: u64, thread: usize, _step: u32) {
         self(t, chunk, bytes, thread)
     }
 }
@@ -45,38 +61,84 @@ pub struct LocaliseConfig {
     pub localised: bool,
 }
 
+/// Streaming per-thread source: optional localisation prologue (steps 4 of
+/// Algorithm 1), then one kernel step per batch, then the free (step 5).
+struct ChunkGen {
+    kernel: Rc<dyn ChunkKernel>,
+    shared_chunk: Loc,
+    bytes: u64,
+    thread: usize,
+    slot: u32,
+    localised: bool,
+    step: u32,
+}
+
+impl SegmentGen for ChunkGen {
+    fn fill(&mut self, out: &mut TraceBuilder) -> bool {
+        let ksteps = self.kernel.steps();
+        if self.localised {
+            let local = Loc::Slot {
+                slot: self.slot,
+                offset: 0,
+            };
+            match self.step {
+                0 => {
+                    // Step 4: copy into a fresh local array (first touch
+                    // re-homes).
+                    out.alloc(self.slot, self.bytes, AllocKind::Heap);
+                    out.copy(self.shared_chunk, local, self.bytes);
+                }
+                s if s <= ksteps => {
+                    self.kernel
+                        .emit_step(out, local, self.bytes, self.thread, s - 1);
+                }
+                s if s == ksteps + 1 => {
+                    // Step 5: free as soon as the thread finishes.
+                    out.free(self.slot);
+                }
+                _ => return false,
+            }
+        } else {
+            if self.step >= ksteps {
+                return false;
+            }
+            self.kernel
+                .emit_step(out, self.shared_chunk, self.bytes, self.thread, self.step);
+        }
+        self.step += 1;
+        true
+    }
+
+    fn rewind(&mut self) {
+        self.step = 0;
+    }
+}
+
 /// Build a program that applies `kernel` to every chunk of `input`
 /// (`elems` elements), per Algorithm 1.
 pub fn build_program(
     input: &Region,
     elems: u64,
     cfg: &LocaliseConfig,
-    kernel: &dyn ChunkKernel,
+    kernel: Rc<dyn ChunkKernel>,
 ) -> Program {
     assert!(cfg.threads >= 1 && elems >= cfg.threads as u64);
-    let mut builders = Vec::with_capacity(cfg.threads);
+    let mut sources: Vec<Box<dyn OpSource>> = Vec::with_capacity(cfg.threads);
     for i in 0..cfg.threads {
         // Step 1+2: divide and assign by pointer arithmetic.
         let (start, end) = part_bounds(elems, cfg.threads, i);
-        let bytes = (end - start) * ELEM_BYTES;
-        let shared_chunk = Loc::Abs(input.addr.offset(start * ELEM_BYTES));
-        let mut t = TraceBuilder::new();
-        if cfg.localised {
-            // Step 4: copy into a fresh local array (first touch re-homes).
-            let slot = i as u32;
-            let local = Loc::Slot { slot, offset: 0 };
-            t.alloc(slot, bytes, AllocKind::Heap);
-            t.copy(shared_chunk, local, bytes);
-            kernel.emit(&mut t, local, bytes, i);
-            // Step 5: free as soon as the thread finishes.
-            t.free(slot);
-        } else {
-            kernel.emit(&mut t, shared_chunk, bytes, i);
-        }
-        builders.push(t);
+        sources.push(SegmentSource::boxed(ChunkGen {
+            kernel: kernel.clone(),
+            shared_chunk: Loc::Abs(input.addr.offset(start * ELEM_BYTES)),
+            bytes: (end - start) * ELEM_BYTES,
+            thread: i,
+            slot: i as u32,
+            localised: cfg.localised,
+            step: 0,
+        }));
     }
     // Step 3 (mapping) is the scheduler passed to Engine::run.
-    Program::from_builders(builders, cfg.threads as u32, 0)
+    Program::new(sources, cfg.threads as u32, 0)
 }
 
 /// Convenience: fresh engine + input as if initialised by `main` on tile 0,
@@ -85,13 +147,13 @@ pub fn run_localised(
     engine_cfg: crate::sim::EngineConfig,
     elems: u64,
     cfg: &LocaliseConfig,
-    kernel: &dyn ChunkKernel,
+    kernel: Rc<dyn ChunkKernel>,
     sched: &mut dyn crate::sched::Scheduler,
 ) -> Result<crate::sim::RunStats, crate::sim::EngineError> {
     let mut engine = Engine::new(engine_cfg);
     let input = engine.prealloc_touched(crate::arch::TileId(0), elems * ELEM_BYTES);
-    let program = build_program(&input, elems, cfg, kernel);
-    engine.run(&program, sched)
+    let mut program = build_program(&input, elems, cfg, kernel);
+    engine.run(&mut program, sched)
 }
 
 #[cfg(test)]
@@ -107,10 +169,11 @@ mod tests {
     }
 
     impl ChunkKernel for RepeatedScan {
-        fn emit(&self, t: &mut TraceBuilder, chunk: Loc, bytes: u64, _thread: usize) {
-            for _ in 0..self.passes {
-                t.read(chunk, bytes);
-            }
+        fn steps(&self) -> u32 {
+            self.passes
+        }
+        fn emit_step(&self, t: &mut TraceBuilder, chunk: Loc, bytes: u64, _t: usize, _s: u32) {
+            t.read(chunk, bytes);
         }
         fn name(&self) -> &'static str {
             "repeated-scan"
@@ -128,17 +191,17 @@ mod tests {
     fn builds_non_localised_without_allocs() {
         let mut e = engine(HashPolicy::None);
         let input = e.prealloc_touched(TileId(0), 4096 * ELEM_BYTES);
-        let p = build_program(
+        let mut p = build_program(
             &input,
             4096,
             &LocaliseConfig {
                 threads: 4,
                 localised: false,
             },
-            &RepeatedScan { passes: 2 },
+            Rc::new(RepeatedScan { passes: 2 }),
         );
         p.validate().unwrap();
-        let stats = e.run(&p, &mut StaticMapper::new()).unwrap();
+        let stats = e.run(&mut p, &mut StaticMapper::new()).unwrap();
         assert_eq!(stats.allocs, 1); // just the prealloc
         assert_eq!(stats.frees, 0);
     }
@@ -147,18 +210,37 @@ mod tests {
     fn localised_allocs_and_frees_per_thread() {
         let mut e = engine(HashPolicy::None);
         let input = e.prealloc_touched(TileId(0), 4096 * ELEM_BYTES);
-        let p = build_program(
+        let mut p = build_program(
             &input,
             4096,
             &LocaliseConfig {
                 threads: 4,
                 localised: true,
             },
-            &RepeatedScan { passes: 2 },
+            Rc::new(RepeatedScan { passes: 2 }),
         );
-        let stats = e.run(&p, &mut StaticMapper::new()).unwrap();
+        let stats = e.run(&mut p, &mut StaticMapper::new()).unwrap();
         assert_eq!(stats.allocs, 1 + 4);
         assert_eq!(stats.frees, 4);
+    }
+
+    #[test]
+    fn streams_one_pass_per_batch() {
+        let mut e = engine(HashPolicy::None);
+        let input = e.prealloc_touched(TileId(0), 4096 * ELEM_BYTES);
+        let mut p = build_program(
+            &input,
+            4096,
+            &LocaliseConfig {
+                threads: 2,
+                localised: true,
+            },
+            Rc::new(RepeatedScan { passes: 100 }),
+        );
+        let recorded = p.record();
+        // alloc+copy, 100 single-read passes, free.
+        assert_eq!(recorded[0].len(), 2 + 100 + 1);
+        assert_eq!(recorded, p.record(), "reset must replay identically");
     }
 
     #[test]
@@ -168,16 +250,16 @@ mod tests {
         let mk = |localised| {
             let mut e = engine(HashPolicy::None);
             let input = e.prealloc_touched(TileId(0), (1 << 16) * ELEM_BYTES);
-            let p = build_program(
+            let mut p = build_program(
                 &input,
                 1 << 16,
                 &LocaliseConfig {
                     threads: 16,
                     localised,
                 },
-                &RepeatedScan { passes: 12 },
+                Rc::new(RepeatedScan { passes: 12 }),
             );
-            e.run(&p, &mut StaticMapper::new()).unwrap()
+            e.run(&mut p, &mut StaticMapper::new()).unwrap()
         };
         let conv = mk(false);
         let loc = mk(true);
@@ -196,14 +278,14 @@ mod tests {
         let kernel = |t: &mut TraceBuilder, chunk: Loc, bytes: u64, _i: usize| {
             t.read(chunk, bytes).compute(bytes / 4);
         };
-        let p = build_program(
+        let mut p = build_program(
             &input,
             1024,
             &LocaliseConfig {
                 threads: 2,
                 localised: true,
             },
-            &kernel,
+            Rc::new(kernel),
         );
         p.validate().unwrap();
     }

@@ -49,7 +49,17 @@ const VALUE_FLAGS: &[&str] = &[
 const BOOL_FLAGS: &[&str] = &["json", "no-striping", "no-cache", "localised", "help", "heatmap"];
 
 fn run(argv: &[String]) -> Result<(), Box<dyn std::error::Error>> {
-    let args = Args::parse(argv, VALUE_FLAGS, BOOL_FLAGS)?;
+    let args = Args::parse(argv, VALUE_FLAGS, BOOL_FLAGS).map_err(|e| {
+        // A typo'd axis flag in grid mode (`--sizez`) dies here as a
+        // generic unknown-flag error; attach the axes listing so the
+        // sweep explains itself.
+        let msg: Box<dyn std::error::Error> = if argv.iter().any(|a| a == "grid") {
+            format!("{e}\n{GRID_AXES_HELP}").into()
+        } else {
+            Box::new(e)
+        };
+        msg
+    })?;
     if args.flag("help") || args.positional().is_empty() {
         print_usage();
         return Ok(());
@@ -83,7 +93,7 @@ fn run(argv: &[String]) -> Result<(), Box<dyn std::error::Error>> {
                 engine_cfg = engine_cfg.without_caches();
             }
             let mut engine = tilesim::sim::Engine::new(engine_cfg);
-            let program = tilesim::workloads::mergesort::build(
+            let mut program = tilesim::workloads::mergesort::build(
                 &mut engine,
                 &tilesim::workloads::mergesort::MergesortConfig {
                     elems: args.usize("size", 10_000_000)? as u64,
@@ -92,14 +102,14 @@ fn run(argv: &[String]) -> Result<(), Box<dyn std::error::Error>> {
                 },
             );
             let mut sched = c.mapper.scheduler(seed);
-            let stats = engine.run(&program, sched.as_mut())?;
+            let stats = engine.run(&mut program, sched.as_mut())?;
             emit_stats(&args, &c.label(), &stats);
             Ok(())
         }
         "radix" => {
             let c = case(args.usize("case", 8)? as u8);
             let mut engine = tilesim::sim::Engine::new(c.engine_config(!args.flag("no-striping")));
-            let program = tilesim::workloads::radix::build(
+            let mut program = tilesim::workloads::radix::build(
                 &mut engine,
                 &tilesim::workloads::radix::RadixConfig {
                     elems: args.usize("size", 1_000_000)? as u64,
@@ -109,7 +119,7 @@ fn run(argv: &[String]) -> Result<(), Box<dyn std::error::Error>> {
                 },
             );
             let mut sched = c.mapper.scheduler(seed);
-            let stats = engine.run(&program, sched.as_mut())?;
+            let stats = engine.run(&mut program, sched.as_mut())?;
             emit_stats(&args, &format!("radix sort — {}", c.label()), &stats);
             Ok(())
         }
@@ -231,20 +241,49 @@ fn batch_cmd(args: &Args, seed: u64) -> Result<(), Box<dyn std::error::Error>> {
     Ok(())
 }
 
+/// The grid axes `repro batch grid` understands, with their value syntax —
+/// listed verbatim in every axis-related error so a typo'd sweep explains
+/// itself instead of sending the user to the source.
+const GRID_AXES_HELP: &str = "valid grid axes:\n  \
+     --cases a,b,...        Table 1 case ids, each in 1..8 (default 1,3,8)\n  \
+     --sizes a,b,...        element counts, k/m/g or ki/mi/gi suffixes (default 1m)\n  \
+     --threads-list a,b,... thread counts >= 1 (default 64)\n  \
+     --workload NAME        mergesort | microbench | radix (default mergesort)\n  \
+     --variant a,b,...      mergesort only: non-localised | intermediate | localised\n  \
+     --seeds K              number of derived seeds (default 1)";
+
 /// Build the explicit case × elems × threads × variant × seed grid from
 /// `--cases`, `--sizes`, `--threads-list`, `--workload`/`--variant`, and
 /// `--seeds` (count derived from the base `--seed` via `util::rng`).
 fn grid_spec(args: &Args, seed: u64) -> Result<SweepSpec, Box<dyn std::error::Error>> {
+    let axis_err = |msg: String| -> Box<dyn std::error::Error> {
+        format!("{msg}\n{GRID_AXES_HELP}").into()
+    };
     let cases: Vec<u8> = parse_list(args.get("cases").unwrap_or("1,3,8"), |s| {
         s.parse::<u8>().ok().filter(|c| (1..=8).contains(c))
     })
-    .ok_or("bad --cases list (want ids 1..8)")?;
+    .ok_or_else(|| {
+        axis_err(format!(
+            "bad --cases list '{}' (want Table 1 ids in 1..8)",
+            args.get("cases").unwrap_or("")
+        ))
+    })?;
     let sizes: Vec<u64> = parse_list(args.get("sizes").unwrap_or("1m"), |s| {
         parse_usize(s).map(|v| v as u64)
     })
-    .ok_or("bad --sizes list")?;
+    .ok_or_else(|| {
+        axis_err(format!(
+            "bad --sizes list '{}'",
+            args.get("sizes").unwrap_or("")
+        ))
+    })?;
     let threads: Vec<usize> = parse_list(args.get("threads-list").unwrap_or("64"), parse_usize)
-        .ok_or("bad --threads-list")?;
+        .ok_or_else(|| {
+            axis_err(format!(
+                "bad --threads-list '{}'",
+                args.get("threads-list").unwrap_or("")
+            ))
+        })?;
     let workloads: Vec<Workload> = match args.get("workload").unwrap_or("mergesort") {
         "mergesort" => {
             parse_list(args.get("variant").unwrap_or("non-localised,localised"), |v| {
@@ -257,7 +296,12 @@ fn grid_spec(args: &Args, seed: u64) -> Result<SweepSpec, Box<dyn std::error::Er
                     },
                 })
             })
-            .ok_or("bad --variant list")?
+            .ok_or_else(|| {
+                axis_err(format!(
+                    "bad --variant list '{}'",
+                    args.get("variant").unwrap_or("")
+                ))
+            })?
         }
         "microbench" => vec![Workload::Microbench {
             reps: args.usize("reps", 16)? as u32,
@@ -265,11 +309,13 @@ fn grid_spec(args: &Args, seed: u64) -> Result<SweepSpec, Box<dyn std::error::Er
         "radix" => {
             let digit_bits = args.usize("digit-bits", 8)? as u32;
             if !(1..=16).contains(&digit_bits) {
-                return Err("bad --digit-bits: want 1..=16".into());
+                return Err(axis_err(format!(
+                    "bad --digit-bits {digit_bits}: want 1..=16"
+                )));
             }
             vec![Workload::Radix { digit_bits }]
         }
-        w => return Err(format!("unknown --workload {w}").into()),
+        w => return Err(axis_err(format!("unknown --workload '{w}'"))),
     };
     // Validate the grid up front: the trace builders assert on degenerate
     // inputs, and a panic inside a pool worker is a much worse error

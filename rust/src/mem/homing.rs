@@ -60,6 +60,20 @@ impl Homing {
             h => h,
         }
     }
+
+    /// The home every line of a page shares under this homing, or `None`
+    /// when homes vary per line (hash-for-home) or are unresolved.
+    /// `any_line_in_page` anchors the page-hash case — any line of the
+    /// page gives the same answer. This is the same-home-run test of the
+    /// engine's page-run fast path.
+    #[inline]
+    pub fn uniform_page_home(self, any_line_in_page: LineId) -> Option<TileId> {
+        match self {
+            Homing::Single(t) => Some(t),
+            Homing::PageHash => self.home_of(any_line_in_page),
+            Homing::HashForHome | Homing::FirstTouch => None,
+        }
+    }
 }
 
 /// The `ucache_hash` boot option.

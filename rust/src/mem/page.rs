@@ -102,6 +102,29 @@ impl PageTable {
             .expect("homing resolved above"))
     }
 
+    /// Resolve a whole page's attributes once — first-touch homing and
+    /// placement fault in against `toucher`, exactly as the first
+    /// [`resolve_home`](Self::resolve_home) on any of its lines would —
+    /// and return a copy. The engine's page-run fast path calls this once
+    /// per page instead of `resolve_home` once per line; homing is
+    /// per-page metadata, so the resolved attr is valid for every line of
+    /// the page.
+    #[inline]
+    pub fn resolve_page(&mut self, page: PageId, toucher: TileId) -> Result<PageAttr, PageFault> {
+        let attr = self
+            .pages
+            .get_mut(page.0 as usize)
+            .and_then(|s| s.as_mut())
+            .ok_or(PageFault::Unmapped(page.addr()))?;
+        if matches!(attr.homing, Homing::FirstTouch) {
+            attr.homing = attr.homing.resolved(toucher);
+        }
+        if matches!(attr.placement, Placement::FirstTouchNearest) {
+            attr.placement = Placement::Fixed(nearest_controller(toucher).id);
+        }
+        Ok(*attr)
+    }
+
     /// Home of a line if already determined (read-only; tests/reports).
     pub fn home_of_line(&self, line: LineId) -> Result<Option<TileId>, PageFault> {
         let attr = self

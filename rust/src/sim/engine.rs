@@ -3,19 +3,37 @@
 //!
 //! Threads are replayed min-clock-first from a binary heap, in bounded
 //! quanta (line events), so cross-thread interleaving — and therefore the
-//! contention counters — track simulated time. Every line access walks the
-//! DDC lookup path (cache::hierarchy), pays the uncontended latency
-//! (arch::params), plus queueing at the home tile / memory controller
-//! (noc::contention), plus invalidation fan-out on writes.
+//! contention counters — track simulated time. Ops are *pulled* from each
+//! thread's [`OpSource`](crate::sim::trace::OpSource) on demand, so a run
+//! never materialises a whole trace in host memory.
+//!
+//! Line accounting has two equivalent paths:
+//!
+//! - the **page-run fast path** (default): sequential `Read`/`Write` runs
+//!   are chunked by page, the homing/translation is resolved *once per
+//!   page*, and a run of same-home lines is processed by one bulk call
+//!   into [`cache::hierarchy`](crate::cache) (`read_run`/`write_run`) with
+//!   contention and invalidation fan-out billed per line inside the run.
+//!   `Copy` keeps its per-line read/write interleave but caches the page
+//!   translation across lines.
+//! - the **per-line reference walk** (`EngineConfig::without_page_runs`):
+//!   the original one-lookup-per-line path, kept as the cycle-exactness
+//!   oracle (tests pin both paths to byte-identical `RunStats`) and as the
+//!   baseline the perf bench compares against.
+//!
+//! Every line access pays the uncontended latency (arch::params), plus
+//! queueing at the home tile / memory controller (noc::contention), plus
+//! invalidation fan-out on writes.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
 use crate::arch::{
-    controllers, CacheGeometry, Controller, HitLevel, LatencyParams, TileId, NUM_TILES,
+    controllers, CacheGeometry, Controller, HitLevel, LatencyParams, TileId, LINE_BYTES, NUM_TILES,
+    PAGE_BYTES,
 };
 use crate::cache::CacheSystem;
-use crate::mem::{AllocKind, Allocator, MemConfig, Region, VAddr};
+use crate::mem::{AllocKind, Allocator, LineId, MemConfig, PageAttr, Placement, Region, VAddr};
 use crate::noc::{ContentionConfig, ContentionModel};
 use crate::sched::Scheduler;
 use crate::sim::stats::RunStats;
@@ -23,7 +41,9 @@ use crate::sim::trace::{Loc, Op, Program};
 
 /// Hypervisor page-allocation overhead (per call + per page): `new int[n]`
 /// is not free, which is why localisation must *amortise* the copy+alloc
-/// over enough reuse (Fig. 1's small-repetition regime).
+/// over enough reuse (Fig. 1's small-repetition regime). Zero-byte allocs
+/// are rejected statically by `Program::validate`, so every `Alloc` that
+/// reaches the engine bills at least one page.
 const ALLOC_BASE_CYCLES: u64 = 600;
 const ALLOC_PER_PAGE_CYCLES: u64 = 120;
 const FREE_BASE_CYCLES: u64 = 300;
@@ -31,6 +51,8 @@ const FREE_BASE_CYCLES: u64 = 300;
 /// Max line events a thread processes per scheduling turn. Small enough to
 /// interleave threads faithfully, large enough to amortise heap traffic.
 const QUANTUM_LINES: u64 = 128;
+
+const LINES_PER_PAGE: u64 = PAGE_BYTES / LINE_BYTES;
 
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
@@ -42,6 +64,10 @@ pub struct EngineConfig {
     /// via its home tile), which is where "the effect of memory striping is
     /// considerable" per the paper's closing discussion.
     pub caches_enabled: bool,
+    /// Use the page-run fast path (resolve homing once per page, bulk
+    /// same-home runs). Disable to replay through the per-line reference
+    /// walk — cycle-identical, just slower.
+    pub page_runs: bool,
 }
 
 impl EngineConfig {
@@ -52,11 +78,19 @@ impl EngineConfig {
             params: LatencyParams::TILEPRO64,
             geometry: CacheGeometry::TILEPRO64,
             caches_enabled: true,
+            page_runs: true,
         }
     }
 
     pub fn without_caches(mut self) -> Self {
         self.caches_enabled = false;
+        self
+    }
+
+    /// Replay through the per-line reference walk (exactness oracle and
+    /// perf baseline).
+    pub fn without_page_runs(mut self) -> Self {
+        self.page_runs = false;
         self
     }
 }
@@ -108,11 +142,46 @@ impl From<crate::sim::trace::ProgramError> for EngineError {
 struct ThreadState {
     tile: TileId,
     clock: u64,
-    /// Index of the next op.
-    pc: usize,
+    /// The op currently executing (pulled from the thread's stream).
+    cur: Option<Op>,
     /// Lines already processed within the current (partially done) op.
     progress: u64,
     done: bool,
+}
+
+/// Cached page translation for interleaved streams (`Copy`): one
+/// `resolve_page` per page crossing instead of one per line.
+#[derive(Clone, Copy)]
+struct AttrCursor {
+    page: u64,
+    attr: Option<PageAttr>,
+}
+
+impl AttrCursor {
+    fn new() -> Self {
+        AttrCursor {
+            page: u64::MAX,
+            attr: None,
+        }
+    }
+
+    #[inline]
+    fn resolve(
+        &mut self,
+        table: &mut crate::mem::PageTable,
+        line: LineId,
+        tile: TileId,
+    ) -> Result<PageAttr, EngineError> {
+        let page = line.page();
+        if page.0 != self.page || self.attr.is_none() {
+            let attr = table
+                .resolve_page(page, tile)
+                .map_err(|_| EngineError::Unmapped(line.addr()))?;
+            self.page = page.0;
+            self.attr = Some(attr);
+        }
+        Ok(self.attr.expect("cursor filled above"))
+    }
 }
 
 /// The engine also exposes the pre-run allocator so workloads can set up
@@ -125,6 +194,7 @@ pub struct Engine {
     params: LatencyParams,
     ctrl_table: [Controller; 4],
     caches_enabled: bool,
+    page_runs: bool,
     stats: RunStats,
 }
 
@@ -137,6 +207,7 @@ impl Engine {
             params: cfg.params,
             ctrl_table: controllers(),
             caches_enabled: cfg.caches_enabled,
+            page_runs: cfg.page_runs,
             stats: RunStats {
                 tile_home_requests: vec![0; crate::arch::NUM_TILES as usize],
                 ..RunStats::default()
@@ -166,12 +237,17 @@ impl Engine {
         &self.params
     }
 
+    // ------------------------------------------------------------------
+    // Per-line reference walk (the pre-page-run implementation, kept as
+    // the cycle-exactness oracle and perf baseline).
+    // ------------------------------------------------------------------
+
     /// Simulate one line access from `tile` at `now`; returns cycles.
     /// First-touch pages fault in here (homed on `tile`).
     fn line_access(
         &mut self,
         tile: TileId,
-        line: crate::mem::LineId,
+        line: LineId,
         write: bool,
         now: u64,
     ) -> Result<u64, EngineError> {
@@ -195,17 +271,30 @@ impl Engine {
     fn uncached_access(
         &mut self,
         tile: TileId,
-        line: crate::mem::LineId,
+        line: LineId,
         home: TileId,
         write: bool,
         now: u64,
     ) -> Result<u64, EngineError> {
-        self.stats.ddr_accesses += 1;
         let ctrl = self
             .alloc
             .table
             .controller_of_line(line)
             .map_err(|_| EngineError::Unmapped(line.addr()))?;
+        Ok(self.uncached_line(tile, line, home, ctrl, write, now))
+    }
+
+    /// One DRAM transaction with the controller already known.
+    fn uncached_line(
+        &mut self,
+        tile: TileId,
+        _line: LineId,
+        home: TileId,
+        ctrl: u32,
+        write: bool,
+        now: u64,
+    ) -> u64 {
+        self.stats.ddr_accesses += 1;
         let ctrl_attach = self.ctrl_table[ctrl as usize].attach;
         let base = if write {
             // Posted store still pays controller occupancy, not latency.
@@ -224,18 +313,42 @@ impl Engine {
         cycles += self
             .contention
             .ctrl_request(ctrl, now, self.params.ctrl_service);
-        Ok(cycles)
+        cycles
     }
 
     fn load(
         &mut self,
         tile: TileId,
-        line: crate::mem::LineId,
+        line: LineId,
         home: TileId,
         now: u64,
     ) -> Result<u64, EngineError> {
         let place = self.caches.read(tile, line, home);
-        let cycles = match place {
+        if place == crate::cache::ReadPlace::Ddr {
+            // Only the DRAM path needs the controller (lazy lookup — this
+            // is the reference walk's hottest function).
+            let ctrl = self
+                .alloc
+                .table
+                .controller_of_line(line)
+                .map_err(|_| EngineError::Unmapped(line.addr()))?;
+            return Ok(self.bill_load(tile, line, home, place, ctrl, now));
+        }
+        Ok(self.bill_load(tile, line, home, place, 0, now))
+    }
+
+    /// Latency + contention for a load that was satisfied at `place`.
+    #[inline]
+    fn bill_load(
+        &mut self,
+        tile: TileId,
+        _line: LineId,
+        home: TileId,
+        place: crate::cache::ReadPlace,
+        ctrl: u32,
+        now: u64,
+    ) -> u64 {
+        match place {
             crate::cache::ReadPlace::L1 => {
                 self.stats.l1_hits += 1;
                 self.params.access_cycles(tile, HitLevel::L1)
@@ -254,13 +367,6 @@ impl Engine {
             }
             crate::cache::ReadPlace::Ddr => {
                 self.stats.ddr_accesses += 1;
-                // Only the DRAM path needs the controller (lazy lookup —
-                // this is the engine's hottest function).
-                let ctrl = self
-                    .alloc
-                    .table
-                    .controller_of_line(line)
-                    .map_err(|_| EngineError::Unmapped(line.addr()))?;
                 let ctrl_attach = self.ctrl_table[ctrl as usize].attach;
                 let mut c = self
                     .params
@@ -277,11 +383,10 @@ impl Engine {
                     .contention
                     .ctrl_request(ctrl, now, self.params.ctrl_service)
             }
-        };
-        Ok(cycles)
+        }
     }
 
-    fn store(&mut self, tile: TileId, line: crate::mem::LineId, home: TileId, now: u64) -> u64 {
+    fn store(&mut self, tile: TileId, line: LineId, home: TileId, now: u64) -> u64 {
         let out = self.caches.write(tile, line, home);
         let mut cycles = match out.level {
             crate::cache::WriteLevel::LocalL2 => {
@@ -307,11 +412,206 @@ impl Engine {
         cycles
     }
 
+    // ------------------------------------------------------------------
+    // Page-run fast path.
+    // ------------------------------------------------------------------
+
+    /// One line with a pre-resolved page attr (hash-for-home pages, the
+    /// `Copy` interleave, and the caches-off mode).
+    #[inline]
+    fn fast_line(
+        &mut self,
+        tile: TileId,
+        line: LineId,
+        attr: PageAttr,
+        write: bool,
+        now: u64,
+    ) -> u64 {
+        let home = attr.homing.home_of(line).expect("page attr resolved");
+        if !self.caches_enabled {
+            let ctrl = attr.placement.controller_of(line.addr());
+            return self.uncached_line(tile, line, home, ctrl, write, now);
+        }
+        if write {
+            return self.store(tile, line, home, now);
+        }
+        let place = self.caches.read(tile, line, home);
+        let ctrl = if place == crate::cache::ReadPlace::Ddr {
+            attr.placement.controller_of(line.addr())
+        } else {
+            0
+        };
+        self.bill_load(tile, line, home, place, ctrl, now)
+    }
+
+    /// Sequential access of `count` lines from `first`: chunk by page,
+    /// resolve the translation once per page, bulk-process same-home runs.
+    fn access_run(
+        &mut self,
+        tile: TileId,
+        first: LineId,
+        count: u64,
+        write: bool,
+        clock0: u64,
+    ) -> Result<u64, EngineError> {
+        self.stats.line_accesses += count;
+        let mut cycles = 0u64;
+        let mut l = first.0;
+        let end = first.0 + count;
+        while l < end {
+            let page_end = (l / LINES_PER_PAGE + 1) * LINES_PER_PAGE;
+            let run = end.min(page_end) - l;
+            let line = LineId(l);
+            let attr = self
+                .alloc
+                .table
+                .resolve_page(line.page(), tile)
+                .map_err(|_| EngineError::Unmapped(line.addr()))?;
+            cycles += self.page_run(tile, line, run, write, attr, clock0 + cycles);
+            l += run;
+        }
+        Ok(cycles)
+    }
+
+    /// A run of lines within one page (translation already resolved).
+    fn page_run(
+        &mut self,
+        tile: TileId,
+        first: LineId,
+        count: u64,
+        write: bool,
+        attr: PageAttr,
+        clock0: u64,
+    ) -> u64 {
+        if self.caches_enabled {
+            if let Some(home) = attr.homing.uniform_page_home(first) {
+                return if write {
+                    self.write_run(tile, first, count, home, clock0)
+                } else {
+                    self.read_run(tile, first, count, home, attr.placement, clock0)
+                };
+            }
+        }
+        // Hash-for-home pages (per-line homes) and the caches-off mode:
+        // per-line walk, but still one translation per page.
+        let mut cycles = 0u64;
+        for i in 0..count {
+            cycles += self.fast_line(tile, LineId(first.0 + i), attr, write, clock0 + cycles);
+        }
+        cycles
+    }
+
+    /// Bulk load of a same-home run: one call into the cache hierarchy,
+    /// latency constants hoisted, stats batched; contention still billed
+    /// per line at its in-run timestamp (cycle-exact with the reference
+    /// walk).
+    fn read_run(
+        &mut self,
+        tile: TileId,
+        first: LineId,
+        count: u64,
+        home: TileId,
+        placement: Placement,
+        clock0: u64,
+    ) -> u64 {
+        let params = &self.params;
+        let contention = &mut self.contention;
+        let ctrl_table = &self.ctrl_table;
+        let l1_cost = params.l1_hit;
+        let l2_cost = params.l2_hit;
+        let home_cost = params.access_cycles(tile, HitLevel::Home { home });
+        let remote = home != tile;
+        let (mut l1, mut l2, mut home_hits, mut ddr, mut home_reqs) = (0u64, 0u64, 0u64, 0u64, 0u64);
+        let mut cycles = 0u64;
+        self.caches
+            .read_run(tile, first, count, home, |line, place| {
+                let now = clock0 + cycles;
+                cycles += match place {
+                    crate::cache::ReadPlace::L1 => {
+                        l1 += 1;
+                        l1_cost
+                    }
+                    crate::cache::ReadPlace::L2 => {
+                        l2 += 1;
+                        l2_cost
+                    }
+                    crate::cache::ReadPlace::Home { .. } => {
+                        home_hits += 1;
+                        home_reqs += 1;
+                        home_cost + contention.home_request(home, now, params.home_service)
+                    }
+                    crate::cache::ReadPlace::Ddr => {
+                        ddr += 1;
+                        let ctrl = placement.controller_of(line.addr());
+                        let ctrl_attach = ctrl_table[ctrl as usize].attach;
+                        let mut c = params.access_cycles(tile, HitLevel::Ddr { ctrl_attach });
+                        if remote {
+                            home_reqs += 1;
+                            c += contention.home_request(home, now, params.home_service);
+                        }
+                        c + contention.ctrl_request(ctrl, now, params.ctrl_service)
+                    }
+                };
+            });
+        self.stats.l1_hits += l1;
+        self.stats.l2_hits += l2;
+        self.stats.home_hits += home_hits;
+        self.stats.ddr_accesses += ddr;
+        self.stats.tile_home_requests[home.index()] += home_reqs;
+        cycles
+    }
+
+    /// Bulk store of a same-home run: one call into the cache hierarchy;
+    /// invalidation fan-out accounted per line inside the run.
+    fn write_run(
+        &mut self,
+        tile: TileId,
+        first: LineId,
+        count: u64,
+        home: TileId,
+        clock0: u64,
+    ) -> u64 {
+        let params = &self.params;
+        let contention = &mut self.contention;
+        let local = home == tile;
+        let (mut l2, mut home_hits, mut invals) = (0u64, 0u64, 0u64);
+        let mut cycles = 0u64;
+        self.caches
+            .write_run(tile, first, count, home, |_line, out| {
+                let now = clock0 + cycles;
+                let mut c = if local {
+                    l2 += 1;
+                    params.l2_hit
+                } else {
+                    home_hits += 1;
+                    params.store_post + contention.home_request(home, now, params.home_service)
+                };
+                if out.invalidated > 0 {
+                    invals += out.invalidated as u64;
+                    c += params.noc_header + params.noc_hop * out.invalidation_hops as u64;
+                }
+                cycles += c;
+            });
+        self.stats.l2_hits += l2;
+        self.stats.home_hits += home_hits;
+        self.stats.tile_home_requests[home.index()] += home_hits;
+        self.stats.invalidations += invals;
+        cycles
+    }
+
+    // ------------------------------------------------------------------
+    // Replay loop.
+    // ------------------------------------------------------------------
+
     /// Replay `program` under `sched`; consumes the engine's cache/alloc
-    /// state (call on a fresh engine per experiment).
+    /// state (call on a fresh engine per experiment). The program's op
+    /// streams are reset, validated in one streaming pass, then replayed —
+    /// generation runs twice per run, but generating is O(ops) while the
+    /// replay pays the cache walk per *line*, so the extra pass is noise
+    /// even at the 2^26-element CI scale (~2.5 M ops vs ~10^8 line events).
     pub fn run(
         mut self,
-        program: &Program,
+        program: &mut Program,
         sched: &mut dyn Scheduler,
     ) -> Result<RunStats, EngineError> {
         program.validate()?;
@@ -319,12 +619,15 @@ impl Engine {
         assert!(n <= 4 * NUM_TILES as usize, "too many threads");
 
         let mut threads: Vec<ThreadState> = (0..n)
-            .map(|tid| ThreadState {
-                tile: sched.initial_tile(tid),
-                clock: 0,
-                pc: 0,
-                progress: 0,
-                done: program.threads[tid].is_empty(),
+            .map(|tid| {
+                let cur = program.threads[tid].next_op();
+                ThreadState {
+                    tile: sched.initial_tile(tid),
+                    clock: 0,
+                    done: cur.is_none(),
+                    cur,
+                    progress: 0,
+                }
             })
             .collect();
         let mut slots: Vec<Option<Region>> = vec![None; program.num_slots as usize];
@@ -356,7 +659,7 @@ impl Engine {
             let mut budget = QUANTUM_LINES;
             let mut blocked = false;
             while budget > 0 && !threads[tid].done {
-                let op = program.threads[tid][threads[tid].pc];
+                let op = threads[tid].cur.expect("live thread must hold an op");
                 match self.step_op(tid, &mut threads, &mut slots, &mut signal_time, op)? {
                     StepResult::Progress(lines) => {
                         budget = budget.saturating_sub(lines.max(1));
@@ -376,8 +679,12 @@ impl Engine {
                         }
                     }
                 }
-                if threads[tid].pc >= program.threads[tid].len() {
-                    threads[tid].done = true;
+                if threads[tid].cur.is_none() {
+                    // Current op retired: pull the next from the stream.
+                    threads[tid].cur = program.threads[tid].next_op();
+                    if threads[tid].cur.is_none() {
+                        threads[tid].done = true;
+                    }
                 }
             }
             if !threads[tid].done && !blocked {
@@ -440,24 +747,30 @@ impl Engine {
                 // Line ids of a range are contiguous: resume at
                 // first + progress in O(1) instead of re-skipping the
                 // iterator (which made long ranges quadratic).
-                let first = addr.line().0 + progress;
-                let mut cycles = 0u64;
-                for l in first..first + batch {
-                    cycles +=
-                        self.line_access(tile, crate::mem::LineId(l), write, clock0 + cycles)?;
-                }
+                let first = LineId(addr.line().0 + progress);
+                let cycles = if self.page_runs {
+                    self.access_run(tile, first, batch, write, clock0)?
+                } else {
+                    let mut c = 0u64;
+                    for l in first.0..first.0 + batch {
+                        c += self.line_access(tile, LineId(l), write, clock0 + c)?;
+                    }
+                    c
+                };
                 let t = &mut threads[tid];
                 t.clock += cycles;
                 if progress + batch >= total_lines {
                     t.progress = 0;
-                    t.pc += 1;
+                    t.cur = None;
                 } else {
                     t.progress = progress + batch;
                 }
                 Ok(StepResult::Progress(batch))
             }
             Op::Copy { src, dst, bytes } => {
-                // Per-line interleave of read+write, like memcpy.
+                // Per-line interleave of read+write, like memcpy. The fast
+                // path keeps the exact interleave (contention order!) but
+                // re-resolves the translation only on page crossings.
                 let s = self.resolve(tid, slots, src)?;
                 let d = self.resolve(tid, slots, dst)?;
                 let total_lines = crate::mem::line_count(d, bytes);
@@ -466,25 +779,39 @@ impl Engine {
                 let src_first = s.line().0 + progress;
                 let dst_first = d.line().0 + progress;
                 let mut cycles = 0u64;
-                for i in 0..batch {
-                    cycles += self.line_access(
-                        tile,
-                        crate::mem::LineId(src_first + i),
-                        false,
-                        clock0 + cycles,
-                    )?;
-                    cycles += self.line_access(
-                        tile,
-                        crate::mem::LineId(dst_first + i),
-                        true,
-                        clock0 + cycles,
-                    )?;
+                if self.page_runs {
+                    let mut src_cursor = AttrCursor::new();
+                    let mut dst_cursor = AttrCursor::new();
+                    for i in 0..batch {
+                        let sl = LineId(src_first + i);
+                        let sa = src_cursor.resolve(&mut self.alloc.table, sl, tile)?;
+                        cycles += self.fast_line(tile, sl, sa, false, clock0 + cycles);
+                        let dl = LineId(dst_first + i);
+                        let da = dst_cursor.resolve(&mut self.alloc.table, dl, tile)?;
+                        cycles += self.fast_line(tile, dl, da, true, clock0 + cycles);
+                    }
+                    self.stats.line_accesses += 2 * batch;
+                } else {
+                    for i in 0..batch {
+                        cycles += self.line_access(
+                            tile,
+                            LineId(src_first + i),
+                            false,
+                            clock0 + cycles,
+                        )?;
+                        cycles += self.line_access(
+                            tile,
+                            LineId(dst_first + i),
+                            true,
+                            clock0 + cycles,
+                        )?;
+                    }
                 }
                 let t = &mut threads[tid];
                 t.clock += cycles;
                 if progress + batch >= total_lines {
                     t.progress = 0;
-                    t.pc += 1;
+                    t.cur = None;
                 } else {
                     t.progress = progress + batch;
                 }
@@ -494,11 +821,12 @@ impl Engine {
                 let t = &mut threads[tid];
                 t.clock += cycles;
                 self.stats.compute_cycles += cycles;
-                t.pc += 1;
+                t.cur = None;
                 // Compute is cheap to simulate; bill one budget unit.
                 Ok(StepResult::Progress(1))
             }
             Op::Alloc { slot, bytes, kind } => {
+                debug_assert!(bytes > 0, "validate rejects zero-byte allocs");
                 let region = self
                     .alloc
                     .alloc(tile, bytes, kind)
@@ -507,7 +835,7 @@ impl Engine {
                 let pages = bytes.div_ceil(crate::arch::PAGE_BYTES);
                 let t = &mut threads[tid];
                 t.clock += ALLOC_BASE_CYCLES + ALLOC_PER_PAGE_CYCLES * pages;
-                t.pc += 1;
+                t.cur = None;
                 Ok(StepResult::Progress(1))
             }
             Op::Free { slot } => {
@@ -524,12 +852,12 @@ impl Engine {
                 self.caches.purge_line_range(first, last);
                 let t = &mut threads[tid];
                 t.clock += FREE_BASE_CYCLES;
-                t.pc += 1;
+                t.cur = None;
                 Ok(StepResult::Progress(1))
             }
             Op::Signal { event } => {
                 let t = &mut threads[tid];
-                t.pc += 1;
+                t.cur = None;
                 signal_time[event as usize] = Some(t.clock);
                 Ok(StepResult::Signalled(event))
             }
@@ -538,7 +866,7 @@ impl Engine {
                     Some(s) => {
                         let t = &mut threads[tid];
                         t.clock = t.clock.max(s);
-                        t.pc += 1;
+                        t.cur = None;
                         Ok(StepResult::Progress(1))
                     }
                     None => Ok(StepResult::Blocked(event)),
@@ -574,8 +902,8 @@ mod tests {
         let r = e.prealloc(TileId(0), 4096);
         let mut b = TraceBuilder::new();
         b.read(Loc::Abs(r.addr), 4096);
-        let p = Program::from_builders(vec![b], 0, 0);
-        let stats = e.run(&p, &mut StaticMapper::new()).unwrap();
+        let mut p = Program::from_builders(vec![b], 0, 0);
+        let stats = e.run(&mut p, &mut StaticMapper::new()).unwrap();
         assert_eq!(stats.line_accesses, 64);
         assert_eq!(stats.ddr_accesses, 64, "cold read misses to DDR");
         assert!(stats.makespan_cycles > 64 * 88);
@@ -587,8 +915,8 @@ mod tests {
         let r = e.prealloc(TileId(0), 4096);
         let mut b = TraceBuilder::new();
         b.read(Loc::Abs(r.addr), 4096).read(Loc::Abs(r.addr), 4096);
-        let p = Program::from_builders(vec![b], 0, 0);
-        let stats = e.run(&p, &mut StaticMapper::new()).unwrap();
+        let mut p = Program::from_builders(vec![b], 0, 0);
+        let stats = e.run(&mut p, &mut StaticMapper::new()).unwrap();
         assert_eq!(stats.l1_hits, 64, "second pass must hit L1");
     }
 
@@ -603,12 +931,12 @@ mod tests {
             .read(Loc::Slot { slot: 0, offset: 0 }, 4096);
         // Put the thread on tile 5 via tid=5.
         let empty = TraceBuilder::new();
-        let p = Program::from_builders(
+        let mut p = Program::from_builders(
             vec![empty.clone(), empty.clone(), empty.clone(), empty.clone(), empty, b],
             1,
             0,
         );
-        let stats = e.run(&p, &mut StaticMapper::new()).unwrap();
+        let stats = e.run(&mut p, &mut StaticMapper::new()).unwrap();
         // The write first-touch homes the pages on tile 5 and fills its L2;
         // the re-read must be all local (L1/L2), no DDR, no remote home.
         assert_eq!(stats.l1_hits + stats.l2_hits, 128, "local alloc must stay local");
@@ -624,8 +952,8 @@ mod tests {
             .free(0)
             .alloc(1, 4096, AllocKind::Heap)
             .read(Loc::Slot { slot: 1, offset: 0 }, 4096);
-        let p = Program::from_builders(vec![b], 2, 0);
-        let stats = e.run(&p, &mut StaticMapper::new()).unwrap();
+        let mut p = Program::from_builders(vec![b], 2, 0);
+        let stats = e.run(&mut p, &mut StaticMapper::new()).unwrap();
         // The re-alloc reuses the same pages (64 lines), but the purge
         // means the read must go to DDR (no stale hits from the writes).
         assert_eq!(stats.ddr_accesses, 64);
@@ -641,8 +969,8 @@ mod tests {
         b0.read(Loc::Abs(r.addr), 1 << 20).signal(0);
         let mut b1 = TraceBuilder::new();
         b1.wait(0).read(Loc::Abs(r.addr), 64);
-        let p = Program::from_builders(vec![b0, b1], 0, 1);
-        let stats = e.run(&p, &mut StaticMapper::new()).unwrap();
+        let mut p = Program::from_builders(vec![b0, b1], 0, 1);
+        let stats = e.run(&mut p, &mut StaticMapper::new()).unwrap();
         // Thread 1 must finish after thread 0 signalled.
         assert!(stats.thread_cycles[1] >= stats.thread_cycles[0] - 1000);
     }
@@ -651,9 +979,9 @@ mod tests {
     fn deadlock_detected() {
         let mut b = TraceBuilder::new();
         b.wait(0); // nobody signals
-        let p = Program::from_builders(vec![b], 0, 1);
+        let mut p = Program::from_builders(vec![b], 0, 1);
         let e = engine(HashPolicy::None);
-        match e.run(&p, &mut StaticMapper::new()) {
+        match e.run(&mut p, &mut StaticMapper::new()) {
             Err(EngineError::Deadlock(t)) => assert_eq!(t, vec![0]),
             other => panic!("expected deadlock, got {other:?}"),
         }
@@ -663,10 +991,10 @@ mod tests {
     fn unbound_slot_is_error() {
         let mut b = TraceBuilder::new();
         b.read(Loc::Slot { slot: 0, offset: 0 }, 64);
-        let p = Program::from_builders(vec![b], 1, 0);
+        let mut p = Program::from_builders(vec![b], 1, 0);
         let e = engine(HashPolicy::None);
         assert!(matches!(
-            e.run(&p, &mut StaticMapper::new()),
+            e.run(&mut p, &mut StaticMapper::new()),
             Err(EngineError::UnboundSlot { .. })
         ));
     }
@@ -675,12 +1003,46 @@ mod tests {
     fn unmapped_access_is_error() {
         let mut b = TraceBuilder::new();
         b.read(Loc::Abs(VAddr(1 << 30)), 64);
-        let p = Program::from_builders(vec![b], 0, 0);
+        let mut p = Program::from_builders(vec![b], 0, 0);
         let e = engine(HashPolicy::None);
         assert!(matches!(
-            e.run(&p, &mut StaticMapper::new()),
+            e.run(&mut p, &mut StaticMapper::new()),
             Err(EngineError::Unmapped(_))
         ));
+    }
+
+    #[test]
+    fn unmapped_access_is_error_in_reference_walk() {
+        let mut b = TraceBuilder::new();
+        b.read(Loc::Abs(VAddr(1 << 30)), 64);
+        let mut p = Program::from_builders(vec![b], 0, 0);
+        let e = Engine::new(
+            EngineConfig::tilepro64(MemConfig {
+                hash_policy: HashPolicy::None,
+                striping: true,
+            })
+            .without_page_runs(),
+        );
+        assert!(matches!(
+            e.run(&mut p, &mut StaticMapper::new()),
+            Err(EngineError::Unmapped(_))
+        ));
+    }
+
+    #[test]
+    fn zero_byte_alloc_rejected_before_replay() {
+        let mut b = TraceBuilder::new();
+        b.alloc(0, 0, AllocKind::Heap);
+        let mut p = Program::from_builders(vec![b], 1, 0);
+        let e = engine(HashPolicy::None);
+        match e.run(&mut p, &mut StaticMapper::new()) {
+            Err(EngineError::Invalid(crate::sim::trace::ProgramError::ZeroAlloc {
+                thread: 0,
+                op: 0,
+                slot: 0,
+            })) => {}
+            other => panic!("expected ZeroAlloc validation error, got {other:?}"),
+        }
     }
 
     #[test]
@@ -695,8 +1057,8 @@ mod tests {
             b.read(Loc::Abs(addr), 1 << 20);
             b
         };
-        let p = Program::from_builders(vec![mk(r.addr), mk(r.addr)], 0, 0);
-        let stats = e.run(&p, &mut StaticMapper::new()).unwrap();
+        let mut p = Program::from_builders(vec![mk(r.addr), mk(r.addr)], 0, 0);
+        let stats = e.run(&mut p, &mut StaticMapper::new()).unwrap();
         assert!(stats.home_hits > 0, "expected remote-home L3 hits");
     }
 
@@ -707,11 +1069,57 @@ mod tests {
         let mut b0 = TraceBuilder::new();
         b0.read(Loc::Abs(r.addr), 1 << 16);
         let b1 = TraceBuilder::new(); // empty
-        let p = Program::from_builders(vec![b0, b1], 0, 0);
-        let stats = e.run(&p, &mut StaticMapper::new()).unwrap();
+        let mut p = Program::from_builders(vec![b0, b1], 0, 0);
+        let stats = e.run(&mut p, &mut StaticMapper::new()).unwrap();
         assert_eq!(
             stats.makespan_cycles,
             *stats.thread_cycles.iter().max().unwrap()
         );
+    }
+
+    /// The load-bearing pin: the page-run fast path must be cycle-exact
+    /// with the per-line reference walk, across homing policies, cache
+    /// modes, and op mixes (reads, writes, copies, alloc/free, events).
+    #[test]
+    fn page_run_fast_path_matches_reference_walk() {
+        let build = |e: &mut Engine| {
+            let shared = e.prealloc_touched(TileId(0), 3 * PAGE_BYTES);
+            let cold = e.prealloc(TileId(0), 2 * PAGE_BYTES);
+            let mut b0 = TraceBuilder::new();
+            b0.read(Loc::Abs(shared.addr), 3 * PAGE_BYTES)
+                .write(Loc::Abs(cold.addr.offset(100)), PAGE_BYTES)
+                .copy(Loc::Abs(shared.addr), Loc::Abs(cold.addr), PAGE_BYTES + 777)
+                .signal(0);
+            let mut b1 = TraceBuilder::new();
+            b1.alloc(0, PAGE_BYTES / 2, AllocKind::Heap)
+                .copy(Loc::Abs(shared.addr), Loc::Slot { slot: 0, offset: 0 }, PAGE_BYTES / 2)
+                .read(Loc::Slot { slot: 0, offset: 0 }, PAGE_BYTES / 2)
+                .wait(0)
+                .write(Loc::Abs(shared.addr.offset(64)), 2 * PAGE_BYTES)
+                .free(0);
+            Program::from_builders(vec![b0, b1], 1, 1)
+        };
+        for policy in [HashPolicy::None, HashPolicy::AllButStack] {
+            for caches in [true, false] {
+                let mk = |page_runs: bool| {
+                    let mut cfg = EngineConfig::tilepro64(MemConfig {
+                        hash_policy: policy,
+                        striping: true,
+                    });
+                    cfg.caches_enabled = caches;
+                    cfg.page_runs = page_runs;
+                    let mut e = Engine::new(cfg);
+                    let mut p = build(&mut e);
+                    e.run(&mut p, &mut StaticMapper::new()).unwrap()
+                };
+                let fast = mk(true);
+                let slow = mk(false);
+                assert_eq!(
+                    fast.to_json().encode(),
+                    slow.to_json().encode(),
+                    "fast path diverged ({policy:?}, caches={caches})"
+                );
+            }
+        }
     }
 }

@@ -6,4 +6,6 @@ pub mod trace;
 
 pub use engine::{Engine, EngineConfig, EngineError};
 pub use stats::RunStats;
-pub use trace::{Loc, Op, Program, ProgramError, TraceBuilder};
+pub use trace::{
+    Loc, Op, OpSource, Program, ProgramError, SegmentGen, SegmentSource, TraceBuilder, VecSource,
+};

@@ -1,12 +1,18 @@
 //! Workload traces: the instruction set of the simulator.
 //!
-//! A workload (micro-benchmark, merge sort, …) is *generated* as one op
-//! sequence per thread, then replayed by the engine in cycle order. Ops
-//! reference dynamic allocations symbolically via slots — the address (and
-//! therefore the homing!) of `new int[n]` is only known at replay time,
-//! because it depends on which tile the thread occupies when the Alloc
-//! executes (migrations move threads). This is precisely the mechanism the
-//! paper's localisation exploits.
+//! A workload (micro-benchmark, merge sort, …) is expressed as one *op
+//! stream* per thread, replayed by the engine in cycle order. Streams are
+//! pull-based ([`OpSource`]): generators emit ops lazily on demand, so the
+//! simulable problem size is bounded by the simulated memory model, not by
+//! host RAM holding a materialised `Vec<Op>` per thread. A recorded
+//! `Vec<Op>` remains one implementation ([`VecSource`]) — used for small
+//! programs, tests, and the differential streamed-vs-recorded replay check.
+//!
+//! Ops reference dynamic allocations symbolically via slots — the address
+//! (and therefore the homing!) of `new int[n]` is only known at replay
+//! time, because it depends on which tile the thread occupies when the
+//! Alloc executes (migrations move threads). This is precisely the
+//! mechanism the paper's localisation exploits.
 //!
 //! Cross-thread synchronisation uses Signal/Wait events (the fork–join of
 //! OpenMP nested sections); slots live in a program-global namespace so a
@@ -47,6 +53,7 @@ pub enum Op {
     /// Pure ALU work.
     Compute { cycles: u64 },
     /// Allocate `bytes` on the thread's *current* tile into `slot`.
+    /// `bytes == 0` is statically rejected by [`Program::validate`].
     Alloc {
         slot: u32,
         bytes: u64,
@@ -60,7 +67,135 @@ pub enum Op {
     Wait { event: u32 },
 }
 
-/// Builder for one thread's op list.
+/// A pull-based stream of one thread's ops.
+///
+/// Sources must be *replayable*: after [`reset`](OpSource::reset) the exact
+/// same op sequence is produced again. The engine relies on this — every
+/// run streams each source twice (a validation pass, then the replay), and
+/// the differential tests pin streamed == recorded.
+pub trait OpSource {
+    /// The next op, or `None` when the stream is exhausted.
+    fn next_op(&mut self) -> Option<Op>;
+
+    /// Rewind to the beginning for reuse.
+    fn reset(&mut self);
+
+    /// Host bytes this source currently keeps resident for op storage
+    /// (high-water of any internal buffer). Materialised sources report
+    /// their whole vector; streaming sources report their small window —
+    /// the number the perf bench records as "peak trace bytes".
+    fn resident_bytes(&self) -> u64 {
+        0
+    }
+}
+
+/// A fully materialised op stream (the pre-streaming representation).
+pub struct VecSource {
+    ops: Vec<Op>,
+    pos: usize,
+}
+
+impl VecSource {
+    pub fn new(ops: Vec<Op>) -> Self {
+        VecSource { ops, pos: 0 }
+    }
+}
+
+impl From<Vec<Op>> for VecSource {
+    fn from(ops: Vec<Op>) -> Self {
+        VecSource::new(ops)
+    }
+}
+
+impl OpSource for VecSource {
+    fn next_op(&mut self) -> Option<Op> {
+        let op = self.ops.get(self.pos).copied();
+        if op.is_some() {
+            self.pos += 1;
+        }
+        op
+    }
+
+    fn reset(&mut self) {
+        self.pos = 0;
+    }
+
+    fn resident_bytes(&self) -> u64 {
+        (self.ops.capacity() * std::mem::size_of::<Op>()) as u64
+    }
+}
+
+/// A generator that emits ops in bounded batches. [`SegmentSource`] adapts
+/// it into an [`OpSource`]: each `fill` call appends the next batch into
+/// the (reused) buffer, so resident memory is one batch, not the stream.
+pub trait SegmentGen {
+    /// Append the next batch of ops to `out`. Return `false` once the
+    /// stream is exhausted (subsequent calls must keep returning `false`).
+    /// A `true` return with nothing appended is allowed (empty step).
+    fn fill(&mut self, out: &mut TraceBuilder) -> bool;
+
+    /// Rewind the generator to the beginning of its stream.
+    fn rewind(&mut self);
+}
+
+/// Adapter: a [`SegmentGen`] plus a small replay buffer = an [`OpSource`].
+pub struct SegmentSource<G: SegmentGen> {
+    source: G,
+    buf: TraceBuilder,
+    pos: usize,
+    done: bool,
+}
+
+impl<G: SegmentGen> SegmentSource<G> {
+    pub fn new(source: G) -> Self {
+        SegmentSource {
+            source,
+            buf: TraceBuilder::new(),
+            pos: 0,
+            done: false,
+        }
+    }
+
+    /// Box the source for storage in a [`Program`].
+    pub fn boxed(source: G) -> Box<dyn OpSource>
+    where
+        G: 'static,
+    {
+        Box::new(SegmentSource::new(source))
+    }
+}
+
+impl<G: SegmentGen> OpSource for SegmentSource<G> {
+    fn next_op(&mut self) -> Option<Op> {
+        loop {
+            if let Some(&op) = self.buf.ops().get(self.pos) {
+                self.pos += 1;
+                return Some(op);
+            }
+            if self.done {
+                return None;
+            }
+            self.buf.clear();
+            self.pos = 0;
+            if !self.source.fill(&mut self.buf) {
+                self.done = true;
+            }
+        }
+    }
+
+    fn reset(&mut self) {
+        self.source.rewind();
+        self.buf.clear();
+        self.pos = 0;
+        self.done = false;
+    }
+
+    fn resident_bytes(&self) -> u64 {
+        (self.buf.capacity() * std::mem::size_of::<Op>()) as u64
+    }
+}
+
+/// Builder for a batch of ops (also the sink [`SegmentGen`]s emit into).
 #[derive(Default, Clone)]
 pub struct TraceBuilder {
     ops: Vec<Op>,
@@ -126,11 +261,20 @@ impl TraceBuilder {
     pub fn into_ops(self) -> Vec<Op> {
         self.ops
     }
+
+    /// Drop the buffered ops, keeping the allocation for reuse.
+    pub fn clear(&mut self) {
+        self.ops.clear();
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.ops.capacity()
+    }
 }
 
-/// A complete multi-thread workload.
+/// A complete multi-thread workload: one op source per thread.
 pub struct Program {
-    pub threads: Vec<Vec<Op>>,
+    pub threads: Vec<Box<dyn OpSource>>,
     pub num_slots: u32,
     pub num_events: u32,
 }
@@ -150,6 +294,13 @@ pub enum ProgramError {
         num_events: u32,
     },
     DoubleSignal(u32),
+    /// `Op::Alloc` with `bytes == 0`: the allocator has no meaningful
+    /// region (and no page) to hand out, so the program is malformed.
+    ZeroAlloc {
+        thread: usize,
+        op: usize,
+        slot: u32,
+    },
 }
 
 impl std::fmt::Display for ProgramError {
@@ -174,6 +325,10 @@ impl std::fmt::Display for ProgramError {
                 "thread {thread} op {op}: event {event} out of range ({num_events})"
             ),
             ProgramError::DoubleSignal(ev) => write!(f, "event {ev} signalled more than once"),
+            ProgramError::ZeroAlloc { thread, op, slot } => write!(
+                f,
+                "thread {thread} op {op}: zero-byte alloc into slot {slot}"
+            ),
         }
     }
 }
@@ -181,7 +336,7 @@ impl std::fmt::Display for ProgramError {
 impl std::error::Error for ProgramError {}
 
 impl Program {
-    pub fn new(threads: Vec<Vec<Op>>, num_slots: u32, num_events: u32) -> Self {
+    pub fn new(threads: Vec<Box<dyn OpSource>>, num_slots: u32, num_events: u32) -> Self {
         Program {
             threads,
             num_slots,
@@ -189,30 +344,82 @@ impl Program {
         }
     }
 
-    pub fn from_builders(builders: Vec<TraceBuilder>, num_slots: u32, num_events: u32) -> Self {
+    /// A program over materialised op vectors ([`VecSource`] per thread).
+    pub fn from_ops(threads: Vec<Vec<Op>>, num_slots: u32, num_events: u32) -> Self {
         Program::new(
+            threads
+                .into_iter()
+                .map(|ops| Box::new(VecSource::new(ops)) as Box<dyn OpSource>)
+                .collect(),
+            num_slots,
+            num_events,
+        )
+    }
+
+    pub fn from_builders(builders: Vec<TraceBuilder>, num_slots: u32, num_events: u32) -> Self {
+        Program::from_ops(
             builders.into_iter().map(|b| b.into_ops()).collect(),
             num_slots,
             num_events,
         )
     }
 
-    /// Static validation: slot/event indices in range, events signalled at
-    /// most once (the engine's Wait assumes single-shot events).
-    pub fn validate(&self) -> Result<(), ProgramError> {
-        let mut signals = vec![0u32; self.num_events as usize];
-        for (t, ops) in self.threads.iter().enumerate() {
-            for (i, op) in ops.iter().enumerate() {
+    /// Rewind every thread's stream to the beginning.
+    pub fn reset(&mut self) {
+        for t in &mut self.threads {
+            t.reset();
+        }
+    }
+
+    /// Materialise every stream into op vectors (the recorded form used by
+    /// the differential streamed-vs-recorded test and by tooling). Resets
+    /// the streams before and after.
+    pub fn record(&mut self) -> Vec<Vec<Op>> {
+        self.reset();
+        let out = self
+            .threads
+            .iter_mut()
+            .map(|src| {
+                let mut ops = Vec::new();
+                while let Some(op) = src.next_op() {
+                    ops.push(op);
+                }
+                ops
+            })
+            .collect();
+        self.reset();
+        out
+    }
+
+    /// Static validation (one streaming pass, then rewinds): slot/event
+    /// indices in range, events signalled at most once (the engine's Wait
+    /// assumes single-shot events), no zero-byte allocations.
+    pub fn validate(&mut self) -> Result<(), ProgramError> {
+        self.reset();
+        let r = Self::validate_streams(&mut self.threads, self.num_slots, self.num_events);
+        self.reset();
+        r
+    }
+
+    fn validate_streams(
+        threads: &mut [Box<dyn OpSource>],
+        num_slots: u32,
+        num_events: u32,
+    ) -> Result<(), ProgramError> {
+        let mut signals = vec![0u32; num_events as usize];
+        for (t, src) in threads.iter_mut().enumerate() {
+            let mut i = 0usize;
+            while let Some(op) = src.next_op() {
                 let check_loc = |loc: &Loc| -> Option<u32> {
                     match loc {
-                        Loc::Slot { slot, .. } if *slot >= self.num_slots => Some(*slot),
+                        Loc::Slot { slot, .. } if *slot >= num_slots => Some(*slot),
                         _ => None,
                     }
                 };
-                let bad_slot = match op {
+                let bad_slot = match &op {
                     Op::Read { loc, .. } | Op::Write { loc, .. } => check_loc(loc),
                     Op::Copy { src, dst, .. } => check_loc(src).or(check_loc(dst)),
-                    Op::Alloc { slot, .. } | Op::Free { slot } if *slot >= self.num_slots => {
+                    Op::Alloc { slot, .. } | Op::Free { slot } if *slot >= num_slots => {
                         Some(*slot)
                     }
                     _ => None,
@@ -222,44 +429,63 @@ impl Program {
                         thread: t,
                         op: i,
                         slot,
-                        num_slots: self.num_slots,
+                        num_slots,
                     });
                 }
                 match op {
+                    Op::Alloc { slot, bytes: 0, .. } => {
+                        return Err(ProgramError::ZeroAlloc {
+                            thread: t,
+                            op: i,
+                            slot,
+                        });
+                    }
                     Op::Signal { event } | Op::Wait { event } => {
-                        if *event >= self.num_events {
+                        if event >= num_events {
                             return Err(ProgramError::EventRange {
                                 thread: t,
                                 op: i,
-                                event: *event,
-                                num_events: self.num_events,
+                                event,
+                                num_events,
                             });
                         }
                         if let Op::Signal { event } = op {
-                            signals[*event as usize] += 1;
-                            if signals[*event as usize] > 1 {
-                                return Err(ProgramError::DoubleSignal(*event));
+                            signals[event as usize] += 1;
+                            if signals[event as usize] > 1 {
+                                return Err(ProgramError::DoubleSignal(event));
                             }
                         }
                     }
                     _ => {}
                 }
+                i += 1;
             }
         }
         Ok(())
     }
 
     /// Total bytes moved by Read/Write/Copy ops (for traffic reports).
-    pub fn traffic_bytes(&self) -> u64 {
-        self.threads
-            .iter()
-            .flatten()
-            .map(|op| match op {
-                Op::Read { bytes, .. } | Op::Write { bytes, .. } => *bytes,
-                Op::Copy { bytes, .. } => 2 * bytes,
-                _ => 0,
-            })
-            .sum()
+    /// Streams every source once, then rewinds.
+    pub fn traffic_bytes(&mut self) -> u64 {
+        self.reset();
+        let mut total = 0u64;
+        for src in &mut self.threads {
+            while let Some(op) = src.next_op() {
+                total += match op {
+                    Op::Read { bytes, .. } | Op::Write { bytes, .. } => bytes,
+                    Op::Copy { bytes, .. } => 2 * bytes,
+                    _ => 0,
+                };
+            }
+        }
+        self.reset();
+        total
+    }
+
+    /// Host bytes currently resident for op storage across all threads
+    /// (the streaming win: ~constant, vs the whole trace when recorded).
+    pub fn resident_trace_bytes(&self) -> u64 {
+        self.threads.iter().map(|t| t.resident_bytes()).sum()
     }
 }
 
@@ -301,7 +527,7 @@ mod tests {
         b.alloc(0, 64, AllocKind::Heap).signal(0);
         let mut b2 = TraceBuilder::new();
         b2.wait(0).read(Loc::Slot { slot: 0, offset: 0 }, 64);
-        let p = Program::from_builders(vec![b, b2], 1, 1);
+        let mut p = Program::from_builders(vec![b, b2], 1, 1);
         p.validate().unwrap();
     }
 
@@ -309,7 +535,7 @@ mod tests {
     fn validate_rejects_bad_slot() {
         let mut b = TraceBuilder::new();
         b.read(Loc::Slot { slot: 9, offset: 0 }, 64);
-        let p = Program::from_builders(vec![b], 1, 0);
+        let mut p = Program::from_builders(vec![b], 1, 0);
         assert!(matches!(p.validate(), Err(ProgramError::SlotRange { .. })));
     }
 
@@ -317,7 +543,7 @@ mod tests {
     fn validate_rejects_bad_event() {
         let mut b = TraceBuilder::new();
         b.wait(3);
-        let p = Program::from_builders(vec![b], 0, 1);
+        let mut p = Program::from_builders(vec![b], 0, 1);
         assert!(matches!(p.validate(), Err(ProgramError::EventRange { .. })));
     }
 
@@ -325,8 +551,29 @@ mod tests {
     fn validate_rejects_double_signal() {
         let mut b = TraceBuilder::new();
         b.signal(0).signal(0);
-        let p = Program::from_builders(vec![b], 0, 1);
+        let mut p = Program::from_builders(vec![b], 0, 1);
         assert!(matches!(p.validate(), Err(ProgramError::DoubleSignal(0))));
+    }
+
+    #[test]
+    fn validate_rejects_zero_alloc() {
+        let mut b = TraceBuilder::new();
+        b.alloc(0, 0, AllocKind::Heap);
+        let mut p = Program::from_builders(vec![b], 1, 0);
+        assert!(matches!(
+            p.validate(),
+            Err(ProgramError::ZeroAlloc { thread: 0, op: 0, slot: 0 })
+        ));
+    }
+
+    #[test]
+    fn validate_rewinds_the_streams() {
+        let mut b = TraceBuilder::new();
+        b.read(Loc::Abs(VAddr(0)), 64).compute(5);
+        let mut p = Program::from_builders(vec![b], 0, 0);
+        p.validate().unwrap();
+        // The stream must replay from the start after validation.
+        assert!(matches!(p.threads[0].next_op(), Some(Op::Read { .. })));
     }
 
     #[test]
@@ -334,7 +581,97 @@ mod tests {
         let mut b = TraceBuilder::new();
         b.read(Loc::Abs(VAddr(0)), 100)
             .copy(Loc::Abs(VAddr(0)), Loc::Abs(VAddr(4096)), 50);
-        let p = Program::from_builders(vec![b], 0, 0);
+        let mut p = Program::from_builders(vec![b], 0, 0);
         assert_eq!(p.traffic_bytes(), 200);
+        // Repeatable: traffic_bytes rewinds.
+        assert_eq!(p.traffic_bytes(), 200);
+    }
+
+    #[test]
+    fn vec_source_streams_and_resets() {
+        let ops = vec![Op::Compute { cycles: 1 }, Op::Compute { cycles: 2 }];
+        let mut s = VecSource::new(ops);
+        assert_eq!(s.next_op(), Some(Op::Compute { cycles: 1 }));
+        assert_eq!(s.next_op(), Some(Op::Compute { cycles: 2 }));
+        assert_eq!(s.next_op(), None);
+        s.reset();
+        assert_eq!(s.next_op(), Some(Op::Compute { cycles: 1 }));
+    }
+
+    /// A batch-at-a-time counter generator for exercising SegmentSource.
+    struct Counter {
+        next: u64,
+        limit: u64,
+    }
+
+    impl SegmentGen for Counter {
+        fn fill(&mut self, out: &mut TraceBuilder) -> bool {
+            if self.next >= self.limit {
+                return false;
+            }
+            // Two ops per batch to exercise intra-batch positions.
+            for _ in 0..2 {
+                if self.next < self.limit {
+                    self.next += 1;
+                    out.compute(self.next);
+                }
+            }
+            true
+        }
+
+        fn rewind(&mut self) {
+            self.next = 0;
+        }
+    }
+
+    #[test]
+    fn segment_source_streams_batches_and_replays() {
+        let mut s = SegmentSource::new(Counter { next: 0, limit: 5 });
+        let collect = |s: &mut SegmentSource<Counter>| {
+            let mut v = Vec::new();
+            while let Some(op) = s.next_op() {
+                v.push(op);
+            }
+            v
+        };
+        let first = collect(&mut s);
+        assert_eq!(first.len(), 5);
+        assert_eq!(first[4], Op::Compute { cycles: 5 });
+        s.reset();
+        let second = collect(&mut s);
+        assert_eq!(first, second, "reset must replay the identical stream");
+    }
+
+    #[test]
+    fn record_round_trips_to_vec_program() {
+        let mut p = Program::new(
+            vec![SegmentSource::boxed(Counter { next: 0, limit: 7 })],
+            0,
+            0,
+        );
+        let ops = p.record();
+        assert_eq!(ops[0].len(), 7);
+        let mut rec = Program::from_ops(ops.clone(), 0, 0);
+        assert_eq!(rec.record(), ops);
+        // The streamed program still replays after recording.
+        assert_eq!(p.record()[0].len(), 7);
+    }
+
+    #[test]
+    fn streaming_resident_bytes_stay_small() {
+        let mut p = Program::new(
+            vec![SegmentSource::boxed(Counter { next: 0, limit: 10_000 })],
+            0,
+            0,
+        );
+        let n = p.record()[0].len();
+        assert_eq!(n, 10_000);
+        // The source buffered only a batch (2 ops) at a time.
+        let materialised = (n * std::mem::size_of::<Op>()) as u64;
+        assert!(
+            p.resident_trace_bytes() < materialised / 100,
+            "streamed window {} vs materialised {materialised}",
+            p.resident_trace_bytes()
+        );
     }
 }

@@ -3,6 +3,10 @@
 //! technique "can be generally applied to any parallelisable array
 //! computation, where each part of the array is accessed multiple times";
 //! these kernels back that claim (and the custom-workload example).
+//!
+//! Every kernel is *step-emitting*: one pass/sweep per step, so the
+//! streaming trace pipeline buffers a single pass regardless of how many
+//! passes the configuration asks for.
 
 use crate::coordinator::localise::ChunkKernel;
 use crate::sim::{Loc, TraceBuilder};
@@ -16,13 +20,14 @@ pub struct MapKernel {
 }
 
 impl ChunkKernel for MapKernel {
-    fn emit(&self, t: &mut TraceBuilder, chunk: Loc, bytes: u64, _thread: usize) {
+    fn steps(&self) -> u32 {
+        self.passes
+    }
+    fn emit_step(&self, t: &mut TraceBuilder, chunk: Loc, bytes: u64, _thread: usize, _s: u32) {
         let elems = bytes / 4;
-        for _ in 0..self.passes {
-            t.read(chunk, bytes)
-                .compute(elems * self.flops_per_elem)
-                .write(chunk, bytes);
-        }
+        t.read(chunk, bytes)
+            .compute(elems * self.flops_per_elem)
+            .write(chunk, bytes);
     }
     fn name(&self) -> &'static str {
         "map"
@@ -36,17 +41,18 @@ pub struct StencilKernel {
 }
 
 impl ChunkKernel for StencilKernel {
-    fn emit(&self, t: &mut TraceBuilder, chunk: Loc, bytes: u64, _thread: usize) {
+    fn steps(&self) -> u32 {
+        self.sweeps
+    }
+    fn emit_step(&self, t: &mut TraceBuilder, chunk: Loc, bytes: u64, _thread: usize, _s: u32) {
         let elems = bytes / 4;
-        for _ in 0..self.sweeps {
-            // Halo exchange: one extra cache line each side (left halo only
-            // at offset 0 — the Loc abstraction clamps at region start, so
-            // model both halos as one extra line read each).
-            t.read(chunk, bytes.min(64)); // left halo line
-            t.read(chunk, bytes)
-                .compute(elems * 3)
-                .write(chunk, bytes);
-        }
+        // Halo exchange: one extra cache line each side (left halo only
+        // at offset 0 — the Loc abstraction clamps at region start, so
+        // model both halos as one extra line read each).
+        t.read(chunk, bytes.min(64)); // left halo line
+        t.read(chunk, bytes)
+            .compute(elems * 3)
+            .write(chunk, bytes);
     }
     fn name(&self) -> &'static str {
         "stencil3"
@@ -60,11 +66,12 @@ pub struct HistogramKernel {
 }
 
 impl ChunkKernel for HistogramKernel {
-    fn emit(&self, t: &mut TraceBuilder, chunk: Loc, bytes: u64, _thread: usize) {
+    fn steps(&self) -> u32 {
+        self.passes
+    }
+    fn emit_step(&self, t: &mut TraceBuilder, chunk: Loc, bytes: u64, _thread: usize, _s: u32) {
         let elems = bytes / 4;
-        for _ in 0..self.passes {
-            t.read(chunk, bytes).compute(elems * 2);
-        }
+        t.read(chunk, bytes).compute(elems * 2);
     }
     fn name(&self) -> &'static str {
         "histogram"
@@ -78,11 +85,12 @@ pub struct ReduceKernel {
 }
 
 impl ChunkKernel for ReduceKernel {
-    fn emit(&self, t: &mut TraceBuilder, chunk: Loc, bytes: u64, _thread: usize) {
+    fn steps(&self) -> u32 {
+        self.passes
+    }
+    fn emit_step(&self, t: &mut TraceBuilder, chunk: Loc, bytes: u64, _thread: usize, _s: u32) {
         let elems = bytes / 4;
-        for _ in 0..self.passes {
-            t.read(chunk, bytes).compute(elems);
-        }
+        t.read(chunk, bytes).compute(elems);
     }
     fn name(&self) -> &'static str {
         "reduce"
@@ -97,15 +105,16 @@ mod tests {
     use crate::mem::{HashPolicy, MemConfig};
     use crate::sched::StaticMapper;
     use crate::sim::{Engine, EngineConfig, RunStats};
+    use std::rc::Rc;
 
-    fn run(kernel: &dyn ChunkKernel, localised: bool, policy: HashPolicy) -> RunStats {
+    fn run(kernel: Rc<dyn ChunkKernel>, localised: bool, policy: HashPolicy) -> RunStats {
         let mut e = Engine::new(EngineConfig::tilepro64(MemConfig {
             hash_policy: policy,
             striping: true,
         }));
         let elems = 1u64 << 15;
         let input = e.prealloc_touched(TileId(0), elems * ELEM_BYTES);
-        let p = build_program(
+        let mut p = build_program(
             &input,
             elems,
             &LocaliseConfig {
@@ -114,20 +123,20 @@ mod tests {
             },
             kernel,
         );
-        e.run(&p, &mut StaticMapper::new()).unwrap()
+        e.run(&mut p, &mut StaticMapper::new()).unwrap()
     }
 
     #[test]
     fn all_kernels_run_both_styles() {
-        let kernels: Vec<Box<dyn ChunkKernel>> = vec![
-            Box::new(MapKernel { passes: 4, flops_per_elem: 1 }),
-            Box::new(StencilKernel { sweeps: 4 }),
-            Box::new(HistogramKernel { passes: 4 }),
-            Box::new(ReduceKernel { passes: 4 }),
+        let kernels: Vec<Rc<dyn ChunkKernel>> = vec![
+            Rc::new(MapKernel { passes: 4, flops_per_elem: 1 }),
+            Rc::new(StencilKernel { sweeps: 4 }),
+            Rc::new(HistogramKernel { passes: 4 }),
+            Rc::new(ReduceKernel { passes: 4 }),
         ];
         for k in &kernels {
             for localised in [false, true] {
-                let s = run(k.as_ref(), localised, HashPolicy::None);
+                let s = run(k.clone(), localised, HashPolicy::None);
                 assert!(s.makespan_cycles > 0, "{} localised={localised}", k.name());
             }
         }
@@ -138,15 +147,15 @@ mod tests {
         // The generality claim: all four kernels speed up with Algorithm 1
         // under ucache_hash=none (reads of tile-0-stranded data become
         // local L2 hits).
-        let kernels: Vec<Box<dyn ChunkKernel>> = vec![
-            Box::new(MapKernel { passes: 8, flops_per_elem: 1 }),
-            Box::new(StencilKernel { sweeps: 8 }),
-            Box::new(HistogramKernel { passes: 8 }),
-            Box::new(ReduceKernel { passes: 8 }),
+        let kernels: Vec<Rc<dyn ChunkKernel>> = vec![
+            Rc::new(MapKernel { passes: 8, flops_per_elem: 1 }),
+            Rc::new(StencilKernel { sweeps: 8 }),
+            Rc::new(HistogramKernel { passes: 8 }),
+            Rc::new(ReduceKernel { passes: 8 }),
         ];
         for k in &kernels {
-            let conv = run(k.as_ref(), false, HashPolicy::None);
-            let loc = run(k.as_ref(), true, HashPolicy::None);
+            let conv = run(k.clone(), false, HashPolicy::None);
+            let loc = run(k.clone(), true, HashPolicy::None);
             assert!(
                 loc.makespan_cycles < conv.makespan_cycles,
                 "{}: localised {} vs conventional {}",
@@ -159,7 +168,11 @@ mod tests {
 
     #[test]
     fn read_only_kernels_do_not_invalidate() {
-        let s = run(&HistogramKernel { passes: 3 }, false, HashPolicy::AllButStack);
+        let s = run(
+            Rc::new(HistogramKernel { passes: 3 }),
+            false,
+            HashPolicy::AllButStack,
+        );
         assert_eq!(s.invalidations, 0, "pure reads must not invalidate");
     }
 }

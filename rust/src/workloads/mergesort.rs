@@ -6,6 +6,15 @@
 //! on its chunk; each internal node's merge runs on the subtree's leftmost
 //! thread after joining the right subtree (a Wait on its completion event).
 //!
+//! The recursion is *streamed*: each thread's trace is an explicit-stack
+//! generator ([`ThreadGen`]) that walks the recursion tree on demand and
+//! emits only that thread's ops, one recursion step per batch. Every
+//! generator performs the identical tree walk (so the program-global slot
+//! and event numbering agrees across threads) but skips the serial-sort
+//! descent of leaves it does not own — the walk is O(threads) bookkeeping
+//! plus the thread's own ops, and resident memory is one recursion stack,
+//! not an N·log N op vector.
+//!
 //! Three variants:
 //! - `NonLocalised` — Algorithm 3: leaves sort slices of the shared
 //!   `array0` using slices of the shared `scratch0`, merges write `scratch0`
@@ -18,11 +27,16 @@
 //!   with a local scratch; merges allocate `ext_scr` and free their inputs
 //!   at the next level (Algorithm 1 step 5).
 
-use crate::arch::{LatencyParams, TileId};
+use crate::arch::TileId;
 use crate::mem::AllocKind;
+use crate::sim::trace::{OpSource, SegmentGen, SegmentSource};
 use crate::sim::{Engine, Loc, Program, TraceBuilder};
 
 pub const ELEM_BYTES: u64 = 4;
+
+/// Below this many elements a subrange fits L1 many times over: emit one
+/// materialisation pass plus the equivalent ALU+L1 work.
+const SERIAL_BASE: u64 = 256;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Variant {
@@ -59,18 +73,61 @@ struct SortedRun {
     bytes: u64,
 }
 
-struct Builder<'a> {
-    traces: Vec<TraceBuilder>,
-    next_slot: u32,
-    next_event: u32,
+/// Everything the recursion needs, identical across all thread generators.
+#[derive(Clone, Copy)]
+struct GenParams {
     array0: Loc,
     scratch0: Loc,
     variant: Variant,
     compute_per_elem: u64,
-    _engine: &'a Engine,
+    threads: usize,
+    elems: u64,
 }
 
-impl<'a> Builder<'a> {
+/// One frame of the explicit recursion stack.
+#[derive(Clone, Copy)]
+enum Task {
+    /// `mergesort_parallel_omp` over `[off, off+elems)`, `th` threads
+    /// starting at `lo`.
+    Node { lo: usize, th: usize, off: u64, elems: u64 },
+    /// Join + merge of a node once both subtrees produced their runs.
+    Join { lo: usize, lt: usize, off: u64 },
+    /// `mergesort_serial` recursion (owned leaves only).
+    SerialSort { input: Loc, scratch: Loc, elems: u64 },
+    /// Merge step of the serial recursion.
+    SerialMerge { input: Loc, scratch: Loc, elems: u64 },
+    /// Free a leaf's local scratch after its serial sort (Localised).
+    FreeScr { slot: u32 },
+}
+
+/// Explicit-stack streaming generator for one thread's trace.
+struct ThreadGen {
+    tid: usize,
+    p: GenParams,
+    tasks: Vec<Task>,
+    /// Value stack of subtree results (parallels the recursion's returns).
+    runs: Vec<SortedRun>,
+    next_slot: u32,
+    next_event: u32,
+}
+
+impl ThreadGen {
+    fn new(tid: usize, p: GenParams) -> Self {
+        ThreadGen {
+            tid,
+            p,
+            tasks: vec![Task::Node {
+                lo: 0,
+                th: p.threads,
+                off: 0,
+                elems: p.elems,
+            }],
+            runs: Vec::new(),
+            next_slot: 0,
+            next_event: 0,
+        }
+    }
+
     fn slot(&mut self) -> u32 {
         let s = self.next_slot;
         self.next_slot += 1;
@@ -83,57 +140,27 @@ impl<'a> Builder<'a> {
         e
     }
 
-    /// Emit the *depth-first* serial merge-sort recursion over
-    /// `[input, input+elems)` with `scratch` as the auxiliary array
-    /// (`mergesort_serial`). Depth-first order is what gives real merge
-    /// sort its cache behaviour — small subranges are sorted completely
-    /// (staying resident in whatever cache level can hold them) before the
-    /// recursion moves on; only the top levels stream the whole chunk.
-    /// Below `SERIAL_BASE` elements the subrange fits L1 many times over,
-    /// so we emit one materialisation pass plus the equivalent ALU+L1 work.
-    fn serial_sort(&mut self, tid: usize, input: Loc, scratch: Loc, elems: u64) {
-        const SERIAL_BASE: u64 = 256;
-        let bytes = elems * ELEM_BYTES;
-        if elems <= SERIAL_BASE {
-            let levels = 64 - (elems.max(2) - 1).leading_zeros() as u64; // ceil(log2)
-            let t = &mut self.traces[tid];
-            t.read(input, bytes)
-                .write(scratch, bytes)
-                .copy(scratch, input, bytes)
-                // Remaining levels run inside L1: 1 compare + ~2cy L1 access
-                // per element per level.
-                .compute(levels * elems * (self.compute_per_elem + 2));
-            return;
-        }
-        let half = elems / 2;
-        self.serial_sort(tid, input, scratch, half);
-        self.serial_sort(
-            tid,
-            input.offset(half * ELEM_BYTES),
-            scratch.offset(half * ELEM_BYTES),
-            elems - half,
-        );
-        // Merge the two sorted halves: read both, write scratch, copy back.
-        let t = &mut self.traces[tid];
-        t.read(input, bytes)
-            .compute(elems * self.compute_per_elem)
-            .write(scratch, bytes)
-            .copy(scratch, input, bytes);
-    }
-
     /// Leaf of the parallel recursion: serial-sort this thread's chunk.
-    fn leaf(&mut self, tid: usize, off: u64, elems: u64) -> SortedRun {
+    /// Slot numbering advances in every generator; ops (and the serial
+    /// descent) are emitted only by the owning thread's generator.
+    fn leaf(&mut self, leaf_tid: usize, off: u64, elems: u64, out: &mut TraceBuilder) {
         let bytes = elems * ELEM_BYTES;
-        match self.variant {
+        match self.p.variant {
             Variant::NonLocalised | Variant::NonLocalisedIntermediate => {
-                let input = self.array0.offset(off * ELEM_BYTES);
-                let scratch = self.scratch0.offset(off * ELEM_BYTES);
-                self.serial_sort(tid, input, scratch, elems);
-                SortedRun {
+                let input = self.p.array0.offset(off * ELEM_BYTES);
+                let scratch = self.p.scratch0.offset(off * ELEM_BYTES);
+                if self.tid == leaf_tid {
+                    self.tasks.push(Task::SerialSort {
+                        input,
+                        scratch,
+                        elems,
+                    });
+                }
+                self.runs.push(SortedRun {
                     loc: input,
                     slot: None,
                     bytes,
-                }
+                });
             }
             Variant::Localised => {
                 // int* input_cpy = new int[size]; memcpy(...); sort it
@@ -141,96 +168,216 @@ impl<'a> Builder<'a> {
                 // parent merge).
                 let cpy = self.slot();
                 let scr = self.slot();
-                let input = self.array0.offset(off * ELEM_BYTES);
                 let cpy_loc = Loc::Slot { slot: cpy, offset: 0 };
                 let scr_loc = Loc::Slot { slot: scr, offset: 0 };
-                {
-                    let t = &mut self.traces[tid];
-                    t.alloc(cpy, bytes, AllocKind::Heap)
+                if self.tid == leaf_tid {
+                    let input = self.p.array0.offset(off * ELEM_BYTES);
+                    out.alloc(cpy, bytes, AllocKind::Heap)
                         .copy(input, cpy_loc, bytes)
                         .alloc(scr, bytes, AllocKind::Heap);
+                    // LIFO: the serial sort runs first, then the scratch is
+                    // freed.
+                    self.tasks.push(Task::FreeScr { slot: scr });
+                    self.tasks.push(Task::SerialSort {
+                        input: cpy_loc,
+                        scratch: scr_loc,
+                        elems,
+                    });
                 }
-                self.serial_sort(tid, cpy_loc, scr_loc, elems);
-                self.traces[tid].free(scr);
-                SortedRun {
+                self.runs.push(SortedRun {
                     loc: cpy_loc,
                     slot: Some(cpy),
                     bytes,
-                }
+                });
             }
         }
     }
 
-    /// Merge two sorted runs on thread `tid` (`merge`). `off` is the
+    /// One step of the *depth-first* serial merge-sort recursion over
+    /// `[input, input+elems)` with `scratch` as the auxiliary array
+    /// (`mergesort_serial`). Depth-first order is what gives real merge
+    /// sort its cache behaviour — small subranges are sorted completely
+    /// (staying resident in whatever cache level can hold them) before the
+    /// recursion moves on; only the top levels stream the whole chunk.
+    fn serial_sort(&mut self, input: Loc, scratch: Loc, elems: u64, out: &mut TraceBuilder) {
+        let bytes = elems * ELEM_BYTES;
+        if elems <= SERIAL_BASE {
+            let levels = 64 - (elems.max(2) - 1).leading_zeros() as u64; // ceil(log2)
+            out.read(input, bytes)
+                .write(scratch, bytes)
+                .copy(scratch, input, bytes)
+                // Remaining levels run inside L1: 1 compare + ~2cy L1 access
+                // per element per level.
+                .compute(levels * elems * (self.p.compute_per_elem + 2));
+            return;
+        }
+        let half = elems / 2;
+        // LIFO: left half, right half, then the merge of the two.
+        self.tasks.push(Task::SerialMerge {
+            input,
+            scratch,
+            elems,
+        });
+        self.tasks.push(Task::SerialSort {
+            input: input.offset(half * ELEM_BYTES),
+            scratch: scratch.offset(half * ELEM_BYTES),
+            elems: elems - half,
+        });
+        self.tasks.push(Task::SerialSort {
+            input,
+            scratch,
+            elems: half,
+        });
+    }
+
+    /// Merge two sorted runs on thread `lo` (`merge`). `off` is the
     /// element offset of the pair in the original array (for the shared
     /// scratch slice of the non-localised variant).
-    fn merge(&mut self, tid: usize, off: u64, left: SortedRun, right: SortedRun) -> SortedRun {
+    fn merge(&mut self, lo: usize, off: u64, left: SortedRun, right: SortedRun, out: &mut TraceBuilder) {
         let bytes = left.bytes + right.bytes;
         let elems = bytes / ELEM_BYTES;
-        let compute = elems * self.compute_per_elem;
-        match self.variant {
+        let compute = elems * self.p.compute_per_elem;
+        match self.p.variant {
             Variant::NonLocalised => {
                 // merge(): read both halves, write the shared scratch, then
                 // memcpy(input1, scratch, ...) back.
-                let scratch = self.scratch0.offset(off * ELEM_BYTES);
-                let dst = left.loc;
-                let t = &mut self.traces[tid];
-                t.read(left.loc, left.bytes)
-                    .read(right.loc, right.bytes)
-                    .compute(compute)
-                    .write(scratch, bytes)
-                    .copy(scratch, dst, bytes);
-                SortedRun {
-                    loc: dst,
+                if self.tid == lo {
+                    let scratch = self.p.scratch0.offset(off * ELEM_BYTES);
+                    out.read(left.loc, left.bytes)
+                        .read(right.loc, right.bytes)
+                        .compute(compute)
+                        .write(scratch, bytes)
+                        .copy(scratch, left.loc, bytes);
+                }
+                self.runs.push(SortedRun {
+                    loc: left.loc,
                     slot: None,
                     bytes,
-                }
+                });
             }
             Variant::NonLocalisedIntermediate | Variant::Localised => {
                 // Intermediate step: int* ext_scr = new int[sz1+sz2]; merge
                 // into it; free the previous level's arrays; return ext_scr.
                 let ext = self.slot();
                 let ext_loc = Loc::Slot { slot: ext, offset: 0 };
-                let t = &mut self.traces[tid];
-                t.alloc(ext, bytes, AllocKind::Heap)
-                    .read(left.loc, left.bytes)
-                    .read(right.loc, right.bytes)
-                    .compute(compute)
-                    .write(ext_loc, bytes);
-                if let Some(s) = left.slot {
-                    t.free(s);
+                if self.tid == lo {
+                    out.alloc(ext, bytes, AllocKind::Heap)
+                        .read(left.loc, left.bytes)
+                        .read(right.loc, right.bytes)
+                        .compute(compute)
+                        .write(ext_loc, bytes);
+                    if let Some(s) = left.slot {
+                        out.free(s);
+                    }
+                    if let Some(s) = right.slot {
+                        out.free(s);
+                    }
                 }
-                if let Some(s) = right.slot {
-                    t.free(s);
-                }
-                SortedRun {
+                self.runs.push(SortedRun {
                     loc: ext_loc,
                     slot: Some(ext),
                     bytes,
-                }
+                });
             }
         }
     }
 
-    /// `mergesort_parallel_omp`: recurse over `[off, off+elems)` with
-    /// `threads` leaf threads starting at `tid_lo`. Returns the sorted run.
-    fn node(&mut self, tid_lo: usize, threads: usize, off: u64, elems: u64) -> SortedRun {
-        if threads == 1 {
-            return self.leaf(tid_lo, off, elems);
+    fn step(&mut self, task: Task, out: &mut TraceBuilder) {
+        match task {
+            Task::Node { lo, th, off, elems } => {
+                if th == 1 {
+                    self.leaf(lo, off, elems, out);
+                    return;
+                }
+                let lt = th / 2;
+                let le = elems / 2;
+                // LIFO: left subtree, right subtree, then the join+merge.
+                self.tasks.push(Task::Join { lo, lt, off });
+                self.tasks.push(Task::Node {
+                    lo: lo + lt,
+                    th: th - lt,
+                    off: off + le,
+                    elems: elems - le,
+                });
+                self.tasks.push(Task::Node {
+                    lo,
+                    th: lt,
+                    off,
+                    elems: le,
+                });
+            }
+            Task::Join { lo, lt, off } => {
+                let right = self.runs.pop().expect("right subtree run");
+                let left = self.runs.pop().expect("left subtree run");
+                // Right subtree's leftmost thread signals its completion;
+                // the node's leftmost thread joins it, then merges.
+                let ev = self.event();
+                if self.tid == lo + lt {
+                    out.signal(ev);
+                }
+                if self.tid == lo {
+                    out.wait(ev);
+                }
+                self.merge(lo, off, left, right, out);
+            }
+            Task::SerialSort {
+                input,
+                scratch,
+                elems,
+            } => self.serial_sort(input, scratch, elems, out),
+            Task::SerialMerge {
+                input,
+                scratch,
+                elems,
+            } => {
+                // Merge the two sorted halves: read both, write scratch,
+                // copy back.
+                let bytes = elems * ELEM_BYTES;
+                out.read(input, bytes)
+                    .compute(elems * self.p.compute_per_elem)
+                    .write(scratch, bytes)
+                    .copy(scratch, input, bytes);
+            }
+            Task::FreeScr { slot } => {
+                out.free(slot);
+            }
         }
-        let lt = threads / 2;
-        let rt = threads - lt;
-        let le = elems / 2;
-        let re = elems - le;
-        // Left subtree continues on this thread; right subtree's leftmost
-        // thread signals its completion.
-        let left = self.node(tid_lo, lt, off, le);
-        let right = self.node(tid_lo + lt, rt, off + le, re);
-        let ev = self.event();
-        self.traces[tid_lo + lt].signal(ev);
-        self.traces[tid_lo].wait(ev);
-        self.merge(tid_lo, off, left, right)
     }
+}
+
+impl SegmentGen for ThreadGen {
+    fn fill(&mut self, out: &mut TraceBuilder) -> bool {
+        while let Some(task) = self.tasks.pop() {
+            self.step(task, out);
+            if !out.ops().is_empty() {
+                return true;
+            }
+        }
+        false
+    }
+
+    fn rewind(&mut self) {
+        self.tasks = vec![Task::Node {
+            lo: 0,
+            th: self.p.threads,
+            off: 0,
+            elems: self.p.elems,
+        }];
+        self.runs.clear();
+        self.next_slot = 0;
+        self.next_event = 0;
+    }
+}
+
+/// Walk the recursion once with a generator that owns no thread: counts
+/// slots/events without emitting (or descending into) any serial sort.
+fn slot_event_totals(p: GenParams) -> (u32, u32) {
+    let mut g = ThreadGen::new(usize::MAX, p);
+    let mut scratch = TraceBuilder::new();
+    while g.fill(&mut scratch) {
+        scratch.clear();
+    }
+    (g.next_slot, g.next_event)
 }
 
 /// Build the merge-sort program against `engine`'s memory system.
@@ -246,23 +393,21 @@ pub fn build(engine: &mut Engine, cfg: &MergesortConfig) -> Program {
     let array0 = engine.prealloc_touched(TileId(0), bytes);
     let scratch0 = engine.prealloc(TileId(0), bytes);
 
-    let params: &LatencyParams = engine.params();
-    let mut b = Builder {
-        traces: vec![TraceBuilder::new(); cfg.threads],
-        next_slot: 0,
-        next_event: 0,
+    let p = GenParams {
         array0: Loc::Abs(array0.addr),
         scratch0: Loc::Abs(scratch0.addr),
         variant: cfg.variant,
-        compute_per_elem: params.compute_per_elem,
-        _engine: engine,
+        compute_per_elem: engine.params().compute_per_elem,
+        threads: cfg.threads,
+        elems: cfg.elems,
     };
-    let root = b.node(0, cfg.threads, 0, cfg.elems);
     // main(): the caller takes ownership of the result; the localised
     // variants' final ext_scr stays live (swapped into array0 in the C++).
-    let _ = root;
-    let (slots, events) = (b.next_slot, b.next_event);
-    Program::from_builders(b.traces, slots.max(1), events.max(1))
+    let (slots, events) = slot_event_totals(p);
+    let sources: Vec<Box<dyn OpSource>> = (0..cfg.threads)
+        .map(|tid| SegmentSource::boxed(ThreadGen::new(tid, p)))
+        .collect();
+    Program::new(sources, slots.max(1), events.max(1))
 }
 
 #[cfg(test)]
@@ -281,7 +426,7 @@ mod tests {
 
     fn run(policy: HashPolicy, variant: Variant, elems: u64, threads: usize) -> crate::sim::RunStats {
         let mut e = engine(policy);
-        let p = build(
+        let mut p = build(
             &mut e,
             &MergesortConfig {
                 elems,
@@ -290,7 +435,7 @@ mod tests {
             },
         );
         p.validate().unwrap();
-        e.run(&p, &mut StaticMapper::new()).unwrap()
+        e.run(&mut p, &mut StaticMapper::new()).unwrap()
     }
 
     #[test]
@@ -311,6 +456,29 @@ mod tests {
         for t in [1usize, 3, 5, 7] {
             let stats = run(HashPolicy::AllButStack, Variant::NonLocalised, 1 << 12, t);
             assert!(stats.makespan_cycles > 0, "threads={t}");
+        }
+    }
+
+    #[test]
+    fn streams_replay_identically_after_reset() {
+        for v in [
+            Variant::NonLocalised,
+            Variant::NonLocalisedIntermediate,
+            Variant::Localised,
+        ] {
+            let mut e = engine(HashPolicy::None);
+            let mut p = build(
+                &mut e,
+                &MergesortConfig {
+                    elems: 1 << 12,
+                    threads: 6,
+                    variant: v,
+                },
+            );
+            let a = p.record();
+            let b = p.record();
+            assert_eq!(a, b, "{v:?}");
+            assert!(a.iter().all(|t| !t.is_empty()), "{v:?}: every thread works");
         }
     }
 

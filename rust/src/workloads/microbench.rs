@@ -5,9 +5,14 @@
 //! *localised* variant first copies its input part into a freshly
 //! allocated local array (re-homing it on the worker's tile under
 //! `ucache_hash=none`) and streams from that copy instead.
+//!
+//! Each thread's trace is a streaming generator (one rep materialised at a
+//! time), so the simulable array size and repetition count are not bounded
+//! by host RAM.
 
 use crate::arch::TileId;
 use crate::mem::AllocKind;
+use crate::sim::trace::{OpSource, SegmentGen, SegmentSource};
 use crate::sim::{Engine, Loc, Program, TraceBuilder};
 
 pub const ELEM_BYTES: u64 = 4;
@@ -45,6 +50,58 @@ pub fn part_bounds(elems: u64, threads: usize, i: usize) -> (u64, u64) {
     (start, end)
 }
 
+/// Streaming generator for one worker thread: one copy rep per batch.
+struct ThreadGen {
+    in_part: Loc,
+    out_part: Loc,
+    bytes: u64,
+    slot: u32,
+    reps: u32,
+    localised: bool,
+    step: u32,
+}
+
+impl SegmentGen for ThreadGen {
+    fn fill(&mut self, out: &mut TraceBuilder) -> bool {
+        let local = Loc::Slot {
+            slot: self.slot,
+            offset: 0,
+        };
+        if self.localised {
+            // ---- Algorithm 2, localised: ----
+            // int* input_cpy = new int[size];
+            // memcpy(input_cpy, input1, size*sizeof(int));
+            // repetitive_copy(input_cpy, output, size);
+            // free(input_cpy);
+            match self.step {
+                0 => {
+                    out.alloc(self.slot, self.bytes, AllocKind::Heap);
+                    out.copy(self.in_part, local, self.bytes);
+                }
+                s if s <= self.reps => {
+                    out.copy(local, self.out_part, self.bytes);
+                }
+                s if s == self.reps + 1 => {
+                    out.free(self.slot);
+                }
+                _ => return false,
+            }
+        } else {
+            // ---- Algorithm 2, non-localised: repetitive_copy(input1, output, size);
+            if self.step >= self.reps {
+                return false;
+            }
+            out.copy(self.in_part, self.out_part, self.bytes);
+        }
+        self.step += 1;
+        true
+    }
+
+    fn rewind(&mut self) {
+        self.step = 0;
+    }
+}
+
 /// Build the micro-benchmark program against `engine`'s memory system.
 ///
 /// The input array is initialised by `main` (tile 0) — under first-touch
@@ -56,35 +113,20 @@ pub fn build(engine: &mut Engine, cfg: &MicrobenchConfig) -> Program {
     let input = engine.prealloc_touched(TileId(0), cfg.elems * ELEM_BYTES);
     let output = engine.prealloc(TileId(0), cfg.elems * ELEM_BYTES);
 
-    let mut builders = Vec::with_capacity(cfg.threads);
+    let mut sources: Vec<Box<dyn OpSource>> = Vec::with_capacity(cfg.threads);
     for i in 0..cfg.threads {
         let (start, end) = part_bounds(cfg.elems, cfg.threads, i);
-        let bytes = (end - start) * ELEM_BYTES;
-        let in_part = Loc::Abs(input.addr.offset(start * ELEM_BYTES));
-        let out_part = Loc::Abs(output.addr.offset(start * ELEM_BYTES));
-        let mut b = TraceBuilder::new();
-        if cfg.localised {
-            // ---- Algorithm 2, localised: ----
-            // int* input_cpy = new int[size];
-            // memcpy(input_cpy, input1, size*sizeof(int));
-            // repetitive_copy(input_cpy, output, size);
-            // free(input_cpy);
-            let slot = i as u32;
-            b.alloc(slot, bytes, AllocKind::Heap);
-            b.copy(in_part, Loc::Slot { slot, offset: 0 }, bytes);
-            for _ in 0..cfg.reps {
-                b.copy(Loc::Slot { slot, offset: 0 }, out_part, bytes);
-            }
-            b.free(slot);
-        } else {
-            // ---- Algorithm 2, non-localised: repetitive_copy(input1, output, size);
-            for _ in 0..cfg.reps {
-                b.copy(in_part, out_part, bytes);
-            }
-        }
-        builders.push(b);
+        sources.push(SegmentSource::boxed(ThreadGen {
+            in_part: Loc::Abs(input.addr.offset(start * ELEM_BYTES)),
+            out_part: Loc::Abs(output.addr.offset(start * ELEM_BYTES)),
+            bytes: (end - start) * ELEM_BYTES,
+            slot: i as u32,
+            reps: cfg.reps,
+            localised: cfg.localised,
+            step: 0,
+        }));
     }
-    Program::from_builders(builders, cfg.threads as u32, 0)
+    Program::new(sources, cfg.threads as u32, 0)
 }
 
 #[cfg(test)]
@@ -127,17 +169,28 @@ mod tests {
     fn program_validates_both_variants() {
         for localised in [false, true] {
             let mut e = engine(HashPolicy::None);
-            let p = build(&mut e, &cfg(localised, 3));
+            let mut p = build(&mut e, &cfg(localised, 3));
             p.validate().unwrap();
             assert_eq!(p.threads.len(), 16);
         }
     }
 
     #[test]
+    fn stream_replays_identically_after_reset() {
+        let mut e = engine(HashPolicy::None);
+        let mut p = build(&mut e, &cfg(true, 3));
+        let first = p.record();
+        let second = p.record();
+        assert_eq!(first, second);
+        // Localised thread stream: alloc+copy, 3 copies, free.
+        assert_eq!(first[0].len(), 2 + 3 + 1);
+    }
+
+    #[test]
     fn localised_variant_allocates_and_frees() {
         let mut e = engine(HashPolicy::None);
-        let p = build(&mut e, &cfg(true, 2));
-        let stats = e.run(&p, &mut StaticMapper::new()).unwrap();
+        let mut p = build(&mut e, &cfg(true, 2));
+        let stats = e.run(&mut p, &mut StaticMapper::new()).unwrap();
         assert_eq!(stats.allocs, 2 + 16); // input+output preallocs + 16 copies
         assert_eq!(stats.frees, 16);
     }
@@ -147,12 +200,12 @@ mod tests {
         // The paper's headline (Fig. 1): with hash disabled and enough
         // repetitions, localisation wins clearly.
         let mut e1 = engine(HashPolicy::None);
-        let p1 = build(&mut e1, &cfg(false, 16));
-        let non_loc = e1.run(&p1, &mut StaticMapper::new()).unwrap();
+        let mut p1 = build(&mut e1, &cfg(false, 16));
+        let non_loc = e1.run(&mut p1, &mut StaticMapper::new()).unwrap();
 
         let mut e2 = engine(HashPolicy::None);
-        let p2 = build(&mut e2, &cfg(true, 16));
-        let loc = e2.run(&p2, &mut StaticMapper::new()).unwrap();
+        let mut p2 = build(&mut e2, &cfg(true, 16));
+        let loc = e2.run(&mut p2, &mut StaticMapper::new()).unwrap();
 
         assert!(
             loc.makespan_cycles * 2 < non_loc.makespan_cycles,
@@ -167,12 +220,12 @@ mod tests {
         // Paper §5: localisation "does not lose the competition" under
         // hash-for-home (within copy-overhead slack).
         let mut e1 = engine(HashPolicy::AllButStack);
-        let p1 = build(&mut e1, &cfg(false, 16));
-        let non_loc = e1.run(&p1, &mut StaticMapper::new()).unwrap();
+        let mut p1 = build(&mut e1, &cfg(false, 16));
+        let non_loc = e1.run(&mut p1, &mut StaticMapper::new()).unwrap();
 
         let mut e2 = engine(HashPolicy::AllButStack);
-        let p2 = build(&mut e2, &cfg(true, 16));
-        let loc = e2.run(&p2, &mut StaticMapper::new()).unwrap();
+        let mut p2 = build(&mut e2, &cfg(true, 16));
+        let loc = e2.run(&mut p2, &mut StaticMapper::new()).unwrap();
 
         let ratio = loc.makespan_cycles as f64 / non_loc.makespan_cycles as f64;
         assert!(ratio < 1.3, "localised must not lose badly under hash: {ratio}");
@@ -182,12 +235,12 @@ mod tests {
     fn single_rep_favours_non_localised() {
         // Fig. 1 at very low repetition counts: the copy isn't amortised.
         let mut e1 = engine(HashPolicy::None);
-        let p1 = build(&mut e1, &cfg(false, 1));
-        let non_loc = e1.run(&p1, &mut StaticMapper::new()).unwrap();
+        let mut p1 = build(&mut e1, &cfg(false, 1));
+        let non_loc = e1.run(&mut p1, &mut StaticMapper::new()).unwrap();
 
         let mut e2 = engine(HashPolicy::None);
-        let p2 = build(&mut e2, &cfg(true, 1));
-        let loc = e2.run(&p2, &mut StaticMapper::new()).unwrap();
+        let mut p2 = build(&mut e2, &cfg(true, 1));
+        let loc = e2.run(&mut p2, &mut StaticMapper::new()).unwrap();
 
         // The localised run does strictly more memory work at reps=1.
         assert!(loc.line_accesses > non_loc.line_accesses);

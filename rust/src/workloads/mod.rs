@@ -7,3 +7,5 @@ pub mod array_kernels;
 pub mod mergesort;
 pub mod microbench;
 pub mod radix;
+
+pub use array_kernels::{HistogramKernel, MapKernel, ReduceKernel, StencilKernel};

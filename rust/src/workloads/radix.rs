@@ -16,9 +16,14 @@
 //! reads), but the scatter writes remain global by nature — which is why
 //! radix gains less from localisation than merge sort, matching [3]'s
 //! preference for explicit fine-grained control.
+//!
+//! Each thread's trace is a streaming state machine (one phase of one pass
+//! per batch); slot and event numbering is closed-form per (pass, phase),
+//! so every thread derives the same global ids without a shared builder.
 
 use crate::arch::TileId;
 use crate::mem::AllocKind;
+use crate::sim::trace::{OpSource, SegmentGen, SegmentSource};
 use crate::sim::{Engine, Loc, Program, TraceBuilder};
 use crate::workloads::microbench::part_bounds;
 
@@ -45,6 +50,225 @@ impl Default for RadixConfig {
     }
 }
 
+/// Shared (copyable) parameters of the generated program.
+#[derive(Clone, Copy)]
+struct GenParams {
+    src0: Loc,
+    dst0: Loc,
+    elems: u64,
+    threads: usize,
+    localised: bool,
+    passes: u32,
+    buckets: u64,
+    hist_bytes: u64,
+}
+
+impl GenParams {
+    /// Events per pass: T count signals + 1 prefix + T scatter + 1 barrier.
+    fn events_per_pass(&self) -> u32 {
+        2 * self.threads as u32 + 2
+    }
+
+    fn count_base(&self, pass: u32) -> u32 {
+        pass * self.events_per_pass()
+    }
+
+    fn prefix_done(&self, pass: u32) -> u32 {
+        self.count_base(pass) + self.threads as u32
+    }
+
+    fn scatter_base(&self, pass: u32) -> u32 {
+        self.prefix_done(pass) + 1
+    }
+
+    fn pass_done(&self, pass: u32) -> u32 {
+        self.scatter_base(pass) + self.threads as u32
+    }
+
+    /// Per-thread stack histogram slot.
+    fn hist_slot(&self, i: usize) -> u32 {
+        i as u32
+    }
+
+    /// Localised chunk-copy slot for `(pass, thread)`.
+    fn copy_slot(&self, pass: u32, i: usize) -> u32 {
+        self.threads as u32 + pass * self.threads as u32 + i as u32
+    }
+
+    /// Double buffer: src/dst swap every pass.
+    fn bufs(&self, pass: u32) -> (Loc, Loc) {
+        if pass % 2 == 0 {
+            (self.src0, self.dst0)
+        } else {
+            (self.dst0, self.src0)
+        }
+    }
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    /// Allocate the stack histogram.
+    Prologue,
+    Count,
+    Prefix,
+    Scatter,
+    Barrier,
+    /// Free the histogram.
+    Epilogue,
+    Done,
+}
+
+/// Streaming generator for one radix thread: one phase per batch.
+struct ThreadGen {
+    i: usize,
+    p: GenParams,
+    start: u64,
+    end: u64,
+    pass: u32,
+    phase: Phase,
+}
+
+impl ThreadGen {
+    fn new(i: usize, p: GenParams) -> Self {
+        let (start, end) = part_bounds(p.elems, p.threads, i);
+        ThreadGen {
+            i,
+            p,
+            start,
+            end,
+            pass: 0,
+            phase: Phase::Prologue,
+        }
+    }
+
+    fn part_bytes(&self) -> u64 {
+        (self.end - self.start) * ELEM_BYTES
+    }
+
+    fn hist_loc(&self, j: usize) -> Loc {
+        Loc::Slot {
+            slot: self.p.hist_slot(j),
+            offset: 0,
+        }
+    }
+}
+
+impl SegmentGen for ThreadGen {
+    fn fill(&mut self, out: &mut TraceBuilder) -> bool {
+        let p = self.p;
+        let i = self.i;
+        let t = p.threads;
+        let part_bytes = self.part_bytes();
+        let (cur_src, cur_dst) = p.bufs(self.pass);
+        match self.phase {
+            Phase::Prologue => {
+                out.alloc(p.hist_slot(i), p.hist_bytes, AllocKind::Stack);
+                self.phase = Phase::Count;
+            }
+            Phase::Count => {
+                let chunk = cur_src.offset(self.start * ELEM_BYTES);
+                let read_from = if p.localised {
+                    let local = Loc::Slot {
+                        slot: p.copy_slot(self.pass, i),
+                        offset: 0,
+                    };
+                    out.alloc(p.copy_slot(self.pass, i), part_bytes, AllocKind::Heap);
+                    out.copy(chunk, local, part_bytes);
+                    local
+                } else {
+                    chunk
+                };
+                out.read(read_from, part_bytes)
+                    .compute(self.end - self.start) // digit extraction + count
+                    .write(self.hist_loc(i), p.hist_bytes);
+                out.signal(p.count_base(self.pass) + i as u32);
+                self.phase = Phase::Prefix;
+            }
+            Phase::Prefix => {
+                // Thread 0 reads all histograms (remote stacks!) and
+                // computes global prefix sums — a small all-to-one step.
+                if i == 0 {
+                    for j in 0..t as u32 {
+                        out.wait(p.count_base(self.pass) + j);
+                    }
+                    for j in 0..t {
+                        out.read(self.hist_loc(j), p.hist_bytes);
+                    }
+                    out.compute(p.buckets * t as u64);
+                    for j in 0..t {
+                        out.write(self.hist_loc(j), p.hist_bytes);
+                    }
+                    out.signal(p.prefix_done(self.pass));
+                }
+                self.phase = Phase::Scatter;
+            }
+            Phase::Scatter => {
+                out.wait(p.prefix_done(self.pass));
+                let read_from = if p.localised {
+                    // The copy made in the count phase for this pass.
+                    Loc::Slot {
+                        slot: p.copy_slot(self.pass, i),
+                        offset: 0,
+                    }
+                } else {
+                    cur_src.offset(self.start * ELEM_BYTES)
+                };
+                // Re-read the chunk; writes scatter over the whole
+                // destination: model as strided writes across the full dst
+                // range (one line per ~buckets/elems stride is unmodelable
+                // exactly; bill the same byte volume spread as `runs`
+                // separate run writes).
+                out.read(read_from, part_bytes)
+                    .compute(2 * (self.end - self.start));
+                let runs = p.buckets.min(self.end - self.start).max(1);
+                let run_bytes = (part_bytes / runs).max(ELEM_BYTES);
+                let span = p.elems * ELEM_BYTES - run_bytes;
+                for r in 0..runs {
+                    // Spread the write targets across dst deterministically.
+                    let off = (r * 0x9E37_79B9 + self.pass as u64 * 0x85EB_CA6B)
+                        % (span / ELEM_BYTES + 1)
+                        * ELEM_BYTES;
+                    out.write(cur_dst.offset(off), run_bytes);
+                }
+                if p.localised {
+                    out.free(p.copy_slot(self.pass, i));
+                }
+                out.signal(p.scatter_base(self.pass) + i as u32);
+                self.phase = Phase::Barrier;
+            }
+            Phase::Barrier => {
+                // Everyone waits for all scatters before the next pass
+                // (thread 0 aggregates; others wait on thread 0's echo).
+                if i == 0 {
+                    for j in 1..t as u32 {
+                        out.wait(p.scatter_base(self.pass) + j);
+                    }
+                    out.signal(p.pass_done(self.pass));
+                } else {
+                    out.wait(p.pass_done(self.pass));
+                }
+                self.pass += 1;
+                self.phase = if self.pass < p.passes {
+                    Phase::Count
+                } else {
+                    Phase::Epilogue
+                };
+            }
+            Phase::Epilogue => {
+                out.free(p.hist_slot(i));
+                self.phase = Phase::Done;
+            }
+            Phase::Done => return false,
+        }
+        true
+    }
+
+    fn rewind(&mut self) {
+        self.pass = 0;
+        self.phase = Phase::Prologue;
+    }
+}
+
 /// Build the radix-sort program. Uses a double buffer (src/dst swap per
 /// pass), both allocated by main; histograms live on each thread's stack.
 pub fn build(engine: &mut Engine, cfg: &RadixConfig) -> Program {
@@ -55,136 +279,28 @@ pub fn build(engine: &mut Engine, cfg: &RadixConfig) -> Program {
     let dst = engine.prealloc(TileId(0), bytes);
     let passes = 32u32.div_ceil(cfg.digit_bits);
     let buckets = 1u64 << cfg.digit_bits;
-    let hist_bytes = buckets * 8;
 
-    let mut builders = vec![TraceBuilder::new(); cfg.threads];
-    let mut next_event = 0u32;
-    // Per-thread chunk bounds.
-    let bounds: Vec<(u64, u64)> = (0..cfg.threads)
-        .map(|i| part_bounds(cfg.elems, cfg.threads, i))
+    let p = GenParams {
+        src0: Loc::Abs(src.addr),
+        dst0: Loc::Abs(dst.addr),
+        elems: cfg.elems,
+        threads: cfg.threads,
+        localised: cfg.localised,
+        passes,
+        buckets,
+        hist_bytes: buckets * 8,
+    };
+    let num_slots = cfg.threads as u32
+        + if cfg.localised {
+            passes * cfg.threads as u32
+        } else {
+            0
+        };
+    let num_events = passes * p.events_per_pass();
+    let sources: Vec<Box<dyn OpSource>> = (0..cfg.threads)
+        .map(|i| SegmentSource::boxed(ThreadGen::new(i, p)))
         .collect();
-    // Slots: per thread per pass a local copy (localised only) + one stack
-    // histogram slot per thread.
-    let mut next_slot = 0u32;
-    let hist_slots: Vec<u32> = (0..cfg.threads)
-        .map(|i| {
-            let s = next_slot;
-            next_slot += 1;
-            builders[i].alloc(s, hist_bytes, AllocKind::Stack);
-            s
-        })
-        .collect();
-
-    let mut cur_src = Loc::Abs(src.addr);
-    let mut cur_dst = Loc::Abs(dst.addr);
-    for pass in 0..passes {
-        // --- count phase -------------------------------------------------
-        for (i, b) in builders.iter_mut().enumerate() {
-            let (start, end) = bounds[i];
-            let part_bytes = (end - start) * ELEM_BYTES;
-            let chunk = cur_src.offset(start * ELEM_BYTES);
-            let hist = Loc::Slot { slot: hist_slots[i], offset: 0 };
-            let read_from = if cfg.localised {
-                let s = next_slot;
-                next_slot += 1;
-                let local = Loc::Slot { slot: s, offset: 0 };
-                b.alloc(s, part_bytes, AllocKind::Heap);
-                b.copy(chunk, local, part_bytes);
-                local
-            } else {
-                chunk
-            };
-            b.read(read_from, part_bytes)
-                .compute(end - start) // digit extraction + count
-                .write(hist, hist_bytes);
-            // signal count done
-            b.signal(next_event + i as u32);
-            if cfg.localised {
-                // keep the local copy alive for the scatter phase: the slot
-                // id is recoverable as next_slot-1; free after scatter.
-            }
-        }
-        let count_base = next_event;
-        next_event += cfg.threads as u32;
-
-        // --- prefix phase on thread 0 ------------------------------------
-        {
-            let b = &mut builders[0];
-            for i in 0..cfg.threads as u32 {
-                b.wait(count_base + i);
-            }
-            // Read all histograms (remote stacks!) and compute global
-            // prefix sums — a small all-to-one step.
-            for i in 0..cfg.threads {
-                b.read(Loc::Slot { slot: hist_slots[i], offset: 0 }, hist_bytes);
-            }
-            b.compute(buckets * cfg.threads as u64);
-            for i in 0..cfg.threads {
-                b.write(Loc::Slot { slot: hist_slots[i], offset: 0 }, hist_bytes);
-            }
-            b.signal(next_event);
-        }
-        let prefix_done = next_event;
-        next_event += 1;
-
-        // --- scatter phase ------------------------------------------------
-        for (i, b) in builders.iter_mut().enumerate() {
-            let (start, end) = bounds[i];
-            let part_bytes = (end - start) * ELEM_BYTES;
-            b.wait(prefix_done);
-            let read_from = if cfg.localised {
-                // The copy made in the count phase for this pass.
-                let slot = hist_slots.len() as u32
-                    + (pass * cfg.threads as u32)
-                    + i as u32;
-                Loc::Slot { slot, offset: 0 }
-            } else {
-                cur_src.offset(start * ELEM_BYTES)
-            };
-            // Re-read the chunk; writes scatter over the whole destination:
-            // model as strided writes across the full dst range (one line
-            // per ~buckets/elems stride is unmodelable exactly; bill the
-            // same byte volume spread as `buckets` separate run writes).
-            b.read(read_from, part_bytes).compute(2 * (end - start));
-            let runs = buckets.min(end - start).max(1);
-            let run_bytes = (part_bytes / runs).max(ELEM_BYTES);
-            let span = cfg.elems * ELEM_BYTES - run_bytes;
-            for r in 0..runs {
-                // Spread the write targets across dst deterministically.
-                let off = (r * 0x9E37_79B9 + pass as u64 * 0x85EB_CA6B) % (span / ELEM_BYTES + 1)
-                    * ELEM_BYTES;
-                b.write(cur_dst.offset(off), run_bytes);
-            }
-            if cfg.localised {
-                let slot = hist_slots.len() as u32
-                    + (pass * cfg.threads as u32)
-                    + i as u32;
-                b.free(slot);
-            }
-            b.signal(next_event + i as u32);
-        }
-        let scatter_base = next_event;
-        next_event += cfg.threads as u32;
-        // Barrier: everyone waits for all scatters before the next pass
-        // (thread 0 aggregates; others wait on thread 0's echo).
-        {
-            let b = &mut builders[0];
-            for i in 1..cfg.threads as u32 {
-                b.wait(scatter_base + i);
-            }
-            b.signal(next_event);
-        }
-        let pass_done = next_event;
-        next_event += 1;
-        for b in builders.iter_mut().skip(1) {
-            b.wait(pass_done);
-        }
-        std::mem::swap(&mut cur_src, &mut cur_dst);
-    }
-    for (i, b) in builders.iter_mut().enumerate() {
-        b.free(hist_slots[i]);
-    }
-    Program::from_builders(builders, next_slot, next_event)
+    Program::new(sources, num_slots, num_events)
 }
 
 #[cfg(test)]
@@ -199,9 +315,9 @@ mod tests {
             hash_policy: policy,
             striping: true,
         }));
-        let p = build(&mut e, cfg);
+        let mut p = build(&mut e, cfg);
         p.validate().unwrap();
-        e.run(&p, &mut StaticMapper::new()).unwrap()
+        e.run(&mut p, &mut StaticMapper::new()).unwrap()
     }
 
     #[test]
@@ -218,6 +334,26 @@ mod tests {
             );
             assert!(stats.makespan_cycles > 0);
             assert_eq!(stats.allocs - stats.frees, 2, "only src+dst stay live");
+        }
+    }
+
+    #[test]
+    fn streams_replay_identically_after_reset() {
+        for localised in [false, true] {
+            let mut e = Engine::new(EngineConfig::tilepro64(MemConfig {
+                hash_policy: HashPolicy::AllButStack,
+                striping: true,
+            }));
+            let mut p = build(
+                &mut e,
+                &RadixConfig {
+                    elems: 1 << 12,
+                    threads: 4,
+                    digit_bits: 8,
+                    localised,
+                },
+            );
+            assert_eq!(p.record(), p.record(), "localised={localised}");
         }
     }
 

@@ -1,0 +1,233 @@
+//! Differential replay pins for the streaming trace pipeline:
+//!
+//! 1. **Streamed == recorded.** For every workload × variant × homing mode
+//!    at small N, replaying the streamed program and replaying its recorded
+//!    `Vec<Op>` materialisation produce byte-identical `RunStats` JSON.
+//! 2. **Fast path == reference walk.** The engine's page-run fast path is
+//!    cycle-exact with the per-line walk for the same programs.
+//!
+//! Together these guarantee the streaming refactor changed *how* traces are
+//! held in memory and *how fast* lines are accounted — never the numbers.
+
+use std::rc::Rc;
+
+use tilesim::coordinator::localise::{build_program, LocaliseConfig, ELEM_BYTES};
+use tilesim::coordinator::ChunkKernel;
+use tilesim::mem::{HashPolicy, MemConfig};
+use tilesim::sched::{StaticMapper, TileLinuxScheduler};
+use tilesim::sim::{Engine, EngineConfig, Program};
+use tilesim::workloads::mergesort::{self, MergesortConfig, Variant};
+use tilesim::workloads::microbench::{self, MicrobenchConfig};
+use tilesim::workloads::radix::{self, RadixConfig};
+use tilesim::workloads::{HistogramKernel, MapKernel};
+
+const POLICIES: [HashPolicy; 2] = [HashPolicy::AllButStack, HashPolicy::None];
+
+fn cfg(policy: HashPolicy) -> EngineConfig {
+    EngineConfig::tilepro64(MemConfig {
+        hash_policy: policy,
+        striping: true,
+    })
+}
+
+/// Replay `build`'s program streamed and recorded (on identically prepared
+/// engines) and require byte-identical stats JSON; also replay it through
+/// the per-line reference walk and require the same bytes again.
+fn assert_differential(label: &str, policy: HashPolicy, build: &dyn Fn(&mut Engine) -> Program) {
+    // Streamed replay on the page-run fast path.
+    let mut e_stream = Engine::new(cfg(policy));
+    let mut streamed = build(&mut e_stream);
+
+    // Recorded replay: materialise the same streams to Vec<Op>, then run
+    // on an engine with identical pre-run (prealloc) state.
+    let mut e_rec = Engine::new(cfg(policy));
+    let _ = build(&mut e_rec);
+    let mut recorded = Program::from_ops(streamed.record(), streamed.num_slots, streamed.num_events);
+
+    // Reference-walk replay (per-line translation, no bulk runs).
+    let mut e_ref = Engine::new(cfg(policy).without_page_runs());
+    let mut for_ref = build(&mut e_ref);
+
+    let s_stream = e_stream
+        .run(&mut streamed, &mut StaticMapper::new())
+        .unwrap_or_else(|e| panic!("{label} streamed: {e}"));
+    let s_rec = e_rec
+        .run(&mut recorded, &mut StaticMapper::new())
+        .unwrap_or_else(|e| panic!("{label} recorded: {e}"));
+    let s_ref = e_ref
+        .run(&mut for_ref, &mut StaticMapper::new())
+        .unwrap_or_else(|e| panic!("{label} reference: {e}"));
+
+    let js = s_stream.to_json().encode();
+    assert_eq!(
+        js,
+        s_rec.to_json().encode(),
+        "{label} ({policy:?}): streamed vs recorded stats diverged"
+    );
+    assert_eq!(
+        js,
+        s_ref.to_json().encode(),
+        "{label} ({policy:?}): fast path vs reference walk diverged"
+    );
+}
+
+#[test]
+fn microbench_streamed_equals_recorded() {
+    for policy in POLICIES {
+        for localised in [false, true] {
+            assert_differential(
+                &format!("microbench localised={localised}"),
+                policy,
+                &|e: &mut Engine| {
+                    microbench::build(
+                        e,
+                        &MicrobenchConfig {
+                            elems: 1 << 14,
+                            threads: 8,
+                            reps: 3,
+                            localised,
+                        },
+                    )
+                },
+            );
+        }
+    }
+}
+
+#[test]
+fn mergesort_streamed_equals_recorded_all_variants() {
+    for policy in POLICIES {
+        for variant in [
+            Variant::NonLocalised,
+            Variant::NonLocalisedIntermediate,
+            Variant::Localised,
+        ] {
+            assert_differential(
+                &format!("mergesort {variant:?}"),
+                policy,
+                &|e: &mut Engine| {
+                    mergesort::build(
+                        e,
+                        &MergesortConfig {
+                            elems: 1 << 13,
+                            threads: 6,
+                            variant,
+                        },
+                    )
+                },
+            );
+        }
+    }
+}
+
+#[test]
+fn radix_streamed_equals_recorded() {
+    for policy in POLICIES {
+        for localised in [false, true] {
+            assert_differential(
+                &format!("radix localised={localised}"),
+                policy,
+                &|e: &mut Engine| {
+                    radix::build(
+                        e,
+                        &RadixConfig {
+                            elems: 1 << 13,
+                            threads: 4,
+                            digit_bits: 8,
+                            localised,
+                        },
+                    )
+                },
+            );
+        }
+    }
+}
+
+#[test]
+fn chunk_kernels_streamed_equals_recorded() {
+    for policy in POLICIES {
+        for localised in [false, true] {
+            let kernels: Vec<(&str, Rc<dyn ChunkKernel>)> = vec![
+                (
+                    "map",
+                    Rc::new(MapKernel {
+                        passes: 3,
+                        flops_per_elem: 1,
+                    }),
+                ),
+                ("histogram", Rc::new(HistogramKernel { passes: 3 })),
+            ];
+            for (name, kernel) in kernels {
+                let kernel2 = kernel.clone();
+                assert_differential(
+                    &format!("kernel {name} localised={localised}"),
+                    policy,
+                    &move |e: &mut Engine| {
+                        let input =
+                            e.prealloc_touched(tilesim::arch::TileId(0), (1 << 13) * ELEM_BYTES);
+                        build_program(
+                            &input,
+                            1 << 13,
+                            &LocaliseConfig {
+                                threads: 4,
+                                localised,
+                            },
+                            kernel2.clone(),
+                        )
+                    },
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn streamed_equals_recorded_under_migrating_scheduler() {
+    // The pull-based loop must interleave identically when the scheduler
+    // migrates threads mid-run (same seed ⇒ same migration schedule).
+    let build = |e: &mut Engine| {
+        mergesort::build(
+            e,
+            &MergesortConfig {
+                elems: 1 << 14,
+                threads: 8,
+                variant: Variant::Localised,
+            },
+        )
+    };
+    let mut e1 = Engine::new(cfg(HashPolicy::None));
+    let mut streamed = build(&mut e1);
+    let mut e2 = Engine::new(cfg(HashPolicy::None));
+    let _ = build(&mut e2);
+    let mut recorded = Program::from_ops(streamed.record(), streamed.num_slots, streamed.num_events);
+    let s1 = e1
+        .run(&mut streamed, &mut TileLinuxScheduler::with_seed(2014))
+        .unwrap();
+    let s2 = e2
+        .run(&mut recorded, &mut TileLinuxScheduler::with_seed(2014))
+        .unwrap();
+    assert_eq!(s1.to_json().encode(), s2.to_json().encode());
+}
+
+#[test]
+fn streamed_program_resident_bytes_bounded() {
+    // The point of the pipeline: a streamed program keeps a bounded op
+    // window while the recorded one holds the whole trace.
+    let mut e = Engine::new(cfg(HashPolicy::None));
+    let mut p = mergesort::build(
+        &mut e,
+        &MergesortConfig {
+            elems: 1 << 16,
+            threads: 4,
+            variant: Variant::Localised,
+        },
+    );
+    let ops = p.record();
+    let recorded_bytes = Program::from_ops(ops, p.num_slots, p.num_events).resident_trace_bytes();
+    assert!(
+        p.resident_trace_bytes() * 10 < recorded_bytes,
+        "streamed window {} should be far below materialised {}",
+        p.resident_trace_bytes(),
+        recorded_bytes
+    );
+}

@@ -128,7 +128,7 @@ fn shape_migrations_are_costly_for_both_styles() {
             hash_policy: policy,
             striping: true,
         }));
-        let p = mergesort::build(
+        let mut p = mergesort::build(
             &mut e,
             &MergesortConfig {
                 elems: N,
@@ -142,9 +142,9 @@ fn shape_migrations_are_costly_for_both_styles() {
                 migrate_prob: 0.5,
                 seed: SEED,
             });
-            e.run(&p, &mut s).unwrap()
+            e.run(&mut p, &mut s).unwrap()
         } else {
-            e.run(&p, &mut StaticMapper::new()).unwrap()
+            e.run(&mut p, &mut StaticMapper::new()).unwrap()
         }
     };
     use tilesim::mem::HashPolicy;

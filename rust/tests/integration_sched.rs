@@ -30,13 +30,13 @@ fn engine() -> Engine {
 #[test]
 fn tile_linux_migrates_on_long_runs_static_never() {
     let mut e1 = engine();
-    let p1 = long_running_program(&mut e1, 16);
-    let s_linux = e1.run(&p1, &mut TileLinuxScheduler::with_seed(3)).unwrap();
+    let mut p1 = long_running_program(&mut e1, 16);
+    let s_linux = e1.run(&mut p1, &mut TileLinuxScheduler::with_seed(3)).unwrap();
     assert!(s_linux.migrations > 0, "long run must see migrations");
 
     let mut e2 = engine();
-    let p2 = long_running_program(&mut e2, 16);
-    let s_static = e2.run(&p2, &mut StaticMapper::new()).unwrap();
+    let mut p2 = long_running_program(&mut e2, 16);
+    let s_static = e2.run(&mut p2, &mut StaticMapper::new()).unwrap();
     assert_eq!(s_static.migrations, 0);
 }
 
@@ -46,13 +46,13 @@ fn migrations_cost_time() {
     // slower (direct cost + locality loss).
     let run = |prob: f64| {
         let mut e = engine();
-        let p = long_running_program(&mut e, 16);
+        let mut p = long_running_program(&mut e, 16);
         let mut sched = TileLinuxScheduler::new(TileLinuxConfig {
             migrate_prob: prob,
             seed: 11,
             ..Default::default()
         });
-        e.run(&p, &mut sched).unwrap()
+        e.run(&mut p, &mut sched).unwrap()
     };
     let calm = run(0.0);
     let churny = run(0.9);
@@ -80,14 +80,14 @@ fn migration_strands_first_touch_locality() {
     for _ in 0..128 {
         b.read(Loc::Slot { slot: 0, offset: 0 }, 1 << 16);
     }
-    let p = Program::from_builders(vec![b], 1, 0);
+    let mut p = Program::from_builders(vec![b], 1, 0);
     // Aggressive migration so it certainly fires mid-run.
     let mut sched = TileLinuxScheduler::new(TileLinuxConfig {
         check_interval: 200_000,
         migrate_prob: 1.0,
         seed: 5,
     });
-    let stats = e.run(&p, &mut sched).unwrap();
+    let stats = e.run(&mut p, &mut sched).unwrap();
     assert!(stats.migrations > 0);
     assert!(
         stats.home_hits + stats.ddr_accesses > (1 << 16) / 64,

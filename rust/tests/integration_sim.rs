@@ -27,12 +27,12 @@ fn fork_join_diamond() {
     };
     let mut t3 = TraceBuilder::new();
     t3.wait(1).wait(2).compute(100);
-    let p = Program::from_builders(
+    let mut p = Program::from_builders(
         vec![t0, mk_consumer(0, 1), mk_consumer(0, 2), t3],
         0,
         3,
     );
-    let stats = e.run(&p, &mut StaticMapper::new()).unwrap();
+    let stats = e.run(&mut p, &mut StaticMapper::new()).unwrap();
     // join thread must finish last-ish: after both consumers' signals.
     let t3_end = stats.thread_cycles[3];
     assert!(t3_end >= stats.thread_cycles[1].min(stats.thread_cycles[2]));
@@ -44,8 +44,8 @@ fn deadlock_cycle_detected() {
     a.wait(0).signal(1);
     let mut b = TraceBuilder::new();
     b.wait(1).signal(0);
-    let p = Program::from_builders(vec![a, b], 0, 2);
-    match engine(HashPolicy::None).run(&p, &mut StaticMapper::new()) {
+    let mut p = Program::from_builders(vec![a, b], 0, 2);
+    match engine(HashPolicy::None).run(&mut p, &mut StaticMapper::new()) {
         Err(EngineError::Deadlock(mut t)) => {
             t.sort();
             assert_eq!(t, vec![0, 1]);
@@ -58,9 +58,9 @@ fn deadlock_cycle_detected() {
 fn double_free_is_reported() {
     let mut b = TraceBuilder::new();
     b.alloc(0, 4096, AllocKind::Heap).free(0).free(0);
-    let p = Program::from_builders(vec![b], 1, 0);
+    let mut p = Program::from_builders(vec![b], 1, 0);
     assert!(matches!(
-        engine(HashPolicy::None).run(&p, &mut StaticMapper::new()),
+        engine(HashPolicy::None).run(&mut p, &mut StaticMapper::new()),
         Err(EngineError::UnboundSlot { .. })
     ));
 }
@@ -76,8 +76,8 @@ fn accounting_identity_hits_sum_to_accesses() {
         b.read(part, 1 << 15).copy(part, part, 1 << 14);
         builders.push(b);
     }
-    let p = Program::from_builders(builders, 0, 0);
-    let stats = e.run(&p, &mut StaticMapper::new()).unwrap();
+    let mut p = Program::from_builders(builders, 0, 0);
+    let stats = e.run(&mut p, &mut StaticMapper::new()).unwrap();
     assert_eq!(
         stats.l1_hits + stats.l2_hits + stats.home_hits + stats.ddr_accesses,
         stats.line_accesses,
@@ -100,10 +100,10 @@ fn runs_are_bit_deterministic() {
         }
         (e, Program::from_builders(builders, 0, 0))
     };
-    let (e1, p1) = build();
-    let (e2, p2) = build();
-    let s1 = e1.run(&p1, &mut TileLinuxScheduler::with_seed(7)).unwrap();
-    let s2 = e2.run(&p2, &mut TileLinuxScheduler::with_seed(7)).unwrap();
+    let (e1, mut p1) = build();
+    let (e2, mut p2) = build();
+    let s1 = e1.run(&mut p1, &mut TileLinuxScheduler::with_seed(7)).unwrap();
+    let s2 = e2.run(&mut p2, &mut TileLinuxScheduler::with_seed(7)).unwrap();
     assert_eq!(s1.makespan_cycles, s2.makespan_cycles);
     assert_eq!(s1.thread_cycles, s2.thread_cycles);
     assert_eq!(s1.migrations, s2.migrations);
@@ -124,10 +124,10 @@ fn different_seeds_change_linux_schedule() {
         }
         (e, Program::from_builders(builders, 0, 0))
     };
-    let (e1, p1) = build();
-    let (e2, p2) = build();
-    let s1 = e1.run(&p1, &mut TileLinuxScheduler::with_seed(1)).unwrap();
-    let s2 = e2.run(&p2, &mut TileLinuxScheduler::with_seed(2)).unwrap();
+    let (e1, mut p1) = build();
+    let (e2, mut p2) = build();
+    let s1 = e1.run(&mut p1, &mut TileLinuxScheduler::with_seed(1)).unwrap();
+    let s2 = e2.run(&mut p2, &mut TileLinuxScheduler::with_seed(2)).unwrap();
     assert_ne!(
         (s1.makespan_cycles, s1.migrations),
         (s2.makespan_cycles, s2.migrations),
@@ -137,9 +137,9 @@ fn different_seeds_change_linux_schedule() {
 
 #[test]
 fn empty_program_completes() {
-    let p = Program::from_builders(vec![TraceBuilder::new(); 4], 0, 0);
+    let mut p = Program::from_builders(vec![TraceBuilder::new(); 4], 0, 0);
     let stats = engine(HashPolicy::None)
-        .run(&p, &mut StaticMapper::new())
+        .run(&mut p, &mut StaticMapper::new())
         .unwrap();
     assert_eq!(stats.makespan_cycles, 0);
     assert_eq!(stats.line_accesses, 0);
@@ -155,8 +155,8 @@ fn makespan_dominated_by_slowest_thread() {
     }
     let mut light = TraceBuilder::new();
     light.read(Loc::Abs(r.addr), 64);
-    let p = Program::from_builders(vec![heavy, light], 0, 0);
-    let stats = e.run(&p, &mut StaticMapper::new()).unwrap();
+    let mut p = Program::from_builders(vec![heavy, light], 0, 0);
+    let stats = e.run(&mut p, &mut StaticMapper::new()).unwrap();
     assert_eq!(stats.makespan_cycles, stats.thread_cycles[0]);
     assert!(stats.thread_cycles[1] < stats.thread_cycles[0] / 10);
 }

@@ -19,7 +19,7 @@ fn engine(policy: HashPolicy) -> Engine {
 fn microbench_traffic_scales_linearly_with_reps() {
     let stats = |reps| {
         let mut e = engine(HashPolicy::None);
-        let p = microbench::build(
+        let mut p = microbench::build(
             &mut e,
             &MicrobenchConfig {
                 elems: 1 << 16,
@@ -28,7 +28,7 @@ fn microbench_traffic_scales_linearly_with_reps() {
                 localised: false,
             },
         );
-        e.run(&p, &mut StaticMapper::new()).unwrap()
+        e.run(&mut p, &mut StaticMapper::new()).unwrap()
     };
     let s4 = stats(4);
     let s8 = stats(8);
@@ -39,7 +39,7 @@ fn microbench_traffic_scales_linearly_with_reps() {
 fn localised_microbench_adds_exactly_one_copy_pass() {
     let count = |localised| {
         let mut e = engine(HashPolicy::None);
-        let p = microbench::build(
+        let mut p = microbench::build(
             &mut e,
             &MicrobenchConfig {
                 elems: 1 << 16,
@@ -48,7 +48,7 @@ fn localised_microbench_adds_exactly_one_copy_pass() {
                 localised,
             },
         );
-        e.run(&p, &mut StaticMapper::new()).unwrap().line_accesses
+        e.run(&mut p, &mut StaticMapper::new()).unwrap().line_accesses
     };
     let non_loc = count(false);
     let loc = count(true);
@@ -62,7 +62,7 @@ fn mergesort_thread_sweep_same_traffic_order() {
     // one extra merge level per doubling).
     let lines = |threads| {
         let mut e = engine(HashPolicy::AllButStack);
-        let p = mergesort::build(
+        let mut p = mergesort::build(
             &mut e,
             &MergesortConfig {
                 elems: 1 << 16,
@@ -70,7 +70,7 @@ fn mergesort_thread_sweep_same_traffic_order() {
                 variant: Variant::NonLocalised,
             },
         );
-        e.run(&p, &mut StaticMapper::new()).unwrap().line_accesses
+        e.run(&mut p, &mut StaticMapper::new()).unwrap().line_accesses
     };
     let t1 = lines(1);
     let t16 = lines(16);
@@ -83,7 +83,7 @@ fn localised_variant_result_slot_chain_is_consistent() {
     // == frees + live (root ext_scr + nothing else).
     for threads in [2usize, 4, 8, 16] {
         let mut e = engine(HashPolicy::None);
-        let p = mergesort::build(
+        let mut p = mergesort::build(
             &mut e,
             &MergesortConfig {
                 elems: 1 << 14,
@@ -91,7 +91,7 @@ fn localised_variant_result_slot_chain_is_consistent() {
                 variant: Variant::Localised,
             },
         );
-        let stats = e.run(&p, &mut StaticMapper::new()).unwrap();
+        let stats = e.run(&mut p, &mut StaticMapper::new()).unwrap();
         // 2 preallocs (array0 + scratch0) + workload allocs.
         assert_eq!(
             stats.allocs - stats.frees,
@@ -107,7 +107,7 @@ fn intermediate_variant_sits_between() {
     // Allocation count: intermediate > plain (ext_scr per merge).
     let run = |variant| {
         let mut e = engine(HashPolicy::AllButStack);
-        let p = mergesort::build(
+        let mut p = mergesort::build(
             &mut e,
             &MergesortConfig {
                 elems: 1 << 15,
@@ -115,7 +115,7 @@ fn intermediate_variant_sits_between() {
                 variant,
             },
         );
-        e.run(&p, &mut StaticMapper::new()).unwrap()
+        e.run(&mut p, &mut StaticMapper::new()).unwrap()
     };
     let plain = run(Variant::NonLocalised);
     let interm = run(Variant::NonLocalisedIntermediate);
@@ -127,7 +127,7 @@ fn intermediate_variant_sits_between() {
 fn one_thread_equals_pure_serial_sort() {
     // With one thread there are no events/waits and no parallel merges.
     let mut e = engine(HashPolicy::AllButStack);
-    let p = mergesort::build(
+    let mut p = mergesort::build(
         &mut e,
         &MergesortConfig {
             elems: 1 << 12,
@@ -136,7 +136,7 @@ fn one_thread_equals_pure_serial_sort() {
         },
     );
     assert_eq!(p.threads.len(), 1);
-    let stats = e.run(&p, &mut StaticMapper::new()).unwrap();
+    let stats = e.run(&mut p, &mut StaticMapper::new()).unwrap();
     assert!(stats.makespan_cycles > 0);
 }
 
@@ -155,7 +155,7 @@ fn microbench_63_threads_uneven_tail_part() {
     // the program must still cover every element exactly once per rep.
     let mut e = engine(HashPolicy::None);
     let elems = 1_000_000u64;
-    let p = microbench::build(
+    let mut p = microbench::build(
         &mut e,
         &MicrobenchConfig {
             elems,
@@ -164,7 +164,7 @@ fn microbench_63_threads_uneven_tail_part() {
             localised: false,
         },
     );
-    let stats = e.run(&p, &mut StaticMapper::new()).unwrap();
+    let stats = e.run(&mut p, &mut StaticMapper::new()).unwrap();
     // One rep = read n + write n at line granularity; parts are
     // line-unaligned so allow per-thread straddle slack (+1 line per
     // boundary per stream).

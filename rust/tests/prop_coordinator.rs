@@ -7,6 +7,7 @@ use tilesim::coordinator::localise::{build_program, LocaliseConfig, ELEM_BYTES};
 use tilesim::mem::{HashPolicy, MemConfig};
 use tilesim::sched::{StaticMapper, TileLinuxScheduler};
 use tilesim::sim::{Engine, EngineConfig, Loc, TraceBuilder};
+use std::rc::Rc;
 use tilesim::util::prop::{self, assert_holds};
 use tilesim::workloads::mergesort::{self, MergesortConfig, Variant};
 use tilesim::workloads::microbench::{self, MicrobenchConfig};
@@ -37,12 +38,12 @@ fn prop_mergesort_programs_always_complete() {
             _ => Variant::Localised,
         };
         let mut e = engine(rand_policy(rng), rng.chance(0.5));
-        let p = mergesort::build(&mut e, &MergesortConfig { elems, threads, variant });
+        let mut p = mergesort::build(&mut e, &MergesortConfig { elems, threads, variant });
         p.validate().map_err(|e| e.to_string())?;
         let stats = if rng.chance(0.5) {
-            e.run(&p, &mut StaticMapper::new())
+            e.run(&mut p, &mut StaticMapper::new())
         } else {
-            e.run(&p, &mut TileLinuxScheduler::with_seed(rng.next_u64()))
+            e.run(&mut p, &mut TileLinuxScheduler::with_seed(rng.next_u64()))
         }
         .map_err(|e| e.to_string())?;
         assert_holds(stats.makespan_cycles > 0, "zero makespan")?;
@@ -68,11 +69,13 @@ fn prop_microbench_traffic_formula() {
         let reps = 1 + rng.below(8) as u32;
         let count = |localised: bool| -> Result<u64, String> {
             let mut e = engine(HashPolicy::None, true);
-            let p = microbench::build(
+            let mut p = microbench::build(
                 &mut e,
                 &MicrobenchConfig { elems, threads, reps, localised },
             );
-            Ok(e.run(&p, &mut StaticMapper::new()).map_err(|e| e.to_string())?.line_accesses)
+            Ok(e.run(&mut p, &mut StaticMapper::new())
+                .map_err(|e| e.to_string())?
+                .line_accesses)
         };
         let non_loc = count(false)?;
         let loc = count(true)?;
@@ -98,20 +101,26 @@ fn prop_localisation_preserves_kernel_traffic_shape() {
         let elems = (threads as u64).max(1 << rng.range(8, 14));
         let passes = 1 + rng.below(6) as u32;
         let writes = rng.chance(0.5);
-        let kernel = move |t: &mut TraceBuilder, chunk: Loc, bytes: u64, _i: usize| {
-            for _ in 0..passes {
-                t.read(chunk, bytes);
-                if writes {
-                    t.write(chunk, bytes);
+        let kernel: Rc<dyn tilesim::coordinator::ChunkKernel> =
+            Rc::new(move |t: &mut TraceBuilder, chunk: Loc, bytes: u64, _i: usize| {
+                for _ in 0..passes {
+                    t.read(chunk, bytes);
+                    if writes {
+                        t.write(chunk, bytes);
+                    }
                 }
-            }
-        };
+            });
         let mut run = |localised: bool| -> Result<tilesim::sim::RunStats, String> {
             let mut e = engine(rand_policy(rng), true);
             let input = e.prealloc_touched(TileId(0), elems * ELEM_BYTES);
-            let p = build_program(&input, elems, &LocaliseConfig { threads, localised }, &kernel);
+            let mut p = build_program(
+                &input,
+                elems,
+                &LocaliseConfig { threads, localised },
+                kernel.clone(),
+            );
             p.validate().map_err(|e| e.to_string())?;
-            e.run(&p, &mut StaticMapper::new()).map_err(|e| e.to_string())
+            e.run(&mut p, &mut StaticMapper::new()).map_err(|e| e.to_string())
         };
         let conv = run(false)?;
         let loc = run(true)?;
@@ -139,11 +148,11 @@ fn prop_seeded_runs_replay_exactly() {
         let elems = 1u64 << 12;
         let run = || {
             let mut e = engine(HashPolicy::AllButStack, true);
-            let p = mergesort::build(
+            let mut p = mergesort::build(
                 &mut e,
                 &MergesortConfig { elems, threads, variant: Variant::Localised },
             );
-            e.run(&p, &mut TileLinuxScheduler::with_seed(seed))
+            e.run(&mut p, &mut TileLinuxScheduler::with_seed(seed))
                 .map_err(|e| e.to_string())
         };
         let a = run()?;
@@ -170,13 +179,13 @@ fn prop_localised_never_slower_with_more_reuse() {
                         t.read(chunk, bytes);
                     }
                 };
-                let p = build_program(
+                let mut p = build_program(
                     &input,
                     elems,
                     &LocaliseConfig { threads, localised },
-                    &kernel,
+                    Rc::new(kernel),
                 );
-                Ok(e.run(&p, &mut StaticMapper::new())
+                Ok(e.run(&mut p, &mut StaticMapper::new())
                     .map_err(|e| e.to_string())?
                     .makespan_cycles)
             };
