@@ -10,7 +10,8 @@
 //! Run: `cargo bench --bench perf_engine`
 //! Env: TILESIM_SIZE (default 2M), TILESIM_SKIP_PJRT=1 to skip the sorter,
 //!      TILESIM_BENCH_OUT (default BENCH_batch.json),
-//!      TILESIM_BENCH_ENGINE_OUT (default BENCH_engine.json).
+//!      TILESIM_BENCH_ENGINE_OUT (default BENCH_engine.json),
+//!      TILESIM_BENCH_NOC_OUT (default BENCH_noc.json).
 
 use std::rc::Rc;
 use std::time::Instant;
@@ -54,6 +55,12 @@ const SCAN_PASSES: u32 = 8;
 /// One scan replay; returns the run stats and the program's resident
 /// (streamed) trace bytes after the run.
 fn scan_replay(elems: u64, page_runs: bool) -> (RunStats, u64) {
+    scan_replay_links(elems, page_runs, false)
+}
+
+/// Scan replay with optional per-link mesh contention (the BENCH_noc.json
+/// workload: same traffic, link servers on/off).
+fn scan_replay_links(elems: u64, page_runs: bool, links: bool) -> (RunStats, u64) {
     let mut cfg = EngineConfig::tilepro64(MemConfig {
         hash_policy: HashPolicy::None,
         striping: true,
@@ -61,6 +68,7 @@ fn scan_replay(elems: u64, page_runs: bool) -> (RunStats, u64) {
     if !page_runs {
         cfg = cfg.without_page_runs();
     }
+    cfg.contention.links = links;
     let mut e = Engine::new(cfg);
     let input = e.prealloc_touched(TileId(0), elems * ELEM_BYTES);
     let mut p = build_program(
@@ -156,6 +164,28 @@ fn main() {
         streamed_peak,
         recorded_bytes
     );
+
+    // --- link billing before/after: the same fast-path scan with per-link
+    // mesh servers billed along every remote route. The allocation-free
+    // xy_links walk is what keeps the links-on column close to links-off.
+    let (links_stats, _) = scan_replay_links(scan_elems, true, true);
+    let t_links = time_it(1, 2, || {
+        std::hint::black_box(scan_replay_links(scan_elems, true, true).0.makespan_cycles);
+    });
+    let links_lps = scan_lines as f64 / t_links.min_s;
+    let link_reqs: u64 = links_stats.link_requests.iter().sum();
+    println!("{}", t_links.summary("replay: seq-scan, link contention on"));
+    println!(
+        "link contention: {:.1} M lines/s (links on) vs {:.1} M lines/s (off) = {:.2}x overhead \
+         | {} link requests, {:.1} M link-billings/s, {} link-queue cycles",
+        links_lps / 1e6,
+        fast_lps / 1e6,
+        fast_lps / links_lps,
+        link_reqs,
+        link_reqs as f64 / t_links.min_s / 1e6,
+        links_stats.link_queue_cycles
+    );
+
     let engine_json = Json::obj(vec![
         ("bench", Json::str("replay_throughput")),
         ("workload", Json::str("seq-scan microbench")),
@@ -168,6 +198,8 @@ fn main() {
         ("reference_min_s", Json::num(t_ref.min_s)),
         ("reference_lines_per_sec", Json::num(ref_lps)),
         ("speedup_vs_per_line_walk", Json::num(speedup)),
+        ("links_on_lines_per_sec", Json::num(links_lps)),
+        ("link_billing_overhead", Json::num(fast_lps / links_lps)),
         ("streamed_peak_trace_bytes", Json::num(streamed_peak as f64)),
         ("recorded_trace_bytes", Json::num(recorded_bytes as f64)),
         (
@@ -179,6 +211,33 @@ fn main() {
         .unwrap_or_else(|_| "BENCH_engine.json".into());
     std::fs::write(&engine_path, engine_json.encode()).expect("write BENCH_engine.json");
     println!("wrote {engine_path}");
+
+    // --- BENCH_noc.json: the link-contention throughput record (same
+    // numbers as above, in the NoC-focused file the link PRs track).
+    let noc_json = Json::obj(vec![
+        ("bench", Json::str("link_contention_throughput")),
+        ("workload", Json::str("seq-scan microbench, tilepro64")),
+        ("elems", Json::num(scan_elems as f64)),
+        ("threads", Json::num(SCAN_THREADS as f64)),
+        ("lines_per_run", Json::num(scan_lines as f64)),
+        ("links_on_min_s", Json::num(t_links.min_s)),
+        ("links_on_lines_per_sec", Json::num(links_lps)),
+        ("links_off_lines_per_sec", Json::num(fast_lps)),
+        ("link_billing_overhead", Json::num(fast_lps / links_lps)),
+        ("link_requests_per_run", Json::num(link_reqs as f64)),
+        (
+            "link_billings_per_sec",
+            Json::num(link_reqs as f64 / t_links.min_s),
+        ),
+        (
+            "link_queue_cycles",
+            Json::num(links_stats.link_queue_cycles as f64),
+        ),
+    ]);
+    let noc_path =
+        std::env::var("TILESIM_BENCH_NOC_OUT").unwrap_or_else(|_| "BENCH_noc.json".into());
+    std::fs::write(&noc_path, noc_json.encode()).expect("write BENCH_noc.json");
+    println!("wrote {noc_path}");
 
     // --- batch pool: full table1 sweep at 1 job vs all cores. The sweep
     // is the unit of work every figure replays, so this is the number the

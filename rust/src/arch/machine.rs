@@ -1,0 +1,483 @@
+//! Runtime machine description: *which* NUCA grid we are simulating.
+//!
+//! The seed simulator baked the TILEPro64 into compile-time constants
+//! (`GRID_W`/`GRID_H`/`NUM_TILES`/`NUM_CONTROLLERS`), so it could only ever
+//! reproduce one chip. [`Machine`] makes the chip a runtime value — grid
+//! dimensions, memory-controller placement, and the latency/geometry
+//! parameter sets — constructed once (usually from a [`MachineSpec`]
+//! preset or a `WxH:ctrls` CLI spec) and threaded through every layer:
+//! homing hashes, striping, sharer bitsets, the NoC servers, schedulers,
+//! the replay engine, and the heatmap renderers.
+//!
+//! The old constants survive only as the [`MachineSpec::TilePro64`]
+//! preset's values; `--machine tilepro64` (the default) reproduces the
+//! seed's figure JSON byte-identically.
+
+use std::sync::Arc;
+
+use super::params::{CacheGeometry, LatencyParams};
+use super::topology::{controllers, Controller, Coord, Dir, TileId};
+
+/// A parseable, copyable selector for a [`Machine`] — what a `RunSpec`
+/// carries across the batch pool and what `--machine` parses into.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum MachineSpec {
+    /// The paper's evaluation platform: 8×8 mesh, 4 edge controllers.
+    #[default]
+    TilePro64,
+    /// Adapteva Epiphany-III-shaped grid (Richie et al., arXiv:1704.08343):
+    /// 4×4 RISC array with a single external-memory link on the east edge.
+    Epiphany16,
+    /// A forward-looking 16×16 NUCA grid with 8 edge controllers — the
+    /// "future manycore" the paper pitches localisation for.
+    Nuca256,
+    /// Arbitrary `WxH:ctrls` grid with evenly spaced edge controllers.
+    Custom { w: u32, h: u32, ctrls: u32 },
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MachineError {
+    BadSpec(String),
+    BadGrid { w: u32, h: u32 },
+    BadControllers { ctrls: u32, w: u32, h: u32 },
+}
+
+impl std::fmt::Display for MachineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MachineError::BadSpec(s) => write!(
+                f,
+                "bad machine spec '{s}' (want tilepro64 | epiphany16 | nuca256 | WxH | WxH:ctrls)"
+            ),
+            MachineError::BadGrid { w, h } => {
+                write!(f, "bad grid {w}x{h}: want 1 <= W,H <= 64")
+            }
+            MachineError::BadControllers { ctrls, w, h } => write!(
+                f,
+                "bad controller count {ctrls} for a {w}x{h} grid: want 1..={}",
+                Machine::controller_capacity(*w, *h)
+            ),
+        }
+    }
+}
+
+impl std::error::Error for MachineError {}
+
+impl MachineSpec {
+    /// Parse a `--machine` argument: a preset name or `WxH[:ctrls]`.
+    pub fn parse(s: &str) -> Result<MachineSpec, MachineError> {
+        match s {
+            "tilepro64" => return Ok(MachineSpec::TilePro64),
+            "epiphany16" => return Ok(MachineSpec::Epiphany16),
+            "nuca256" => return Ok(MachineSpec::Nuca256),
+            _ => {}
+        }
+        let (grid, ctrls) = match s.split_once(':') {
+            Some((g, c)) => {
+                let ctrls = c
+                    .parse::<u32>()
+                    .map_err(|_| MachineError::BadSpec(s.to_string()))?;
+                (g, Some(ctrls))
+            }
+            None => (s, None),
+        };
+        let (w, h) = grid
+            .split_once('x')
+            .ok_or_else(|| MachineError::BadSpec(s.to_string()))?;
+        let w = w
+            .parse::<u32>()
+            .map_err(|_| MachineError::BadSpec(s.to_string()))?;
+        let h = h
+            .parse::<u32>()
+            .map_err(|_| MachineError::BadSpec(s.to_string()))?;
+        let ctrls = ctrls.unwrap_or_else(|| 4.min(Machine::controller_capacity(w, h.max(1))));
+        Machine::validate(w, h, ctrls)?;
+        Ok(MachineSpec::Custom { w, h, ctrls })
+    }
+
+    /// Stable label used in run-spec JSON and table titles.
+    pub fn label(self) -> String {
+        match self {
+            MachineSpec::TilePro64 => "tilepro64".into(),
+            MachineSpec::Epiphany16 => "epiphany16".into(),
+            MachineSpec::Nuca256 => "nuca256".into(),
+            MachineSpec::Custom { w, h, ctrls } => format!("{w}x{h}:{ctrls}"),
+        }
+    }
+
+    /// Materialise the description. Presets are valid by construction;
+    /// `Custom` was validated at parse time (and is re-checked here).
+    pub fn build(self) -> Machine {
+        match self {
+            MachineSpec::TilePro64 => Machine::tilepro64(),
+            MachineSpec::Epiphany16 => Machine::epiphany16(),
+            MachineSpec::Nuca256 => Machine::nuca256(),
+            MachineSpec::Custom { w, h, ctrls } => {
+                Machine::custom(w, h, ctrls).expect("validated at parse time")
+            }
+        }
+    }
+
+    /// Shared handle, the form every subsystem holds.
+    pub fn build_arc(self) -> Arc<Machine> {
+        Arc::new(self.build())
+    }
+}
+
+/// The simulated chip, as a runtime value. All topology questions
+/// (coordinates, hop counts, controller proximity, link indices) go
+/// through this; latency arithmetic that depends on distance lives here
+/// too ([`Machine::access_cycles`]).
+#[derive(Clone, Debug)]
+pub struct Machine {
+    spec: MachineSpec,
+    grid_w: u32,
+    grid_h: u32,
+    controllers: Vec<Controller>,
+    pub params: LatencyParams,
+    pub geometry: CacheGeometry,
+}
+
+impl Machine {
+    /// Distinct attach columns per edge: a single-row grid has only one
+    /// edge, so it holds W controllers; taller grids hold W per edge.
+    fn controller_capacity(w: u32, h: u32) -> u32 {
+        if h == 1 {
+            w
+        } else {
+            2 * w
+        }
+    }
+
+    fn validate(w: u32, h: u32, ctrls: u32) -> Result<(), MachineError> {
+        if w == 0 || h == 0 || w > 64 || h > 64 {
+            return Err(MachineError::BadGrid { w, h });
+        }
+        if ctrls == 0 || ctrls > Machine::controller_capacity(w, h) {
+            return Err(MachineError::BadControllers { ctrls, w, h });
+        }
+        Ok(())
+    }
+
+    /// The paper's evaluation platform. Grid, controller attach points,
+    /// latencies, and cache geometry are exactly the seed's compile-time
+    /// constants, so the default machine replays byte-identically.
+    pub fn tilepro64() -> Machine {
+        Machine {
+            spec: MachineSpec::TilePro64,
+            grid_w: 8,
+            grid_h: 8,
+            controllers: controllers().to_vec(),
+            params: LatencyParams::TILEPRO64,
+            geometry: CacheGeometry::TILEPRO64,
+        }
+    }
+
+    /// Epiphany-III-shaped 4×4 array: one external-memory link on the east
+    /// edge (middle row), as in the Parallella's eLink. Latency/geometry
+    /// parameters stay TILEPro-calibrated — the presets vary *topology*;
+    /// per-chip latency recalibration is a ROADMAP open item.
+    pub fn epiphany16() -> Machine {
+        Machine {
+            spec: MachineSpec::Epiphany16,
+            grid_w: 4,
+            grid_h: 4,
+            controllers: vec![Controller {
+                id: 0,
+                attach: TileId(7), // (x=3, y=1): east edge, middle row
+            }],
+            params: LatencyParams::TILEPRO64,
+            geometry: CacheGeometry::TILEPRO64,
+        }
+    }
+
+    /// A 16×16 forward-looking NUCA grid with 8 edge controllers.
+    pub fn nuca256() -> Machine {
+        Machine::custom_with_spec(16, 16, 8, MachineSpec::Nuca256)
+            .expect("nuca256 preset is valid")
+    }
+
+    /// Arbitrary grid. Controllers alternate between the top and bottom
+    /// edges (top gets the extra one when odd) at evenly spaced columns —
+    /// the generalisation of the TILEPro64's 2-top/2-bottom placement.
+    pub fn custom(w: u32, h: u32, ctrls: u32) -> Result<Machine, MachineError> {
+        Machine::custom_with_spec(w, h, ctrls, MachineSpec::Custom { w, h, ctrls })
+    }
+
+    fn custom_with_spec(
+        w: u32,
+        h: u32,
+        ctrls: u32,
+        spec: MachineSpec,
+    ) -> Result<Machine, MachineError> {
+        Machine::validate(w, h, ctrls)?;
+        // A single-row grid has one edge: all controllers share it (at
+        // distinct columns). Taller grids split top/bottom.
+        let top = if h == 1 { ctrls } else { ctrls.div_ceil(2) };
+        let bottom = ctrls - top;
+        let mut cs = Vec::with_capacity(ctrls as usize);
+        let col = |j: u32, n: u32| ((j + 1) * w / (n + 1)).min(w - 1);
+        for j in 0..top {
+            cs.push(Controller {
+                id: j,
+                attach: TileId(col(j, top)),
+            });
+        }
+        for j in 0..bottom {
+            cs.push(Controller {
+                id: top + j,
+                attach: TileId((h - 1) * w + col(j, bottom)),
+            });
+        }
+        Ok(Machine {
+            spec,
+            grid_w: w,
+            grid_h: h,
+            controllers: cs,
+            params: LatencyParams::TILEPRO64,
+            geometry: CacheGeometry::TILEPRO64,
+        })
+    }
+
+    pub fn spec(&self) -> MachineSpec {
+        self.spec
+    }
+
+    pub fn name(&self) -> String {
+        self.spec.label()
+    }
+
+    #[inline]
+    pub fn grid_w(&self) -> u32 {
+        self.grid_w
+    }
+
+    #[inline]
+    pub fn grid_h(&self) -> u32 {
+        self.grid_h
+    }
+
+    #[inline]
+    pub fn num_tiles(&self) -> u32 {
+        self.grid_w * self.grid_h
+    }
+
+    #[inline]
+    pub fn num_controllers(&self) -> u32 {
+        self.controllers.len() as u32
+    }
+
+    pub fn controllers(&self) -> &[Controller] {
+        &self.controllers
+    }
+
+    #[inline]
+    pub fn controller(&self, id: u32) -> Controller {
+        self.controllers[id as usize]
+    }
+
+    /// Mesh coordinates of a tile on *this* grid (row-major ids).
+    #[inline]
+    pub fn coord(&self, t: TileId) -> Coord {
+        debug_assert!(t.0 < self.num_tiles(), "tile {t:?} out of range");
+        Coord {
+            x: t.0 % self.grid_w,
+            y: t.0 / self.grid_w,
+        }
+    }
+
+    /// Tile at mesh coordinates on this grid.
+    #[inline]
+    pub fn tile_at(&self, c: Coord) -> TileId {
+        debug_assert!(c.x < self.grid_w && c.y < self.grid_h, "coord {c:?} out of range");
+        TileId(c.y * self.grid_w + c.x)
+    }
+
+    pub fn tiles(&self) -> impl Iterator<Item = TileId> {
+        (0..self.num_tiles()).map(TileId)
+    }
+
+    /// XY dimension-order hop count == Manhattan distance on this grid.
+    #[inline]
+    pub fn hops(&self, a: TileId, b: TileId) -> u32 {
+        let ca = self.coord(a);
+        let cb = self.coord(b);
+        ca.x.abs_diff(cb.x) + ca.y.abs_diff(cb.y)
+    }
+
+    /// Nearest controller by mesh distance, id as the deterministic
+    /// tiebreak (non-striped page placement).
+    pub fn nearest_controller(&self, t: TileId) -> Controller {
+        *self
+            .controllers
+            .iter()
+            .min_by_key(|c| (self.hops(t, c.attach), c.id))
+            .expect("non-empty controller set")
+    }
+
+    /// Uncontended cycles for one cache-line access satisfied at `level`,
+    /// requested from `req` — the distance-dependent latency arithmetic,
+    /// on this machine's grid. (The tilepro64-pinned twin used by the AOT
+    /// latency model is `LatencyParams::access_cycles`.)
+    #[inline]
+    pub fn access_cycles(&self, req: TileId, level: super::params::HitLevel) -> u64 {
+        use super::params::HitLevel;
+        let p = &self.params;
+        match level {
+            HitLevel::L1 => p.l1_hit,
+            HitLevel::L2 => p.l2_hit,
+            HitLevel::Home { home } => {
+                p.l2_hit + p.noc_header + 2 * p.noc_hop * self.hops(req, home) as u64
+            }
+            HitLevel::Ddr { ctrl_attach } => {
+                p.ddr + p.noc_header + 2 * p.noc_hop * self.hops(req, ctrl_attach) as u64
+            }
+        }
+    }
+
+    /// Number of directional mesh-link servers: every tile has up to four
+    /// outgoing links (E/W/N/S); edge slots exist but never see traffic.
+    #[inline]
+    pub fn num_links(&self) -> usize {
+        4 * self.num_tiles() as usize
+    }
+
+    /// Dense index of the directed link leaving `from` towards `dir`.
+    #[inline]
+    pub fn link_index(&self, from: TileId, dir: Dir) -> usize {
+        dir.index() * self.num_tiles() as usize + from.index()
+    }
+
+    /// Human-readable link name, e.g. `E(3,1)` (for heatmaps/JSON).
+    pub fn link_label(&self, index: usize) -> String {
+        let n = self.num_tiles() as usize;
+        let dir = Dir::ALL[index / n];
+        let c = self.coord(TileId((index % n) as u32));
+        format!("{}({},{})", dir.letter(), c.x, c.y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::params::HitLevel;
+    use crate::arch::topology::{hops, nearest_controller};
+
+    #[test]
+    fn tilepro64_matches_seed_constants() {
+        let m = Machine::tilepro64();
+        assert_eq!((m.grid_w(), m.grid_h(), m.num_tiles()), (8, 8, 64));
+        assert_eq!(m.num_controllers(), 4);
+        assert_eq!(m.controllers(), &controllers()[..]);
+        // Topology answers agree with the compile-time helpers.
+        for a in m.tiles() {
+            assert_eq!(m.coord(a), a.coord());
+            assert_eq!(m.tile_at(m.coord(a)), a);
+            assert_eq!(m.nearest_controller(a), nearest_controller(a));
+            for b in [TileId(0), TileId(9), TileId(63)] {
+                assert_eq!(m.hops(a, b), hops(a, b));
+                assert_eq!(
+                    m.access_cycles(a, HitLevel::Home { home: b }),
+                    m.params.access_cycles(a, HitLevel::Home { home: b })
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn spec_parse_round_trips() {
+        for s in ["tilepro64", "epiphany16", "nuca256"] {
+            let spec = MachineSpec::parse(s).unwrap();
+            assert_eq!(spec.label(), s);
+            assert_eq!(spec.build().name(), s);
+        }
+        let spec = MachineSpec::parse("4x8:2").unwrap();
+        assert_eq!(spec, MachineSpec::Custom { w: 4, h: 8, ctrls: 2 });
+        assert_eq!(spec.label(), "4x8:2");
+        // Controller count defaults to min(4, 2*W).
+        assert_eq!(
+            MachineSpec::parse("2x3").unwrap(),
+            MachineSpec::Custom { w: 2, h: 3, ctrls: 4 }
+        );
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        let bad = [
+            "", "weird", "0x4", "4x0", "65x4", "4x4:0", "4x4:99", "4x", "x4", "axb", "4x1:5",
+        ];
+        for s in bad {
+            assert!(MachineSpec::parse(s).is_err(), "spec '{s}' should fail");
+        }
+    }
+
+    #[test]
+    fn single_row_grid_has_distinct_attach_points() {
+        // h == 1: one edge only — controllers must not stack on the same
+        // tile (that would double the modelled DRAM bandwidth there).
+        let m = Machine::custom(4, 1, 2).unwrap();
+        let attaches: std::collections::HashSet<_> =
+            m.controllers().iter().map(|c| c.attach).collect();
+        assert_eq!(attaches.len(), 2, "{:?}", m.controllers());
+        assert!(Machine::custom(4, 1, 4).is_ok());
+        assert!(Machine::custom(4, 1, 5).is_err(), "capacity is W on one row");
+        // Default controller count respects the single-edge capacity.
+        assert_eq!(
+            MachineSpec::parse("2x1").unwrap(),
+            MachineSpec::Custom { w: 2, h: 1, ctrls: 2 }
+        );
+    }
+
+    #[test]
+    fn custom_controllers_sit_on_edges() {
+        let m = Machine::custom(5, 7, 5).unwrap();
+        assert_eq!(m.num_controllers(), 5);
+        let mut ids: Vec<u32> = m.controllers().iter().map(|c| c.id).collect();
+        ids.dedup();
+        assert_eq!(ids.len(), 5, "controller ids must be distinct");
+        for c in m.controllers() {
+            let y = m.coord(c.attach).y;
+            assert!(y == 0 || y == m.grid_h() - 1, "{c:?} not on an edge row");
+            assert!(c.attach.0 < m.num_tiles());
+        }
+    }
+
+    #[test]
+    fn non_square_coords_round_trip() {
+        let m = Machine::custom(4, 8, 2).unwrap();
+        assert_eq!(m.num_tiles(), 32);
+        for t in m.tiles() {
+            assert_eq!(m.tile_at(m.coord(t)), t);
+        }
+        // Row-major: tile 5 of a 4-wide grid is (1, 1).
+        assert_eq!(m.coord(TileId(5)), Coord { x: 1, y: 1 });
+        assert_eq!(m.hops(TileId(0), TileId(31)), 3 + 7);
+    }
+
+    #[test]
+    fn epiphany16_has_one_east_link() {
+        let m = Machine::epiphany16();
+        assert_eq!((m.num_tiles(), m.num_controllers()), (16, 1));
+        let c = m.controllers()[0];
+        assert_eq!(m.coord(c.attach), Coord { x: 3, y: 1 });
+        // Every tile resolves to the single controller.
+        for t in m.tiles() {
+            assert_eq!(m.nearest_controller(t).id, 0);
+        }
+    }
+
+    #[test]
+    fn link_indices_are_dense_and_distinct() {
+        let m = Machine::custom(3, 2, 1).unwrap();
+        let mut seen = std::collections::HashSet::new();
+        for t in m.tiles() {
+            for dir in Dir::ALL {
+                let ix = m.link_index(t, dir);
+                assert!(ix < m.num_links());
+                assert!(seen.insert(ix), "duplicate link index {ix}");
+            }
+        }
+        assert_eq!(seen.len(), m.num_links());
+        assert_eq!(m.link_label(m.link_index(TileId(4), Dir::North)), "N(1,1)");
+    }
+}

@@ -1,11 +1,19 @@
-//! Architecture description of the simulated manycore: the 8×8 tile mesh,
-//! memory-controller placement, and the latency/capacity parameter set.
+//! Architecture description of the simulated manycore.
+//!
+//! [`Machine`] is the runtime machine description — grid dimensions,
+//! memory-controller placement, latency and cache-geometry parameters —
+//! that every simulation layer is parameterised by. [`topology`] holds the
+//! tile/coordinate primitives plus the TILEPro64 preset's constants (which
+//! survive only as that preset's values); [`params`] holds the latency and
+//! capacity parameter sets.
 
+pub mod machine;
 pub mod params;
 pub mod topology;
 
+pub use machine::{Machine, MachineError, MachineSpec};
 pub use params::{CacheGeometry, HitLevel, LatencyParams, CLOCK_HZ, LINE_BYTES, PAGE_BYTES};
 pub use topology::{
-    controllers, hops, nearest_controller, Controller, Coord, TileId, GRID_H, GRID_W,
+    controllers, hops, nearest_controller, Controller, Coord, Dir, TileId, GRID_H, GRID_W,
     NUM_CONTROLLERS, NUM_TILES,
 };

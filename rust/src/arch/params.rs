@@ -49,6 +49,10 @@ pub struct LatencyParams {
     pub home_service: u64,
     /// Memory-controller service occupancy per line.
     pub ctrl_service: u64,
+    /// Directional mesh-link occupancy per line-sized packet (bandwidth
+    /// term used by the link-contention model; an uncontended traversal is
+    /// already covered by `noc_hop` latency).
+    pub link_service: u64,
     /// OS cost of migrating a thread (save/restore, run-queue latency).
     pub migration_cost: u64,
     /// Per-element ALU cost for workload "compute" phases (e.g. one merge
@@ -69,12 +73,19 @@ impl LatencyParams {
         store_post: 6,
         home_service: 2,
         ctrl_service: 4,
+        // One 64 B line ≈ four 16 B flit beats on the TILEPro-class mesh;
+        // links are wider than a home port is deep, so per-link occupancy
+        // sits between hop latency and home service.
+        link_service: 1,
         migration_cost: 30_000,
         compute_per_elem: 1,
     };
 
     /// Uncontended cycles for one cache-line access satisfied at `level`,
-    /// requested from `req`. Matches `latency_model` in the L2 model.
+    /// requested from `req`, with hop counts taken on the TILEPro64
+    /// preset's 8×8 grid. Matches `latency_model` in the L2 model (which
+    /// is AOT-compiled for that grid); the engine uses the runtime-grid
+    /// twin [`Machine::access_cycles`](crate::arch::Machine::access_cycles).
     #[inline]
     pub fn access_cycles(&self, req: TileId, level: HitLevel) -> u64 {
         match level {

@@ -1,15 +1,23 @@
-//! Chip topology: the 8×8 tile grid, XY mesh routing, and memory-controller
-//! placement of the simulated TILEPro64.
+//! Tile/coordinate primitives shared by every machine, plus the TILEPro64
+//! preset's grid constants and helpers.
+//!
+//! Simulation code sizes everything off the runtime
+//! [`Machine`](crate::arch::Machine) description; the constants and the
+//! free helpers below (`TileId::coord`, `hops`, `controllers`,
+//! `nearest_controller`) are pinned to the TILEPro64 preset's 8×8 grid and
+//! survive only as that preset's values — used by `arch` itself, by the
+//! AOT'd analytical latency model (compiled for the TILEPro64), and by
+//! tests.
 
-/// Mesh width (tiles per row).
+/// TILEPro64 preset: mesh width (tiles per row).
 pub const GRID_W: u32 = 8;
-/// Mesh height (rows).
+/// TILEPro64 preset: mesh height (rows).
 pub const GRID_H: u32 = 8;
-/// Total tiles. Tile Linux reserves one tile for itself, so user code gets
-/// at most `NUM_TILES - 1 = 63` worker threads — the paper's "maximum
-/// numbers of cores available".
+/// TILEPro64 preset: total tiles. Tile Linux reserves one tile for itself,
+/// so user code gets at most `NUM_TILES - 1 = 63` worker threads — the
+/// paper's "maximum numbers of cores available".
 pub const NUM_TILES: u32 = GRID_W * GRID_H;
-/// Number of DDR memory controllers (TILEPro64 has 4).
+/// TILEPro64 preset: number of DDR memory controllers.
 pub const NUM_CONTROLLERS: u32 = 4;
 
 /// A tile (core) id in row-major order: `id = y * GRID_W + x`.
@@ -23,7 +31,43 @@ pub struct Coord {
     pub y: u32,
 }
 
+/// A directed mesh-link direction. Each tile owns up to four outgoing
+/// links; `Machine::link_index` densely numbers them for the contention
+/// model's per-link servers.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum Dir {
+    East,
+    West,
+    North,
+    South,
+}
+
+impl Dir {
+    pub const ALL: [Dir; 4] = [Dir::East, Dir::West, Dir::North, Dir::South];
+
+    #[inline]
+    pub fn index(self) -> usize {
+        match self {
+            Dir::East => 0,
+            Dir::West => 1,
+            Dir::North => 2,
+            Dir::South => 3,
+        }
+    }
+
+    pub fn letter(self) -> char {
+        match self {
+            Dir::East => 'E',
+            Dir::West => 'W',
+            Dir::North => 'N',
+            Dir::South => 'S',
+        }
+    }
+}
+
 impl TileId {
+    /// Coordinates on the TILEPro64 preset's 8×8 grid. Machine-aware code
+    /// must use [`Machine::coord`](crate::arch::Machine::coord) instead.
     #[inline]
     pub fn coord(self) -> Coord {
         Coord {
@@ -48,9 +92,10 @@ impl TileId {
     }
 }
 
-/// XY dimension-order routing hop count == Manhattan distance. This is what
-/// both the event simulator and the AOT'd latency model (L2) use, so they
-/// agree by construction.
+/// XY dimension-order routing hop count == Manhattan distance, on the
+/// TILEPro64 preset's grid (the AOT'd latency model is compiled against
+/// this 8×8 layout). Machine-aware code uses `Machine::hops`, which agrees
+/// with this for the default machine by construction.
 #[inline]
 pub fn hops(a: TileId, b: TileId) -> u32 {
     let ca = a.coord();

@@ -3,19 +3,32 @@
 //! DDC serves coherence through the home tile: it tracks which tiles hold a
 //! copy of each line and, on a write, invalidates every other sharer (paper
 //! §2: "If another tile writes new data to the cache line, the home tile is
-//! responsible to invalidate all copies"). Sharer sets are 64-bit masks —
-//! one bit per tile — so the whole directory is a hash map of u64s.
+//! responsible to invalidate all copies"). Sharer sets are bitmasks sized
+//! by the machine's tile count — one 64-bit word per line on grids up to 64
+//! tiles (the tilepro64/epiphany16 fast path), `ceil(tiles/64)` words on
+//! larger grids like the 16×16 nuca256.
 
-use crate::arch::{hops, TileId};
+use std::sync::Arc;
+
+use crate::arch::{Machine, TileId};
 use crate::mem::LineId;
 
 /// Sharer masks stored in a dense vector indexed by line id: the allocator
 /// bump-allocates a compact address space, and the workloads stream
 /// sequentially, so adjacent entries share (host) cache lines — an order of
 /// magnitude faster than any hash map on the per-line-event hot path.
-#[derive(Default)]
 pub struct Directory {
+    machine: Arc<Machine>,
+    /// 64-bit words per line (= `ceil(num_tiles / 64)`, at least 1).
+    words: usize,
     sharers: Vec<u64>,
+    /// Other-sharer mask of the most recent multi-word
+    /// [`write_claim`](Self::write_claim) — see that method's contract.
+    scratch: Vec<u64>,
+    /// Debug guard for the scratch contract: set by a multi-word
+    /// `write_claim` that found other sharers, consumed by `fanout`.
+    #[cfg(debug_assertions)]
+    scratch_armed: bool,
     tracked: usize,
     pub invalidations_sent: u64,
 }
@@ -30,33 +43,44 @@ pub struct InvalidationFanout {
 }
 
 impl Directory {
-    pub fn new() -> Self {
-        Self::default()
-    }
-
-    #[inline]
-    fn slot_mut(&mut self, line: LineId) -> &mut u64 {
-        let ix = line.0 as usize;
-        if ix >= self.sharers.len() {
-            self.sharers.resize(ix + 1, 0);
+    pub fn new(machine: Arc<Machine>) -> Self {
+        let words = (machine.num_tiles() as usize).div_ceil(64).max(1);
+        Directory {
+            machine,
+            words,
+            sharers: Vec::new(),
+            scratch: vec![0; words],
+            #[cfg(debug_assertions)]
+            scratch_armed: false,
+            tracked: 0,
+            invalidations_sent: 0,
         }
-        &mut self.sharers[ix]
     }
 
     #[inline]
-    fn mask_of(&self, line: LineId) -> u64 {
-        self.sharers.get(line.0 as usize).copied().unwrap_or(0)
+    fn slot_mut(&mut self, line: LineId) -> &mut [u64] {
+        let base = line.0 as usize * self.words;
+        if base + self.words > self.sharers.len() {
+            self.sharers.resize(base + self.words, 0);
+        }
+        &mut self.sharers[base..base + self.words]
+    }
+
+    #[inline]
+    fn slot(&self, line: LineId) -> &[u64] {
+        let base = line.0 as usize * self.words;
+        self.sharers
+            .get(base..base + self.words)
+            .unwrap_or(&[])
     }
 
     /// Record that `tile` now caches `line`.
     #[inline]
     pub fn add_sharer(&mut self, line: LineId, tile: TileId) {
-        let was_zero = {
-            let slot = self.slot_mut(line);
-            let w = *slot == 0;
-            *slot |= 1u64 << tile.index();
-            w
-        };
+        let (word, bit) = (tile.index() / 64, tile.index() % 64);
+        let slot = self.slot_mut(line);
+        let was_zero = slot.iter().all(|&w| w == 0);
+        slot[word] |= 1u64 << bit;
         if was_zero {
             self.tracked += 1;
         }
@@ -64,45 +88,89 @@ impl Directory {
 
     /// Remove one sharer (e.g. on eviction notification or purge).
     pub fn remove_sharer(&mut self, line: LineId, tile: TileId) {
-        if let Some(mask) = self.sharers.get_mut(line.0 as usize) {
-            let was = *mask;
-            *mask &= !(1u64 << tile.index());
-            if was != 0 && *mask == 0 {
-                self.tracked -= 1;
-            }
+        let base = line.0 as usize * self.words;
+        if base + self.words > self.sharers.len() {
+            return;
+        }
+        let slot = &mut self.sharers[base..base + self.words];
+        let had_any = slot.iter().any(|&w| w != 0);
+        slot[tile.index() / 64] &= !(1u64 << (tile.index() % 64));
+        if had_any && slot.iter().all(|&w| w == 0) {
+            self.tracked -= 1;
         }
     }
 
     pub fn sharers_of(&self, line: LineId) -> Vec<TileId> {
-        let mask = self.mask_of(line);
-        (0..64)
-            .filter(|&i| mask & (1u64 << i) != 0)
-            .map(|i| TileId(i as u32))
-            .collect()
+        let slot = self.slot(line);
+        let mut out = Vec::new();
+        for (wi, &mask) in slot.iter().enumerate() {
+            let mut m = mask;
+            while m != 0 {
+                let i = m.trailing_zeros();
+                m &= m - 1;
+                out.push(TileId((wi * 64) as u32 + i));
+            }
+        }
+        out
     }
 
     pub fn sharer_count(&self, line: LineId) -> u32 {
-        self.mask_of(line).count_ones()
+        self.slot(line).iter().map(|w| w.count_ones()).sum()
     }
 
     /// Fast-path write claim: make `writer` the sole sharer of `line` and
-    /// return the mask of *other* previous sharers (0 in the common
-    /// private-stream case — no fan-out, no allocation). The page-run bulk
-    /// path calls this per line and only expands the fan-out when needed.
+    /// return a non-zero value iff there were *other* previous sharers (0
+    /// in the common private-stream case — no fan-out, no allocation). On
+    /// single-word machines the return value *is* the other-sharer mask;
+    /// on multi-word machines the full mask is parked in `self.scratch`
+    /// and the return value is the OR of its words, so callers must expand
+    /// it with [`fanout`](Self::fanout) before the next `write_claim` (the
+    /// cache hierarchy calls them back to back per line).
     #[inline]
     pub fn write_claim(&mut self, line: LineId, writer: TileId) -> u64 {
-        let writer_bit = 1u64 << writer.index();
-        let slot = self.slot_mut(line);
-        let mask = *slot;
-        *slot = writer_bit;
-        if mask == 0 {
+        let writer_word = writer.index() / 64;
+        let writer_bit = 1u64 << (writer.index() % 64);
+        if self.words == 1 {
+            let slot = self.slot_mut(line);
+            let mask = slot[0];
+            slot[0] = writer_bit;
+            if mask == 0 {
+                self.tracked += 1;
+            }
+            return mask & !writer_bit;
+        }
+        let words = self.words;
+        let base = line.0 as usize * words;
+        if base + words > self.sharers.len() {
+            self.sharers.resize(base + words, 0);
+        }
+        let mut others = 0u64;
+        let mut was_zero = true;
+        for w in 0..words {
+            let mask = self.sharers[base + w];
+            was_zero &= mask == 0;
+            let other = if w == writer_word { mask & !writer_bit } else { mask };
+            self.scratch[w] = other;
+            others |= other;
+            self.sharers[base + w] = if w == writer_word { writer_bit } else { 0 };
+        }
+        if was_zero {
             self.tracked += 1;
         }
-        mask & !writer_bit
+        #[cfg(debug_assertions)]
+        {
+            debug_assert!(
+                !self.scratch_armed,
+                "previous write_claim's other-sharer mask was never expanded by fanout"
+            );
+            self.scratch_armed = others != 0;
+        }
+        others
     }
 
-    /// Expand an other-sharer mask (from [`write_claim`](Self::write_claim))
-    /// into the invalidation fan-out and account it.
+    /// Expand an other-sharer summary (from [`write_claim`](Self::write_claim))
+    /// into the invalidation fan-out and account it. Hop distances use the
+    /// machine's grid.
     pub fn fanout(&mut self, others: u64, home: TileId) -> InvalidationFanout {
         if others == 0 {
             return InvalidationFanout {
@@ -110,15 +178,28 @@ impl Directory {
                 max_hops_from_home: 0,
             };
         }
-        let mut victims = Vec::with_capacity(others.count_ones() as usize);
         let mut max_h = 0;
-        let mut m = others;
-        while m != 0 {
-            let i = m.trailing_zeros();
-            m &= m - 1;
-            let t = TileId(i);
-            max_h = max_h.max(hops(home, t));
-            victims.push(t);
+        let single = [others];
+        #[cfg(debug_assertions)]
+        if self.words > 1 {
+            debug_assert!(
+                self.scratch_armed,
+                "fanout must follow the write_claim whose mask it expands"
+            );
+            self.scratch_armed = false;
+        }
+        let masks: &[u64] = if self.words == 1 { &single } else { &self.scratch };
+        let mut victims =
+            Vec::with_capacity(masks.iter().map(|m| m.count_ones() as usize).sum());
+        for (wi, &mask) in masks.iter().enumerate() {
+            let mut m = mask;
+            while m != 0 {
+                let i = m.trailing_zeros();
+                m &= m - 1;
+                let t = TileId((wi * 64) as u32 + i);
+                max_h = max_h.max(self.machine.hops(home, t));
+                victims.push(t);
+            }
         }
         self.invalidations_sent += victims.len() as u64;
         InvalidationFanout {
@@ -141,12 +222,14 @@ impl Directory {
 
     /// Drop all directory state for lines in `[first, last]` (region free).
     pub fn purge_line_range(&mut self, first: LineId, last: LineId) {
-        let lo = first.0 as usize;
-        let hi = (last.0 as usize + 1).min(self.sharers.len());
-        for slot in self.sharers.get_mut(lo..hi).unwrap_or(&mut []) {
-            if *slot != 0 {
+        let max_line = self.sharers.len() / self.words;
+        let lo = (first.0 as usize).min(max_line);
+        let hi = (last.0 as usize + 1).min(max_line);
+        for line in lo..hi {
+            let slot = &mut self.sharers[line * self.words..(line + 1) * self.words];
+            if slot.iter().any(|&w| w != 0) {
                 self.tracked -= 1;
-                *slot = 0;
+                slot.fill(0);
             }
         }
     }
@@ -160,9 +243,18 @@ impl Directory {
 mod tests {
     use super::*;
 
+    fn dir() -> Directory {
+        Directory::new(Arc::new(Machine::tilepro64()))
+    }
+
+    /// 16×16 grid: 256 tiles, 4 words per sharer set.
+    fn dir256() -> Directory {
+        Directory::new(Arc::new(Machine::nuca256()))
+    }
+
     #[test]
     fn add_and_list_sharers() {
-        let mut d = Directory::new();
+        let mut d = dir();
         d.add_sharer(LineId(1), TileId(0));
         d.add_sharer(LineId(1), TileId(63));
         assert_eq!(d.sharers_of(LineId(1)), vec![TileId(0), TileId(63)]);
@@ -171,7 +263,7 @@ mod tests {
 
     #[test]
     fn add_is_idempotent() {
-        let mut d = Directory::new();
+        let mut d = dir();
         d.add_sharer(LineId(1), TileId(5));
         d.add_sharer(LineId(1), TileId(5));
         assert_eq!(d.sharer_count(LineId(1)), 1);
@@ -179,7 +271,7 @@ mod tests {
 
     #[test]
     fn write_invalidates_others_keeps_writer() {
-        let mut d = Directory::new();
+        let mut d = dir();
         for t in [0u32, 7, 12] {
             d.add_sharer(LineId(9), TileId(t));
         }
@@ -191,7 +283,7 @@ mod tests {
 
     #[test]
     fn write_with_no_sharers_is_free() {
-        let mut d = Directory::new();
+        let mut d = dir();
         let f = d.write_invalidate(LineId(1), TileId(0), TileId(3));
         assert!(f.victims.is_empty());
         assert_eq!(f.max_hops_from_home, 0);
@@ -200,7 +292,7 @@ mod tests {
 
     #[test]
     fn fanout_hops_is_max_distance() {
-        let mut d = Directory::new();
+        let mut d = dir();
         d.add_sharer(LineId(2), TileId(0)); // corner (0,0)
         d.add_sharer(LineId(2), TileId(63)); // corner (7,7): 14 hops from 0
         let f = d.write_invalidate(LineId(2), TileId(0), TileId(1));
@@ -209,7 +301,7 @@ mod tests {
 
     #[test]
     fn remove_sharer_cleans_up() {
-        let mut d = Directory::new();
+        let mut d = dir();
         d.add_sharer(LineId(3), TileId(1));
         d.remove_sharer(LineId(3), TileId(1));
         assert_eq!(d.tracked_lines(), 0);
@@ -217,11 +309,49 @@ mod tests {
 
     #[test]
     fn purge_range_drops_state() {
-        let mut d = Directory::new();
+        let mut d = dir();
         d.add_sharer(LineId(10), TileId(1));
         d.add_sharer(LineId(20), TileId(1));
         d.purge_line_range(LineId(0), LineId(15));
         assert_eq!(d.sharer_count(LineId(10)), 0);
         assert_eq!(d.sharer_count(LineId(20)), 1);
+    }
+
+    #[test]
+    fn multiword_sharers_cross_word_boundaries() {
+        let mut d = dir256();
+        for t in [0u32, 63, 64, 127, 128, 255] {
+            d.add_sharer(LineId(5), TileId(t));
+        }
+        assert_eq!(d.sharer_count(LineId(5)), 6);
+        assert_eq!(
+            d.sharers_of(LineId(5)),
+            [0u32, 63, 64, 127, 128, 255].map(TileId).to_vec()
+        );
+        assert_eq!(d.tracked_lines(), 1);
+    }
+
+    #[test]
+    fn multiword_write_invalidates_high_tiles() {
+        let mut d = dir256();
+        d.add_sharer(LineId(9), TileId(70));
+        d.add_sharer(LineId(9), TileId(255));
+        let f = d.write_invalidate(LineId(9), TileId(0), TileId(70));
+        assert_eq!(f.victims, vec![TileId(255)]);
+        assert_eq!(d.sharers_of(LineId(9)), vec![TileId(70)]);
+        // (0,0) -> (15,15) on a 16-wide grid = 30 hops.
+        assert_eq!(f.max_hops_from_home, 30);
+    }
+
+    #[test]
+    fn multiword_remove_and_purge() {
+        let mut d = dir256();
+        d.add_sharer(LineId(1), TileId(200));
+        d.remove_sharer(LineId(1), TileId(200));
+        assert_eq!(d.tracked_lines(), 0);
+        d.add_sharer(LineId(2), TileId(129));
+        d.purge_line_range(LineId(0), LineId(4));
+        assert_eq!(d.sharer_count(LineId(2)), 0);
+        assert_eq!(d.tracked_lines(), 0);
     }
 }

@@ -14,7 +14,9 @@
 //! localisation matters: re-homing data on the tile that uses it turns both
 //! loads and stores into local L2 traffic.
 
-use crate::arch::{CacheGeometry, TileId, NUM_TILES};
+use std::sync::Arc;
+
+use crate::arch::{CacheGeometry, Machine, TileId};
 use crate::cache::directory::Directory;
 use crate::cache::set_assoc::SetAssoc;
 use crate::mem::LineId;
@@ -64,17 +66,21 @@ pub struct WriteOutcome {
     pub invalidation_hops: u32,
 }
 
-/// All 64 tiles' caches plus the coherence directory.
+/// Every tile's caches plus the coherence directory, sized off the
+/// machine description.
 pub struct CacheSystem {
     tiles: Vec<TileCaches>,
     pub directory: Directory,
 }
 
 impl CacheSystem {
-    pub fn new(geom: &CacheGeometry) -> Self {
+    pub fn new(machine: Arc<Machine>) -> Self {
+        let geom = machine.geometry;
         CacheSystem {
-            tiles: (0..NUM_TILES).map(|_| TileCaches::new(geom)).collect(),
-            directory: Directory::new(),
+            tiles: (0..machine.num_tiles())
+                .map(|_| TileCaches::new(&geom))
+                .collect(),
+            directory: Directory::new(machine),
         }
     }
 
@@ -279,10 +285,9 @@ impl CacheSystem {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::arch::CacheGeometry;
 
     fn sys() -> CacheSystem {
-        CacheSystem::new(&CacheGeometry::TILEPRO64)
+        CacheSystem::new(Arc::new(Machine::tilepro64()))
     }
 
     #[test]

@@ -14,6 +14,7 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
+use crate::arch::MachineSpec;
 use crate::coordinator::cases::case;
 use crate::harness::SweepTable;
 use crate::sim::{Engine, RunStats};
@@ -55,11 +56,19 @@ pub struct RunSpec {
     pub striping: bool,
     /// Fig. 4's cache-off ablation.
     pub caches: bool,
+    /// Which chip the run simulates. The default (tilepro64) replays the
+    /// seed's figure record byte-identically.
+    pub machine: MachineSpec,
+    /// Model per-link mesh queueing. Off in the paper-baseline figure
+    /// specs (the published record predates the link model); on for
+    /// machine sweeps unless `--no-link-contention`.
+    pub link_contention: bool,
     pub seed: u64,
 }
 
 impl RunSpec {
-    /// Convenience: merge sort for `case_id` with the case's own variant.
+    /// Convenience: merge sort for `case_id` with the case's own variant,
+    /// on the paper-baseline tilepro64.
     pub fn mergesort(case_id: u8, elems: u64, threads: usize, seed: u64) -> RunSpec {
         RunSpec {
             case_id,
@@ -70,19 +79,44 @@ impl RunSpec {
             threads,
             striping: true,
             caches: true,
+            machine: MachineSpec::TilePro64,
+            link_contention: false,
             seed,
         }
     }
 
+    /// Whether this run deviates from the paper-baseline machine model
+    /// (non-tilepro64 grid and/or link contention on).
+    fn non_baseline_machine(&self) -> bool {
+        self.machine != MachineSpec::TilePro64 || self.link_contention
+    }
+
+    /// CLI-time guard for the engine's thread-capacity assert: a run must
+    /// not ask for more than 4 threads per tile of its machine. Returning
+    /// an `Err` here beats a panic inside a pool worker.
+    pub fn check_thread_capacity(&self) -> Result<(), String> {
+        check_thread_capacity(self.threads, self.machine)
+    }
+
     pub fn label(&self) -> String {
+        let machine = if self.non_baseline_machine() {
+            format!(
+                " on {}{}",
+                self.machine.label(),
+                if self.link_contention { "" } else { " nolinks" }
+            )
+        } else {
+            String::new()
+        };
         format!(
-            "case{} {} n={} t={}{}{} s={}",
+            "case{} {} n={} t={}{}{}{} s={}",
             self.case_id,
             self.workload.label(),
             self.elems,
             self.threads,
             if self.striping { "" } else { " nostripe" },
             if self.caches { "" } else { " nocache" },
+            machine,
             self.seed
         )
     }
@@ -90,7 +124,8 @@ impl RunSpec {
     /// Build and replay this run on a fresh engine.
     pub fn execute(&self) -> RunStats {
         let c = case(self.case_id);
-        let mut cfg = c.engine_config(self.striping);
+        let machine = self.machine.build_arc();
+        let mut cfg = c.engine_config_on(machine.clone(), self.striping, self.link_contention);
         if !self.caches {
             cfg = cfg.without_caches();
         }
@@ -123,14 +158,14 @@ impl RunSpec {
                 },
             ),
         };
-        let mut sched = c.mapper.scheduler(self.seed);
+        let mut sched = c.mapper.scheduler_on(self.seed, &machine);
         engine
             .run(&mut program, sched.as_mut())
             .expect("batch run failed")
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("case", Json::num(self.case_id as f64)),
             ("workload", Json::str(self.workload.label())),
             ("elems", Json::num(self.elems as f64)),
@@ -140,7 +175,14 @@ impl RunSpec {
             // Seeds are full-range u64 (derive_seeds): a JSON double would
             // round them and break replay-from-record, so emit as a string.
             ("seed", Json::str(self.seed.to_string())),
-        ])
+        ];
+        // Machine fields only for non-baseline runs: the pinned tilepro64
+        // figure record keeps its pre-machine-layer JSON bytes.
+        if self.non_baseline_machine() {
+            fields.push(("machine", Json::str(self.machine.label())));
+            fields.push(("link_contention", Json::Bool(self.link_contention)));
+        }
+        Json::obj(fields)
     }
 }
 
@@ -247,6 +289,8 @@ impl SweepSpec {
                                 threads: t,
                                 striping: true,
                                 caches: true,
+                                machine: MachineSpec::TilePro64,
+                                link_contention: false,
                                 seed: s,
                             });
                         }
@@ -264,6 +308,45 @@ impl SweepSpec {
             metric: Metric::Seconds,
         }
     }
+
+    /// CLI-time guard: every run (baseline included) must fit its
+    /// machine's thread capacity — see [`RunSpec::check_thread_capacity`].
+    pub fn check_thread_capacity(&self) -> Result<(), String> {
+        for r in self.runs.iter().chain(self.baseline.iter()) {
+            r.check_thread_capacity()?;
+        }
+        Ok(())
+    }
+
+    /// Re-target every run of the sweep (baseline included) at `machine`,
+    /// with link contention as requested — how `--machine` re-aims the
+    /// figure specs at a different chip.
+    pub fn on_machine(mut self, machine: MachineSpec, link_contention: bool) -> SweepSpec {
+        for r in self.runs.iter_mut().chain(self.baseline.iter_mut()) {
+            r.machine = machine;
+            r.link_contention = link_contention;
+        }
+        if machine != MachineSpec::TilePro64 || link_contention {
+            self.title = format!("{} [machine {}]", self.title, machine.label());
+        }
+        self
+    }
+}
+
+/// The engine accepts at most 4 threads per tile; check it at the CLI
+/// instead of panicking inside a pool worker (shared by every subcommand
+/// that takes `--machine`, including ones without a `RunSpec`).
+pub fn check_thread_capacity(threads: usize, machine: MachineSpec) -> Result<(), String> {
+    let tiles = machine.build().num_tiles();
+    if threads > 4 * tiles as usize {
+        return Err(format!(
+            "{} threads exceed 4x the {} machine's {} tiles",
+            threads,
+            machine.label(),
+            tiles
+        ));
+    }
+    Ok(())
 }
 
 /// Per-run deterministic seeds derived from a base seed via `util::rng` —
@@ -502,5 +585,48 @@ mod tests {
         let mut spec = tiny_spec();
         spec.runs.pop();
         BatchRunner::new(1).run(&spec);
+    }
+
+    #[test]
+    fn baseline_spec_json_has_no_machine_fields() {
+        // The pinned figure record must keep its pre-machine-layer bytes.
+        let spec = RunSpec::mergesort(8, 1 << 12, 4, 42);
+        let j = spec.to_json();
+        assert!(j.get("machine").is_none());
+        assert!(j.get("link_contention").is_none());
+        let mut on = spec.clone();
+        on.machine = MachineSpec::Epiphany16;
+        on.link_contention = true;
+        let j = on.to_json();
+        assert_eq!(j.get("machine").unwrap().encode(), "\"epiphany16\"");
+        assert!(on.label().contains("on epiphany16"));
+    }
+
+    #[test]
+    fn machine_changes_the_simulation() {
+        let base = RunSpec::mergesort(8, 1 << 12, 4, 42);
+        let mut eph = base.clone();
+        eph.machine = MachineSpec::Epiphany16;
+        let mut big = base.clone();
+        big.machine = MachineSpec::Nuca256;
+        let (a, b, c) = (base.execute(), eph.execute(), big.execute());
+        assert_ne!(
+            a.makespan_cycles, b.makespan_cycles,
+            "epiphany16 must simulate differently from tilepro64"
+        );
+        assert_ne!(a.makespan_cycles, c.makespan_cycles);
+        assert_eq!(b.tile_home_requests.len(), 16);
+        assert_eq!(c.tile_home_requests.len(), 256);
+    }
+
+    #[test]
+    fn on_machine_retargets_baseline_too() {
+        let spec = crate::coordinator::experiment::table1_spec(1 << 12, 4, 7)
+            .on_machine(MachineSpec::Nuca256, true);
+        assert!(spec.runs.iter().all(|r| r.machine == MachineSpec::Nuca256));
+        let b = spec.baseline.as_ref().expect("table1 has a baseline");
+        assert_eq!(b.machine, MachineSpec::Nuca256);
+        assert!(b.link_contention);
+        assert!(spec.title.contains("[machine nuca256]"));
     }
 }

@@ -4,6 +4,9 @@
 //! towards the completely localised technique by changing one parameter at
 //! a time": programming style × mapper × hash policy.
 
+use std::sync::Arc;
+
+use crate::arch::Machine;
 use crate::mem::{HashPolicy, MemConfig};
 use crate::sched::{Scheduler, StaticMapper, TileLinuxScheduler};
 use crate::sim::EngineConfig;
@@ -23,11 +26,20 @@ impl MapperKind {
         }
     }
 
-    /// Instantiate the scheduler (Tile Linux is seeded for replayability).
+    /// Instantiate the scheduler for the default TILEPro64 machine (Tile
+    /// Linux is seeded for replayability).
     pub fn scheduler(self, seed: u64) -> Box<dyn Scheduler> {
         match self {
             MapperKind::TileLinux => Box::new(TileLinuxScheduler::with_seed(seed)),
             MapperKind::Static => Box::new(StaticMapper::new()),
+        }
+    }
+
+    /// Instantiate the scheduler spreading over `machine`'s tiles.
+    pub fn scheduler_on(self, seed: u64, machine: &Machine) -> Box<dyn Scheduler> {
+        match self {
+            MapperKind::TileLinux => Box::new(TileLinuxScheduler::with_seed_on(seed, machine)),
+            MapperKind::Static => Box::new(StaticMapper::for_machine(machine)),
         }
     }
 }
@@ -69,12 +81,33 @@ impl CaseSpec {
         }
     }
 
-    /// Engine configuration for this case (striping per Fig. 2: enabled).
+    /// Engine configuration for this case on the paper-baseline TILEPro64
+    /// (striping per Fig. 2: enabled; link contention off — see
+    /// [`EngineConfig::tilepro64`]).
     pub fn engine_config(&self, striping: bool) -> EngineConfig {
         EngineConfig::tilepro64(MemConfig {
             hash_policy: self.hash,
             striping,
         })
+    }
+
+    /// Engine configuration for this case on an arbitrary machine, with
+    /// link contention as requested.
+    pub fn engine_config_on(
+        &self,
+        machine: Arc<Machine>,
+        striping: bool,
+        link_contention: bool,
+    ) -> EngineConfig {
+        let mut cfg = EngineConfig::for_machine(
+            machine,
+            MemConfig {
+                hash_policy: self.hash,
+                striping,
+            },
+        );
+        cfg.contention.links = link_contention;
+        cfg
     }
 }
 

@@ -9,33 +9,16 @@
 //!
 //! [`batch`]: crate::coordinator::batch
 
+use crate::arch::MachineSpec;
 use crate::coordinator::batch::{BatchRunner, Metric, RunSpec, SweepSpec, Workload};
 use crate::coordinator::cases::{table1, CaseSpec};
 use crate::harness::SweepTable;
 use crate::mem::HashPolicy;
 use crate::sim::{Engine, RunStats};
-use crate::workloads::{mergesort, microbench};
+use crate::workloads::mergesort;
 
 /// Default seed for Tile Linux scheduling in experiments.
 pub const DEFAULT_SEED: u64 = 2014;
-
-/// Run the micro-benchmark for one configuration.
-pub fn run_microbench(case: &CaseSpec, elems: u64, threads: usize, reps: u32, seed: u64) -> RunStats {
-    let mut engine = Engine::new(case.engine_config(true));
-    let mut program = microbench::build(
-        &mut engine,
-        &microbench::MicrobenchConfig {
-            elems,
-            threads,
-            reps,
-            localised: case.localised,
-        },
-    );
-    let mut sched = case.mapper.scheduler(seed);
-    engine
-        .run(&mut program, sched.as_mut())
-        .expect("microbench run failed")
-}
 
 /// Run merge sort for one configuration.
 pub fn run_mergesort(
@@ -87,6 +70,8 @@ pub fn fig1_spec(elems: u64, threads: usize, reps_sweep: &[u32], seed: u64) -> S
         threads,
         striping: true,
         caches: true,
+        machine: MachineSpec::TilePro64,
+        link_contention: false,
         seed,
     };
     let mut runs = Vec::new();
@@ -282,10 +267,85 @@ pub fn fig4_cache_off(elems: u64, thread_sweep: &[usize], seed: u64) -> SweepTab
     BatchRunner::auto().table(&fig4_cache_off_spec(elems, thread_sweep, seed))
 }
 
+// ---------------------------------------------------------------------------
+// Grid scaling — same workload on growing NUCA grids (machine layer)
+// ---------------------------------------------------------------------------
+
+/// Default machine ladder for the grid-scaling sweep: 4×4 → 8×8 → 16×16.
+pub fn grid_scaling_machines() -> Vec<MachineSpec> {
+    vec![
+        MachineSpec::Custom { w: 4, h: 4, ctrls: 2 },
+        MachineSpec::TilePro64,
+        MachineSpec::Nuca256,
+    ]
+}
+
+/// Fig.5-style sweep enabled by the machine-description layer: the same
+/// merge sort at every grid size, with the full contention model including
+/// per-link mesh queueing. One row per machine; series are case 3
+/// (non-localised, hash-for-home — traffic spread but all remote), case 4
+/// (non-localised, single-home — the hot-region disaster), and case 8
+/// (localised — traffic stays on-tile). On the 16×16 grid the
+/// non-localised cases queue on mesh links (`link_queue_cycles` in the
+/// JSON record) while the localised case stays near zero.
+pub fn grid_scaling_spec(
+    elems: u64,
+    threads: usize,
+    machines: &[MachineSpec],
+    seed: u64,
+    link_contention: bool,
+) -> SweepSpec {
+    let mut runs = Vec::new();
+    let mut row_labels = Vec::new();
+    for &m in machines {
+        row_labels.push(m.label());
+        for case_id in [3u8, 4, 8] {
+            let mut r = RunSpec::mergesort(case_id, elems, threads, seed);
+            r.machine = m;
+            r.link_contention = link_contention;
+            runs.push(r);
+        }
+    }
+    SweepSpec {
+        title: format!(
+            "Grid scaling: merge sort of {elems} ints, {threads} threads across NUCA grids \
+             (exec time, s{})",
+            if link_contention { ", link contention on" } else { ", links off" }
+        ),
+        x_label: "machine".into(),
+        series: vec![
+            "case3 hash".into(),
+            "case4 one-home".into(),
+            "case8 localised".into(),
+        ],
+        row_labels,
+        runs,
+        baseline: None,
+        metric: Metric::Seconds,
+    }
+}
+
+pub fn grid_scaling(
+    elems: u64,
+    threads: usize,
+    machines: &[MachineSpec],
+    seed: u64,
+    link_contention: bool,
+) -> SweepTable {
+    BatchRunner::auto().table(&grid_scaling_spec(elems, threads, machines, seed, link_contention))
+}
+
 /// §2's three homing classes head-to-head on the repeated-scan kernel:
 /// local homing (first touch by the worker), remote homing (one fixed
-/// other tile), and hash-for-home — plus the localised fix.
-pub fn homing_classes(elems: u64, threads: usize, passes: u32) -> SweepTable {
+/// other tile — the machine's far corner), and hash-for-home — plus the
+/// localised fix. Runs on any machine; `link_contention` per the CLI.
+pub fn homing_classes(
+    elems: u64,
+    threads: usize,
+    passes: u32,
+    machine: MachineSpec,
+    link_contention: bool,
+) -> SweepTable {
     use crate::coordinator::localise::{build_program, LocaliseConfig, ELEM_BYTES};
     use crate::mem::{AllocKind, Homing, Placement};
     use crate::sim::{Loc, TraceBuilder};
@@ -301,11 +361,18 @@ pub fn homing_classes(elems: u64, threads: usize, passes: u32) -> SweepTable {
         }
     }
 
+    let m = machine.build_arc();
+    let far_tile = crate::arch::TileId(m.num_tiles() - 1);
     let run = |homing: Homing, localised: bool| {
-        let mut e = Engine::new(crate::sim::EngineConfig::tilepro64(crate::mem::MemConfig {
-            hash_policy: HashPolicy::None,
-            striping: true,
-        }));
+        let mut cfg = crate::sim::EngineConfig::for_machine(
+            m.clone(),
+            crate::mem::MemConfig {
+                hash_policy: HashPolicy::None,
+                striping: true,
+            },
+        );
+        cfg.contention.links = link_contention;
+        let mut e = Engine::new(cfg);
         let input = e
             .alloc
             .alloc_with(
@@ -322,19 +389,22 @@ pub fn homing_classes(elems: u64, threads: usize, passes: u32) -> SweepTable {
             &LocaliseConfig { threads, localised },
             Rc::new(Scan(passes)),
         );
-        e.run(&mut p, &mut crate::sched::StaticMapper::new())
+        e.run(&mut p, &mut crate::sched::StaticMapper::for_machine(&m))
             .expect("run")
             .seconds()
     };
     let mut t = SweepTable::new(
-        &format!("Homing classes (paper §2), {elems} ints, {threads} threads, {passes} passes (s)"),
+        &format!(
+            "Homing classes (paper §2), {elems} ints, {threads} threads, {passes} passes on {} (s)",
+            machine.label()
+        ),
         "class",
         vec!["seconds".into()],
     );
     t.push_row("local (first touch)", vec![run(Homing::FirstTouch, false)]);
     t.push_row(
-        "remote (tile 63)",
-        vec![run(Homing::Single(crate::arch::TileId(63)), false)],
+        format!("remote (tile {})", far_tile.0),
+        vec![run(Homing::Single(far_tile), false)],
     );
     t.push_row("hash-for-home", vec![run(Homing::HashForHome, false)]);
     t.push_row("localised", vec![run(Homing::FirstTouch, true)]);
@@ -425,12 +495,52 @@ mod tests {
 
     #[test]
     fn homing_classes_order() {
-        let t = homing_classes(1 << 16, 16, 8);
+        let t = homing_classes(1 << 16, 16, 8, MachineSpec::TilePro64, false);
         let secs: Vec<f64> = t.rows.iter().map(|(_, v)| v[0]).collect();
         // localised fastest; remote single-tile the worst of the reads.
         let (_local, remote, hash, localised) = (secs[0], secs[1], secs[2], secs[3]);
         assert!(localised < hash, "localised {localised} vs hash {hash}");
         assert!(remote > hash, "remote hot spot {remote} vs hash {hash}");
+    }
+
+    #[test]
+    fn homing_classes_runs_on_small_machine() {
+        // The remote row must pick an on-grid far tile (15 on epiphany16),
+        // not the tilepro64's tile 63.
+        let t = homing_classes(1 << 14, 8, 2, MachineSpec::Epiphany16, true);
+        assert_eq!(t.rows.len(), 4);
+        assert_eq!(t.rows[1].0, "remote (tile 15)");
+        assert!(t.rows.iter().all(|(_, v)| v[0] > 0.0));
+    }
+
+    #[test]
+    fn grid_scaling_spec_shape() {
+        let machines = grid_scaling_machines();
+        let spec = grid_scaling_spec(1 << 14, 4, &machines, DEFAULT_SEED, true);
+        spec.validate();
+        assert_eq!(spec.row_labels, vec!["4x4:2", "tilepro64", "nuca256"]);
+        assert_eq!(spec.series.len(), 3);
+        assert!(spec.runs.iter().all(|r| r.link_contention));
+    }
+
+    #[test]
+    fn grid_scaling_links_bite_non_localised_on_16x16() {
+        // The acceptance pin: at 16×16 the non-localised single-home case
+        // queues on mesh links; the localised style barely touches them.
+        let spec = grid_scaling_spec(1 << 16, 16, &[MachineSpec::Nuca256], DEFAULT_SEED, true);
+        let store = crate::coordinator::batch::BatchRunner::auto().run(&spec);
+        let one_home = &store.results[1]; // case 4 column
+        let localised = &store.results[2]; // case 8 column
+        assert!(
+            one_home.link_queue_cycles > 0,
+            "non-localised 16x16 run must queue on links"
+        );
+        assert!(
+            localised.link_queue_cycles * 5 < one_home.link_queue_cycles,
+            "localised link queueing {} should be far below non-localised {}",
+            localised.link_queue_cycles,
+            one_home.link_queue_cycles
+        );
     }
 
     #[test]

@@ -3,10 +3,13 @@
 //! A reproduction of Tousimojarad & Vanderbauwhede, *Cache-aware Parallel
 //! Programming for Manycore Processors* (CS.DC 2014): the *localisation*
 //! programming technique for NUCA manycores, validated on a from-scratch
-//! cycle-approximate simulator of the Tilera TILEPro64 (8×8 mesh, DDC
-//! distributed home caches, 4 striped memory controllers), plus a
-//! Rust+JAX+Pallas compute runtime whose AOT-compiled sorting kernels
-//! mirror the paper's merge-sort workload on the request path.
+//! cycle-approximate simulator parameterised by a runtime machine
+//! description ([`arch::Machine`]: any W×H mesh with edge memory
+//! controllers and per-link contention; the Tilera TILEPro64 — 8×8 mesh,
+//! DDC distributed home caches, 4 striped controllers — is the default
+//! preset), plus a Rust+JAX+Pallas compute runtime whose AOT-compiled
+//! sorting kernels mirror the paper's merge-sort workload on the request
+//! path.
 //!
 //! Layer map (DESIGN.md §3):
 //! - **L3 (this crate)** — the coordinator: simulator substrates

@@ -13,7 +13,8 @@
 //! --reps N, --case 1..8, --seed S, --jobs N, --no-striping, --json,
 //! --out DIR.
 
-use tilesim::coordinator::batch::{derive_seeds, BatchRunner, SweepSpec, Workload};
+use tilesim::arch::{Machine, MachineSpec};
+use tilesim::coordinator::batch::{derive_seeds, BatchRunner, RunSpec, SweepSpec, Workload};
 use tilesim::coordinator::{case, experiment, table1};
 use tilesim::util::cli::{parse_usize, Args};
 use tilesim::workloads::mergesort::Variant;
@@ -45,8 +46,19 @@ const VALUE_FLAGS: &[&str] = &[
     "threads-list",
     "workload",
     "seeds",
+    "machine",
+    "machines",
 ];
-const BOOL_FLAGS: &[&str] = &["json", "no-striping", "no-cache", "localised", "help", "heatmap"];
+const BOOL_FLAGS: &[&str] = &[
+    "json",
+    "no-striping",
+    "no-cache",
+    "localised",
+    "help",
+    "heatmap",
+    "link-contention",
+    "no-link-contention",
+];
 
 fn run(argv: &[String]) -> Result<(), Box<dyn std::error::Error>> {
     let args = Args::parse(argv, VALUE_FLAGS, BOOL_FLAGS).map_err(|e| {
@@ -65,18 +77,27 @@ fn run(argv: &[String]) -> Result<(), Box<dyn std::error::Error>> {
         return Ok(());
     }
     let seed = args.u64("seed", experiment::DEFAULT_SEED)?;
+    let machine_spec = machine_arg(&args)?;
+    let links = link_contention_arg(&args, machine_spec);
     match args.positional()[0].as_str() {
         "info" => info(),
         "microbench" => {
             let c = case(args.usize("case", 8)? as u8);
-            let stats = experiment::run_microbench(
-                &c,
-                args.usize("size", 1_000_000)? as u64,
-                args.usize("threads", 63)?,
-                args.usize("reps", 16)? as u32,
+            let spec = RunSpec {
+                case_id: c.id,
+                workload: Workload::Microbench {
+                    reps: args.usize("reps", 16)? as u32,
+                },
+                elems: args.usize("size", 1_000_000)? as u64,
+                threads: args.usize("threads", 63)?,
+                striping: true,
+                caches: true,
+                machine: machine_spec,
+                link_contention: links,
                 seed,
-            );
-            emit_stats(&args, &c.label(), &stats);
+            };
+            spec.check_thread_capacity()?;
+            emit_stats(&args, &run_label(&c.label(), &spec), &spec.execute(), machine_spec);
             Ok(())
         }
         "mergesort" => {
@@ -88,46 +109,50 @@ fn run(argv: &[String]) -> Result<(), Box<dyn std::error::Error>> {
                 Some("localised") => Variant::Localised,
                 Some(v) => return Err(format!("unknown variant {v}").into()),
             };
-            let mut engine_cfg = c.engine_config(!args.flag("no-striping"));
-            if args.flag("no-cache") {
-                engine_cfg = engine_cfg.without_caches();
-            }
-            let mut engine = tilesim::sim::Engine::new(engine_cfg);
-            let mut program = tilesim::workloads::mergesort::build(
-                &mut engine,
-                &tilesim::workloads::mergesort::MergesortConfig {
-                    elems: args.usize("size", 10_000_000)? as u64,
-                    threads: args.usize("threads", 64)?,
-                    variant,
-                },
-            );
-            let mut sched = c.mapper.scheduler(seed);
-            let stats = engine.run(&mut program, sched.as_mut())?;
-            emit_stats(&args, &c.label(), &stats);
+            let spec = RunSpec {
+                case_id: c.id,
+                workload: Workload::Mergesort { variant },
+                elems: args.usize("size", 10_000_000)? as u64,
+                threads: args.usize("threads", 64)?,
+                striping: !args.flag("no-striping"),
+                caches: !args.flag("no-cache"),
+                machine: machine_spec,
+                link_contention: links,
+                seed,
+            };
+            spec.check_thread_capacity()?;
+            emit_stats(&args, &run_label(&c.label(), &spec), &spec.execute(), machine_spec);
             Ok(())
         }
         "radix" => {
             let c = case(args.usize("case", 8)? as u8);
-            let mut engine = tilesim::sim::Engine::new(c.engine_config(!args.flag("no-striping")));
-            let mut program = tilesim::workloads::radix::build(
-                &mut engine,
-                &tilesim::workloads::radix::RadixConfig {
-                    elems: args.usize("size", 1_000_000)? as u64,
-                    threads: args.usize("threads", 63)?,
+            let spec = RunSpec {
+                case_id: c.id,
+                workload: Workload::Radix {
                     digit_bits: args.usize("digit-bits", 8)? as u32,
-                    localised: c.localised,
                 },
-            );
-            let mut sched = c.mapper.scheduler(seed);
-            let stats = engine.run(&mut program, sched.as_mut())?;
-            emit_stats(&args, &format!("radix sort — {}", c.label()), &stats);
+                elems: args.usize("size", 1_000_000)? as u64,
+                threads: args.usize("threads", 63)?,
+                striping: !args.flag("no-striping"),
+                caches: true,
+                machine: machine_spec,
+                link_contention: links,
+                seed,
+            };
+            spec.check_thread_capacity()?;
+            let label = run_label(&format!("radix sort — {}", c.label()), &spec);
+            emit_stats(&args, &label, &spec.execute(), machine_spec);
             Ok(())
         }
         "homing" => {
+            let threads = args.usize("threads", 63)?;
+            tilesim::coordinator::batch::check_thread_capacity(threads, machine_spec)?;
             let t = experiment::homing_classes(
                 args.usize("size", 1_000_000)? as u64,
-                args.usize("threads", 63)?,
+                threads,
                 args.usize("reps", 16)? as u32,
+                machine_spec,
+                links,
             );
             println!("{}", t.render());
             Ok(())
@@ -139,7 +164,13 @@ fn run(argv: &[String]) -> Result<(), Box<dyn std::error::Error>> {
                 .get(1)
                 .map(|s| s.as_str())
                 .unwrap_or("all");
-            let specs = figure_specs(which, &args, seed)?;
+            let specs: Vec<(String, SweepSpec)> = figure_specs(which, &args, seed)?
+                .into_iter()
+                .map(|(n, s)| (n, s.on_machine(machine_spec, links)))
+                .collect();
+            for (_, spec) in &specs {
+                spec.check_thread_capacity()?;
+            }
             let runner = BatchRunner::new(args.usize("jobs", 0)?);
             let out = args.get("out").map(|s| s.to_string());
             for (name, spec) in &specs {
@@ -151,11 +182,47 @@ fn run(argv: &[String]) -> Result<(), Box<dyn std::error::Error>> {
             }
             Ok(())
         }
-        "batch" => batch_cmd(&args, seed),
+        "batch" => batch_cmd(&args, seed, machine_spec, links),
         other => {
             print_usage();
             Err(format!("unknown command '{other}'").into())
         }
+    }
+}
+
+/// Parse `--machine` (default: the paper's tilepro64).
+fn machine_arg(args: &Args) -> Result<MachineSpec, Box<dyn std::error::Error>> {
+    match args.get("machine") {
+        None => Ok(MachineSpec::TilePro64),
+        Some(s) => Ok(MachineSpec::parse(s)?),
+    }
+}
+
+/// Resolve link-contention modelling: on by default for every machine
+/// except the paper-baseline tilepro64 (whose published figure record
+/// predates the link model); `--link-contention` / `--no-link-contention`
+/// override either way.
+fn link_contention_arg(args: &Args, machine: MachineSpec) -> bool {
+    if args.flag("no-link-contention") {
+        false
+    } else if args.flag("link-contention") {
+        true
+    } else {
+        machine != MachineSpec::TilePro64
+    }
+}
+
+/// Label for a one-off run: the Table 1 case, plus the machine when it is
+/// not the paper baseline.
+fn run_label(case_label: &str, spec: &RunSpec) -> String {
+    if spec.machine == MachineSpec::TilePro64 && !spec.link_contention {
+        case_label.to_string()
+    } else {
+        format!(
+            "{case_label} | machine {}{}",
+            spec.machine.label(),
+            if spec.link_contention { " (link contention)" } else { "" }
+        )
     }
 }
 
@@ -207,10 +274,15 @@ fn figure_specs(
     Ok(specs)
 }
 
-/// `repro batch <fig…|all|grid>`: run sweeps through the worker pool and
-/// emit machine-readable results. `--jobs N` shards across N host threads
-/// (0 = all cores); output is byte-identical for every N.
-fn batch_cmd(args: &Args, seed: u64) -> Result<(), Box<dyn std::error::Error>> {
+/// `repro batch <fig…|all|grid|gridscale>`: run sweeps through the worker
+/// pool and emit machine-readable results. `--jobs N` shards across N host
+/// threads (0 = all cores); output is byte-identical for every N.
+fn batch_cmd(
+    args: &Args,
+    seed: u64,
+    machine: MachineSpec,
+    links: bool,
+) -> Result<(), Box<dyn std::error::Error>> {
     let which = args
         .positional()
         .get(1)
@@ -219,10 +291,27 @@ fn batch_cmd(args: &Args, seed: u64) -> Result<(), Box<dyn std::error::Error>> {
     let runner = BatchRunner::new(args.usize("jobs", 0)?);
     let out = args.get("out").map(|s| s.to_string());
     let specs = if which == "grid" {
-        vec![("grid".to_string(), grid_spec(args, seed)?)]
+        vec![("grid".to_string(), grid_spec(args, seed)?.on_machine(machine, links))]
+    } else if which == "gridscale" {
+        // The grid-scaling sweep carries its own per-row machine ladder;
+        // links are ON unless --no-link-contention (watching the mesh
+        // saturate is the point).
+        if args.get("machine").is_some() {
+            return Err(
+                "gridscale sweeps its own machine ladder: use --machines a,b,c, not --machine"
+                    .into(),
+            );
+        }
+        vec![("gridscale".to_string(), gridscale_spec(args, seed)?)]
     } else {
         figure_specs(which, args, seed)?
+            .into_iter()
+            .map(|(n, s)| (n, s.on_machine(machine, links)))
+            .collect()
     };
+    for (_, spec) in &specs {
+        spec.check_thread_capacity()?;
+    }
     eprintln!("batch: {} sweep(s) on {} worker(s)", specs.len(), runner.jobs());
     for (name, spec) in &specs {
         let store = runner.run(spec);
@@ -354,15 +443,58 @@ fn grid_spec(args: &Args, seed: u64) -> Result<SweepSpec, Box<dyn std::error::Er
     ))
 }
 
+/// Build the grid-scaling sweep (`repro batch gridscale`): the same merge
+/// sort at every `--machines` grid (default 4×4 → 8×8 → 16×16), link
+/// contention on unless `--no-link-contention`.
+fn gridscale_spec(args: &Args, seed: u64) -> Result<SweepSpec, Box<dyn std::error::Error>> {
+    let machines: Vec<MachineSpec> = match args.get("machines") {
+        None => experiment::grid_scaling_machines(),
+        Some(s) => s
+            .split(',')
+            .map(|m| MachineSpec::parse(m.trim()))
+            .collect::<Result<_, _>>()?,
+    };
+    let elems = args.usize("size", 1_000_000)? as u64;
+    let threads = args.usize("threads", 16)?;
+    if threads == 0 || elems < 2 * threads as u64 {
+        return Err(
+            format!("bad gridscale: need elems >= 2*threads, got {elems} x {threads}").into(),
+        );
+    }
+    let links = !args.flag("no-link-contention");
+    let spec = experiment::grid_scaling_spec(elems, threads, &machines, seed, links);
+    spec.check_thread_capacity()?;
+    Ok(spec)
+}
+
 fn parse_list<T>(s: &str, parse: impl Fn(&str) -> Option<T>) -> Option<Vec<T>> {
     let items: Option<Vec<T>> = s.split(',').map(|x| parse(x.trim())).collect();
     items.filter(|v| !v.is_empty())
 }
 
 fn info() -> Result<(), Box<dyn std::error::Error>> {
-    println!("tilesim: simulated TILEPro64 — 8x8 mesh, 64 tiles @ 860 MHz");
+    println!(
+        "tilesim: NUCA manycore simulator (default machine: TILEPro64 — 8x8 mesh, 64 tiles @ 860 MHz)"
+    );
     println!("caches: 8 KB L1D (2-way), 64 KB L2 (4-way), 64 B lines, DDC home caches");
-    println!("memory: 4 controllers, 8 KB striping, 64 KB pages, first-touch homing under ucache_hash=none");
+    println!("memory: 8 KB striping, 64 KB pages, first-touch homing under ucache_hash=none");
+    println!("\nmachine presets (--machine):");
+    for spec in [
+        MachineSpec::TilePro64,
+        MachineSpec::Epiphany16,
+        MachineSpec::Nuca256,
+    ] {
+        let m = spec.build();
+        println!(
+            "  {:<12} {}x{} grid, {} tiles, {} controller(s)",
+            m.name(),
+            m.grid_w(),
+            m.grid_h(),
+            m.num_tiles(),
+            m.num_controllers()
+        );
+    }
+    println!("  WxH[:ctrls]  any grid up to 64x64, evenly spaced edge controllers");
     println!("\nTable 1 cases:");
     for c in table1() {
         println!("  {}", c.label());
@@ -402,18 +534,23 @@ fn sort_real(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
     Ok(())
 }
 
-fn emit_stats(args: &Args, label: &str, stats: &tilesim::sim::RunStats) {
+fn emit_stats(args: &Args, label: &str, stats: &tilesim::sim::RunStats, machine: MachineSpec) {
     if args.flag("json") {
         println!("{}", stats.to_json().encode());
     } else {
         println!("{label}");
         println!("  {}", stats.summary());
         if args.flag("heatmap") {
-            println!("{}", tilesim::metrics::home_heatmap(stats));
+            let m: Machine = machine.build();
+            println!("{}", tilesim::metrics::home_heatmap(stats, &m));
             println!(
                 "home-traffic concentration: {:.3} (0 = spread, 1 = one hot tile)",
                 tilesim::metrics::home_concentration(stats)
             );
+            let links = tilesim::metrics::link_heatmap(stats, &m);
+            if !links.is_empty() {
+                println!("{links}");
+            }
         }
     }
 }
@@ -422,10 +559,13 @@ fn print_usage() {
     println!(
         "usage: repro <info|microbench|mergesort|radix|homing|sort|experiment|batch> [flags]\n\
          experiments: repro experiment <fig1|fig2|fig3|fig4|table1|all> [--size N] [--out DIR]\n\
-         batch:       repro batch <fig1|fig2|fig3|fig4|table1|all|grid>\n\
+         batch:       repro batch <fig1|fig2|fig3|fig4|table1|all|grid|gridscale>\n\
                       [--jobs N] [--out DIR] [--json]\n\
                       grid axes: --cases 1,3,8 --sizes 1m,4m --threads-list 16,64\n\
                       --workload mergesort|microbench|radix --variant a,b --seeds K\n\
+                      gridscale: --machines 4x4:2,tilepro64,nuca256 --size N --threads N\n\
+         machines: --machine tilepro64|epiphany16|nuca256|WxH[:ctrls] (default tilepro64)\n\
+                   --link-contention / --no-link-contention (default: on off-baseline machines)\n\
          flags: --size N --threads N --reps N --case 1..8 --seed S --variant v\n\
                 --digit-bits B --jobs N --no-striping --no-cache --heatmap --json\n\
                 --out DIR --sizes a,b,c"

@@ -7,12 +7,13 @@
 //! 1 step 4). Freeing (step 5) recycles address space and purges stale
 //! cache state (the engine hooks `free` for that).
 
-use crate::arch::{TileId, PAGE_BYTES};
+use crate::arch::{Machine, TileId, PAGE_BYTES};
 use crate::mem::addr::VAddr;
 use crate::mem::homing::{AllocKind, HashPolicy, Homing};
 use crate::mem::page::{PageAttr, PageFault, PageTable};
 use crate::mem::striping::Placement;
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 /// One live allocation.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -89,9 +90,9 @@ pub struct Allocator {
 }
 
 impl Allocator {
-    pub fn new(config: MemConfig) -> Self {
+    pub fn new(machine: Arc<Machine>, config: MemConfig) -> Self {
         Allocator {
-            table: PageTable::new(),
+            table: PageTable::new(machine),
             config,
             // Start above the null page.
             next: PAGE_BYTES,
@@ -121,7 +122,7 @@ impl Allocator {
             Placement::FirstTouchNearest
         } else {
             // Stacks and hashed pages: DRAM placed near the allocating tile.
-            Placement::fixed_near(tile)
+            Placement::Fixed(self.table.machine().nearest_controller(tile).id)
         };
         self.alloc_with(tile, bytes, kind, homing, placement)
     }
@@ -190,10 +191,13 @@ mod tests {
     use crate::mem::addr::LineId;
 
     fn alloc_default(policy: HashPolicy, striping: bool) -> Allocator {
-        Allocator::new(MemConfig {
-            hash_policy: policy,
-            striping,
-        })
+        Allocator::new(
+            Arc::new(Machine::tilepro64()),
+            MemConfig {
+                hash_policy: policy,
+                striping,
+            },
+        )
     }
 
     #[test]

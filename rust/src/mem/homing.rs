@@ -13,8 +13,12 @@
 //! input array initialised by `main()` is stuck on tile 0, but a chunk
 //! copied into a worker's fresh `new int[n]` is first-touched — and
 //! therefore homed — on the worker's own tile (Algorithm 1 step 4).
+//!
+//! Hashes spread over *the machine's* tile count, passed in by the caller
+//! (the page table and engine hold the `Machine`); for the tilepro64
+//! preset (`num_tiles = 64`) the hash values are identical to the seed's.
 
-use crate::arch::{TileId, NUM_TILES};
+use crate::arch::TileId;
 use crate::mem::addr::LineId;
 use crate::util::rng::mix64;
 
@@ -36,17 +40,18 @@ pub enum Homing {
 }
 
 impl Homing {
-    /// Effective home tile of a line, if already determined. The hash must
-    /// be a pure function of the line address (hardware hashes the PA).
+    /// Effective home tile of a line on a `num_tiles`-tile machine, if
+    /// already determined. The hash must be a pure function of the line
+    /// address (hardware hashes the PA).
     #[inline]
-    pub fn home_of(self, line: LineId) -> Option<TileId> {
+    pub fn home_of(self, line: LineId, num_tiles: u32) -> Option<TileId> {
         match self {
             Homing::Single(t) => Some(t),
             Homing::HashForHome => {
-                Some(TileId((mix64(line.0) % NUM_TILES as u64) as u32))
+                Some(TileId((mix64(line.0) % num_tiles as u64) as u32))
             }
             Homing::PageHash => {
-                Some(TileId((mix64(line.page().0) % NUM_TILES as u64) as u32))
+                Some(TileId((mix64(line.page().0) % num_tiles as u64) as u32))
             }
             Homing::FirstTouch => None,
         }
@@ -67,10 +72,10 @@ impl Homing {
     /// page gives the same answer. This is the same-home-run test of the
     /// engine's page-run fast path.
     #[inline]
-    pub fn uniform_page_home(self, any_line_in_page: LineId) -> Option<TileId> {
+    pub fn uniform_page_home(self, any_line_in_page: LineId, num_tiles: u32) -> Option<TileId> {
         match self {
             Homing::Single(t) => Some(t),
-            Homing::PageHash => self.home_of(any_line_in_page),
+            Homing::PageHash => self.home_of(any_line_in_page, num_tiles),
             Homing::HashForHome | Homing::FirstTouch => None,
         }
     }
@@ -118,18 +123,20 @@ impl HashPolicy {
 mod tests {
     use super::*;
 
+    const T64: u32 = 64;
+
     #[test]
     fn single_homing_is_constant() {
         let h = Homing::Single(TileId(5));
         for l in 0..100 {
-            assert_eq!(h.home_of(LineId(l)), Some(TileId(5)));
+            assert_eq!(h.home_of(LineId(l), T64), Some(TileId(5)));
         }
     }
 
     #[test]
     fn hash_for_home_is_deterministic() {
         let h = Homing::HashForHome;
-        assert_eq!(h.home_of(LineId(123)), h.home_of(LineId(123)));
+        assert_eq!(h.home_of(LineId(123), T64), h.home_of(LineId(123), T64));
     }
 
     #[test]
@@ -137,7 +144,7 @@ mod tests {
         let h = Homing::HashForHome;
         let mut seen = std::collections::HashSet::new();
         for l in 0..1024 {
-            seen.insert(h.home_of(LineId(l)).unwrap());
+            seen.insert(h.home_of(LineId(l), T64).unwrap());
         }
         // A 1024-line region should touch nearly every tile.
         assert!(seen.len() > 56, "only {} tiles used", seen.len());
@@ -148,7 +155,7 @@ mod tests {
         let h = Homing::HashForHome;
         let mut counts = [0u32; 64];
         for l in 0..64_000 {
-            counts[h.home_of(LineId(l)).unwrap().index()] += 1;
+            counts[h.home_of(LineId(l), T64).unwrap().index()] += 1;
         }
         let (min, max) = (
             *counts.iter().min().unwrap(),
@@ -158,15 +165,27 @@ mod tests {
     }
 
     #[test]
+    fn hash_respects_machine_tile_count() {
+        // The same lines hash in-range on any machine, including the
+        // non-square 4×8 = 32-tile grid.
+        for tiles in [4u32, 16, 32, 256] {
+            for l in 0..4096u64 {
+                let home = Homing::HashForHome.home_of(LineId(l), tiles).unwrap();
+                assert!(home.0 < tiles, "home {home:?} out of range on {tiles} tiles");
+            }
+        }
+    }
+
+    #[test]
     fn page_hash_constant_within_page_varies_across() {
         let h = Homing::PageHash;
-        let lines_per_page = (crate::arch::PAGE_BYTES / crate::arch::LINE_BYTES) as u64;
-        let first = h.home_of(LineId(0)).unwrap();
+        let lines_per_page = crate::arch::PAGE_BYTES / crate::arch::LINE_BYTES;
+        let first = h.home_of(LineId(0), T64).unwrap();
         for l in 0..lines_per_page {
-            assert_eq!(h.home_of(LineId(l)).unwrap(), first);
+            assert_eq!(h.home_of(LineId(l), T64).unwrap(), first);
         }
         let homes: std::collections::HashSet<_> = (0..64)
-            .map(|p| h.home_of(LineId(p * lines_per_page)).unwrap())
+            .map(|p| h.home_of(LineId(p * lines_per_page), T64).unwrap())
             .collect();
         assert!(homes.len() > 32, "pages should spread: {}", homes.len());
     }
@@ -174,10 +193,10 @@ mod tests {
     #[test]
     fn first_touch_unresolved_then_resolves() {
         let h = Homing::FirstTouch;
-        assert_eq!(h.home_of(LineId(0)), None);
+        assert_eq!(h.home_of(LineId(0), T64), None);
         let r = h.resolved(TileId(9));
         assert_eq!(r, Homing::Single(TileId(9)));
-        assert_eq!(r.home_of(LineId(0)), Some(TileId(9)));
+        assert_eq!(r.home_of(LineId(0), T64), Some(TileId(9)));
         // Resolution is sticky: a later toucher doesn't re-home.
         assert_eq!(r.resolved(TileId(1)), Homing::Single(TileId(9)));
     }

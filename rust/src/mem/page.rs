@@ -1,7 +1,9 @@
 //! Page table: per-page homing and controller placement metadata, with
 //! first-touch resolution (the fault-in path of `ucache_hash=none`).
 
-use crate::arch::{nearest_controller, TileId};
+use std::sync::Arc;
+
+use crate::arch::{Machine, TileId};
 use crate::mem::addr::{LineId, PageId, VAddr};
 use crate::mem::homing::Homing;
 use crate::mem::striping::Placement;
@@ -16,9 +18,11 @@ pub struct PageAttr {
 /// Page table over the simulated address space. The allocator hands out
 /// addresses from a compact bump region, so a dense vector indexed by page
 /// id beats a tree by an order of magnitude on the hot resolve path (the
-/// engine touches it for every simulated cache line).
-#[derive(Default, Debug)]
+/// engine touches it for every simulated cache line). Holds the machine
+/// description to size homing hashes and resolve nearest controllers.
+#[derive(Debug)]
 pub struct PageTable {
+    machine: Arc<Machine>,
     pages: Vec<Option<PageAttr>>,
     mapped: usize,
 }
@@ -41,8 +45,16 @@ impl std::fmt::Display for PageFault {
 impl std::error::Error for PageFault {}
 
 impl PageTable {
-    pub fn new() -> Self {
-        Self::default()
+    pub fn new(machine: Arc<Machine>) -> Self {
+        PageTable {
+            machine,
+            pages: Vec::new(),
+            mapped: 0,
+        }
+    }
+
+    pub fn machine(&self) -> &Arc<Machine> {
+        &self.machine
     }
 
     #[inline]
@@ -85,6 +97,7 @@ impl PageTable {
     /// engine's hottest lookup: one call per simulated cache line.
     #[inline]
     pub fn resolve_home(&mut self, line: LineId, toucher: TileId) -> Result<TileId, PageFault> {
+        let num_tiles = self.machine.num_tiles();
         let attr = self
             .pages
             .get_mut(line.page().0 as usize)
@@ -94,11 +107,11 @@ impl PageTable {
             attr.homing = attr.homing.resolved(toucher);
         }
         if matches!(attr.placement, Placement::FirstTouchNearest) {
-            attr.placement = Placement::Fixed(nearest_controller(toucher).id);
+            attr.placement = Placement::Fixed(self.machine.nearest_controller(toucher).id);
         }
         Ok(attr
             .homing
-            .home_of(line)
+            .home_of(line, num_tiles)
             .expect("homing resolved above"))
     }
 
@@ -120,7 +133,7 @@ impl PageTable {
             attr.homing = attr.homing.resolved(toucher);
         }
         if matches!(attr.placement, Placement::FirstTouchNearest) {
-            attr.placement = Placement::Fixed(nearest_controller(toucher).id);
+            attr.placement = Placement::Fixed(self.machine.nearest_controller(toucher).id);
         }
         Ok(*attr)
     }
@@ -130,7 +143,7 @@ impl PageTable {
         let attr = self
             .attr_of(line.page())
             .ok_or(PageFault::Unmapped(line.addr()))?;
-        Ok(attr.homing.home_of(line))
+        Ok(attr.homing.home_of(line, self.machine.num_tiles()))
     }
 
     /// Pre-resolve every page of a region as touched by `tile` (models
@@ -142,7 +155,7 @@ impl PageTable {
                     attr.homing = attr.homing.resolved(tile);
                 }
                 if matches!(attr.placement, Placement::FirstTouchNearest) {
-                    attr.placement = Placement::Fixed(nearest_controller(tile).id);
+                    attr.placement = Placement::Fixed(self.machine.nearest_controller(tile).id);
                 }
             }
         }
@@ -154,7 +167,9 @@ impl PageTable {
         let attr = self
             .attr_of(line.page())
             .ok_or(PageFault::Unmapped(line.addr()))?;
-        Ok(attr.placement.controller_of(line.addr()))
+        Ok(attr
+            .placement
+            .controller_of(line.addr(), self.machine.num_controllers()))
     }
 
     pub fn mapped_pages(&self) -> usize {
@@ -167,6 +182,10 @@ mod tests {
     use super::*;
     use crate::arch::PAGE_BYTES;
     use crate::mem::homing::Homing;
+
+    fn table() -> PageTable {
+        PageTable::new(Arc::new(Machine::tilepro64()))
+    }
 
     fn attr(t: u32) -> PageAttr {
         PageAttr {
@@ -184,7 +203,7 @@ mod tests {
 
     #[test]
     fn map_and_lookup() {
-        let mut pt = PageTable::new();
+        let mut pt = table();
         pt.map_region(VAddr(0), 2 * PAGE_BYTES, attr(4)).unwrap();
         assert_eq!(pt.home_of_line(LineId(0)).unwrap(), Some(TileId(4)));
         assert_eq!(
@@ -196,14 +215,14 @@ mod tests {
 
     #[test]
     fn double_map_rejected() {
-        let mut pt = PageTable::new();
+        let mut pt = table();
         pt.map_region(VAddr(0), PAGE_BYTES, attr(1)).unwrap();
         assert!(pt.map_region(VAddr(0), 1, attr(2)).is_err());
     }
 
     #[test]
     fn unmap_releases() {
-        let mut pt = PageTable::new();
+        let mut pt = table();
         pt.map_region(VAddr(0), PAGE_BYTES, attr(1)).unwrap();
         pt.unmap_region(VAddr(0), PAGE_BYTES);
         assert_eq!(pt.mapped_pages(), 0);
@@ -213,7 +232,7 @@ mod tests {
 
     #[test]
     fn first_touch_resolves_to_toucher() {
-        let mut pt = PageTable::new();
+        let mut pt = table();
         pt.map_region(VAddr(0), PAGE_BYTES, ft_attr()).unwrap();
         assert_eq!(pt.home_of_line(LineId(0)).unwrap(), None);
         let home = pt.resolve_home(LineId(0), TileId(13)).unwrap();
@@ -227,7 +246,7 @@ mod tests {
 
     #[test]
     fn touch_region_pre_resolves() {
-        let mut pt = PageTable::new();
+        let mut pt = table();
         pt.map_region(VAddr(0), 2 * PAGE_BYTES, ft_attr()).unwrap();
         pt.touch_region(VAddr(0), 2 * PAGE_BYTES, TileId(0));
         assert_eq!(pt.home_of_line(LineId(0)).unwrap(), Some(TileId(0)));
@@ -237,7 +256,7 @@ mod tests {
 
     #[test]
     fn different_pages_home_independently() {
-        let mut pt = PageTable::new();
+        let mut pt = table();
         pt.map_region(VAddr(0), 2 * PAGE_BYTES, ft_attr()).unwrap();
         pt.resolve_home(LineId(0), TileId(3)).unwrap();
         let second_page_line = VAddr(PAGE_BYTES).line();
@@ -248,7 +267,7 @@ mod tests {
 
     #[test]
     fn hash_for_home_line_granularity() {
-        let mut pt = PageTable::new();
+        let mut pt = table();
         pt.map_region(
             VAddr(0),
             PAGE_BYTES,
@@ -266,13 +285,13 @@ mod tests {
 
     #[test]
     fn unmapped_controller_faults() {
-        let pt = PageTable::new();
+        let pt = table();
         assert!(pt.controller_of_line(LineId(99)).is_err());
     }
 
     #[test]
     fn resolve_on_unmapped_faults() {
-        let mut pt = PageTable::new();
+        let mut pt = table();
         assert!(pt.resolve_home(LineId(5), TileId(0)).is_err());
     }
 }

@@ -1,11 +1,12 @@
-//! Memory striping across the four DDR controllers.
+//! Memory striping across the machine's DDR controllers.
 //!
 //! Paper §5.3: pages are either allocated behind one specific controller
 //! (non-striping: picked by proximity to the page's tile, i.e. first
 //! toucher) or striped across all controllers in 8 KB chunks (the default;
 //! "Linux boots believing it has a single controller four times larger").
+//! The controller count comes from the runtime `Machine` (4 on the
+//! tilepro64 preset, so the seed's striping pattern is unchanged).
 
-use crate::arch::{nearest_controller, TileId, NUM_CONTROLLERS};
 use crate::mem::addr::VAddr;
 
 /// Striping chunk size (8 KB per the TILEPro64 manual).
@@ -26,8 +27,8 @@ pub enum Placement {
 impl Placement {
     /// Placement for a fresh region in the given boot mode. Non-striped
     /// placement is deferred to first touch; callers that already know the
-    /// owning tile (stacks, pre-touched arrays) resolve immediately via
-    /// [`Placement::fixed_near`].
+    /// owning tile (stacks, pre-touched arrays) resolve immediately to
+    /// `Fixed(machine.nearest_controller(tile).id)`.
     pub fn for_alloc(striping_enabled: bool) -> Placement {
         if striping_enabled {
             Placement::Striped
@@ -36,18 +37,14 @@ impl Placement {
         }
     }
 
-    pub fn fixed_near(tile: TileId) -> Placement {
-        Placement::Fixed(nearest_controller(tile).id)
-    }
-
-    /// Which controller serves the DRAM behind `addr`. Unresolved
-    /// placement defaults to controller 0 (only reachable if a region is
-    /// queried without ever being accessed).
+    /// Which of the machine's `num_controllers` serves the DRAM behind
+    /// `addr`. Unresolved placement defaults to controller 0 (only
+    /// reachable if a region is queried without ever being accessed).
     #[inline]
-    pub fn controller_of(self, addr: VAddr) -> u32 {
+    pub fn controller_of(self, addr: VAddr, num_controllers: u32) -> u32 {
         match self {
             Placement::Fixed(c) => c,
-            Placement::Striped => ((addr.0 / STRIPE_BYTES) % NUM_CONTROLLERS as u64) as u32,
+            Placement::Striped => ((addr.0 / STRIPE_BYTES) % num_controllers as u64) as u32,
             Placement::FirstTouchNearest => 0,
         }
     }
@@ -56,43 +53,47 @@ impl Placement {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::arch::Coord;
+
+    const C4: u32 = 4;
 
     #[test]
     fn striped_round_robins_8k_chunks() {
         let p = Placement::Striped;
-        assert_eq!(p.controller_of(VAddr(0)), 0);
-        assert_eq!(p.controller_of(VAddr(8 * 1024)), 1);
-        assert_eq!(p.controller_of(VAddr(16 * 1024)), 2);
-        assert_eq!(p.controller_of(VAddr(24 * 1024)), 3);
-        assert_eq!(p.controller_of(VAddr(32 * 1024)), 0);
+        assert_eq!(p.controller_of(VAddr(0), C4), 0);
+        assert_eq!(p.controller_of(VAddr(8 * 1024), C4), 1);
+        assert_eq!(p.controller_of(VAddr(16 * 1024), C4), 2);
+        assert_eq!(p.controller_of(VAddr(24 * 1024), C4), 3);
+        assert_eq!(p.controller_of(VAddr(32 * 1024), C4), 0);
     }
 
     #[test]
     fn striped_constant_within_chunk() {
         let p = Placement::Striped;
-        assert_eq!(p.controller_of(VAddr(1)), p.controller_of(VAddr(8 * 1024 - 1)));
+        assert_eq!(
+            p.controller_of(VAddr(1), C4),
+            p.controller_of(VAddr(8 * 1024 - 1), C4)
+        );
+    }
+
+    #[test]
+    fn striped_wraps_at_machine_controller_count() {
+        // A single-controller machine (epiphany16) stripes trivially; an
+        // 8-controller one (nuca256) uses the full cycle.
+        let p = Placement::Striped;
+        for chunk in 0..16u64 {
+            assert_eq!(p.controller_of(VAddr(chunk * STRIPE_BYTES), 1), 0);
+            assert_eq!(
+                p.controller_of(VAddr(chunk * STRIPE_BYTES), 8),
+                (chunk % 8) as u32
+            );
+        }
     }
 
     #[test]
     fn fixed_ignores_address() {
         let p = Placement::Fixed(2);
         for a in [0u64, 9999, 1 << 30] {
-            assert_eq!(p.controller_of(VAddr(a)), 2);
-        }
-    }
-
-    #[test]
-    fn fixed_near_upper_rows_use_top_controllers() {
-        let top = TileId::from_coord(Coord { x: 0, y: 0 });
-        let bottom = TileId::from_coord(Coord { x: 7, y: 7 });
-        match Placement::fixed_near(top) {
-            Placement::Fixed(c) => assert!(c < 2),
-            _ => panic!("expected fixed"),
-        }
-        match Placement::fixed_near(bottom) {
-            Placement::Fixed(c) => assert!(c >= 2),
-            _ => panic!("expected fixed"),
+            assert_eq!(p.controller_of(VAddr(a), C4), 2);
         }
     }
 
@@ -107,7 +108,7 @@ mod tests {
         let p = Placement::Striped;
         let mut counts = [0u32; 4];
         for chunk in 0..4096u64 {
-            counts[p.controller_of(VAddr(chunk * STRIPE_BYTES)) as usize] += 1;
+            counts[p.controller_of(VAddr(chunk * STRIPE_BYTES), C4) as usize] += 1;
         }
         assert!(counts.iter().all(|&c| c == 1024), "{counts:?}");
     }

@@ -1,32 +1,52 @@
-//! Reporting helpers: the per-tile home-traffic heatmap that makes the
-//! paper's hot-spot story visible (`repro heatmap`), plus small summary
-//! statistics used by the CLI and examples.
+//! Reporting helpers: per-tile home-traffic and per-link mesh-traffic
+//! heatmaps that make the paper's hot-spot story visible (`repro …
+//! --heatmap`), plus small summary statistics used by the CLI and examples.
+//!
+//! Grid dimensions come from the run's [`Machine`] — any `H×W` grid
+//! renders, not just the TILEPro64's 8×8.
 
-use crate::arch::{GRID_H, GRID_W};
+use crate::arch::{Dir, Machine, TileId};
 use crate::sim::RunStats;
 
-/// Render the 8×8 grid of home-port request counts as an ASCII heatmap.
-/// Intensity characters: ` .:-=+*#%@` scaled to the max tile.
-pub fn home_heatmap(stats: &RunStats) -> String {
+const RAMP: &[u8] = b" .:-=+*#%@";
+
+fn ramp_char(n: u64, max: u64) -> char {
+    let ix = if max == 0 {
+        0
+    } else {
+        ((n as f64 / max as f64) * (RAMP.len() - 1) as f64).round() as usize
+    };
+    RAMP[ix] as char
+}
+
+/// Render the machine's `H×W` grid of home-port request counts as an ASCII
+/// heatmap. Intensity characters: ` .:-=+*#%@` scaled to the max tile.
+pub fn home_heatmap(stats: &RunStats, machine: &Machine) -> String {
     let counts = &stats.tile_home_requests;
+    debug_assert_eq!(
+        counts.len(),
+        machine.num_tiles() as usize,
+        "tile_home_requests sized for a different machine than {}",
+        machine.name()
+    );
     let max = counts.iter().copied().max().unwrap_or(0);
-    let ramp: &[u8] = b" .:-=+*#%@";
     let mut out = String::new();
-    out.push_str("home-port requests per tile (rows = mesh y):\n");
-    for y in 0..GRID_H {
+    out.push_str(&format!(
+        "home-port requests per tile, {}x{} {} (rows = mesh y):\n",
+        machine.grid_w(),
+        machine.grid_h(),
+        machine.name()
+    ));
+    for y in 0..machine.grid_h() {
         out.push_str("  ");
-        for x in 0..GRID_W {
+        for x in 0..machine.grid_w() {
             let n = counts
-                .get((y * GRID_W + x) as usize)
+                .get((y * machine.grid_w() + x) as usize)
                 .copied()
                 .unwrap_or(0);
-            let ix = if max == 0 {
-                0
-            } else {
-                ((n as f64 / max as f64) * (ramp.len() - 1) as f64).round() as usize
-            };
-            out.push(ramp[ix] as char);
-            out.push(ramp[ix] as char); // double-width for aspect ratio
+            let c = ramp_char(n, max);
+            out.push(c);
+            out.push(c); // double-width for aspect ratio
         }
         out.push('\n');
     }
@@ -35,6 +55,55 @@ pub fn home_heatmap(stats: &RunStats) -> String {
         "  total {total} requests, hottest tile {max} ({:.1}% of traffic)\n",
         if total == 0 { 0.0 } else { 100.0 * max as f64 / total as f64 }
     ));
+    out
+}
+
+/// Render per-tile mesh-link traffic: each cell shows the busiest of the
+/// tile's four outgoing links; the footer names the hottest directed link
+/// chip-wide. Empty string when the run did not model link contention.
+pub fn link_heatmap(stats: &RunStats, machine: &Machine) -> String {
+    if !stats.links_modelled() {
+        return String::new();
+    }
+    let links = &stats.link_requests;
+    debug_assert_eq!(
+        links.len(),
+        machine.num_links(),
+        "link_requests sized for a different machine than {}",
+        machine.name()
+    );
+    let per_tile = |t: TileId| -> u64 {
+        Dir::ALL
+            .iter()
+            .map(|&d| links.get(machine.link_index(t, d)).copied().unwrap_or(0))
+            .max()
+            .unwrap_or(0)
+    };
+    let max = machine.tiles().map(per_tile).max().unwrap_or(0);
+    let mut out = String::new();
+    out.push_str(&format!(
+        "mesh-link traffic per tile (max outgoing link), {}x{} {}:\n",
+        machine.grid_w(),
+        machine.grid_h(),
+        machine.name()
+    ));
+    for y in 0..machine.grid_h() {
+        out.push_str("  ");
+        for x in 0..machine.grid_w() {
+            let c = ramp_char(per_tile(TileId(y * machine.grid_w() + x)), max);
+            out.push(c);
+            out.push(c);
+        }
+        out.push('\n');
+    }
+    match stats.hottest_link() {
+        Some((ix, n)) => out.push_str(&format!(
+            "  hottest link {} with {n} packets, {} link-queue cycles total\n",
+            machine.link_label(ix),
+            stats.link_queue_cycles
+        )),
+        None => out.push_str("  no link traffic\n"),
+    }
     out
 }
 
@@ -66,15 +135,60 @@ mod tests {
     #[test]
     fn heatmap_renders_8_rows() {
         let s = stats_with(vec![5; 64]);
-        let map = home_heatmap(&s);
+        let map = home_heatmap(&s, &Machine::tilepro64());
         assert_eq!(map.lines().count(), 10); // header + 8 rows + footer
+    }
+
+    #[test]
+    fn heatmap_renders_machine_aspect() {
+        // 4 wide × 8 tall: 8 grid rows, 4 double-width columns each.
+        let m = Machine::custom(4, 8, 2).unwrap();
+        let s = stats_with(vec![3; 32]);
+        let map = home_heatmap(&s, &m);
+        assert_eq!(map.lines().count(), 10);
+        let row = map.lines().nth(1).unwrap();
+        assert_eq!(row.trim_end().len(), 2 + 8);
+        // 16×16 renders 16 rows.
+        let s = stats_with(vec![1; 256]);
+        assert_eq!(home_heatmap(&s, &Machine::nuca256()).lines().count(), 18);
+    }
+
+    #[test]
+    #[should_panic(expected = "sized for a different machine")]
+    #[cfg(debug_assertions)]
+    fn heatmap_length_mismatch_asserts() {
+        let s = stats_with(vec![0; 64]);
+        home_heatmap(&s, &Machine::epiphany16());
     }
 
     #[test]
     fn heatmap_handles_empty() {
         let s = stats_with(vec![0; 64]);
-        let map = home_heatmap(&s);
+        let map = home_heatmap(&s, &Machine::tilepro64());
         assert!(map.contains("total 0 requests"));
+    }
+
+    #[test]
+    fn link_heatmap_empty_without_link_model() {
+        let s = stats_with(vec![0; 64]);
+        assert_eq!(link_heatmap(&s, &Machine::tilepro64()), "");
+    }
+
+    #[test]
+    fn link_heatmap_names_hottest_link() {
+        let m = Machine::tilepro64();
+        let mut links = vec![0u64; m.num_links()];
+        let hot = m.link_index(TileId(9), Dir::East);
+        links[hot] = 42;
+        let s = RunStats {
+            tile_home_requests: vec![0; 64],
+            link_requests: links,
+            link_queue_cycles: 17,
+            ..RunStats::default()
+        };
+        let map = link_heatmap(&s, &m);
+        assert!(map.contains("hottest link E(1,1) with 42 packets"), "{map}");
+        assert!(map.contains("17 link-queue cycles"));
     }
 
     #[test]

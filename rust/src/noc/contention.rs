@@ -1,27 +1,48 @@
-//! Queueing contention for shared resources, modelled as exact
-//! serialisation: each home tile's L2 port and each memory controller is a
-//! single server with a deterministic per-request service time. A request
-//! arriving at `now` starts at `max(now, server_free_at)`; the wait is the
-//! queueing delay billed to the requester.
+//! Queueing contention for shared NoC resources, modelled as exact
+//! serialisation across three server classes:
+//!
+//! - **home ports** — each tile's L2 coherence port (one server per tile);
+//! - **memory controllers** — one server per DDR controller;
+//! - **directional mesh links** — one server per directed link (four per
+//!   tile: E/W/N/S), billed along the XY route of every remote request.
+//!
+//! Every server is deterministic: a request arriving at `now` starts at
+//! `max(now, server_free_at)`; the wait is the queueing delay billed to
+//! the requester. Server counts come from the runtime `Machine`
+//! description, so any grid gets correctly-sized resource vectors.
 //!
 //! The replay engine processes threads min-clock-first in small quanta, so
 //! requests arrive approximately in simulated-time order and the
-//! serialisation is near-exact. This is what makes the paper's disaster
-//! case (non-localised + local homing: 63 threads hammering tile 0's L2
-//! port) collapse to the port's service bandwidth, and what recreates the
-//! Fig. 4 controller crossover.
+//! serialisation is near-exact. Home-port queueing is what makes the
+//! paper's disaster case (non-localised + local homing: 63 threads
+//! hammering tile 0's L2 port) collapse to the port's service bandwidth
+//! and what recreates the Fig. 4 controller crossover; link queueing is
+//! what makes large grids (16×16 and up) hurt when traffic is *not*
+//! localised — the mesh itself, not just the endpoints, saturates
+//! (cf. Kommrusch et al., arXiv:2011.05422).
 
-use crate::arch::{TileId, NUM_CONTROLLERS, NUM_TILES};
+use std::sync::Arc;
+
+use crate::arch::{Machine, TileId};
+use crate::noc::routing::xy_links;
 
 #[derive(Clone, Copy, Debug)]
 pub struct ContentionConfig {
     /// Globally disable queueing (ablation: `--no-contention`).
     pub enabled: bool,
+    /// Model per-link mesh contention (`--no-link-contention` clears it).
+    /// The tilepro64 paper-baseline engine config leaves this off so the
+    /// published fig1–fig4/table1 JSON replays byte-identically; machine
+    /// presets and the grid-scaling sweep turn it on.
+    pub links: bool,
 }
 
 impl Default for ContentionConfig {
     fn default() -> Self {
-        ContentionConfig { enabled: true }
+        ContentionConfig {
+            enabled: true,
+            links: true,
+        }
     }
 }
 
@@ -54,22 +75,45 @@ impl Server {
 
 pub struct ContentionModel {
     cfg: ContentionConfig,
+    machine: Arc<Machine>,
     homes: Vec<Server>,
     ctrls: Vec<Server>,
+    /// One server per directed mesh link, indexed by `Machine::link_index`.
+    links: Vec<Server>,
+    link_service: u64,
     /// Total queueing cycles handed out (reporting).
     pub home_delay_cycles: u64,
     pub ctrl_delay_cycles: u64,
+    pub link_delay_cycles: u64,
+    /// Per-directed-link traffic counts (the hottest-link heatmap).
+    pub link_requests: Vec<u64>,
 }
 
 impl ContentionModel {
-    pub fn new(cfg: ContentionConfig) -> Self {
+    pub fn new(cfg: ContentionConfig, machine: Arc<Machine>) -> Self {
+        let (homes, ctrls, links) = (
+            machine.num_tiles() as usize,
+            machine.num_controllers() as usize,
+            machine.num_links(),
+        );
+        let link_service = machine.params.link_service;
         ContentionModel {
             cfg,
-            homes: vec![Server::default(); NUM_TILES as usize],
-            ctrls: vec![Server::default(); NUM_CONTROLLERS as usize],
+            machine,
+            homes: vec![Server::default(); homes],
+            ctrls: vec![Server::default(); ctrls],
+            links: vec![Server::default(); links],
+            link_service,
             home_delay_cycles: 0,
             ctrl_delay_cycles: 0,
+            link_delay_cycles: 0,
+            link_requests: vec![0; links],
         }
+    }
+
+    /// Whether link traversals are being billed.
+    pub fn links_enabled(&self) -> bool {
+        self.cfg.enabled && self.cfg.links
     }
 
     /// One request to `home`'s L2 port at time `now`; returns queue delay.
@@ -91,6 +135,24 @@ impl ContentionModel {
         self.ctrl_delay_cycles += d;
         d
     }
+
+    /// Bill every directed link on the XY route `from → to` at time `now`;
+    /// returns the total link queueing delay. Allocation-free (the route
+    /// is walked by [`xy_links`]); a self-route bills nothing.
+    #[inline]
+    pub fn link_path_request(&mut self, from: TileId, to: TileId, now: u64) -> u64 {
+        if !self.links_enabled() || from == to {
+            return 0;
+        }
+        let mut delay = 0u64;
+        for hop in xy_links(&self.machine, from, to) {
+            let ix = self.machine.link_index(hop.from, hop.dir);
+            delay += self.links[ix].request(now, self.link_service);
+            self.link_requests[ix] += 1;
+        }
+        self.link_delay_cycles += delay;
+        delay
+    }
 }
 
 #[cfg(test)]
@@ -98,7 +160,7 @@ mod tests {
     use super::*;
 
     fn model() -> ContentionModel {
-        ContentionModel::new(ContentionConfig::default())
+        ContentionModel::new(ContentionConfig::default(), Arc::new(Machine::tilepro64()))
     }
 
     #[test]
@@ -148,18 +210,24 @@ mod tests {
         }
         assert_eq!(m.home_request(TileId(1), 0, 2), 0);
         assert_eq!(m.ctrl_request(0, 0, 4), 0);
+        assert_eq!(m.link_path_request(TileId(1), TileId(2), 0), 0);
     }
 
     #[test]
     fn disabled_model_is_free() {
-        let mut m = ContentionModel::new(ContentionConfig {
-            enabled: false,
-            ..Default::default()
-        });
+        let mut m = ContentionModel::new(
+            ContentionConfig {
+                enabled: false,
+                ..Default::default()
+            },
+            Arc::new(Machine::tilepro64()),
+        );
         for _ in 0..10_000 {
             assert_eq!(m.home_request(TileId(0), 0, 2), 0);
+            assert_eq!(m.link_path_request(TileId(0), TileId(63), 0), 0);
         }
         assert_eq!(m.home_delay_cycles, 0);
+        assert_eq!(m.link_delay_cycles, 0);
     }
 
     #[test]
@@ -187,5 +255,65 @@ mod tests {
             m.home_request(TileId(0), 0, 2); // frontier at 200
         }
         assert_eq!(m.home_request(TileId(0), 150, 2), 50);
+    }
+
+    #[test]
+    fn link_self_route_is_free() {
+        let mut m = model();
+        assert_eq!(m.link_path_request(TileId(5), TileId(5), 0), 0);
+        assert!(m.link_requests.iter().all(|&n| n == 0));
+    }
+
+    #[test]
+    fn link_traffic_counts_every_hop() {
+        let mut m = model();
+        // (0,0) -> (7,7): 14 directed links, one count each.
+        m.link_path_request(TileId(0), TileId(63), 0);
+        assert_eq!(m.link_requests.iter().sum::<u64>(), 14);
+    }
+
+    #[test]
+    fn shared_link_serialises_disjoint_endpoints() {
+        // Two routes that share the first east link out of tile 0 must
+        // queue on it even though their endpoints differ.
+        let mut m = model();
+        assert_eq!(m.link_path_request(TileId(0), TileId(2), 0), 0);
+        let d = m.link_path_request(TileId(0), TileId(10), 0);
+        assert!(d > 0, "shared E(0,0) link must queue, got {d}");
+    }
+
+    #[test]
+    fn opposite_directions_do_not_contend() {
+        let mut m = model();
+        assert_eq!(m.link_path_request(TileId(0), TileId(7), 0), 0);
+        // The return route uses the west-facing links: independent servers.
+        assert_eq!(m.link_path_request(TileId(7), TileId(0), 0), 0);
+    }
+
+    #[test]
+    fn links_flag_disables_only_links() {
+        let mut m = ContentionModel::new(
+            ContentionConfig {
+                enabled: true,
+                links: false,
+            },
+            Arc::new(Machine::tilepro64()),
+        );
+        for _ in 0..100 {
+            assert_eq!(m.link_path_request(TileId(0), TileId(63), 0), 0);
+        }
+        assert_eq!(m.link_delay_cycles, 0);
+        // Home ports still serialise.
+        m.home_request(TileId(0), 0, 2);
+        assert_eq!(m.home_request(TileId(0), 0, 2), 2);
+    }
+
+    #[test]
+    fn link_servers_sized_by_machine() {
+        let m = ContentionModel::new(
+            ContentionConfig::default(),
+            Arc::new(Machine::custom(4, 8, 2).unwrap()),
+        );
+        assert_eq!(m.link_requests.len(), 4 * 32);
     }
 }

@@ -1,7 +1,8 @@
-//! Mesh interconnect: XY routing and shared-resource queueing contention.
+//! Mesh interconnect: XY routing (paths and directed-link walks) and
+//! shared-resource queueing contention (home ports, controllers, links).
 
 pub mod contention;
 pub mod routing;
 
 pub use contention::{ContentionConfig, ContentionModel};
-pub use routing::xy_path;
+pub use routing::{xy_links, xy_path, LinkHop, XyLinks};

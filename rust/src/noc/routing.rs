@@ -1,15 +1,18 @@
-//! XY dimension-order routing over the 8×8 mesh.
+//! XY dimension-order routing over the machine's mesh.
 //!
-//! Latency uses the hop count (`arch::hops`); the explicit path is used by
-//! tests and by the link-occupancy accounting in the contention model.
+//! Latency uses the hop count (`Machine::hops`). The explicit tile path
+//! ([`xy_path`]) is used by tests; the engine's hot path walks the same
+//! route through the allocation-free directed-link iterator ([`xy_links`]),
+//! which feeds the per-link servers of the contention model.
 
-use crate::arch::{Coord, TileId};
+use crate::arch::{Coord, Dir, Machine, TileId};
 
 /// Tiles traversed from `src` to `dst` under XY routing (X first, then Y),
-/// inclusive of both endpoints.
-pub fn xy_path(src: TileId, dst: TileId) -> Vec<TileId> {
-    let a = src.coord();
-    let b = dst.coord();
+/// inclusive of both endpoints. Allocates — kept for tests and reports;
+/// the engine uses [`xy_links`].
+pub fn xy_path(machine: &Machine, src: TileId, dst: TileId) -> Vec<TileId> {
+    let a = machine.coord(src);
+    let b = machine.coord(dst);
     let mut path = Vec::with_capacity((a.x.abs_diff(b.x) + a.y.abs_diff(b.y) + 1) as usize);
     let mut x = a.x;
     let y = a.y;
@@ -20,7 +23,7 @@ pub fn xy_path(src: TileId, dst: TileId) -> Vec<TileId> {
         } else {
             x -= 1;
         }
-        path.push(TileId::from_coord(Coord { x, y }));
+        path.push(machine.tile_at(Coord { x, y }));
     }
     let mut y = a.y;
     while y != b.y {
@@ -29,21 +32,91 @@ pub fn xy_path(src: TileId, dst: TileId) -> Vec<TileId> {
         } else {
             y -= 1;
         }
-        path.push(TileId::from_coord(Coord { x: b.x, y }));
+        path.push(machine.tile_at(Coord { x: b.x, y }));
     }
     path
 }
 
+/// One directed link on an XY route: the mesh link leaving `from` in
+/// direction `dir`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LinkHop {
+    pub from: TileId,
+    pub dir: Dir,
+}
+
+/// Allocation-free iterator over the directed links of the XY route from
+/// `src` to `dst` (X first, then Y) — `hops(src, dst)` items, none for a
+/// self-route. This is the engine's hot path: one iterator on the stack
+/// per remote request, no `Vec`.
+#[derive(Clone, Copy)]
+pub struct XyLinks {
+    grid_w: u32,
+    cur: Coord,
+    dst: Coord,
+}
+
+/// Directed links of the XY route from `src` to `dst` on `machine`.
+#[inline]
+pub fn xy_links(machine: &Machine, src: TileId, dst: TileId) -> XyLinks {
+    XyLinks {
+        grid_w: machine.grid_w(),
+        cur: machine.coord(src),
+        dst: machine.coord(dst),
+    }
+}
+
+impl Iterator for XyLinks {
+    type Item = LinkHop;
+
+    #[inline]
+    fn next(&mut self) -> Option<LinkHop> {
+        let from = TileId(self.cur.y * self.grid_w + self.cur.x);
+        if self.cur.x != self.dst.x {
+            let dir = if self.cur.x < self.dst.x {
+                self.cur.x += 1;
+                Dir::East
+            } else {
+                self.cur.x -= 1;
+                Dir::West
+            };
+            return Some(LinkHop { from, dir });
+        }
+        if self.cur.y != self.dst.y {
+            let dir = if self.cur.y < self.dst.y {
+                self.cur.y += 1;
+                Dir::South
+            } else {
+                self.cur.y -= 1;
+                Dir::North
+            };
+            return Some(LinkHop { from, dir });
+        }
+        None
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let n = (self.cur.x.abs_diff(self.dst.x) + self.cur.y.abs_diff(self.dst.y)) as usize;
+        (n, Some(n))
+    }
+}
+
+impl ExactSizeIterator for XyLinks {}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::arch::hops;
+
+    fn m() -> Machine {
+        Machine::tilepro64()
+    }
 
     #[test]
     fn path_length_is_hops_plus_one() {
+        let m = m();
         for (a, b) in [(0u32, 63u32), (5, 5), (7, 56), (10, 17)] {
-            let p = xy_path(TileId(a), TileId(b));
-            assert_eq!(p.len() as u32, hops(TileId(a), TileId(b)) + 1);
+            let p = xy_path(&m, TileId(a), TileId(b));
+            assert_eq!(p.len() as u32, m.hops(TileId(a), TileId(b)) + 1);
             assert_eq!(p[0], TileId(a));
             assert_eq!(*p.last().unwrap(), TileId(b));
         }
@@ -51,21 +124,64 @@ mod tests {
 
     #[test]
     fn path_moves_x_first() {
-        let p = xy_path(TileId(0), TileId(63)); // (0,0) -> (7,7)
+        let m = m();
+        let p = xy_path(&m, TileId(0), TileId(63)); // (0,0) -> (7,7)
         // After the first 7 steps we must be at (7,0).
-        assert_eq!(p[7].coord(), Coord { x: 7, y: 0 });
+        assert_eq!(m.coord(p[7]), Coord { x: 7, y: 0 });
     }
 
     #[test]
     fn adjacent_steps_are_neighbours() {
-        let p = xy_path(TileId(3), TileId(60));
+        let m = m();
+        let p = xy_path(&m, TileId(3), TileId(60));
         for w in p.windows(2) {
-            assert_eq!(hops(w[0], w[1]), 1);
+            assert_eq!(m.hops(w[0], w[1]), 1);
         }
     }
 
     #[test]
     fn self_path_is_singleton() {
-        assert_eq!(xy_path(TileId(9), TileId(9)), vec![TileId(9)]);
+        assert_eq!(xy_path(&m(), TileId(9), TileId(9)), vec![TileId(9)]);
+    }
+
+    #[test]
+    fn links_mirror_path_segments() {
+        // Every consecutive tile pair of xy_path is one LinkHop, in order,
+        // with the direction implied by the coordinate delta.
+        let m = m();
+        for (a, b) in [(0u32, 63u32), (63, 0), (5, 5), (7, 56), (42, 17)] {
+            let path = xy_path(&m, TileId(a), TileId(b));
+            let links: Vec<LinkHop> = xy_links(&m, TileId(a), TileId(b)).collect();
+            assert_eq!(links.len(), path.len() - 1);
+            for (hop, pair) in links.iter().zip(path.windows(2)) {
+                assert_eq!(hop.from, pair[0]);
+                let (ca, cb) = (m.coord(pair[0]), m.coord(pair[1]));
+                let dir = match () {
+                    _ if cb.x > ca.x => Dir::East,
+                    _ if cb.x < ca.x => Dir::West,
+                    _ if cb.y > ca.y => Dir::South,
+                    _ => Dir::North,
+                };
+                assert_eq!(hop.dir, dir);
+            }
+        }
+    }
+
+    #[test]
+    fn links_on_non_square_grid() {
+        let m = Machine::custom(4, 8, 2).unwrap();
+        // (0,0) -> (3,7): 3 east hops then 7 south hops.
+        let links: Vec<LinkHop> = xy_links(&m, TileId(0), TileId(31)).collect();
+        assert_eq!(links.len(), 10);
+        assert!(links[..3].iter().all(|h| h.dir == Dir::East));
+        assert!(links[3..].iter().all(|h| h.dir == Dir::South));
+        assert_eq!(xy_links(&m, TileId(9), TileId(9)).count(), 0);
+    }
+
+    #[test]
+    fn links_size_hint_is_exact() {
+        let m = m();
+        let it = xy_links(&m, TileId(0), TileId(63));
+        assert_eq!(it.len(), 14);
     }
 }

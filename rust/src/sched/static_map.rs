@@ -1,4 +1,4 @@
-//! Static ordered mapping: thread i pinned to core `i % 64`, forever.
+//! Static ordered mapping: thread i pinned to core `i % num_tiles`, forever.
 //!
 //! This is Algorithm 3's `STATIC_MAPPING` block: each leaf thread takes the
 //! next counter value and `sched_setaffinity`s itself onto that core — "in
@@ -6,20 +6,35 @@
 //! asymmetry (threads 0–31 fill the top half of the chip) is reproduced.
 
 use super::Scheduler;
-use crate::arch::{TileId, NUM_TILES};
+use crate::arch::{Machine, TileId};
 
-#[derive(Default)]
-pub struct StaticMapper;
+pub struct StaticMapper {
+    num_tiles: u32,
+}
 
 impl StaticMapper {
+    /// Mapper for the default TILEPro64 preset (tests and the paper runs).
     pub fn new() -> Self {
-        StaticMapper
+        StaticMapper::for_machine(&Machine::tilepro64())
+    }
+
+    /// Mapper sized to an arbitrary machine's tile count.
+    pub fn for_machine(machine: &Machine) -> Self {
+        StaticMapper {
+            num_tiles: machine.num_tiles(),
+        }
+    }
+}
+
+impl Default for StaticMapper {
+    fn default() -> Self {
+        StaticMapper::new()
     }
 }
 
 impl Scheduler for StaticMapper {
     fn initial_tile(&mut self, tid: usize) -> TileId {
-        TileId((tid as u32) % NUM_TILES)
+        TileId((tid as u32) % self.num_tiles)
     }
 
     fn maybe_migrate(&mut self, _tid: usize, _current: TileId, _now: u64) -> Option<TileId> {
@@ -58,5 +73,14 @@ mod tests {
         for tid in 0..32 {
             assert!(s.initial_tile(tid).coord().y < 4);
         }
+    }
+
+    #[test]
+    fn wraps_at_machine_tile_count() {
+        let m = Machine::custom(4, 4, 1).unwrap();
+        let mut s = StaticMapper::for_machine(&m);
+        assert_eq!(s.initial_tile(15), TileId(15));
+        assert_eq!(s.initial_tile(16), TileId(0));
+        assert_eq!(s.initial_tile(17), TileId(1));
     }
 }

@@ -10,7 +10,7 @@
 //! is swept in `benches/ablation_migration.rs`.
 
 use super::Scheduler;
-use crate::arch::{TileId, NUM_TILES};
+use crate::arch::{Machine, TileId};
 use crate::util::rng::Rng;
 
 #[derive(Clone, Copy, Debug)]
@@ -36,6 +36,7 @@ impl Default for TileLinuxConfig {
 pub struct TileLinuxScheduler {
     cfg: TileLinuxConfig,
     rng: Rng,
+    num_tiles: u32,
     /// Initial placement permutation (kernel spreads across idle cores but
     /// in an order the application cannot rely on).
     perm: Vec<u32>,
@@ -44,13 +45,22 @@ pub struct TileLinuxScheduler {
 }
 
 impl TileLinuxScheduler {
+    /// Scheduler on the default TILEPro64 preset (the paper's platform;
+    /// the seeded permutation over 64 tiles is unchanged from the seed).
     pub fn new(cfg: TileLinuxConfig) -> Self {
+        Self::new_on(cfg, &Machine::tilepro64())
+    }
+
+    /// Scheduler spreading over an arbitrary machine's tiles.
+    pub fn new_on(cfg: TileLinuxConfig, machine: &Machine) -> Self {
+        let num_tiles = machine.num_tiles();
         let mut rng = Rng::new(cfg.seed);
-        let mut perm: Vec<u32> = (0..NUM_TILES).collect();
+        let mut perm: Vec<u32> = (0..num_tiles).collect();
         rng.shuffle(&mut perm);
         TileLinuxScheduler {
             cfg,
             rng,
+            num_tiles,
             perm,
             next_check: Vec::new(),
             migrations: 0,
@@ -63,6 +73,16 @@ impl TileLinuxScheduler {
             ..Default::default()
         })
     }
+
+    pub fn with_seed_on(seed: u64, machine: &Machine) -> Self {
+        Self::new_on(
+            TileLinuxConfig {
+                seed,
+                ..Default::default()
+            },
+            machine,
+        )
+    }
 }
 
 impl Scheduler for TileLinuxScheduler {
@@ -70,7 +90,7 @@ impl Scheduler for TileLinuxScheduler {
         if self.next_check.len() <= tid {
             self.next_check.resize(tid + 1, self.cfg.check_interval);
         }
-        TileId(self.perm[tid % NUM_TILES as usize])
+        TileId(self.perm[tid % self.num_tiles as usize])
     }
 
     fn maybe_migrate(&mut self, tid: usize, current: TileId, now: u64) -> Option<TileId> {
@@ -83,9 +103,9 @@ impl Scheduler for TileLinuxScheduler {
         }
         // Load balancer picks another core; it doesn't know about home
         // caches (that's the paper's point), so the target is arbitrary.
-        let mut target = TileId(self.rng.below(NUM_TILES as u64) as u32);
+        let mut target = TileId(self.rng.below(self.num_tiles as u64) as u32);
         if target == current {
-            target = TileId((target.0 + 1) % NUM_TILES);
+            target = TileId((target.0 + 1) % self.num_tiles);
         }
         self.migrations += 1;
         Some(target)
@@ -146,6 +166,24 @@ mod tests {
         for step in 1..500u64 {
             if let Some(n) = s.maybe_migrate(0, tile, step * 2_000_000) {
                 assert_ne!(n, tile);
+                tile = n;
+            }
+        }
+    }
+
+    #[test]
+    fn machine_bound_scheduler_stays_in_range() {
+        let m = Machine::custom(4, 8, 2).unwrap();
+        let mut s = TileLinuxScheduler::with_seed_on(9, &m);
+        let mut tile = TileId(0);
+        for tid in 0..64 {
+            let t = s.initial_tile(tid);
+            assert!(t.0 < 32, "initial tile {t:?} off the 4x8 grid");
+            tile = t;
+        }
+        for step in 1..500u64 {
+            if let Some(n) = s.maybe_migrate(0, tile, step * 2_000_000) {
+                assert!(n.0 < 32, "migration target {n:?} off the 4x8 grid");
                 tile = n;
             }
         }

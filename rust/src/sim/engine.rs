@@ -21,17 +21,19 @@
 //!   oracle (tests pin both paths to byte-identical `RunStats`) and as the
 //!   baseline the perf bench compares against.
 //!
-//! Every line access pays the uncontended latency (arch::params), plus
-//! queueing at the home tile / memory controller (noc::contention), plus
-//! invalidation fan-out on writes.
+//! Every line access pays the uncontended latency (`Machine::access_cycles`
+//! on the run's machine description), plus queueing at the home tile /
+//! memory controller / directional mesh links (noc::contention), plus
+//! invalidation fan-out on writes. Which chip is simulated is a runtime
+//! value: `EngineConfig::for_machine` accepts any `arch::Machine`;
+//! `EngineConfig::tilepro64` is the paper-baseline preset (link contention
+//! off, pinned byte-identical to the published figure record).
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
+use std::sync::Arc;
 
-use crate::arch::{
-    controllers, CacheGeometry, Controller, HitLevel, LatencyParams, TileId, LINE_BYTES, NUM_TILES,
-    PAGE_BYTES,
-};
+use crate::arch::{HitLevel, LatencyParams, Machine, TileId, LINE_BYTES, PAGE_BYTES};
 use crate::cache::CacheSystem;
 use crate::mem::{AllocKind, Allocator, LineId, MemConfig, PageAttr, Placement, Region, VAddr};
 use crate::noc::{ContentionConfig, ContentionModel};
@@ -56,10 +58,11 @@ const LINES_PER_PAGE: u64 = PAGE_BYTES / LINE_BYTES;
 
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
+    /// The simulated chip. Sizes every resource vector (caches, homes,
+    /// sharer bitsets, link servers) and supplies the latency parameters.
+    pub machine: Arc<Machine>,
     pub mem: MemConfig,
     pub contention: ContentionConfig,
-    pub params: LatencyParams,
-    pub geometry: CacheGeometry,
     /// Fig. 4 ablation: with caches off every access goes to DRAM (routed
     /// via its home tile), which is where "the effect of memory striping is
     /// considerable" per the paper's closing discussion.
@@ -71,12 +74,24 @@ pub struct EngineConfig {
 }
 
 impl EngineConfig {
+    /// The paper-baseline TILEPro64 configuration. Link contention is OFF
+    /// here — the published fig1–fig4/table1 record predates the link
+    /// model and is pinned byte-identical in CI; enable it with
+    /// [`with_link_contention`](Self::with_link_contention) or run on an
+    /// explicit machine via [`for_machine`](Self::for_machine).
     pub fn tilepro64(mem: MemConfig) -> Self {
+        let mut cfg = EngineConfig::for_machine(Arc::new(Machine::tilepro64()), mem);
+        cfg.contention.links = false;
+        cfg
+    }
+
+    /// Simulate `mem` on an arbitrary machine, with the full contention
+    /// model (home ports, controllers, and mesh links) enabled.
+    pub fn for_machine(machine: Arc<Machine>, mem: MemConfig) -> Self {
         EngineConfig {
+            machine,
             mem,
             contention: ContentionConfig::default(),
-            params: LatencyParams::TILEPRO64,
-            geometry: CacheGeometry::TILEPRO64,
             caches_enabled: true,
             page_runs: true,
         }
@@ -91,6 +106,18 @@ impl EngineConfig {
     /// perf baseline).
     pub fn without_page_runs(mut self) -> Self {
         self.page_runs = false;
+        self
+    }
+
+    /// Ablation: drop per-link mesh queueing (`--no-link-contention`).
+    pub fn without_link_contention(mut self) -> Self {
+        self.contention.links = false;
+        self
+    }
+
+    /// Model per-link mesh queueing (on by default for `for_machine`).
+    pub fn with_link_contention(mut self) -> Self {
+        self.contention.links = true;
         self
     }
 }
@@ -191,8 +218,11 @@ pub struct Engine {
     pub alloc: Allocator,
     caches: CacheSystem,
     contention: ContentionModel,
+    machine: Arc<Machine>,
+    /// Copy of `machine.params` — the scalar latency terms are read on
+    /// every line event; distance-dependent arithmetic goes through
+    /// `machine.access_cycles`.
     params: LatencyParams,
-    ctrl_table: [Controller; 4],
     caches_enabled: bool,
     page_runs: bool,
     stats: RunStats,
@@ -200,18 +230,19 @@ pub struct Engine {
 
 impl Engine {
     pub fn new(cfg: EngineConfig) -> Self {
+        let machine = cfg.machine;
         Engine {
-            alloc: Allocator::new(cfg.mem),
-            caches: CacheSystem::new(&cfg.geometry),
-            contention: ContentionModel::new(cfg.contention),
-            params: cfg.params,
-            ctrl_table: controllers(),
+            alloc: Allocator::new(machine.clone(), cfg.mem),
+            caches: CacheSystem::new(machine.clone()),
+            contention: ContentionModel::new(cfg.contention, machine.clone()),
+            params: machine.params.clone(),
             caches_enabled: cfg.caches_enabled,
             page_runs: cfg.page_runs,
             stats: RunStats {
-                tile_home_requests: vec![0; crate::arch::NUM_TILES as usize],
+                tile_home_requests: vec![0; machine.num_tiles() as usize],
                 ..RunStats::default()
             },
+            machine,
         }
     }
 
@@ -235,6 +266,10 @@ impl Engine {
 
     pub fn params(&self) -> &LatencyParams {
         &self.params
+    }
+
+    pub fn machine(&self) -> &Arc<Machine> {
+        &self.machine
     }
 
     // ------------------------------------------------------------------
@@ -295,12 +330,12 @@ impl Engine {
         now: u64,
     ) -> u64 {
         self.stats.ddr_accesses += 1;
-        let ctrl_attach = self.ctrl_table[ctrl as usize].attach;
+        let ctrl_attach = self.machine.controller(ctrl).attach;
         let base = if write {
             // Posted store still pays controller occupancy, not latency.
             self.params.store_post
         } else {
-            self.params
+            self.machine
                 .access_cycles(tile, HitLevel::Ddr { ctrl_attach })
         };
         let mut cycles = base;
@@ -313,6 +348,9 @@ impl Engine {
         cycles += self
             .contention
             .ctrl_request(ctrl, now, self.params.ctrl_service);
+        // The DRAM transaction occupies every mesh link towards the
+        // controller (latency for the hops is already in `base`).
+        cycles += self.contention.link_path_request(tile, ctrl_attach, now);
         cycles
     }
 
@@ -351,25 +389,26 @@ impl Engine {
         match place {
             crate::cache::ReadPlace::L1 => {
                 self.stats.l1_hits += 1;
-                self.params.access_cycles(tile, HitLevel::L1)
+                self.params.l1_hit
             }
             crate::cache::ReadPlace::L2 => {
                 self.stats.l2_hits += 1;
-                self.params.access_cycles(tile, HitLevel::L2)
+                self.params.l2_hit
             }
             crate::cache::ReadPlace::Home { home } => {
                 self.stats.home_hits += 1;
                 self.stats.tile_home_requests[home.index()] += 1;
-                self.params.access_cycles(tile, HitLevel::Home { home })
+                self.machine.access_cycles(tile, HitLevel::Home { home })
                     + self
                         .contention
                         .home_request(home, now, self.params.home_service)
+                    + self.contention.link_path_request(tile, home, now)
             }
             crate::cache::ReadPlace::Ddr => {
                 self.stats.ddr_accesses += 1;
-                let ctrl_attach = self.ctrl_table[ctrl as usize].attach;
+                let ctrl_attach = self.machine.controller(ctrl).attach;
                 let mut c = self
-                    .params
+                    .machine
                     .access_cycles(tile, HitLevel::Ddr { ctrl_attach });
                 // A miss on a remotely-homed line is routed *via* the home
                 // tile (DDC), occupying its port on the way to DRAM.
@@ -382,6 +421,7 @@ impl Engine {
                 c + self
                     .contention
                     .ctrl_request(ctrl, now, self.params.ctrl_service)
+                    + self.contention.link_path_request(tile, ctrl_attach, now)
             }
         }
     }
@@ -396,13 +436,15 @@ impl Engine {
             crate::cache::WriteLevel::RemotePost { home } => {
                 // Posted store: issuing cost is small, but the home port
                 // bandwidth is consumed — that queueing is the hot-spot
-                // mechanism of the non-localised disaster case.
+                // mechanism of the non-localised disaster case — and so is
+                // every mesh link on the way to the home.
                 self.stats.home_hits += 1;
                 self.stats.tile_home_requests[home.index()] += 1;
                 self.params.store_post
                     + self
                         .contention
                         .home_request(home, now, self.params.home_service)
+                    + self.contention.link_path_request(tile, home, now)
             }
         };
         if out.invalidated > 0 {
@@ -427,9 +469,14 @@ impl Engine {
         write: bool,
         now: u64,
     ) -> u64 {
-        let home = attr.homing.home_of(line).expect("page attr resolved");
+        let home = attr
+            .homing
+            .home_of(line, self.machine.num_tiles())
+            .expect("page attr resolved");
         if !self.caches_enabled {
-            let ctrl = attr.placement.controller_of(line.addr());
+            let ctrl = attr
+                .placement
+                .controller_of(line.addr(), self.machine.num_controllers());
             return self.uncached_line(tile, line, home, ctrl, write, now);
         }
         if write {
@@ -437,7 +484,8 @@ impl Engine {
         }
         let place = self.caches.read(tile, line, home);
         let ctrl = if place == crate::cache::ReadPlace::Ddr {
-            attr.placement.controller_of(line.addr())
+            attr.placement
+                .controller_of(line.addr(), self.machine.num_controllers())
         } else {
             0
         };
@@ -484,7 +532,7 @@ impl Engine {
         clock0: u64,
     ) -> u64 {
         if self.caches_enabled {
-            if let Some(home) = attr.homing.uniform_page_home(first) {
+            if let Some(home) = attr.homing.uniform_page_home(first, self.machine.num_tiles()) {
                 return if write {
                     self.write_run(tile, first, count, home, clock0)
                 } else {
@@ -516,10 +564,11 @@ impl Engine {
     ) -> u64 {
         let params = &self.params;
         let contention = &mut self.contention;
-        let ctrl_table = &self.ctrl_table;
+        let machine = &self.machine;
+        let num_ctrls = machine.num_controllers();
         let l1_cost = params.l1_hit;
         let l2_cost = params.l2_hit;
-        let home_cost = params.access_cycles(tile, HitLevel::Home { home });
+        let home_cost = machine.access_cycles(tile, HitLevel::Home { home });
         let remote = home != tile;
         let (mut l1, mut l2, mut home_hits, mut ddr, mut home_reqs) = (0u64, 0u64, 0u64, 0u64, 0u64);
         let mut cycles = 0u64;
@@ -538,18 +587,21 @@ impl Engine {
                     crate::cache::ReadPlace::Home { .. } => {
                         home_hits += 1;
                         home_reqs += 1;
-                        home_cost + contention.home_request(home, now, params.home_service)
+                        home_cost
+                            + contention.home_request(home, now, params.home_service)
+                            + contention.link_path_request(tile, home, now)
                     }
                     crate::cache::ReadPlace::Ddr => {
                         ddr += 1;
-                        let ctrl = placement.controller_of(line.addr());
-                        let ctrl_attach = ctrl_table[ctrl as usize].attach;
-                        let mut c = params.access_cycles(tile, HitLevel::Ddr { ctrl_attach });
+                        let ctrl = placement.controller_of(line.addr(), num_ctrls);
+                        let ctrl_attach = machine.controller(ctrl).attach;
+                        let mut c = machine.access_cycles(tile, HitLevel::Ddr { ctrl_attach });
                         if remote {
                             home_reqs += 1;
                             c += contention.home_request(home, now, params.home_service);
                         }
                         c + contention.ctrl_request(ctrl, now, params.ctrl_service)
+                            + contention.link_path_request(tile, ctrl_attach, now)
                     }
                 };
             });
@@ -584,7 +636,9 @@ impl Engine {
                     params.l2_hit
                 } else {
                     home_hits += 1;
-                    params.store_post + contention.home_request(home, now, params.home_service)
+                    params.store_post
+                        + contention.home_request(home, now, params.home_service)
+                        + contention.link_path_request(tile, home, now)
                 };
                 if out.invalidated > 0 {
                     invals += out.invalidated as u64;
@@ -616,7 +670,11 @@ impl Engine {
     ) -> Result<RunStats, EngineError> {
         program.validate()?;
         let n = program.threads.len();
-        assert!(n <= 4 * NUM_TILES as usize, "too many threads");
+        assert!(
+            n <= 4 * self.machine.num_tiles() as usize,
+            "too many threads for a {} machine",
+            self.machine.name()
+        );
 
         let mut threads: Vec<ThreadState> = (0..n)
             .map(|tid| {
@@ -706,6 +764,10 @@ impl Engine {
         self.stats.thread_cycles = threads.iter().map(|t| t.clock).collect();
         self.stats.home_queue_cycles = self.contention.home_delay_cycles;
         self.stats.ctrl_queue_cycles = self.contention.ctrl_delay_cycles;
+        if self.contention.links_enabled() {
+            self.stats.link_queue_cycles = self.contention.link_delay_cycles;
+            self.stats.link_requests = std::mem::take(&mut self.contention.link_requests);
+        }
         self.stats.allocs = self.alloc.allocs;
         self.stats.frees = self.alloc.frees;
         Ok(self.stats)
@@ -1101,25 +1163,90 @@ mod tests {
         };
         for policy in [HashPolicy::None, HashPolicy::AllButStack] {
             for caches in [true, false] {
-                let mk = |page_runs: bool| {
-                    let mut cfg = EngineConfig::tilepro64(MemConfig {
-                        hash_policy: policy,
-                        striping: true,
-                    });
-                    cfg.caches_enabled = caches;
-                    cfg.page_runs = page_runs;
-                    let mut e = Engine::new(cfg);
-                    let mut p = build(&mut e);
-                    e.run(&mut p, &mut StaticMapper::new()).unwrap()
-                };
-                let fast = mk(true);
-                let slow = mk(false);
-                assert_eq!(
-                    fast.to_json().encode(),
-                    slow.to_json().encode(),
-                    "fast path diverged ({policy:?}, caches={caches})"
-                );
+                for links in [false, true] {
+                    let mk = |page_runs: bool| {
+                        let mut cfg = EngineConfig::tilepro64(MemConfig {
+                            hash_policy: policy,
+                            striping: true,
+                        });
+                        cfg.caches_enabled = caches;
+                        cfg.page_runs = page_runs;
+                        cfg.contention.links = links;
+                        let mut e = Engine::new(cfg);
+                        let mut p = build(&mut e);
+                        e.run(&mut p, &mut StaticMapper::new()).unwrap()
+                    };
+                    let fast = mk(true);
+                    let slow = mk(false);
+                    assert_eq!(
+                        fast.to_json().encode(),
+                        slow.to_json().encode(),
+                        "fast path diverged ({policy:?}, caches={caches}, links={links})"
+                    );
+                    assert_eq!(
+                        fast.link_requests, slow.link_requests,
+                        "per-link traffic diverged ({policy:?}, caches={caches}, links={links})"
+                    );
+                }
             }
         }
+    }
+
+    #[test]
+    fn non_default_machine_runs_and_sizes_stats() {
+        // A 4×8 non-square grid with links on: the heatmap vector and the
+        // link vector are sized by the machine, and remote traffic shows
+        // up as link requests.
+        let machine = Arc::new(crate::arch::Machine::custom(4, 8, 2).unwrap());
+        let mut e = Engine::new(EngineConfig::for_machine(
+            machine.clone(),
+            MemConfig {
+                hash_policy: HashPolicy::AllButStack,
+                striping: true,
+            },
+        ));
+        let r = e.prealloc(TileId(0), 1 << 20);
+        let mk = |addr| {
+            let mut b = TraceBuilder::new();
+            b.read(Loc::Abs(addr), 1 << 20);
+            b
+        };
+        let mut p = Program::from_builders(vec![mk(r.addr), mk(r.addr)], 0, 0);
+        let stats = e.run(&mut p, &mut StaticMapper::for_machine(&machine)).unwrap();
+        assert_eq!(stats.tile_home_requests.len(), 32);
+        assert_eq!(stats.link_requests.len(), 4 * 32);
+        assert!(
+            stats.link_requests.iter().sum::<u64>() > 0,
+            "hash-for-home traffic must cross mesh links"
+        );
+    }
+
+    #[test]
+    fn link_contention_slows_the_hot_spot() {
+        // Many threads hammering remotely-homed data: with links modelled
+        // the makespan cannot shrink, and link queueing must appear.
+        let run = |links: bool| {
+            let mut cfg = EngineConfig::tilepro64(MemConfig {
+                hash_policy: HashPolicy::None,
+                striping: true,
+            });
+            cfg.contention.links = links;
+            let mut e = Engine::new(cfg);
+            let r = e.prealloc_touched(TileId(0), 1 << 19);
+            let mut builders = Vec::new();
+            for _ in 0..16 {
+                let mut b = TraceBuilder::new();
+                b.write(Loc::Abs(r.addr), 1 << 19);
+                builders.push(b);
+            }
+            let mut p = Program::from_builders(builders, 0, 0);
+            e.run(&mut p, &mut StaticMapper::new()).unwrap()
+        };
+        let without = run(false);
+        let with = run(true);
+        assert!(with.link_queue_cycles > 0, "expected link queueing");
+        assert!(!with.link_requests.is_empty());
+        assert_eq!(without.link_queue_cycles, 0);
+        assert!(without.link_requests.is_empty());
     }
 }

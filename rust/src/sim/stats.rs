@@ -18,12 +18,20 @@ pub struct RunStats {
     pub migrations: u64,
     pub home_queue_cycles: u64,
     pub ctrl_queue_cycles: u64,
+    /// Total queueing cycles spent waiting for directional mesh links
+    /// (zero when link contention is not modelled).
+    pub link_queue_cycles: u64,
     pub compute_cycles: u64,
     pub allocs: u64,
     pub frees: u64,
-    /// Remote requests served by each tile's home port (64 entries) — the
-    /// hot-spot heatmap of `metrics::heatmap`.
+    /// Remote requests served by each tile's home port (`num_tiles`
+    /// entries) — the hot-spot heatmap of `metrics::home_heatmap`.
     pub tile_home_requests: Vec<u64>,
+    /// Per-directed-link traffic counts (`4 * num_tiles` entries indexed
+    /// by `Machine::link_index`) — the hottest-link heatmap. **Empty when
+    /// link contention was not modelled**, which also keeps the JSON of
+    /// link-free runs byte-identical to the pre-link-model record.
+    pub link_requests: Vec<u64>,
 }
 
 impl RunStats {
@@ -50,8 +58,24 @@ impl RunStats {
         self.ddr_accesses as f64 / self.line_accesses as f64
     }
 
+    /// Whether link contention was modelled for this run.
+    pub fn links_modelled(&self) -> bool {
+        !self.link_requests.is_empty()
+    }
+
+    /// Index and request count of the busiest directed link, if any saw
+    /// traffic (label it via `Machine::link_label`).
+    pub fn hottest_link(&self) -> Option<(usize, u64)> {
+        self.link_requests
+            .iter()
+            .copied()
+            .enumerate()
+            .max_by_key(|&(ix, n)| (n, std::cmp::Reverse(ix)))
+            .filter(|&(_, n)| n > 0)
+    }
+
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("makespan_cycles", Json::num(self.makespan_cycles as f64)),
             ("seconds", Json::num(self.seconds())),
             ("line_accesses", Json::num(self.line_accesses as f64)),
@@ -70,13 +94,37 @@ impl RunStats {
                 "tile_home_requests",
                 Json::arr(self.tile_home_requests.iter().map(|&n| Json::num(n as f64))),
             ),
-        ])
+        ];
+        // Link fields only exist when the run modelled link contention:
+        // runs without it (including the pinned tilepro64 paper baseline)
+        // keep their pre-link-model JSON bytes.
+        if self.links_modelled() {
+            fields.push(("link_queue_cycles", Json::num(self.link_queue_cycles as f64)));
+            fields.push((
+                "link_requests_total",
+                Json::num(self.link_requests.iter().sum::<u64>() as f64),
+            ));
+            let (hot_ix, hot_n) = self.hottest_link().unwrap_or((0, 0));
+            fields.push((
+                "hottest_link",
+                Json::obj(vec![
+                    ("index", Json::num(hot_ix as f64)),
+                    ("requests", Json::num(hot_n as f64)),
+                ]),
+            ));
+        }
+        Json::obj(fields)
     }
 
     /// One-line human summary.
     pub fn summary(&self) -> String {
+        let links = if self.links_modelled() {
+            format!(" link {}", self.link_queue_cycles)
+        } else {
+            String::new()
+        };
         format!(
-            "{:.3} ms | {} accesses | hits L1 {:.1}% L2 {:.1}% home {:.1}% ddr {:.1}% | {} inval | {} migr | queue home {} ctrl {}",
+            "{:.3} ms | {} accesses | hits L1 {:.1}% L2 {:.1}% home {:.1}% ddr {:.1}% | {} inval | {} migr | queue home {} ctrl {}{}",
             self.seconds() * 1e3,
             self.line_accesses,
             pct(self.l1_hits, self.line_accesses),
@@ -87,6 +135,7 @@ impl RunStats {
             self.migrations,
             self.home_queue_cycles,
             self.ctrl_queue_cycles,
+            links,
         )
     }
 }
@@ -138,5 +187,32 @@ mod tests {
         for k in ["makespan_cycles", "seconds", "migrations", "ddr_accesses"] {
             assert!(j.get(k).is_some(), "missing {k}");
         }
+    }
+
+    #[test]
+    fn link_fields_only_when_modelled() {
+        let plain = RunStats::default().to_json();
+        assert!(plain.get("link_queue_cycles").is_none());
+        let s = RunStats {
+            link_queue_cycles: 7,
+            link_requests: vec![0, 3, 1, 3],
+            ..Default::default()
+        };
+        let j = s.to_json();
+        assert!(j.get("link_queue_cycles").is_some());
+        assert!(j.get("hottest_link").is_some());
+        // Ties break towards the lowest index.
+        assert_eq!(s.hottest_link(), Some((1, 3)));
+        assert!(s.summary().contains("link 7"));
+    }
+
+    #[test]
+    fn hottest_link_none_when_idle() {
+        let s = RunStats {
+            link_requests: vec![0; 8],
+            ..Default::default()
+        };
+        assert_eq!(s.hottest_link(), None);
+        assert!(s.to_json().get("link_queue_cycles").is_some());
     }
 }

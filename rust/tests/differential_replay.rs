@@ -32,43 +32,61 @@ fn cfg(policy: HashPolicy) -> EngineConfig {
 
 /// Replay `build`'s program streamed and recorded (on identically prepared
 /// engines) and require byte-identical stats JSON; also replay it through
-/// the per-line reference walk and require the same bytes again.
+/// the per-line reference walk and require the same bytes again. Runs the
+/// whole comparison twice: once on the paper-baseline config and once with
+/// per-link mesh contention enabled (the link servers must be billed in
+/// the same order by all three replays).
 fn assert_differential(label: &str, policy: HashPolicy, build: &dyn Fn(&mut Engine) -> Program) {
-    // Streamed replay on the page-run fast path.
-    let mut e_stream = Engine::new(cfg(policy));
-    let mut streamed = build(&mut e_stream);
+    for links in [false, true] {
+        let mk_cfg = || {
+            let mut c = cfg(policy);
+            c.contention.links = links;
+            c
+        };
+        // Streamed replay on the page-run fast path.
+        let mut e_stream = Engine::new(mk_cfg());
+        let mut streamed = build(&mut e_stream);
 
-    // Recorded replay: materialise the same streams to Vec<Op>, then run
-    // on an engine with identical pre-run (prealloc) state.
-    let mut e_rec = Engine::new(cfg(policy));
-    let _ = build(&mut e_rec);
-    let mut recorded = Program::from_ops(streamed.record(), streamed.num_slots, streamed.num_events);
+        // Recorded replay: materialise the same streams to Vec<Op>, then run
+        // on an engine with identical pre-run (prealloc) state.
+        let mut e_rec = Engine::new(mk_cfg());
+        let _ = build(&mut e_rec);
+        let mut recorded =
+            Program::from_ops(streamed.record(), streamed.num_slots, streamed.num_events);
 
-    // Reference-walk replay (per-line translation, no bulk runs).
-    let mut e_ref = Engine::new(cfg(policy).without_page_runs());
-    let mut for_ref = build(&mut e_ref);
+        // Reference-walk replay (per-line translation, no bulk runs).
+        let mut e_ref = Engine::new(mk_cfg().without_page_runs());
+        let mut for_ref = build(&mut e_ref);
 
-    let s_stream = e_stream
-        .run(&mut streamed, &mut StaticMapper::new())
-        .unwrap_or_else(|e| panic!("{label} streamed: {e}"));
-    let s_rec = e_rec
-        .run(&mut recorded, &mut StaticMapper::new())
-        .unwrap_or_else(|e| panic!("{label} recorded: {e}"));
-    let s_ref = e_ref
-        .run(&mut for_ref, &mut StaticMapper::new())
-        .unwrap_or_else(|e| panic!("{label} reference: {e}"));
+        let s_stream = e_stream
+            .run(&mut streamed, &mut StaticMapper::new())
+            .unwrap_or_else(|e| panic!("{label} streamed: {e}"));
+        let s_rec = e_rec
+            .run(&mut recorded, &mut StaticMapper::new())
+            .unwrap_or_else(|e| panic!("{label} recorded: {e}"));
+        let s_ref = e_ref
+            .run(&mut for_ref, &mut StaticMapper::new())
+            .unwrap_or_else(|e| panic!("{label} reference: {e}"));
 
-    let js = s_stream.to_json().encode();
-    assert_eq!(
-        js,
-        s_rec.to_json().encode(),
-        "{label} ({policy:?}): streamed vs recorded stats diverged"
-    );
-    assert_eq!(
-        js,
-        s_ref.to_json().encode(),
-        "{label} ({policy:?}): fast path vs reference walk diverged"
-    );
+        let js = s_stream.to_json().encode();
+        assert_eq!(
+            js,
+            s_rec.to_json().encode(),
+            "{label} ({policy:?}, links={links}): streamed vs recorded stats diverged"
+        );
+        assert_eq!(
+            js,
+            s_ref.to_json().encode(),
+            "{label} ({policy:?}, links={links}): fast path vs reference walk diverged"
+        );
+        // The per-link traffic vectors are not part of the JSON record;
+        // pin them directly.
+        assert_eq!(
+            s_stream.link_requests, s_ref.link_requests,
+            "{label} ({policy:?}, links={links}): per-link traffic diverged"
+        );
+        assert_eq!(s_stream.links_modelled(), links);
+    }
 }
 
 #[test]

@@ -1,11 +1,13 @@
 //! Integration: DDC cache system + coherence over realistic access mixes.
 
-use tilesim::arch::{CacheGeometry, TileId};
+use std::sync::Arc;
+
+use tilesim::arch::{Machine, TileId, NUM_TILES};
 use tilesim::cache::{CacheSystem, ReadPlace, WriteLevel};
 use tilesim::mem::{Homing, LineId};
 
 fn sys() -> CacheSystem {
-    CacheSystem::new(&CacheGeometry::TILEPRO64)
+    CacheSystem::new(Arc::new(Machine::tilepro64()))
 }
 
 #[test]
@@ -18,14 +20,14 @@ fn distributed_l3_is_union_of_l2s() {
     let lines = (2u64 << 20) / 64;
     for l in 0..lines {
         let line = LineId(l);
-        let home = homing.home_of(line).unwrap();
+        let home = homing.home_of(line, NUM_TILES).unwrap();
         s.read(TileId(0), line, home);
     }
     let mut home_hits = 0;
     let mut ddr = 0;
     for l in 0..lines {
         let line = LineId(l);
-        let home = homing.home_of(line).unwrap();
+        let home = homing.home_of(line, NUM_TILES).unwrap();
         match s.read(TileId(1), line, home) {
             ReadPlace::Home { .. } => home_hits += 1,
             ReadPlace::Ddr { .. } => ddr += 1,

@@ -1,15 +1,20 @@
 //! Integration: allocator + page table + homing + striping acting together.
 
-use tilesim::arch::{TileId, PAGE_BYTES};
+use std::sync::Arc;
+
+use tilesim::arch::{Machine, TileId, PAGE_BYTES};
 use tilesim::mem::{
     AllocKind, Allocator, HashPolicy, Homing, LineId, MemConfig, Placement, VAddr,
 };
 
 fn alloc(policy: HashPolicy, striping: bool) -> Allocator {
-    Allocator::new(MemConfig {
-        hash_policy: policy,
-        striping,
-    })
+    Allocator::new(
+        Arc::new(Machine::tilepro64()),
+        MemConfig {
+            hash_policy: policy,
+            striping,
+        },
+    )
 }
 
 #[test]

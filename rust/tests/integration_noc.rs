@@ -1,15 +1,21 @@
 //! Integration: routing + contention + latency parameters.
 
-use tilesim::arch::{hops, LatencyParams, HitLevel, TileId};
-use tilesim::noc::{xy_path, ContentionConfig, ContentionModel};
+use std::sync::Arc;
+
+use tilesim::arch::{hops, HitLevel, LatencyParams, Machine, TileId};
+use tilesim::noc::{xy_links, xy_path, ContentionConfig, ContentionModel};
+
+fn model() -> ContentionModel {
+    ContentionModel::new(ContentionConfig::default(), Arc::new(Machine::tilepro64()))
+}
 
 #[test]
 fn latency_grows_with_route_length() {
-    let p = LatencyParams::TILEPRO64;
+    let m = Machine::tilepro64();
     let req = TileId(0);
     let mut last = 0;
     for dst in [0u32, 1, 9, 27, 63] {
-        let lat = p.access_cycles(req, HitLevel::Home { home: TileId(dst) });
+        let lat = m.access_cycles(req, HitLevel::Home { home: TileId(dst) });
         assert!(lat >= last, "latency must be monotone in distance");
         last = lat;
     }
@@ -17,12 +23,16 @@ fn latency_grows_with_route_length() {
 
 #[test]
 fn route_length_matches_latency_hops() {
+    let m = Machine::tilepro64();
     let p = LatencyParams::TILEPRO64;
     for (a, b) in [(0u32, 63u32), (5, 58), (12, 12)] {
-        let path = xy_path(TileId(a), TileId(b));
-        let lat = p.access_cycles(TileId(a), HitLevel::Home { home: TileId(b) });
+        let path = xy_path(&m, TileId(a), TileId(b));
+        let lat = m.access_cycles(TileId(a), HitLevel::Home { home: TileId(b) });
         let expect = p.l2_hit + p.noc_header + 2 * p.noc_hop * (path.len() as u64 - 1);
         assert_eq!(lat, expect);
+        // The machine-aware latency agrees with the tilepro64-pinned twin
+        // used by the AOT latency model.
+        assert_eq!(lat, p.access_cycles(TileId(a), HitLevel::Home { home: TileId(b) }));
     }
 }
 
@@ -30,7 +40,7 @@ fn route_length_matches_latency_hops() {
 fn hot_home_throughput_limited_to_service_rate() {
     // Simulate 64 requesters in lockstep rounds hammering one home; the
     // aggregate completion rate must approach 1 line / service cycles.
-    let mut m = ContentionModel::new(ContentionConfig::default());
+    let mut m = model();
     let service = 2u64;
     let mut clocks = vec![0u64; 64];
     for _round in 0..200 {
@@ -51,7 +61,7 @@ fn hot_home_throughput_limited_to_service_rate() {
 #[test]
 fn spread_homes_scale_linearly() {
     // Same load spread over 64 homes: makespan stays near per-thread work.
-    let mut m = ContentionModel::new(ContentionConfig::default());
+    let mut m = model();
     let mut clocks = vec![0u64; 64];
     for _round in 0..200 {
         for t in 0..64 {
@@ -68,7 +78,7 @@ fn spread_homes_scale_linearly() {
 
 #[test]
 fn controllers_are_parallel_resources() {
-    let mut m = ContentionModel::new(ContentionConfig::default());
+    let mut m = model();
     // Saturate controller 0.
     for _ in 0..10_000 {
         m.ctrl_request(0, 0, 4);
@@ -81,11 +91,47 @@ fn controllers_are_parallel_resources() {
 
 #[test]
 fn mesh_is_symmetric_and_bounded() {
+    let m = Machine::tilepro64();
     for a in 0..64u32 {
         for b in 0..64u32 {
-            let h = hops(TileId(a), TileId(b));
-            assert_eq!(h, hops(TileId(b), TileId(a)));
+            let h = m.hops(TileId(a), TileId(b));
+            assert_eq!(h, m.hops(TileId(b), TileId(a)));
+            assert_eq!(h, hops(TileId(a), TileId(b)), "preset helper must agree");
             assert!(h <= 14);
         }
     }
+}
+
+#[test]
+fn shared_column_links_contend_across_threads() {
+    // Eight requesters on row 0 all targeting the bottom-left corner: XY
+    // routing funnels them into the same west/south column links, so the
+    // later requests queue. The same traffic east-west spread across
+    // distinct rows sees no link queueing.
+    let machine = Arc::new(Machine::tilepro64());
+    let mut funnel = ContentionModel::new(ContentionConfig::default(), machine.clone());
+    let mut total_funnel = 0;
+    for x in 1..8u32 {
+        total_funnel += funnel.link_path_request(TileId(x), TileId(56), 0);
+    }
+    let mut spread = ContentionModel::new(ContentionConfig::default(), machine);
+    let mut total_spread = 0;
+    for y in 0..8u32 {
+        // Row-local east routes: disjoint links per row.
+        total_spread += spread.link_path_request(TileId(y * 8), TileId(y * 8 + 7), 0);
+    }
+    assert!(total_funnel > 0, "funnel must queue on shared links");
+    assert_eq!(total_spread, 0, "disjoint rows must not contend");
+}
+
+#[test]
+fn link_walk_scales_with_machine() {
+    // The same logical route is longer on a bigger grid — and the link
+    // servers are per-machine, sized by `num_links`.
+    let big = Arc::new(Machine::nuca256());
+    let mut m = ContentionModel::new(ContentionConfig::default(), big.clone());
+    m.link_path_request(TileId(0), TileId(16 * 16 - 1), 0);
+    assert_eq!(m.link_requests.len(), 4 * 256);
+    assert_eq!(m.link_requests.iter().sum::<u64>(), 30);
+    assert_eq!(xy_links(&big, TileId(0), TileId(255)).count(), 30);
 }

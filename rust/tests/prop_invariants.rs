@@ -1,6 +1,8 @@
 //! Property tests over the substrates (own driver — see util::prop).
 
-use tilesim::arch::{hops, CacheGeometry, TileId, NUM_TILES, PAGE_BYTES};
+use std::sync::Arc;
+
+use tilesim::arch::{hops, Machine, TileId, NUM_TILES, PAGE_BYTES};
 use tilesim::cache::{CacheSystem, SetAssoc};
 use tilesim::mem::{
     AllocKind, Allocator, HashPolicy, Homing, LineId, MemConfig, VAddr,
@@ -9,17 +11,24 @@ use tilesim::noc::xy_path;
 use tilesim::util::json::{parse, Json};
 use tilesim::util::prop::{self, assert_holds};
 
+fn tilepro() -> Arc<Machine> {
+    Arc::new(Machine::tilepro64())
+}
+
 #[test]
 fn prop_allocator_never_overlaps_and_frees_are_reusable() {
     prop::check("allocator non-overlap", 64, |rng| {
-        let mut a = Allocator::new(MemConfig {
-            hash_policy: if rng.chance(0.5) {
-                HashPolicy::AllButStack
-            } else {
-                HashPolicy::None
+        let mut a = Allocator::new(
+            tilepro(),
+            MemConfig {
+                hash_policy: if rng.chance(0.5) {
+                    HashPolicy::AllButStack
+                } else {
+                    HashPolicy::None
+                },
+                striping: rng.chance(0.5),
             },
-            striping: rng.chance(0.5),
-        });
+        );
         let mut live: Vec<(u64, u64)> = Vec::new();
         let mut addrs = Vec::new();
         for _ in 0..rng.range(1, 60) {
@@ -56,11 +65,71 @@ fn prop_homing_is_deterministic_and_in_range() {
             _ => Homing::PageHash,
         };
         let line = LineId(rng.next_u64() % (1 << 30));
-        let h1 = homing.home_of(line);
-        let h2 = homing.home_of(line);
+        let h1 = homing.home_of(line, NUM_TILES);
+        let h2 = homing.home_of(line, NUM_TILES);
         assert_holds(h1 == h2, "homing not deterministic")?;
         assert_holds(h1.unwrap().0 < NUM_TILES, "home out of range")
     });
+}
+
+#[test]
+fn prop_machine_round_trips_and_homes_in_range() {
+    // Any grid — including non-square ones like 4×8 — must round-trip
+    // `tile_at(coord(t)) == t` for every tile, keep its controllers on the
+    // grid, and hash every line to an in-range home.
+    prop::check("machine round trip", 96, |rng| {
+        let w = 1 + rng.below(16) as u32;
+        let h = 1 + rng.below(16) as u32;
+        // Edge capacity: W controllers on a single-row grid, 2W otherwise.
+        let cap = if h == 1 { w } else { 2 * w };
+        let ctrls = 1 + rng.below(cap as u64) as u32;
+        let m = Machine::custom(w, h, ctrls).map_err(|e| e.to_string())?;
+        let attaches: std::collections::HashSet<_> =
+            m.controllers().iter().map(|c| c.attach).collect();
+        assert_holds(
+            attaches.len() == ctrls as usize,
+            "controllers must attach to distinct tiles",
+        )?;
+        for t in m.tiles() {
+            assert_holds(m.tile_at(m.coord(t)) == t, "coord round trip")?;
+            assert_holds(m.coord(t).x < w && m.coord(t).y < h, "coord in range")?;
+        }
+        for c in m.controllers() {
+            assert_holds(c.attach.0 < m.num_tiles(), "controller off-grid")?;
+        }
+        let homing = if rng.chance(0.5) {
+            Homing::HashForHome
+        } else {
+            Homing::PageHash
+        };
+        for _ in 0..64 {
+            let line = LineId(rng.next_u64() % (1 << 30));
+            let home = homing.home_of(line, m.num_tiles()).unwrap();
+            assert_holds(home.0 < m.num_tiles(), "home off the machine")?;
+            assert_holds(
+                m.hops(home, m.nearest_controller(home).attach) < w + h,
+                "nearest controller unreachable",
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_non_square_4x8_machine_homes_every_line() {
+    // The explicit non-square pin from the issue: a 4×8 grid homes every
+    // line of a large range in-range under both hash granularities.
+    let m = Machine::custom(4, 8, 2).unwrap();
+    assert_eq!(m.num_tiles(), 32);
+    for t in m.tiles() {
+        assert_eq!(m.tile_at(m.coord(t)), t);
+    }
+    for l in 0..100_000u64 {
+        for homing in [Homing::HashForHome, Homing::PageHash] {
+            let home = homing.home_of(LineId(l), m.num_tiles()).unwrap();
+            assert!(home.0 < 32, "line {l} homed off-grid at {home:?}");
+        }
+    }
 }
 
 #[test]
@@ -108,7 +177,7 @@ fn prop_cache_contains_iff_inserted_not_evicted_or_invalidated() {
 fn prop_coherence_single_writer_no_stale_l1() {
     // After any write, no OTHER tile may hit the written line in its L1.
     prop::check("no stale copies", 32, |rng| {
-        let mut sys = CacheSystem::new(&CacheGeometry::TILEPRO64);
+        let mut sys = CacheSystem::new(tilepro());
         let tiles: Vec<TileId> = (0..4).map(|_| TileId(rng.below(64) as u32)).collect();
         let homes: Vec<TileId> = (0..8).map(|_| TileId(rng.below(64) as u32)).collect();
         for _ in 0..300 {
@@ -142,7 +211,8 @@ fn prop_xy_route_valid() {
     prop::check("xy routing", 256, |rng| {
         let a = TileId(rng.below(64) as u32);
         let b = TileId(rng.below(64) as u32);
-        let path = xy_path(a, b);
+        let m = Machine::tilepro64();
+        let path = xy_path(&m, a, b);
         assert_holds(path[0] == a && *path.last().unwrap() == b, "endpoints")?;
         assert_holds(path.len() as u32 == hops(a, b) + 1, "length")?;
         for w in path.windows(2) {
@@ -179,10 +249,13 @@ fn prop_json_round_trips() {
 #[test]
 fn prop_first_touch_is_sticky_per_page() {
     prop::check("first touch sticky", 64, |rng| {
-        let mut a = Allocator::new(MemConfig {
-            hash_policy: HashPolicy::None,
-            striping: true,
-        });
+        let mut a = Allocator::new(
+            tilepro(),
+            MemConfig {
+                hash_policy: HashPolicy::None,
+                striping: true,
+            },
+        );
         let r = a
             .alloc(TileId(0), rng.range(1, 3 * PAGE_BYTES), AllocKind::Heap)
             .map_err(|e| e.to_string())?;
