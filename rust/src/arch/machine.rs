@@ -65,6 +65,24 @@ impl std::error::Error for MachineError {}
 
 impl MachineSpec {
     /// Parse a `--machine` argument: a preset name or `WxH[:ctrls]`.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use tilesim::arch::MachineSpec;
+    ///
+    /// // Presets round-trip through their labels…
+    /// assert_eq!(MachineSpec::parse("epiphany16").unwrap().label(), "epiphany16");
+    ///
+    /// // …and `WxH:ctrls` builds an arbitrary mesh.
+    /// let spec = MachineSpec::parse("4x8:2").unwrap();
+    /// let machine = spec.build();
+    /// assert_eq!((machine.grid_w(), machine.grid_h()), (4, 8));
+    /// assert_eq!(machine.num_controllers(), 2);
+    ///
+    /// // Out-of-range grids are rejected at parse time.
+    /// assert!(MachineSpec::parse("65x4").is_err());
+    /// ```
     pub fn parse(s: &str) -> Result<MachineSpec, MachineError> {
         match s {
             "tilepro64" => return Ok(MachineSpec::TilePro64),
@@ -174,9 +192,10 @@ impl Machine {
     }
 
     /// Epiphany-III-shaped 4×4 array: one external-memory link on the east
-    /// edge (middle row), as in the Parallella's eLink. Latency/geometry
-    /// parameters stay TILEPro-calibrated — the presets vary *topology*;
-    /// per-chip latency recalibration is a ROADMAP open item.
+    /// edge (middle row), as in the Parallella's eLink, with
+    /// eLink/eMesh-calibrated latency and local-memory geometry
+    /// ([`LatencyParams::EPIPHANY16`], per Richie et al., arXiv:1704.08343)
+    /// rather than the TILEPro numbers the preset originally reused.
     pub fn epiphany16() -> Machine {
         Machine {
             spec: MachineSpec::Epiphany16,
@@ -186,8 +205,8 @@ impl Machine {
                 id: 0,
                 attach: TileId(7), // (x=3, y=1): east edge, middle row
             }],
-            params: LatencyParams::TILEPRO64,
-            geometry: CacheGeometry::TILEPRO64,
+            params: LatencyParams::EPIPHANY16,
+            geometry: CacheGeometry::EPIPHANY16,
         }
     }
 

@@ -58,6 +58,11 @@ pub struct LatencyParams {
     /// Per-element ALU cost for workload "compute" phases (e.g. one merge
     /// comparison), in cycles.
     pub compute_per_elem: u64,
+    /// Flits per cache-line payload on this mesh (line bytes / flit bytes).
+    /// Used by the reply-path wormhole approximation: a data reply costs
+    /// `max(header_hops * noc_hop, line_flits * link_service)` to traverse,
+    /// not a per-hop serial walk of the whole payload.
+    pub line_flits: u64,
 }
 
 impl LatencyParams {
@@ -79,6 +84,36 @@ impl LatencyParams {
         link_service: 1,
         migration_cost: 30_000,
         compute_per_elem: 1,
+        // One 64 B line crosses the 16 B-wide TILEPro mesh in four beats.
+        line_flits: 4,
+    };
+
+    /// Epiphany-III eLink/eMesh calibration (Richie et al.,
+    /// arXiv:1704.08343). The 16-core Epiphany has no caches — each core
+    /// owns 32 KB of flat local SRAM — so the "L1/L2" terms model local
+    /// SRAM banks, and the single off-chip eLink is the only DRAM path:
+    ///
+    /// - local SRAM loads complete in a cycle; a "home bank" lookup is a
+    ///   few cycles of arbitration;
+    /// - eMesh *writes* stream at ~1.5 cycles/hop fire-and-forget, while
+    ///   reads are round trips an order of magnitude slower — modelled as
+    ///   a cheap `store_post` against a doubled `noc_hop`;
+    /// - the eLink sustains ~600 MB/s against a 600 MHz clock: ~16 cycles
+    ///   of controller occupancy per 64 B line and a long DRAM latency;
+    /// - the eMesh datapath is 8 B wide, so a line is 8 flits.
+    pub const EPIPHANY16: LatencyParams = LatencyParams {
+        l1_hit: 1,
+        l2_hit: 4,
+        noc_header: 3,
+        noc_hop: 2,
+        ddr: 300,
+        store_post: 2,
+        home_service: 1,
+        ctrl_service: 16,
+        link_service: 1,
+        migration_cost: 30_000,
+        compute_per_elem: 1,
+        line_flits: 8,
     };
 
     /// Uncontended cycles for one cache-line access satisfied at `level`,
@@ -122,6 +157,17 @@ impl CacheGeometry {
         l1_bytes: 8 * 1024,
         l1_ways: 2,
         l2_bytes: 64 * 1024,
+        l2_ways: 4,
+    };
+
+    /// Epiphany-III local-memory stand-in: each core owns 32 KB of flat
+    /// SRAM (no caches on the real chip), modelled here as a small
+    /// register-file-like "L1" in front of the 32 KB bank so the shared
+    /// cache-walk code applies unchanged.
+    pub const EPIPHANY16: CacheGeometry = CacheGeometry {
+        l1_bytes: 4 * 1024,
+        l1_ways: 2,
+        l2_bytes: 32 * 1024,
         l2_ways: 4,
     };
 
@@ -183,6 +229,20 @@ mod tests {
         let g = CacheGeometry::TILEPRO64;
         assert_eq!(g.l1_sets(), 64);
         assert_eq!(g.l2_sets(), 256);
+    }
+
+    #[test]
+    fn epiphany_elink_is_the_bottleneck() {
+        // arXiv:1704.08343: the single ~600 MB/s eLink, not the on-chip
+        // eMesh, bounds off-chip traffic — controller occupancy per line
+        // must dwarf both link occupancy and home service.
+        let e = LatencyParams::EPIPHANY16;
+        assert!(e.ctrl_service > 4 * e.link_service.max(e.home_service));
+        // eMesh writes are fire-and-forget and cheaper than TILEPro's.
+        assert!(e.store_post < LatencyParams::TILEPRO64.store_post);
+        // 8 B eMesh datapath: twice the flits per line of the 16 B TILEPro.
+        assert_eq!(e.line_flits, 2 * LatencyParams::TILEPRO64.line_flits);
+        assert_eq!(CacheGeometry::EPIPHANY16.l2_sets(), 128);
     }
 
     #[test]

@@ -7,6 +7,13 @@
 //! by the machine's tile count — one 64-bit word per line on grids up to 64
 //! tiles (the tilepro64/epiphany16 fast path), `ceil(tiles/64)` words on
 //! larger grids like the 16×16 nuca256.
+//!
+//! The victim set a [`write_claim`](Directory::write_claim) /
+//! [`fanout`](Directory::fanout) pair produces is not just latency
+//! bookkeeping: the engine hands it to the contention model, which walks
+//! the XY route home→victim per invalidated tile (plus the ack return
+//! path) and bills every directed mesh link — the coherence traffic the
+//! paper's localisation keeps off the mesh.
 
 use std::sync::Arc;
 

@@ -36,7 +36,8 @@ impl TileCaches {
     }
 }
 
-/// Where a load was satisfied. Unlike [`HitLevel`] this carries no
+/// Where a load was satisfied. Unlike [`HitLevel`](crate::arch::HitLevel)
+/// this carries no
 /// controller attach point — the cache walk doesn't need it, and resolving
 /// the controller costs a page-table lookup the engine only pays on the
 /// DDR path.
@@ -125,33 +126,14 @@ impl CacheSystem {
         place
     }
 
-    /// Store to `line` from `req`.
+    /// Store to `line` from `req`. (One-line shorthand over
+    /// [`write_run`](Self::write_run); callers that need the invalidation
+    /// victim set — e.g. to bill the fan-out routes — use `write_run`
+    /// directly.)
     pub fn write(&mut self, req: TileId, line: LineId, home: TileId) -> WriteOutcome {
-        let level = if home == req {
-            // Own L2 is the home cache: write-allocate there (write-back to
-            // DRAM is asynchronous and not billed to the store).
-            let rc = &mut self.tiles[req.index()];
-            rc.l2.insert(line);
-            WriteLevel::LocalL2
-        } else {
-            // Post to the home tile; the home caches the line on our
-            // behalf. Do NOT allocate locally (no write-allocate for
-            // remote stores on this machine). An existing local copy stays
-            // valid — the writer remains a sharer.
-            self.tiles[home.index()].l2.insert(line);
-            WriteLevel::RemotePost { home }
-        };
-        let fan = self.directory.write_invalidate(line, home, req);
-        for victim in &fan.victims {
-            let vc = &mut self.tiles[victim.index()];
-            vc.l1.invalidate(line);
-            vc.l2.invalidate(line);
-        }
-        WriteOutcome {
-            level,
-            invalidated: fan.victims.len() as u32,
-            invalidation_hops: fan.max_hops_from_home,
-        }
+        let mut out = None;
+        self.write_run(req, line, 1, home, |_line, o, _victims| out = Some(o));
+        out.expect("write_run visits exactly one line")
     }
 
     /// Bulk load of `count` sequential lines from `first`, all homed on
@@ -215,17 +197,19 @@ impl CacheSystem {
         }
     }
 
-    /// Bulk store of `count` sequential same-home lines (page-run fast
-    /// path). Invalidation fan-out is computed per line, exactly as
-    /// [`write`](Self::write) would; the common no-other-sharer case skips
-    /// the fan-out allocation entirely.
+    /// Bulk store of `count` sequential same-home lines (the per-line
+    /// store path is [`write`](Self::write), a one-line run). Invalidation
+    /// fan-out is computed per line; the common no-other-sharer case skips
+    /// the fan-out allocation entirely. `on_line` also receives the
+    /// invalidated tiles (empty when none) so the engine can bill the
+    /// home→victim fan-out and ack routes through the link servers.
     pub fn write_run(
         &mut self,
         req: TileId,
         first: LineId,
         count: u64,
         home: TileId,
-        mut on_line: impl FnMut(LineId, WriteOutcome),
+        mut on_line: impl FnMut(LineId, WriteOutcome, &[TileId]),
     ) {
         let level = if home == req {
             WriteLevel::LocalL2
@@ -238,26 +222,33 @@ impl CacheSystem {
             // cache when local; posted fill when remote).
             self.tiles[home.index()].l2.insert(line);
             let others = self.directory.write_claim(line, req);
-            let out = if others == 0 {
-                WriteOutcome {
-                    level,
-                    invalidated: 0,
-                    invalidation_hops: 0,
-                }
-            } else {
-                let fan = self.directory.fanout(others, home);
-                for victim in &fan.victims {
-                    let vc = &mut self.tiles[victim.index()];
-                    vc.l1.invalidate(line);
-                    vc.l2.invalidate(line);
-                }
+            if others == 0 {
+                on_line(
+                    line,
+                    WriteOutcome {
+                        level,
+                        invalidated: 0,
+                        invalidation_hops: 0,
+                    },
+                    &[],
+                );
+                continue;
+            }
+            let fan = self.directory.fanout(others, home);
+            for victim in &fan.victims {
+                let vc = &mut self.tiles[victim.index()];
+                vc.l1.invalidate(line);
+                vc.l2.invalidate(line);
+            }
+            on_line(
+                line,
                 WriteOutcome {
                     level,
                     invalidated: fan.victims.len() as u32,
                     invalidation_hops: fan.max_hops_from_home,
-                }
-            };
-            on_line(line, out);
+                },
+                &fan.victims,
+            );
         }
     }
 
@@ -453,7 +444,8 @@ mod tests {
                 }
             }
             let mut outs = Vec::new();
-            bulk.write_run(req, LineId(0), 160, home, |_, o| {
+            bulk.write_run(req, LineId(0), 160, home, |_, o, victims| {
+                assert_eq!(victims.len() as u32, o.invalidated, "home {home:?}");
                 outs.push((o.level, o.invalidated, o.invalidation_hops))
             });
             for (i, l) in (0..160).enumerate() {
@@ -469,6 +461,20 @@ mod tests {
                 perline.directory.invalidations_sent
             );
         }
+    }
+
+    #[test]
+    fn write_run_reports_invalidation_victims() {
+        // Two remote sharers of a line: the writing run must hand the
+        // engine exactly those tiles (the fan-out routes it will bill).
+        let mut s = sys();
+        let home = TileId(4);
+        s.read(TileId(2), LineId(0), home);
+        s.read(TileId(3), LineId(0), home);
+        let mut seen: Vec<Vec<TileId>> = Vec::new();
+        s.write_run(TileId(1), LineId(0), 2, home, |_, _, v| seen.push(v.to_vec()));
+        assert_eq!(seen[0], vec![TileId(2), TileId(3)]);
+        assert!(seen[1].is_empty(), "line 1 had no sharers");
     }
 
     #[test]

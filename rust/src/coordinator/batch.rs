@@ -20,7 +20,7 @@ use crate::harness::SweepTable;
 use crate::sim::{Engine, RunStats};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
-use crate::workloads::{mergesort, microbench, radix};
+use crate::workloads::{mergesort, microbench, pingpong, radix};
 
 /// Which trace generator a run replays.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -31,6 +31,8 @@ pub enum Workload {
     Mergesort { variant: mergesort::Variant },
     /// The related-work radix baseline.
     Radix { digit_bits: u32 },
+    /// Write ping-pong / false sharing (the `falseshare` coherence sweep).
+    PingPong { passes: u32 },
 }
 
 impl Workload {
@@ -39,6 +41,7 @@ impl Workload {
             Workload::Microbench { reps } => format!("microbench/r{reps}"),
             Workload::Mergesort { variant } => format!("mergesort/{}", variant.label()),
             Workload::Radix { digit_bits } => format!("radix/b{digit_bits}"),
+            Workload::PingPong { passes } => format!("pingpong/p{passes}"),
         }
     }
 }
@@ -63,6 +66,9 @@ pub struct RunSpec {
     /// specs (the published record predates the link model); on for
     /// machine sweeps unless `--no-link-contention`.
     pub link_contention: bool,
+    /// Bill coherence traffic (invalidation fan-out + reply paths) on the
+    /// links. Follows `link_contention` unless `--no-coherence-links`.
+    pub coherence_links: bool,
     pub seed: u64,
 }
 
@@ -81,6 +87,7 @@ impl RunSpec {
             caches: true,
             machine: MachineSpec::TilePro64,
             link_contention: false,
+            coherence_links: false,
             seed,
         }
     }
@@ -101,9 +108,14 @@ impl RunSpec {
     pub fn label(&self) -> String {
         let machine = if self.non_baseline_machine() {
             format!(
-                " on {}{}",
+                " on {}{}{}",
                 self.machine.label(),
-                if self.link_contention { "" } else { " nolinks" }
+                if self.link_contention { "" } else { " nolinks" },
+                if self.link_contention && !self.coherence_links {
+                    " nocoh"
+                } else {
+                    ""
+                }
             )
         } else {
             String::new()
@@ -126,6 +138,7 @@ impl RunSpec {
         let c = case(self.case_id);
         let machine = self.machine.build_arc();
         let mut cfg = c.engine_config_on(machine.clone(), self.striping, self.link_contention);
+        cfg.contention.coherence = self.coherence_links;
         if !self.caches {
             cfg = cfg.without_caches();
         }
@@ -157,6 +170,15 @@ impl RunSpec {
                     localised: c.localised,
                 },
             ),
+            Workload::PingPong { passes } => pingpong::build(
+                &mut engine,
+                &pingpong::PingPongConfig {
+                    elems: self.elems,
+                    threads: self.threads,
+                    passes,
+                    localised: c.localised,
+                },
+            ),
         };
         let mut sched = c.mapper.scheduler_on(self.seed, &machine);
         engine
@@ -177,10 +199,15 @@ impl RunSpec {
             ("seed", Json::str(self.seed.to_string())),
         ];
         // Machine fields only for non-baseline runs: the pinned tilepro64
-        // figure record keeps its pre-machine-layer JSON bytes.
+        // figure record keeps its pre-machine-layer JSON bytes. The
+        // coherence flag is emitted only when it deviates from its
+        // links-follow default, keeping pre-coherence link records stable.
         if self.non_baseline_machine() {
             fields.push(("machine", Json::str(self.machine.label())));
             fields.push(("link_contention", Json::Bool(self.link_contention)));
+            if self.coherence_links != self.link_contention {
+                fields.push(("coherence_links", Json::Bool(self.coherence_links)));
+            }
         }
         Json::obj(fields)
     }
@@ -210,6 +237,34 @@ impl Metric {
 
 /// An explicit, fully-expanded sweep: a `row_labels.len() × series.len()`
 /// grid of [`RunSpec`]s (row-major) plus an optional baseline run.
+///
+/// # Examples
+///
+/// Expand a small case × size × thread grid and run it through the worker
+/// pool — the result table has one row per (elems, threads, seed) point
+/// and one column per (case, workload) series:
+///
+/// ```
+/// use tilesim::coordinator::{BatchRunner, SweepSpec, Workload};
+/// use tilesim::workloads::mergesort::Variant;
+///
+/// let spec = SweepSpec::grid(
+///     "doc demo",
+///     &[1, 8],                                             // Table 1 cases
+///     &[Workload::Mergesort { variant: Variant::Localised }],
+///     &[1 << 12],                                          // elems
+///     &[2],                                                // threads
+///     &[7],                                                // seeds
+/// );
+/// spec.validate();
+/// assert_eq!(spec.runs.len(), 2);
+/// let table = BatchRunner::new(1).table(&spec);
+/// assert_eq!(table.rows.len(), 1);
+/// assert_eq!(
+///     table.series,
+///     vec!["case1/mergesort/localised", "case8/mergesort/localised"],
+/// );
+/// ```
 pub struct SweepSpec {
     pub title: String,
     pub x_label: String,
@@ -291,6 +346,7 @@ impl SweepSpec {
                                 caches: true,
                                 machine: MachineSpec::TilePro64,
                                 link_contention: false,
+                                coherence_links: false,
                                 seed: s,
                             });
                         }
@@ -319,12 +375,18 @@ impl SweepSpec {
     }
 
     /// Re-target every run of the sweep (baseline included) at `machine`,
-    /// with link contention as requested — how `--machine` re-aims the
-    /// figure specs at a different chip.
-    pub fn on_machine(mut self, machine: MachineSpec, link_contention: bool) -> SweepSpec {
+    /// with link contention and coherence-link billing as requested — how
+    /// `--machine` re-aims the figure specs at a different chip.
+    pub fn on_machine(
+        mut self,
+        machine: MachineSpec,
+        link_contention: bool,
+        coherence_links: bool,
+    ) -> SweepSpec {
         for r in self.runs.iter_mut().chain(self.baseline.iter_mut()) {
             r.machine = machine;
             r.link_contention = link_contention;
+            r.coherence_links = coherence_links;
         }
         if machine != MachineSpec::TilePro64 || link_contention {
             self.title = format!("{} [machine {}]", self.title, machine.label());
@@ -622,11 +684,50 @@ mod tests {
     #[test]
     fn on_machine_retargets_baseline_too() {
         let spec = crate::coordinator::experiment::table1_spec(1 << 12, 4, 7)
-            .on_machine(MachineSpec::Nuca256, true);
+            .on_machine(MachineSpec::Nuca256, true, true);
         assert!(spec.runs.iter().all(|r| r.machine == MachineSpec::Nuca256));
         let b = spec.baseline.as_ref().expect("table1 has a baseline");
         assert_eq!(b.machine, MachineSpec::Nuca256);
-        assert!(b.link_contention);
+        assert!(b.link_contention && b.coherence_links);
         assert!(spec.title.contains("[machine nuca256]"));
+    }
+
+    #[test]
+    fn coherence_flag_emitted_only_when_it_deviates() {
+        let mut spec = RunSpec::mergesort(8, 1 << 12, 4, 42);
+        spec.machine = MachineSpec::Nuca256;
+        spec.link_contention = true;
+        spec.coherence_links = true;
+        assert!(spec.to_json().get("coherence_links").is_none());
+        assert!(!spec.label().contains("nocoh"));
+        spec.coherence_links = false;
+        assert_eq!(
+            spec.to_json().get("coherence_links").unwrap().encode(),
+            "false"
+        );
+        assert!(spec.label().contains("nocoh"));
+    }
+
+    #[test]
+    fn coherence_billing_changes_the_simulation() {
+        // Ping-pong on a linked machine: turning coherence billing off
+        // must not leave the makespan unchanged (the fan-out routes are
+        // load-bearing), and must zero the coherence stats.
+        let mut on = RunSpec::mergesort(4, 1 << 12, 8, 42);
+        on.workload = Workload::PingPong { passes: 4 };
+        on.machine = MachineSpec::Nuca256;
+        on.link_contention = true;
+        on.coherence_links = true;
+        let mut off = on.clone();
+        off.coherence_links = false;
+        let (a, b) = (on.execute(), off.execute());
+        assert!(a.invalidation_link_cycles > 0);
+        assert_eq!(b.invalidation_link_cycles, 0);
+        assert!(
+            a.makespan_cycles > b.makespan_cycles,
+            "coherence billing must cost cycles: {} vs {}",
+            a.makespan_cycles,
+            b.makespan_cycles
+        );
     }
 }

@@ -72,6 +72,7 @@ pub fn fig1_spec(elems: u64, threads: usize, reps_sweep: &[u32], seed: u64) -> S
         caches: true,
         machine: MachineSpec::TilePro64,
         link_contention: false,
+        coherence_links: false,
         seed,
     };
     let mut runs = Vec::new();
@@ -294,6 +295,7 @@ pub fn grid_scaling_spec(
     machines: &[MachineSpec],
     seed: u64,
     link_contention: bool,
+    coherence_links: bool,
 ) -> SweepSpec {
     let mut runs = Vec::new();
     let mut row_labels = Vec::new();
@@ -303,6 +305,7 @@ pub fn grid_scaling_spec(
             let mut r = RunSpec::mergesort(case_id, elems, threads, seed);
             r.machine = m;
             r.link_contention = link_contention;
+            r.coherence_links = link_contention && coherence_links;
             runs.push(r);
         }
     }
@@ -332,7 +335,106 @@ pub fn grid_scaling(
     seed: u64,
     link_contention: bool,
 ) -> SweepTable {
-    BatchRunner::auto().table(&grid_scaling_spec(elems, threads, machines, seed, link_contention))
+    BatchRunner::auto().table(&grid_scaling_spec(
+        elems,
+        threads,
+        machines,
+        seed,
+        link_contention,
+        link_contention,
+    ))
+}
+
+// ---------------------------------------------------------------------------
+// False sharing — write ping-pong across grid sizes (coherence traffic)
+// ---------------------------------------------------------------------------
+
+/// Default machine ladder for the falseshare sweep: the paper's 8×8
+/// against the forward-looking 16×16, where the coherence traffic should
+/// visibly saturate the mesh.
+pub fn falseshare_machines() -> Vec<MachineSpec> {
+    vec![MachineSpec::TilePro64, MachineSpec::Nuca256]
+}
+
+/// The coherence-traffic sweep enabled by invalidation/reply link billing:
+/// the write ping-pong workload ([`crate::workloads::pingpong`]) at each
+/// grid size, non-localised (case 4: static mapping, no hash — every
+/// falsely-shared line homed on tile 0, invalidations ping-ponging across
+/// the mesh) against localised (case 8: privatised writes). Link and
+/// coherence billing are always on — measuring that traffic is the point —
+/// so even the 8×8 row is a non-baseline machine config.
+///
+/// The headline number is not the seconds table but the per-row
+/// [`falseshare_report`] ratio of `link_queue_cycles +
+/// invalidation_link_cycles` between the two variants.
+pub fn falseshare_spec(
+    elems: u64,
+    threads: usize,
+    passes: u32,
+    machines: &[MachineSpec],
+    seed: u64,
+) -> SweepSpec {
+    let mut runs = Vec::new();
+    let mut row_labels = Vec::new();
+    for &m in machines {
+        row_labels.push(m.label());
+        for case_id in [4u8, 8] {
+            let mut r = RunSpec::mergesort(case_id, elems, threads, seed);
+            r.workload = Workload::PingPong { passes };
+            r.machine = m;
+            r.link_contention = true;
+            r.coherence_links = true;
+            runs.push(r);
+        }
+    }
+    SweepSpec {
+        title: format!(
+            "False sharing: write ping-pong of {elems} ints, {threads} threads x {passes} \
+             passes, coherence links billed (exec time, s)"
+        ),
+        x_label: "machine".into(),
+        series: vec!["case4 falseshare".into(), "case8 localised".into()],
+        row_labels,
+        runs,
+        baseline: None,
+        metric: Metric::Seconds,
+    }
+}
+
+pub fn falseshare(
+    elems: u64,
+    threads: usize,
+    passes: u32,
+    machines: &[MachineSpec],
+    seed: u64,
+) -> SweepTable {
+    BatchRunner::auto().table(&falseshare_spec(elems, threads, passes, machines, seed))
+}
+
+/// Per-machine coherence-traffic ratios for a falseshare result store:
+/// `(link_queue_cycles + invalidation_link_cycles)` of the non-localised
+/// variant over the localised one — the "how much mesh does false sharing
+/// burn" number the sweep exists to report.
+pub fn falseshare_report(
+    spec: &SweepSpec,
+    store: &crate::coordinator::batch::ResultStore,
+) -> String {
+    let mut out = String::from(
+        "coherence traffic on the mesh (link_queue_cycles + invalidation_link_cycles):\n",
+    );
+    for (row, label) in spec.row_labels.iter().enumerate() {
+        let shared = store.results[row * 2].coherence_link_cycles();
+        let local = store.results[row * 2 + 1].coherence_link_cycles();
+        let ratio = if local == 0 {
+            f64::INFINITY
+        } else {
+            shared as f64 / local as f64
+        };
+        out.push_str(&format!(
+            "  {label:>10}: non-localised {shared} vs localised {local} (ratio {ratio:.1})\n"
+        ));
+    }
+    out
 }
 
 /// §2's three homing classes head-to-head on the repeated-scan kernel:
@@ -516,7 +618,7 @@ mod tests {
     #[test]
     fn grid_scaling_spec_shape() {
         let machines = grid_scaling_machines();
-        let spec = grid_scaling_spec(1 << 14, 4, &machines, DEFAULT_SEED, true);
+        let spec = grid_scaling_spec(1 << 14, 4, &machines, DEFAULT_SEED, true, true);
         spec.validate();
         assert_eq!(spec.row_labels, vec!["4x4:2", "tilepro64", "nuca256"]);
         assert_eq!(spec.series.len(), 3);
@@ -527,7 +629,8 @@ mod tests {
     fn grid_scaling_links_bite_non_localised_on_16x16() {
         // The acceptance pin: at 16×16 the non-localised single-home case
         // queues on mesh links; the localised style barely touches them.
-        let spec = grid_scaling_spec(1 << 16, 16, &[MachineSpec::Nuca256], DEFAULT_SEED, true);
+        let spec =
+            grid_scaling_spec(1 << 16, 16, &[MachineSpec::Nuca256], DEFAULT_SEED, true, true);
         let store = crate::coordinator::batch::BatchRunner::auto().run(&spec);
         let one_home = &store.results[1]; // case 4 column
         let localised = &store.results[2]; // case 8 column
@@ -540,6 +643,56 @@ mod tests {
             "localised link queueing {} should be far below non-localised {}",
             localised.link_queue_cycles,
             one_home.link_queue_cycles
+        );
+    }
+
+    #[test]
+    fn falseshare_spec_shape() {
+        let machines = falseshare_machines();
+        let spec = falseshare_spec(1 << 13, 8, 2, &machines, DEFAULT_SEED);
+        spec.validate();
+        assert_eq!(spec.row_labels, vec!["tilepro64", "nuca256"]);
+        assert_eq!(spec.series.len(), 2);
+        assert!(spec
+            .runs
+            .iter()
+            .all(|r| r.link_contention && r.coherence_links));
+    }
+
+    #[test]
+    fn falseshare_16x16_saturates_the_non_localised_variant() {
+        // The acceptance pin: with coherence-link billing on, the 16×16
+        // non-localised ping-pong's link_queue + invalidation_link cycles
+        // must dwarf the localised variant's, and the report says so.
+        let spec = falseshare_spec(1 << 13, 16, 4, &[MachineSpec::Nuca256], DEFAULT_SEED);
+        let store = crate::coordinator::batch::BatchRunner::auto().run(&spec);
+        let shared = store.results[0].coherence_link_cycles();
+        let local = store.results[1].coherence_link_cycles();
+        assert!(shared > 0, "ping-pong must queue on the mesh");
+        assert!(
+            shared > 10 * local.max(1),
+            "non-localised coherence traffic {shared} must dwarf localised {local}"
+        );
+        assert!(
+            store.results[0].invalidation_link_cycles > 0,
+            "invalidation routes must be billed"
+        );
+        let report = falseshare_report(&spec, &store);
+        assert!(report.contains("nuca256"), "{report}");
+        assert!(report.contains("ratio"), "{report}");
+    }
+
+    #[test]
+    fn falseshare_hurts_more_on_16x16_than_8x8() {
+        // Fig. 4-crossover flavour: the same ping-pong burns more mesh on
+        // the larger grid (longer fan-out routes, more links crossed).
+        let spec = falseshare_spec(1 << 13, 16, 4, &falseshare_machines(), DEFAULT_SEED);
+        let store = crate::coordinator::batch::BatchRunner::auto().run(&spec);
+        let small = store.results[0].coherence_link_cycles();
+        let big = store.results[2].coherence_link_cycles();
+        assert!(
+            big > small,
+            "16x16 coherence traffic {big} must exceed 8x8's {small}"
         );
     }
 

@@ -11,7 +11,7 @@
 //! sorting kernels mirror the paper's merge-sort workload on the request
 //! path.
 //!
-//! Layer map (DESIGN.md §3):
+//! Layer map (see `docs/ARCHITECTURE.md` for the contributor guide):
 //! - **L3 (this crate)** — the coordinator: simulator substrates
 //!   ([`arch`], [`mem`], [`cache`], [`noc`], [`sim`], [`sched`]), the
 //!   localisation API and experiment matrix ([`coordinator`]), the paper's
@@ -19,6 +19,8 @@
 //! - **L2/L1 (python/compile)** — JAX chunked sorter calling Pallas bitonic
 //!   kernels, AOT-lowered to `artifacts/*.hlo.txt`, executed by
 //!   [`runtime`] with Python never on the request path.
+//!
+//! Figure-by-figure reproduction commands live in `docs/REPRO.md`.
 
 pub mod arch;
 pub mod cache;

@@ -2,16 +2,20 @@
 //! TILEPro64 and exercise the PJRT request path.
 //!
 //! Subcommands:
-//!   info                         chip + artifact summary
-//!   microbench [flags]           one micro-benchmark run (Alg. 2)
-//!   mergesort  [flags]           one merge-sort run (Alg. 3/4)
-//!   sort       [flags]           REAL sort via the AOT'd Pallas kernels
-//!   experiment <fig1|fig2|fig3|fig4|table1|all> [flags]
-//!   batch      <fig…|all|grid>   parallel sweeps over the worker pool
 //!
-//! Common flags: --size N (supports k/m/ki/mi suffixes), --threads N,
-//! --reps N, --case 1..8, --seed S, --jobs N, --no-striping, --json,
-//! --out DIR.
+//! ```text
+//! info                         chip + artifact summary
+//! microbench [flags]           one micro-benchmark run (Alg. 2)
+//! mergesort  [flags]           one merge-sort run (Alg. 3/4)
+//! sort       [flags]           REAL sort via the AOT'd Pallas kernels
+//! experiment <fig1|fig2|fig3|fig4|table1|all> [flags]
+//! batch      <fig…|all|grid|gridscale|falseshare>
+//!                              parallel sweeps over the worker pool
+//! ```
+//!
+//! Common flags: `--size N` (supports k/m/ki/mi suffixes), `--threads N`,
+//! `--reps N`, `--case 1..8`, `--seed S`, `--jobs N`, `--no-striping`,
+//! `--json`, `--out DIR`.
 
 use tilesim::arch::{Machine, MachineSpec};
 use tilesim::coordinator::batch::{derive_seeds, BatchRunner, RunSpec, SweepSpec, Workload};
@@ -58,6 +62,8 @@ const BOOL_FLAGS: &[&str] = &[
     "heatmap",
     "link-contention",
     "no-link-contention",
+    "coherence-links",
+    "no-coherence-links",
 ];
 
 fn run(argv: &[String]) -> Result<(), Box<dyn std::error::Error>> {
@@ -79,6 +85,7 @@ fn run(argv: &[String]) -> Result<(), Box<dyn std::error::Error>> {
     let seed = args.u64("seed", experiment::DEFAULT_SEED)?;
     let machine_spec = machine_arg(&args)?;
     let links = link_contention_arg(&args, machine_spec);
+    let coherence = coherence_links_arg(&args, links);
     match args.positional()[0].as_str() {
         "info" => info(),
         "microbench" => {
@@ -94,6 +101,7 @@ fn run(argv: &[String]) -> Result<(), Box<dyn std::error::Error>> {
                 caches: true,
                 machine: machine_spec,
                 link_contention: links,
+                coherence_links: coherence,
                 seed,
             };
             spec.check_thread_capacity()?;
@@ -118,6 +126,7 @@ fn run(argv: &[String]) -> Result<(), Box<dyn std::error::Error>> {
                 caches: !args.flag("no-cache"),
                 machine: machine_spec,
                 link_contention: links,
+                coherence_links: coherence,
                 seed,
             };
             spec.check_thread_capacity()?;
@@ -137,6 +146,7 @@ fn run(argv: &[String]) -> Result<(), Box<dyn std::error::Error>> {
                 caches: true,
                 machine: machine_spec,
                 link_contention: links,
+                coherence_links: coherence,
                 seed,
             };
             spec.check_thread_capacity()?;
@@ -166,7 +176,7 @@ fn run(argv: &[String]) -> Result<(), Box<dyn std::error::Error>> {
                 .unwrap_or("all");
             let specs: Vec<(String, SweepSpec)> = figure_specs(which, &args, seed)?
                 .into_iter()
-                .map(|(n, s)| (n, s.on_machine(machine_spec, links)))
+                .map(|(n, s)| (n, s.on_machine(machine_spec, links, coherence)))
                 .collect();
             for (_, spec) in &specs {
                 spec.check_thread_capacity()?;
@@ -182,7 +192,7 @@ fn run(argv: &[String]) -> Result<(), Box<dyn std::error::Error>> {
             }
             Ok(())
         }
-        "batch" => batch_cmd(&args, seed, machine_spec, links),
+        "batch" => batch_cmd(&args, seed, machine_spec, links, coherence),
         other => {
             print_usage();
             Err(format!("unknown command '{other}'").into())
@@ -209,6 +219,20 @@ fn link_contention_arg(args: &Args, machine: MachineSpec) -> bool {
         true
     } else {
         machine != MachineSpec::TilePro64
+    }
+}
+
+/// Resolve coherence-link billing (invalidation fan-out + reply paths):
+/// follows the link-contention setting unless `--coherence-links` /
+/// `--no-coherence-links` say otherwise. It rides on the link servers, so
+/// it is inert while links are off.
+fn coherence_links_arg(args: &Args, links: bool) -> bool {
+    if args.flag("no-coherence-links") {
+        false
+    } else if args.flag("coherence-links") {
+        true
+    } else {
+        links
     }
 }
 
@@ -274,14 +298,16 @@ fn figure_specs(
     Ok(specs)
 }
 
-/// `repro batch <fig…|all|grid|gridscale>`: run sweeps through the worker
-/// pool and emit machine-readable results. `--jobs N` shards across N host
-/// threads (0 = all cores); output is byte-identical for every N.
+/// `repro batch <fig…|all|grid|gridscale|falseshare>`: run sweeps through
+/// the worker pool and emit machine-readable results. `--jobs N` shards
+/// across N host threads (0 = all cores); output is byte-identical for
+/// every N.
 fn batch_cmd(
     args: &Args,
     seed: u64,
     machine: MachineSpec,
     links: bool,
+    coherence: bool,
 ) -> Result<(), Box<dyn std::error::Error>> {
     let which = args
         .positional()
@@ -291,7 +317,10 @@ fn batch_cmd(
     let runner = BatchRunner::new(args.usize("jobs", 0)?);
     let out = args.get("out").map(|s| s.to_string());
     let specs = if which == "grid" {
-        vec![("grid".to_string(), grid_spec(args, seed)?.on_machine(machine, links))]
+        vec![(
+            "grid".to_string(),
+            grid_spec(args, seed)?.on_machine(machine, links, coherence),
+        )]
     } else if which == "gridscale" {
         // The grid-scaling sweep carries its own per-row machine ladder;
         // links are ON unless --no-link-contention (watching the mesh
@@ -303,10 +332,18 @@ fn batch_cmd(
             );
         }
         vec![("gridscale".to_string(), gridscale_spec(args, seed)?)]
+    } else if which == "falseshare" {
+        if args.get("machine").is_some() {
+            return Err(
+                "falseshare sweeps its own machine ladder: use --machines a,b,c, not --machine"
+                    .into(),
+            );
+        }
+        vec![("falseshare".to_string(), falseshare_spec(args, seed)?)]
     } else {
         figure_specs(which, args, seed)?
             .into_iter()
-            .map(|(n, s)| (n, s.on_machine(machine, links)))
+            .map(|(n, s)| (n, s.on_machine(machine, links, coherence)))
             .collect()
     };
     for (_, spec) in &specs {
@@ -320,6 +357,11 @@ fn batch_cmd(
         } else {
             println!("{}", store.table(spec).render());
         }
+        // The falseshare sweep's headline is the coherence-traffic ratio,
+        // not the seconds table.
+        if name.as_str() == "falseshare" {
+            eprintln!("{}", experiment::falseshare_report(spec, &store));
+        }
         if let Some(dir) = &out {
             store.table(spec).save(dir, name)?;
             let path = format!("{dir}/{name}_runs.json");
@@ -328,6 +370,31 @@ fn batch_cmd(
         }
     }
     Ok(())
+}
+
+/// Build the false-sharing sweep (`repro batch falseshare`): the write
+/// ping-pong workload at every `--machines` grid (default 8×8 → 16×16),
+/// non-localised vs localised, coherence-link billing always on.
+fn falseshare_spec(args: &Args, seed: u64) -> Result<SweepSpec, Box<dyn std::error::Error>> {
+    let machines: Vec<MachineSpec> = match args.get("machines") {
+        None => experiment::falseshare_machines(),
+        Some(s) => s
+            .split(',')
+            .map(|m| MachineSpec::parse(m.trim()))
+            .collect::<Result<_, _>>()?,
+    };
+    let elems = args.usize("size", 65_536)? as u64;
+    let threads = args.usize("threads", 32)?;
+    let passes = args.usize("reps", 8)? as u32;
+    if threads == 0 || elems < threads as u64 || passes == 0 {
+        return Err(format!(
+            "bad falseshare: need elems >= threads and reps >= 1, got {elems} x {threads} x {passes}"
+        )
+        .into());
+    }
+    let spec = experiment::falseshare_spec(elems, threads, passes, &machines, seed);
+    spec.check_thread_capacity()?;
+    Ok(spec)
 }
 
 /// The grid axes `repro batch grid` understands, with their value syntax —
@@ -462,7 +529,8 @@ fn gridscale_spec(args: &Args, seed: u64) -> Result<SweepSpec, Box<dyn std::erro
         );
     }
     let links = !args.flag("no-link-contention");
-    let spec = experiment::grid_scaling_spec(elems, threads, &machines, seed, links);
+    let coherence = coherence_links_arg(args, links);
+    let spec = experiment::grid_scaling_spec(elems, threads, &machines, seed, links, coherence);
     spec.check_thread_capacity()?;
     Ok(spec)
 }
@@ -542,14 +610,33 @@ fn emit_stats(args: &Args, label: &str, stats: &tilesim::sim::RunStats, machine:
         println!("  {}", stats.summary());
         if args.flag("heatmap") {
             let m: Machine = machine.build();
-            println!("{}", tilesim::metrics::home_heatmap(stats, &m));
+            // The machine here is the one the run executed on, so a
+            // MetricsError means a real bug — surface it, don't panic.
+            match tilesim::metrics::home_heatmap(stats, &m) {
+                Ok(map) => println!("{map}"),
+                Err(e) => eprintln!("home heatmap unavailable: {e}"),
+            }
             println!(
                 "home-traffic concentration: {:.3} (0 = spread, 1 = one hot tile)",
                 tilesim::metrics::home_concentration(stats)
             );
-            let links = tilesim::metrics::link_heatmap(stats, &m);
-            if !links.is_empty() {
-                println!("{links}");
+            match tilesim::metrics::link_heatmap(stats, &m) {
+                Ok(links) if !links.is_empty() => println!("{links}"),
+                Ok(_) => {}
+                Err(e) => eprintln!("link heatmap unavailable: {e}"),
+            }
+            // Split the coherence traffic by class (the request class is
+            // already shown by link_heatmap above; replies/invalidations
+            // render only when coherence-link billing produced packets).
+            for class in [
+                tilesim::metrics::TrafficClass::Reply,
+                tilesim::metrics::TrafficClass::Invalidation,
+            ] {
+                match tilesim::metrics::link_class_heatmap(stats, &m, class) {
+                    Ok(map) if !map.is_empty() => println!("{map}"),
+                    Ok(_) => {}
+                    Err(e) => eprintln!("link class heatmap unavailable: {e}"),
+                }
             }
         }
     }
@@ -559,13 +646,16 @@ fn print_usage() {
     println!(
         "usage: repro <info|microbench|mergesort|radix|homing|sort|experiment|batch> [flags]\n\
          experiments: repro experiment <fig1|fig2|fig3|fig4|table1|all> [--size N] [--out DIR]\n\
-         batch:       repro batch <fig1|fig2|fig3|fig4|table1|all|grid|gridscale>\n\
+         batch:       repro batch <fig1|fig2|fig3|fig4|table1|all|grid|gridscale|falseshare>\n\
                       [--jobs N] [--out DIR] [--json]\n\
                       grid axes: --cases 1,3,8 --sizes 1m,4m --threads-list 16,64\n\
                       --workload mergesort|microbench|radix --variant a,b --seeds K\n\
-                      gridscale: --machines 4x4:2,tilepro64,nuca256 --size N --threads N\n\
+                      gridscale:  --machines 4x4:2,tilepro64,nuca256 --size N --threads N\n\
+                      falseshare: --machines tilepro64,nuca256 --size N --threads N --reps P\n\
+                                  (write ping-pong; reports the coherence-traffic ratio)\n\
          machines: --machine tilepro64|epiphany16|nuca256|WxH[:ctrls] (default tilepro64)\n\
                    --link-contention / --no-link-contention (default: on off-baseline machines)\n\
+                   --coherence-links / --no-coherence-links (default: follows link contention)\n\
          flags: --size N --threads N --reps N --case 1..8 --seed S --variant v\n\
                 --digit-bits B --jobs N --no-striping --no-cache --heatmap --json\n\
                 --out DIR --sizes a,b,c"

@@ -3,12 +3,68 @@
 //! --heatmap`), plus small summary statistics used by the CLI and examples.
 //!
 //! Grid dimensions come from the run's [`Machine`] — any `H×W` grid
-//! renders, not just the TILEPro64's 8×8.
+//! renders, not just the TILEPro64's 8×8. A stats/machine pairing whose
+//! vector lengths disagree is a caller bug; it is reported as a
+//! [`MetricsError`] (not a debug assertion), so a bad pairing fails loudly
+//! in release batch runs instead of rendering garbage.
+//!
+//! Link heatmaps exist per *traffic class* ([`TrafficClass`]): forward
+//! requests, data/ack replies, and invalidation fan-out — so a saturated
+//! mesh can be attributed to the coherence traffic that caused it.
 
 use crate::arch::{Dir, Machine, TileId};
 use crate::sim::RunStats;
 
 const RAMP: &[u8] = b" .:-=+*#%@";
+
+/// A stats vector didn't match the machine it was rendered against.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MetricsError {
+    /// `what` has `got` entries but `machine` needs `expected`.
+    Mismatch {
+        what: &'static str,
+        expected: usize,
+        got: usize,
+        machine: String,
+    },
+}
+
+impl std::fmt::Display for MetricsError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MetricsError::Mismatch {
+                what,
+                expected,
+                got,
+                machine,
+            } => write!(
+                f,
+                "{what} has {got} entries but machine {machine} needs {expected} — \
+                 stats were produced on a different machine"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for MetricsError {}
+
+fn check_len(
+    what: &'static str,
+    got: usize,
+    expected: usize,
+    machine: &Machine,
+) -> Result<(), MetricsError> {
+    if got == expected {
+        Ok(())
+    } else {
+        Err(MetricsError::Mismatch {
+            what,
+            expected,
+            got,
+            machine: machine.name(),
+        })
+    }
+}
 
 fn ramp_char(n: u64, max: u64) -> char {
     let ix = if max == 0 {
@@ -21,14 +77,16 @@ fn ramp_char(n: u64, max: u64) -> char {
 
 /// Render the machine's `H×W` grid of home-port request counts as an ASCII
 /// heatmap. Intensity characters: ` .:-=+*#%@` scaled to the max tile.
-pub fn home_heatmap(stats: &RunStats, machine: &Machine) -> String {
+/// Errors when `stats.tile_home_requests` was produced on a different
+/// machine (length mismatch).
+pub fn home_heatmap(stats: &RunStats, machine: &Machine) -> Result<String, MetricsError> {
     let counts = &stats.tile_home_requests;
-    debug_assert_eq!(
+    check_len(
+        "tile_home_requests",
         counts.len(),
         machine.num_tiles() as usize,
-        "tile_home_requests sized for a different machine than {}",
-        machine.name()
-    );
+        machine,
+    )?;
     let max = counts.iter().copied().max().unwrap_or(0);
     let mut out = String::new();
     out.push_str(&format!(
@@ -40,10 +98,7 @@ pub fn home_heatmap(stats: &RunStats, machine: &Machine) -> String {
     for y in 0..machine.grid_h() {
         out.push_str("  ");
         for x in 0..machine.grid_w() {
-            let n = counts
-                .get((y * machine.grid_w() + x) as usize)
-                .copied()
-                .unwrap_or(0);
+            let n = counts[(y * machine.grid_w() + x) as usize];
             let c = ramp_char(n, max);
             out.push(c);
             out.push(c); // double-width for aspect ratio
@@ -55,38 +110,53 @@ pub fn home_heatmap(stats: &RunStats, machine: &Machine) -> String {
         "  total {total} requests, hottest tile {max} ({:.1}% of traffic)\n",
         if total == 0 { 0.0 } else { 100.0 * max as f64 / total as f64 }
     ));
-    out
+    Ok(out)
 }
 
-/// Render per-tile mesh-link traffic: each cell shows the busiest of the
-/// tile's four outgoing links; the footer names the hottest directed link
-/// chip-wide. Empty string when the run did not model link contention.
-pub fn link_heatmap(stats: &RunStats, machine: &Machine) -> String {
-    if !stats.links_modelled() {
-        return String::new();
+/// Which per-link traffic vector a link heatmap renders.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TrafficClass {
+    /// Forward request routes (`RunStats::link_requests`).
+    Request,
+    /// Data/ack reply routes (`RunStats::link_reply_requests`).
+    Reply,
+    /// Invalidation fan-out + ack routes (`RunStats::link_inval_requests`).
+    Invalidation,
+}
+
+impl TrafficClass {
+    pub const ALL: [TrafficClass; 3] = [
+        TrafficClass::Request,
+        TrafficClass::Reply,
+        TrafficClass::Invalidation,
+    ];
+
+    fn label(self) -> &'static str {
+        match self {
+            TrafficClass::Request => "requests",
+            TrafficClass::Reply => "replies",
+            TrafficClass::Invalidation => "invalidations",
+        }
     }
-    let links = &stats.link_requests;
-    debug_assert_eq!(
-        links.len(),
-        machine.num_links(),
-        "link_requests sized for a different machine than {}",
-        machine.name()
-    );
+
+    fn counts(self, stats: &RunStats) -> &[u64] {
+        match self {
+            TrafficClass::Request => &stats.link_requests,
+            TrafficClass::Reply => &stats.link_reply_requests,
+            TrafficClass::Invalidation => &stats.link_inval_requests,
+        }
+    }
+}
+
+fn link_grid(links: &[u64], machine: &Machine, out: &mut String) {
     let per_tile = |t: TileId| -> u64 {
         Dir::ALL
             .iter()
-            .map(|&d| links.get(machine.link_index(t, d)).copied().unwrap_or(0))
+            .map(|&d| links[machine.link_index(t, d)])
             .max()
             .unwrap_or(0)
     };
     let max = machine.tiles().map(per_tile).max().unwrap_or(0);
-    let mut out = String::new();
-    out.push_str(&format!(
-        "mesh-link traffic per tile (max outgoing link), {}x{} {}:\n",
-        machine.grid_w(),
-        machine.grid_h(),
-        machine.name()
-    ));
     for y in 0..machine.grid_h() {
         out.push_str("  ");
         for x in 0..machine.grid_w() {
@@ -96,6 +166,31 @@ pub fn link_heatmap(stats: &RunStats, machine: &Machine) -> String {
         }
         out.push('\n');
     }
+}
+
+/// Render per-tile mesh-link traffic for the request class: each cell
+/// shows the busiest of the tile's four outgoing links; the footer names
+/// the hottest directed link chip-wide. `Ok` with an empty string when the
+/// run did not model link contention; an error when `link_requests` was
+/// produced on a different machine.
+pub fn link_heatmap(stats: &RunStats, machine: &Machine) -> Result<String, MetricsError> {
+    if !stats.links_modelled() {
+        return Ok(String::new());
+    }
+    check_len(
+        "link_requests",
+        stats.link_requests.len(),
+        machine.num_links(),
+        machine,
+    )?;
+    let mut out = String::new();
+    out.push_str(&format!(
+        "mesh-link traffic per tile (max outgoing link), {}x{} {}:\n",
+        machine.grid_w(),
+        machine.grid_h(),
+        machine.name()
+    ));
+    link_grid(&stats.link_requests, machine, &mut out);
     match stats.hottest_link() {
         Some((ix, n)) => out.push_str(&format!(
             "  hottest link {} with {n} packets, {} link-queue cycles total\n",
@@ -104,7 +199,40 @@ pub fn link_heatmap(stats: &RunStats, machine: &Machine) -> String {
         )),
         None => out.push_str("  no link traffic\n"),
     }
-    out
+    Ok(out)
+}
+
+/// Render one traffic class's per-tile link heatmap. `Ok` with an empty
+/// string when the run did not model link contention or the class saw no
+/// packets (e.g. coherence billing off); an error on a machine mismatch.
+pub fn link_class_heatmap(
+    stats: &RunStats,
+    machine: &Machine,
+    class: TrafficClass,
+) -> Result<String, MetricsError> {
+    if !stats.links_modelled() {
+        return Ok(String::new());
+    }
+    let counts = class.counts(stats);
+    if counts.iter().all(|&n| n == 0) {
+        return Ok(String::new());
+    }
+    check_len(class.label(), counts.len(), machine.num_links(), machine)?;
+    let mut out = String::new();
+    out.push_str(&format!(
+        "mesh-link {} per tile (max outgoing link), {}x{} {}:\n",
+        class.label(),
+        machine.grid_w(),
+        machine.grid_h(),
+        machine.name()
+    ));
+    link_grid(counts, machine, &mut out);
+    out.push_str(&format!(
+        "  {} {} packets total\n",
+        counts.iter().sum::<u64>(),
+        class.label()
+    ));
+    Ok(out)
 }
 
 /// Gini-style concentration of home traffic in [0, 1]: 0 = perfectly
@@ -135,7 +263,7 @@ mod tests {
     #[test]
     fn heatmap_renders_8_rows() {
         let s = stats_with(vec![5; 64]);
-        let map = home_heatmap(&s, &Machine::tilepro64());
+        let map = home_heatmap(&s, &Machine::tilepro64()).unwrap();
         assert_eq!(map.lines().count(), 10); // header + 8 rows + footer
     }
 
@@ -144,34 +272,70 @@ mod tests {
         // 4 wide × 8 tall: 8 grid rows, 4 double-width columns each.
         let m = Machine::custom(4, 8, 2).unwrap();
         let s = stats_with(vec![3; 32]);
-        let map = home_heatmap(&s, &m);
+        let map = home_heatmap(&s, &m).unwrap();
         assert_eq!(map.lines().count(), 10);
         let row = map.lines().nth(1).unwrap();
         assert_eq!(row.trim_end().len(), 2 + 8);
         // 16×16 renders 16 rows.
         let s = stats_with(vec![1; 256]);
-        assert_eq!(home_heatmap(&s, &Machine::nuca256()).lines().count(), 18);
+        assert_eq!(
+            home_heatmap(&s, &Machine::nuca256()).unwrap().lines().count(),
+            18
+        );
     }
 
     #[test]
-    #[should_panic(expected = "sized for a different machine")]
-    #[cfg(debug_assertions)]
-    fn heatmap_length_mismatch_asserts() {
+    fn heatmap_length_mismatch_is_an_error() {
+        // A 64-tile stats vector against the 16-tile epiphany16: a caller
+        // bug that must fail loudly in release builds, not just under
+        // debug assertions.
         let s = stats_with(vec![0; 64]);
-        home_heatmap(&s, &Machine::epiphany16());
+        match home_heatmap(&s, &Machine::epiphany16()) {
+            Err(MetricsError::Mismatch {
+                what,
+                expected,
+                got,
+                machine,
+            }) => {
+                assert_eq!(what, "tile_home_requests");
+                assert_eq!((expected, got), (16, 64));
+                assert_eq!(machine, "epiphany16");
+            }
+            other => panic!("expected Mismatch, got {other:?}"),
+        }
+        let err = home_heatmap(&s, &Machine::epiphany16()).unwrap_err();
+        assert!(err.to_string().contains("different machine"), "{err}");
+    }
+
+    #[test]
+    fn link_heatmap_length_mismatch_is_an_error() {
+        let m = Machine::tilepro64();
+        let s = RunStats {
+            tile_home_requests: vec![0; 64],
+            link_requests: vec![1; 4], // wrong machine
+            ..RunStats::default()
+        };
+        assert!(link_heatmap(&s, &m).is_err());
+        assert!(link_class_heatmap(&s, &m, TrafficClass::Request).is_err());
     }
 
     #[test]
     fn heatmap_handles_empty() {
         let s = stats_with(vec![0; 64]);
-        let map = home_heatmap(&s, &Machine::tilepro64());
+        let map = home_heatmap(&s, &Machine::tilepro64()).unwrap();
         assert!(map.contains("total 0 requests"));
     }
 
     #[test]
     fn link_heatmap_empty_without_link_model() {
         let s = stats_with(vec![0; 64]);
-        assert_eq!(link_heatmap(&s, &Machine::tilepro64()), "");
+        assert_eq!(link_heatmap(&s, &Machine::tilepro64()).unwrap(), "");
+        for class in TrafficClass::ALL {
+            assert_eq!(
+                link_class_heatmap(&s, &Machine::tilepro64(), class).unwrap(),
+                ""
+            );
+        }
     }
 
     #[test]
@@ -186,9 +350,28 @@ mod tests {
             link_queue_cycles: 17,
             ..RunStats::default()
         };
-        let map = link_heatmap(&s, &m);
+        let map = link_heatmap(&s, &m).unwrap();
         assert!(map.contains("hottest link E(1,1) with 42 packets"), "{map}");
         assert!(map.contains("17 link-queue cycles"));
+    }
+
+    #[test]
+    fn class_heatmaps_render_their_own_vectors() {
+        let m = Machine::tilepro64();
+        let mut inval = vec![0u64; m.num_links()];
+        inval[m.link_index(TileId(0), Dir::East)] = 9;
+        let s = RunStats {
+            tile_home_requests: vec![0; 64],
+            link_requests: vec![0; m.num_links()],
+            link_reply_requests: vec![0; m.num_links()],
+            link_inval_requests: inval,
+            ..RunStats::default()
+        };
+        let map = link_class_heatmap(&s, &m, TrafficClass::Invalidation).unwrap();
+        assert!(map.contains("invalidations"), "{map}");
+        assert!(map.contains("9 invalidations packets total"), "{map}");
+        // The reply class saw nothing: renders empty rather than a blank grid.
+        assert_eq!(link_class_heatmap(&s, &m, TrafficClass::Reply).unwrap(), "");
     }
 
     #[test]

@@ -4,7 +4,20 @@
 //! - **home ports** — each tile's L2 coherence port (one server per tile);
 //! - **memory controllers** — one server per DDR controller;
 //! - **directional mesh links** — one server per directed link (four per
-//!   tile: E/W/N/S), billed along the XY route of every remote request.
+//!   tile: E/W/N/S), billed along the XY route of every mesh traversal.
+//!
+//! Link traffic is billed in three classes, each with its own per-link
+//! counters so the heatmaps can show *what kind* of traffic saturates a
+//! link:
+//!
+//! 1. **requests** — the forward route of every remote access
+//!    ([`link_path_request`](ContentionModel::link_path_request));
+//! 2. **replies** — the response route carrying data (loads) or an ack
+//!    (stores), billed with a wormhole-pipelining approximation
+//!    ([`reply_path_request`](ContentionModel::reply_path_request));
+//! 3. **invalidations** — the home→sharer fan-out of a coherence write
+//!    plus each sharer's ack return path
+//!    ([`invalidation_fanout_request`](ContentionModel::invalidation_fanout_request)).
 //!
 //! Every server is deterministic: a request arriving at `now` starts at
 //! `max(now, server_free_at)`; the wait is the queueing delay billed to
@@ -18,8 +31,9 @@
 //! hammering tile 0's L2 port) collapse to the port's service bandwidth
 //! and what recreates the Fig. 4 controller crossover; link queueing is
 //! what makes large grids (16×16 and up) hurt when traffic is *not*
-//! localised — the mesh itself, not just the endpoints, saturates
-//! (cf. Kommrusch et al., arXiv:2011.05422).
+//! localised — the mesh itself, not just the endpoints, saturates, and
+//! directory-driven coherence traffic (classes 2 and 3) dominates mesh
+//! occupancy at scale (cf. Kommrusch et al., arXiv:2011.05422).
 
 use std::sync::Arc;
 
@@ -35,6 +49,11 @@ pub struct ContentionConfig {
     /// published fig1–fig4/table1 JSON replays byte-identically; machine
     /// presets and the grid-scaling sweep turn it on.
     pub links: bool,
+    /// Bill coherence traffic — invalidation fan-out (plus acks) and the
+    /// reply path of reads/writes — through the link servers
+    /// (`--no-coherence-links` clears it). Only meaningful when `links`
+    /// is set; the paper-baseline config is unaffected either way.
+    pub coherence: bool,
 }
 
 impl Default for ContentionConfig {
@@ -42,6 +61,7 @@ impl Default for ContentionConfig {
         ContentionConfig {
             enabled: true,
             links: true,
+            coherence: true,
         }
     }
 }
@@ -81,12 +101,22 @@ pub struct ContentionModel {
     /// One server per directed mesh link, indexed by `Machine::link_index`.
     links: Vec<Server>,
     link_service: u64,
+    hop_cycles: u64,
     /// Total queueing cycles handed out (reporting).
     pub home_delay_cycles: u64,
     pub ctrl_delay_cycles: u64,
+    /// Queueing on forward (request-class) link traversals.
     pub link_delay_cycles: u64,
-    /// Per-directed-link traffic counts (the hottest-link heatmap).
+    /// Cycles billed to reply-path traversals (queueing + wormhole payload
+    /// excess over the already-billed header latency).
+    pub reply_link_cycles: u64,
+    /// Queueing cycles billed to invalidation fan-out + ack traversals.
+    pub invalidation_link_cycles: u64,
+    /// Per-directed-link traffic counts by class (the hottest-link
+    /// heatmaps): forward requests, replies, invalidations+acks.
     pub link_requests: Vec<u64>,
+    pub link_reply_requests: Vec<u64>,
+    pub link_inval_requests: Vec<u64>,
 }
 
 impl ContentionModel {
@@ -97,6 +127,7 @@ impl ContentionModel {
             machine.num_links(),
         );
         let link_service = machine.params.link_service;
+        let hop_cycles = machine.params.noc_hop;
         ContentionModel {
             cfg,
             machine,
@@ -104,16 +135,27 @@ impl ContentionModel {
             ctrls: vec![Server::default(); ctrls],
             links: vec![Server::default(); links],
             link_service,
+            hop_cycles,
             home_delay_cycles: 0,
             ctrl_delay_cycles: 0,
             link_delay_cycles: 0,
+            reply_link_cycles: 0,
+            invalidation_link_cycles: 0,
             link_requests: vec![0; links],
+            link_reply_requests: vec![0; links],
+            link_inval_requests: vec![0; links],
         }
     }
 
     /// Whether link traversals are being billed.
     pub fn links_enabled(&self) -> bool {
         self.cfg.enabled && self.cfg.links
+    }
+
+    /// Whether coherence traffic (invalidations, replies) is billed on the
+    /// links. Implies [`links_enabled`](Self::links_enabled).
+    pub fn coherence_enabled(&self) -> bool {
+        self.links_enabled() && self.cfg.coherence
     }
 
     /// One request to `home`'s L2 port at time `now`; returns queue delay.
@@ -153,6 +195,71 @@ impl ContentionModel {
         self.link_delay_cycles += delay;
         delay
     }
+
+    /// Bill the response route `from → to` (home or controller attach back
+    /// to the requester) carrying a `flits`-flit payload at time `now`;
+    /// returns the cycles added to the requester.
+    ///
+    /// Occupancy is billed per directed link exactly like a forward
+    /// request, but the traversal *latency* uses a wormhole-pipelining
+    /// approximation instead of a second serial walk: the payload streams
+    /// behind the header, so the route costs
+    /// `max(header_hops · noc_hop, flits · link_service)`. The header term
+    /// is already part of the uncontended `access_cycles` round trip, so
+    /// only the payload-serialisation *excess* over it is returned (plus
+    /// any queueing) — with `flits == 1` (a pure ack) the excess is zero
+    /// and the reply adds only genuine backlog.
+    #[inline]
+    pub fn reply_path_request(&mut self, from: TileId, to: TileId, now: u64, flits: u64) -> u64 {
+        if !self.coherence_enabled() || from == to {
+            return 0;
+        }
+        let mut queue = 0u64;
+        let mut hops = 0u64;
+        for hop in xy_links(&self.machine, from, to) {
+            let ix = self.machine.link_index(hop.from, hop.dir);
+            queue += self.links[ix].request(now, self.link_service);
+            self.link_reply_requests[ix] += 1;
+            hops += 1;
+        }
+        let header = hops * self.hop_cycles;
+        let d = queue + (flits * self.link_service).saturating_sub(header);
+        self.reply_link_cycles += d;
+        d
+    }
+
+    /// Bill a write's invalidation fan-out at time `now`: one header-sized
+    /// packet along the XY route home→sharer per invalidated tile, plus
+    /// the sharer→home ack return path (the directory's `write_claim` /
+    /// `fanout` pair supplies `victims`). Returns the total queueing delay
+    /// billed to the writer — the store is not globally visible until the
+    /// last ack lands, so fan-out backlog is the writer's to pay. A victim
+    /// on the home tile itself crosses no links.
+    pub fn invalidation_fanout_request(
+        &mut self,
+        home: TileId,
+        victims: &[TileId],
+        now: u64,
+    ) -> u64 {
+        if !self.coherence_enabled() || victims.is_empty() {
+            return 0;
+        }
+        let mut delay = 0u64;
+        for &v in victims {
+            for hop in xy_links(&self.machine, home, v) {
+                let ix = self.machine.link_index(hop.from, hop.dir);
+                delay += self.links[ix].request(now, self.link_service);
+                self.link_inval_requests[ix] += 1;
+            }
+            for hop in xy_links(&self.machine, v, home) {
+                let ix = self.machine.link_index(hop.from, hop.dir);
+                delay += self.links[ix].request(now, self.link_service);
+                self.link_inval_requests[ix] += 1;
+            }
+        }
+        self.invalidation_link_cycles += delay;
+        delay
+    }
 }
 
 #[cfg(test)]
@@ -161,6 +268,10 @@ mod tests {
 
     fn model() -> ContentionModel {
         ContentionModel::new(ContentionConfig::default(), Arc::new(Machine::tilepro64()))
+    }
+
+    fn model_on(machine: Machine, cfg: ContentionConfig) -> ContentionModel {
+        ContentionModel::new(cfg, Arc::new(machine))
     }
 
     #[test]
@@ -225,9 +336,16 @@ mod tests {
         for _ in 0..10_000 {
             assert_eq!(m.home_request(TileId(0), 0, 2), 0);
             assert_eq!(m.link_path_request(TileId(0), TileId(63), 0), 0);
+            assert_eq!(m.reply_path_request(TileId(63), TileId(0), 0, 4), 0);
+            assert_eq!(
+                m.invalidation_fanout_request(TileId(0), &[TileId(63)], 0),
+                0
+            );
         }
         assert_eq!(m.home_delay_cycles, 0);
         assert_eq!(m.link_delay_cycles, 0);
+        assert_eq!(m.reply_link_cycles, 0);
+        assert_eq!(m.invalidation_link_cycles, 0);
     }
 
     #[test]
@@ -261,7 +379,9 @@ mod tests {
     fn link_self_route_is_free() {
         let mut m = model();
         assert_eq!(m.link_path_request(TileId(5), TileId(5), 0), 0);
+        assert_eq!(m.reply_path_request(TileId(5), TileId(5), 0, 4), 0);
         assert!(m.link_requests.iter().all(|&n| n == 0));
+        assert!(m.link_reply_requests.iter().all(|&n| n == 0));
     }
 
     #[test]
@@ -296,16 +416,130 @@ mod tests {
             ContentionConfig {
                 enabled: true,
                 links: false,
+                coherence: true,
             },
             Arc::new(Machine::tilepro64()),
         );
         for _ in 0..100 {
             assert_eq!(m.link_path_request(TileId(0), TileId(63), 0), 0);
+            // Coherence billing rides on the link servers: links off means
+            // the reply/invalidation classes are off too.
+            assert_eq!(m.reply_path_request(TileId(63), TileId(0), 0, 4), 0);
+            assert_eq!(
+                m.invalidation_fanout_request(TileId(0), &[TileId(9)], 0),
+                0
+            );
         }
         assert_eq!(m.link_delay_cycles, 0);
+        assert_eq!(m.reply_link_cycles, 0);
+        assert_eq!(m.invalidation_link_cycles, 0);
+        assert!(!m.coherence_enabled());
         // Home ports still serialise.
         m.home_request(TileId(0), 0, 2);
         assert_eq!(m.home_request(TileId(0), 0, 2), 2);
+    }
+
+    #[test]
+    fn coherence_flag_disables_only_coherence_classes() {
+        let mut m = ContentionModel::new(
+            ContentionConfig {
+                enabled: true,
+                links: true,
+                coherence: false,
+            },
+            Arc::new(Machine::tilepro64()),
+        );
+        assert!(m.links_enabled() && !m.coherence_enabled());
+        assert_eq!(m.reply_path_request(TileId(63), TileId(0), 0, 4), 0);
+        assert_eq!(m.invalidation_fanout_request(TileId(0), &[TileId(9)], 0), 0);
+        assert!(m.link_reply_requests.iter().all(|&n| n == 0));
+        assert!(m.link_inval_requests.iter().all(|&n| n == 0));
+        // Forward requests still bill and queue.
+        m.link_path_request(TileId(0), TileId(2), 0);
+        assert!(m.link_path_request(TileId(0), TileId(2), 0) > 0);
+    }
+
+    #[test]
+    fn reply_pure_ack_adds_no_uncontended_cycles() {
+        // flits == 1 on empty links: occupancy is booked, zero delay (the
+        // header latency is already in access_cycles).
+        let mut m = model();
+        assert_eq!(m.reply_path_request(TileId(63), TileId(0), 0, 1), 0);
+        assert_eq!(m.link_reply_requests.iter().sum::<u64>(), 14);
+        assert_eq!(m.reply_link_cycles, 0);
+    }
+
+    #[test]
+    fn reply_payload_excess_only_on_short_routes() {
+        // tilepro64: noc_hop == link_service == 1, 4-flit lines. A 1-hop
+        // reply pays max(1, 4) - 1 = 3 extra cycles of payload streaming;
+        // a 14-hop reply pays none (the header latency covers it).
+        let mut m = model();
+        assert_eq!(m.reply_path_request(TileId(1), TileId(0), 0, 4), 3);
+        let mut far = model();
+        assert_eq!(far.reply_path_request(TileId(63), TileId(0), 0, 4), 0);
+    }
+
+    #[test]
+    fn reply_and_request_share_link_servers() {
+        // A reply occupies the same directional servers as forward traffic
+        // in its direction: a west-bound reply delays a west-bound request.
+        let mut m = model();
+        assert_eq!(m.reply_path_request(TileId(7), TileId(0), 0, 1), 0);
+        let d = m.link_path_request(TileId(7), TileId(0), 0);
+        assert!(d > 0, "request behind a reply must queue, got {d}");
+    }
+
+    #[test]
+    fn invalidation_fanout_hand_computed_on_4x4() {
+        // Home (0,0) invalidates sharers (1,0), (2,0), (3,0) on a 4×4 grid
+        // at now=0, service 1 (service != 1 on the epiphany16 preset's
+        // params, so build the grid explicitly). Fan-out packets share the
+        // east row links, acks share the west ones:
+        //   victim 1: E(0,0)=0                | ack W(1,0)=0
+        //   victim 2: E(0,0)=1, E(1,0)=0      | ack W(2,0)=0, W(1,0)=1
+        //   victim 3: E(0,0)=2, E(1,0)=1,     | ack W(3,0)=0, W(2,0)=1,
+        //             E(2,0)=0                |     W(1,0)=2
+        // Total queueing = 8; 6 fan-out + 6 ack link crossings.
+        let mut m = model_on(
+            Machine::custom(4, 4, 2).unwrap(),
+            ContentionConfig::default(),
+        );
+        let victims = [TileId(1), TileId(2), TileId(3)];
+        let d = m.invalidation_fanout_request(TileId(0), &victims, 0);
+        assert_eq!(d, 8);
+        assert_eq!(m.invalidation_link_cycles, 8);
+        assert_eq!(m.link_inval_requests.iter().sum::<u64>(), 12);
+        // Request/reply classes untouched.
+        assert_eq!(m.link_requests.iter().sum::<u64>(), 0);
+        assert_eq!(m.link_reply_requests.iter().sum::<u64>(), 0);
+    }
+
+    #[test]
+    fn invalidation_traffic_counts_round_trip_hops() {
+        // Sharer sets {1..=n} from home 0 on a 4×4 grid: every victim v in
+        // row 0 is v hops out, so fan-out + ack cross 2 * sum(hops) links.
+        for n in 1..=3u32 {
+            let mut m = model_on(
+                Machine::custom(4, 4, 2).unwrap(),
+                ContentionConfig::default(),
+            );
+            let victims: Vec<TileId> = (1..=n).map(TileId).collect();
+            m.invalidation_fanout_request(TileId(0), &victims, 0);
+            let expect: u64 = (1..=n as u64).map(|h| 2 * h).sum();
+            assert_eq!(
+                m.link_inval_requests.iter().sum::<u64>(),
+                expect,
+                "n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn invalidation_victim_on_home_tile_is_free() {
+        let mut m = model();
+        assert_eq!(m.invalidation_fanout_request(TileId(5), &[TileId(5)], 0), 0);
+        assert_eq!(m.link_inval_requests.iter().sum::<u64>(), 0);
     }
 
     #[test]
@@ -315,5 +549,7 @@ mod tests {
             Arc::new(Machine::custom(4, 8, 2).unwrap()),
         );
         assert_eq!(m.link_requests.len(), 4 * 32);
+        assert_eq!(m.link_reply_requests.len(), 4 * 32);
+        assert_eq!(m.link_inval_requests.len(), 4 * 32);
     }
 }

@@ -1,5 +1,7 @@
 //! Mesh interconnect: XY routing (paths and directed-link walks) and
-//! shared-resource queueing contention (home ports, controllers, links).
+//! shared-resource queueing contention (home ports, controllers, links),
+//! with link traffic billed by class — forward requests, wormhole-piped
+//! replies, and coherence-invalidation fan-out + acks.
 
 pub mod contention;
 pub mod routing;

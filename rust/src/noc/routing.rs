@@ -1,9 +1,11 @@
 //! XY dimension-order routing over the machine's mesh.
 //!
 //! Latency uses the hop count (`Machine::hops`). The explicit tile path
-//! ([`xy_path`]) is used by tests; the engine's hot path walks the same
-//! route through the allocation-free directed-link iterator ([`xy_links`]),
-//! which feeds the per-link servers of the contention model.
+//! ([`xy_path`]) is used by tests; every billed traversal — forward
+//! requests, data/ack replies, and invalidation fan-out with its acks —
+//! walks the same route through the allocation-free directed-link
+//! iterator ([`xy_links`]), which feeds the per-link servers of the
+//! contention model (`noc::contention`).
 
 use crate::arch::{Coord, Dir, Machine, TileId};
 
@@ -57,6 +59,21 @@ pub struct XyLinks {
 }
 
 /// Directed links of the XY route from `src` to `dst` on `machine`.
+///
+/// # Examples
+///
+/// ```
+/// use tilesim::arch::{Dir, Machine, TileId};
+/// use tilesim::noc::xy_links;
+///
+/// let m = Machine::tilepro64();
+/// // Tile 0 is (0,0); tile 10 is (2,1): two east hops, then one south.
+/// let dirs: Vec<Dir> = xy_links(&m, TileId(0), TileId(10)).map(|h| h.dir).collect();
+/// assert_eq!(dirs, [Dir::East, Dir::East, Dir::South]);
+///
+/// // A self-route crosses no links.
+/// assert_eq!(xy_links(&m, TileId(9), TileId(9)).count(), 0);
+/// ```
 #[inline]
 pub fn xy_links(machine: &Machine, src: TileId, dst: TileId) -> XyLinks {
     XyLinks {

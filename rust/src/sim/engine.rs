@@ -24,8 +24,13 @@
 //! Every line access pays the uncontended latency (`Machine::access_cycles`
 //! on the run's machine description), plus queueing at the home tile /
 //! memory controller / directional mesh links (noc::contention), plus
-//! invalidation fan-out on writes. Which chip is simulated is a runtime
-//! value: `EngineConfig::for_machine` accepts any `arch::Machine`;
+//! invalidation fan-out on writes. With link contention on, *all* mesh
+//! traversals go through the link servers: the forward request route, the
+//! reply route (data for loads, an ack for stores — wormhole-pipelined,
+//! see `ContentionModel::reply_path_request`), and the invalidation
+//! fan-out + ack routes of coherence writes (gated separately by
+//! `--no-coherence-links`). Which chip is simulated is a runtime value:
+//! `EngineConfig::for_machine` accepts any `arch::Machine`;
 //! `EngineConfig::tilepro64` is the paper-baseline preset (link contention
 //! off, pinned byte-identical to the published figure record).
 
@@ -120,6 +125,21 @@ impl EngineConfig {
         self.contention.links = true;
         self
     }
+
+    /// Ablation: keep forward link queueing but stop billing coherence
+    /// traffic — invalidation fan-out and reply paths — on the links
+    /// (`--no-coherence-links`).
+    pub fn without_coherence_links(mut self) -> Self {
+        self.contention.coherence = false;
+        self
+    }
+
+    /// Bill coherence traffic through the link servers (the default
+    /// whenever link contention is on).
+    pub fn with_coherence_links(mut self) -> Self {
+        self.contention.coherence = true;
+        self
+    }
 }
 
 #[derive(Debug)]
@@ -209,6 +229,57 @@ impl AttrCursor {
         }
         Ok(self.attr.expect("cursor filled above"))
     }
+}
+
+/// Batched per-run store counters, folded into `RunStats` once per run
+/// (see [`Engine::fold_store_agg`]).
+#[derive(Default)]
+struct StoreAgg {
+    l2: u64,
+    home_hits: u64,
+    invals: u64,
+}
+
+/// Bill one store: latency, home-port/link queueing, the ack return path,
+/// and — when other tiles shared the line — the invalidation fan-out, both
+/// its header latency (critical path to the farthest victim) and its
+/// per-victim route + ack occupancy on the link servers.
+///
+/// This is a free function over split borrows so the reference walk
+/// ([`Engine::store`]) and the page-run fast path ([`Engine::write_run`])
+/// share it verbatim — billing the servers in a different order would
+/// break their cycle-exactness pin.
+#[allow(clippy::too_many_arguments)]
+fn bill_store_line(
+    params: &LatencyParams,
+    contention: &mut ContentionModel,
+    tile: TileId,
+    home: TileId,
+    out: crate::cache::WriteOutcome,
+    victims: &[TileId],
+    now: u64,
+    agg: &mut StoreAgg,
+) -> u64 {
+    let mut c = if home == tile {
+        agg.l2 += 1;
+        params.l2_hit
+    } else {
+        // Posted store: issuing cost is small, but the home port bandwidth
+        // is consumed — that queueing is the hot-spot mechanism of the
+        // non-localised disaster case — and so are the mesh links on the
+        // way to the home plus the header-sized ack coming back.
+        agg.home_hits += 1;
+        params.store_post
+            + contention.home_request(home, now, params.home_service)
+            + contention.link_path_request(tile, home, now)
+            + contention.reply_path_request(home, tile, now, 1)
+    };
+    if out.invalidated > 0 {
+        agg.invals += out.invalidated as u64;
+        c += params.noc_header + params.noc_hop * out.invalidation_hops as u64;
+        c += contention.invalidation_fanout_request(home, victims, now);
+    }
+    c
 }
 
 /// The engine also exposes the pre-run allocator so workloads can set up
@@ -349,8 +420,14 @@ impl Engine {
             .contention
             .ctrl_request(ctrl, now, self.params.ctrl_service);
         // The DRAM transaction occupies every mesh link towards the
-        // controller (latency for the hops is already in `base`).
+        // controller (latency for the hops is already in `base`), and the
+        // response occupies the return route: a line of data for a read,
+        // a bare ack for a posted write.
         cycles += self.contention.link_path_request(tile, ctrl_attach, now);
+        let flits = if write { 1 } else { self.params.line_flits };
+        cycles += self
+            .contention
+            .reply_path_request(ctrl_attach, tile, now, flits);
         cycles
     }
 
@@ -403,6 +480,12 @@ impl Engine {
                         .contention
                         .home_request(home, now, self.params.home_service)
                     + self.contention.link_path_request(tile, home, now)
+                    + self.contention.reply_path_request(
+                        home,
+                        tile,
+                        now,
+                        self.params.line_flits,
+                    )
             }
             crate::cache::ReadPlace::Ddr => {
                 self.stats.ddr_accesses += 1;
@@ -422,35 +505,29 @@ impl Engine {
                     .contention
                     .ctrl_request(ctrl, now, self.params.ctrl_service)
                     + self.contention.link_path_request(tile, ctrl_attach, now)
+                    + self.contention.reply_path_request(
+                        ctrl_attach,
+                        tile,
+                        now,
+                        self.params.line_flits,
+                    )
             }
         }
     }
 
+    /// Per-line store (the reference walk's path): a one-line
+    /// [`write_run`](Self::write_run), so the billing — including the new
+    /// invalidation-route and ack-reply accounting — is shared with the
+    /// fast path by construction.
     fn store(&mut self, tile: TileId, line: LineId, home: TileId, now: u64) -> u64 {
-        let out = self.caches.write(tile, line, home);
-        let mut cycles = match out.level {
-            crate::cache::WriteLevel::LocalL2 => {
-                self.stats.l2_hits += 1;
-                self.params.l2_hit
-            }
-            crate::cache::WriteLevel::RemotePost { home } => {
-                // Posted store: issuing cost is small, but the home port
-                // bandwidth is consumed — that queueing is the hot-spot
-                // mechanism of the non-localised disaster case — and so is
-                // every mesh link on the way to the home.
-                self.stats.home_hits += 1;
-                self.stats.tile_home_requests[home.index()] += 1;
-                self.params.store_post
-                    + self
-                        .contention
-                        .home_request(home, now, self.params.home_service)
-                    + self.contention.link_path_request(tile, home, now)
-            }
-        };
-        if out.invalidated > 0 {
-            self.stats.invalidations += out.invalidated as u64;
-            cycles += self.params.noc_header + self.params.noc_hop * out.invalidation_hops as u64;
-        }
+        let params = &self.params;
+        let contention = &mut self.contention;
+        let mut agg = StoreAgg::default();
+        let mut cycles = 0u64;
+        self.caches.write_run(tile, line, 1, home, |_line, out, victims| {
+            cycles = bill_store_line(params, contention, tile, home, out, victims, now, &mut agg);
+        });
+        self.fold_store_agg(home, &agg);
         cycles
     }
 
@@ -568,6 +645,7 @@ impl Engine {
         let num_ctrls = machine.num_controllers();
         let l1_cost = params.l1_hit;
         let l2_cost = params.l2_hit;
+        let line_flits = params.line_flits;
         let home_cost = machine.access_cycles(tile, HitLevel::Home { home });
         let remote = home != tile;
         let (mut l1, mut l2, mut home_hits, mut ddr, mut home_reqs) = (0u64, 0u64, 0u64, 0u64, 0u64);
@@ -590,6 +668,7 @@ impl Engine {
                         home_cost
                             + contention.home_request(home, now, params.home_service)
                             + contention.link_path_request(tile, home, now)
+                            + contention.reply_path_request(home, tile, now, line_flits)
                     }
                     crate::cache::ReadPlace::Ddr => {
                         ddr += 1;
@@ -602,6 +681,7 @@ impl Engine {
                         }
                         c + contention.ctrl_request(ctrl, now, params.ctrl_service)
                             + contention.link_path_request(tile, ctrl_attach, now)
+                            + contention.reply_path_request(ctrl_attach, tile, now, line_flits)
                     }
                 };
             });
@@ -614,7 +694,8 @@ impl Engine {
     }
 
     /// Bulk store of a same-home run: one call into the cache hierarchy;
-    /// invalidation fan-out accounted per line inside the run.
+    /// invalidation fan-out accounted per line inside the run, through the
+    /// same [`bill_store_line`] the reference walk uses (cycle-exact).
     fn write_run(
         &mut self,
         tile: TileId,
@@ -625,32 +706,24 @@ impl Engine {
     ) -> u64 {
         let params = &self.params;
         let contention = &mut self.contention;
-        let local = home == tile;
-        let (mut l2, mut home_hits, mut invals) = (0u64, 0u64, 0u64);
+        let mut agg = StoreAgg::default();
         let mut cycles = 0u64;
         self.caches
-            .write_run(tile, first, count, home, |_line, out| {
+            .write_run(tile, first, count, home, |_line, out, victims| {
                 let now = clock0 + cycles;
-                let mut c = if local {
-                    l2 += 1;
-                    params.l2_hit
-                } else {
-                    home_hits += 1;
-                    params.store_post
-                        + contention.home_request(home, now, params.home_service)
-                        + contention.link_path_request(tile, home, now)
-                };
-                if out.invalidated > 0 {
-                    invals += out.invalidated as u64;
-                    c += params.noc_header + params.noc_hop * out.invalidation_hops as u64;
-                }
-                cycles += c;
+                cycles +=
+                    bill_store_line(params, contention, tile, home, out, victims, now, &mut agg);
             });
-        self.stats.l2_hits += l2;
-        self.stats.home_hits += home_hits;
-        self.stats.tile_home_requests[home.index()] += home_hits;
-        self.stats.invalidations += invals;
+        self.fold_store_agg(home, &agg);
         cycles
+    }
+
+    /// Fold a store run's batched counters into the run stats.
+    fn fold_store_agg(&mut self, home: TileId, agg: &StoreAgg) {
+        self.stats.l2_hits += agg.l2;
+        self.stats.home_hits += agg.home_hits;
+        self.stats.tile_home_requests[home.index()] += agg.home_hits;
+        self.stats.invalidations += agg.invals;
     }
 
     // ------------------------------------------------------------------
@@ -767,6 +840,12 @@ impl Engine {
         if self.contention.links_enabled() {
             self.stats.link_queue_cycles = self.contention.link_delay_cycles;
             self.stats.link_requests = std::mem::take(&mut self.contention.link_requests);
+            self.stats.reply_link_cycles = self.contention.reply_link_cycles;
+            self.stats.invalidation_link_cycles = self.contention.invalidation_link_cycles;
+            self.stats.link_reply_requests =
+                std::mem::take(&mut self.contention.link_reply_requests);
+            self.stats.link_inval_requests =
+                std::mem::take(&mut self.contention.link_inval_requests);
         }
         self.stats.allocs = self.alloc.allocs;
         self.stats.frees = self.alloc.frees;
@@ -1163,7 +1242,7 @@ mod tests {
         };
         for policy in [HashPolicy::None, HashPolicy::AllButStack] {
             for caches in [true, false] {
-                for links in [false, true] {
+                for (links, coherence) in [(false, false), (true, false), (true, true)] {
                     let mk = |page_runs: bool| {
                         let mut cfg = EngineConfig::tilepro64(MemConfig {
                             hash_policy: policy,
@@ -1172,6 +1251,7 @@ mod tests {
                         cfg.caches_enabled = caches;
                         cfg.page_runs = page_runs;
                         cfg.contention.links = links;
+                        cfg.contention.coherence = coherence;
                         let mut e = Engine::new(cfg);
                         let mut p = build(&mut e);
                         e.run(&mut p, &mut StaticMapper::new()).unwrap()
@@ -1181,12 +1261,20 @@ mod tests {
                     assert_eq!(
                         fast.to_json().encode(),
                         slow.to_json().encode(),
-                        "fast path diverged ({policy:?}, caches={caches}, links={links})"
+                        "fast path diverged ({policy:?}, caches={caches}, links={links}, \
+                         coherence={coherence})"
                     );
-                    assert_eq!(
-                        fast.link_requests, slow.link_requests,
-                        "per-link traffic diverged ({policy:?}, caches={caches}, links={links})"
-                    );
+                    for (a, b, class) in [
+                        (&fast.link_requests, &slow.link_requests, "request"),
+                        (&fast.link_reply_requests, &slow.link_reply_requests, "reply"),
+                        (&fast.link_inval_requests, &slow.link_inval_requests, "inval"),
+                    ] {
+                        assert_eq!(
+                            a, b,
+                            "per-link {class} traffic diverged ({policy:?}, caches={caches}, \
+                             links={links}, coherence={coherence})"
+                        );
+                    }
                 }
             }
         }
@@ -1248,5 +1336,52 @@ mod tests {
         assert!(!with.link_requests.is_empty());
         assert_eq!(without.link_queue_cycles, 0);
         assert!(without.link_requests.is_empty());
+    }
+
+    #[test]
+    fn coherence_links_bill_invalidations_and_replies() {
+        // Two tiles ping-pong writes over a shared tile-0-homed page:
+        // every write invalidates the previous writer, so with coherence
+        // billing on the invalidation routes and ack replies must show up
+        // — and switch off cleanly under --no-coherence-links.
+        let run = |coherence: bool| {
+            let mut cfg = EngineConfig::tilepro64(MemConfig {
+                hash_policy: HashPolicy::None,
+                striping: true,
+            })
+            .with_link_contention();
+            cfg.contention.coherence = coherence;
+            let mut e = Engine::new(cfg);
+            let r = e.prealloc_touched(TileId(0), PAGE_BYTES);
+            let mut builders = Vec::new();
+            for _ in 0..4 {
+                let mut b = TraceBuilder::new();
+                for _ in 0..8 {
+                    b.write(Loc::Abs(r.addr), PAGE_BYTES);
+                }
+                builders.push(b);
+            }
+            let mut p = Program::from_builders(builders, 0, 0);
+            e.run(&mut p, &mut StaticMapper::new()).unwrap()
+        };
+        let with = run(true);
+        let without = run(false);
+        assert!(with.invalidations > 0, "ping-pong must invalidate");
+        assert!(
+            with.invalidation_link_cycles > 0,
+            "invalidation routes must queue on links"
+        );
+        assert!(
+            with.link_inval_requests.iter().sum::<u64>() > 0
+                && with.link_reply_requests.iter().sum::<u64>() > 0,
+            "coherence traffic classes must see packets"
+        );
+        assert_eq!(without.invalidation_link_cycles, 0);
+        assert_eq!(without.reply_link_cycles, 0);
+        assert!(without.link_inval_requests.iter().all(|&n| n == 0));
+        assert!(
+            with.makespan_cycles > without.makespan_cycles,
+            "billing coherence traffic cannot speed the run up"
+        );
     }
 }

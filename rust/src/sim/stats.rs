@@ -18,9 +18,16 @@ pub struct RunStats {
     pub migrations: u64,
     pub home_queue_cycles: u64,
     pub ctrl_queue_cycles: u64,
-    /// Total queueing cycles spent waiting for directional mesh links
-    /// (zero when link contention is not modelled).
+    /// Total queueing cycles spent waiting for directional mesh links on
+    /// *forward* (request-class) traversals (zero when link contention is
+    /// not modelled).
     pub link_queue_cycles: u64,
+    /// Cycles billed to reply-path traversals — the data/ack response
+    /// route, wormhole-pipelined (zero unless coherence-link billing ran).
+    pub reply_link_cycles: u64,
+    /// Link-queueing cycles billed to invalidation fan-out + ack routes
+    /// (zero unless coherence-link billing ran).
+    pub invalidation_link_cycles: u64,
     pub compute_cycles: u64,
     pub allocs: u64,
     pub frees: u64,
@@ -32,6 +39,12 @@ pub struct RunStats {
     /// link contention was not modelled**, which also keeps the JSON of
     /// link-free runs byte-identical to the pre-link-model record.
     pub link_requests: Vec<u64>,
+    /// Per-directed-link reply-class traffic (data/ack responses). Same
+    /// indexing and same emptiness contract as `link_requests`; all-zero
+    /// when links were modelled but coherence billing was off.
+    pub link_reply_requests: Vec<u64>,
+    /// Per-directed-link invalidation-class traffic (fan-out + acks).
+    pub link_inval_requests: Vec<u64>,
 }
 
 impl RunStats {
@@ -61,6 +74,12 @@ impl RunStats {
     /// Whether link contention was modelled for this run.
     pub fn links_modelled(&self) -> bool {
         !self.link_requests.is_empty()
+    }
+
+    /// The mesh-saturation signal the falseshare sweep reports: queueing
+    /// on forward routes plus queueing on invalidation fan-out routes.
+    pub fn coherence_link_cycles(&self) -> u64 {
+        self.link_queue_cycles + self.invalidation_link_cycles
     }
 
     /// Index and request count of the busiest directed link, if any saw
@@ -112,6 +131,23 @@ impl RunStats {
                     ("requests", Json::num(hot_n as f64)),
                 ]),
             ));
+            // Coherence-traffic classes (all-zero when --no-coherence-links).
+            fields.push((
+                "reply_link_cycles",
+                Json::num(self.reply_link_cycles as f64),
+            ));
+            fields.push((
+                "invalidation_link_cycles",
+                Json::num(self.invalidation_link_cycles as f64),
+            ));
+            fields.push((
+                "link_reply_total",
+                Json::num(self.link_reply_requests.iter().sum::<u64>() as f64),
+            ));
+            fields.push((
+                "link_inval_total",
+                Json::num(self.link_inval_requests.iter().sum::<u64>() as f64),
+            ));
         }
         Json::obj(fields)
     }
@@ -119,7 +155,10 @@ impl RunStats {
     /// One-line human summary.
     pub fn summary(&self) -> String {
         let links = if self.links_modelled() {
-            format!(" link {}", self.link_queue_cycles)
+            format!(
+                " link {} reply {} inval-link {}",
+                self.link_queue_cycles, self.reply_link_cycles, self.invalidation_link_cycles
+            )
         } else {
             String::new()
         };
@@ -201,9 +240,39 @@ mod tests {
         let j = s.to_json();
         assert!(j.get("link_queue_cycles").is_some());
         assert!(j.get("hottest_link").is_some());
+        assert!(j.get("reply_link_cycles").is_some());
+        assert!(j.get("invalidation_link_cycles").is_some());
         // Ties break towards the lowest index.
         assert_eq!(s.hottest_link(), Some((1, 3)));
         assert!(s.summary().contains("link 7"));
+    }
+
+    #[test]
+    fn coherence_fields_follow_the_link_gate() {
+        // Baseline (no links modelled): the coherence fields must not leak
+        // into the pinned figure JSON.
+        let plain = RunStats {
+            reply_link_cycles: 5,
+            invalidation_link_cycles: 9,
+            ..Default::default()
+        };
+        let j = plain.to_json();
+        assert!(j.get("reply_link_cycles").is_none());
+        assert!(j.get("invalidation_link_cycles").is_none());
+        assert_eq!(plain.coherence_link_cycles(), 9);
+        let linked = RunStats {
+            link_queue_cycles: 4,
+            invalidation_link_cycles: 9,
+            link_requests: vec![1, 0, 0, 0],
+            link_inval_requests: vec![0, 2, 0, 0],
+            ..Default::default()
+        };
+        assert_eq!(linked.coherence_link_cycles(), 13);
+        assert_eq!(
+            linked.to_json().get("link_inval_total").unwrap().encode(),
+            "2"
+        );
+        assert!(linked.summary().contains("inval-link 9"));
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! thread after joining the right subtree (a Wait on its completion event).
 //!
 //! The recursion is *streamed*: each thread's trace is an explicit-stack
-//! generator ([`ThreadGen`]) that walks the recursion tree on demand and
+//! generator (`ThreadGen`) that walks the recursion tree on demand and
 //! emits only that thread's ops, one recursion step per batch. Every
 //! generator performs the identical tree walk (so the program-global slot
 //! and event numbering agrees across threads) but skips the serial-sort

@@ -1,11 +1,14 @@
 //! The paper's workloads as trace generators: the micro-benchmark
 //! (Algorithm 2), parallel merge sort (Algorithms 3/4), the radix-sort
-//! comparison baseline (related work [3]), and additional array kernels
-//! expressed through the generic localisation API.
+//! comparison baseline (related work \[3\]), additional array kernels
+//! expressed through the generic localisation API, and the write
+//! ping-pong / false-sharing benchmark behind the `falseshare` coherence
+//! sweep ([`pingpong`]).
 
 pub mod array_kernels;
 pub mod mergesort;
 pub mod microbench;
+pub mod pingpong;
 pub mod radix;
 
 pub use array_kernels::{HistogramKernel, MapKernel, ReduceKernel, StencilKernel};

@@ -1,0 +1,222 @@
+//! Write ping-pong / false-sharing micro-benchmark (the `falseshare`
+//! sweep's workload).
+//!
+//! A single shared array is initialised by `main` on tile 0. Each of `m`
+//! worker threads then makes `passes` passes over its own `elems / m`
+//! elements, *writing* each element individually:
+//!
+//! - **non-localised**: thread `i` owns the strided elements
+//!   `j·m + i` — adjacent threads' elements share cache lines, so every
+//!   line ping-pongs between writers: each store claims the line at the
+//!   directory and invalidates the previous writer (plus ack), while the
+//!   posted stores hammer the tile-0 home port. With coherence-link
+//!   billing on, the invalidation fan-out and ack/reply routes occupy the
+//!   mesh links — the traffic class that saturates large grids.
+//! - **localised**: thread `i` allocates a private buffer (first-touch
+//!   homed on its own tile under `ucache_hash=none`) and writes that
+//!   instead — same element count, same bytes, zero sharing: stores stay
+//!   in the local L2 and the mesh stays quiet.
+//!
+//! Both variants issue one 4-byte write op per element, so the simulated
+//! line-event count is identical; only the *sharing pattern* differs.
+
+use crate::arch::TileId;
+use crate::mem::{AllocKind, VAddr};
+use crate::sim::trace::{Loc, OpSource, SegmentGen, SegmentSource};
+use crate::sim::{Engine, Program, TraceBuilder};
+
+pub const ELEM_BYTES: u64 = 4;
+
+/// Writes emitted per generator batch (bounds the resident trace window).
+const WRITES_PER_FILL: u64 = 512;
+
+#[derive(Clone, Copy, Debug)]
+pub struct PingPongConfig {
+    /// Total elements in the shared array (each thread owns `elems / m`).
+    pub elems: u64,
+    /// Worker threads.
+    pub threads: usize,
+    /// Write passes over the owned elements.
+    pub passes: u32,
+    /// Privatise the writes (the localisation fix) instead of striding
+    /// through the shared array.
+    pub localised: bool,
+}
+
+impl Default for PingPongConfig {
+    fn default() -> Self {
+        PingPongConfig {
+            elems: 64 * 1024,
+            threads: 32,
+            passes: 8,
+            localised: false,
+        }
+    }
+}
+
+/// Streaming generator for one worker: `passes × per` single-element
+/// writes, chunked into bounded batches; the localised variant brackets
+/// them with its private alloc/free.
+struct ThreadGen {
+    shared: VAddr,
+    tid: u64,
+    threads: u64,
+    per: u64,
+    passes: u32,
+    localised: bool,
+    slot: u32,
+    pass: u32,
+    j: u64,
+    allocated: bool,
+    freed: bool,
+}
+
+impl SegmentGen for ThreadGen {
+    fn fill(&mut self, out: &mut TraceBuilder) -> bool {
+        if self.localised && !self.allocated {
+            out.alloc(self.slot, self.per * ELEM_BYTES, AllocKind::Heap);
+            self.allocated = true;
+            return true;
+        }
+        if self.pass >= self.passes {
+            if self.localised && !self.freed {
+                out.free(self.slot);
+                self.freed = true;
+                return true;
+            }
+            return false;
+        }
+        let mut emitted = 0u64;
+        while emitted < WRITES_PER_FILL && self.pass < self.passes {
+            if self.j == self.per {
+                self.j = 0;
+                self.pass += 1;
+                continue;
+            }
+            let loc = if self.localised {
+                Loc::Slot {
+                    slot: self.slot,
+                    offset: self.j * ELEM_BYTES,
+                }
+            } else {
+                Loc::Abs(
+                    self.shared
+                        .offset((self.j * self.threads + self.tid) * ELEM_BYTES),
+                )
+            };
+            out.write(loc, ELEM_BYTES);
+            self.j += 1;
+            emitted += 1;
+        }
+        true
+    }
+
+    fn rewind(&mut self) {
+        self.pass = 0;
+        self.j = 0;
+        self.allocated = false;
+        self.freed = false;
+    }
+}
+
+/// Build the ping-pong program against `engine`'s memory system. The
+/// shared array is touched by `main` on tile 0 first, so under
+/// `ucache_hash=none` every page homes there — the non-localised variant's
+/// hot spot.
+pub fn build(engine: &mut Engine, cfg: &PingPongConfig) -> Program {
+    assert!(
+        cfg.threads >= 1 && cfg.elems >= cfg.threads as u64,
+        "need at least one element per thread"
+    );
+    let shared = engine.prealloc_touched(TileId(0), cfg.elems * ELEM_BYTES);
+    let per = cfg.elems / cfg.threads as u64;
+    let mut sources: Vec<Box<dyn OpSource>> = Vec::with_capacity(cfg.threads);
+    for i in 0..cfg.threads {
+        sources.push(SegmentSource::boxed(ThreadGen {
+            shared: shared.addr,
+            tid: i as u64,
+            threads: cfg.threads as u64,
+            per,
+            passes: cfg.passes,
+            localised: cfg.localised,
+            slot: i as u32,
+            pass: 0,
+            j: 0,
+            allocated: false,
+            freed: false,
+        }));
+    }
+    Program::new(sources, cfg.threads as u32, 0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::{HashPolicy, MemConfig};
+    use crate::sched::StaticMapper;
+    use crate::sim::EngineConfig;
+
+    fn engine(links: bool) -> Engine {
+        let mut cfg = EngineConfig::tilepro64(MemConfig {
+            hash_policy: HashPolicy::None,
+            striping: true,
+        });
+        cfg.contention.links = links;
+        Engine::new(cfg)
+    }
+
+    fn small(localised: bool) -> PingPongConfig {
+        PingPongConfig {
+            elems: 4096,
+            threads: 8,
+            passes: 4,
+            localised,
+        }
+    }
+
+    #[test]
+    fn program_validates_and_streams_repeatably() {
+        for localised in [false, true] {
+            let mut e = engine(false);
+            let mut p = build(&mut e, &small(localised));
+            p.validate().unwrap();
+            let first = p.record();
+            let second = p.record();
+            assert_eq!(first, second, "stream must rewind identically");
+            // per = 512 elements × 4 passes (+ alloc/free when localised).
+            let extra = if localised { 2 } else { 0 };
+            assert_eq!(first[0].len(), 512 * 4 + extra);
+        }
+    }
+
+    #[test]
+    fn non_localised_ping_pongs_invalidations() {
+        let mut e = engine(false);
+        let mut p = build(&mut e, &small(false));
+        let shared = e.run(&mut p, &mut StaticMapper::new()).unwrap();
+        let mut e = engine(false);
+        let mut p = build(&mut e, &small(true));
+        let local = e.run(&mut p, &mut StaticMapper::new()).unwrap();
+        assert!(
+            shared.invalidations > 10 * local.invalidations.max(1),
+            "false sharing must dominate invalidations: shared {} vs local {}",
+            shared.invalidations,
+            local.invalidations
+        );
+        assert!(
+            local.makespan_cycles < shared.makespan_cycles,
+            "privatised writes must win: {} vs {}",
+            local.makespan_cycles,
+            shared.makespan_cycles
+        );
+    }
+
+    #[test]
+    fn coherence_billing_surfaces_the_ping_pong_on_links() {
+        let mut e = engine(true);
+        let mut p = build(&mut e, &small(false));
+        let stats = e.run(&mut p, &mut StaticMapper::new()).unwrap();
+        assert!(stats.invalidation_link_cycles > 0, "fan-out must queue");
+        assert!(stats.link_inval_requests.iter().sum::<u64>() > 0);
+    }
+}

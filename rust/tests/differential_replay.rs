@@ -80,10 +80,19 @@ fn assert_differential(label: &str, policy: HashPolicy, build: &dyn Fn(&mut Engi
             "{label} ({policy:?}, links={links}): fast path vs reference walk diverged"
         );
         // The per-link traffic vectors are not part of the JSON record;
-        // pin them directly.
+        // pin them directly — all three classes (requests, replies,
+        // invalidations) must be billed in the same order by all replays.
         assert_eq!(
             s_stream.link_requests, s_ref.link_requests,
             "{label} ({policy:?}, links={links}): per-link traffic diverged"
+        );
+        assert_eq!(
+            s_stream.link_reply_requests, s_ref.link_reply_requests,
+            "{label} ({policy:?}, links={links}): reply-class traffic diverged"
+        );
+        assert_eq!(
+            s_stream.link_inval_requests, s_ref.link_inval_requests,
+            "{label} ({policy:?}, links={links}): invalidation-class traffic diverged"
         );
         assert_eq!(s_stream.links_modelled(), links);
     }
@@ -152,6 +161,33 @@ fn radix_streamed_equals_recorded() {
                             elems: 1 << 13,
                             threads: 4,
                             digit_bits: 8,
+                            localised,
+                        },
+                    )
+                },
+            );
+        }
+    }
+}
+
+#[test]
+fn pingpong_streamed_equals_recorded() {
+    // The falseshare workload is the heaviest user of the invalidation
+    // fan-out billing: pin it across the streamed / recorded / reference
+    // replays too (links=true exercises coherence-link billing).
+    use tilesim::workloads::pingpong::{self, PingPongConfig};
+    for policy in POLICIES {
+        for localised in [false, true] {
+            assert_differential(
+                &format!("pingpong localised={localised}"),
+                policy,
+                &|e: &mut Engine| {
+                    pingpong::build(
+                        e,
+                        &PingPongConfig {
+                            elems: 1 << 12,
+                            threads: 8,
+                            passes: 3,
                             localised,
                         },
                     )

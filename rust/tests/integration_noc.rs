@@ -135,3 +135,135 @@ fn link_walk_scales_with_machine() {
     assert_eq!(m.link_requests.iter().sum::<u64>(), 30);
     assert_eq!(xy_links(&big, TileId(0), TileId(255)).count(), 30);
 }
+
+#[test]
+fn invalidation_fanout_links_scale_with_sharer_count() {
+    // Sharer sets {0..n} on a 4×4 grid: fan-out + ack traffic equals
+    // 2 * sum of home→sharer hop counts, and each extra sharer can only
+    // add queueing. (Hand-computed single-set cases live in the
+    // contention unit tests.)
+    let grid = Arc::new(Machine::custom(4, 4, 2).unwrap());
+    let home = TileId(5); // (1,1): asymmetric distances to the corners
+    let mut last_delay = 0;
+    for n in 1..=8u32 {
+        let mut m = ContentionModel::new(ContentionConfig::default(), grid.clone());
+        let victims: Vec<TileId> = (0..n)
+            .map(TileId)
+            .filter(|&t| t != home)
+            .collect();
+        let d = m.invalidation_fanout_request(home, &victims, 0);
+        let expect: u64 = victims
+            .iter()
+            .map(|&v| 2 * grid.hops(home, v) as u64)
+            .sum();
+        assert_eq!(
+            m.link_inval_requests.iter().sum::<u64>(),
+            expect,
+            "n={n}: round-trip link crossings must equal 2*sum(hops)"
+        );
+        assert!(d >= last_delay, "queueing must be monotone in fan-out size");
+        last_delay = d;
+    }
+}
+
+#[test]
+fn prop_coherence_billing_is_zero_when_links_off() {
+    // The satellite property: reply-path (and invalidation) billing is
+    // identically zero — cycles, traffic, and server state — whenever
+    // link contention is off, for random routes, times, and payloads.
+    tilesim::util::prop::check("reply billing off without links", 128, |rng| {
+        let machine = Arc::new(match rng.below(3) {
+            0 => Machine::tilepro64(),
+            1 => Machine::epiphany16(),
+            _ => Machine::custom(
+                rng.range(1, 9) as u32,
+                rng.range(1, 9) as u32,
+                1,
+            )
+            .expect("valid grid"),
+        });
+        let cfg = ContentionConfig {
+            enabled: rng.chance(0.5),
+            links: false,
+            coherence: rng.chance(0.5),
+        };
+        let mut m = ContentionModel::new(cfg, machine.clone());
+        let tiles = machine.num_tiles() as u64;
+        for _ in 0..rng.range(1, 40) {
+            let a = TileId(rng.below(tiles) as u32);
+            let b = TileId(rng.below(tiles) as u32);
+            let now = rng.below(1 << 20);
+            let flits = rng.range(1, 9);
+            tilesim::util::prop::assert_eq_dbg(
+                m.reply_path_request(a, b, now, flits),
+                0,
+                "reply delay",
+            )?;
+            tilesim::util::prop::assert_eq_dbg(
+                m.invalidation_fanout_request(a, &[b], now),
+                0,
+                "invalidation delay",
+            )?;
+        }
+        tilesim::util::prop::assert_eq_dbg(m.reply_link_cycles, 0, "reply cycles")?;
+        tilesim::util::prop::assert_eq_dbg(
+            m.invalidation_link_cycles,
+            0,
+            "invalidation cycles",
+        )?;
+        tilesim::util::prop::assert_holds(
+            m.link_reply_requests.iter().all(|&n| n == 0)
+                && m.link_inval_requests.iter().all(|&n| n == 0),
+            "coherence traffic counted without links",
+        )?;
+        // A forward request issued *after* the coherence calls must see an
+        // empty server: the disabled calls must not have touched state.
+        tilesim::util::prop::assert_eq_dbg(
+            m.link_path_request(TileId(0), TileId(tiles as u32 - 1), 0),
+            0,
+            "forward request saw residual server state",
+        )
+    });
+}
+
+#[test]
+fn prop_reply_billing_zero_when_engine_link_contention_off() {
+    // End-to-end flavour of the same property: a whole engine run with
+    // --no-link-contention reports zero reply/invalidation cycles and
+    // empty class vectors, under random ping-pong-ish write loads.
+    use tilesim::mem::{HashPolicy, MemConfig};
+    use tilesim::sched::StaticMapper;
+    use tilesim::sim::{EngineConfig, Loc, Program, TraceBuilder};
+
+    tilesim::util::prop::check("engine reply billing off", 8, |rng| {
+        let mut cfg = EngineConfig::tilepro64(MemConfig {
+            hash_policy: HashPolicy::None,
+            striping: true,
+        });
+        cfg.contention.links = false;
+        cfg.contention.coherence = true; // inert without links
+        let mut e = tilesim::sim::Engine::new(cfg);
+        let r = e.prealloc_touched(TileId(0), 1 << 16);
+        let threads = rng.range(2, 9) as usize;
+        let mut builders = Vec::new();
+        for _ in 0..threads {
+            let mut b = TraceBuilder::new();
+            for _ in 0..rng.range(1, 5) {
+                b.write(Loc::Abs(r.addr), 1 << 14);
+            }
+            builders.push(b);
+        }
+        let mut p = Program::from_builders(builders, 0, 0);
+        let stats = e.run(&mut p, &mut StaticMapper::new()).expect("run");
+        tilesim::util::prop::assert_eq_dbg(stats.reply_link_cycles, 0, "reply cycles")?;
+        tilesim::util::prop::assert_eq_dbg(
+            stats.invalidation_link_cycles,
+            0,
+            "invalidation cycles",
+        )?;
+        tilesim::util::prop::assert_holds(
+            stats.link_reply_requests.is_empty() && stats.link_inval_requests.is_empty(),
+            "class vectors must stay empty without link contention",
+        )
+    });
+}
