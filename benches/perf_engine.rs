@@ -11,12 +11,14 @@
 //! Env: TILESIM_SIZE (default 2M), TILESIM_SKIP_PJRT=1 to skip the sorter,
 //!      TILESIM_BENCH_OUT (default BENCH_batch.json),
 //!      TILESIM_BENCH_ENGINE_OUT (default BENCH_engine.json),
-//!      TILESIM_BENCH_NOC_OUT (default BENCH_noc.json).
+//!      TILESIM_BENCH_NOC_OUT (default BENCH_noc.json),
+//!      TILESIM_BENCH_FABRIC_OUT (default BENCH_fabric.json).
 
 use std::rc::Rc;
+use std::sync::Arc;
 use std::time::Instant;
 
-use tilesim::arch::TileId;
+use tilesim::arch::{FabricSpec, Machine, TileId};
 use tilesim::coordinator::batch::BatchRunner;
 use tilesim::coordinator::localise::{build_program, LocaliseConfig, ELEM_BYTES};
 use tilesim::coordinator::{case, experiment, ChunkKernel};
@@ -83,6 +85,36 @@ fn scan_replay_links(elems: u64, page_runs: bool, links: bool) -> (RunStats, u64
     let stats = e.run(&mut p, &mut StaticMapper::new()).expect("scan run");
     let resident = p.resident_trace_bytes();
     (stats, resident)
+}
+
+/// Scan replay on a tilepro64-grid machine with a heterogeneous fabric
+/// applied, links on: measures the per-link service *table* lookup cost
+/// against the uniform links-on path, and records the express-channel
+/// effect on link queueing.
+fn scan_replay_on_fabric(elems: u64, fabric: &str) -> RunStats {
+    let machine = Arc::new(
+        Machine::tilepro64()
+            .with_fabric(&FabricSpec::parse(fabric).expect("bench fabric spec"))
+            .expect("bench fabric applies to an 8x8"),
+    );
+    let mut e = Engine::new(EngineConfig::for_machine(
+        machine,
+        MemConfig {
+            hash_policy: HashPolicy::None,
+            striping: true,
+        },
+    ));
+    let input = e.prealloc_touched(TileId(0), elems * ELEM_BYTES);
+    let mut p = build_program(
+        &input,
+        elems,
+        &LocaliseConfig {
+            threads: SCAN_THREADS,
+            localised: false,
+        },
+        Rc::new(Scan { passes: SCAN_PASSES }),
+    );
+    e.run(&mut p, &mut StaticMapper::new()).expect("fabric scan run")
 }
 
 fn main() {
@@ -238,6 +270,64 @@ fn main() {
         std::env::var("TILESIM_BENCH_NOC_OUT").unwrap_or_else(|_| "BENCH_noc.json".into());
     std::fs::write(&noc_path, noc_json.encode()).expect("write BENCH_noc.json");
     println!("wrote {noc_path}");
+
+    // --- BENCH_fabric.json: the same links-on scan with a heterogeneous
+    // fabric (express row 0 + column 0 over a 4-cycle base) against a
+    // *uniform* base=4 run. Both go through the identical per-link table
+    // lookup, so their throughput ratio isolates the heterogeneous
+    // queueing dynamics, and the link-queue delta is the express-channel
+    // effect; the base=1 links-on number above anchors the trajectory.
+    let express = "base=4:express-row=0@0.5:express-col=0@0.5";
+    let fabric_stats = scan_replay_on_fabric(scan_elems, express);
+    let uniform_stats = scan_replay_on_fabric(scan_elems, "base=4");
+    let t_fabric = time_it(1, 2, || {
+        std::hint::black_box(scan_replay_on_fabric(scan_elems, express).makespan_cycles);
+    });
+    let t_uniform4 = time_it(1, 2, || {
+        std::hint::black_box(scan_replay_on_fabric(scan_elems, "base=4").makespan_cycles);
+    });
+    let fabric_lps = scan_lines as f64 / t_fabric.min_s;
+    let uniform4_lps = scan_lines as f64 / t_uniform4.min_s;
+    println!("{}", t_fabric.summary("replay: seq-scan, express fabric"));
+    println!("{}", t_uniform4.summary("replay: seq-scan, uniform base=4 fabric"));
+    println!(
+        "fabric: {:.1} M lines/s (express) vs {:.1} M lines/s (uniform base=4) = {:.2}x \
+         express speedup | link-queue cycles {} (express) vs {} (uniform base=4)",
+        fabric_lps / 1e6,
+        uniform4_lps / 1e6,
+        fabric_lps / uniform4_lps,
+        fabric_stats.link_queue_cycles,
+        uniform_stats.link_queue_cycles
+    );
+    let fabric_json = Json::obj(vec![
+        ("bench", Json::str("heterogeneous_fabric_throughput")),
+        ("workload", Json::str("seq-scan microbench, tilepro64 grid")),
+        ("fabric", Json::str(express)),
+        ("elems", Json::num(scan_elems as f64)),
+        ("threads", Json::num(SCAN_THREADS as f64)),
+        ("lines_per_run", Json::num(scan_lines as f64)),
+        ("express_min_s", Json::num(t_fabric.min_s)),
+        ("express_lines_per_sec", Json::num(fabric_lps)),
+        ("uniform_base4_min_s", Json::num(t_uniform4.min_s)),
+        ("uniform_base4_lines_per_sec", Json::num(uniform4_lps)),
+        ("uniform_base1_lines_per_sec", Json::num(links_lps)),
+        (
+            "express_speedup_over_uniform",
+            Json::num(fabric_lps / uniform4_lps),
+        ),
+        (
+            "express_link_queue_cycles",
+            Json::num(fabric_stats.link_queue_cycles as f64),
+        ),
+        (
+            "uniform_base4_link_queue_cycles",
+            Json::num(uniform_stats.link_queue_cycles as f64),
+        ),
+    ]);
+    let fabric_path = std::env::var("TILESIM_BENCH_FABRIC_OUT")
+        .unwrap_or_else(|_| "BENCH_fabric.json".into());
+    std::fs::write(&fabric_path, fabric_json.encode()).expect("write BENCH_fabric.json");
+    println!("wrote {fabric_path}");
 
     // --- batch pool: full table1 sweep at 1 job vs all cores. The sweep
     // is the unit of work every figure replays, so this is the number the

@@ -1,0 +1,899 @@
+//! Heterogeneous fabric model: per-directed-link service times and
+//! controller-placement strategies.
+//!
+//! The seed simulator billed every mesh link at the single scalar
+//! `LatencyParams::link_service` and pinned memory controllers to evenly
+//! spaced top/bottom edge slots. Real meshes are not uniform: chips ship
+//! express rows/columns that bypass intermediate routers, wider links along
+//! the die edge, per-direction asymmetry (e.g. the Epiphany eMesh, whose
+//! writes stream faster than reads), and controllers at corners, sides, or
+//! interior TSV sites. Where the controllers sit and how expensive each
+//! link is decides *which* routes the coherence protocol saturates — the
+//! mechanism behind the paper's Fig. 4 crossover and the traffic analysis
+//! of Kommrusch et al. (arXiv:2011.05422).
+//!
+//! Three types model this:
+//!
+//! - [`Fabric`] — the per-machine table giving every directed link its own
+//!   service time (indexed by `Machine::link_index`). A uniform table with
+//!   the machine's scalar `link_service` reproduces the pre-fabric billing
+//!   exactly (property-pinned by `rust/tests/prop_fabric.rs`).
+//! - [`CtrlPlacement`] — where the memory controllers attach:
+//!   `EdgesEven` (the seed's top/bottom spacing, the default), `Sides`,
+//!   `Corners`, `Interior`, or an explicit tile list.
+//! - [`FabricSpec`] — a compact, parseable description carried by
+//!   `RunSpec`s and the `--fabric` CLI flag, e.g.
+//!   `8x8:ctrl=corners:express-row=3@0.5`.
+
+use super::machine::{Machine, MachineSpec};
+use super::topology::{Controller, Dir, TileId};
+
+/// Errors from parsing a [`FabricSpec`] / [`CtrlPlacement`] or applying
+/// one to a machine.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FabricError {
+    /// The spec string itself is malformed.
+    BadSpec { spec: String, why: String },
+    /// A structurally valid spec does not fit the target machine
+    /// (out-of-range row/column, too many controllers for a placement, …).
+    Incompatible { what: String, why: String },
+}
+
+impl std::fmt::Display for FabricError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FabricError::BadSpec { spec, why } => {
+                write!(f, "bad fabric spec '{spec}': {why}")
+            }
+            FabricError::Incompatible { what, why } => {
+                write!(f, "fabric '{what}' does not fit this machine: {why}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FabricError {}
+
+fn bad(spec: &str, why: impl Into<String>) -> FabricError {
+    FabricError::BadSpec {
+        spec: spec.to_string(),
+        why: why.into(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fabric: the per-link service table
+// ---------------------------------------------------------------------------
+
+/// Per-directed-link service times of one machine, indexed by
+/// `Machine::link_index`. Service 0 models an infinitely wide (express)
+/// link: it still carries traffic but never queues.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Fabric {
+    service: Vec<u64>,
+}
+
+impl Fabric {
+    /// A uniform fabric: every link bills `service` cycles — the
+    /// pre-fabric scalar model.
+    pub fn uniform(num_links: usize, service: u64) -> Fabric {
+        Fabric {
+            service: vec![service; num_links],
+        }
+    }
+
+    /// A fabric from an explicit per-link table.
+    pub fn from_services(service: Vec<u64>) -> Fabric {
+        Fabric { service }
+    }
+
+    #[inline]
+    pub fn num_links(&self) -> usize {
+        self.service.len()
+    }
+
+    /// Service time of the directed link at `index`.
+    #[inline]
+    pub fn service(&self, index: usize) -> u64 {
+        self.service[index]
+    }
+
+    /// `Some(service)` when every link bills the same value (the scalar
+    /// model), `None` for a heterogeneous table.
+    pub fn uniform_service(&self) -> Option<u64> {
+        let first = *self.service.first()?;
+        self.service.iter().all(|&s| s == first).then_some(first)
+    }
+
+    /// Sort-and-group a stream of service values into `(service, count)`
+    /// classes, cheapest first (shared by [`classes`](Self::classes) and
+    /// the physical-link grouping in `metrics`).
+    pub fn classes_of(services: impl Iterator<Item = u64>) -> Vec<(u64, usize)> {
+        let mut sorted: Vec<u64> = services.collect();
+        sorted.sort_unstable();
+        let mut out: Vec<(u64, usize)> = Vec::new();
+        for s in sorted {
+            match out.last_mut() {
+                Some((v, n)) if *v == s => *n += 1,
+                _ => out.push((s, 1)),
+            }
+        }
+        out
+    }
+
+    /// Distinct service values with their *table-slot* counts, cheapest
+    /// first. Counts include the off-grid boundary slots that never carry
+    /// traffic (every tile owns four entries); `metrics` recomputes the
+    /// classes over physical links (via `Machine::has_link`) for the
+    /// heatmap annotations.
+    pub fn classes(&self) -> Vec<(u64, usize)> {
+        Fabric::classes_of(self.service.iter().copied())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Controller placement strategies
+// ---------------------------------------------------------------------------
+
+/// Where a machine's memory controllers attach to the mesh.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CtrlPlacement {
+    /// Evenly spaced on the top and bottom edges (the TILEPro64 pattern
+    /// and the pre-fabric default — byte-identical controller lists).
+    EdgesEven,
+    /// Evenly spaced on the left and right edges.
+    Sides,
+    /// At the grid corners (at most the number of distinct corners).
+    Corners,
+    /// Evenly spaced along the middle row — interior TSV-style attach
+    /// points (degenerate 1-row grids fall back to that single row).
+    Interior,
+    /// An explicit list of attach tiles; the list length is the
+    /// controller count.
+    Explicit(Vec<TileId>),
+}
+
+impl CtrlPlacement {
+    /// Parse a placement clause: `edges | sides | corners | interior` or
+    /// an explicit `+`-separated tile list like `0+27+63`.
+    pub fn parse(s: &str) -> Result<CtrlPlacement, FabricError> {
+        match s {
+            "edges" => return Ok(CtrlPlacement::EdgesEven),
+            "sides" => return Ok(CtrlPlacement::Sides),
+            "corners" => return Ok(CtrlPlacement::Corners),
+            "interior" => return Ok(CtrlPlacement::Interior),
+            _ => {}
+        }
+        let tiles: Option<Vec<TileId>> = s
+            .split('+')
+            .map(|t| t.parse::<u32>().ok().map(TileId))
+            .collect();
+        match tiles {
+            Some(ts) if !ts.is_empty() => Ok(CtrlPlacement::Explicit(ts)),
+            _ => Err(bad(
+                s,
+                "want edges | sides | corners | interior | tile+tile+…",
+            )),
+        }
+    }
+
+    /// Stable label (the parser's inverse).
+    pub fn label(&self) -> String {
+        match self {
+            CtrlPlacement::EdgesEven => "edges".into(),
+            CtrlPlacement::Sides => "sides".into(),
+            CtrlPlacement::Corners => "corners".into(),
+            CtrlPlacement::Interior => "interior".into(),
+            CtrlPlacement::Explicit(ts) => ts
+                .iter()
+                .map(|t| t.0.to_string())
+                .collect::<Vec<_>>()
+                .join("+"),
+        }
+    }
+
+    /// The distinct corner tiles of a `w×h` grid, spread-first order
+    /// (opposite corners before adjacent ones).
+    fn corner_tiles(w: u32, h: u32) -> Vec<TileId> {
+        let mut out: Vec<TileId> = Vec::with_capacity(4);
+        for t in [
+            TileId(0),
+            TileId((h - 1) * w + (w - 1)),
+            TileId(w - 1),
+            TileId((h - 1) * w),
+        ] {
+            if !out.contains(&t) {
+                out.push(t);
+            }
+        }
+        out
+    }
+
+    /// Maximum controller count this placement supports on a `w×h` grid
+    /// (every attach tile must be distinct — stacking controllers on one
+    /// tile would double the modelled DRAM bandwidth there).
+    pub fn capacity(&self, w: u32, h: u32) -> u32 {
+        match self {
+            CtrlPlacement::EdgesEven => {
+                if h == 1 {
+                    w
+                } else {
+                    2 * w
+                }
+            }
+            CtrlPlacement::Sides => {
+                if w == 1 {
+                    h
+                } else {
+                    2 * h
+                }
+            }
+            CtrlPlacement::Corners => CtrlPlacement::corner_tiles(w, h).len() as u32,
+            CtrlPlacement::Interior => w,
+            CtrlPlacement::Explicit(ts) => ts.len() as u32,
+        }
+    }
+
+    /// Build the controller list for `ctrls` controllers on a `w×h` grid.
+    /// `Explicit` ignores `ctrls` (its list is the count). `EdgesEven`
+    /// reproduces the pre-fabric attach columns exactly.
+    pub fn controllers(&self, w: u32, h: u32, ctrls: u32) -> Result<Vec<Controller>, FabricError> {
+        let n = match self {
+            CtrlPlacement::Explicit(ts) => ts.len() as u32,
+            _ => ctrls,
+        };
+        if n == 0 || n > self.capacity(w, h) {
+            return Err(FabricError::Incompatible {
+                what: format!("ctrl={}", self.label()),
+                why: format!(
+                    "{n} controller(s) on a {w}x{h} grid: this placement holds 1..={}",
+                    self.capacity(w, h)
+                ),
+            });
+        }
+        // Evenly spaced index along an axis of length `len` — injective
+        // for counts up to `len` (the seed's edge-column formula).
+        let spread = |j: u32, count: u32, len: u32| ((j + 1) * len / (count + 1)).min(len - 1);
+        let mut cs: Vec<Controller> = Vec::with_capacity(n as usize);
+        match self {
+            CtrlPlacement::EdgesEven => {
+                let top = if h == 1 { n } else { n.div_ceil(2) };
+                let bottom = n - top;
+                for j in 0..top {
+                    cs.push(Controller {
+                        id: j,
+                        attach: TileId(spread(j, top, w)),
+                    });
+                }
+                for j in 0..bottom {
+                    cs.push(Controller {
+                        id: top + j,
+                        attach: TileId((h - 1) * w + spread(j, bottom, w)),
+                    });
+                }
+            }
+            CtrlPlacement::Sides => {
+                let left = if w == 1 { n } else { n.div_ceil(2) };
+                let right = n - left;
+                for j in 0..left {
+                    cs.push(Controller {
+                        id: j,
+                        attach: TileId(spread(j, left, h) * w),
+                    });
+                }
+                for j in 0..right {
+                    cs.push(Controller {
+                        id: left + j,
+                        attach: TileId(spread(j, right, h) * w + (w - 1)),
+                    });
+                }
+            }
+            CtrlPlacement::Corners => {
+                for (j, t) in CtrlPlacement::corner_tiles(w, h)
+                    .into_iter()
+                    .take(n as usize)
+                    .enumerate()
+                {
+                    cs.push(Controller {
+                        id: j as u32,
+                        attach: t,
+                    });
+                }
+            }
+            CtrlPlacement::Interior => {
+                let row = h / 2;
+                for j in 0..n {
+                    cs.push(Controller {
+                        id: j,
+                        attach: TileId(row * w + spread(j, n, w)),
+                    });
+                }
+            }
+            CtrlPlacement::Explicit(ts) => {
+                let tiles = w * h;
+                for (j, &t) in ts.iter().enumerate() {
+                    if t.0 >= tiles {
+                        return Err(FabricError::Incompatible {
+                            what: format!("ctrl={}", self.label()),
+                            why: format!("tile {} out of range on a {w}x{h} grid", t.0),
+                        });
+                    }
+                    if ts[..j].contains(&t) {
+                        return Err(FabricError::Incompatible {
+                            what: format!("ctrl={}", self.label()),
+                            why: format!("tile {} listed twice", t.0),
+                        });
+                    }
+                    cs.push(Controller {
+                        id: j as u32,
+                        attach: t,
+                    });
+                }
+            }
+        }
+        Ok(cs)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FabricSpec: the parseable description
+// ---------------------------------------------------------------------------
+
+/// An exact scale factor parsed from a decimal literal like `0.5`
+/// (applied as `service * num / den`, flooring — so halving a 1-cycle
+/// link yields a free express link; raise `base=` first for finer grades).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Factor {
+    pub num: u64,
+    pub den: u64,
+    text: String,
+}
+
+impl Factor {
+    pub fn parse(s: &str) -> Result<Factor, FabricError> {
+        let (int, frac) = match s.split_once('.') {
+            Some((i, f)) => (i, Some(f)),
+            None => (s, None),
+        };
+        let digits = |p: &str| !p.is_empty() && p.bytes().all(|b| b.is_ascii_digit());
+        let frac_ok = match frac {
+            Some(f) => digits(f) && f.len() <= 6,
+            None => true,
+        };
+        if !digits(int) || !frac_ok {
+            return Err(bad(s, "want a decimal factor like 2, 0.5, or 1.25"));
+        }
+        let den = 10u64.pow(match frac {
+            Some(f) => f.len() as u32,
+            None => 0,
+        });
+        let out_of_range = || bad(s, "factor out of range");
+        let int_v = int.parse::<u64>().map_err(|_| out_of_range())?;
+        let frac_v = match frac {
+            Some(f) => f.parse::<u64>().map_err(|_| out_of_range())?,
+            None => 0,
+        };
+        let num = int_v
+            .checked_mul(den)
+            .and_then(|v| v.checked_add(frac_v))
+            .ok_or_else(out_of_range)?;
+        Ok(Factor {
+            num,
+            den,
+            text: s.to_string(),
+        })
+    }
+
+    pub fn label(&self) -> &str {
+        &self.text
+    }
+
+    /// Apply to a service value (floored; saturating on absurd inputs).
+    #[inline]
+    pub fn scale(&self, service: u64) -> u64 {
+        service.saturating_mul(self.num) / self.den
+    }
+}
+
+/// A region of directed links a rule scales.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum LinkRegion {
+    /// The east/west links of every tile on mesh row `y` (an express row).
+    Row(u32),
+    /// The north/south links of every tile in mesh column `x`.
+    Col(u32),
+    /// All links leaving boundary tiles (wider edge links).
+    Edge,
+    /// Every link in one direction (per-direction asymmetry).
+    Direction(Dir),
+}
+
+/// One region-scaling rule of a [`FabricSpec`], e.g. `express-row=3@0.5`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LinkRule {
+    pub region: LinkRegion,
+    pub factor: Factor,
+}
+
+impl LinkRule {
+    fn label(&self) -> String {
+        match &self.region {
+            LinkRegion::Row(y) => format!("express-row={y}@{}", self.factor.label()),
+            LinkRegion::Col(x) => format!("express-col={x}@{}", self.factor.label()),
+            LinkRegion::Edge => format!("edge@{}", self.factor.label()),
+            LinkRegion::Direction(d) => format!("dir={}@{}", d.letter(), self.factor.label()),
+        }
+    }
+}
+
+/// A compact, machine-independent fabric description: an optional leading
+/// machine clause (a `--machine` spec, CLI convenience), an optional
+/// controller placement, an optional uniform base service, and region
+/// rules applied in order.
+///
+/// # Examples
+///
+/// The issue-style one-liner — grid, corner controllers, and a half-cost
+/// express row — parses, labels back, and applies to a machine:
+///
+/// ```
+/// use tilesim::arch::{CtrlPlacement, FabricSpec, MachineSpec};
+///
+/// let spec = FabricSpec::parse("8x8:ctrl=corners:express-row=3@0.5").unwrap();
+/// let (machine, fabric) = spec.split_machine();
+/// assert_eq!(machine, Some(MachineSpec::parse("8x8").unwrap()));
+/// assert_eq!(fabric.ctrl, Some(CtrlPlacement::Corners));
+/// assert_eq!(fabric.label(), "ctrl=corners:express-row=3@0.5");
+///
+/// // Applying rebuilds the controllers and the per-link service table.
+/// let m = machine.unwrap().build().with_fabric(&fabric).unwrap();
+/// assert_eq!(m.controllers()[0].attach.0, 0); // a corner, not an edge column
+/// assert!(m.fabric().uniform_service().is_none());
+///
+/// // `base=` sets the uniform service the rules scale: 4 @ 0.5 = 2.
+/// let f = FabricSpec::parse("base=4:express-row=0@0.5").unwrap();
+/// let m = MachineSpec::parse("4x4").unwrap().build().with_fabric(&f).unwrap();
+/// assert_eq!(m.fabric().classes(), vec![(2, 8), (4, 56)]);
+///
+/// // Malformed specs are rejected, not guessed at.
+/// assert!(FabricSpec::parse("express-row=@2").is_err());
+/// assert!(FabricSpec::parse("warp=9").is_err());
+/// ```
+#[derive(Clone, Debug, PartialEq, Eq, Default)]
+pub struct FabricSpec {
+    /// Leading machine clause, if the spec carried one (stripped by
+    /// [`split_machine`](Self::split_machine) before a `RunSpec` stores
+    /// the fabric).
+    pub machine: Option<MachineSpec>,
+    /// Controller placement override.
+    pub ctrl: Option<CtrlPlacement>,
+    /// Uniform base service before rules (default: the machine's
+    /// `link_service`).
+    pub base: Option<u64>,
+    /// Region rules, applied in order (stacking composes).
+    pub rules: Vec<LinkRule>,
+}
+
+impl FabricSpec {
+    /// Parse a `:`-separated clause list. Clauses:
+    ///
+    /// - a leading machine spec (`tilepro64`, `8x8`, `16x16:8`, …);
+    /// - `ctrl=<placement>` (see [`CtrlPlacement::parse`]);
+    /// - `base=N` — uniform service the rules scale;
+    /// - `express-row=Y@F`, `express-col=X@F`, `edge@F`, `dir=D@F` with
+    ///   `D` one of `E|W|N|S` and `F` a decimal factor.
+    pub fn parse(s: &str) -> Result<FabricSpec, FabricError> {
+        let parts: Vec<&str> = s.split(':').collect();
+        if parts.iter().any(|p| p.is_empty()) {
+            return Err(bad(s, "empty clause"));
+        }
+        let mut spec = FabricSpec::default();
+        let mut i = 0;
+        // A leading clause without '=' or '@' is a machine spec; a bare
+        // numeric clause after it is the machine's `:ctrls` suffix.
+        if let Some(first) = parts.first() {
+            if !first.contains('=') && !first.contains('@') {
+                let mut mstr = first.to_string();
+                i = 1;
+                if let Some(second) = parts.get(1) {
+                    if second.bytes().all(|b| b.is_ascii_digit()) {
+                        mstr = format!("{first}:{second}");
+                        i = 2;
+                    }
+                }
+                spec.machine = Some(
+                    MachineSpec::parse(&mstr)
+                        .map_err(|e| bad(s, format!("machine clause: {e}")))?,
+                );
+            }
+        }
+        for clause in &parts[i..] {
+            if let Some(rest) = clause.strip_prefix("ctrl=") {
+                if spec.ctrl.is_some() {
+                    return Err(bad(s, "duplicate ctrl= clause"));
+                }
+                spec.ctrl = Some(CtrlPlacement::parse(rest)?);
+            } else if let Some(rest) = clause.strip_prefix("base=") {
+                if spec.base.is_some() {
+                    return Err(bad(s, "duplicate base= clause"));
+                }
+                let b = rest
+                    .parse::<u64>()
+                    .map_err(|_| bad(s, format!("base '{rest}' is not an integer")))?;
+                spec.base = Some(b);
+            } else {
+                spec.rules.push(FabricSpec::parse_rule(s, clause)?);
+            }
+        }
+        if spec.machine.is_none()
+            && spec.ctrl.is_none()
+            && spec.base.is_none()
+            && spec.rules.is_empty()
+        {
+            return Err(bad(s, "no clauses"));
+        }
+        Ok(spec)
+    }
+
+    fn parse_rule(spec: &str, clause: &str) -> Result<LinkRule, FabricError> {
+        let (lhs, factor) = clause
+            .split_once('@')
+            .ok_or_else(|| bad(spec, format!("clause '{clause}' is not a known clause or rule")))?;
+        let factor = Factor::parse(factor)?;
+        let index = |rest: &str, what: &str| -> Result<u32, FabricError> {
+            rest.parse::<u32>()
+                .map_err(|_| bad(spec, format!("{what} '{rest}' is not an integer")))
+        };
+        let region = if let Some(rest) = lhs.strip_prefix("express-row=") {
+            LinkRegion::Row(index(rest, "express-row")?)
+        } else if let Some(rest) = lhs.strip_prefix("express-col=") {
+            LinkRegion::Col(index(rest, "express-col")?)
+        } else if lhs == "edge" {
+            LinkRegion::Edge
+        } else if let Some(rest) = lhs.strip_prefix("dir=") {
+            let dir = match rest {
+                "E" => Dir::East,
+                "W" => Dir::West,
+                "N" => Dir::North,
+                "S" => Dir::South,
+                _ => return Err(bad(spec, format!("dir '{rest}': want E|W|N|S"))),
+            };
+            LinkRegion::Direction(dir)
+        } else {
+            return Err(bad(spec, format!("unknown rule '{lhs}'")));
+        };
+        Ok(LinkRule { region, factor })
+    }
+
+    /// Canonical label: machine clause (if any), then `ctrl=`, `base=`,
+    /// rules in order. `parse(label())` round-trips.
+    pub fn label(&self) -> String {
+        let mut clauses: Vec<String> = Vec::new();
+        if let Some(m) = self.machine {
+            clauses.push(m.label());
+        }
+        if let Some(p) = &self.ctrl {
+            clauses.push(format!("ctrl={}", p.label()));
+        }
+        if let Some(b) = self.base {
+            clauses.push(format!("base={b}"));
+        }
+        for r in &self.rules {
+            clauses.push(r.label());
+        }
+        clauses.join(":")
+    }
+
+    /// Split off the leading machine clause (CLI normalisation: the
+    /// machine goes to `--machine` handling, the rest rides in the
+    /// `RunSpec`).
+    pub fn split_machine(mut self) -> (Option<MachineSpec>, FabricSpec) {
+        let m = self.machine.take();
+        (m, self)
+    }
+
+    /// Whether applying this spec changes nothing (no placement, no base,
+    /// no rules).
+    pub fn is_noop(&self) -> bool {
+        self.ctrl.is_none() && self.base.is_none() && self.rules.is_empty()
+    }
+
+    /// Build the per-link service table for `machine`. Region indices are
+    /// validated against the machine's grid.
+    pub fn build_table(&self, machine: &Machine) -> Result<Fabric, FabricError> {
+        let base = self.base.unwrap_or(machine.params.link_service);
+        let n = machine.num_tiles() as usize;
+        let mut service = vec![base; machine.num_links()];
+        for rule in &self.rules {
+            match rule.region {
+                LinkRegion::Row(y) => {
+                    if y >= machine.grid_h() {
+                        return Err(FabricError::Incompatible {
+                            what: rule.label(),
+                            why: format!("row {y} on a {} -row grid", machine.grid_h()),
+                        });
+                    }
+                    for x in 0..machine.grid_w() {
+                        let t = TileId(y * machine.grid_w() + x);
+                        for dir in [Dir::East, Dir::West] {
+                            let ix = machine.link_index(t, dir);
+                            service[ix] = rule.factor.scale(service[ix]);
+                        }
+                    }
+                }
+                LinkRegion::Col(x) => {
+                    if x >= machine.grid_w() {
+                        return Err(FabricError::Incompatible {
+                            what: rule.label(),
+                            why: format!("column {x} on a {} -wide grid", machine.grid_w()),
+                        });
+                    }
+                    for y in 0..machine.grid_h() {
+                        let t = TileId(y * machine.grid_w() + x);
+                        for dir in [Dir::North, Dir::South] {
+                            let ix = machine.link_index(t, dir);
+                            service[ix] = rule.factor.scale(service[ix]);
+                        }
+                    }
+                }
+                LinkRegion::Edge => {
+                    for t in machine.tiles() {
+                        let c = machine.coord(t);
+                        let on_edge = c.x == 0
+                            || c.y == 0
+                            || c.x == machine.grid_w() - 1
+                            || c.y == machine.grid_h() - 1;
+                        if on_edge {
+                            for dir in Dir::ALL {
+                                let ix = machine.link_index(t, dir);
+                                service[ix] = rule.factor.scale(service[ix]);
+                            }
+                        }
+                    }
+                }
+                LinkRegion::Direction(d) => {
+                    for ix in d.index() * n..(d.index() + 1) * n {
+                        service[ix] = rule.factor.scale(service[ix]);
+                    }
+                }
+            }
+        }
+        Ok(Fabric::from_services(service))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Coord;
+
+    #[test]
+    fn uniform_fabric_reports_its_service() {
+        let f = Fabric::uniform(16, 3);
+        assert_eq!(f.uniform_service(), Some(3));
+        assert_eq!(f.classes(), vec![(3, 16)]);
+        assert_eq!(f.service(7), 3);
+        let het = Fabric::from_services(vec![1, 1, 2, 4]);
+        assert_eq!(het.uniform_service(), None);
+        assert_eq!(het.classes(), vec![(1, 2), (2, 1), (4, 1)]);
+    }
+
+    #[test]
+    fn factor_parses_exact_rationals() {
+        assert_eq!(Factor::parse("0.5").unwrap().scale(4), 2);
+        assert_eq!(Factor::parse("0.25").unwrap().scale(4), 1);
+        assert_eq!(Factor::parse("2").unwrap().scale(3), 6);
+        assert_eq!(Factor::parse("1.25").unwrap().scale(8), 10);
+        // Flooring: halving a 1-cycle link is a free express link.
+        assert_eq!(Factor::parse("0.5").unwrap().scale(1), 0);
+        for s in ["", ".", "1.", ".5", "a", "1.x", "0.1234567", "-1"] {
+            assert!(Factor::parse(s).is_err(), "factor '{s}' should fail");
+        }
+    }
+
+    #[test]
+    fn placement_parse_round_trips() {
+        for p in [
+            CtrlPlacement::EdgesEven,
+            CtrlPlacement::Sides,
+            CtrlPlacement::Corners,
+            CtrlPlacement::Interior,
+            CtrlPlacement::Explicit(vec![TileId(0), TileId(27), TileId(63)]),
+        ] {
+            assert_eq!(CtrlPlacement::parse(&p.label()).unwrap(), p);
+        }
+        assert!(CtrlPlacement::parse("middle").is_err());
+        assert!(CtrlPlacement::parse("").is_err());
+        assert!(CtrlPlacement::parse("1+x").is_err());
+    }
+
+    #[test]
+    fn edges_even_matches_pre_fabric_columns() {
+        // The seed's 8x8/4 pattern: columns 2 and 5 on rows 0 and 7.
+        let cs = CtrlPlacement::EdgesEven.controllers(8, 8, 4).unwrap();
+        let attaches: Vec<u32> = cs.iter().map(|c| c.attach.0).collect();
+        assert_eq!(attaches, vec![2, 5, 7 * 8 + 2, 7 * 8 + 5]);
+        assert_eq!(cs.iter().map(|c| c.id).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn sides_attach_to_left_and_right_edges() {
+        let cs = CtrlPlacement::Sides.controllers(8, 8, 4).unwrap();
+        for c in &cs {
+            let x = c.attach.0 % 8;
+            assert!(x == 0 || x == 7, "{c:?} not on a side edge");
+        }
+        let attaches: std::collections::HashSet<_> = cs.iter().map(|c| c.attach).collect();
+        assert_eq!(attaches.len(), 4, "distinct attach tiles");
+    }
+
+    #[test]
+    fn corners_spread_opposite_first() {
+        let cs = CtrlPlacement::Corners.controllers(8, 8, 2).unwrap();
+        assert_eq!(cs[0].attach, TileId(0));
+        assert_eq!(cs[1].attach, TileId(63));
+        assert!(CtrlPlacement::Corners.controllers(8, 8, 4).is_ok());
+        assert!(CtrlPlacement::Corners.controllers(8, 8, 5).is_err());
+        // A single-row grid has only two distinct corners.
+        assert_eq!(CtrlPlacement::Corners.capacity(4, 1), 2);
+        assert_eq!(CtrlPlacement::Corners.capacity(1, 1), 1);
+    }
+
+    #[test]
+    fn interior_sits_on_the_middle_row() {
+        let cs = CtrlPlacement::Interior.controllers(8, 8, 4).unwrap();
+        for c in &cs {
+            assert_eq!(c.attach.0 / 8, 4, "{c:?} not on row h/2");
+        }
+        let cols: std::collections::HashSet<_> = cs.iter().map(|c| c.attach.0 % 8).collect();
+        assert_eq!(cols.len(), 4);
+    }
+
+    #[test]
+    fn explicit_placement_validates() {
+        let p = CtrlPlacement::Explicit(vec![TileId(3), TileId(12)]);
+        let cs = p.controllers(4, 4, 99).unwrap(); // count comes from the list
+        assert_eq!(cs.len(), 2);
+        assert_eq!(cs[1], Controller { id: 1, attach: TileId(12) });
+        assert!(CtrlPlacement::Explicit(vec![TileId(16)])
+            .controllers(4, 4, 1)
+            .is_err());
+        assert!(CtrlPlacement::Explicit(vec![TileId(1), TileId(1)])
+            .controllers(4, 4, 2)
+            .is_err());
+    }
+
+    #[test]
+    fn placement_capacity_rejects_overflow() {
+        for p in [
+            CtrlPlacement::EdgesEven,
+            CtrlPlacement::Sides,
+            CtrlPlacement::Corners,
+            CtrlPlacement::Interior,
+        ] {
+            let cap = p.capacity(4, 4);
+            assert!(p.controllers(4, 4, cap).is_ok(), "{p:?} at capacity");
+            assert!(p.controllers(4, 4, cap + 1).is_err(), "{p:?} over capacity");
+            assert!(p.controllers(4, 4, 0).is_err(), "{p:?} zero controllers");
+            // All attach tiles distinct at capacity.
+            let cs = p.controllers(4, 4, cap).unwrap();
+            let distinct: std::collections::HashSet<_> =
+                cs.iter().map(|c| c.attach).collect();
+            assert_eq!(distinct.len(), cap as usize, "{p:?} stacked controllers");
+        }
+    }
+
+    #[test]
+    fn spec_parse_round_trips() {
+        for s in [
+            "ctrl=corners",
+            "base=4",
+            "express-row=3@0.5",
+            "express-col=0@2",
+            "edge@0.5",
+            "dir=E@1.25",
+            "ctrl=sides:base=8:express-row=1@0.5:dir=W@2",
+            "8x8:4:ctrl=corners:express-row=3@0.5",
+            "16x16:8:ctrl=interior",
+            "epiphany16:dir=E@0.5",
+        ] {
+            let spec = FabricSpec::parse(s).unwrap();
+            assert_eq!(spec.label(), s, "label must be the parser's inverse");
+            assert_eq!(FabricSpec::parse(&spec.label()).unwrap(), spec);
+        }
+        // A machine clause without the `:ctrls` suffix canonicalises to
+        // the full `WxH:ctrls` label but parses to the same spec.
+        let spec = FabricSpec::parse("8x8:ctrl=corners:express-row=3@0.5").unwrap();
+        assert_eq!(spec.label(), "8x8:4:ctrl=corners:express-row=3@0.5");
+        assert_eq!(FabricSpec::parse(&spec.label()).unwrap(), spec);
+    }
+
+    #[test]
+    fn malformed_specs_are_rejected() {
+        for s in [
+            "",
+            ":",
+            "ctrl=",
+            "ctrl=weird",
+            "base=x",
+            "base=4:base=5",
+            "ctrl=edges:ctrl=sides",
+            "express-row=@2",
+            "express-row=3",
+            "express-row=3@",
+            "express-row=x@2",
+            "dir=Q@2",
+            "edge=2",
+            "warp=9",
+            "8x8:ctrl=corners:",
+            "65x65:ctrl=corners",
+        ] {
+            assert!(FabricSpec::parse(s).is_err(), "spec '{s}' should fail");
+        }
+    }
+
+    #[test]
+    fn machine_clause_splits_off() {
+        let (m, f) = FabricSpec::parse("16x16:8:ctrl=corners")
+            .unwrap()
+            .split_machine();
+        assert_eq!(m, Some(MachineSpec::Custom { w: 16, h: 16, ctrls: 8 }));
+        assert_eq!(f.machine, None);
+        assert_eq!(f.label(), "ctrl=corners");
+        // A bare machine clause is a valid (no-op) fabric.
+        let (m, f) = FabricSpec::parse("epiphany16").unwrap().split_machine();
+        assert_eq!(m, Some(MachineSpec::Epiphany16));
+        assert!(f.is_noop());
+    }
+
+    #[test]
+    fn table_rules_compose_in_order() {
+        let m = MachineSpec::parse("4x4").unwrap().build();
+        let f = FabricSpec::parse("base=8:express-row=0@0.5:dir=E@0.5")
+            .unwrap()
+            .build_table(&m)
+            .unwrap();
+        // Row 0 east links: 8 * 0.5 * 0.5 = 2; row 0 west: 4; other east: 4;
+        // everything else: 8.
+        assert_eq!(f.service(m.link_index(TileId(0), Dir::East)), 2);
+        assert_eq!(f.service(m.link_index(TileId(0), Dir::West)), 4);
+        assert_eq!(f.service(m.link_index(TileId(4), Dir::East)), 4);
+        assert_eq!(f.service(m.link_index(TileId(4), Dir::North)), 8);
+    }
+
+    #[test]
+    fn table_edge_region_covers_boundary_only() {
+        let m = MachineSpec::parse("4x4").unwrap().build();
+        let f = FabricSpec::parse("base=2:edge@2")
+            .unwrap()
+            .build_table(&m)
+            .unwrap();
+        for t in m.tiles() {
+            let Coord { x, y } = m.coord(t);
+            let expect = if x == 0 || y == 0 || x == 3 || y == 3 { 4 } else { 2 };
+            for dir in Dir::ALL {
+                assert_eq!(f.service(m.link_index(t, dir)), expect, "tile {t:?} {dir:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn table_rejects_out_of_range_regions() {
+        let m = MachineSpec::parse("4x4").unwrap().build();
+        assert!(FabricSpec::parse("express-row=4@0.5")
+            .unwrap()
+            .build_table(&m)
+            .is_err());
+        assert!(FabricSpec::parse("express-col=9@0.5")
+            .unwrap()
+            .build_table(&m)
+            .is_err());
+    }
+
+    #[test]
+    fn default_base_is_the_machine_link_service() {
+        let m = Machine::tilepro64();
+        let f = FabricSpec::parse("dir=E@1").unwrap().build_table(&m).unwrap();
+        assert_eq!(f.uniform_service(), Some(m.params.link_service));
+    }
+}

@@ -15,6 +15,7 @@
 
 use std::sync::Arc;
 
+use super::fabric::{CtrlPlacement, Fabric, FabricError, FabricSpec};
 use super::params::{CacheGeometry, LatencyParams};
 use super::topology::{controllers, Controller, Coord, Dir, TileId};
 
@@ -140,6 +141,21 @@ impl MachineSpec {
     pub fn build_arc(self) -> Arc<Machine> {
         Arc::new(self.build())
     }
+
+    /// Build the machine with an optional [`FabricSpec`] applied — the
+    /// one place the machine+fabric pairing is materialised (the batch
+    /// executor, the homing driver, and the CLI heatmaps all call this).
+    /// Errors when the fabric does not fit this machine.
+    pub fn build_with_fabric(
+        self,
+        fabric: Option<&FabricSpec>,
+    ) -> Result<Arc<Machine>, FabricError> {
+        let m = self.build();
+        Ok(Arc::new(match fabric {
+            Some(f) => m.with_fabric(f)?,
+            None => m,
+        }))
+    }
 }
 
 /// The simulated chip, as a runtime value. All topology questions
@@ -152,6 +168,9 @@ pub struct Machine {
     grid_w: u32,
     grid_h: u32,
     controllers: Vec<Controller>,
+    /// Per-directed-link service times. Uniform at the scalar
+    /// `params.link_service` unless a [`FabricSpec`] was applied.
+    fabric: Fabric,
     pub params: LatencyParams,
     pub geometry: CacheGeometry,
 }
@@ -186,6 +205,7 @@ impl Machine {
             grid_w: 8,
             grid_h: 8,
             controllers: controllers().to_vec(),
+            fabric: Fabric::uniform(4 * 64, LatencyParams::TILEPRO64.link_service),
             params: LatencyParams::TILEPRO64,
             geometry: CacheGeometry::TILEPRO64,
         }
@@ -205,15 +225,22 @@ impl Machine {
                 id: 0,
                 attach: TileId(7), // (x=3, y=1): east edge, middle row
             }],
+            fabric: Fabric::uniform(4 * 16, LatencyParams::EPIPHANY16.link_service),
             params: LatencyParams::EPIPHANY16,
             geometry: CacheGeometry::EPIPHANY16,
         }
     }
 
-    /// A 16×16 forward-looking NUCA grid with 8 edge controllers.
+    /// A 16×16 forward-looking NUCA grid with 8 edge controllers, carrying
+    /// its own scaled [`LatencyParams::NUCA256`] (1.2 GHz clock,
+    /// wall-time-bound DRAM constants re-expressed in cycles) instead of
+    /// silently inheriting the TILEPro numbers.
     pub fn nuca256() -> Machine {
-        Machine::custom_with_spec(16, 16, 8, MachineSpec::Nuca256)
-            .expect("nuca256 preset is valid")
+        let mut m = Machine::custom_with_spec(16, 16, 8, MachineSpec::Nuca256)
+            .expect("nuca256 preset is valid");
+        m.params = LatencyParams::NUCA256;
+        m.fabric = Fabric::uniform(m.num_links(), m.params.link_service);
+        m
     }
 
     /// Arbitrary grid. Controllers alternate between the top and bottom
@@ -230,32 +257,41 @@ impl Machine {
         spec: MachineSpec,
     ) -> Result<Machine, MachineError> {
         Machine::validate(w, h, ctrls)?;
-        // A single-row grid has one edge: all controllers share it (at
-        // distinct columns). Taller grids split top/bottom.
-        let top = if h == 1 { ctrls } else { ctrls.div_ceil(2) };
-        let bottom = ctrls - top;
-        let mut cs = Vec::with_capacity(ctrls as usize);
-        let col = |j: u32, n: u32| ((j + 1) * w / (n + 1)).min(w - 1);
-        for j in 0..top {
-            cs.push(Controller {
-                id: j,
-                attach: TileId(col(j, top)),
-            });
-        }
-        for j in 0..bottom {
-            cs.push(Controller {
-                id: top + j,
-                attach: TileId((h - 1) * w + col(j, bottom)),
-            });
-        }
+        // The default placement: evenly spaced top/bottom edge columns
+        // (a single-row grid has one edge, all controllers on it at
+        // distinct columns) — exactly the pre-fabric construction, now
+        // shared with the placement-strategy ablation.
+        let cs = CtrlPlacement::EdgesEven
+            .controllers(w, h, ctrls)
+            .expect("validated above: EdgesEven capacity == controller_capacity");
         Ok(Machine {
             spec,
             grid_w: w,
             grid_h: h,
             controllers: cs,
+            fabric: Fabric::uniform(
+                (4 * w * h) as usize,
+                LatencyParams::TILEPRO64.link_service,
+            ),
             params: LatencyParams::TILEPRO64,
             geometry: CacheGeometry::TILEPRO64,
         })
+    }
+
+    /// Re-derive this machine with a [`FabricSpec`] applied: the
+    /// controller list is rebuilt when the spec names a placement (named
+    /// strategies keep this machine's controller count, so striping stays
+    /// comparable; an explicit tile list sets its own count), and the
+    /// per-link service table is rebuilt from the spec's base and region
+    /// rules. A leading machine clause in the spec is ignored here —
+    /// split it off with [`FabricSpec::split_machine`] first.
+    pub fn with_fabric(&self, spec: &FabricSpec) -> Result<Machine, FabricError> {
+        let mut m = self.clone();
+        if let Some(p) = &spec.ctrl {
+            m.controllers = p.controllers(m.grid_w, m.grid_h, m.num_controllers())?;
+        }
+        m.fabric = spec.build_table(&m)?;
+        Ok(m)
     }
 
     pub fn spec(&self) -> MachineSpec {
@@ -359,6 +395,27 @@ impl Machine {
     #[inline]
     pub fn num_links(&self) -> usize {
         4 * self.num_tiles() as usize
+    }
+
+    /// The per-link service-time table ([`Fabric`]) of this machine.
+    #[inline]
+    pub fn fabric(&self) -> &Fabric {
+        &self.fabric
+    }
+
+    /// Whether the directed link leaving `from` towards `dir` physically
+    /// exists (a neighbour tile is there). Off-grid boundary slots have
+    /// table entries and servers but never carry traffic; reporting code
+    /// should skip them.
+    #[inline]
+    pub fn has_link(&self, from: TileId, dir: Dir) -> bool {
+        let c = self.coord(from);
+        match dir {
+            Dir::East => c.x + 1 < self.grid_w,
+            Dir::West => c.x > 0,
+            Dir::North => c.y > 0,
+            Dir::South => c.y + 1 < self.grid_h,
+        }
     }
 
     /// Dense index of the directed link leaving `from` towards `dir`.
@@ -483,6 +540,58 @@ mod tests {
         for t in m.tiles() {
             assert_eq!(m.nearest_controller(t).id, 0);
         }
+    }
+
+    #[test]
+    fn presets_carry_uniform_fabric_and_their_own_clock() {
+        for m in [Machine::tilepro64(), Machine::epiphany16(), Machine::nuca256()] {
+            assert_eq!(
+                m.fabric().uniform_service(),
+                Some(m.params.link_service),
+                "{} fabric must default to the scalar link_service",
+                m.name()
+            );
+            assert_eq!(m.fabric().num_links(), m.num_links());
+        }
+        assert_eq!(Machine::epiphany16().params.clock_hz, 600.0e6);
+        assert_eq!(Machine::nuca256().params.ddr, LatencyParams::NUCA256.ddr);
+    }
+
+    #[test]
+    fn with_fabric_rebuilds_controllers_and_table() {
+        use crate::arch::fabric::{CtrlPlacement, FabricSpec};
+        let m = Machine::tilepro64();
+        let spec = FabricSpec::parse("ctrl=corners:base=4:express-row=0@0.5").unwrap();
+        let f = m.with_fabric(&spec).unwrap();
+        // Same count, corner attach points.
+        assert_eq!(f.num_controllers(), 4);
+        let attaches: Vec<u32> = f.controllers().iter().map(|c| c.attach.0).collect();
+        assert_eq!(attaches, vec![0, 63, 7, 56]);
+        // Row 0 east/west at 2, everything else at 4.
+        assert_eq!(f.fabric().service(f.link_index(TileId(0), Dir::East)), 2);
+        assert_eq!(f.fabric().service(f.link_index(TileId(8), Dir::East)), 4);
+        // The base machine is untouched.
+        assert_eq!(m.fabric().uniform_service(), Some(1));
+        assert_eq!(m.nearest_controller(TileId(0)).attach, TileId(2));
+        assert_eq!(f.nearest_controller(TileId(0)).attach, TileId(0));
+        // Incompatible specs are rejected, not applied.
+        assert!(m
+            .with_fabric(&FabricSpec::parse("express-row=8@0.5").unwrap())
+            .is_err());
+        assert!(m
+            .with_fabric(&FabricSpec {
+                ctrl: Some(CtrlPlacement::Corners),
+                ..FabricSpec::default()
+            })
+            .is_ok());
+        // 8 controllers cannot sit on 4 corners.
+        let eight = Machine::custom(16, 16, 8).unwrap();
+        assert!(eight
+            .with_fabric(&FabricSpec {
+                ctrl: Some(CtrlPlacement::Corners),
+                ..FabricSpec::default()
+            })
+            .is_err());
     }
 
     #[test]

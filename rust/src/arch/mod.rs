@@ -1,16 +1,20 @@
 //! Architecture description of the simulated manycore.
 //!
 //! [`Machine`] is the runtime machine description — grid dimensions,
-//! memory-controller placement, latency and cache-geometry parameters —
-//! that every simulation layer is parameterised by. [`topology`] holds the
+//! memory-controller placement, the heterogeneous link [`Fabric`], latency
+//! (including the per-machine clock) and cache-geometry parameters — that
+//! every simulation layer is parameterised by. [`topology`] holds the
 //! tile/coordinate primitives plus the TILEPro64 preset's constants (which
 //! survive only as that preset's values); [`params`] holds the latency and
-//! capacity parameter sets.
+//! capacity parameter sets; [`fabric`] holds the per-link service tables,
+//! controller-placement strategies, and the `FabricSpec` parser.
 
+pub mod fabric;
 pub mod machine;
 pub mod params;
 pub mod topology;
 
+pub use fabric::{CtrlPlacement, Fabric, FabricError, FabricSpec, LinkRegion, LinkRule};
 pub use machine::{Machine, MachineError, MachineSpec};
 pub use params::{CacheGeometry, HitLevel, LatencyParams, CLOCK_HZ, LINE_BYTES, PAGE_BYTES};
 pub use topology::{

@@ -7,7 +7,10 @@
 
 use super::topology::{hops, TileId};
 
-/// Core clock of the evaluation platform (860 MHz per the paper's Fig. 1).
+/// Core clock of the paper's evaluation platform (860 MHz per Fig. 1).
+/// This is the TILEPro64 preset's value and the fallback for stats that
+/// predate per-machine clocks; every machine carries its own clock in
+/// [`LatencyParams::clock_hz`] (the Epiphany-III runs at 600 MHz).
 pub const CLOCK_HZ: f64 = 860.0e6;
 
 /// Cache line size in bytes (TILEPro64 L2 line).
@@ -31,6 +34,9 @@ pub enum HitLevel {
 
 #[derive(Clone, Debug)]
 pub struct LatencyParams {
+    /// Core clock in Hz — the cycles→seconds conversion for this machine
+    /// (threaded into `RunStats::seconds`, the report tables, and JSON).
+    pub clock_hz: f64,
     pub l1_hit: u64,
     pub l2_hit: u64,
     /// Fixed NoC packetisation overhead per remote round trip.
@@ -67,6 +73,7 @@ pub struct LatencyParams {
 
 impl LatencyParams {
     pub const TILEPRO64: LatencyParams = LatencyParams {
+        clock_hz: CLOCK_HZ,
         l1_hit: 2,
         l2_hit: 8,
         noc_header: 6,
@@ -102,6 +109,10 @@ impl LatencyParams {
     ///   of controller occupancy per 64 B line and a long DRAM latency;
     /// - the eMesh datapath is 8 B wide, so a line is 8 flits.
     pub const EPIPHANY16: LatencyParams = LatencyParams {
+        // The Epiphany-III cores clock at 600 MHz (arXiv:1704.08343),
+        // not the TILEPro's 860: a cycle-identical run is ~1.43x slower
+        // in wall seconds.
+        clock_hz: 600.0e6,
         l1_hit: 1,
         l2_hit: 4,
         noc_header: 3,
@@ -114,6 +125,42 @@ impl LatencyParams {
         migration_cost: 30_000,
         compute_per_elem: 1,
         line_flits: 8,
+    };
+
+    /// Forward-looking 16×16 NUCA calibration for the nuca256 preset,
+    /// which previously inherited the TILEPro numbers verbatim.
+    /// Derivation (scaled from `TILEPRO64`, constants that are fixed in
+    /// *time* re-expressed in cycles at the faster clock):
+    ///
+    /// - **clock**: a 256-core die implies a newer process node; we take
+    ///   1.2 GHz (~1.4x the TILEPro's 860 MHz) as a conservative target.
+    /// - **ddr**: DRAM latency is wall-time-bound. 88 cy @ 860 MHz
+    ///   ≈ 102 ns ≈ 123 cy @ 1.2 GHz.
+    /// - **ctrl_service**: per-line controller occupancy is
+    ///   bandwidth-bound. 4 cy @ 860 MHz ≈ 4.7 ns ≈ 6 cy @ 1.2 GHz
+    ///   (same DDR parts, more cycles each).
+    /// - **noc_header**: the deeper 16×16 mesh needs an extra flit of
+    ///   route header and deeper VC arbitration: 6 → 8 cycles.
+    /// - **migration_cost**: OS work is wall-time-bound like DRAM:
+    ///   30k cy @ 860 MHz ≈ 35 µs ≈ 42k cy @ 1.2 GHz.
+    /// - on-chip SRAM and mesh pipelines scale with the clock, so
+    ///   `l1_hit`/`l2_hit`/`noc_hop`/`link_service`/`home_service`/
+    ///   `store_post` keep their cycle counts, and the 16 B mesh
+    ///   datapath keeps `line_flits` at 4.
+    pub const NUCA256: LatencyParams = LatencyParams {
+        clock_hz: 1.2e9,
+        l1_hit: 2,
+        l2_hit: 8,
+        noc_header: 8,
+        noc_hop: 1,
+        ddr: 123,
+        store_post: 6,
+        home_service: 2,
+        ctrl_service: 6,
+        link_service: 1,
+        migration_cost: 42_000,
+        compute_per_elem: 1,
+        line_flits: 4,
     };
 
     /// Uncontended cycles for one cache-line access satisfied at `level`,
@@ -135,10 +182,10 @@ impl LatencyParams {
         }
     }
 
-    /// Convert simulated cycles to seconds at the platform clock.
+    /// Convert simulated cycles to seconds at *this machine's* clock.
     #[inline]
     pub fn cycles_to_seconds(&self, cycles: u64) -> f64 {
-        cycles as f64 / CLOCK_HZ
+        cycles as f64 / self.clock_hz
     }
 }
 
@@ -243,6 +290,41 @@ mod tests {
         // 8 B eMesh datapath: twice the flits per line of the 16 B TILEPro.
         assert_eq!(e.line_flits, 2 * LatencyParams::TILEPRO64.line_flits);
         assert_eq!(CacheGeometry::EPIPHANY16.l2_sets(), 128);
+    }
+
+    #[test]
+    fn per_machine_clocks() {
+        // tilepro64 keeps the 860 MHz global constant (pinned JSON);
+        // epiphany16 reports wall seconds at its real 600 MHz clock.
+        assert_eq!(LatencyParams::TILEPRO64.clock_hz, CLOCK_HZ);
+        let s = LatencyParams::EPIPHANY16.cycles_to_seconds(600_000_000);
+        assert!((s - 1.0).abs() < 1e-12, "600M epiphany cycles must be 1 s");
+        // The same cycle count is worth more wall time on the slower chip.
+        let cycles = 1_000_000;
+        assert!(
+            LatencyParams::EPIPHANY16.cycles_to_seconds(cycles)
+                > LatencyParams::TILEPRO64.cycles_to_seconds(cycles)
+        );
+    }
+
+    #[test]
+    fn nuca256_scales_wall_time_bound_constants() {
+        let n = LatencyParams::NUCA256;
+        let t = LatencyParams::TILEPRO64;
+        assert!(n.clock_hz > t.clock_hz);
+        // Wall-time-bound terms must take *more* cycles at the faster
+        // clock (same nanoseconds): DRAM latency, controller occupancy,
+        // migration cost.
+        assert!(n.ddr > t.ddr && n.ctrl_service > t.ctrl_service);
+        assert!(n.migration_cost > t.migration_cost);
+        // DRAM wall latency is preserved within a cycle of rounding.
+        let wall = |p: &LatencyParams, cy: u64| cy as f64 / p.clock_hz;
+        assert!((wall(&n, n.ddr) - wall(&t, t.ddr)).abs() < 1.5 / t.clock_hz);
+        // Clock-scaled pipelines keep their cycle counts.
+        assert_eq!((n.l1_hit, n.l2_hit, n.noc_hop), (t.l1_hit, t.l2_hit, t.noc_hop));
+        assert_eq!(n.line_flits, t.line_flits);
+        // Deeper mesh: more header overhead.
+        assert!(n.noc_header > t.noc_header);
     }
 
     #[test]

@@ -14,7 +14,7 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-use crate::arch::MachineSpec;
+use crate::arch::{FabricSpec, MachineSpec};
 use crate::coordinator::cases::case;
 use crate::harness::SweepTable;
 use crate::sim::{Engine, RunStats};
@@ -69,6 +69,12 @@ pub struct RunSpec {
     /// Bill coherence traffic (invalidation fan-out + reply paths) on the
     /// links. Follows `link_contention` unless `--no-coherence-links`.
     pub coherence_links: bool,
+    /// Heterogeneous fabric applied on top of `machine`: controller
+    /// placement and/or per-link service rules (`--fabric`, the placement
+    /// and fabric sweeps). `None` — the baseline — leaves the machine's
+    /// uniform fabric and `EdgesEven` controllers untouched, keeping the
+    /// pinned figure JSON byte-identical.
+    pub fabric: Option<FabricSpec>,
     pub seed: u64,
 }
 
@@ -88,28 +94,46 @@ impl RunSpec {
             machine: MachineSpec::TilePro64,
             link_contention: false,
             coherence_links: false,
+            fabric: None,
             seed,
         }
     }
 
     /// Whether this run deviates from the paper-baseline machine model
-    /// (non-tilepro64 grid and/or link contention on).
+    /// (non-tilepro64 grid, link contention on, and/or a fabric applied).
     fn non_baseline_machine(&self) -> bool {
-        self.machine != MachineSpec::TilePro64 || self.link_contention
+        self.machine != MachineSpec::TilePro64 || self.link_contention || self.fabric.is_some()
     }
 
-    /// CLI-time guard for the engine's thread-capacity assert: a run must
-    /// not ask for more than 4 threads per tile of its machine. Returning
-    /// an `Err` here beats a panic inside a pool worker.
+    /// CLI-time guard: a run must not ask for more than 4 threads per tile
+    /// of its machine (the engine's assert), and any fabric must actually
+    /// fit the machine (placement capacity, region bounds). Returning an
+    /// `Err` here beats a panic inside a pool worker.
     pub fn check_thread_capacity(&self) -> Result<(), String> {
-        check_thread_capacity(self.threads, self.machine)
+        check_thread_capacity(self.threads, self.machine)?;
+        self.machine
+            .build_with_fabric(self.fabric.as_ref())
+            .map_err(|e| e.to_string())?;
+        Ok(())
+    }
+
+    /// The machine this run simulates, fabric applied. Callers must have
+    /// validated the spec (see [`check_thread_capacity`](Self::check_thread_capacity)).
+    fn build_machine(&self) -> std::sync::Arc<crate::arch::Machine> {
+        self.machine
+            .build_with_fabric(self.fabric.as_ref())
+            .expect("fabric validated at the CLI")
     }
 
     pub fn label(&self) -> String {
         let machine = if self.non_baseline_machine() {
             format!(
-                " on {}{}{}",
+                " on {}{}{}{}",
                 self.machine.label(),
+                match &self.fabric {
+                    Some(f) => format!(" fab[{}]", f.label()),
+                    None => String::new(),
+                },
                 if self.link_contention { "" } else { " nolinks" },
                 if self.link_contention && !self.coherence_links {
                     " nocoh"
@@ -136,7 +160,7 @@ impl RunSpec {
     /// Build and replay this run on a fresh engine.
     pub fn execute(&self) -> RunStats {
         let c = case(self.case_id);
-        let machine = self.machine.build_arc();
+        let machine = self.build_machine();
         let mut cfg = c.engine_config_on(machine.clone(), self.striping, self.link_contention);
         cfg.contention.coherence = self.coherence_links;
         if !self.caches {
@@ -207,6 +231,11 @@ impl RunSpec {
             fields.push(("link_contention", Json::Bool(self.link_contention)));
             if self.coherence_links != self.link_contention {
                 fields.push(("coherence_links", Json::Bool(self.coherence_links)));
+            }
+            // The fabric clause only appears when one was applied, so
+            // pre-fabric machine-sweep records keep their bytes too.
+            if let Some(f) = &self.fabric {
+                fields.push(("fabric", Json::str(f.label())));
             }
         }
         Json::obj(fields)
@@ -347,6 +376,7 @@ impl SweepSpec {
                                 machine: MachineSpec::TilePro64,
                                 link_contention: false,
                                 coherence_links: false,
+                                fabric: None,
                                 seed: s,
                             });
                         }
@@ -390,6 +420,19 @@ impl SweepSpec {
         }
         if machine != MachineSpec::TilePro64 || link_contention {
             self.title = format!("{} [machine {}]", self.title, machine.label());
+        }
+        self
+    }
+
+    /// Apply a fabric (placement + link rules) to every run of the sweep,
+    /// baseline included — how `--fabric` re-aims a figure spec. `None`
+    /// leaves the sweep untouched.
+    pub fn with_fabric(mut self, fabric: Option<FabricSpec>) -> SweepSpec {
+        if let Some(f) = fabric {
+            for r in self.runs.iter_mut().chain(self.baseline.iter_mut()) {
+                r.fabric = Some(f.clone());
+            }
+            self.title = format!("{} [fabric {}]", self.title, f.label());
         }
         self
     }
@@ -706,6 +749,54 @@ mod tests {
             "false"
         );
         assert!(spec.label().contains("nocoh"));
+    }
+
+    #[test]
+    fn fabric_json_and_label_gated_like_machine_fields() {
+        let mut spec = RunSpec::mergesort(8, 1 << 12, 4, 42);
+        assert!(spec.to_json().get("fabric").is_none());
+        spec.fabric = Some(FabricSpec::parse("ctrl=corners").unwrap());
+        // A fabric alone makes the run non-baseline, even on tilepro64.
+        let j = spec.to_json();
+        assert_eq!(j.get("machine").unwrap().encode(), "\"tilepro64\"");
+        assert_eq!(j.get("fabric").unwrap().encode(), "\"ctrl=corners\"");
+        assert!(spec.label().contains("fab[ctrl=corners]"));
+        assert!(spec.check_thread_capacity().is_ok());
+        // An incompatible fabric is caught at CLI-validation time.
+        spec.fabric = Some(FabricSpec::parse("express-row=9@0.5").unwrap());
+        assert!(
+            spec.check_thread_capacity().is_err(),
+            "row 9 does not fit an 8x8 grid"
+        );
+    }
+
+    #[test]
+    fn placement_fabric_changes_the_simulation() {
+        // Corner controllers move every DRAM route, so the same sort must
+        // replay to a different makespan than the edge-placed baseline.
+        let mut base = RunSpec::mergesort(3, 1 << 13, 8, 42);
+        base.link_contention = true;
+        base.coherence_links = true;
+        let mut corners = base.clone();
+        corners.fabric = Some(FabricSpec::parse("ctrl=corners").unwrap());
+        let (a, b) = (base.execute(), corners.execute());
+        assert_ne!(
+            a.makespan_cycles, b.makespan_cycles,
+            "controller placement must change the simulation"
+        );
+        assert_eq!(a.ddr_accesses, b.ddr_accesses, "same traffic, different routes");
+    }
+
+    #[test]
+    fn with_fabric_retargets_all_runs_and_baseline() {
+        let f = FabricSpec::parse("base=4:express-row=0@0.5").unwrap();
+        let spec = crate::coordinator::experiment::table1_spec(1 << 12, 4, 7)
+            .on_machine(MachineSpec::Nuca256, true, true)
+            .with_fabric(Some(f.clone()));
+        assert!(spec.runs.iter().all(|r| r.fabric.as_ref() == Some(&f)));
+        assert_eq!(spec.baseline.as_ref().unwrap().fabric.as_ref(), Some(&f));
+        assert!(spec.title.contains("[fabric base=4:express-row=0@0.5]"));
+        assert!(spec.check_thread_capacity().is_ok());
     }
 
     #[test]

@@ -9,7 +9,7 @@
 //!
 //! [`batch`]: crate::coordinator::batch
 
-use crate::arch::MachineSpec;
+use crate::arch::{CtrlPlacement, FabricSpec, MachineSpec};
 use crate::coordinator::batch::{BatchRunner, Metric, RunSpec, SweepSpec, Workload};
 use crate::coordinator::cases::{table1, CaseSpec};
 use crate::harness::SweepTable;
@@ -73,6 +73,7 @@ pub fn fig1_spec(elems: u64, threads: usize, reps_sweep: &[u32], seed: u64) -> S
         machine: MachineSpec::TilePro64,
         link_contention: false,
         coherence_links: false,
+        fabric: None,
         seed,
     };
     let mut runs = Vec::new();
@@ -437,15 +438,217 @@ pub fn falseshare_report(
     out
 }
 
+// ---------------------------------------------------------------------------
+// Controller placement — the Fig. 4-style crossover per placement strategy
+// ---------------------------------------------------------------------------
+
+/// Default placement ladder for the `placement` sweep.
+pub fn placement_ladder() -> Vec<CtrlPlacement> {
+    vec![
+        CtrlPlacement::EdgesEven,
+        CtrlPlacement::Sides,
+        CtrlPlacement::Corners,
+        CtrlPlacement::Interior,
+    ]
+}
+
+/// Default machines for the placement sweep: the paper's 8×8 and a 16×16
+/// with 4 controllers (4 ≤ every named placement's capacity, corners
+/// included, so the strategies stay comparable).
+pub fn placement_machines() -> Vec<MachineSpec> {
+    vec![
+        MachineSpec::TilePro64,
+        MachineSpec::Custom { w: 16, h: 16, ctrls: 4 },
+    ]
+}
+
+/// The controller-placement ablation the ROADMAP names: Fig. 4's striping
+/// × programming-style grid (case 3 hash / case 8 localised, striped vs
+/// non-striped) re-run per placement strategy per machine, link/coherence
+/// billing per the CLI (on unless `--no-link-contention`). One row per
+/// machine × placement; where the striped/non-striped crossover sits per
+/// placement is what [`placement_report`] extracts.
+pub fn placement_spec(
+    elems: u64,
+    threads: usize,
+    machines: &[MachineSpec],
+    placements: &[CtrlPlacement],
+    seed: u64,
+    link_contention: bool,
+    coherence_links: bool,
+) -> SweepSpec {
+    let mut runs = Vec::new();
+    let mut row_labels = Vec::new();
+    for &m in machines {
+        for p in placements {
+            row_labels.push(format!("{}/{}", m.label(), p.label()));
+            for (case_id, striping) in [(3u8, true), (3, false), (8, true), (8, false)] {
+                let mut r = RunSpec::mergesort(case_id, elems, threads, seed);
+                r.striping = striping;
+                r.machine = m;
+                r.link_contention = link_contention;
+                r.coherence_links = link_contention && coherence_links;
+                r.fabric = Some(FabricSpec {
+                    ctrl: Some(p.clone()),
+                    ..FabricSpec::default()
+                });
+                runs.push(r);
+            }
+        }
+    }
+    SweepSpec {
+        title: format!(
+            "Controller placement: merge sort of {elems} ints, {threads} threads, \
+             Fig.4 striping grid per placement (exec time, s)"
+        ),
+        x_label: "machine/placement".into(),
+        series: vec![
+            "case3 striped".into(),
+            "case3 non-striped".into(),
+            "case8 striped".into(),
+            "case8 non-striped".into(),
+        ],
+        row_labels,
+        runs,
+        baseline: None,
+        metric: Metric::Seconds,
+    }
+}
+
+/// The Fig. 4-style crossover table for a placement sweep: per row, the
+/// non-striped/striped makespan ratio of the non-localised (case 3) and
+/// localised (case 8) styles. A ratio above 1 means striping wins; where
+/// it crosses 1 between the two styles is the paper's crossover, now
+/// measurable per controller placement.
+pub fn placement_report(
+    spec: &SweepSpec,
+    store: &crate::coordinator::batch::ResultStore,
+) -> String {
+    let mut out =
+        String::from("Fig.4-style striping crossover (non-striped / striped makespan):\n");
+    for (row, label) in spec.row_labels.iter().enumerate() {
+        let cells = &store.results[row * 4..row * 4 + 4];
+        let ratio = |ns: &RunStats, s: &RunStats| {
+            ns.makespan_cycles as f64 / s.makespan_cycles as f64
+        };
+        out.push_str(&format!(
+            "  {label:>24}: case3 {:.3}, case8 {:.3}\n",
+            ratio(&cells[1], &cells[0]),
+            ratio(&cells[3], &cells[2]),
+        ));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Fabric — express-channel strength sweep on the write ping-pong
+// ---------------------------------------------------------------------------
+
+/// Default express-channel strengths for the `fabric` sweep: 1 (uniform),
+/// then progressively wider express channels. Strings because they embed
+/// in the `FabricSpec` factor syntax verbatim.
+pub fn fabric_strengths() -> Vec<String> {
+    vec!["1".into(), "0.5".into(), "0.25".into()]
+}
+
+/// Default machines for the fabric sweep (two grid sizes).
+pub fn fabric_machines() -> Vec<MachineSpec> {
+    vec![MachineSpec::TilePro64, MachineSpec::Nuca256]
+}
+
+/// The express-channel fabric at one strength: a base service of 4 cycles
+/// per link so fractional strengths quantise (4 → 2 → 1), with row 0 and
+/// column 0 as the express channels — the edge row/column every XY route
+/// into the corner-homed hot spot funnels through, so widening them
+/// directly relieves the ping-pong's coherence traffic.
+pub fn express_fabric(strength: &str) -> Result<FabricSpec, crate::arch::FabricError> {
+    // The strength is spliced into the spec string, so insist it is a
+    // bare decimal factor — `0.5:dir=E@8` must not inject extra clauses.
+    crate::arch::fabric::Factor::parse(strength)?;
+    FabricSpec::parse(&format!(
+        "base=4:express-row=0@{strength}:express-col=0@{strength}"
+    ))
+}
+
+/// The express-channel sweep: the write ping-pong at every machine ×
+/// strength, non-localised (case 4) against localised (case 8), link and
+/// coherence billing per the CLI (on unless ablated — with links off the
+/// fabric is inert and the sweep measures nothing). Widening the express
+/// channels must strictly reduce the non-localised variant's
+/// `link_queue_cycles` (pinned by the CI smoke and
+/// `rust/tests/prop_fabric.rs`).
+#[allow(clippy::too_many_arguments)]
+pub fn fabric_sweep_spec(
+    elems: u64,
+    threads: usize,
+    passes: u32,
+    machines: &[MachineSpec],
+    strengths: &[String],
+    seed: u64,
+    link_contention: bool,
+    coherence_links: bool,
+) -> Result<SweepSpec, crate::arch::FabricError> {
+    let mut runs = Vec::new();
+    let mut row_labels = Vec::new();
+    for &m in machines {
+        for s in strengths {
+            let fabric = express_fabric(s)?;
+            row_labels.push(format!("{}@x{s}", m.label()));
+            for case_id in [4u8, 8] {
+                let mut r = RunSpec::mergesort(case_id, elems, threads, seed);
+                r.workload = Workload::PingPong { passes };
+                r.machine = m;
+                r.link_contention = link_contention;
+                r.coherence_links = link_contention && coherence_links;
+                r.fabric = Some(fabric.clone());
+                runs.push(r);
+            }
+        }
+    }
+    Ok(SweepSpec {
+        title: format!(
+            "Express-channel fabric: write ping-pong of {elems} ints, {threads} threads x \
+             {passes} passes, row-0/col-0 channels at each strength (exec time, s)"
+        ),
+        x_label: "machine@strength".into(),
+        series: vec!["case4 pingpong".into(), "case8 localised".into()],
+        row_labels,
+        runs,
+        baseline: None,
+        metric: Metric::Seconds,
+    })
+}
+
+/// Per-machine link-queueing trajectory of a fabric sweep: the
+/// non-localised column's `link_queue_cycles` at each express strength.
+pub fn fabric_report(
+    spec: &SweepSpec,
+    store: &crate::coordinator::batch::ResultStore,
+) -> String {
+    let mut out = String::from(
+        "non-localised link_queue_cycles per express strength (rows in sweep order):\n",
+    );
+    for (row, label) in spec.row_labels.iter().enumerate() {
+        let s = &store.results[row * 2];
+        out.push_str(&format!(
+            "  {label:>16}: link_queue {} (+ inval {})\n",
+            s.link_queue_cycles, s.invalidation_link_cycles
+        ));
+    }
+    out
+}
+
 /// §2's three homing classes head-to-head on the repeated-scan kernel:
 /// local homing (first touch by the worker), remote homing (one fixed
 /// other tile — the machine's far corner), and hash-for-home — plus the
-/// localised fix. Runs on any machine; `link_contention` per the CLI.
+/// localised fix. Runs on any machine (with an optional fabric applied);
+/// `link_contention` per the CLI.
 pub fn homing_classes(
     elems: u64,
     threads: usize,
     passes: u32,
     machine: MachineSpec,
+    fabric: Option<&FabricSpec>,
     link_contention: bool,
 ) -> SweepTable {
     use crate::coordinator::localise::{build_program, LocaliseConfig, ELEM_BYTES};
@@ -463,7 +666,9 @@ pub fn homing_classes(
         }
     }
 
-    let m = machine.build_arc();
+    let m = machine
+        .build_with_fabric(fabric)
+        .expect("fabric validated at the CLI");
     let far_tile = crate::arch::TileId(m.num_tiles() - 1);
     let run = |homing: Homing, localised: bool| {
         let mut cfg = crate::sim::EngineConfig::for_machine(
@@ -597,7 +802,7 @@ mod tests {
 
     #[test]
     fn homing_classes_order() {
-        let t = homing_classes(1 << 16, 16, 8, MachineSpec::TilePro64, false);
+        let t = homing_classes(1 << 16, 16, 8, MachineSpec::TilePro64, None, false);
         let secs: Vec<f64> = t.rows.iter().map(|(_, v)| v[0]).collect();
         // localised fastest; remote single-tile the worst of the reads.
         let (_local, remote, hash, localised) = (secs[0], secs[1], secs[2], secs[3]);
@@ -609,7 +814,7 @@ mod tests {
     fn homing_classes_runs_on_small_machine() {
         // The remote row must pick an on-grid far tile (15 on epiphany16),
         // not the tilepro64's tile 63.
-        let t = homing_classes(1 << 14, 8, 2, MachineSpec::Epiphany16, true);
+        let t = homing_classes(1 << 14, 8, 2, MachineSpec::Epiphany16, None, true);
         assert_eq!(t.rows.len(), 4);
         assert_eq!(t.rows[1].0, "remote (tile 15)");
         assert!(t.rows.iter().all(|(_, v)| v[0] > 0.0));
@@ -694,6 +899,93 @@ mod tests {
             big > small,
             "16x16 coherence traffic {big} must exceed 8x8's {small}"
         );
+    }
+
+    #[test]
+    fn placement_spec_shape_and_report() {
+        let spec = placement_spec(
+            1 << 13,
+            8,
+            &placement_machines(),
+            &placement_ladder(),
+            DEFAULT_SEED,
+            true,
+            true,
+        );
+        spec.validate();
+        assert_eq!(spec.row_labels.len(), 2 * 4);
+        assert_eq!(spec.row_labels[0], "tilepro64/edges");
+        assert_eq!(spec.row_labels[6], "16x16:4/corners");
+        assert_eq!(spec.runs.len(), 8 * 4);
+        assert!(spec.check_thread_capacity().is_ok());
+        assert!(spec
+            .runs
+            .iter()
+            .all(|r| r.link_contention && r.fabric.is_some()));
+        let store = crate::coordinator::batch::BatchRunner::auto().run(&spec);
+        let report = placement_report(&spec, &store);
+        assert!(report.contains("tilepro64/corners"), "{report}");
+        assert!(report.contains("case3"), "{report}");
+    }
+
+    #[test]
+    fn placement_moves_the_makespan_on_16x16() {
+        // The CI smoke's in-tree twin: corners vs edges on a 16×16 grid
+        // must simulate differently (every DRAM route changes).
+        let m = [MachineSpec::Custom { w: 16, h: 16, ctrls: 4 }];
+        let edges =
+            placement_spec(1 << 14, 16, &m, &[CtrlPlacement::EdgesEven], DEFAULT_SEED, true, true);
+        let corners =
+            placement_spec(1 << 14, 16, &m, &[CtrlPlacement::Corners], DEFAULT_SEED, true, true);
+        let runner = crate::coordinator::batch::BatchRunner::auto();
+        let (a, b) = (runner.run(&edges), runner.run(&corners));
+        let makespans =
+            |s: &crate::coordinator::batch::ResultStore| -> Vec<u64> {
+                s.results.iter().map(|r| r.makespan_cycles).collect()
+            };
+        assert_ne!(makespans(&a), makespans(&b), "placement must matter");
+    }
+
+    #[test]
+    fn fabric_sweep_shape_and_express_reduces_link_queueing() {
+        let strengths = fabric_strengths();
+        let spec = fabric_sweep_spec(
+            1 << 13,
+            16,
+            4,
+            &[MachineSpec::Nuca256],
+            &strengths,
+            DEFAULT_SEED,
+            true,
+            true,
+        )
+        .unwrap();
+        spec.validate();
+        assert_eq!(spec.row_labels, vec!["nuca256@x1", "nuca256@x0.5", "nuca256@x0.25"]);
+        let store = crate::coordinator::batch::BatchRunner::auto().run(&spec);
+        // Non-localised column (even indices): widening the express
+        // channels must strictly reduce forward link queueing.
+        let q: Vec<u64> = (0..3)
+            .map(|row| store.results[row * 2].link_queue_cycles)
+            .collect();
+        assert!(q[0] > 0, "uniform ping-pong must queue on links");
+        assert!(
+            q[0] > q[1] && q[1] > q[2],
+            "express channels must strictly reduce link queueing: {q:?}"
+        );
+        let report = fabric_report(&spec, &store);
+        assert!(report.contains("nuca256@x0.25"), "{report}");
+    }
+
+    #[test]
+    fn express_fabric_rejects_clause_injection() {
+        // Strengths are spliced into the spec string: only bare decimal
+        // factors may pass, never extra clauses.
+        assert!(express_fabric("0.5").is_ok());
+        assert!(express_fabric("2").is_ok());
+        for s in ["0.5:dir=E@8", "1@2", "x", "", "0.5:ctrl=corners"] {
+            assert!(express_fabric(s).is_err(), "strength '{s}' should fail");
+        }
     }
 
     #[test]

@@ -4,10 +4,13 @@
 //! Programming for Manycore Processors* (CS.DC 2014): the *localisation*
 //! programming technique for NUCA manycores, validated on a from-scratch
 //! cycle-approximate simulator parameterised by a runtime machine
-//! description ([`arch::Machine`]: any W×H mesh with edge memory
-//! controllers and per-link contention; the Tilera TILEPro64 — 8×8 mesh,
-//! DDC distributed home caches, 4 striped controllers — is the default
-//! preset), plus a Rust+JAX+Pallas compute runtime whose AOT-compiled
+//! description ([`arch::Machine`]: any W×H mesh with a controller
+//! placement strategy ([`arch::CtrlPlacement`]), a heterogeneous per-link
+//! fabric ([`arch::Fabric`] — express rows/columns, per-direction
+//! asymmetry), a per-machine clock, and per-link contention; the Tilera
+//! TILEPro64 — 8×8 mesh, DDC distributed home caches, 4 striped
+//! controllers — is the default preset), plus a Rust+JAX+Pallas compute
+//! runtime whose AOT-compiled
 //! sorting kernels mirror the paper's merge-sort workload on the request
 //! path.
 //!

@@ -9,7 +9,7 @@
 //! mergesort  [flags]           one merge-sort run (Alg. 3/4)
 //! sort       [flags]           REAL sort via the AOT'd Pallas kernels
 //! experiment <fig1|fig2|fig3|fig4|table1|all> [flags]
-//! batch      <fig…|all|grid|gridscale|falseshare>
+//! batch      <fig…|all|grid|gridscale|falseshare|placement|fabric>
 //!                              parallel sweeps over the worker pool
 //! ```
 //!
@@ -17,7 +17,7 @@
 //! `--reps N`, `--case 1..8`, `--seed S`, `--jobs N`, `--no-striping`,
 //! `--json`, `--out DIR`.
 
-use tilesim::arch::{Machine, MachineSpec};
+use tilesim::arch::{CtrlPlacement, FabricSpec, MachineSpec};
 use tilesim::coordinator::batch::{derive_seeds, BatchRunner, RunSpec, SweepSpec, Workload};
 use tilesim::coordinator::{case, experiment, table1};
 use tilesim::util::cli::{parse_usize, Args};
@@ -52,6 +52,9 @@ const VALUE_FLAGS: &[&str] = &[
     "seeds",
     "machine",
     "machines",
+    "fabric",
+    "placements",
+    "strengths",
 ];
 const BOOL_FLAGS: &[&str] = &[
     "json",
@@ -83,8 +86,8 @@ fn run(argv: &[String]) -> Result<(), Box<dyn std::error::Error>> {
         return Ok(());
     }
     let seed = args.u64("seed", experiment::DEFAULT_SEED)?;
-    let machine_spec = machine_arg(&args)?;
-    let links = link_contention_arg(&args, machine_spec);
+    let (machine_spec, fabric) = machine_and_fabric_args(&args)?;
+    let links = link_contention_arg(&args, machine_spec, fabric.is_some());
     let coherence = coherence_links_arg(&args, links);
     match args.positional()[0].as_str() {
         "info" => info(),
@@ -102,10 +105,17 @@ fn run(argv: &[String]) -> Result<(), Box<dyn std::error::Error>> {
                 machine: machine_spec,
                 link_contention: links,
                 coherence_links: coherence,
+                fabric: fabric.clone(),
                 seed,
             };
             spec.check_thread_capacity()?;
-            emit_stats(&args, &run_label(&c.label(), &spec), &spec.execute(), machine_spec);
+            emit_stats(
+                &args,
+                &run_label(&c.label(), &spec),
+                &spec.execute(),
+                machine_spec,
+                fabric.as_ref(),
+            );
             Ok(())
         }
         "mergesort" => {
@@ -127,10 +137,17 @@ fn run(argv: &[String]) -> Result<(), Box<dyn std::error::Error>> {
                 machine: machine_spec,
                 link_contention: links,
                 coherence_links: coherence,
+                fabric: fabric.clone(),
                 seed,
             };
             spec.check_thread_capacity()?;
-            emit_stats(&args, &run_label(&c.label(), &spec), &spec.execute(), machine_spec);
+            emit_stats(
+                &args,
+                &run_label(&c.label(), &spec),
+                &spec.execute(),
+                machine_spec,
+                fabric.as_ref(),
+            );
             Ok(())
         }
         "radix" => {
@@ -147,21 +164,25 @@ fn run(argv: &[String]) -> Result<(), Box<dyn std::error::Error>> {
                 machine: machine_spec,
                 link_contention: links,
                 coherence_links: coherence,
+                fabric: fabric.clone(),
                 seed,
             };
             spec.check_thread_capacity()?;
             let label = run_label(&format!("radix sort — {}", c.label()), &spec);
-            emit_stats(&args, &label, &spec.execute(), machine_spec);
+            emit_stats(&args, &label, &spec.execute(), machine_spec, fabric.as_ref());
             Ok(())
         }
         "homing" => {
             let threads = args.usize("threads", 63)?;
             tilesim::coordinator::batch::check_thread_capacity(threads, machine_spec)?;
+            // Homing has no RunSpec, so the fabric fit-check runs here.
+            machine_spec.build_with_fabric(fabric.as_ref())?;
             let t = experiment::homing_classes(
                 args.usize("size", 1_000_000)? as u64,
                 threads,
                 args.usize("reps", 16)? as u32,
                 machine_spec,
+                fabric.as_ref(),
                 links,
             );
             println!("{}", t.render());
@@ -176,7 +197,13 @@ fn run(argv: &[String]) -> Result<(), Box<dyn std::error::Error>> {
                 .unwrap_or("all");
             let specs: Vec<(String, SweepSpec)> = figure_specs(which, &args, seed)?
                 .into_iter()
-                .map(|(n, s)| (n, s.on_machine(machine_spec, links, coherence)))
+                .map(|(n, s)| {
+                    (
+                        n,
+                        s.on_machine(machine_spec, links, coherence)
+                            .with_fabric(fabric.clone()),
+                    )
+                })
                 .collect();
             for (_, spec) in &specs {
                 spec.check_thread_capacity()?;
@@ -192,7 +219,7 @@ fn run(argv: &[String]) -> Result<(), Box<dyn std::error::Error>> {
             }
             Ok(())
         }
-        "batch" => batch_cmd(&args, seed, machine_spec, links, coherence),
+        "batch" => batch_cmd(&args, seed, machine_spec, links, coherence, fabric),
         other => {
             print_usage();
             Err(format!("unknown command '{other}'").into())
@@ -200,25 +227,54 @@ fn run(argv: &[String]) -> Result<(), Box<dyn std::error::Error>> {
     }
 }
 
-/// Parse `--machine` (default: the paper's tilepro64).
-fn machine_arg(args: &Args) -> Result<MachineSpec, Box<dyn std::error::Error>> {
-    match args.get("machine") {
-        None => Ok(MachineSpec::TilePro64),
-        Some(s) => Ok(MachineSpec::parse(s)?),
-    }
+/// Parse `--machine` (default: the paper's tilepro64) together with
+/// `--fabric`. A `--fabric` spec may lead with its own machine clause
+/// (`--fabric 8x8:ctrl=corners:express-row=3@0.5`); naming the machine in
+/// both places is a conflict. Only the *syntax* is checked here — whether
+/// the fabric fits the machine is validated by each subcommand's
+/// `check_thread_capacity` path, so ladder sweeps get to report their
+/// flag-conflict error instead of a fit error against a machine they
+/// never run.
+fn machine_and_fabric_args(
+    args: &Args,
+) -> Result<(MachineSpec, Option<FabricSpec>), Box<dyn std::error::Error>> {
+    let machine_flag = match args.get("machine") {
+        None => None,
+        Some(s) => Some(MachineSpec::parse(s)?),
+    };
+    let (fabric_machine, fabric) = match args.get("fabric") {
+        None => (None, None),
+        Some(s) => {
+            let (m, f) = FabricSpec::parse(s)?.split_machine();
+            (m, if f.is_noop() { None } else { Some(f) })
+        }
+    };
+    let machine = match (machine_flag, fabric_machine) {
+        (Some(_), Some(_)) => {
+            return Err(
+                "--machine conflicts with the machine clause in --fabric: name the machine in \
+                 one place"
+                    .into(),
+            )
+        }
+        (Some(m), None) | (None, Some(m)) => m,
+        (None, None) => MachineSpec::TilePro64,
+    };
+    Ok((machine, fabric))
 }
 
 /// Resolve link-contention modelling: on by default for every machine
 /// except the paper-baseline tilepro64 (whose published figure record
-/// predates the link model); `--link-contention` / `--no-link-contention`
-/// override either way.
-fn link_contention_arg(args: &Args, machine: MachineSpec) -> bool {
+/// predates the link model) — and whenever a fabric is applied, since the
+/// fabric only exists on the link servers; `--link-contention` /
+/// `--no-link-contention` override either way.
+fn link_contention_arg(args: &Args, machine: MachineSpec, has_fabric: bool) -> bool {
     if args.flag("no-link-contention") {
         false
     } else if args.flag("link-contention") {
         true
     } else {
-        machine != MachineSpec::TilePro64
+        machine != MachineSpec::TilePro64 || has_fabric
     }
 }
 
@@ -236,15 +292,19 @@ fn coherence_links_arg(args: &Args, links: bool) -> bool {
     }
 }
 
-/// Label for a one-off run: the Table 1 case, plus the machine when it is
-/// not the paper baseline.
+/// Label for a one-off run: the Table 1 case, plus the machine (and any
+/// fabric) when it is not the paper baseline.
 fn run_label(case_label: &str, spec: &RunSpec) -> String {
-    if spec.machine == MachineSpec::TilePro64 && !spec.link_contention {
+    if spec.machine == MachineSpec::TilePro64 && !spec.link_contention && spec.fabric.is_none() {
         case_label.to_string()
     } else {
         format!(
-            "{case_label} | machine {}{}",
+            "{case_label} | machine {}{}{}",
             spec.machine.label(),
+            match &spec.fabric {
+                Some(f) => format!(" fabric {}", f.label()),
+                None => String::new(),
+            },
             if spec.link_contention { " (link contention)" } else { "" }
         )
     }
@@ -298,16 +358,37 @@ fn figure_specs(
     Ok(specs)
 }
 
-/// `repro batch <fig…|all|grid|gridscale|falseshare>`: run sweeps through
-/// the worker pool and emit machine-readable results. `--jobs N` shards
-/// across N host threads (0 = all cores); output is byte-identical for
-/// every N.
+/// Reject flags that a ladder-driving sweep would silently ignore: these
+/// sweeps build their own per-row machine/fabric grids, so a stray
+/// `--machine` or `--fabric` is a conflict, reported as a one-line error
+/// naming the flag.
+fn reject_ladder_conflicts(
+    args: &Args,
+    sweep: &str,
+    conflicts: &[(&str, &str)],
+) -> Result<(), Box<dyn std::error::Error>> {
+    for (flag, instead) in conflicts {
+        if args.get(flag).is_some() {
+            return Err(format!(
+                "{sweep} sweeps its own ladder: --{flag} conflicts; {instead}"
+            )
+            .into());
+        }
+    }
+    Ok(())
+}
+
+/// `repro batch <fig…|all|grid|gridscale|falseshare|placement|fabric>`:
+/// run sweeps through the worker pool and emit machine-readable results.
+/// `--jobs N` shards across N host threads (0 = all cores); output is
+/// byte-identical for every N.
 fn batch_cmd(
     args: &Args,
     seed: u64,
     machine: MachineSpec,
     links: bool,
     coherence: bool,
+    fabric: Option<FabricSpec>,
 ) -> Result<(), Box<dyn std::error::Error>> {
     let which = args
         .positional()
@@ -319,31 +400,69 @@ fn batch_cmd(
     let specs = if which == "grid" {
         vec![(
             "grid".to_string(),
-            grid_spec(args, seed)?.on_machine(machine, links, coherence),
+            grid_spec(args, seed)?
+                .on_machine(machine, links, coherence)
+                .with_fabric(fabric.clone()),
         )]
     } else if which == "gridscale" {
         // The grid-scaling sweep carries its own per-row machine ladder;
         // links are ON unless --no-link-contention (watching the mesh
         // saturate is the point).
-        if args.get("machine").is_some() {
-            return Err(
-                "gridscale sweeps its own machine ladder: use --machines a,b,c, not --machine"
-                    .into(),
-            );
-        }
+        reject_ladder_conflicts(
+            args,
+            "gridscale",
+            &[
+                ("machine", "use --machines a,b,c"),
+                ("fabric", "the ladder compares uniform fabrics"),
+                ("placements", "use `batch placement` for placements"),
+                ("strengths", "use `batch fabric` to sweep strengths"),
+            ],
+        )?;
         vec![("gridscale".to_string(), gridscale_spec(args, seed)?)]
     } else if which == "falseshare" {
-        if args.get("machine").is_some() {
-            return Err(
-                "falseshare sweeps its own machine ladder: use --machines a,b,c, not --machine"
-                    .into(),
-            );
-        }
+        reject_ladder_conflicts(
+            args,
+            "falseshare",
+            &[
+                ("machine", "use --machines a,b,c"),
+                ("fabric", "use `batch fabric` to sweep fabrics"),
+                ("placements", "use `batch placement` for placements"),
+                ("strengths", "use `batch fabric` to sweep strengths"),
+            ],
+        )?;
         vec![("falseshare".to_string(), falseshare_spec(args, seed)?)]
+    } else if which == "placement" {
+        reject_ladder_conflicts(
+            args,
+            "placement",
+            &[
+                ("machine", "use --machines a,b,c"),
+                ("fabric", "use --placements edges,sides,corners,interior"),
+                ("strengths", "use `batch fabric` to sweep strengths"),
+            ],
+        )?;
+        vec![("placement".to_string(), placement_sweep(args, seed)?)]
+    } else if which == "fabric" {
+        reject_ladder_conflicts(
+            args,
+            "fabric",
+            &[
+                ("machine", "use --machines a,b,c"),
+                ("fabric", "use --strengths 1,0.5,0.25"),
+                ("placements", "use `batch placement` for placements"),
+            ],
+        )?;
+        vec![("fabric".to_string(), fabric_sweep(args, seed)?)]
     } else {
         figure_specs(which, args, seed)?
             .into_iter()
-            .map(|(n, s)| (n, s.on_machine(machine, links, coherence)))
+            .map(|(n, s)| {
+                (
+                    n,
+                    s.on_machine(machine, links, coherence)
+                        .with_fabric(fabric.clone()),
+                )
+            })
             .collect()
     };
     for (_, spec) in &specs {
@@ -357,10 +476,14 @@ fn batch_cmd(
         } else {
             println!("{}", store.table(spec).render());
         }
-        // The falseshare sweep's headline is the coherence-traffic ratio,
-        // not the seconds table.
-        if name.as_str() == "falseshare" {
-            eprintln!("{}", experiment::falseshare_report(spec, &store));
+        // These sweeps' headlines are derived ratios, not the seconds
+        // table: falseshare reports coherence traffic, placement the
+        // Fig. 4-style crossover, fabric the link-queue trajectory.
+        match name.as_str() {
+            "falseshare" => eprintln!("{}", experiment::falseshare_report(spec, &store)),
+            "placement" => eprintln!("{}", experiment::placement_report(spec, &store)),
+            "fabric" => eprintln!("{}", experiment::fabric_report(spec, &store)),
+            _ => {}
         }
         if let Some(dir) = &out {
             store.table(spec).save(dir, name)?;
@@ -372,17 +495,82 @@ fn batch_cmd(
     Ok(())
 }
 
+/// Build the controller-placement sweep (`repro batch placement`): the
+/// Fig. 4 striping grid per `--placements` strategy per `--machines` grid.
+fn placement_sweep(args: &Args, seed: u64) -> Result<SweepSpec, Box<dyn std::error::Error>> {
+    let machines = machines_arg(args, experiment::placement_machines)?;
+    let placements: Vec<CtrlPlacement> = match args.get("placements") {
+        None => experiment::placement_ladder(),
+        Some(s) => s
+            .split(',')
+            .map(|p| CtrlPlacement::parse(p.trim()))
+            .collect::<Result<_, _>>()?,
+    };
+    let elems = args.usize("size", 1_000_000)? as u64;
+    let threads = args.usize("threads", 16)?;
+    if threads == 0 || elems < 2 * threads as u64 {
+        return Err(
+            format!("bad placement: need elems >= 2*threads, got {elems} x {threads}").into(),
+        );
+    }
+    let links = !args.flag("no-link-contention");
+    let coherence = coherence_links_arg(args, links);
+    let spec = experiment::placement_spec(
+        elems, threads, &machines, &placements, seed, links, coherence,
+    );
+    spec.check_thread_capacity()?;
+    Ok(spec)
+}
+
+/// Build the express-channel fabric sweep (`repro batch fabric`): the
+/// write ping-pong at every `--machines` grid × `--strengths` factor.
+fn fabric_sweep(args: &Args, seed: u64) -> Result<SweepSpec, Box<dyn std::error::Error>> {
+    let machines = machines_arg(args, experiment::fabric_machines)?;
+    let strengths: Vec<String> = match args.get("strengths") {
+        None => experiment::fabric_strengths(),
+        Some(s) => s.split(',').map(|x| x.trim().to_string()).collect(),
+    };
+    if strengths.is_empty() {
+        return Err("bad --strengths: need at least one factor".into());
+    }
+    let elems = args.usize("size", 65_536)? as u64;
+    let threads = args.usize("threads", 32)?;
+    let passes = args.usize("reps", 8)? as u32;
+    if threads == 0 || elems < threads as u64 || passes == 0 {
+        return Err(format!(
+            "bad fabric sweep: need elems >= threads and reps >= 1, got {elems} x {threads} x {passes}"
+        )
+        .into());
+    }
+    let links = !args.flag("no-link-contention");
+    let coherence = coherence_links_arg(args, links);
+    let spec = experiment::fabric_sweep_spec(
+        elems, threads, passes, &machines, &strengths, seed, links, coherence,
+    )?;
+    spec.check_thread_capacity()?;
+    Ok(spec)
+}
+
+/// Parse a ladder sweep's `--machines` list, falling back to the sweep's
+/// default ladder.
+fn machines_arg(
+    args: &Args,
+    default: fn() -> Vec<MachineSpec>,
+) -> Result<Vec<MachineSpec>, Box<dyn std::error::Error>> {
+    match args.get("machines") {
+        None => Ok(default()),
+        Some(s) => Ok(s
+            .split(',')
+            .map(|m| MachineSpec::parse(m.trim()))
+            .collect::<Result<_, _>>()?),
+    }
+}
+
 /// Build the false-sharing sweep (`repro batch falseshare`): the write
 /// ping-pong workload at every `--machines` grid (default 8×8 → 16×16),
 /// non-localised vs localised, coherence-link billing always on.
 fn falseshare_spec(args: &Args, seed: u64) -> Result<SweepSpec, Box<dyn std::error::Error>> {
-    let machines: Vec<MachineSpec> = match args.get("machines") {
-        None => experiment::falseshare_machines(),
-        Some(s) => s
-            .split(',')
-            .map(|m| MachineSpec::parse(m.trim()))
-            .collect::<Result<_, _>>()?,
-    };
+    let machines = machines_arg(args, experiment::falseshare_machines)?;
     let elems = args.usize("size", 65_536)? as u64;
     let threads = args.usize("threads", 32)?;
     let passes = args.usize("reps", 8)? as u32;
@@ -514,13 +702,7 @@ fn grid_spec(args: &Args, seed: u64) -> Result<SweepSpec, Box<dyn std::error::Er
 /// sort at every `--machines` grid (default 4×4 → 8×8 → 16×16), link
 /// contention on unless `--no-link-contention`.
 fn gridscale_spec(args: &Args, seed: u64) -> Result<SweepSpec, Box<dyn std::error::Error>> {
-    let machines: Vec<MachineSpec> = match args.get("machines") {
-        None => experiment::grid_scaling_machines(),
-        Some(s) => s
-            .split(',')
-            .map(|m| MachineSpec::parse(m.trim()))
-            .collect::<Result<_, _>>()?,
-    };
+    let machines = machines_arg(args, experiment::grid_scaling_machines)?;
     let elems = args.usize("size", 1_000_000)? as u64;
     let threads = args.usize("threads", 16)?;
     if threads == 0 || elems < 2 * threads as u64 {
@@ -602,14 +784,28 @@ fn sort_real(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
     Ok(())
 }
 
-fn emit_stats(args: &Args, label: &str, stats: &tilesim::sim::RunStats, machine: MachineSpec) {
+fn emit_stats(
+    args: &Args,
+    label: &str,
+    stats: &tilesim::sim::RunStats,
+    machine: MachineSpec,
+    fabric: Option<&FabricSpec>,
+) {
     if args.flag("json") {
         println!("{}", stats.to_json().encode());
     } else {
         println!("{label}");
         println!("  {}", stats.summary());
         if args.flag("heatmap") {
-            let m: Machine = machine.build();
+            // Render against the machine the run actually executed on —
+            // fabric applied, so controller moves and service classes show.
+            let m = machine
+                .build_with_fabric(fabric)
+                .expect("fabric validated at the CLI");
+            let service_map = tilesim::metrics::fabric_map(&m);
+            if !service_map.is_empty() {
+                println!("{service_map}");
+            }
             // The machine here is the one the run executed on, so a
             // MetricsError means a real bug — surface it, don't panic.
             match tilesim::metrics::home_heatmap(stats, &m) {
@@ -646,15 +842,21 @@ fn print_usage() {
     println!(
         "usage: repro <info|microbench|mergesort|radix|homing|sort|experiment|batch> [flags]\n\
          experiments: repro experiment <fig1|fig2|fig3|fig4|table1|all> [--size N] [--out DIR]\n\
-         batch:       repro batch <fig1|fig2|fig3|fig4|table1|all|grid|gridscale|falseshare>\n\
-                      [--jobs N] [--out DIR] [--json]\n\
+         batch:       repro batch <fig1|fig2|fig3|fig4|table1|all|grid|gridscale|falseshare\n\
+                      |placement|fabric> [--jobs N] [--out DIR] [--json]\n\
                       grid axes: --cases 1,3,8 --sizes 1m,4m --threads-list 16,64\n\
                       --workload mergesort|microbench|radix --variant a,b --seeds K\n\
                       gridscale:  --machines 4x4:2,tilepro64,nuca256 --size N --threads N\n\
                       falseshare: --machines tilepro64,nuca256 --size N --threads N --reps P\n\
                                   (write ping-pong; reports the coherence-traffic ratio)\n\
+                      placement:  --machines tilepro64,16x16:4 --placements edges,sides,\n\
+                                  corners,interior (Fig.4 striping crossover per placement)\n\
+                      fabric:     --machines tilepro64,nuca256 --strengths 1,0.5,0.25\n\
+                                  (express-channel ping-pong; link-queue trajectory)\n\
          machines: --machine tilepro64|epiphany16|nuca256|WxH[:ctrls] (default tilepro64)\n\
-                   --link-contention / --no-link-contention (default: on off-baseline machines)\n\
+                   --fabric [machine:]ctrl=edges|sides|corners|interior|t+t[:base=N]\n\
+                            [:express-row=Y@F][:express-col=X@F][:edge@F][:dir=D@F]\n\
+                   --link-contention / --no-link-contention (default: on off-baseline/fabric)\n\
                    --coherence-links / --no-coherence-links (default: follows link contention)\n\
          flags: --size N --threads N --reps N --case 1..8 --seed S --variant v\n\
                 --digit-bits B --jobs N --no-striping --no-cache --heatmap --json\n\

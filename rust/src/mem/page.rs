@@ -284,6 +284,31 @@ mod tests {
     }
 
     #[test]
+    fn first_touch_placement_follows_controller_placement() {
+        // The non-striped fault-in path resolves to the *machine's*
+        // nearest controller — so a corner-placed fabric redirects the
+        // page's DRAM to a different controller than the edge default.
+        use crate::arch::FabricSpec;
+        let corners = Machine::tilepro64()
+            .with_fabric(&FabricSpec::parse("ctrl=corners").unwrap())
+            .unwrap();
+        let mut edge_pt = table();
+        let mut corner_pt = PageTable::new(Arc::new(corners));
+        for pt in [&mut edge_pt, &mut corner_pt] {
+            pt.map_region(VAddr(0), PAGE_BYTES, ft_attr()).unwrap();
+            // Touch from tile 56 = (0,7): bottom-left corner.
+            pt.resolve_home(LineId(0), TileId(56)).unwrap();
+        }
+        // Edge layout: nearest is controller 2 (attach (2,7)); corner
+        // layout: nearest is the (0,7) corner controller.
+        let edge_ctrl = edge_pt.controller_of_line(LineId(0)).unwrap();
+        let corner_ctrl = corner_pt.controller_of_line(LineId(0)).unwrap();
+        assert_eq!(edge_ctrl, 2);
+        let corner_attach = corner_pt.machine().controller(corner_ctrl).attach;
+        assert_eq!(corner_attach, TileId(56), "corner placement must win");
+    }
+
+    #[test]
     fn unmapped_controller_faults() {
         let pt = table();
         assert!(pt.controller_of_line(LineId(99)).is_err());

@@ -5,7 +5,13 @@
 //! toucher) or striped across all controllers in 8 KB chunks (the default;
 //! "Linux boots believing it has a single controller four times larger").
 //! The controller count comes from the runtime `Machine` (4 on the
-//! tilepro64 preset, so the seed's striping pattern is unchanged).
+//! tilepro64 preset, so the seed's striping pattern is unchanged). *Where*
+//! those controllers attach to the mesh is the machine's
+//! [`CtrlPlacement`](crate::arch::CtrlPlacement) (edges by default;
+//! sides/corners/interior under a fabric spec): striping picks the
+//! controller *id* behind an address, while the placement decides which
+//! tile that id's DRAM port hangs off — and therefore every route the
+//! NoC bills for the access.
 
 use crate::mem::addr::VAddr;
 

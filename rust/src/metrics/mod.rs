@@ -199,7 +199,81 @@ pub fn link_heatmap(stats: &RunStats, machine: &Machine) -> Result<String, Metri
         )),
         None => out.push_str("  no link traffic\n"),
     }
+    // On a heterogeneous fabric, name the service classes so a hot link
+    // can be read against how wide it is.
+    let classes = physical_service_classes(machine);
+    if classes.len() > 1 {
+        out.push_str(&format!("  {}\n", service_classes_line(&classes)));
+    }
     Ok(out)
+}
+
+/// Distinct service values over the *physical* directed links (off-grid
+/// boundary slots have table entries but never carry traffic — see
+/// `Machine::has_link`), cheapest first with link counts.
+fn physical_service_classes(machine: &Machine) -> Vec<(u64, usize)> {
+    crate::arch::Fabric::classes_of(machine.tiles().flat_map(|t| {
+        Dir::ALL
+            .into_iter()
+            .filter(move |&d| machine.has_link(t, d))
+            .map(move |d| machine.fabric().service(machine.link_index(t, d)))
+    }))
+}
+
+/// One-line summary of physical link service classes, cheapest first,
+/// e.g. `link service classes: 1 cy x 14 links (express), 4 cy x 210 links`.
+fn service_classes_line(classes: &[(u64, usize)]) -> String {
+    let fastest = classes.first().map(|&(s, _)| s).unwrap_or(0);
+    let parts: Vec<String> = classes
+        .iter()
+        .map(|&(service, links)| {
+            format!(
+                "{service} cy x {links} links{}",
+                if service == fastest && classes.len() > 1 { " (express)" } else { "" }
+            )
+        })
+        .collect();
+    format!("link service classes: {}", parts.join(", "))
+}
+
+/// Render the per-tile link-service map of a heterogeneous fabric: each
+/// cell shows the *fastest* physically existing outgoing link's service
+/// time as a digit (`+` for 10 cycles and up), making express
+/// rows/columns visible at a glance. Empty string when the physical
+/// links are uniform (nothing to show). The service-class legend lives
+/// on [`link_heatmap`], so the two never repeat it.
+pub fn fabric_map(machine: &Machine) -> String {
+    if physical_service_classes(machine).len() <= 1 {
+        return String::new();
+    }
+    let mut out = String::new();
+    out.push_str(&format!(
+        "link service per tile (fastest outgoing link), {}x{} {}:\n",
+        machine.grid_w(),
+        machine.grid_h(),
+        machine.name()
+    ));
+    for y in 0..machine.grid_h() {
+        out.push_str("  ");
+        for x in 0..machine.grid_w() {
+            let t = TileId(y * machine.grid_w() + x);
+            let fastest = Dir::ALL
+                .into_iter()
+                .filter(|&d| machine.has_link(t, d))
+                .map(|d| machine.fabric().service(machine.link_index(t, d)))
+                .min()
+                .unwrap_or(0);
+            let c = if fastest < 10 {
+                (b'0' + fastest as u8) as char
+            } else {
+                '+'
+            };
+            out.push(c);
+            out.push(c);
+        }
+        out.push('\n');
+    }
+    out
 }
 
 /// Render one traffic class's per-tile link heatmap. `Ok` with an empty
@@ -372,6 +446,61 @@ mod tests {
         assert!(map.contains("9 invalidations packets total"), "{map}");
         // The reply class saw nothing: renders empty rather than a blank grid.
         assert_eq!(link_class_heatmap(&s, &m, TrafficClass::Reply).unwrap(), "");
+    }
+
+    #[test]
+    fn fabric_map_empty_on_uniform_fabric() {
+        assert_eq!(fabric_map(&Machine::tilepro64()), "");
+        assert_eq!(fabric_map(&Machine::nuca256()), "");
+    }
+
+    #[test]
+    fn fabric_map_shows_express_rows() {
+        let m = Machine::tilepro64()
+            .with_fabric(&crate::arch::FabricSpec::parse("base=4:express-row=0@0.5").unwrap())
+            .unwrap();
+        let map = fabric_map(&m);
+        // Row 0 tiles have a 2-cycle east/west link; the rest sit at 4.
+        let rows: Vec<&str> = map.lines().collect();
+        assert!(rows[1].contains("22"), "{map}");
+        assert!(rows[2].contains("44") && !rows[2].contains('2'), "{map}");
+        // The class legend lives on link_heatmap, not here (no repeat).
+        assert!(!map.contains("link service classes"), "{map}");
+    }
+
+    #[test]
+    fn fabric_map_empty_when_only_offgrid_slots_differ() {
+        // A rule that only ever hits nonexistent boundary links (west
+        // links of a 1-wide grid's row) is physically uniform: nothing
+        // to render even though the raw table is heterogeneous.
+        let m = Machine::custom(1, 4, 1)
+            .unwrap()
+            .with_fabric(&crate::arch::FabricSpec::parse("express-row=0@0.5").unwrap())
+            .unwrap();
+        assert!(m.fabric().uniform_service().is_none(), "table is het");
+        assert_eq!(fabric_map(&m), "", "physically uniform");
+    }
+
+    #[test]
+    fn link_heatmap_annotates_physical_service_classes() {
+        let m = Machine::tilepro64()
+            .with_fabric(&crate::arch::FabricSpec::parse("base=4:express-row=0@0.5").unwrap())
+            .unwrap();
+        let s = RunStats {
+            tile_home_requests: vec![0; 64],
+            link_requests: vec![1; m.num_links()],
+            ..RunStats::default()
+        };
+        let map = link_heatmap(&s, &m).unwrap();
+        // Physical counts: an 8x8 mesh has 2*7*8*2 = 224 directed links;
+        // row 0 contributes 7 east + 7 west express ones.
+        assert!(
+            map.contains("link service classes: 2 cy x 14 links (express), 4 cy x 210 links"),
+            "{map}"
+        );
+        // Uniform machines keep the pre-fabric rendering.
+        let plain = link_heatmap(&s, &Machine::tilepro64()).unwrap();
+        assert!(!plain.contains("link service classes"), "{plain}");
     }
 
     #[test]

@@ -22,7 +22,11 @@
 //! Every server is deterministic: a request arriving at `now` starts at
 //! `max(now, server_free_at)`; the wait is the queueing delay billed to
 //! the requester. Server counts come from the runtime `Machine`
-//! description, so any grid gets correctly-sized resource vectors.
+//! description, so any grid gets correctly-sized resource vectors — and
+//! each link's *service time* comes from the machine's heterogeneous
+//! [`Fabric`](crate::arch::Fabric) table (express rows/columns, wider
+//! edge links, per-direction asymmetry), not a single scalar; a uniform
+//! table reproduces the scalar model exactly.
 //!
 //! The replay engine processes threads min-clock-first in small quanta, so
 //! requests arrive approximately in simulated-time order and the
@@ -100,7 +104,11 @@ pub struct ContentionModel {
     ctrls: Vec<Server>,
     /// One server per directed mesh link, indexed by `Machine::link_index`.
     links: Vec<Server>,
-    link_service: u64,
+    /// Per-link service times, copied out of the machine's `Fabric` (one
+    /// indexed load per billing, no `Arc` hop on the hot path). A uniform
+    /// table at `params.link_service` reproduces the pre-fabric scalar
+    /// billing exactly.
+    link_service: Vec<u64>,
     hop_cycles: u64,
     /// Total queueing cycles handed out (reporting).
     pub home_delay_cycles: u64,
@@ -126,7 +134,7 @@ impl ContentionModel {
             machine.num_controllers() as usize,
             machine.num_links(),
         );
-        let link_service = machine.params.link_service;
+        let link_service: Vec<u64> = (0..links).map(|ix| machine.fabric().service(ix)).collect();
         let hop_cycles = machine.params.noc_hop;
         ContentionModel {
             cfg,
@@ -189,7 +197,7 @@ impl ContentionModel {
         let mut delay = 0u64;
         for hop in xy_links(&self.machine, from, to) {
             let ix = self.machine.link_index(hop.from, hop.dir);
-            delay += self.links[ix].request(now, self.link_service);
+            delay += self.links[ix].request(now, self.link_service[ix]);
             self.link_requests[ix] += 1;
         }
         self.link_delay_cycles += delay;
@@ -203,12 +211,14 @@ impl ContentionModel {
     /// Occupancy is billed per directed link exactly like a forward
     /// request, but the traversal *latency* uses a wormhole-pipelining
     /// approximation instead of a second serial walk: the payload streams
-    /// behind the header, so the route costs
-    /// `max(header_hops · noc_hop, flits · link_service)`. The header term
-    /// is already part of the uncontended `access_cycles` round trip, so
-    /// only the payload-serialisation *excess* over it is returned (plus
-    /// any queueing) — with `flits == 1` (a pure ack) the excess is zero
-    /// and the reply adds only genuine backlog.
+    /// behind the header at the rate of the route's *slowest* link, so the
+    /// route costs `max(header_hops · noc_hop, flits · max_link_service)`
+    /// (on a uniform fabric this is the old scalar formula). The header
+    /// term is already part of the uncontended `access_cycles` round trip,
+    /// so only the payload-serialisation *excess* over it is returned
+    /// (plus any queueing) — with `flits == 1` (a pure ack) over unit-
+    /// service links the excess is zero and the reply adds only genuine
+    /// backlog.
     #[inline]
     pub fn reply_path_request(&mut self, from: TileId, to: TileId, now: u64, flits: u64) -> u64 {
         if !self.coherence_enabled() || from == to {
@@ -216,14 +226,17 @@ impl ContentionModel {
         }
         let mut queue = 0u64;
         let mut hops = 0u64;
+        let mut max_service = 0u64;
         for hop in xy_links(&self.machine, from, to) {
             let ix = self.machine.link_index(hop.from, hop.dir);
-            queue += self.links[ix].request(now, self.link_service);
+            let service = self.link_service[ix];
+            queue += self.links[ix].request(now, service);
+            max_service = max_service.max(service);
             self.link_reply_requests[ix] += 1;
             hops += 1;
         }
         let header = hops * self.hop_cycles;
-        let d = queue + (flits * self.link_service).saturating_sub(header);
+        let d = queue + (flits * max_service).saturating_sub(header);
         self.reply_link_cycles += d;
         d
     }
@@ -248,12 +261,12 @@ impl ContentionModel {
         for &v in victims {
             for hop in xy_links(&self.machine, home, v) {
                 let ix = self.machine.link_index(hop.from, hop.dir);
-                delay += self.links[ix].request(now, self.link_service);
+                delay += self.links[ix].request(now, self.link_service[ix]);
                 self.link_inval_requests[ix] += 1;
             }
             for hop in xy_links(&self.machine, v, home) {
                 let ix = self.machine.link_index(hop.from, hop.dir);
-                delay += self.links[ix].request(now, self.link_service);
+                delay += self.links[ix].request(now, self.link_service[ix]);
                 self.link_inval_requests[ix] += 1;
             }
         }
@@ -540,6 +553,56 @@ mod tests {
         let mut m = model();
         assert_eq!(m.invalidation_fanout_request(TileId(5), &[TileId(5)], 0), 0);
         assert_eq!(m.link_inval_requests.iter().sum::<u64>(), 0);
+    }
+
+    #[test]
+    fn fabric_express_links_never_queue() {
+        // base 1 halved floors to a zero-service express row: row-0 east
+        // traffic books occupancy but no backlog, while an ordinary
+        // column still serialises.
+        let machine = Machine::tilepro64()
+            .with_fabric(&crate::arch::FabricSpec::parse("express-row=0@0.5").unwrap())
+            .unwrap();
+        let mut m = model_on(machine, ContentionConfig::default());
+        assert_eq!(m.link_path_request(TileId(0), TileId(7), 0), 0);
+        assert_eq!(
+            m.link_path_request(TileId(0), TileId(7), 0),
+            0,
+            "express row must not queue"
+        );
+        assert_eq!(m.link_requests.iter().sum::<u64>(), 14);
+        assert_eq!(m.link_path_request(TileId(0), TileId(56), 0), 0);
+        assert!(
+            m.link_path_request(TileId(0), TileId(56), 0) > 0,
+            "unit-service column must still serialise"
+        );
+    }
+
+    #[test]
+    fn fabric_slow_links_queue_longer() {
+        let machine = Machine::tilepro64()
+            .with_fabric(&crate::arch::FabricSpec::parse("base=4").unwrap())
+            .unwrap();
+        let mut slow = model_on(machine, ContentionConfig::default());
+        assert_eq!(slow.link_path_request(TileId(0), TileId(1), 0), 0);
+        // The 4-cycle link is busy 4 cycles; the scalar model billed 1.
+        assert_eq!(slow.link_path_request(TileId(0), TileId(1), 0), 4);
+        let mut unit = model();
+        unit.link_path_request(TileId(0), TileId(1), 0);
+        assert_eq!(unit.link_path_request(TileId(0), TileId(1), 0), 1);
+    }
+
+    #[test]
+    fn reply_wormhole_streams_at_the_slowest_link() {
+        // West links at service 4: a 2-hop 4-flit reply pays
+        // max(2*noc_hop, 4*4) - 2 = 14 cycles of payload excess.
+        let machine = Machine::tilepro64()
+            .with_fabric(&crate::arch::FabricSpec::parse("dir=W@4").unwrap())
+            .unwrap();
+        let mut m = model_on(machine, ContentionConfig::default());
+        assert_eq!(m.reply_path_request(TileId(2), TileId(0), 0, 4), 14);
+        // An east-bound reply over unit links keeps the scalar behaviour.
+        assert_eq!(m.reply_path_request(TileId(61), TileId(63), 0, 4), 2);
     }
 
     #[test]

@@ -310,6 +310,7 @@ impl Engine {
             caches_enabled: cfg.caches_enabled,
             page_runs: cfg.page_runs,
             stats: RunStats {
+                clock_hz: machine.params.clock_hz,
                 tile_home_requests: vec![0; machine.num_tiles() as usize],
                 ..RunStats::default()
             },
@@ -1278,6 +1279,36 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn stats_carry_the_machine_clock() {
+        // epiphany16 must report wall seconds at its 600 MHz clock; the
+        // tilepro64 baseline keeps the 860 MHz conversion.
+        let machine = Arc::new(crate::arch::Machine::epiphany16());
+        let mut e = Engine::new(EngineConfig::for_machine(
+            machine.clone(),
+            MemConfig {
+                hash_policy: HashPolicy::None,
+                striping: true,
+            },
+        ));
+        let r = e.prealloc(TileId(0), 4096);
+        let mut b = TraceBuilder::new();
+        b.read(Loc::Abs(r.addr), 4096);
+        let mut p = Program::from_builders(vec![b], 0, 0);
+        let stats = e
+            .run(&mut p, &mut crate::sched::StaticMapper::for_machine(&machine))
+            .unwrap();
+        assert_eq!(stats.clock_hz, 600.0e6);
+        let expect = stats.makespan_cycles as f64 / 600.0e6;
+        assert!((stats.seconds() - expect).abs() < 1e-15);
+        let base = engine(HashPolicy::None);
+        let mut b = TraceBuilder::new();
+        b.compute(10);
+        let mut p = Program::from_builders(vec![b], 0, 0);
+        let s = base.run(&mut p, &mut StaticMapper::new()).unwrap();
+        assert_eq!(s.clock_hz, crate::arch::CLOCK_HZ);
     }
 
     #[test]

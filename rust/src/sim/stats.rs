@@ -3,8 +3,14 @@
 use crate::arch::{LatencyParams, CLOCK_HZ};
 use crate::util::json::Json;
 
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct RunStats {
+    /// Clock the run's machine converts cycles to seconds at
+    /// (`LatencyParams::clock_hz`, set by the engine). Defaults to the
+    /// paper platform's 860 MHz, so stats constructed outside an engine —
+    /// and every pinned tilepro64 record — keep the historical conversion;
+    /// emitted in JSON only when it deviates.
+    pub clock_hz: f64,
     /// Wall time of the parallel run = max over threads of finish time.
     pub makespan_cycles: u64,
     pub thread_cycles: Vec<u64>,
@@ -47,9 +53,40 @@ pub struct RunStats {
     pub link_inval_requests: Vec<u64>,
 }
 
+impl Default for RunStats {
+    fn default() -> Self {
+        RunStats {
+            clock_hz: CLOCK_HZ,
+            makespan_cycles: 0,
+            thread_cycles: Vec::new(),
+            line_accesses: 0,
+            l1_hits: 0,
+            l2_hits: 0,
+            home_hits: 0,
+            ddr_accesses: 0,
+            invalidations: 0,
+            migrations: 0,
+            home_queue_cycles: 0,
+            ctrl_queue_cycles: 0,
+            link_queue_cycles: 0,
+            reply_link_cycles: 0,
+            invalidation_link_cycles: 0,
+            compute_cycles: 0,
+            allocs: 0,
+            frees: 0,
+            tile_home_requests: Vec::new(),
+            link_requests: Vec::new(),
+            link_reply_requests: Vec::new(),
+            link_inval_requests: Vec::new(),
+        }
+    }
+}
+
 impl RunStats {
+    /// Simulated wall seconds at the run's machine clock (860 MHz on the
+    /// paper baseline; 600 MHz on epiphany16, per arXiv:1704.08343).
     pub fn seconds(&self) -> f64 {
-        self.makespan_cycles as f64 / CLOCK_HZ
+        self.makespan_cycles as f64 / self.clock_hz
     }
 
     pub fn seconds_with(&self, params: &LatencyParams) -> f64 {
@@ -97,6 +134,13 @@ impl RunStats {
         let mut fields = vec![
             ("makespan_cycles", Json::num(self.makespan_cycles as f64)),
             ("seconds", Json::num(self.seconds())),
+        ];
+        // The clock only appears when it deviates from the paper
+        // platform's 860 MHz: pinned tilepro64 records keep their bytes.
+        if self.clock_hz != CLOCK_HZ {
+            fields.push(("clock_hz", Json::num(self.clock_hz)));
+        }
+        fields.extend([
             ("line_accesses", Json::num(self.line_accesses as f64)),
             ("l1_hits", Json::num(self.l1_hits as f64)),
             ("l2_hits", Json::num(self.l2_hits as f64)),
@@ -113,7 +157,7 @@ impl RunStats {
                 "tile_home_requests",
                 Json::arr(self.tile_home_requests.iter().map(|&n| Json::num(n as f64))),
             ),
-        ];
+        ]);
         // Link fields only exist when the run modelled link contention:
         // runs without it (including the pinned tilepro64 paper baseline)
         // keep their pre-link-model JSON bytes.
@@ -198,6 +242,26 @@ mod tests {
             ..Default::default()
         };
         assert!((s.seconds() - 1e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn per_machine_clock_changes_seconds_and_json() {
+        // The same cycle count is more wall time at the Epiphany's
+        // 600 MHz, and the deviating clock is recorded in the JSON.
+        let s = RunStats {
+            makespan_cycles: 600_000_000,
+            clock_hz: 600.0e6,
+            ..Default::default()
+        };
+        assert!((s.seconds() - 1.0).abs() < 1e-12);
+        assert_eq!(s.to_json().get("clock_hz").unwrap().encode(), "600000000");
+        // Default (860 MHz) stats keep their pre-clock JSON bytes.
+        let baseline = RunStats {
+            makespan_cycles: 860_000,
+            ..Default::default()
+        };
+        assert!(baseline.to_json().get("clock_hz").is_none());
+        assert!((baseline.seconds() - 1e-3).abs() < 1e-12);
     }
 
     #[test]

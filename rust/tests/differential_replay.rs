@@ -236,6 +236,108 @@ fn chunk_kernels_streamed_equals_recorded() {
 }
 
 #[test]
+fn heterogeneous_fabric_streamed_equals_recorded_equals_reference() {
+    // The fabric acceptance pin: on a machine with corner controllers,
+    // a raised base service, an express row, and per-direction asymmetry,
+    // the three replays (streamed fast path, recorded, per-line reference
+    // walk) still produce byte-identical stats and per-link class vectors
+    // — heterogeneous per-link billing must not depend on the line-
+    // accounting path.
+    use tilesim::arch::{FabricSpec, Machine};
+    use tilesim::workloads::pingpong::{self, PingPongConfig};
+
+    let fabric = FabricSpec::parse("ctrl=corners:base=3:express-row=0@0.5:dir=S@2").unwrap();
+    let machine = std::sync::Arc::new(Machine::tilepro64().with_fabric(&fabric).unwrap());
+    assert!(machine.fabric().uniform_service().is_none());
+
+    let builds: Vec<(&str, Box<dyn Fn(&mut Engine) -> Program>)> = vec![
+        (
+            "mergesort",
+            Box::new(|e: &mut Engine| {
+                mergesort::build(
+                    e,
+                    &MergesortConfig {
+                        elems: 1 << 13,
+                        threads: 6,
+                        variant: Variant::NonLocalised,
+                    },
+                )
+            }),
+        ),
+        (
+            "pingpong",
+            Box::new(|e: &mut Engine| {
+                pingpong::build(
+                    e,
+                    &PingPongConfig {
+                        elems: 1 << 12,
+                        threads: 8,
+                        passes: 3,
+                        localised: false,
+                    },
+                )
+            }),
+        ),
+    ];
+    for policy in POLICIES {
+        for (label, build) in &builds {
+            let mk_cfg = || {
+                EngineConfig::for_machine(
+                    machine.clone(),
+                    MemConfig {
+                        hash_policy: policy,
+                        striping: true,
+                    },
+                )
+            };
+            let mut e_stream = Engine::new(mk_cfg());
+            let mut streamed = build(&mut e_stream);
+            let mut e_rec = Engine::new(mk_cfg());
+            let _ = build(&mut e_rec);
+            let mut recorded =
+                Program::from_ops(streamed.record(), streamed.num_slots, streamed.num_events);
+            let mut e_ref = Engine::new(mk_cfg().without_page_runs());
+            let mut for_ref = build(&mut e_ref);
+
+            let s_stream = e_stream
+                .run(&mut streamed, &mut StaticMapper::new())
+                .unwrap_or_else(|e| panic!("fabric {label} streamed: {e}"));
+            let s_rec = e_rec
+                .run(&mut recorded, &mut StaticMapper::new())
+                .unwrap_or_else(|e| panic!("fabric {label} recorded: {e}"));
+            let s_ref = e_ref
+                .run(&mut for_ref, &mut StaticMapper::new())
+                .unwrap_or_else(|e| panic!("fabric {label} reference: {e}"));
+
+            let js = s_stream.to_json().encode();
+            assert_eq!(
+                js,
+                s_rec.to_json().encode(),
+                "fabric {label} ({policy:?}): streamed vs recorded"
+            );
+            assert_eq!(
+                js,
+                s_ref.to_json().encode(),
+                "fabric {label} ({policy:?}): fast vs reference"
+            );
+            assert_eq!(
+                s_stream.link_requests, s_ref.link_requests,
+                "fabric {label} ({policy:?})"
+            );
+            assert_eq!(
+                s_stream.link_reply_requests, s_ref.link_reply_requests,
+                "fabric {label} ({policy:?})"
+            );
+            assert_eq!(
+                s_stream.link_inval_requests, s_ref.link_inval_requests,
+                "fabric {label} ({policy:?})"
+            );
+            assert!(s_stream.links_modelled());
+        }
+    }
+}
+
+#[test]
 fn streamed_equals_recorded_under_migrating_scheduler() {
     // The pull-based loop must interleave identically when the scheduler
     // migrates threads mid-run (same seed ⇒ same migration schedule).

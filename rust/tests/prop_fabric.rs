@@ -1,0 +1,230 @@
+//! Fabric-refactor pins:
+//!
+//! 1. **Uniform fabric == scalar path.** A `Fabric` built with a single
+//!    uniform service value (the machine's `link_service`) bills
+//!    identically — full `RunStats` JSON plus all three per-link traffic
+//!    vectors — to the pre-refactor scalar billing (`fabric: None`),
+//!    across workloads × machines × link/coherence settings. The refactor
+//!    replaced the representation, not the numbers.
+//! 2. **`EdgesEven` placement == the built-in controller layout**, so the
+//!    placement ablation's baseline row is the pre-fabric machine.
+//! 3. **`FabricSpec` round-trips** through `label()` for random generated
+//!    specs.
+
+use tilesim::arch::{CtrlPlacement, FabricSpec, MachineSpec};
+use tilesim::coordinator::batch::{RunSpec, Workload};
+use tilesim::util::prop;
+use tilesim::util::rng::Rng;
+use tilesim::workloads::mergesort::Variant;
+
+fn random_machine(rng: &mut Rng) -> MachineSpec {
+    match rng.below(4) {
+        0 => MachineSpec::TilePro64,
+        1 => MachineSpec::Epiphany16,
+        2 => MachineSpec::Nuca256,
+        _ => {
+            let w = rng.range(2, 9) as u32;
+            let h = rng.range(2, 9) as u32;
+            MachineSpec::Custom {
+                w,
+                h,
+                ctrls: rng.range(1, 1 + 2 * w as u64) as u32,
+            }
+        }
+    }
+}
+
+fn random_workload(rng: &mut Rng) -> Workload {
+    match rng.below(4) {
+        0 => Workload::Mergesort {
+            variant: match rng.below(3) {
+                0 => Variant::NonLocalised,
+                1 => Variant::NonLocalisedIntermediate,
+                _ => Variant::Localised,
+            },
+        },
+        1 => Workload::Microbench {
+            reps: rng.range(1, 4) as u32,
+        },
+        2 => Workload::Radix { digit_bits: 8 },
+        _ => Workload::PingPong {
+            passes: rng.range(1, 4) as u32,
+        },
+    }
+}
+
+fn assert_same_stats(
+    a: &tilesim::sim::RunStats,
+    b: &tilesim::sim::RunStats,
+    what: &str,
+) -> prop::PropResult {
+    prop::assert_eq_dbg(a.to_json().encode(), b.to_json().encode(), what)?;
+    prop::assert_eq_dbg(a.link_requests.clone(), b.link_requests.clone(), what)?;
+    prop::assert_eq_dbg(
+        a.link_reply_requests.clone(),
+        b.link_reply_requests.clone(),
+        what,
+    )?;
+    prop::assert_eq_dbg(
+        a.link_inval_requests.clone(),
+        b.link_inval_requests.clone(),
+        what,
+    )
+}
+
+#[test]
+fn prop_uniform_fabric_bills_like_the_scalar_path() {
+    prop::check("uniform fabric == scalar link billing", 24, |rng| {
+        let machine = random_machine(rng);
+        let workload = random_workload(rng);
+        let threads = rng.range(2, 9) as usize;
+        let elems = ((1u64 << rng.range(11, 14)) + rng.below(512)).max(2 * threads as u64);
+        let (links, coherence) = match rng.below(3) {
+            0 => (false, false),
+            1 => (true, false),
+            _ => (true, true),
+        };
+        let mut scalar = RunSpec::mergesort(rng.range(1, 9) as u8, elems, threads, 7);
+        scalar.workload = workload;
+        scalar.machine = machine;
+        scalar.link_contention = links;
+        scalar.coherence_links = coherence;
+        let mut uniform = scalar.clone();
+        let base = machine.build().params.link_service;
+        uniform.fabric = Some(FabricSpec::parse(&format!("base={base}")).unwrap());
+        uniform.check_thread_capacity().map_err(|e| e.to_string())?;
+        assert_same_stats(
+            &scalar.execute(),
+            &uniform.execute(),
+            &format!("machine {} links={links} coherence={coherence}", machine.label()),
+        )
+    });
+}
+
+#[test]
+fn prop_edges_placement_is_the_builtin_layout() {
+    prop::check("ctrl=edges == built-in controllers", 12, |rng| {
+        // epiphany16 is excluded: its single controller hangs off the east
+        // edge (the Parallella eLink), which is *not* the EdgesEven layout.
+        let machine = match random_machine(rng) {
+            MachineSpec::Epiphany16 => MachineSpec::TilePro64,
+            m => m,
+        };
+        let mut base = RunSpec::mergesort(3, 1 << 12, 4, 11);
+        base.machine = machine;
+        base.link_contention = true;
+        base.coherence_links = true;
+        let mut placed = base.clone();
+        placed.fabric = Some(FabricSpec {
+            ctrl: Some(CtrlPlacement::EdgesEven),
+            ..FabricSpec::default()
+        });
+        assert_same_stats(
+            &base.execute(),
+            &placed.execute(),
+            &format!("machine {}", machine.label()),
+        )
+    });
+}
+
+#[test]
+fn prop_fabric_spec_round_trips_through_label() {
+    prop::check("FabricSpec label round-trip", 64, |rng| {
+        let mut clauses: Vec<String> = Vec::new();
+        if rng.chance(0.4) {
+            clauses.push(random_machine(rng).label());
+        }
+        if rng.chance(0.5) {
+            let p = match rng.below(5) {
+                0 => "edges".to_string(),
+                1 => "sides".to_string(),
+                2 => "corners".to_string(),
+                3 => "interior".to_string(),
+                _ => format!("{}+{}", rng.below(8), 8 + rng.below(8)),
+            };
+            clauses.push(format!("ctrl={p}"));
+        }
+        if rng.chance(0.5) {
+            clauses.push(format!("base={}", rng.range(1, 9)));
+        }
+        for _ in 0..rng.below(3) {
+            let factor = match rng.below(4) {
+                0 => "0.5".to_string(),
+                1 => "0.25".to_string(),
+                2 => "2".to_string(),
+                _ => "1.5".to_string(),
+            };
+            let rule = match rng.below(4) {
+                0 => format!("express-row={}@{factor}", rng.below(8)),
+                1 => format!("express-col={}@{factor}", rng.below(8)),
+                2 => format!("edge@{factor}"),
+                _ => format!(
+                    "dir={}@{factor}",
+                    ['E', 'W', 'N', 'S'][rng.below(4) as usize]
+                ),
+            };
+            clauses.push(rule);
+        }
+        if clauses.is_empty() {
+            clauses.push("ctrl=corners".into());
+        }
+        let text = clauses.join(":");
+        let spec = FabricSpec::parse(&text).map_err(|e| format!("parse '{text}': {e}"))?;
+        prop::assert_eq_dbg(spec.label(), text.clone(), "label")?;
+        prop::assert_eq_dbg(
+            FabricSpec::parse(&spec.label()).map_err(|e| e.to_string())?,
+            spec,
+            &format!("re-parse of '{text}'"),
+        )
+    });
+}
+
+#[test]
+fn placement_strategies_produce_distinct_simulations() {
+    // Deterministic companion to the prop tests: on a 16×16 grid the four
+    // named placements give four distinct makespans for a DRAM-heavy sort.
+    let mut seen = std::collections::HashSet::new();
+    for p in ["edges", "sides", "corners", "interior"] {
+        let mut spec = RunSpec::mergesort(3, 1 << 14, 16, 42);
+        spec.machine = MachineSpec::Custom { w: 16, h: 16, ctrls: 4 };
+        spec.link_contention = true;
+        spec.coherence_links = true;
+        spec.fabric = Some(FabricSpec::parse(&format!("ctrl={p}")).unwrap());
+        let stats = spec.execute();
+        assert!(
+            seen.insert(stats.makespan_cycles),
+            "placement {p} duplicated another placement's makespan"
+        );
+    }
+}
+
+#[test]
+fn express_fabric_strictly_reduces_pingpong_link_queueing() {
+    // The CI smoke's in-tree twin: widening row-0/col-0 express channels
+    // must strictly reduce the non-localised ping-pong's forward link
+    // queueing at every strength step, on both machine sizes.
+    for machine in [MachineSpec::TilePro64, MachineSpec::Nuca256] {
+        let mut last = u64::MAX;
+        for strength in ["1", "0.5", "0.25"] {
+            let mut spec = RunSpec::mergesort(4, 1 << 13, 16, 42);
+            spec.workload = Workload::PingPong { passes: 4 };
+            spec.machine = machine;
+            spec.link_contention = true;
+            spec.coherence_links = true;
+            spec.fabric = Some(
+                FabricSpec::parse(&format!(
+                    "base=4:express-row=0@{strength}:express-col=0@{strength}"
+                ))
+                .unwrap(),
+            );
+            let q = spec.execute().link_queue_cycles;
+            assert!(q > 0, "{} @{strength}: ping-pong must queue on links", machine.label());
+            assert!(
+                q < last,
+                "{} @{strength}: expected strictly less queueing ({q} vs {last})",
+                machine.label()
+            );
+            last = q;
+        }
+    }
+}
