@@ -12,13 +12,15 @@
 //!      TILESIM_BENCH_OUT (default BENCH_batch.json),
 //!      TILESIM_BENCH_ENGINE_OUT (default BENCH_engine.json),
 //!      TILESIM_BENCH_NOC_OUT (default BENCH_noc.json),
-//!      TILESIM_BENCH_FABRIC_OUT (default BENCH_fabric.json).
+//!      TILESIM_BENCH_FABRIC_OUT (default BENCH_fabric.json),
+//!      TILESIM_BENCH_PROTOCOL_OUT (default BENCH_protocol.json).
 
 use std::rc::Rc;
 use std::sync::Arc;
 use std::time::Instant;
 
 use tilesim::arch::{FabricSpec, Machine, TileId};
+use tilesim::coherence::ProtocolSpec;
 use tilesim::coordinator::batch::BatchRunner;
 use tilesim::coordinator::localise::{build_program, LocaliseConfig, ELEM_BYTES};
 use tilesim::coordinator::{case, experiment, ChunkKernel};
@@ -27,6 +29,7 @@ use tilesim::mem::{HashPolicy, MemConfig};
 use tilesim::sched::StaticMapper;
 use tilesim::sim::{Engine, EngineConfig, Loc, Program, RunStats, TraceBuilder};
 use tilesim::util::json::Json;
+use tilesim::workloads::microbench::{self, MicrobenchConfig};
 
 fn env_u64(name: &str, default: u64) -> u64 {
     std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
@@ -115,6 +118,31 @@ fn scan_replay_on_fabric(elems: u64, fabric: &str) -> RunStats {
         Rc::new(Scan { passes: SCAN_PASSES }),
     );
     e.run(&mut p, &mut StaticMapper::new()).expect("fabric scan run")
+}
+
+/// One non-localised micro-benchmark replay under `protocol`, link and
+/// coherence billing on (the protocol lab's configuration): the directory
+/// protocols force per-line accounting, so this is the path whose cost
+/// BENCH_protocol.json tracks against the fused default.
+fn protocol_replay(elems: u64, protocol: ProtocolSpec) -> RunStats {
+    let mut cfg = EngineConfig::tilepro64(MemConfig {
+        hash_policy: HashPolicy::AllButStack,
+        striping: true,
+    })
+    .with_protocol(protocol);
+    cfg.contention.links = true;
+    cfg.contention.coherence = true;
+    let mut e = Engine::new(cfg);
+    let mut p = microbench::build(
+        &mut e,
+        &MicrobenchConfig {
+            elems,
+            threads: SCAN_THREADS,
+            reps: 4,
+            localised: false,
+        },
+    );
+    e.run(&mut p, &mut StaticMapper::new()).expect("protocol run")
 }
 
 fn main() {
@@ -328,6 +356,54 @@ fn main() {
         .unwrap_or_else(|_| "BENCH_fabric.json".into());
     std::fs::write(&fabric_path, fabric_json.encode()).expect("write BENCH_fabric.json");
     println!("wrote {fabric_path}");
+
+    // --- BENCH_protocol.json: per-protocol replay throughput on the same
+    // micro-benchmark traffic, links + coherence billing on. The default
+    // column runs the fused write-invalidate path (page runs intact); the
+    // directory protocols pay the per-line forcing, which is the overhead
+    // this record tracks per PR.
+    let proto_elems = elems / 8;
+    let mut proto_rows = Vec::new();
+    let mut default_lps = 0.0_f64;
+    for protocol in ProtocolSpec::all() {
+        let stats = protocol_replay(proto_elems, protocol);
+        let t_proto = time_it(0, 2, || {
+            std::hint::black_box(protocol_replay(proto_elems, protocol).makespan_cycles);
+        });
+        let lps = stats.line_accesses as f64 / t_proto.min_s;
+        if protocol.is_default() {
+            default_lps = lps;
+        }
+        println!(
+            "protocol {:>16}: {:>7.1} M lines/s ({:.2}x vs default){}",
+            protocol.label(),
+            lps / 1e6,
+            if default_lps > 0.0 { lps / default_lps } else { 1.0 },
+            if protocol.is_default() { " [fused baseline]" } else { "" }
+        );
+        proto_rows.push(Json::obj(vec![
+            ("protocol", Json::str(protocol.label())),
+            ("min_s", Json::num(t_proto.min_s)),
+            ("lines_per_run", Json::num(stats.line_accesses as f64)),
+            ("lines_per_sec", Json::num(lps)),
+            (
+                "relative_to_default",
+                Json::num(if default_lps > 0.0 { lps / default_lps } else { 1.0 }),
+            ),
+            ("upgrade_hits", Json::num(stats.upgrade_hits as f64)),
+        ]));
+    }
+    let protocol_json = Json::obj(vec![
+        ("bench", Json::str("protocol_replay_throughput")),
+        ("workload", Json::str("microbench non-localised, tilepro64, links+coherence on")),
+        ("elems", Json::num(proto_elems as f64)),
+        ("threads", Json::num(SCAN_THREADS as f64)),
+        ("protocols", Json::arr(proto_rows)),
+    ]);
+    let protocol_path = std::env::var("TILESIM_BENCH_PROTOCOL_OUT")
+        .unwrap_or_else(|_| "BENCH_protocol.json".into());
+    std::fs::write(&protocol_path, protocol_json.encode()).expect("write BENCH_protocol.json");
+    println!("wrote {protocol_path}");
 
     // --- batch pool: full table1 sweep at 1 job vs all cores. The sweep
     // is the unit of work every figure replays, so this is the number the

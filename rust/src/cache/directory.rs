@@ -125,6 +125,16 @@ impl Directory {
         self.slot(line).iter().map(|w| w.count_ones()).sum()
     }
 
+    /// Whether `tile` currently holds a tracked copy of `line` — the
+    /// protocol layer's "was the writer already a sharer" probe (an S→M
+    /// upgrade vs a plain write miss).
+    #[inline]
+    pub fn is_sharer(&self, line: LineId, tile: TileId) -> bool {
+        self.slot(line)
+            .get(tile.index() / 64)
+            .is_some_and(|w| w & (1u64 << (tile.index() % 64)) != 0)
+    }
+
     /// Fast-path write claim: make `writer` the sole sharer of `line` and
     /// return a non-zero value iff there were *other* previous sharers (0
     /// in the common private-stream case — no fan-out, no allocation). On
@@ -274,6 +284,22 @@ mod tests {
         d.add_sharer(LineId(1), TileId(5));
         d.add_sharer(LineId(1), TileId(5));
         assert_eq!(d.sharer_count(LineId(1)), 1);
+    }
+
+    #[test]
+    fn is_sharer_tracks_membership() {
+        let mut d = dir();
+        assert!(!d.is_sharer(LineId(4), TileId(9)));
+        d.add_sharer(LineId(4), TileId(9));
+        assert!(d.is_sharer(LineId(4), TileId(9)));
+        assert!(!d.is_sharer(LineId(4), TileId(10)));
+        d.remove_sharer(LineId(4), TileId(9));
+        assert!(!d.is_sharer(LineId(4), TileId(9)));
+        // Multi-word machines probe the right word.
+        let mut d = dir256();
+        d.add_sharer(LineId(1), TileId(200));
+        assert!(d.is_sharer(LineId(1), TileId(200)));
+        assert!(!d.is_sharer(LineId(1), TileId(72)));
     }
 
     #[test]

@@ -72,6 +72,12 @@ pub struct WriteOutcome {
 pub struct CacheSystem {
     tiles: Vec<TileCaches>,
     pub directory: Directory,
+    /// Dirty-owner map of the ownership protocols (MESI/MOESI): which
+    /// tile holds a line modified without posting it home. Empty under
+    /// the default write-through protocol — the seed's hot path never
+    /// touches it. A `BTreeMap` so range scans (free-time writeback
+    /// billing) iterate in deterministic line order.
+    owners: std::collections::BTreeMap<u64, TileId>,
 }
 
 impl CacheSystem {
@@ -82,6 +88,7 @@ impl CacheSystem {
                 .map(|_| TileCaches::new(&geom))
                 .collect(),
             directory: Directory::new(machine),
+            owners: std::collections::BTreeMap::new(),
         }
     }
 
@@ -259,6 +266,59 @@ impl CacheSystem {
             t.l2.purge_line_range(first, last);
         }
         self.directory.purge_line_range(first, last);
+        if !self.owners.is_empty() {
+            self.owners.retain(|&l, _| l < first.0 || l > last.0);
+        }
+    }
+
+    // ---- protocol-lab hooks (dirty owners + non-invalidating stores) ----
+
+    /// The tile holding `line` dirty (M/O), if any.
+    #[inline]
+    pub fn owner_of(&self, line: LineId) -> Option<TileId> {
+        if self.owners.is_empty() {
+            return None;
+        }
+        self.owners.get(&line.0).copied()
+    }
+
+    /// Record a silent-upgrade write: `tile` now holds `line` modified.
+    pub fn set_owner(&mut self, line: LineId, tile: TileId) {
+        self.owners.insert(line.0, tile);
+    }
+
+    /// Drop the dirty-owner record (writeback, invalidation, purge).
+    pub fn clear_owner(&mut self, line: LineId) -> Option<TileId> {
+        self.owners.remove(&line.0)
+    }
+
+    /// Dirty owners inside `[first, last]`, in line order — the free-time
+    /// writeback set the engine bills before purging a region.
+    pub fn owners_in_range(&self, first: LineId, last: LineId) -> Vec<(LineId, TileId)> {
+        self.owners
+            .range(first.0..=last.0)
+            .map(|(&l, &t)| (LineId(l), t))
+            .collect()
+    }
+
+    /// Make a silently-upgraded line resident in the owner's private
+    /// caches (the dirty data lives with the owner, not the home).
+    pub fn cache_locally(&mut self, tile: TileId, line: LineId) {
+        let tc = &mut self.tiles[tile.index()];
+        tc.l2.insert(line);
+        tc.l1.insert(line);
+    }
+
+    /// Write-update store: home caches the new data and every *other*
+    /// sharer keeps its copy valid (it receives the update in place
+    /// instead of an invalidation). Returns the update fan-out victims —
+    /// the sharers other than the writer — for the engine to bill.
+    pub fn write_update(&mut self, req: TileId, line: LineId, home: TileId) -> Vec<TileId> {
+        self.tiles[home.index()].l2.insert(line);
+        let mut victims = self.directory.sharers_of(line);
+        victims.retain(|&t| t != req);
+        self.directory.add_sharer(line, req);
+        victims
     }
 
     pub fn tile(&self, t: TileId) -> &TileCaches {
@@ -475,6 +535,51 @@ mod tests {
         s.write_run(TileId(1), LineId(0), 2, home, |_, _, v| seen.push(v.to_vec()));
         assert_eq!(seen[0], vec![TileId(2), TileId(3)]);
         assert!(seen[1].is_empty(), "line 1 had no sharers");
+    }
+
+    #[test]
+    fn owner_map_tracks_and_purges() {
+        let mut s = sys();
+        assert_eq!(s.owner_of(LineId(9)), None);
+        s.set_owner(LineId(9), TileId(3));
+        s.set_owner(LineId(11), TileId(4));
+        s.set_owner(LineId(40), TileId(5));
+        assert_eq!(s.owner_of(LineId(9)), Some(TileId(3)));
+        assert_eq!(
+            s.owners_in_range(LineId(0), LineId(20)),
+            vec![(LineId(9), TileId(3)), (LineId(11), TileId(4))]
+        );
+        assert_eq!(s.clear_owner(LineId(9)), Some(TileId(3)));
+        assert_eq!(s.owner_of(LineId(9)), None);
+        // A region free drops the owners it covers, keeps the rest.
+        s.purge_line_range(LineId(0), LineId(20));
+        assert_eq!(s.owner_of(LineId(11)), None);
+        assert_eq!(s.owner_of(LineId(40)), Some(TileId(5)));
+    }
+
+    #[test]
+    fn cache_locally_makes_the_line_a_local_hit() {
+        let mut s = sys();
+        let home = TileId(9);
+        s.cache_locally(TileId(1), LineId(6));
+        assert_eq!(s.read(TileId(1), LineId(6), home), ReadPlace::L1);
+    }
+
+    #[test]
+    fn write_update_keeps_sharers_valid() {
+        let mut s = sys();
+        let home = TileId(4);
+        s.read(TileId(2), LineId(0), home);
+        s.read(TileId(3), LineId(0), home);
+        let victims = s.write_update(TileId(1), LineId(0), home);
+        assert_eq!(victims, vec![TileId(2), TileId(3)]);
+        // Unlike write-invalidate, the sharers' copies survive: tile 2
+        // still hits its L1, and the writer joined the sharer set.
+        assert_eq!(s.read(TileId(2), LineId(0), home), ReadPlace::L1);
+        assert!(s.directory.is_sharer(LineId(0), TileId(1)));
+        // A second update from the same writer excludes itself.
+        let victims = s.write_update(TileId(1), LineId(0), home);
+        assert_eq!(victims, vec![TileId(2), TileId(3)]);
     }
 
     #[test]

@@ -1,0 +1,795 @@
+//! Pluggable directory coherence protocols (the protocol lab).
+//!
+//! The paper's localisation argument is really an argument about *coherence
+//! traffic*: how the home-tile directory turns a sharing pattern into mesh
+//! packets. The seed hard-coded one answer — the TILEPro64's write-through
+//! write-invalidate DDC — inside `cache/directory.rs`. This module factors
+//! the protocol out into a [`Protocol`] state machine so the same workloads
+//! can replay under different answers:
+//!
+//! | spec | behaviour |
+//! |------|-----------|
+//! | `write-invalidate` | the seed's posted write-through + sharer invalidation (default; pinned baselines replay byte-identically) |
+//! | `msi` | write-invalidate + an explicit S→M ownership upgrade round trip when a sole sharer re-writes a remotely-homed line |
+//! | `mesi` | ownership retained: that same sole-sharer re-write is a *silent* E→M upgrade (no mesh traffic); a later foreign read pays the owner→home writeback |
+//! | `moesi` | mesi + owner forwarding: foreign reads are served owner→reader directly (O state), skipping the home writeback |
+//! | `write-update` | stores stream data-sized updates to every other sharer instead of invalidating them |
+//! | `opaque[@seed]` | write-invalidate behind a seeded permutation of every home tile (opaque home mapping, after arXiv:2011.05422) |
+//!
+//! A transition ([`Protocol::on_read`] / [`on_write`](Protocol::on_write) /
+//! [`on_evict`](Protocol::on_evict)) receives a [`LineCtx`] snapshot of the
+//! directory's view of one line and returns the typed
+//! [`CoherenceAction`]s the engine must bill on the mesh via the existing
+//! `ContentionModel` traffic classes. Transitions are *pure*: all state
+//! lives in the directory sharer sets and the cache layer's dirty-owner
+//! map, so the conformance suite can drive every protocol through every
+//! ctx shape without an engine.
+//!
+//! **Engagement contract:** when coherence-link billing is off
+//! (`ContentionConfig::coherence` or `links` cleared — including every
+//! pinned tilepro64 paper baseline), every transition returns no actions
+//! and the engine keeps the seed's fused write-invalidate path. Protocol
+//! semantics only diverge where their traffic can be billed.
+
+use crate::arch::TileId;
+use crate::util::rng::Rng;
+
+/// Seed used by `opaque` when none is given (the repo-wide default seed).
+pub const DEFAULT_OPAQUE_SEED: u64 = 2014;
+
+/// Which protocol family a [`ProtocolSpec`] selects.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProtocolKind {
+    /// The seed's posted write-through write-invalidate DDC (default).
+    WriteInvalidate,
+    /// Explicit S→M upgrade round trips; home always current.
+    Msi,
+    /// Silent E→M upgrades; dirty owner writes back on foreign read.
+    Mesi,
+    /// Mesi + owner-sourced data replies (O state).
+    Moesi,
+    /// Data-sized update fan-out to sharers instead of invalidation.
+    WriteUpdate,
+    /// Write-invalidate behind a seeded home-tile permutation.
+    Opaque,
+}
+
+/// Parsed `--protocol` selection: a protocol kind plus the opaque
+/// variant's permutation seed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ProtocolSpec {
+    pub kind: ProtocolKind,
+    /// Home-permutation seed; only meaningful when `kind == Opaque`.
+    pub opaque_seed: u64,
+}
+
+impl Default for ProtocolSpec {
+    fn default() -> Self {
+        ProtocolSpec {
+            kind: ProtocolKind::WriteInvalidate,
+            opaque_seed: DEFAULT_OPAQUE_SEED,
+        }
+    }
+}
+
+impl ProtocolSpec {
+    pub fn new(kind: ProtocolKind) -> Self {
+        ProtocolSpec {
+            kind,
+            ..Default::default()
+        }
+    }
+
+    /// Parse a `--protocol` value: `write-invalidate` (alias `wi`), `msi`,
+    /// `mesi`, `moesi`, `write-update` (alias `wu`), `opaque`,
+    /// `opaque@<seed>`.
+    pub fn parse(s: &str) -> Result<ProtocolSpec, String> {
+        let lower = s.to_ascii_lowercase();
+        let kind = match lower.as_str() {
+            "write-invalidate" | "wi" => ProtocolKind::WriteInvalidate,
+            "msi" => ProtocolKind::Msi,
+            "mesi" => ProtocolKind::Mesi,
+            "moesi" => ProtocolKind::Moesi,
+            "write-update" | "wu" => ProtocolKind::WriteUpdate,
+            "opaque" => ProtocolKind::Opaque,
+            _ => {
+                if let Some(seed) = lower.strip_prefix("opaque@") {
+                    let seed: u64 = seed
+                        .parse()
+                        .map_err(|_| format!("bad opaque seed in protocol spec: {s}"))?;
+                    return Ok(ProtocolSpec {
+                        kind: ProtocolKind::Opaque,
+                        opaque_seed: seed,
+                    });
+                }
+                return Err(format!(
+                    "unknown protocol: {s} (expected write-invalidate|msi|mesi|moesi|write-update|opaque[@seed])"
+                ));
+            }
+        };
+        Ok(ProtocolSpec::new(kind))
+    }
+
+    /// Stable label used in run labels, JSON, and report columns.
+    pub fn label(&self) -> String {
+        match self.kind {
+            ProtocolKind::WriteInvalidate => "write-invalidate".to_string(),
+            ProtocolKind::Msi => "msi".to_string(),
+            ProtocolKind::Mesi => "mesi".to_string(),
+            ProtocolKind::Moesi => "moesi".to_string(),
+            ProtocolKind::WriteUpdate => "write-update".to_string(),
+            ProtocolKind::Opaque => {
+                if self.opaque_seed == DEFAULT_OPAQUE_SEED {
+                    "opaque".to_string()
+                } else {
+                    format!("opaque@{}", self.opaque_seed)
+                }
+            }
+        }
+    }
+
+    /// The default (seed-equivalent) protocol: run labels and JSON omit it
+    /// so every pinned record keeps its bytes.
+    pub fn is_default(&self) -> bool {
+        self.kind == ProtocolKind::WriteInvalidate
+    }
+
+    /// Whether runs under this spec permute home tiles.
+    pub fn permutes_homes(&self) -> bool {
+        self.kind == ProtocolKind::Opaque
+    }
+
+    /// Every protocol the lab sweeps, in report-column order (ties in a
+    /// winner scan break towards the earlier entry, so the seed protocol
+    /// leads).
+    pub fn all() -> Vec<ProtocolSpec> {
+        [
+            ProtocolKind::WriteInvalidate,
+            ProtocolKind::Msi,
+            ProtocolKind::Mesi,
+            ProtocolKind::Moesi,
+            ProtocolKind::WriteUpdate,
+            ProtocolKind::Opaque,
+        ]
+        .into_iter()
+        .map(ProtocolSpec::new)
+        .collect()
+    }
+
+    /// Instantiate the transition state machine for this spec (`Opaque`
+    /// shares write-invalidate transitions; its home permutation is
+    /// applied by the engine, not the state machine).
+    pub fn build(&self) -> Box<dyn Protocol> {
+        match self.kind {
+            ProtocolKind::WriteInvalidate | ProtocolKind::Opaque => Box::new(WriteInvalidate),
+            ProtocolKind::Msi => Box::new(Msi),
+            ProtocolKind::Mesi => Box::new(Mesi),
+            ProtocolKind::Moesi => Box::new(Moesi),
+            ProtocolKind::WriteUpdate => Box::new(WriteUpdate),
+        }
+    }
+}
+
+/// Per-line protocol state as seen by one tile (the classic MOESI
+/// lattice; protocols use the subset they define).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LineState {
+    Invalid,
+    Shared,
+    Exclusive,
+    Modified,
+    Owned,
+}
+
+/// The directory's view of one line at transition time. `others` and
+/// `was_sharer` come from the sharer bitmask, `owner` from the cache
+/// layer's dirty-owner map, `links_on` from
+/// `ContentionModel::coherence_enabled()`.
+#[derive(Clone, Copy, Debug)]
+pub struct LineCtx {
+    /// Tile performing the access.
+    pub requestor: TileId,
+    /// The line's (possibly permuted) home tile.
+    pub home: TileId,
+    /// Sharers other than the requestor.
+    pub others: u32,
+    /// Requestor already in the sharer set.
+    pub was_sharer: bool,
+    /// Current dirty owner, if any tile holds the line M/O.
+    pub owner: Option<TileId>,
+    /// Coherence-link billing active; when false every transition is ∅.
+    pub links_on: bool,
+}
+
+impl LineCtx {
+    fn foreign_owner(&self) -> Option<TileId> {
+        self.owner.filter(|&o| o != self.requestor)
+    }
+}
+
+/// One mesh-billable consequence of a transition. The engine maps each
+/// action onto the `ContentionModel` traffic class it occupies.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CoherenceAction {
+    /// Posted write-through of the store data to the home tile
+    /// (request-class route + home port + ack reply).
+    PostToHome,
+    /// Header-only ownership-upgrade round trip requestor↔home
+    /// (invalidation class; MSI S→M).
+    UpgradeRoundTrip,
+    /// Silent in-cache E→M upgrade: no mesh traffic; the requestor
+    /// becomes the line's dirty owner (MESI/MOESI).
+    SilentUpgrade,
+    /// Home invalidates every other sharer and collects their acks
+    /// (invalidation class).
+    InvalidateFanout,
+    /// Home streams the store data to every other sharer and collects
+    /// acks (write-update; data-sized packets on the invalidation-route
+    /// class).
+    UpdateFanout,
+    /// Home serves the line to the requestor (reply class).
+    DataReplyFromHome,
+    /// The dirty owner flushes the line to home before home acts on it
+    /// (reply class, owner→home).
+    WritebackToHome { owner: TileId },
+    /// The dirty owner streams the line straight to the requestor
+    /// (reply class, owner→requestor; MOESI O-state serve).
+    OwnerReply { owner: TileId },
+    /// A bare acknowledgement completing a round trip.
+    Ack,
+}
+
+/// A directory coherence protocol as a pure per-line state machine.
+///
+/// Implementations must uphold three invariants (pinned by the
+/// conformance suite in `rust/tests/protocol_conformance.rs`):
+///
+/// 1. **links off ⇒ no actions** — every transition returns an empty
+///    vector when `ctx.links_on` is false;
+/// 2. **single writer** — a write that leaves another tile's copy valid
+///    must either invalidate it ([`CoherenceAction::InvalidateFanout`])
+///    or update it ([`CoherenceAction::UpdateFanout`]);
+/// 3. **no stale reads** — a read of a line with a foreign dirty owner
+///    must source current data ([`CoherenceAction::WritebackToHome`] or
+///    [`CoherenceAction::OwnerReply`]).
+pub trait Protocol {
+    fn kind(&self) -> ProtocolKind;
+
+    /// The requestor's state for a line in ctx (classification only; no
+    /// transition).
+    fn line_state(&self, ctx: &LineCtx) -> LineState;
+
+    /// Transition for a load by `ctx.requestor`.
+    fn on_read(&self, ctx: &LineCtx) -> Vec<CoherenceAction>;
+
+    /// Transition for a store by `ctx.requestor`.
+    fn on_write(&self, ctx: &LineCtx) -> Vec<CoherenceAction>;
+
+    /// Transition for the requestor dropping its copy (purge/free).
+    fn on_evict(&self, ctx: &LineCtx) -> Vec<CoherenceAction>;
+}
+
+/// Shared write transition of the invalidation-family protocols.
+///
+/// `silent_sole`: a sole-sharer re-write of a remotely-homed line
+/// upgrades in place (MESI/MOESI) instead of posting through.
+/// `msi_upgrade`: the same re-write stays a posted write but pays an
+/// explicit ownership round trip (MSI).
+/// `owner_forward`: a foreign dirty owner streams to the writer (MOESI)
+/// instead of flushing home (MESI).
+fn invalidating_write(
+    ctx: &LineCtx,
+    silent_sole: bool,
+    msi_upgrade: bool,
+    owner_forward: bool,
+) -> Vec<CoherenceAction> {
+    if !ctx.links_on {
+        return Vec::new();
+    }
+    let mut a = Vec::new();
+    let sole_rewrite = ctx.others == 0 && (ctx.was_sharer || ctx.owner == Some(ctx.requestor));
+    if ctx.home != ctx.requestor && sole_rewrite {
+        if silent_sole {
+            a.push(CoherenceAction::SilentUpgrade);
+            return a;
+        }
+        if msi_upgrade {
+            a.push(CoherenceAction::UpgradeRoundTrip);
+        }
+    }
+    if let Some(o) = ctx.foreign_owner() {
+        a.push(if owner_forward {
+            CoherenceAction::OwnerReply { owner: o }
+        } else {
+            CoherenceAction::WritebackToHome { owner: o }
+        });
+    }
+    if ctx.home != ctx.requestor {
+        a.push(CoherenceAction::PostToHome);
+    }
+    if ctx.others > 0 {
+        a.push(CoherenceAction::InvalidateFanout);
+        a.push(CoherenceAction::Ack);
+    }
+    a
+}
+
+/// Shared read transition: foreign dirty owners are flushed (or forward
+/// the data), then home serves remotely-homed lines.
+fn serve_read(ctx: &LineCtx, owner_forward: bool) -> Vec<CoherenceAction> {
+    if !ctx.links_on {
+        return Vec::new();
+    }
+    let mut a = Vec::new();
+    if let Some(o) = ctx.foreign_owner() {
+        if owner_forward {
+            a.push(CoherenceAction::OwnerReply { owner: o });
+            return a;
+        }
+        a.push(CoherenceAction::WritebackToHome { owner: o });
+    }
+    if ctx.home != ctx.requestor {
+        a.push(CoherenceAction::DataReplyFromHome);
+    }
+    a
+}
+
+/// Eviction: only a dirty owner has anything to flush.
+fn evict_dirty(ctx: &LineCtx) -> Vec<CoherenceAction> {
+    if ctx.links_on && ctx.owner == Some(ctx.requestor) {
+        vec![CoherenceAction::WritebackToHome {
+            owner: ctx.requestor,
+        }]
+    } else {
+        Vec::new()
+    }
+}
+
+fn shared_or_invalid(ctx: &LineCtx) -> LineState {
+    if ctx.was_sharer {
+        LineState::Shared
+    } else {
+        LineState::Invalid
+    }
+}
+
+/// The seed's protocol: posted write-through stores, home always
+/// current, every other sharer invalidated on write. Never sets owners.
+pub struct WriteInvalidate;
+
+impl Protocol for WriteInvalidate {
+    fn kind(&self) -> ProtocolKind {
+        ProtocolKind::WriteInvalidate
+    }
+    fn line_state(&self, ctx: &LineCtx) -> LineState {
+        shared_or_invalid(ctx)
+    }
+    fn on_read(&self, ctx: &LineCtx) -> Vec<CoherenceAction> {
+        serve_read(ctx, false)
+    }
+    fn on_write(&self, ctx: &LineCtx) -> Vec<CoherenceAction> {
+        invalidating_write(ctx, false, false, false)
+    }
+    fn on_evict(&self, ctx: &LineCtx) -> Vec<CoherenceAction> {
+        evict_dirty(ctx)
+    }
+}
+
+/// Write-invalidate + explicit S→M upgrades: a sole sharer re-writing a
+/// remotely-homed line pays a header round trip to reclaim ownership
+/// before the posted write. Home stays current, so no owners either.
+pub struct Msi;
+
+impl Protocol for Msi {
+    fn kind(&self) -> ProtocolKind {
+        ProtocolKind::Msi
+    }
+    fn line_state(&self, ctx: &LineCtx) -> LineState {
+        if ctx.owner == Some(ctx.requestor) {
+            LineState::Modified
+        } else {
+            shared_or_invalid(ctx)
+        }
+    }
+    fn on_read(&self, ctx: &LineCtx) -> Vec<CoherenceAction> {
+        serve_read(ctx, false)
+    }
+    fn on_write(&self, ctx: &LineCtx) -> Vec<CoherenceAction> {
+        invalidating_write(ctx, false, true, false)
+    }
+    fn on_evict(&self, ctx: &LineCtx) -> Vec<CoherenceAction> {
+        evict_dirty(ctx)
+    }
+}
+
+/// Ownership retained: the sole-sharer re-write is silent (E→M), the
+/// home copy goes stale, and a foreign read pays the owner→home
+/// writeback before home serves it.
+pub struct Mesi;
+
+impl Mesi {
+    fn classify(ctx: &LineCtx) -> LineState {
+        if ctx.owner == Some(ctx.requestor) {
+            LineState::Modified
+        } else if ctx.was_sharer && ctx.others == 0 {
+            LineState::Exclusive
+        } else {
+            shared_or_invalid(ctx)
+        }
+    }
+}
+
+impl Protocol for Mesi {
+    fn kind(&self) -> ProtocolKind {
+        ProtocolKind::Mesi
+    }
+    fn line_state(&self, ctx: &LineCtx) -> LineState {
+        Mesi::classify(ctx)
+    }
+    fn on_read(&self, ctx: &LineCtx) -> Vec<CoherenceAction> {
+        serve_read(ctx, false)
+    }
+    fn on_write(&self, ctx: &LineCtx) -> Vec<CoherenceAction> {
+        invalidating_write(ctx, true, false, false)
+    }
+    fn on_evict(&self, ctx: &LineCtx) -> Vec<CoherenceAction> {
+        evict_dirty(ctx)
+    }
+}
+
+/// Mesi + the O state: a foreign read is served owner→reader directly
+/// and the owner keeps the dirty line (no home writeback until the
+/// owner is invalidated or evicted).
+pub struct Moesi;
+
+impl Protocol for Moesi {
+    fn kind(&self) -> ProtocolKind {
+        ProtocolKind::Moesi
+    }
+    fn line_state(&self, ctx: &LineCtx) -> LineState {
+        if ctx.owner == Some(ctx.requestor) && ctx.others > 0 {
+            LineState::Owned
+        } else {
+            Mesi::classify(ctx)
+        }
+    }
+    fn on_read(&self, ctx: &LineCtx) -> Vec<CoherenceAction> {
+        serve_read(ctx, true)
+    }
+    fn on_write(&self, ctx: &LineCtx) -> Vec<CoherenceAction> {
+        invalidating_write(ctx, true, false, true)
+    }
+    fn on_evict(&self, ctx: &LineCtx) -> Vec<CoherenceAction> {
+        evict_dirty(ctx)
+    }
+}
+
+/// Stores post through to home as usual, but other sharers receive
+/// data-sized updates instead of invalidations — their copies stay
+/// valid, so re-reads hit locally at the price of fan-out bandwidth.
+pub struct WriteUpdate;
+
+impl Protocol for WriteUpdate {
+    fn kind(&self) -> ProtocolKind {
+        ProtocolKind::WriteUpdate
+    }
+    fn line_state(&self, ctx: &LineCtx) -> LineState {
+        shared_or_invalid(ctx)
+    }
+    fn on_read(&self, ctx: &LineCtx) -> Vec<CoherenceAction> {
+        serve_read(ctx, false)
+    }
+    fn on_write(&self, ctx: &LineCtx) -> Vec<CoherenceAction> {
+        if !ctx.links_on {
+            return Vec::new();
+        }
+        let mut a = Vec::new();
+        if ctx.home != ctx.requestor {
+            a.push(CoherenceAction::PostToHome);
+        }
+        if ctx.others > 0 {
+            a.push(CoherenceAction::UpdateFanout);
+        }
+        a
+    }
+    fn on_evict(&self, ctx: &LineCtx) -> Vec<CoherenceAction> {
+        evict_dirty(ctx)
+    }
+}
+
+/// Seeded Fisher–Yates permutation of home tiles (the `opaque` mode):
+/// every resolved home `t` is remapped to `perm[t]`, modelling a home
+/// mapping the programmer cannot predict (arXiv:2011.05422). Permuting
+/// a page-uniform home keeps it page-uniform, so the engine's page-run
+/// fast path stays valid.
+pub struct HomePermutation {
+    map: Vec<u32>,
+}
+
+impl HomePermutation {
+    pub fn new(seed: u64, num_tiles: u32) -> Self {
+        let mut map: Vec<u32> = (0..num_tiles).collect();
+        // Domain-separated from workload/scheduler streams on the same seed.
+        let mut rng = Rng::new(seed ^ 0x6F70_6171_7565_u64);
+        rng.shuffle(&mut map);
+        HomePermutation { map }
+    }
+
+    #[inline]
+    pub fn map(&self, t: TileId) -> TileId {
+        TileId(self.map[t.index()])
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(
+        requestor: u32,
+        home: u32,
+        others: u32,
+        was_sharer: bool,
+        owner: Option<u32>,
+        links_on: bool,
+    ) -> LineCtx {
+        LineCtx {
+            requestor: TileId(requestor),
+            home: TileId(home),
+            others,
+            was_sharer,
+            owner: owner.map(TileId),
+            links_on,
+        }
+    }
+
+    fn protos() -> Vec<Box<dyn Protocol>> {
+        ProtocolSpec::all().iter().map(|s| s.build()).collect()
+    }
+
+    #[test]
+    fn parse_and_label_round_trip() {
+        for s in ProtocolSpec::all() {
+            assert_eq!(ProtocolSpec::parse(&s.label()).unwrap(), s);
+        }
+        assert_eq!(
+            ProtocolSpec::parse("opaque@7").unwrap(),
+            ProtocolSpec {
+                kind: ProtocolKind::Opaque,
+                opaque_seed: 7
+            }
+        );
+        assert_eq!(ProtocolSpec::parse("opaque@7").unwrap().label(), "opaque@7");
+        assert_eq!(ProtocolSpec::parse("WI").unwrap().kind, ProtocolKind::WriteInvalidate);
+        assert_eq!(ProtocolSpec::parse("wu").unwrap().kind, ProtocolKind::WriteUpdate);
+        assert!(ProtocolSpec::parse("mosi").is_err());
+        assert!(ProtocolSpec::parse("opaque@x").is_err());
+        assert!(ProtocolSpec::default().is_default());
+        assert!(!ProtocolSpec::new(ProtocolKind::Mesi).is_default());
+    }
+
+    #[test]
+    fn links_off_means_no_actions_for_every_protocol() {
+        // The conformance gate: with coherence billing off, every
+        // transition of every protocol is a no-op, whatever the ctx.
+        let shapes = [
+            ctx(1, 0, 0, false, None, false),
+            ctx(1, 0, 3, true, None, false),
+            ctx(1, 0, 2, true, Some(5), false),
+            ctx(0, 0, 1, true, Some(1), false),
+        ];
+        for p in protos() {
+            for c in &shapes {
+                assert!(p.on_read(c).is_empty(), "{:?} read", p.kind());
+                assert!(p.on_write(c).is_empty(), "{:?} write", p.kind());
+                assert!(p.on_evict(c).is_empty(), "{:?} evict", p.kind());
+            }
+        }
+    }
+
+    #[test]
+    fn single_writer_every_other_copy_invalidated_or_updated() {
+        // A write with other sharers must leave no stale copy behind:
+        // invalidation-family protocols fan out invalidations,
+        // write-update fans out the new data.
+        let c = ctx(1, 0, 3, true, None, true);
+        for p in protos() {
+            let a = p.on_write(&c);
+            let handled = a.contains(&CoherenceAction::InvalidateFanout)
+                || a.contains(&CoherenceAction::UpdateFanout);
+            assert!(handled, "{:?} leaves stale sharers: {a:?}", p.kind());
+            if p.kind() == ProtocolKind::WriteUpdate {
+                assert!(!a.contains(&CoherenceAction::InvalidateFanout));
+            }
+        }
+    }
+
+    #[test]
+    fn no_stale_reads_foreign_owner_always_sources_data() {
+        // Reading a line some other tile holds dirty must surface that
+        // tile's data: MESI flushes it home, MOESI forwards it.
+        let c = ctx(2, 0, 1, false, Some(5), true);
+        for p in protos() {
+            let a = p.on_read(&c);
+            let sourced = a.iter().any(|x| {
+                matches!(
+                    x,
+                    CoherenceAction::WritebackToHome { owner } | CoherenceAction::OwnerReply { owner }
+                    if *owner == TileId(5)
+                )
+            });
+            assert!(sourced, "{:?} reads stale data: {a:?}", p.kind());
+        }
+    }
+
+    #[test]
+    fn only_silent_protocols_create_owners() {
+        // SilentUpgrade is the sole owner-creating action; WI/MSI/WU keep
+        // home current on every write, so their reads never need a flush.
+        let sole_rewrite = ctx(3, 0, 0, true, None, true);
+        for p in protos() {
+            let silent = p
+                .on_write(&sole_rewrite)
+                .contains(&CoherenceAction::SilentUpgrade);
+            let expects = matches!(p.kind(), ProtocolKind::Mesi | ProtocolKind::Moesi);
+            assert_eq!(silent, expects, "{:?}", p.kind());
+        }
+    }
+
+    #[test]
+    fn sole_sharer_rewrite_ladder() {
+        // The microbench re-write case (out_part written every rep):
+        // WI posts; MSI posts + pays an upgrade; MESI/MOESI go silent.
+        let c = ctx(3, 0, 0, true, None, true);
+        assert_eq!(
+            WriteInvalidate.on_write(&c),
+            vec![CoherenceAction::PostToHome]
+        );
+        assert_eq!(
+            Msi.on_write(&c),
+            vec![CoherenceAction::UpgradeRoundTrip, CoherenceAction::PostToHome]
+        );
+        assert_eq!(Mesi.on_write(&c), vec![CoherenceAction::SilentUpgrade]);
+        assert_eq!(Moesi.on_write(&c), vec![CoherenceAction::SilentUpgrade]);
+        assert_eq!(WriteUpdate.on_write(&c), vec![CoherenceAction::PostToHome]);
+    }
+
+    #[test]
+    fn locally_homed_writes_never_upgrade_or_go_silent() {
+        // home == requestor: the "remote post" never happens, so neither
+        // do its optimisations — only the fan-out when sharers exist.
+        let c = ctx(0, 0, 2, true, None, true);
+        for p in protos() {
+            let a = p.on_write(&c);
+            assert!(!a.contains(&CoherenceAction::SilentUpgrade), "{:?}", p.kind());
+            assert!(!a.contains(&CoherenceAction::UpgradeRoundTrip), "{:?}", p.kind());
+            assert!(!a.contains(&CoherenceAction::PostToHome), "{:?}", p.kind());
+        }
+        let sole = ctx(0, 0, 0, true, None, true);
+        for p in protos() {
+            assert!(p.on_write(&sole).is_empty(), "{:?}", p.kind());
+        }
+    }
+
+    #[test]
+    fn moesi_forwards_where_mesi_flushes() {
+        let c = ctx(2, 0, 1, false, Some(5), true);
+        assert_eq!(
+            Mesi.on_read(&c),
+            vec![
+                CoherenceAction::WritebackToHome { owner: TileId(5) },
+                CoherenceAction::DataReplyFromHome
+            ]
+        );
+        assert_eq!(
+            Moesi.on_read(&c),
+            vec![CoherenceAction::OwnerReply { owner: TileId(5) }]
+        );
+    }
+
+    #[test]
+    fn write_over_foreign_owner_flushes_then_invalidates() {
+        let c = ctx(2, 0, 1, false, Some(5), true);
+        let a = Mesi.on_write(&c);
+        assert_eq!(
+            a,
+            vec![
+                CoherenceAction::WritebackToHome { owner: TileId(5) },
+                CoherenceAction::PostToHome,
+                CoherenceAction::InvalidateFanout,
+                CoherenceAction::Ack,
+            ]
+        );
+        let a = Moesi.on_write(&c);
+        assert_eq!(a[0], CoherenceAction::OwnerReply { owner: TileId(5) });
+    }
+
+    #[test]
+    fn update_fanout_only_with_sharers() {
+        let none = ctx(2, 0, 0, false, None, true);
+        assert_eq!(WriteUpdate.on_write(&none), vec![CoherenceAction::PostToHome]);
+        let some = ctx(2, 0, 4, true, None, true);
+        assert_eq!(
+            WriteUpdate.on_write(&some),
+            vec![CoherenceAction::PostToHome, CoherenceAction::UpdateFanout]
+        );
+    }
+
+    #[test]
+    fn eviction_flushes_only_dirty_owners() {
+        let dirty = ctx(5, 0, 0, true, Some(5), true);
+        let clean = ctx(5, 0, 0, true, None, true);
+        for p in protos() {
+            assert_eq!(
+                p.on_evict(&dirty),
+                vec![CoherenceAction::WritebackToHome { owner: TileId(5) }],
+                "{:?}",
+                p.kind()
+            );
+            assert!(p.on_evict(&clean).is_empty(), "{:?}", p.kind());
+        }
+    }
+
+    #[test]
+    fn line_states_classify_the_lattice() {
+        let invalid = ctx(1, 0, 2, false, None, true);
+        let shared = ctx(1, 0, 2, true, None, true);
+        let exclusive = ctx(1, 0, 0, true, None, true);
+        let modified = ctx(1, 0, 0, true, Some(1), true);
+        let owned = ctx(1, 0, 2, true, Some(1), true);
+        assert_eq!(Mesi.line_state(&invalid), LineState::Invalid);
+        assert_eq!(Mesi.line_state(&shared), LineState::Shared);
+        assert_eq!(Mesi.line_state(&exclusive), LineState::Exclusive);
+        assert_eq!(Mesi.line_state(&modified), LineState::Modified);
+        assert_eq!(Moesi.line_state(&owned), LineState::Owned);
+        assert_eq!(Moesi.line_state(&modified), LineState::Modified);
+        // MSI has no E: a sole clean sharer is still just Shared.
+        assert_eq!(Msi.line_state(&exclusive), LineState::Shared);
+        assert_eq!(Msi.line_state(&modified), LineState::Modified);
+        assert_eq!(WriteInvalidate.line_state(&exclusive), LineState::Shared);
+        assert_eq!(WriteUpdate.line_state(&invalid), LineState::Invalid);
+    }
+
+    #[test]
+    fn home_permutation_is_a_seeded_bijection() {
+        let p = HomePermutation::new(2014, 64);
+        assert_eq!(p.len(), 64);
+        let mut seen: Vec<u32> = (0..64).map(|t| p.map(TileId(t)).0).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..64).collect::<Vec<_>>());
+        // Deterministic per seed, different across seeds.
+        let q = HomePermutation::new(2014, 64);
+        assert!((0..64).all(|t| p.map(TileId(t)) == q.map(TileId(t))));
+        let r = HomePermutation::new(7, 64);
+        assert!((0..64).any(|t| p.map(TileId(t)) != r.map(TileId(t))));
+        // Actually permutes (not the identity) on every lab grid size.
+        for tiles in [16u32, 64, 256] {
+            let p = HomePermutation::new(2014, tiles);
+            assert!(
+                (0..tiles).any(|t| p.map(TileId(t)).0 != t),
+                "identity permutation on {tiles} tiles"
+            );
+        }
+    }
+
+    #[test]
+    fn spec_build_matches_kind() {
+        for s in ProtocolSpec::all() {
+            let built = s.build().kind();
+            if s.kind == ProtocolKind::Opaque {
+                // Opaque shares write-invalidate transitions.
+                assert_eq!(built, ProtocolKind::WriteInvalidate);
+            } else {
+                assert_eq!(built, s.kind);
+            }
+        }
+    }
+}

@@ -15,6 +15,7 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::arch::{FabricSpec, MachineSpec};
+use crate::coherence::ProtocolSpec;
 use crate::coordinator::cases::case;
 use crate::harness::SweepTable;
 use crate::sim::{Engine, RunStats};
@@ -48,7 +49,13 @@ impl Workload {
 
 /// One fully-specified simulator run. Everything the engine needs is here;
 /// two equal specs always replay to identical [`RunStats`].
+///
+/// Build specs with [`RunSpec::new`] (or a convenience constructor like
+/// [`RunSpec::mergesort`]) plus the `with_*`/`on_machine` builders — the
+/// struct is `#[non_exhaustive]`, so out-of-crate literals won't compile
+/// and new axes (like `protocol`) can land without breaking callers.
 #[derive(Clone, Debug)]
+#[non_exhaustive]
 pub struct RunSpec {
     /// Table 1 case id (1..=8) — picks mapper, hash policy, and whether the
     /// localised programming style applies.
@@ -75,18 +82,23 @@ pub struct RunSpec {
     /// uniform fabric and `EdgesEven` controllers untouched, keeping the
     /// pinned figure JSON byte-identical.
     pub fabric: Option<FabricSpec>,
+    /// Coherence protocol driven by the engine's protocol lab
+    /// ([`crate::coherence`]). Default (`write-invalidate`) replays the
+    /// fused directory path byte-identically and is omitted from labels
+    /// and JSON.
+    pub protocol: ProtocolSpec,
     pub seed: u64,
 }
 
 impl RunSpec {
-    /// Convenience: merge sort for `case_id` with the case's own variant,
-    /// on the paper-baseline tilepro64.
-    pub fn mergesort(case_id: u8, elems: u64, threads: usize, seed: u64) -> RunSpec {
+    /// The base spec: `workload` under Table-1 `case_id` on the
+    /// paper-baseline tilepro64 (striping and caches on, link contention
+    /// off, default protocol). Layer deviations on with the `with_*`
+    /// builders.
+    pub fn new(case_id: u8, workload: Workload, elems: u64, threads: usize, seed: u64) -> RunSpec {
         RunSpec {
             case_id,
-            workload: Workload::Mergesort {
-                variant: case(case_id).mergesort_variant(),
-            },
+            workload,
             elems,
             threads,
             striping: true,
@@ -95,8 +107,61 @@ impl RunSpec {
             link_contention: false,
             coherence_links: false,
             fabric: None,
+            protocol: ProtocolSpec::default(),
             seed,
         }
+    }
+
+    /// Convenience: merge sort for `case_id` with the case's own variant,
+    /// on the paper-baseline tilepro64.
+    pub fn mergesort(case_id: u8, elems: u64, threads: usize, seed: u64) -> RunSpec {
+        RunSpec::new(
+            case_id,
+            Workload::Mergesort {
+                variant: case(case_id).mergesort_variant(),
+            },
+            elems,
+            threads,
+            seed,
+        )
+    }
+
+    /// Fig. 3's striping axis.
+    pub fn with_striping(mut self, striping: bool) -> RunSpec {
+        self.striping = striping;
+        self
+    }
+
+    /// Fig. 4's cache-off ablation.
+    pub fn without_caches(mut self) -> RunSpec {
+        self.caches = false;
+        self
+    }
+
+    /// Re-aim the run at `machine` with link/coherence billing chosen.
+    pub fn on_machine(
+        mut self,
+        machine: MachineSpec,
+        link_contention: bool,
+        coherence_links: bool,
+    ) -> RunSpec {
+        self.machine = machine;
+        self.link_contention = link_contention;
+        self.coherence_links = coherence_links;
+        self
+    }
+
+    /// Apply a heterogeneous fabric on top of the machine (`None` is the
+    /// uniform baseline).
+    pub fn with_fabric(mut self, fabric: Option<FabricSpec>) -> RunSpec {
+        self.fabric = fabric;
+        self
+    }
+
+    /// Select the coherence protocol (`--protocol`).
+    pub fn with_protocol(mut self, protocol: ProtocolSpec) -> RunSpec {
+        self.protocol = protocol;
+        self
     }
 
     /// Whether this run deviates from the paper-baseline machine model
@@ -144,8 +209,13 @@ impl RunSpec {
         } else {
             String::new()
         };
+        let protocol = if self.protocol.is_default() {
+            String::new()
+        } else {
+            format!(" proto={}", self.protocol.label())
+        };
         format!(
-            "case{} {} n={} t={}{}{}{} s={}",
+            "case{} {} n={} t={}{}{}{}{} s={}",
             self.case_id,
             self.workload.label(),
             self.elems,
@@ -153,6 +223,7 @@ impl RunSpec {
             if self.striping { "" } else { " nostripe" },
             if self.caches { "" } else { " nocache" },
             machine,
+            protocol,
             self.seed
         )
     }
@@ -163,6 +234,7 @@ impl RunSpec {
         let machine = self.build_machine();
         let mut cfg = c.engine_config_on(machine.clone(), self.striping, self.link_contention);
         cfg.contention.coherence = self.coherence_links;
+        cfg = cfg.with_protocol(self.protocol);
         if !self.caches {
             cfg = cfg.without_caches();
         }
@@ -237,6 +309,12 @@ impl RunSpec {
             if let Some(f) = &self.fabric {
                 fields.push(("fabric", Json::str(f.label())));
             }
+        }
+        // Same deviation gate for the protocol lab: the default
+        // write-invalidate protocol never appears, so every pre-protocol
+        // record keeps its bytes.
+        if !self.protocol.is_default() {
+            fields.push(("protocol", Json::str(self.protocol.label())));
         }
         Json::obj(fields)
     }
@@ -366,19 +444,7 @@ impl SweepSpec {
                     row_labels.push(format!("{n}x{t}@{s}"));
                     for &c in cases {
                         for w in workloads {
-                            runs.push(RunSpec {
-                                case_id: c,
-                                workload: *w,
-                                elems: n,
-                                threads: t,
-                                striping: true,
-                                caches: true,
-                                machine: MachineSpec::TilePro64,
-                                link_contention: false,
-                                coherence_links: false,
-                                fabric: None,
-                                seed: s,
-                            });
+                            runs.push(RunSpec::new(c, *w, n, t, s));
                         }
                     }
                 }
@@ -433,6 +499,19 @@ impl SweepSpec {
                 r.fabric = Some(f.clone());
             }
             self.title = format!("{} [fabric {}]", self.title, f.label());
+        }
+        self
+    }
+
+    /// Run the whole sweep (baseline included) under a coherence protocol
+    /// — how `--protocol` re-aims a figure spec. The default protocol
+    /// leaves the sweep untouched (pinned records keep their bytes).
+    pub fn with_protocol(mut self, protocol: ProtocolSpec) -> SweepSpec {
+        if !protocol.is_default() {
+            for r in self.runs.iter_mut().chain(self.baseline.iter_mut()) {
+                r.protocol = protocol;
+            }
+            self.title = format!("{} [protocol {}]", self.title, protocol.label());
         }
         self
     }
@@ -797,6 +876,50 @@ mod tests {
         assert_eq!(spec.baseline.as_ref().unwrap().fabric.as_ref(), Some(&f));
         assert!(spec.title.contains("[fabric base=4:express-row=0@0.5]"));
         assert!(spec.check_thread_capacity().is_ok());
+    }
+
+    #[test]
+    fn protocol_json_and_label_gated_on_non_default() {
+        let spec = RunSpec::mergesort(8, 1 << 12, 4, 42);
+        assert!(spec.to_json().get("protocol").is_none());
+        assert!(!spec.label().contains("proto="));
+        let spec = spec.with_protocol(ProtocolSpec::parse("mesi").unwrap());
+        assert_eq!(spec.to_json().get("protocol").unwrap().encode(), "\"mesi\"");
+        assert!(spec.label().contains("proto=mesi"));
+        // Spelling the default out loud is still the default.
+        let spec = spec.with_protocol(ProtocolSpec::parse("write-invalidate").unwrap());
+        assert!(spec.to_json().get("protocol").is_none());
+    }
+
+    #[test]
+    fn protocol_changes_the_simulation_only_with_coherence_links() {
+        // Non-localised microbench re-writes its output slice every rep —
+        // sole-sharer rewrites that MESI absorbs silently.
+        let base = RunSpec::new(1, Workload::Microbench { reps: 3 }, 1 << 12, 4, 42)
+            .on_machine(MachineSpec::Nuca256, true, true);
+        let mesi = base.clone().with_protocol(ProtocolSpec::parse("mesi").unwrap());
+        let (a, b) = (base.execute(), mesi.execute());
+        assert_eq!(a.upgrade_hits, 0);
+        assert!(b.upgrade_hits > 0, "rewrites must silently upgrade");
+        assert_ne!(a.makespan_cycles, b.makespan_cycles);
+        // Links off: the protocol is inert and the runs replay identically.
+        let off = RunSpec::new(1, Workload::Microbench { reps: 3 }, 1 << 12, 4, 42);
+        let off_mesi = off.clone().with_protocol(ProtocolSpec::parse("mesi").unwrap());
+        assert_eq!(
+            off.execute().to_json().encode(),
+            off_mesi.execute().to_json().encode()
+        );
+    }
+
+    #[test]
+    fn sweep_with_protocol_retargets_runs_and_title() {
+        let p = ProtocolSpec::parse("moesi").unwrap();
+        let spec = tiny_spec().with_protocol(p);
+        assert!(spec.runs.iter().all(|r| r.protocol == p));
+        assert!(spec.title.contains("[protocol moesi]"));
+        // The default protocol leaves titles (and pinned records) alone.
+        let untouched = tiny_spec().with_protocol(ProtocolSpec::default());
+        assert!(!untouched.title.contains("protocol"));
     }
 
     #[test]

@@ -10,6 +10,7 @@
 //! [`batch`]: crate::coordinator::batch
 
 use crate::arch::{CtrlPlacement, FabricSpec, MachineSpec};
+use crate::coherence::ProtocolSpec;
 use crate::coordinator::batch::{BatchRunner, Metric, RunSpec, SweepSpec, Workload};
 use crate::coordinator::cases::{table1, CaseSpec};
 use crate::harness::SweepTable;
@@ -63,18 +64,8 @@ pub fn run_mergesort_variant(
 /// hash disabled) vs non-localised (case 1: Tile Linux default mapping,
 /// hash-for-home), expressed as an explicit sweep grid.
 pub fn fig1_spec(elems: u64, threads: usize, reps_sweep: &[u32], seed: u64) -> SweepSpec {
-    let mb = |case_id: u8, reps: u32| RunSpec {
-        case_id,
-        workload: Workload::Microbench { reps },
-        elems,
-        threads,
-        striping: true,
-        caches: true,
-        machine: MachineSpec::TilePro64,
-        link_contention: false,
-        coherence_links: false,
-        fabric: None,
-        seed,
+    let mb = |case_id: u8, reps: u32| {
+        RunSpec::new(case_id, Workload::Microbench { reps }, elems, threads, seed)
     };
     let mut runs = Vec::new();
     let mut row_labels = Vec::new();
@@ -166,12 +157,15 @@ pub fn fig3_spec(sizes: &[u64], threads: usize, seed: u64) -> SweepSpec {
     for &elems in sizes {
         row_labels.push(elems.to_string());
         runs.push(RunSpec::mergesort(3, elems, threads, seed));
-        runs.push(RunSpec {
-            workload: Workload::Mergesort {
+        runs.push(RunSpec::new(
+            3,
+            Workload::Mergesort {
                 variant: mergesort::Variant::NonLocalisedIntermediate,
             },
-            ..RunSpec::mergesort(3, elems, threads, seed)
-        });
+            elems,
+            threads,
+            seed,
+        ));
         runs.push(RunSpec::mergesort(4, elems, threads, seed));
         runs.push(RunSpec::mergesort(7, elems, threads, seed));
         runs.push(RunSpec::mergesort(8, elems, threads, seed));
@@ -204,9 +198,8 @@ pub fn fig3(sizes: &[u64], threads: usize, seed: u64) -> SweepTable {
 /// §5.3: execution time with striping on/off over the thread sweep, static
 /// mapping, for the non-localised (hash) and localised (none) styles.
 pub fn fig4_spec(elems: u64, thread_sweep: &[usize], seed: u64) -> SweepSpec {
-    let with_striping = |case_id: u8, threads: usize, striping: bool| RunSpec {
-        striping,
-        ..RunSpec::mergesort(case_id, elems, threads, seed)
+    let with_striping = |case_id: u8, threads: usize, striping: bool| {
+        RunSpec::mergesort(case_id, elems, threads, seed).with_striping(striping)
     };
     let mut runs = Vec::new();
     let mut row_labels = Vec::new();
@@ -242,10 +235,10 @@ pub fn fig4(elems: u64, thread_sweep: &[usize], seed: u64) -> SweepTable {
 /// as fig4 but with the caches disabled — every access is a DRAM
 /// transaction, so controller reach/contention dominates.
 pub fn fig4_cache_off_spec(elems: u64, thread_sweep: &[usize], seed: u64) -> SweepSpec {
-    let cache_off = |threads: usize, striping: bool| RunSpec {
-        striping,
-        caches: false,
-        ..RunSpec::mergesort(3, elems, threads, seed)
+    let cache_off = |threads: usize, striping: bool| {
+        RunSpec::mergesort(3, elems, threads, seed)
+            .with_striping(striping)
+            .without_caches()
     };
     let mut runs = Vec::new();
     let mut row_labels = Vec::new();
@@ -303,11 +296,11 @@ pub fn grid_scaling_spec(
     for &m in machines {
         row_labels.push(m.label());
         for case_id in [3u8, 4, 8] {
-            let mut r = RunSpec::mergesort(case_id, elems, threads, seed);
-            r.machine = m;
-            r.link_contention = link_contention;
-            r.coherence_links = link_contention && coherence_links;
-            runs.push(r);
+            runs.push(RunSpec::mergesort(case_id, elems, threads, seed).on_machine(
+                m,
+                link_contention,
+                link_contention && coherence_links,
+            ));
         }
     }
     SweepSpec {
@@ -380,12 +373,10 @@ pub fn falseshare_spec(
     for &m in machines {
         row_labels.push(m.label());
         for case_id in [4u8, 8] {
-            let mut r = RunSpec::mergesort(case_id, elems, threads, seed);
-            r.workload = Workload::PingPong { passes };
-            r.machine = m;
-            r.link_contention = true;
-            r.coherence_links = true;
-            runs.push(r);
+            runs.push(
+                RunSpec::new(case_id, Workload::PingPong { passes }, elems, threads, seed)
+                    .on_machine(m, true, true),
+            );
         }
     }
     SweepSpec {
@@ -483,16 +474,15 @@ pub fn placement_spec(
         for p in placements {
             row_labels.push(format!("{}/{}", m.label(), p.label()));
             for (case_id, striping) in [(3u8, true), (3, false), (8, true), (8, false)] {
-                let mut r = RunSpec::mergesort(case_id, elems, threads, seed);
-                r.striping = striping;
-                r.machine = m;
-                r.link_contention = link_contention;
-                r.coherence_links = link_contention && coherence_links;
-                r.fabric = Some(FabricSpec {
-                    ctrl: Some(p.clone()),
-                    ..FabricSpec::default()
-                });
-                runs.push(r);
+                runs.push(
+                    RunSpec::mergesort(case_id, elems, threads, seed)
+                        .with_striping(striping)
+                        .on_machine(m, link_contention, link_contention && coherence_links)
+                        .with_fabric(Some(FabricSpec {
+                            ctrl: Some(p.clone()),
+                            ..FabricSpec::default()
+                        })),
+                );
             }
         }
     }
@@ -595,13 +585,11 @@ pub fn fabric_sweep_spec(
             let fabric = express_fabric(s)?;
             row_labels.push(format!("{}@x{s}", m.label()));
             for case_id in [4u8, 8] {
-                let mut r = RunSpec::mergesort(case_id, elems, threads, seed);
-                r.workload = Workload::PingPong { passes };
-                r.machine = m;
-                r.link_contention = link_contention;
-                r.coherence_links = link_contention && coherence_links;
-                r.fabric = Some(fabric.clone());
-                runs.push(r);
+                runs.push(
+                    RunSpec::new(case_id, Workload::PingPong { passes }, elems, threads, seed)
+                        .on_machine(m, link_contention, link_contention && coherence_links)
+                        .with_fabric(Some(fabric.clone())),
+                );
             }
         }
     }
@@ -636,6 +624,248 @@ pub fn fabric_report(
         ));
     }
     out
+}
+
+// ---------------------------------------------------------------------------
+// Protocol lab — the same workloads under every coherence protocol
+// ---------------------------------------------------------------------------
+
+/// Default machine ladder for the `protocol` sweep: the paper's 8×8
+/// against the 16×16, where the fan-out routes are long enough for the
+/// protocols' traffic shapes to pull the makespans apart.
+pub fn protocol_machines() -> Vec<MachineSpec> {
+    vec![MachineSpec::TilePro64, MachineSpec::Nuca256]
+}
+
+/// The coherence-protocol lab: three workloads with very different sharing
+/// shapes — the rewrite-heavy micro-benchmark (case 3: static mapping,
+/// hash-for-home, so every repeated store to a remote-homed line is a
+/// protocol decision), the false-sharing write ping-pong (case 4: single
+/// home), and the merge sort (case 3) — each run on every machine under
+/// every protocol in [`ProtocolSpec::all`] order. Link and coherence
+/// billing are always on: with the links off every protocol collapses to
+/// the fused default path and the sweep measures nothing.
+///
+/// One row per machine × workload; one series column per protocol. The
+/// headline is not the seconds table but [`protocol_report`]: which
+/// protocol wins each row, and where the winner flips between machines.
+pub fn protocol_spec(
+    elems: u64,
+    threads: usize,
+    reps: u32,
+    passes: u32,
+    machines: &[MachineSpec],
+    seed: u64,
+) -> SweepSpec {
+    let protocols = ProtocolSpec::all();
+    let mut runs = Vec::new();
+    let mut row_labels = Vec::new();
+    for &m in machines {
+        for tag in ["microbench", "pingpong", "mergesort"] {
+            row_labels.push(format!("{}/{tag}", m.label()));
+            for &p in &protocols {
+                let base = match tag {
+                    "microbench" => {
+                        RunSpec::new(3, Workload::Microbench { reps }, elems, threads, seed)
+                    }
+                    "pingpong" => {
+                        RunSpec::new(4, Workload::PingPong { passes }, elems, threads, seed)
+                    }
+                    _ => RunSpec::mergesort(3, elems, threads, seed),
+                };
+                runs.push(base.on_machine(m, true, true).with_protocol(p));
+            }
+        }
+    }
+    SweepSpec {
+        title: format!(
+            "Protocol lab: microbench/ping-pong/merge sort of {elems} ints, {threads} threads \
+             under each coherence protocol (exec time, s)"
+        ),
+        x_label: "machine/workload".into(),
+        series: protocols.iter().map(|p| p.label()).collect(),
+        row_labels,
+        runs,
+        baseline: None,
+        metric: Metric::Seconds,
+    }
+}
+
+pub fn protocol_sweep(
+    elems: u64,
+    threads: usize,
+    reps: u32,
+    passes: u32,
+    machines: &[MachineSpec],
+    seed: u64,
+) -> SweepTable {
+    BatchRunner::auto().table(&protocol_spec(elems, threads, reps, passes, machines, seed))
+}
+
+/// Winner index for one row of a protocol sweep: first minimum makespan in
+/// series order, so ties break towards the earlier (default-most) protocol.
+fn protocol_row_winner(cells: &[RunStats]) -> usize {
+    let mut win = 0;
+    for (i, c) in cells.iter().enumerate() {
+        if c.makespan_cycles < cells[win].makespan_cycles {
+            win = i;
+        }
+    }
+    win
+}
+
+/// Count of distinct makespans in one row — how much the protocol choice
+/// moved this workload at all.
+fn protocol_row_distinct(cells: &[RunStats]) -> usize {
+    let mut v: Vec<u64> = cells.iter().map(|c| c.makespan_cycles).collect();
+    v.sort_unstable();
+    v.dedup();
+    v.len()
+}
+
+/// The protocol lab's headline report: per row, the winning protocol (ties
+/// break towards the series-order default), how many distinct makespans
+/// the protocols produced, and per-protocol upgrade/invalidation traffic;
+/// then the cross-machine winner flips per workload. The flip list is
+/// informational — which protocol wins a contended row is a queueing
+/// outcome, not a structural constant — but "at least one row where the
+/// protocols disagree" is structural (MSI's upgrade round-trips can never
+/// replay as MESI's silent upgrades) and the CI smoke pins it.
+pub fn protocol_report(
+    spec: &SweepSpec,
+    store: &crate::coordinator::batch::ResultStore,
+) -> String {
+    let np = spec.series.len();
+    let mut out = String::from(
+        "protocol lab: winner per row (first minimum in series order) and traffic:\n",
+    );
+    let mut winners: Vec<(String, String, String)> = Vec::new(); // (workload, machine, winner)
+    for (row, label) in spec.row_labels.iter().enumerate() {
+        let cells = &store.results[row * np..(row + 1) * np];
+        let win = protocol_row_winner(cells);
+        out.push_str(&format!(
+            "  {label:>22}: winner {} ({} distinct makespans)\n",
+            spec.series[win],
+            protocol_row_distinct(cells)
+        ));
+        for (i, c) in cells.iter().enumerate() {
+            out.push_str(&format!(
+                "      {:>16}: {:>12} cycles, upgrades {}, owner replies {}, inval link \
+                 cycles {}\n",
+                spec.series[i],
+                c.makespan_cycles,
+                c.upgrade_hits,
+                c.owner_replies,
+                c.invalidation_link_cycles
+            ));
+        }
+        if let Some((machine, workload)) = label.split_once('/') {
+            winners.push((
+                workload.to_string(),
+                machine.to_string(),
+                spec.series[win].clone(),
+            ));
+        }
+    }
+    out.push_str("cross-machine winner flips:\n");
+    let mut any = false;
+    let mut seen: Vec<&str> = Vec::new();
+    for (wl, _, _) in &winners {
+        if seen.contains(&wl.as_str()) {
+            continue;
+        }
+        seen.push(wl);
+        let per: Vec<(&str, &str)> = winners
+            .iter()
+            .filter(|(w, _, _)| w == wl)
+            .map(|(_, m, p)| (m.as_str(), p.as_str()))
+            .collect();
+        if per.iter().any(|(_, p)| *p != per[0].1) {
+            any = true;
+            let detail = per
+                .iter()
+                .map(|(m, p)| format!("{m}:{p}"))
+                .collect::<Vec<_>>()
+                .join(", ");
+            out.push_str(&format!("  {wl}: {detail}\n"));
+        }
+    }
+    if !any {
+        out.push_str("  none (the same protocol wins on every machine)\n");
+    }
+    out
+}
+
+/// Machine-readable twin of [`protocol_report`], meant to ride next to the
+/// sweep's own `to_json` record: `protocols` (series order), one entry per
+/// row with the winner and distinct-makespan count, and the per-workload
+/// cross-machine flip list.
+pub fn protocol_report_json(
+    spec: &SweepSpec,
+    store: &crate::coordinator::batch::ResultStore,
+) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    let np = spec.series.len();
+    let mut rows = Vec::new();
+    let mut winners: Vec<(String, String, String)> = Vec::new();
+    for (row, label) in spec.row_labels.iter().enumerate() {
+        let cells = &store.results[row * np..(row + 1) * np];
+        let win = protocol_row_winner(cells);
+        rows.push(Json::obj(vec![
+            ("label", Json::str(label.clone())),
+            ("winner", Json::str(spec.series[win].clone())),
+            (
+                "distinct_makespans",
+                Json::num(protocol_row_distinct(cells) as f64),
+            ),
+            (
+                "makespan_cycles",
+                Json::arr(cells.iter().map(|c| Json::num(c.makespan_cycles as f64))),
+            ),
+        ]));
+        if let Some((machine, workload)) = label.split_once('/') {
+            winners.push((
+                workload.to_string(),
+                machine.to_string(),
+                spec.series[win].clone(),
+            ));
+        }
+    }
+    let mut flips = Vec::new();
+    let mut seen: Vec<&str> = Vec::new();
+    for (wl, _, _) in &winners {
+        if seen.contains(&wl.as_str()) {
+            continue;
+        }
+        seen.push(wl);
+        let per: Vec<(&String, &String)> = winners
+            .iter()
+            .filter(|(w, _, _)| w == wl)
+            .map(|(_, m, p)| (m, p))
+            .collect();
+        if per.iter().any(|(_, p)| *p != per[0].1) {
+            flips.push(Json::obj(vec![
+                ("workload", Json::str(wl.clone())),
+                (
+                    "winners",
+                    Json::arr(per.iter().map(|(m, p)| {
+                        Json::obj(vec![
+                            ("machine", Json::str((*m).clone())),
+                            ("protocol", Json::str((*p).clone())),
+                        ])
+                    })),
+                ),
+            ]));
+        }
+    }
+    Json::obj(vec![
+        (
+            "protocols",
+            Json::arr(spec.series.iter().map(|s| Json::str(s.clone()))),
+        ),
+        ("rows", Json::arr(rows)),
+        ("flips", Json::arr(flips)),
+    ])
 }
 
 /// §2's three homing classes head-to-head on the repeated-scan kernel:
@@ -986,6 +1216,65 @@ mod tests {
         for s in ["0.5:dir=E@8", "1@2", "x", "", "0.5:ctrl=corners"] {
             assert!(express_fabric(s).is_err(), "strength '{s}' should fail");
         }
+    }
+
+    #[test]
+    fn protocol_spec_shape() {
+        let machines = protocol_machines();
+        let spec = protocol_spec(1 << 12, 4, 2, 2, &machines, DEFAULT_SEED);
+        spec.validate();
+        assert_eq!(spec.row_labels.len(), 6);
+        assert_eq!(spec.row_labels[0], "tilepro64/microbench");
+        assert_eq!(spec.row_labels[5], "nuca256/mergesort");
+        assert_eq!(spec.series.len(), 6);
+        assert_eq!(spec.series[0], "write-invalidate");
+        assert_eq!(spec.runs.len(), 36);
+        assert!(spec
+            .runs
+            .iter()
+            .all(|r| r.link_contention && r.coherence_links));
+        // The default-protocol column stays unlabeled in run labels/JSON;
+        // every other column carries its protocol.
+        assert!(!spec.runs[0].label().contains("proto="));
+        assert!(spec.runs[1].label().contains("proto=msi"));
+    }
+
+    #[test]
+    fn protocol_lab_separates_the_protocols_and_reports_it() {
+        // One machine keeps the runtime down; the structural separations
+        // the engine tests pin (MSI upgrade round-trips on the mesh vs
+        // MESI silent upgrades) must survive the batch pipeline.
+        let spec = protocol_spec(1 << 12, 4, 4, 4, &[MachineSpec::TilePro64], DEFAULT_SEED);
+        let store = crate::coordinator::batch::BatchRunner::auto().run(&spec);
+        let np = spec.series.len();
+        let mb = &store.results[..np]; // microbench row, series order
+        let (wi, msi, mesi) = (&mb[0], &mb[1], &mb[2]);
+        assert_eq!(wi.upgrade_hits, 0, "fused default path counts no upgrades");
+        assert!(msi.upgrade_hits > 0 && mesi.upgrade_hits > 0);
+        assert!(
+            msi.invalidation_link_cycles > mesi.invalidation_link_cycles,
+            "MSI must bill upgrade round-trips on the invalidation class: {} vs {}",
+            msi.invalidation_link_cycles,
+            mesi.invalidation_link_cycles
+        );
+        assert_ne!(
+            msi.makespan_cycles, mesi.makespan_cycles,
+            "upgrade round-trips cannot replay as silent upgrades"
+        );
+        let report = protocol_report(&spec, &store);
+        assert!(report.contains("winner"), "{report}");
+        assert!(report.contains("tilepro64/microbench"), "{report}");
+        let json = protocol_report_json(&spec, &store);
+        let rows = match json.get("rows").unwrap() {
+            crate::util::json::Json::Arr(v) => v,
+            other => panic!("rows must be an array, got {other}"),
+        };
+        let distinct = rows
+            .iter()
+            .filter_map(|r| r.get("distinct_makespans").and_then(|d| d.as_usize()))
+            .max()
+            .unwrap();
+        assert!(distinct >= 2, "at least one row must separate the protocols");
     }
 
     #[test]

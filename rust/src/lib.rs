@@ -27,6 +27,7 @@
 
 pub mod arch;
 pub mod cache;
+pub mod coherence;
 pub mod coordinator;
 pub mod harness;
 pub mod mem;

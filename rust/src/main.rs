@@ -9,18 +9,22 @@
 //! mergesort  [flags]           one merge-sort run (Alg. 3/4)
 //! sort       [flags]           REAL sort via the AOT'd Pallas kernels
 //! experiment <fig1|fig2|fig3|fig4|table1|all> [flags]
-//! batch      <fig…|all|grid|gridscale|falseshare|placement|fabric>
+//! batch      <fig…|all|grid|gridscale|falseshare|placement|fabric|protocol>
 //!                              parallel sweeps over the worker pool
 //! ```
 //!
 //! Common flags: `--size N` (supports k/m/ki/mi suffixes), `--threads N`,
 //! `--reps N`, `--case 1..8`, `--seed S`, `--jobs N`, `--no-striping`,
-//! `--json`, `--out DIR`.
+//! `--json`, `--out DIR`. Target selection (`--machine`, `--fabric`,
+//! `--protocol`, link billing) resolves through
+//! [`tilesim::util::cli::TargetSpec`] so every subcommand shares one
+//! conflict-error path.
 
 use tilesim::arch::{CtrlPlacement, FabricSpec, MachineSpec};
 use tilesim::coordinator::batch::{derive_seeds, BatchRunner, RunSpec, SweepSpec, Workload};
 use tilesim::coordinator::{case, experiment, table1};
-use tilesim::util::cli::{parse_usize, Args};
+use tilesim::util::cli::{parse_usize, Args, TargetSpec};
+use tilesim::util::json::Json;
 use tilesim::workloads::mergesort::Variant;
 
 fn main() {
@@ -55,6 +59,7 @@ const VALUE_FLAGS: &[&str] = &[
     "fabric",
     "placements",
     "strengths",
+    "protocol",
 ];
 const BOOL_FLAGS: &[&str] = &[
     "json",
@@ -86,35 +91,30 @@ fn run(argv: &[String]) -> Result<(), Box<dyn std::error::Error>> {
         return Ok(());
     }
     let seed = args.u64("seed", experiment::DEFAULT_SEED)?;
-    let (machine_spec, fabric) = machine_and_fabric_args(&args)?;
-    let links = link_contention_arg(&args, machine_spec, fabric.is_some());
-    let coherence = coherence_links_arg(&args, links);
+    let target = TargetSpec::from_args(&args)?;
     match args.positional()[0].as_str() {
         "info" => info(),
         "microbench" => {
             let c = case(args.usize("case", 8)? as u8);
-            let spec = RunSpec {
-                case_id: c.id,
-                workload: Workload::Microbench {
+            let spec = RunSpec::new(
+                c.id,
+                Workload::Microbench {
                     reps: args.usize("reps", 16)? as u32,
                 },
-                elems: args.usize("size", 1_000_000)? as u64,
-                threads: args.usize("threads", 63)?,
-                striping: true,
-                caches: true,
-                machine: machine_spec,
-                link_contention: links,
-                coherence_links: coherence,
-                fabric: fabric.clone(),
+                args.usize("size", 1_000_000)? as u64,
+                args.usize("threads", 63)?,
                 seed,
-            };
+            )
+            .on_machine(target.machine, target.link_contention, target.coherence_links)
+            .with_fabric(target.fabric.clone())
+            .with_protocol(target.protocol);
             spec.check_thread_capacity()?;
             emit_stats(
                 &args,
                 &run_label(&c.label(), &spec),
                 &spec.execute(),
-                machine_spec,
-                fabric.as_ref(),
+                target.machine,
+                target.fabric.as_ref(),
             );
             Ok(())
         }
@@ -127,63 +127,73 @@ fn run(argv: &[String]) -> Result<(), Box<dyn std::error::Error>> {
                 Some("localised") => Variant::Localised,
                 Some(v) => return Err(format!("unknown variant {v}").into()),
             };
-            let spec = RunSpec {
-                case_id: c.id,
-                workload: Workload::Mergesort { variant },
-                elems: args.usize("size", 10_000_000)? as u64,
-                threads: args.usize("threads", 64)?,
-                striping: !args.flag("no-striping"),
-                caches: !args.flag("no-cache"),
-                machine: machine_spec,
-                link_contention: links,
-                coherence_links: coherence,
-                fabric: fabric.clone(),
+            let mut spec = RunSpec::new(
+                c.id,
+                Workload::Mergesort { variant },
+                args.usize("size", 10_000_000)? as u64,
+                args.usize("threads", 64)?,
                 seed,
-            };
+            )
+            .with_striping(!args.flag("no-striping"))
+            .on_machine(target.machine, target.link_contention, target.coherence_links)
+            .with_fabric(target.fabric.clone())
+            .with_protocol(target.protocol);
+            if args.flag("no-cache") {
+                spec = spec.without_caches();
+            }
             spec.check_thread_capacity()?;
             emit_stats(
                 &args,
                 &run_label(&c.label(), &spec),
                 &spec.execute(),
-                machine_spec,
-                fabric.as_ref(),
+                target.machine,
+                target.fabric.as_ref(),
             );
             Ok(())
         }
         "radix" => {
             let c = case(args.usize("case", 8)? as u8);
-            let spec = RunSpec {
-                case_id: c.id,
-                workload: Workload::Radix {
+            let spec = RunSpec::new(
+                c.id,
+                Workload::Radix {
                     digit_bits: args.usize("digit-bits", 8)? as u32,
                 },
-                elems: args.usize("size", 1_000_000)? as u64,
-                threads: args.usize("threads", 63)?,
-                striping: !args.flag("no-striping"),
-                caches: true,
-                machine: machine_spec,
-                link_contention: links,
-                coherence_links: coherence,
-                fabric: fabric.clone(),
+                args.usize("size", 1_000_000)? as u64,
+                args.usize("threads", 63)?,
                 seed,
-            };
+            )
+            .with_striping(!args.flag("no-striping"))
+            .on_machine(target.machine, target.link_contention, target.coherence_links)
+            .with_fabric(target.fabric.clone())
+            .with_protocol(target.protocol);
             spec.check_thread_capacity()?;
             let label = run_label(&format!("radix sort — {}", c.label()), &spec);
-            emit_stats(&args, &label, &spec.execute(), machine_spec, fabric.as_ref());
+            emit_stats(
+                &args,
+                &label,
+                &spec.execute(),
+                target.machine,
+                target.fabric.as_ref(),
+            );
             Ok(())
         }
         "homing" => {
+            if !target.protocol.is_default() {
+                return Err(
+                    "homing builds its engines directly and does not support --protocol".into(),
+                );
+            }
             let threads = args.usize("threads", 63)?;
-            tilesim::coordinator::batch::check_thread_capacity(threads, machine_spec)?;
+            tilesim::coordinator::batch::check_thread_capacity(threads, target.machine)?;
             // Homing has no RunSpec, so the fabric fit-check runs here.
-            machine_spec.build_with_fabric(fabric.as_ref())?;
+            target.machine.build_with_fabric(target.fabric.as_ref())?;
             let t = experiment::homing_classes(
                 args.usize("size", 1_000_000)? as u64,
                 threads,
                 args.usize("reps", 16)? as u32,
-                machine_spec,
-                fabric.as_ref(),
-                links,
+                target.machine,
+                target.fabric.as_ref(),
+                target.link_contention,
             );
             println!("{}", t.render());
             Ok(())
@@ -200,8 +210,13 @@ fn run(argv: &[String]) -> Result<(), Box<dyn std::error::Error>> {
                 .map(|(n, s)| {
                     (
                         n,
-                        s.on_machine(machine_spec, links, coherence)
-                            .with_fabric(fabric.clone()),
+                        s.on_machine(
+                            target.machine,
+                            target.link_contention,
+                            target.coherence_links,
+                        )
+                        .with_fabric(target.fabric.clone())
+                        .with_protocol(target.protocol),
                     )
                 })
                 .collect();
@@ -219,62 +234,11 @@ fn run(argv: &[String]) -> Result<(), Box<dyn std::error::Error>> {
             }
             Ok(())
         }
-        "batch" => batch_cmd(&args, seed, machine_spec, links, coherence, fabric),
+        "batch" => batch_cmd(&args, seed, &target),
         other => {
             print_usage();
             Err(format!("unknown command '{other}'").into())
         }
-    }
-}
-
-/// Parse `--machine` (default: the paper's tilepro64) together with
-/// `--fabric`. A `--fabric` spec may lead with its own machine clause
-/// (`--fabric 8x8:ctrl=corners:express-row=3@0.5`); naming the machine in
-/// both places is a conflict. Only the *syntax* is checked here — whether
-/// the fabric fits the machine is validated by each subcommand's
-/// `check_thread_capacity` path, so ladder sweeps get to report their
-/// flag-conflict error instead of a fit error against a machine they
-/// never run.
-fn machine_and_fabric_args(
-    args: &Args,
-) -> Result<(MachineSpec, Option<FabricSpec>), Box<dyn std::error::Error>> {
-    let machine_flag = match args.get("machine") {
-        None => None,
-        Some(s) => Some(MachineSpec::parse(s)?),
-    };
-    let (fabric_machine, fabric) = match args.get("fabric") {
-        None => (None, None),
-        Some(s) => {
-            let (m, f) = FabricSpec::parse(s)?.split_machine();
-            (m, if f.is_noop() { None } else { Some(f) })
-        }
-    };
-    let machine = match (machine_flag, fabric_machine) {
-        (Some(_), Some(_)) => {
-            return Err(
-                "--machine conflicts with the machine clause in --fabric: name the machine in \
-                 one place"
-                    .into(),
-            )
-        }
-        (Some(m), None) | (None, Some(m)) => m,
-        (None, None) => MachineSpec::TilePro64,
-    };
-    Ok((machine, fabric))
-}
-
-/// Resolve link-contention modelling: on by default for every machine
-/// except the paper-baseline tilepro64 (whose published figure record
-/// predates the link model) — and whenever a fabric is applied, since the
-/// fabric only exists on the link servers; `--link-contention` /
-/// `--no-link-contention` override either way.
-fn link_contention_arg(args: &Args, machine: MachineSpec, has_fabric: bool) -> bool {
-    if args.flag("no-link-contention") {
-        false
-    } else if args.flag("link-contention") {
-        true
-    } else {
-        machine != MachineSpec::TilePro64 || has_fabric
     }
 }
 
@@ -293,17 +257,26 @@ fn coherence_links_arg(args: &Args, links: bool) -> bool {
 }
 
 /// Label for a one-off run: the Table 1 case, plus the machine (and any
-/// fabric) when it is not the paper baseline.
+/// fabric or non-default protocol) when it is not the paper baseline.
 fn run_label(case_label: &str, spec: &RunSpec) -> String {
-    if spec.machine == MachineSpec::TilePro64 && !spec.link_contention && spec.fabric.is_none() {
+    if spec.machine == MachineSpec::TilePro64
+        && !spec.link_contention
+        && spec.fabric.is_none()
+        && spec.protocol.is_default()
+    {
         case_label.to_string()
     } else {
         format!(
-            "{case_label} | machine {}{}{}",
+            "{case_label} | machine {}{}{}{}",
             spec.machine.label(),
             match &spec.fabric {
                 Some(f) => format!(" fabric {}", f.label()),
                 None => String::new(),
+            },
+            if spec.protocol.is_default() {
+                String::new()
+            } else {
+                format!(" protocol {}", spec.protocol.label())
             },
             if spec.link_contention { " (link contention)" } else { "" }
         )
@@ -378,18 +351,18 @@ fn reject_ladder_conflicts(
     Ok(())
 }
 
-/// `repro batch <fig…|all|grid|gridscale|falseshare|placement|fabric>`:
+/// `repro batch <fig…|all|grid|gridscale|falseshare|placement|fabric|protocol>`:
 /// run sweeps through the worker pool and emit machine-readable results.
 /// `--jobs N` shards across N host threads (0 = all cores); output is
 /// byte-identical for every N.
 fn batch_cmd(
     args: &Args,
     seed: u64,
-    machine: MachineSpec,
-    links: bool,
-    coherence: bool,
-    fabric: Option<FabricSpec>,
+    target: &TargetSpec,
 ) -> Result<(), Box<dyn std::error::Error>> {
+    let (machine, links, coherence) =
+        (target.machine, target.link_contention, target.coherence_links);
+    let fabric = target.fabric.clone();
     let which = args
         .positional()
         .get(1)
@@ -402,7 +375,8 @@ fn batch_cmd(
             "grid".to_string(),
             grid_spec(args, seed)?
                 .on_machine(machine, links, coherence)
-                .with_fabric(fabric.clone()),
+                .with_fabric(fabric.clone())
+                .with_protocol(target.protocol),
         )]
     } else if which == "gridscale" {
         // The grid-scaling sweep carries its own per-row machine ladder;
@@ -416,6 +390,7 @@ fn batch_cmd(
                 ("fabric", "the ladder compares uniform fabrics"),
                 ("placements", "use `batch placement` for placements"),
                 ("strengths", "use `batch fabric` to sweep strengths"),
+                ("protocol", "use `batch protocol` to sweep protocols"),
             ],
         )?;
         vec![("gridscale".to_string(), gridscale_spec(args, seed)?)]
@@ -428,6 +403,7 @@ fn batch_cmd(
                 ("fabric", "use `batch fabric` to sweep fabrics"),
                 ("placements", "use `batch placement` for placements"),
                 ("strengths", "use `batch fabric` to sweep strengths"),
+                ("protocol", "use `batch protocol` to sweep protocols"),
             ],
         )?;
         vec![("falseshare".to_string(), falseshare_spec(args, seed)?)]
@@ -439,6 +415,7 @@ fn batch_cmd(
                 ("machine", "use --machines a,b,c"),
                 ("fabric", "use --placements edges,sides,corners,interior"),
                 ("strengths", "use `batch fabric` to sweep strengths"),
+                ("protocol", "use `batch protocol` to sweep protocols"),
             ],
         )?;
         vec![("placement".to_string(), placement_sweep(args, seed)?)]
@@ -450,9 +427,23 @@ fn batch_cmd(
                 ("machine", "use --machines a,b,c"),
                 ("fabric", "use --strengths 1,0.5,0.25"),
                 ("placements", "use `batch placement` for placements"),
+                ("protocol", "use `batch protocol` to sweep protocols"),
             ],
         )?;
         vec![("fabric".to_string(), fabric_sweep(args, seed)?)]
+    } else if which == "protocol" {
+        reject_ladder_conflicts(
+            args,
+            "protocol",
+            &[
+                ("machine", "use --machines a,b,c"),
+                ("fabric", "use `batch fabric` to sweep fabrics"),
+                ("placements", "use `batch placement` for placements"),
+                ("strengths", "use `batch fabric` to sweep strengths"),
+                ("protocol", "the lab already sweeps every protocol"),
+            ],
+        )?;
+        vec![("protocol".to_string(), protocol_lab(args, seed)?)]
     } else {
         figure_specs(which, args, seed)?
             .into_iter()
@@ -460,7 +451,8 @@ fn batch_cmd(
                 (
                     n,
                     s.on_machine(machine, links, coherence)
-                        .with_fabric(fabric.clone()),
+                        .with_fabric(fabric.clone())
+                        .with_protocol(target.protocol),
                 )
             })
             .collect()
@@ -471,28 +463,60 @@ fn batch_cmd(
     eprintln!("batch: {} sweep(s) on {} worker(s)", specs.len(), runner.jobs());
     for (name, spec) in &specs {
         let store = runner.run(spec);
+        // The protocol lab's record carries the winner/flip report next to
+        // the sweep so `--json` consumers get both in one document.
+        let record = if name == "protocol" {
+            Json::obj(vec![
+                ("sweep", store.to_json(spec)),
+                ("report", experiment::protocol_report_json(spec, &store)),
+            ])
+        } else {
+            store.to_json(spec)
+        };
         if args.flag("json") {
-            println!("{}", store.to_json(spec).encode());
+            println!("{}", record.encode());
         } else {
             println!("{}", store.table(spec).render());
         }
         // These sweeps' headlines are derived ratios, not the seconds
         // table: falseshare reports coherence traffic, placement the
-        // Fig. 4-style crossover, fabric the link-queue trajectory.
+        // Fig. 4-style crossover, fabric the link-queue trajectory, the
+        // protocol lab its per-row winners and cross-machine flips.
         match name.as_str() {
             "falseshare" => eprintln!("{}", experiment::falseshare_report(spec, &store)),
             "placement" => eprintln!("{}", experiment::placement_report(spec, &store)),
             "fabric" => eprintln!("{}", experiment::fabric_report(spec, &store)),
+            "protocol" => eprintln!("{}", experiment::protocol_report(spec, &store)),
             _ => {}
         }
         if let Some(dir) = &out {
             store.table(spec).save(dir, name)?;
             let path = format!("{dir}/{name}_runs.json");
-            std::fs::write(&path, store.to_json(spec).encode())?;
+            std::fs::write(&path, record.encode())?;
             eprintln!("saved {path}");
         }
     }
     Ok(())
+}
+
+/// Build the coherence-protocol lab (`repro batch protocol`): the rewrite
+/// micro-benchmark, write ping-pong, and merge sort at every `--machines`
+/// grid under every protocol, link + coherence billing always on.
+fn protocol_lab(args: &Args, seed: u64) -> Result<SweepSpec, Box<dyn std::error::Error>> {
+    let machines = machines_arg(args, experiment::protocol_machines)?;
+    let elems = args.usize("size", 65_536)? as u64;
+    let threads = args.usize("threads", 32)?;
+    let reps = args.usize("reps", 4)? as u32;
+    if threads == 0 || elems < 2 * threads as u64 || reps == 0 {
+        return Err(format!(
+            "bad protocol lab: need elems >= 2*threads and reps >= 1, got {elems} x {threads} \
+             x {reps}"
+        )
+        .into());
+    }
+    let spec = experiment::protocol_spec(elems, threads, reps, reps, &machines, seed);
+    spec.check_thread_capacity()?;
+    Ok(spec)
 }
 
 /// Build the controller-placement sweep (`repro batch placement`): the
@@ -843,7 +867,7 @@ fn print_usage() {
         "usage: repro <info|microbench|mergesort|radix|homing|sort|experiment|batch> [flags]\n\
          experiments: repro experiment <fig1|fig2|fig3|fig4|table1|all> [--size N] [--out DIR]\n\
          batch:       repro batch <fig1|fig2|fig3|fig4|table1|all|grid|gridscale|falseshare\n\
-                      |placement|fabric> [--jobs N] [--out DIR] [--json]\n\
+                      |placement|fabric|protocol> [--jobs N] [--out DIR] [--json]\n\
                       grid axes: --cases 1,3,8 --sizes 1m,4m --threads-list 16,64\n\
                       --workload mergesort|microbench|radix --variant a,b --seeds K\n\
                       gridscale:  --machines 4x4:2,tilepro64,nuca256 --size N --threads N\n\
@@ -853,9 +877,15 @@ fn print_usage() {
                                   corners,interior (Fig.4 striping crossover per placement)\n\
                       fabric:     --machines tilepro64,nuca256 --strengths 1,0.5,0.25\n\
                                   (express-channel ping-pong; link-queue trajectory)\n\
+                      protocol:   --machines tilepro64,nuca256 --size N --threads N --reps P\n\
+                                  (microbench/ping-pong/mergesort under every coherence\n\
+                                  protocol; reports winners and cross-machine flips)\n\
          machines: --machine tilepro64|epiphany16|nuca256|WxH[:ctrls] (default tilepro64)\n\
                    --fabric [machine:]ctrl=edges|sides|corners|interior|t+t[:base=N]\n\
                             [:express-row=Y@F][:express-col=X@F][:edge@F][:dir=D@F]\n\
+                   --protocol write-invalidate|msi|mesi|moesi|write-update|opaque[@seed]\n\
+                            (default write-invalidate — the paper's fused baseline path;\n\
+                            a directory protocol defaults link+coherence billing ON)\n\
                    --link-contention / --no-link-contention (default: on off-baseline/fabric)\n\
                    --coherence-links / --no-coherence-links (default: follows link contention)\n\
          flags: --size N --threads N --reps N --case 1..8 --seed S --variant v\n\

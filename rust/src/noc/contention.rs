@@ -120,6 +120,9 @@ pub struct ContentionModel {
     pub reply_link_cycles: u64,
     /// Queueing cycles billed to invalidation fan-out + ack traversals.
     pub invalidation_link_cycles: u64,
+    /// Cycles billed to write-update data fan-out (queueing + data-packet
+    /// serialisation); zero unless a write-update protocol ran.
+    pub update_fanout_cycles: u64,
     /// Per-directed-link traffic counts by class (the hottest-link
     /// heatmaps): forward requests, replies, invalidations+acks.
     pub link_requests: Vec<u64>,
@@ -149,6 +152,7 @@ impl ContentionModel {
             link_delay_cycles: 0,
             reply_link_cycles: 0,
             invalidation_link_cycles: 0,
+            update_fanout_cycles: 0,
             link_requests: vec![0; links],
             link_reply_requests: vec![0; links],
             link_inval_requests: vec![0; links],
@@ -271,6 +275,45 @@ impl ContentionModel {
             }
         }
         self.invalidation_link_cycles += delay;
+        delay
+    }
+
+    /// Bill a write-update protocol's data fan-out at time `now`: a
+    /// `flits`-flit update packet along the XY route home→sharer per
+    /// victim — each link stays busy `flits × service` (data, not a
+    /// header), so the bandwidth cost of updating instead of
+    /// invalidating surfaces as queueing on everything behind it — plus
+    /// the sharer→home ack return path. Traffic rides the
+    /// invalidation-class per-link counters (it is the protocol's
+    /// replacement for that traffic), but its queueing cycles are
+    /// tallied separately in
+    /// [`update_fanout_cycles`](Self::update_fanout_cycles) so reports
+    /// can attribute them. Returns the queueing delay billed to the
+    /// writer.
+    pub fn update_fanout_request(
+        &mut self,
+        home: TileId,
+        victims: &[TileId],
+        now: u64,
+        flits: u64,
+    ) -> u64 {
+        if !self.coherence_enabled() || victims.is_empty() {
+            return 0;
+        }
+        let mut delay = 0u64;
+        for &v in victims {
+            for hop in xy_links(&self.machine, home, v) {
+                let ix = self.machine.link_index(hop.from, hop.dir);
+                delay += self.links[ix].request(now, flits * self.link_service[ix]);
+                self.link_inval_requests[ix] += 1;
+            }
+            for hop in xy_links(&self.machine, v, home) {
+                let ix = self.machine.link_index(hop.from, hop.dir);
+                delay += self.links[ix].request(now, self.link_service[ix]);
+                self.link_inval_requests[ix] += 1;
+            }
+        }
+        self.update_fanout_cycles += delay;
         delay
     }
 }
@@ -546,6 +589,55 @@ mod tests {
                 "n={n}"
             );
         }
+    }
+
+    #[test]
+    fn update_fanout_occupies_links_flits_long() {
+        // Home (0,0) updates sharers (1,0) and (2,0) on a 4×4 grid with
+        // 4-flit packets. E(0,0) serves victim 1's data for 4 cycles, so
+        // victim 2's packet queues 4 behind it; every other link is
+        // first-use. Acks are header-sized and share the west links:
+        // W(1,0) carries victim 1's ack at 0 and victim 2's at 1 — the
+        // 4-cycle data occupancy delays nothing there (opposite class
+        // direction), so queueing = 4 (E00) + 1 (W10) = 5.
+        let mut m = model_on(
+            Machine::custom(4, 4, 2).unwrap(),
+            ContentionConfig::default(),
+        );
+        let d = m.update_fanout_request(TileId(0), &[TileId(1), TileId(2)], 0, 4);
+        assert_eq!(d, 5);
+        assert_eq!(m.update_fanout_cycles, 5);
+        // 1 + 2 data hops out, 1 + 2 ack hops back.
+        assert_eq!(m.link_inval_requests.iter().sum::<u64>(), 6);
+        // The invalidation-cycle tally is untouched: classes separate.
+        assert_eq!(m.invalidation_link_cycles, 0);
+    }
+
+    #[test]
+    fn update_fanout_respects_the_coherence_gate() {
+        for cfg in [
+            ContentionConfig {
+                enabled: true,
+                links: true,
+                coherence: false,
+            },
+            ContentionConfig {
+                enabled: true,
+                links: false,
+                coherence: true,
+            },
+        ] {
+            let mut m = model_on(Machine::tilepro64(), cfg);
+            assert_eq!(
+                m.update_fanout_request(TileId(0), &[TileId(9)], 0, 4),
+                0
+            );
+            assert_eq!(m.update_fanout_cycles, 0);
+            assert!(m.link_inval_requests.iter().all(|&n| n == 0));
+        }
+        // Victim on the home tile crosses no links.
+        let mut m = model();
+        assert_eq!(m.update_fanout_request(TileId(5), &[TileId(5)], 0, 4), 0);
     }
 
     #[test]

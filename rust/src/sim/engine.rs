@@ -40,6 +40,7 @@ use std::sync::Arc;
 
 use crate::arch::{HitLevel, LatencyParams, Machine, TileId, LINE_BYTES, PAGE_BYTES};
 use crate::cache::CacheSystem;
+use crate::coherence::{CoherenceAction, HomePermutation, LineCtx, Protocol, ProtocolKind, ProtocolSpec};
 use crate::mem::{AllocKind, Allocator, LineId, MemConfig, PageAttr, Placement, Region, VAddr};
 use crate::noc::{ContentionConfig, ContentionModel};
 use crate::sched::Scheduler;
@@ -62,6 +63,7 @@ const QUANTUM_LINES: u64 = 128;
 const LINES_PER_PAGE: u64 = PAGE_BYTES / LINE_BYTES;
 
 #[derive(Clone, Debug)]
+#[non_exhaustive]
 pub struct EngineConfig {
     /// The simulated chip. Sizes every resource vector (caches, homes,
     /// sharer bitsets, link servers) and supplies the latency parameters.
@@ -76,6 +78,13 @@ pub struct EngineConfig {
     /// same-home runs). Disable to replay through the per-line reference
     /// walk — cycle-identical, just slower.
     pub page_runs: bool,
+    /// Which coherence protocol drives line-state transitions
+    /// ([`crate::coherence`]). The default (`write-invalidate`) is the
+    /// fused directory path this engine has always billed — pinned
+    /// byte-identical — so protocol selection only changes cycles when a
+    /// non-default protocol is picked *and* coherence traffic is modelled
+    /// on the links.
+    pub protocol: ProtocolSpec,
 }
 
 impl EngineConfig {
@@ -99,7 +108,15 @@ impl EngineConfig {
             contention: ContentionConfig::default(),
             caches_enabled: true,
             page_runs: true,
+            protocol: ProtocolSpec::default(),
         }
+    }
+
+    /// Select the coherence protocol (`--protocol`). See
+    /// [`crate::coherence`] for the menu and semantics.
+    pub fn with_protocol(mut self, protocol: ProtocolSpec) -> Self {
+        self.protocol = protocol;
+        self
     }
 
     pub fn without_caches(mut self) -> Self {
@@ -296,19 +313,45 @@ pub struct Engine {
     params: LatencyParams,
     caches_enabled: bool,
     page_runs: bool,
+    /// The pluggable coherence state machine ([`crate::coherence`]).
+    protocol: Box<dyn Protocol>,
+    /// True when the trait's transitions drive billing: a non-default
+    /// protocol was selected *and* coherence traffic is modelled on the
+    /// links. Otherwise the fused write-invalidate path runs unchanged
+    /// (the pinned-baseline guarantee).
+    protocol_active: bool,
+    /// `opaque` mode: a seeded permutation applied to every resolved home
+    /// tile (per arXiv:2011.05422's randomised home mapping).
+    home_perm: Option<HomePermutation>,
     stats: RunStats,
 }
 
 impl Engine {
     pub fn new(cfg: EngineConfig) -> Self {
         let machine = cfg.machine;
+        let contention = ContentionModel::new(cfg.contention, machine.clone());
+        let protocol_active = !matches!(
+            cfg.protocol.kind,
+            ProtocolKind::WriteInvalidate | ProtocolKind::Opaque
+        ) && contention.coherence_enabled();
+        let home_perm = if cfg.protocol.permutes_homes() {
+            Some(HomePermutation::new(
+                cfg.protocol.opaque_seed,
+                machine.num_tiles(),
+            ))
+        } else {
+            None
+        };
         Engine {
             alloc: Allocator::new(machine.clone(), cfg.mem),
             caches: CacheSystem::new(machine.clone()),
-            contention: ContentionModel::new(cfg.contention, machine.clone()),
+            contention,
             params: machine.params.clone(),
             caches_enabled: cfg.caches_enabled,
             page_runs: cfg.page_runs,
+            protocol: cfg.protocol.build(),
+            protocol_active,
+            home_perm,
             stats: RunStats {
                 clock_hz: machine.params.clock_hz,
                 tile_home_requests: vec![0; machine.num_tiles() as usize],
@@ -344,6 +387,31 @@ impl Engine {
         &self.machine
     }
 
+    /// Apply the `opaque` home permutation (identity for every other
+    /// protocol). Every home-resolution point funnels through here, so the
+    /// page-run fast path and the reference walk permute identically.
+    #[inline]
+    fn map_home(&self, home: TileId) -> TileId {
+        match &self.home_perm {
+            Some(p) => p.map(home),
+            None => home,
+        }
+    }
+
+    /// Snapshot the directory/owner state of `line` as the protocol
+    /// trait's transition input.
+    fn line_ctx(&self, tile: TileId, line: LineId, home: TileId) -> LineCtx {
+        let was_sharer = self.caches.directory.is_sharer(line, tile);
+        LineCtx {
+            requestor: tile,
+            home,
+            others: self.caches.directory.sharer_count(line) - u32::from(was_sharer),
+            was_sharer,
+            owner: self.caches.owner_of(line),
+            links_on: self.contention.coherence_enabled(),
+        }
+    }
+
     // ------------------------------------------------------------------
     // Per-line reference walk (the pre-page-run implementation, kept as
     // the cycle-exactness oracle and perf baseline).
@@ -363,6 +431,7 @@ impl Engine {
             .table
             .resolve_home(line, tile)
             .map_err(|_| EngineError::Unmapped(line.addr()))?;
+        let home = self.map_home(home);
         self.stats.line_accesses += 1;
         if !self.caches_enabled {
             return self.uncached_access(tile, line, home, write, now);
@@ -440,17 +509,20 @@ impl Engine {
         now: u64,
     ) -> Result<u64, EngineError> {
         let place = self.caches.read(tile, line, home);
-        if place == crate::cache::ReadPlace::Ddr {
+        let ctrl = if place == crate::cache::ReadPlace::Ddr {
             // Only the DRAM path needs the controller (lazy lookup — this
             // is the reference walk's hottest function).
-            let ctrl = self
-                .alloc
+            self.alloc
                 .table
                 .controller_of_line(line)
-                .map_err(|_| EngineError::Unmapped(line.addr()))?;
-            return Ok(self.bill_load(tile, line, home, place, ctrl, now));
+                .map_err(|_| EngineError::Unmapped(line.addr()))?
+        } else {
+            0
+        };
+        if self.protocol_active {
+            return Ok(self.load_protocol(tile, line, home, place, ctrl, now));
         }
-        Ok(self.bill_load(tile, line, home, place, 0, now))
+        Ok(self.bill_load(tile, line, home, place, ctrl, now))
     }
 
     /// Latency + contention for a load that was satisfied at `place`.
@@ -521,6 +593,9 @@ impl Engine {
     /// invalidation-route and ack-reply accounting — is shared with the
     /// fast path by construction.
     fn store(&mut self, tile: TileId, line: LineId, home: TileId, now: u64) -> u64 {
+        if self.protocol_active {
+            return self.store_protocol(tile, line, home, now);
+        }
         let params = &self.params;
         let contention = &mut self.contention;
         let mut agg = StoreAgg::default();
@@ -530,6 +605,193 @@ impl Engine {
         });
         self.fold_store_agg(home, &agg);
         cycles
+    }
+
+    // ------------------------------------------------------------------
+    // Protocol-lab paths: line-state transitions come from the pluggable
+    // `coherence::Protocol`; the engine maps each `CoherenceAction` onto
+    // the existing latency terms and contention traffic classes. Only
+    // taken when `protocol_active` — the default protocol keeps the fused
+    // paths above, byte-identical to the pinned baselines.
+    // ------------------------------------------------------------------
+
+    /// Protocol-aware load. Local L1/L2 hits bypass the transition (a
+    /// foreign dirty owner implies no other tile holds a copy — see the
+    /// invariants on [`crate::coherence::Protocol`]); home/DDR placements
+    /// run `on_read` first so a dirty owner flushes (MESI) or forwards
+    /// the line directly (MOESI) before the data reply is billed.
+    fn load_protocol(
+        &mut self,
+        tile: TileId,
+        line: LineId,
+        home: TileId,
+        place: crate::cache::ReadPlace,
+        ctrl: u32,
+        now: u64,
+    ) -> u64 {
+        if matches!(
+            place,
+            crate::cache::ReadPlace::L1 | crate::cache::ReadPlace::L2
+        ) {
+            return self.bill_load(tile, line, home, place, ctrl, now);
+        }
+        let ctx = self.line_ctx(tile, line, home);
+        let line_flits = self.params.line_flits;
+        let mut cycles = 0u64;
+        let mut forwarded: Option<TileId> = None;
+        for action in self.protocol.on_read(&ctx) {
+            match action {
+                CoherenceAction::WritebackToHome { owner } => {
+                    // The dirty owner flushes a line of data to the home
+                    // before the home can serve.
+                    cycles += self.contention.reply_path_request(
+                        owner,
+                        home,
+                        now + cycles,
+                        line_flits,
+                    );
+                    self.caches.clear_owner(line);
+                }
+                CoherenceAction::OwnerReply { owner } => {
+                    // MOESI: the owner sources the data itself and keeps
+                    // the (now Owned) line — no flush to the home.
+                    self.stats.owner_replies += 1;
+                    forwarded = Some(owner);
+                }
+                _ => {}
+            }
+        }
+        if let Some(owner) = forwarded {
+            // The request still travels to the home directory, but the
+            // data reply is owner→requestor, not home→requestor.
+            self.stats.home_hits += 1;
+            self.stats.tile_home_requests[home.index()] += 1;
+            return cycles
+                + self.machine.access_cycles(tile, HitLevel::Home { home })
+                + self
+                    .contention
+                    .home_request(home, now + cycles, self.params.home_service)
+                + self.contention.link_path_request(tile, home, now + cycles)
+                + self
+                    .contention
+                    .reply_path_request(owner, tile, now + cycles, line_flits);
+        }
+        cycles + self.bill_load(tile, line, home, place, ctrl, now + cycles)
+    }
+
+    /// Protocol-aware store. The transition list from `on_write` decides
+    /// the billing; directory/cache mutation reuses the hierarchy's
+    /// claim/invalidate walk (or [`CacheSystem::write_update`] for the
+    /// non-invalidating protocol) so the scratch-mask contract of
+    /// multiword directories is untouched.
+    fn store_protocol(&mut self, tile: TileId, line: LineId, home: TileId, now: u64) -> u64 {
+        let ctx = self.line_ctx(tile, line, home);
+        let actions = self.protocol.on_write(&ctx);
+        let line_flits = self.params.line_flits;
+        let mut cycles = 0u64;
+        // Dirty-owner handoff first: the previous owner's line flushes to
+        // the home (MESI) or forwards to the writer (MOESI) before the
+        // write claims the line.
+        for &action in &actions {
+            match action {
+                CoherenceAction::WritebackToHome { owner } => {
+                    cycles += self.contention.reply_path_request(
+                        owner,
+                        home,
+                        now + cycles,
+                        line_flits,
+                    );
+                    self.caches.clear_owner(line);
+                }
+                CoherenceAction::OwnerReply { owner } => {
+                    self.stats.owner_replies += 1;
+                    cycles += self.contention.reply_path_request(
+                        owner,
+                        tile,
+                        now + cycles,
+                        line_flits,
+                    );
+                    self.caches.clear_owner(line);
+                }
+                _ => {}
+            }
+        }
+        if actions.contains(&CoherenceAction::SilentUpgrade) {
+            // E/M→M: the sole-sharer writer absorbs the store in its own
+            // cache — no traffic at all — and becomes the dirty owner the
+            // home will have to chase on the next foreign access.
+            self.stats.upgrade_hits += 1;
+            self.stats.l2_hits += 1;
+            self.caches.set_owner(line, tile);
+            self.caches.cache_locally(tile, line);
+            return cycles + self.params.l2_hit;
+        }
+        if actions.contains(&CoherenceAction::UpgradeRoundTrip) {
+            // MSI: S→M pays an explicit header-sized upgrade round trip
+            // to the home directory, billed on the invalidation class —
+            // the cost MESI's silent upgrade avoids.
+            self.stats.upgrade_hits += 1;
+            let hops = u64::from(self.machine.hops(tile, home));
+            cycles += self.params.noc_header + 2 * self.params.noc_hop * hops;
+            cycles += self
+                .contention
+                .invalidation_fanout_request(home, &[tile], now + cycles);
+        }
+        if self.protocol.kind() == ProtocolKind::WriteUpdate {
+            // Write-update: sharers keep their copies valid and receive
+            // the new data in place of an invalidation.
+            let victims = self.caches.write_update(tile, line, home);
+            cycles += if home == tile {
+                self.stats.l2_hits += 1;
+                self.params.l2_hit
+            } else {
+                self.stats.home_hits += 1;
+                self.stats.tile_home_requests[home.index()] += 1;
+                self.params.store_post
+                    + self
+                        .contention
+                        .home_request(home, now + cycles, self.params.home_service)
+                    + self.contention.link_path_request(tile, home, now + cycles)
+                    + self
+                        .contention
+                        .reply_path_request(home, tile, now + cycles, 1)
+            };
+            if !victims.is_empty() {
+                let max_hops = victims
+                    .iter()
+                    .map(|&v| self.machine.hops(home, v))
+                    .max()
+                    .unwrap_or(0);
+                cycles += self.params.noc_header + self.params.noc_hop * u64::from(max_hops);
+                cycles += self.contention.update_fanout_request(
+                    home,
+                    &victims,
+                    now + cycles,
+                    line_flits,
+                );
+            }
+            return cycles;
+        }
+        // Invalidating protocols: mutate through the regular
+        // claim/invalidate walk, billed via the shared store map.
+        let params = &self.params;
+        let contention = &mut self.contention;
+        let mut agg = StoreAgg::default();
+        let mut base = 0u64;
+        self.caches.write_run(tile, line, 1, home, |_line, out, victims| {
+            base = bill_store_line(
+                params,
+                contention,
+                tile,
+                home,
+                out,
+                victims,
+                now + cycles,
+                &mut agg,
+            );
+        });
+        self.fold_store_agg(home, &agg);
+        cycles + base
     }
 
     // ------------------------------------------------------------------
@@ -551,6 +813,7 @@ impl Engine {
             .homing
             .home_of(line, self.machine.num_tiles())
             .expect("page attr resolved");
+        let home = self.map_home(home);
         if !self.caches_enabled {
             let ctrl = attr
                 .placement
@@ -567,6 +830,9 @@ impl Engine {
         } else {
             0
         };
+        if self.protocol_active {
+            return self.load_protocol(tile, line, home, place, ctrl, now);
+        }
         self.bill_load(tile, line, home, place, ctrl, now)
     }
 
@@ -609,8 +875,14 @@ impl Engine {
         attr: PageAttr,
         clock0: u64,
     ) -> u64 {
-        if self.caches_enabled {
+        // With an active protocol every line must run its own state
+        // transition, so bulk same-home runs are skipped and the per-line
+        // walk below (identical to the reference walk's dispatch) is
+        // forced — streamed, recorded, and reference replays then agree
+        // by construction.
+        if self.caches_enabled && !self.protocol_active {
             if let Some(home) = attr.homing.uniform_page_home(first, self.machine.num_tiles()) {
+                let home = self.map_home(home);
                 return if write {
                     self.write_run(tile, first, count, home, clock0)
                 } else {
@@ -847,6 +1119,7 @@ impl Engine {
                 std::mem::take(&mut self.contention.link_reply_requests);
             self.stats.link_inval_requests =
                 std::mem::take(&mut self.contention.link_inval_requests);
+            self.stats.update_fanout_cycles = self.contention.update_fanout_cycles;
         }
         self.stats.allocs = self.alloc.allocs;
         self.stats.frees = self.alloc.frees;
@@ -984,6 +1257,31 @@ impl Engine {
                 let region = slots[slot as usize]
                     .take()
                     .ok_or(EngineError::UnboundSlot { thread: tid, slot })?;
+                // Dirty owners in the dying range (MESI/MOESI silent
+                // upgrades leave the home stale) flush before the pages
+                // are torn down — the last chance to bill those lines.
+                let mut flush = 0u64;
+                if self.protocol_active {
+                    let first = region.addr.line();
+                    let last = VAddr(region.addr.0 + region.bytes - 1).line();
+                    for (line, owner) in self.caches.owners_in_range(first, last) {
+                        let home = match self.alloc.table.resolve_home(line, owner) {
+                            Ok(h) => self.map_home(h),
+                            Err(_) => owner,
+                        };
+                        let ctx = self.line_ctx(owner, line, home);
+                        for action in self.protocol.on_evict(&ctx) {
+                            if let CoherenceAction::WritebackToHome { .. } = action {
+                                flush += self.contention.reply_path_request(
+                                    owner,
+                                    home,
+                                    clock0 + flush,
+                                    self.params.line_flits,
+                                );
+                            }
+                        }
+                    }
+                }
                 let freed = self
                     .alloc
                     .free(region.addr)
@@ -993,7 +1291,7 @@ impl Engine {
                 let last = VAddr(freed.addr.0 + freed.bytes - 1).line();
                 self.caches.purge_line_range(first, last);
                 let t = &mut threads[tid];
-                t.clock += FREE_BASE_CYCLES;
+                t.clock += FREE_BASE_CYCLES + flush;
                 t.cur = None;
                 Ok(StepResult::Progress(1))
             }
@@ -1367,6 +1665,195 @@ mod tests {
         assert!(!with.link_requests.is_empty());
         assert_eq!(without.link_queue_cycles, 0);
         assert!(without.link_requests.is_empty());
+    }
+
+    // ------------------------------------------------------------------
+    // Protocol lab: the pluggable coherence protocols.
+    // ------------------------------------------------------------------
+
+    /// Baseline chip with full link + coherence modelling and a protocol.
+    fn protocol_cfg(spec: ProtocolSpec) -> EngineConfig {
+        EngineConfig::tilepro64(MemConfig {
+            hash_policy: HashPolicy::None,
+            striping: true,
+        })
+        .with_link_contention()
+        .with_protocol(spec)
+    }
+
+    /// One thread on tile 1 makes four passes of writes over a page homed
+    /// on tile 0: pass 1 claims every line, passes 2–4 are sole-sharer
+    /// rewrites — the exact access shape the protocols disagree on.
+    fn rewrite_ladder(spec: ProtocolSpec) -> RunStats {
+        let mut e = Engine::new(protocol_cfg(spec));
+        let r = e.prealloc_touched(TileId(0), PAGE_BYTES);
+        let mut b = TraceBuilder::new();
+        for _ in 0..4 {
+            b.write(Loc::Abs(r.addr), PAGE_BYTES);
+        }
+        let empty = TraceBuilder::new();
+        let mut p = Program::from_builders(vec![empty, b], 0, 0);
+        e.run(&mut p, &mut StaticMapper::new()).unwrap()
+    }
+
+    #[test]
+    fn sole_sharer_rewrites_separate_the_protocols() {
+        let wi = rewrite_ladder(ProtocolSpec::default());
+        let msi = rewrite_ladder(ProtocolSpec::new(ProtocolKind::Msi));
+        let mesi = rewrite_ladder(ProtocolSpec::new(ProtocolKind::Mesi));
+
+        // 64 lines × 3 rewrite passes upgrade under both MSI and MESI.
+        assert_eq!(wi.upgrade_hits, 0);
+        assert_eq!(msi.upgrade_hits, 192);
+        assert_eq!(mesi.upgrade_hits, 192);
+
+        // MSI's upgrades are round trips billed on the invalidation
+        // class; MESI's are silent — zero coherence packets.
+        assert!(msi.link_inval_requests.iter().sum::<u64>() > 0);
+        assert_eq!(mesi.link_inval_requests.iter().sum::<u64>(), 0);
+
+        // Single writer thread, so makespans compose additively: MSI is
+        // write-invalidate plus a strictly positive upgrade per rewrite.
+        assert!(msi.makespan_cycles > wi.makespan_cycles);
+
+        // MESI rewrites never touch the home (one posted pass instead of
+        // four) and absorb the stores locally.
+        assert!(mesi.home_hits < wi.home_hits);
+        assert!(mesi.l2_hits > wi.l2_hits);
+    }
+
+    #[test]
+    fn moesi_owner_forwards_what_mesi_flushes() {
+        let run = |spec: ProtocolSpec| {
+            let mut e = Engine::new(protocol_cfg(spec));
+            let r = e.prealloc_touched(TileId(0), 64);
+            // Writer on tile 1: the second write silently upgrades it to
+            // dirty owner; reader on tile 2 then misses to the home.
+            let mut w = TraceBuilder::new();
+            w.write(Loc::Abs(r.addr), 64)
+                .write(Loc::Abs(r.addr), 64)
+                .signal(0);
+            let mut rd = TraceBuilder::new();
+            rd.wait(0).read(Loc::Abs(r.addr), 64);
+            let empty = TraceBuilder::new();
+            let mut p = Program::from_builders(vec![empty, w, rd], 0, 1);
+            e.run(&mut p, &mut StaticMapper::new()).unwrap()
+        };
+        let mesi = run(ProtocolSpec::new(ProtocolKind::Mesi));
+        let moesi = run(ProtocolSpec::new(ProtocolKind::Moesi));
+        assert!(mesi.upgrade_hits > 0 && moesi.upgrade_hits > 0);
+        assert_eq!(mesi.owner_replies, 0, "MESI flushes home, never forwards");
+        assert!(moesi.owner_replies > 0, "MOESI owner must source the read");
+    }
+
+    #[test]
+    fn write_update_keeps_reader_copies_valid() {
+        let run = |spec: ProtocolSpec| {
+            let mut e = Engine::new(protocol_cfg(spec));
+            let r = e.prealloc_touched(TileId(0), PAGE_BYTES);
+            // Reader on tile 1 caches the page, writer on tile 2 storms
+            // over it, reader re-reads.
+            let mut a = TraceBuilder::new();
+            a.read(Loc::Abs(r.addr), PAGE_BYTES)
+                .signal(0)
+                .wait(1)
+                .read(Loc::Abs(r.addr), PAGE_BYTES);
+            let mut w = TraceBuilder::new();
+            w.wait(0).write(Loc::Abs(r.addr), PAGE_BYTES).signal(1);
+            let empty = TraceBuilder::new();
+            let mut p = Program::from_builders(vec![empty, a, w], 0, 2);
+            e.run(&mut p, &mut StaticMapper::new()).unwrap()
+        };
+        let wi = run(ProtocolSpec::default());
+        let wu = run(ProtocolSpec::new(ProtocolKind::WriteUpdate));
+        // Write-invalidate kills the reader's copies; write-update sends
+        // data instead, so the re-read stays in L1.
+        assert!(wi.invalidations > 0);
+        assert_eq!(wu.invalidations, 0);
+        assert!(wu.l1_hits > wi.l1_hits);
+        // The update fan-out is real traffic on the coherence class.
+        assert!(wu.link_inval_requests.iter().sum::<u64>() > 0);
+    }
+
+    #[test]
+    fn opaque_permutes_homes_deterministically() {
+        let run = |spec: ProtocolSpec| {
+            let cfg = EngineConfig::tilepro64(MemConfig {
+                hash_policy: HashPolicy::AllButStack,
+                striping: true,
+            })
+            .with_protocol(spec);
+            let mut e = Engine::new(cfg);
+            let r = e.prealloc(TileId(0), 1 << 20);
+            let mk = |addr| {
+                let mut b = TraceBuilder::new();
+                b.read(Loc::Abs(addr), 1 << 20);
+                b
+            };
+            let mut p = Program::from_builders(vec![mk(r.addr), mk(r.addr)], 0, 0);
+            e.run(&mut p, &mut StaticMapper::new()).unwrap()
+        };
+        let a = run(ProtocolSpec::parse("opaque").unwrap());
+        let b = run(ProtocolSpec::parse("opaque").unwrap());
+        let base = run(ProtocolSpec::default());
+        let reseeded = run(ProtocolSpec::parse("opaque@7").unwrap());
+        assert_eq!(a.to_json().encode(), b.to_json().encode(), "seeded = repeatable");
+        assert_ne!(
+            a.tile_home_requests, base.tile_home_requests,
+            "the permutation must move the home traffic"
+        );
+        assert_ne!(
+            a.tile_home_requests, reseeded.tile_home_requests,
+            "a different seed is a different placement"
+        );
+    }
+
+    #[test]
+    fn protocols_collapse_to_the_default_when_links_are_off() {
+        // The engagement rule: without modelled coherence traffic there is
+        // nothing for a protocol to bill, so every variant must replay the
+        // paper-baseline (links-off) record byte-identically.
+        let run = |spec: ProtocolSpec| {
+            let cfg = EngineConfig::tilepro64(MemConfig {
+                hash_policy: HashPolicy::None,
+                striping: true,
+            })
+            .with_protocol(spec);
+            let mut e = Engine::new(cfg);
+            let r = e.prealloc_touched(TileId(0), PAGE_BYTES);
+            let mut b = TraceBuilder::new();
+            b.write(Loc::Abs(r.addr), PAGE_BYTES)
+                .write(Loc::Abs(r.addr), PAGE_BYTES)
+                .read(Loc::Abs(r.addr), PAGE_BYTES);
+            let empty = TraceBuilder::new();
+            let mut p = Program::from_builders(vec![empty, b], 0, 0);
+            e.run(&mut p, &mut StaticMapper::new()).unwrap()
+        };
+        let base = run(ProtocolSpec::default()).to_json().encode();
+        for spec in ProtocolSpec::all() {
+            if spec.permutes_homes() {
+                continue; // opaque intentionally moves homes even off-link
+            }
+            assert_eq!(
+                run(spec).to_json().encode(),
+                base,
+                "{} must be inert without coherence links",
+                spec.label()
+            );
+        }
+    }
+
+    #[test]
+    fn explicit_write_invalidate_is_the_pinned_default() {
+        // `--protocol write-invalidate` must be a spelling of the default,
+        // not a near-copy: byte-identical stats even with links on.
+        let run = |spec: ProtocolSpec| rewrite_ladder(spec);
+        assert_eq!(
+            run(ProtocolSpec::default()).to_json().encode(),
+            run(ProtocolSpec::parse("write-invalidate").unwrap())
+                .to_json()
+                .encode()
+        );
     }
 
     #[test]

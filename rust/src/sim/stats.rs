@@ -34,6 +34,16 @@ pub struct RunStats {
     /// Link-queueing cycles billed to invalidation fan-out + ack routes
     /// (zero unless coherence-link billing ran).
     pub invalidation_link_cycles: u64,
+    /// Ownership upgrades a non-default protocol performed: MESI/MOESI
+    /// silent E→M writes plus MSI S→M upgrade round trips. Zero — and
+    /// absent from JSON — under the default write-invalidate protocol.
+    pub upgrade_hits: u64,
+    /// Reads served by a dirty owner forwarding the line directly to the
+    /// requestor (MOESI O-state serves). Same zero/absent contract.
+    pub owner_replies: u64,
+    /// Link-queueing cycles billed to write-update data fan-out. Same
+    /// zero/absent contract.
+    pub update_fanout_cycles: u64,
     pub compute_cycles: u64,
     pub allocs: u64,
     pub frees: u64,
@@ -71,6 +81,9 @@ impl Default for RunStats {
             link_queue_cycles: 0,
             reply_link_cycles: 0,
             invalidation_link_cycles: 0,
+            upgrade_hits: 0,
+            owner_replies: 0,
+            update_fanout_cycles: 0,
             compute_cycles: 0,
             allocs: 0,
             frees: 0,
@@ -193,6 +206,21 @@ impl RunStats {
                 Json::num(self.link_inval_requests.iter().sum::<u64>() as f64),
             ));
         }
+        // Per-protocol counters appear only when a non-default protocol
+        // actually produced them: every pinned default-protocol record —
+        // with or without link modelling — keeps its bytes.
+        if self.upgrade_hits > 0 {
+            fields.push(("upgrade_hits", Json::num(self.upgrade_hits as f64)));
+        }
+        if self.owner_replies > 0 {
+            fields.push(("owner_replies", Json::num(self.owner_replies as f64)));
+        }
+        if self.update_fanout_cycles > 0 {
+            fields.push((
+                "update_fanout_cycles",
+                Json::num(self.update_fanout_cycles as f64),
+            ));
+        }
         Json::obj(fields)
     }
 
@@ -206,8 +234,18 @@ impl RunStats {
         } else {
             String::new()
         };
+        let mut proto = String::new();
+        if self.upgrade_hits > 0 {
+            proto.push_str(&format!(" upgrades {}", self.upgrade_hits));
+        }
+        if self.owner_replies > 0 {
+            proto.push_str(&format!(" owner-replies {}", self.owner_replies));
+        }
+        if self.update_fanout_cycles > 0 {
+            proto.push_str(&format!(" update-fanout {}", self.update_fanout_cycles));
+        }
         format!(
-            "{:.3} ms | {} accesses | hits L1 {:.1}% L2 {:.1}% home {:.1}% ddr {:.1}% | {} inval | {} migr | queue home {} ctrl {}{}",
+            "{:.3} ms | {} accesses | hits L1 {:.1}% L2 {:.1}% home {:.1}% ddr {:.1}% | {} inval | {} migr | queue home {} ctrl {}{}{proto}",
             self.seconds() * 1e3,
             self.line_accesses,
             pct(self.l1_hits, self.line_accesses),
@@ -337,6 +375,35 @@ mod tests {
             "2"
         );
         assert!(linked.summary().contains("inval-link 9"));
+    }
+
+    #[test]
+    fn protocol_counters_gated_on_nonzero() {
+        // Default-protocol stats (all three zero) keep their bytes even
+        // when links were modelled.
+        let plain = RunStats {
+            link_requests: vec![1, 0, 0, 0],
+            ..Default::default()
+        };
+        let j = plain.to_json();
+        assert!(j.get("upgrade_hits").is_none());
+        assert!(j.get("owner_replies").is_none());
+        assert!(j.get("update_fanout_cycles").is_none());
+        let s = RunStats {
+            upgrade_hits: 3,
+            owner_replies: 2,
+            update_fanout_cycles: 11,
+            ..Default::default()
+        };
+        let j = s.to_json();
+        assert_eq!(j.get("upgrade_hits").unwrap().encode(), "3");
+        assert_eq!(j.get("owner_replies").unwrap().encode(), "2");
+        assert_eq!(j.get("update_fanout_cycles").unwrap().encode(), "11");
+        let line = s.summary();
+        assert!(line.contains("upgrades 3"));
+        assert!(line.contains("owner-replies 2"));
+        assert!(line.contains("update-fanout 11"));
+        assert!(!plain.summary().contains("upgrades"));
     }
 
     #[test]

@@ -2,8 +2,12 @@
 //!
 //! Supports `--flag`, `--key value`, `--key=value`, and positional args.
 //! Unknown flags are an error so typos in experiment sweeps fail loudly
-//! instead of silently running the wrong configuration.
+//! instead of silently running the wrong configuration. [`TargetSpec`] is
+//! the shared resolution of the target-selection flags (`--machine`,
+//! `--fabric`, `--protocol`, link billing) with one conflict-error path.
 
+use crate::arch::{FabricSpec, MachineSpec};
+use crate::coherence::ProtocolSpec;
 use std::collections::BTreeMap;
 
 #[derive(Debug)]
@@ -11,6 +15,10 @@ pub enum CliError {
     UnknownFlag(String),
     MissingValue(String),
     BadValue(String, String),
+    /// Two flags that cannot be combined — the one conflict path every
+    /// target-selection error funnels through, so each message is a single
+    /// line naming the offending flag(s).
+    Conflict(String),
 }
 
 impl std::fmt::Display for CliError {
@@ -19,6 +27,7 @@ impl std::fmt::Display for CliError {
             CliError::UnknownFlag(name) => write!(f, "unknown flag --{name}"),
             CliError::MissingValue(name) => write!(f, "flag --{name} expects a value"),
             CliError::BadValue(name, v) => write!(f, "invalid value for --{name}: {v}"),
+            CliError::Conflict(msg) => write!(f, "{msg}"),
         }
     }
 }
@@ -125,6 +134,108 @@ impl Args {
     }
 }
 
+/// The simulated target named on a command line: machine grid, optional
+/// fabric overlay, link/coherence billing, and coherence protocol.
+///
+/// Every subcommand used to re-implement fragments of this resolution by
+/// hand; [`TargetSpec::from_args`] is now the single parse + conflict path
+/// for `--machine`, `--fabric`, `--protocol`, and the link-billing
+/// switches, so a conflict is always a one-line [`CliError::Conflict`]
+/// naming the flag instead of a silently ignored setting.
+#[derive(Debug, Clone)]
+pub struct TargetSpec {
+    pub machine: MachineSpec,
+    pub fabric: Option<FabricSpec>,
+    pub link_contention: bool,
+    pub coherence_links: bool,
+    pub protocol: ProtocolSpec,
+}
+
+impl TargetSpec {
+    /// Resolve the target from parsed args.
+    ///
+    /// - `--fabric` may lead with its own machine clause
+    ///   (`--fabric 8x8:ctrl=corners:…`); naming the machine there *and*
+    ///   in `--machine` is a conflict. Only the syntax is checked here —
+    ///   whether the fabric fits the machine is validated by each
+    ///   subcommand's capacity path, so ladder sweeps get to report their
+    ///   own flag conflicts first.
+    /// - Link contention defaults on for every machine except the
+    ///   paper-baseline tilepro64 (whose published figure record predates
+    ///   the link model) and whenever a fabric is applied; coherence-link
+    ///   billing follows it. `--[no-]link-contention` /
+    ///   `--[no-]coherence-links` override either way.
+    /// - A non-default directory protocol only engages on the coherence
+    ///   link servers, so it defaults the billing ON; explicitly turning
+    ///   the links off underneath it is a conflict, not a silent collapse
+    ///   to the default protocol. (`opaque` is exempt: home permutation
+    ///   works with the links off.)
+    pub fn from_args(args: &Args) -> Result<TargetSpec, CliError> {
+        let machine_flag = match args.get("machine") {
+            None => None,
+            Some(s) => Some(
+                MachineSpec::parse(s)
+                    .map_err(|e| CliError::BadValue("machine".into(), e.to_string()))?,
+            ),
+        };
+        let (fabric_machine, fabric) = match args.get("fabric") {
+            None => (None, None),
+            Some(s) => {
+                let (m, f) = FabricSpec::parse(s)
+                    .map_err(|e| CliError::BadValue("fabric".into(), e.to_string()))?
+                    .split_machine();
+                (m, if f.is_noop() { None } else { Some(f) })
+            }
+        };
+        let machine = match (machine_flag, fabric_machine) {
+            (Some(_), Some(_)) => {
+                return Err(CliError::Conflict(
+                    "--machine conflicts with the machine clause in --fabric: name the \
+                     machine in one place"
+                        .into(),
+                ))
+            }
+            (Some(m), None) | (None, Some(m)) => m,
+            (None, None) => MachineSpec::TilePro64,
+        };
+        let protocol = match args.get("protocol") {
+            None => ProtocolSpec::default(),
+            Some(s) => {
+                ProtocolSpec::parse(s).map_err(|e| CliError::BadValue("protocol".into(), e))?
+            }
+        };
+        let needs_links = !protocol.is_default() && !protocol.permutes_homes();
+        let link_contention = if args.flag("no-link-contention") {
+            false
+        } else if args.flag("link-contention") || needs_links {
+            true
+        } else {
+            machine != MachineSpec::TilePro64 || fabric.is_some()
+        };
+        let coherence_links = if args.flag("no-coherence-links") {
+            false
+        } else if args.flag("coherence-links") {
+            true
+        } else {
+            link_contention
+        };
+        if needs_links && !(link_contention && coherence_links) {
+            return Err(CliError::Conflict(format!(
+                "--protocol {} needs coherence-link billing: drop --no-link-contention / \
+                 --no-coherence-links (or use the default protocol)",
+                protocol.label()
+            )));
+        }
+        Ok(TargetSpec {
+            machine,
+            fabric,
+            link_contention,
+            coherence_links,
+            protocol,
+        })
+    }
+}
+
 /// Accepts plain integers plus `k`/`m`/`g` suffixes (binary-ish decimal:
 /// 1k = 1000) and `ki`/`mi` (1024-based), e.g. `--size 100m`.
 pub fn parse_usize(s: &str) -> Option<usize> {
@@ -198,5 +309,71 @@ mod tests {
     fn bad_numeric_value_errors() {
         let a = Args::parse(&argv("--size nope"), &["size"], &[]).unwrap();
         assert!(a.usize("size", 0).is_err());
+    }
+
+    const TARGET_VALUES: &[&str] = &["machine", "fabric", "protocol"];
+    const TARGET_BOOLS: &[&str] = &[
+        "link-contention",
+        "no-link-contention",
+        "coherence-links",
+        "no-coherence-links",
+    ];
+
+    fn target(s: &str) -> Result<TargetSpec, CliError> {
+        TargetSpec::from_args(&Args::parse(&argv(s), TARGET_VALUES, TARGET_BOOLS).unwrap())
+    }
+
+    #[test]
+    fn target_defaults_to_the_paper_baseline() {
+        let t = target("").unwrap();
+        assert_eq!(t.machine, MachineSpec::TilePro64);
+        assert!(t.fabric.is_none());
+        assert!(!t.link_contention && !t.coherence_links);
+        assert!(t.protocol.is_default());
+    }
+
+    #[test]
+    fn target_off_baseline_machine_turns_links_on() {
+        let t = target("--machine nuca256").unwrap();
+        assert!(t.link_contention && t.coherence_links);
+        let t = target("--machine nuca256 --no-link-contention").unwrap();
+        assert!(!t.link_contention && !t.coherence_links);
+    }
+
+    #[test]
+    fn target_machine_in_two_places_is_one_conflict_line() {
+        let err = target("--machine nuca256 --fabric 8x8:ctrl=corners").unwrap_err();
+        assert!(matches!(err, CliError::Conflict(_)));
+        assert!(err.to_string().contains("--machine"), "{err}");
+    }
+
+    #[test]
+    fn target_protocol_defaults_links_on() {
+        let t = target("--protocol mesi").unwrap();
+        assert!(t.link_contention && t.coherence_links);
+        assert_eq!(t.protocol.label(), "mesi");
+        // The paper baseline stays links-off when the protocol is default.
+        assert!(!target("--protocol write-invalidate").unwrap().link_contention);
+    }
+
+    #[test]
+    fn target_protocol_with_links_off_is_a_conflict() {
+        for flags in ["--protocol msi --no-link-contention", "--protocol moesi --no-coherence-links"]
+        {
+            let err = target(flags).unwrap_err();
+            assert!(matches!(err, CliError::Conflict(_)), "{flags}: {err}");
+            assert!(err.to_string().contains("--protocol"), "{err}");
+        }
+        // Opaque permutes homes without the link servers: no conflict.
+        let t = target("--protocol opaque@7 --no-link-contention").unwrap();
+        assert!(!t.link_contention && t.protocol.permutes_homes());
+    }
+
+    #[test]
+    fn target_bad_protocol_is_a_bad_value() {
+        assert!(matches!(
+            target("--protocol mosi").unwrap_err(),
+            CliError::BadValue(_, _)
+        ));
     }
 }

@@ -338,6 +338,114 @@ fn heterogeneous_fabric_streamed_equals_recorded_equals_reference() {
 }
 
 #[test]
+fn every_protocol_streamed_equals_recorded_equals_reference() {
+    // The protocol layer's equivalence story: when a directory protocol is
+    // active the engine forces per-line accounting (the bulk page-run path
+    // is skipped), so the streamed, recorded, and per-line reference
+    // replays must keep producing byte-identical stats and per-link class
+    // vectors for *every* protocol, not just the fused default.
+    use tilesim::coherence::ProtocolSpec;
+    use tilesim::workloads::pingpong::{self, PingPongConfig};
+
+    let builds: Vec<(&str, Box<dyn Fn(&mut Engine) -> Program>)> = vec![
+        (
+            "microbench",
+            Box::new(|e: &mut Engine| {
+                microbench::build(
+                    e,
+                    &MicrobenchConfig {
+                        elems: 1 << 13,
+                        threads: 8,
+                        reps: 3,
+                        localised: false,
+                    },
+                )
+            }),
+        ),
+        (
+            "mergesort",
+            Box::new(|e: &mut Engine| {
+                mergesort::build(
+                    e,
+                    &MergesortConfig {
+                        elems: 1 << 12,
+                        threads: 6,
+                        variant: Variant::NonLocalised,
+                    },
+                )
+            }),
+        ),
+        (
+            "pingpong",
+            Box::new(|e: &mut Engine| {
+                pingpong::build(
+                    e,
+                    &PingPongConfig {
+                        elems: 1 << 11,
+                        threads: 8,
+                        passes: 3,
+                        localised: false,
+                    },
+                )
+            }),
+        ),
+    ];
+    for protocol in ProtocolSpec::all() {
+        for (label, build) in &builds {
+            let label = format!("{} under {}", label, protocol.label());
+            let mk_cfg = || {
+                let mut c = cfg(HashPolicy::AllButStack).with_protocol(protocol);
+                c.contention.links = true;
+                c.contention.coherence = true;
+                c
+            };
+            let mut e_stream = Engine::new(mk_cfg());
+            let mut streamed = build(&mut e_stream);
+            let mut e_rec = Engine::new(mk_cfg());
+            let _ = build(&mut e_rec);
+            let mut recorded =
+                Program::from_ops(streamed.record(), streamed.num_slots, streamed.num_events);
+            let mut e_ref = Engine::new(mk_cfg().without_page_runs());
+            let mut for_ref = build(&mut e_ref);
+
+            let s_stream = e_stream
+                .run(&mut streamed, &mut StaticMapper::new())
+                .unwrap_or_else(|e| panic!("{label} streamed: {e}"));
+            let s_rec = e_rec
+                .run(&mut recorded, &mut StaticMapper::new())
+                .unwrap_or_else(|e| panic!("{label} recorded: {e}"));
+            let s_ref = e_ref
+                .run(&mut for_ref, &mut StaticMapper::new())
+                .unwrap_or_else(|e| panic!("{label} reference: {e}"));
+
+            let js = s_stream.to_json().encode();
+            assert_eq!(
+                js,
+                s_rec.to_json().encode(),
+                "{label}: streamed vs recorded stats diverged"
+            );
+            assert_eq!(
+                js,
+                s_ref.to_json().encode(),
+                "{label}: fast path vs reference walk diverged"
+            );
+            assert_eq!(
+                s_stream.link_requests, s_ref.link_requests,
+                "{label}: per-link traffic diverged"
+            );
+            assert_eq!(
+                s_stream.link_reply_requests, s_ref.link_reply_requests,
+                "{label}: reply-class traffic diverged"
+            );
+            assert_eq!(
+                s_stream.link_inval_requests, s_ref.link_inval_requests,
+                "{label}: invalidation-class traffic diverged"
+            );
+        }
+    }
+}
+
+#[test]
 fn streamed_equals_recorded_under_migrating_scheduler() {
     // The pull-based loop must interleave identically when the scheduler
     // migrates threads mid-run (same seed ⇒ same migration schedule).

@@ -1,0 +1,204 @@
+//! Conformance suite for the pluggable coherence protocols.
+//!
+//! Pins the contracts the protocol API redesign promises:
+//!
+//! 1. **Pinned baseline.** The default protocol (write-invalidate, the
+//!    fused billing path the paper's figures were recorded on) is
+//!    byte-identical whether it is left unspecified or named explicitly.
+//! 2. **Links-off collapse.** A directory protocol only engages on the
+//!    coherence link servers; with the links off every non-opaque protocol
+//!    replays byte-identically to the default.
+//! 3. **Counter hygiene.** Each per-protocol counter moves only under the
+//!    protocols that define it, and the JSON record gates the new fields
+//!    on non-zero values so baseline records keep their exact shape.
+//! 4. **Determinism.** Every protocol replays byte-identically under the
+//!    same seed, and the opaque wrapper's permutation is a pure function
+//!    of its seed.
+
+use tilesim::coherence::ProtocolSpec;
+use tilesim::mem::{HashPolicy, MemConfig};
+use tilesim::sched::StaticMapper;
+use tilesim::sim::{Engine, EngineConfig, RunStats};
+use tilesim::workloads::mergesort::{self, MergesortConfig, Variant};
+use tilesim::workloads::microbench::{self, MicrobenchConfig};
+use tilesim::workloads::pingpong::{self, PingPongConfig};
+
+fn cfg(protocol: ProtocolSpec, links: bool) -> EngineConfig {
+    let mut c = EngineConfig::tilepro64(MemConfig {
+        hash_policy: HashPolicy::AllButStack,
+        striping: true,
+    })
+    .with_protocol(protocol);
+    c.contention.links = links;
+    c.contention.coherence = links;
+    c
+}
+
+fn run_microbench(protocol: ProtocolSpec, links: bool) -> RunStats {
+    let mut e = Engine::new(cfg(protocol, links));
+    let mut p = microbench::build(
+        &mut e,
+        &MicrobenchConfig {
+            elems: 1 << 13,
+            threads: 8,
+            reps: 4,
+            localised: false,
+        },
+    );
+    e.run(&mut p, &mut StaticMapper::new()).expect("microbench")
+}
+
+fn run_pingpong(protocol: ProtocolSpec, links: bool) -> RunStats {
+    let mut e = Engine::new(cfg(protocol, links));
+    let mut p = pingpong::build(
+        &mut e,
+        &PingPongConfig {
+            elems: 1 << 11,
+            threads: 8,
+            passes: 4,
+            localised: false,
+        },
+    );
+    e.run(&mut p, &mut StaticMapper::new()).expect("pingpong")
+}
+
+fn run_mergesort(protocol: ProtocolSpec, links: bool) -> RunStats {
+    let mut e = Engine::new(cfg(protocol, links));
+    let mut p = mergesort::build(
+        &mut e,
+        &MergesortConfig {
+            elems: 1 << 12,
+            threads: 6,
+            variant: Variant::NonLocalised,
+        },
+    );
+    e.run(&mut p, &mut StaticMapper::new()).expect("mergesort")
+}
+
+#[test]
+fn explicit_default_protocol_is_byte_identical() {
+    // The acceptance pin: naming the default protocol must not perturb a
+    // single byte of the baseline record, links on or off.
+    let named = ProtocolSpec::parse("write-invalidate").unwrap();
+    for links in [false, true] {
+        let base = run_microbench(ProtocolSpec::default(), links);
+        let explicit = run_microbench(named, links);
+        assert_eq!(
+            base.to_json().encode(),
+            explicit.to_json().encode(),
+            "links={links}"
+        );
+    }
+}
+
+#[test]
+fn links_off_collapses_every_directory_protocol_to_the_default() {
+    for workload in [run_microbench, run_pingpong, run_mergesort] {
+        let base = workload(ProtocolSpec::default(), false).to_json().encode();
+        for p in ProtocolSpec::all() {
+            if p.permutes_homes() {
+                continue; // opaque re-homes lines even with the links off
+            }
+            assert_eq!(
+                workload(p, false).to_json().encode(),
+                base,
+                "protocol {} must be inert with the links off",
+                p.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn every_protocol_is_deterministic() {
+    for p in ProtocolSpec::all() {
+        let a = run_pingpong(p, true).to_json().encode();
+        let b = run_pingpong(p, true).to_json().encode();
+        assert_eq!(a, b, "protocol {} must replay identically", p.label());
+    }
+}
+
+#[test]
+fn upgrade_counters_move_only_under_their_protocols() {
+    // Microbench: each thread re-writes its private output chunk every
+    // rep, so sole-sharer upgrades fire under MSI/MESI/MOESI while the
+    // fused default path never counts one. No cross-thread sharing means
+    // write-update has nobody to fan out to.
+    let by_label: Vec<(String, RunStats)> = ProtocolSpec::all()
+        .into_iter()
+        .map(|p| (p.label(), run_microbench(p, true)))
+        .collect();
+    for (label, s) in &by_label {
+        match label.as_str() {
+            "write-invalidate" | "opaque" => {
+                assert_eq!(s.upgrade_hits, 0, "{label}");
+                assert_eq!(s.owner_replies, 0, "{label}");
+                assert_eq!(s.update_fanout_cycles, 0, "{label}");
+            }
+            "msi" | "mesi" | "moesi" => {
+                assert!(s.upgrade_hits > 0, "{label} must count upgrades");
+                assert_eq!(s.update_fanout_cycles, 0, "{label}");
+            }
+            "write-update" => {
+                assert_eq!(s.upgrade_hits, 0, "{label}");
+                assert_eq!(
+                    s.update_fanout_cycles, 0,
+                    "{label}: private chunks leave nobody to update"
+                );
+            }
+            other => panic!("unlabelled protocol {other}"),
+        }
+    }
+}
+
+#[test]
+fn shared_lines_engage_update_fanout_and_owner_replies() {
+    // The non-localised ping-pong writes adjacent-thread-shared lines:
+    // write-update must fan updates out to the other sharers, and MOESI's
+    // dirty owners must source replies instead of the home.
+    let wu = run_pingpong(ProtocolSpec::parse("write-update").unwrap(), true);
+    assert!(
+        wu.update_fanout_cycles > 0,
+        "write-update must bill update fan-out on shared lines"
+    );
+    let moesi = run_pingpong(ProtocolSpec::parse("moesi").unwrap(), true);
+    assert!(
+        moesi.owner_replies > 0,
+        "moesi must source replies from dirty owners"
+    );
+    let mesi = run_pingpong(ProtocolSpec::parse("mesi").unwrap(), true);
+    assert_eq!(mesi.owner_replies, 0, "mesi flushes through the home");
+}
+
+#[test]
+fn json_record_gates_the_new_counters() {
+    // Baseline records must keep their exact shape: the per-protocol
+    // counters appear only when non-zero.
+    let base = run_microbench(ProtocolSpec::default(), true).to_json().encode();
+    for key in ["upgrade_hits", "owner_replies", "update_fanout_cycles"] {
+        assert!(!base.contains(key), "baseline JSON must omit {key}");
+    }
+    let msi = run_microbench(ProtocolSpec::parse("msi").unwrap(), true)
+        .to_json()
+        .encode();
+    assert!(msi.contains("upgrade_hits"));
+}
+
+#[test]
+fn opaque_is_a_pure_function_of_its_seed() {
+    let a = run_mergesort(ProtocolSpec::parse("opaque").unwrap(), true);
+    let b = run_mergesort(ProtocolSpec::parse("opaque").unwrap(), true);
+    assert_eq!(a.to_json().encode(), b.to_json().encode());
+    let other_seed = run_mergesort(ProtocolSpec::parse("opaque@7").unwrap(), true);
+    assert_ne!(
+        a.to_json().encode(),
+        other_seed.to_json().encode(),
+        "a different opaque seed must re-home the traffic"
+    );
+    let base = run_mergesort(ProtocolSpec::default(), true);
+    assert_ne!(
+        a.to_json().encode(),
+        base.to_json().encode(),
+        "the permutation must move homes off the identity"
+    );
+}
