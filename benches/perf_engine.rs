@@ -21,7 +21,7 @@ use std::time::Instant;
 
 use tilesim::arch::{FabricSpec, Machine, TileId};
 use tilesim::coherence::ProtocolSpec;
-use tilesim::coordinator::batch::BatchRunner;
+use tilesim::coordinator::batch::{BatchRunner, RunSpec};
 use tilesim::coordinator::localise::{build_program, LocaliseConfig, ELEM_BYTES};
 use tilesim::coordinator::{case, experiment, ChunkKernel};
 use tilesim::harness::time_it;
@@ -246,6 +246,48 @@ fn main() {
         links_stats.link_queue_cycles
     );
 
+    // --- intra-run parallel engine: the same mergesort case-8 replay,
+    // sharded across host workers by the deterministic epoch driver
+    // (`--intra-jobs`). Stats are byte-identical at every worker count —
+    // asserted here, not assumed — so the only thing that moves is
+    // wall-clock; the speedup-vs-1-worker column is the record the
+    // intra-run parallelism PRs track (BENCH_engine.json `intra_engine`).
+    let intra_spec = RunSpec::mergesort(8, elems, 64, experiment::DEFAULT_SEED);
+    let intra_seq_json = intra_spec.execute_intra(1).to_json().encode();
+    let mut intra_rows = Vec::new();
+    let mut intra_seq_lps = 0.0_f64;
+    let mut intra_speedup_4w = 1.0_f64;
+    for workers in [1usize, 2, 4, 8] {
+        let stats = intra_spec.execute_intra(workers);
+        assert_eq!(
+            stats.to_json().encode(),
+            intra_seq_json,
+            "intra-jobs {workers} diverged from the sequential engine"
+        );
+        let t_w = time_it(0, 2, || {
+            std::hint::black_box(intra_spec.execute_intra(workers).makespan_cycles);
+        });
+        let lps = stats.line_accesses as f64 / t_w.min_s;
+        if workers == 1 {
+            intra_seq_lps = lps;
+        }
+        let speedup = lps / intra_seq_lps;
+        if workers == 4 {
+            intra_speedup_4w = speedup;
+        }
+        println!(
+            "intra-run engine: {workers} worker(s) = {:.1} M lines/s ({:.2}x vs sequential)",
+            lps / 1e6,
+            speedup
+        );
+        intra_rows.push(Json::obj(vec![
+            ("workers", Json::num(workers as f64)),
+            ("min_s", Json::num(t_w.min_s)),
+            ("lines_per_sec", Json::num(lps)),
+            ("speedup_vs_sequential", Json::num(speedup)),
+        ]));
+    }
+
     let engine_json = Json::obj(vec![
         ("bench", Json::str("replay_throughput")),
         ("workload", Json::str("seq-scan microbench")),
@@ -266,6 +308,8 @@ fn main() {
             "mergesort_case8_lines_per_sec",
             Json::num(events as f64 / t.min_s),
         ),
+        ("intra_engine", Json::arr(intra_rows)),
+        ("intra_speedup_4_workers", Json::num(intra_speedup_4w)),
     ]);
     let engine_path = std::env::var("TILESIM_BENCH_ENGINE_OUT")
         .unwrap_or_else(|_| "BENCH_engine.json".into());

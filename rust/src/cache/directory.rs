@@ -81,6 +81,19 @@ impl Directory {
             .unwrap_or(&[])
     }
 
+    /// OR the sharer masks of `count` consecutive lines starting at
+    /// `first` into `acc` (tile-bit layout, `acc.len() >= self.words`).
+    /// Read-only; the epoch planner uses it to find every tile a write
+    /// run could invalidate, so those tiles can be fenced out of the
+    /// parallel phase.
+    pub(crate) fn union_sharers(&self, first: LineId, count: u64, acc: &mut [u64]) {
+        for i in 0..count {
+            for (w, &m) in self.slot(LineId(first.0 + i)).iter().enumerate() {
+                acc[w] |= m;
+            }
+        }
+    }
+
     /// Record that `tile` now caches `line`.
     #[inline]
     pub fn add_sharer(&mut self, line: LineId, tile: TileId) {
@@ -133,6 +146,43 @@ impl Directory {
         self.slot(line)
             .get(tile.index() / 64)
             .is_some_and(|w| w & (1u64 << (tile.index() % 64)) != 0)
+    }
+
+    /// Whether any tile *other than* `tile` holds a tracked copy of `line`.
+    /// Read-only (`&self`): the intra-run parallel replay uses this as the
+    /// park predicate for epoch-phase-A stores — a foreign sharer means the
+    /// store would fan out invalidations, which must run on the sequential
+    /// phase-B path.
+    #[inline]
+    pub fn has_foreign_sharer(&self, line: LineId, tile: TileId) -> bool {
+        let (tword, tbit) = (tile.index() / 64, tile.index() % 64);
+        self.slot(line).iter().enumerate().any(|(w, &mask)| {
+            let m = if w == tword { mask & !(1u64 << tbit) } else { mask };
+            m != 0
+        })
+    }
+
+    /// Claim `line` for `writer`, *knowing* there are no other sharers
+    /// (checked by [`has_foreign_sharer`](Self::has_foreign_sharer) before
+    /// the epoch worker logged the claim). State-identical to the
+    /// no-other-sharer case of [`write_claim`](Self::write_claim) — sole
+    /// bit set, `tracked` bumped on first tracking — without touching the
+    /// multi-word scratch contract.
+    #[inline]
+    pub fn claim_local(&mut self, line: LineId, writer: TileId) {
+        let (word, bit) = (writer.index() / 64, writer.index() % 64);
+        let slot = self.slot_mut(line);
+        let was_zero = slot.iter().all(|&w| w == 0);
+        debug_assert!(
+            slot.iter().enumerate().all(|(w, &mask)| {
+                (if w == word { mask & !(1u64 << bit) } else { mask }) == 0
+            }),
+            "claim_local requires no foreign sharers"
+        );
+        slot[word] = 1u64 << bit;
+        if was_zero {
+            self.tracked += 1;
+        }
     }
 
     /// Fast-path write claim: make `writer` the sole sharer of `line` and

@@ -325,6 +325,15 @@ impl CacheSystem {
         &self.tiles[t.index()]
     }
 
+    /// Split borrow for the intra-run parallel replay: every tile's private
+    /// caches mutably (the driver hands each epoch worker a disjoint
+    /// sub-slice via `split_at_mut`) alongside a *shared* view of the
+    /// directory (workers read sharer masks for park decisions and log
+    /// their own-homed mutations for a sequential commit).
+    pub fn tiles_and_dir_mut(&mut self) -> (&mut [TileCaches], &Directory) {
+        (&mut self.tiles, &self.directory)
+    }
+
     /// Aggregate (hits, misses) over all private caches (reporting).
     pub fn totals(&self) -> (u64, u64) {
         self.tiles.iter().fold((0, 0), |(h, m), t| {

@@ -230,11 +230,20 @@ impl RunSpec {
 
     /// Build and replay this run on a fresh engine.
     pub fn execute(&self) -> RunStats {
+        self.execute_intra(1)
+    }
+
+    /// Replay this run with `intra_jobs` host workers parallelising the
+    /// replay *itself* (the epoch driver, see
+    /// [`crate::sim::plan_intra_workers`]). The worker count is an
+    /// execution strategy, deliberately not part of the spec: stats are
+    /// byte-identical at every count, so records never mention it.
+    pub fn execute_intra(&self, intra_jobs: usize) -> RunStats {
         let c = case(self.case_id);
         let machine = self.build_machine();
         let mut cfg = c.engine_config_on(machine.clone(), self.striping, self.link_contention);
         cfg.contention.coherence = self.coherence_links;
-        cfg = cfg.with_protocol(self.protocol);
+        cfg = cfg.with_protocol(self.protocol).with_intra_jobs(intra_jobs);
         if !self.caches {
             cfg = cfg.without_caches();
         }
@@ -602,6 +611,7 @@ impl ResultStore {
 /// The scoped-thread worker pool that shards runs across host cores.
 pub struct BatchRunner {
     jobs: usize,
+    intra_jobs: usize,
 }
 
 impl BatchRunner {
@@ -614,21 +624,48 @@ impl BatchRunner {
         } else {
             jobs
         };
-        BatchRunner { jobs }
+        BatchRunner {
+            jobs,
+            intra_jobs: 1,
+        }
     }
 
-    /// Honour `TILESIM_JOBS` if set, else use every host core. This is the
-    /// default path for the experiment drivers and bench binaries.
+    /// Honour `TILESIM_JOBS` / `TILESIM_INTRA_JOBS` if set, else use every
+    /// host core for the outer pool and sequential replay inside each run.
+    /// This is the default path for the experiment drivers and bench
+    /// binaries.
     pub fn auto() -> BatchRunner {
         let jobs = std::env::var("TILESIM_JOBS")
             .ok()
             .and_then(|v| v.parse().ok())
             .unwrap_or(0);
-        BatchRunner::new(jobs)
+        let intra = std::env::var("TILESIM_INTRA_JOBS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(1);
+        BatchRunner::new(jobs).with_intra_jobs(intra)
+    }
+
+    /// `--intra-jobs`: host workers *inside* each run (the epoch driver).
+    /// The thread budget is `jobs × intra_jobs`; the inner count is
+    /// clamped down so the product never oversubscribes the host — the
+    /// outer pool wins because independent runs scale perfectly while
+    /// intra-run replay only covers the fenced-off fraction of a window.
+    pub fn with_intra_jobs(mut self, intra_jobs: usize) -> BatchRunner {
+        let avail = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        self.intra_jobs = intra_jobs.max(1).min((avail / self.jobs).max(1));
+        self
     }
 
     pub fn jobs(&self) -> usize {
         self.jobs
+    }
+
+    /// Effective per-run worker count after the `jobs × intra_jobs` clamp.
+    pub fn intra_jobs(&self) -> usize {
+        self.intra_jobs
     }
 
     /// Execute every run of `spec` (baseline included) across the pool.
@@ -638,7 +675,7 @@ impl BatchRunner {
         if let Some(b) = &spec.baseline {
             all.push(b);
         }
-        let mut stats = execute_all(&all, self.jobs);
+        let mut stats = execute_all(&all, self.jobs, self.intra_jobs);
         let baseline = spec.baseline.as_ref().map(|_| stats.pop().expect("baseline"));
         ResultStore {
             results: stats,
@@ -660,10 +697,10 @@ impl Default for BatchRunner {
 
 /// Shard `runs` over `jobs` workers; results are index-aligned with the
 /// input regardless of which worker ran what.
-fn execute_all(runs: &[&RunSpec], jobs: usize) -> Vec<RunStats> {
+fn execute_all(runs: &[&RunSpec], jobs: usize, intra_jobs: usize) -> Vec<RunStats> {
     let jobs = jobs.max(1).min(runs.len().max(1));
     if jobs == 1 {
-        return runs.iter().map(|r| r.execute()).collect();
+        return runs.iter().map(|r| r.execute_intra(intra_jobs)).collect();
     }
     let next = AtomicUsize::new(0);
     let per_worker: Vec<Vec<(usize, RunStats)>> = std::thread::scope(|s| {
@@ -676,7 +713,7 @@ fn execute_all(runs: &[&RunSpec], jobs: usize) -> Vec<RunStats> {
                         if i >= runs.len() {
                             break;
                         }
-                        local.push((i, runs[i].execute()));
+                        local.push((i, runs[i].execute_intra(intra_jobs)));
                     }
                     local
                 })
@@ -740,6 +777,32 @@ mod tests {
             assert_eq!(a.makespan_cycles, b.makespan_cycles);
             assert_eq!(a.line_accesses, b.line_accesses);
         }
+    }
+
+    #[test]
+    fn intra_jobs_clamped_to_host_budget() {
+        let avail = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        // jobs = every core: no headroom left for intra-run workers.
+        let r = BatchRunner::new(avail).with_intra_jobs(8);
+        assert_eq!(r.intra_jobs(), 1);
+        // jobs = 1: the whole budget is available inside the run.
+        let r = BatchRunner::new(1).with_intra_jobs(avail);
+        assert_eq!(r.intra_jobs(), avail);
+        // Requests are floored at 1 either way.
+        assert_eq!(BatchRunner::new(1).with_intra_jobs(0).intra_jobs(), 1);
+    }
+
+    #[test]
+    fn intra_run_replay_matches_sequential() {
+        // The core determinism contract at the spec level: the same run
+        // replayed with intra-run workers produces byte-identical stats
+        // (prop_intra_run sweeps this across workloads and protocols).
+        let spec = RunSpec::mergesort(8, 1 << 14, 8, 42);
+        let seq = spec.execute_intra(1).to_json().encode();
+        let par = spec.execute_intra(4).to_json().encode();
+        assert_eq!(seq, par);
     }
 
     #[test]

@@ -14,7 +14,8 @@
 //! ```
 //!
 //! Common flags: `--size N` (supports k/m/ki/mi suffixes), `--threads N`,
-//! `--reps N`, `--case 1..8`, `--seed S`, `--jobs N`, `--no-striping`,
+//! `--reps N`, `--case 1..8`, `--seed S`, `--jobs N`, `--intra-jobs N`,
+//! `--no-striping`,
 //! `--json`, `--out DIR`. Target selection (`--machine`, `--fabric`,
 //! `--protocol`, link billing) resolves through
 //! [`tilesim::util::cli::TargetSpec`] so every subcommand shares one
@@ -50,6 +51,7 @@ const VALUE_FLAGS: &[&str] = &[
     "variant",
     "digit-bits",
     "jobs",
+    "intra-jobs",
     "cases",
     "threads-list",
     "workload",
@@ -112,7 +114,7 @@ fn run(argv: &[String]) -> Result<(), Box<dyn std::error::Error>> {
             emit_stats(
                 &args,
                 &run_label(&c.label(), &spec),
-                &spec.execute(),
+                &spec.execute_intra(args.usize("intra-jobs", 1)?),
                 target.machine,
                 target.fabric.as_ref(),
             );
@@ -145,7 +147,7 @@ fn run(argv: &[String]) -> Result<(), Box<dyn std::error::Error>> {
             emit_stats(
                 &args,
                 &run_label(&c.label(), &spec),
-                &spec.execute(),
+                &spec.execute_intra(args.usize("intra-jobs", 1)?),
                 target.machine,
                 target.fabric.as_ref(),
             );
@@ -171,7 +173,7 @@ fn run(argv: &[String]) -> Result<(), Box<dyn std::error::Error>> {
             emit_stats(
                 &args,
                 &label,
-                &spec.execute(),
+                &spec.execute_intra(args.usize("intra-jobs", 1)?),
                 target.machine,
                 target.fabric.as_ref(),
             );
@@ -223,7 +225,8 @@ fn run(argv: &[String]) -> Result<(), Box<dyn std::error::Error>> {
             for (_, spec) in &specs {
                 spec.check_thread_capacity()?;
             }
-            let runner = BatchRunner::new(args.usize("jobs", 0)?);
+            let runner = BatchRunner::new(args.usize("jobs", 0)?)
+                .with_intra_jobs(args.usize("intra-jobs", 1)?);
             let out = args.get("out").map(|s| s.to_string());
             for (name, spec) in &specs {
                 let t = runner.table(spec);
@@ -368,7 +371,8 @@ fn batch_cmd(
         .get(1)
         .map(|s| s.as_str())
         .unwrap_or("all");
-    let runner = BatchRunner::new(args.usize("jobs", 0)?);
+    let runner = BatchRunner::new(args.usize("jobs", 0)?)
+        .with_intra_jobs(args.usize("intra-jobs", 1)?);
     let out = args.get("out").map(|s| s.to_string());
     let specs = if which == "grid" {
         vec![(
@@ -611,14 +615,16 @@ fn falseshare_spec(args: &Args, seed: u64) -> Result<SweepSpec, Box<dyn std::err
 
 /// The grid axes `repro batch grid` understands, with their value syntax —
 /// listed verbatim in every axis-related error so a typo'd sweep explains
-/// itself instead of sending the user to the source.
+/// itself instead of sending the user to the source. Axes are listed in
+/// sorted (alphabetical) flag order, so the error text is stable as new
+/// axes land and easy to scan for the one you typo'd.
 const GRID_AXES_HELP: &str = "valid grid axes:\n  \
      --cases a,b,...        Table 1 case ids, each in 1..8 (default 1,3,8)\n  \
+     --seeds K              number of derived seeds (default 1)\n  \
      --sizes a,b,...        element counts, k/m/g or ki/mi/gi suffixes (default 1m)\n  \
      --threads-list a,b,... thread counts >= 1 (default 64)\n  \
-     --workload NAME        mergesort | microbench | radix (default mergesort)\n  \
      --variant a,b,...      mergesort only: non-localised | intermediate | localised\n  \
-     --seeds K              number of derived seeds (default 1)";
+     --workload NAME        mergesort | microbench | radix (default mergesort)";
 
 /// Build the explicit case × elems × threads × variant × seed grid from
 /// `--cases`, `--sizes`, `--threads-list`, `--workload`/`--variant`, and
@@ -889,7 +895,10 @@ fn print_usage() {
                    --link-contention / --no-link-contention (default: on off-baseline/fabric)\n\
                    --coherence-links / --no-coherence-links (default: follows link contention)\n\
          flags: --size N --threads N --reps N --case 1..8 --seed S --variant v\n\
-                --digit-bits B --jobs N --no-striping --no-cache --heatmap --json\n\
-                --out DIR --sizes a,b,c"
+                --digit-bits B --jobs N --intra-jobs N --no-striping --no-cache\n\
+                --heatmap --json --out DIR --sizes a,b,c\n\
+         intra-jobs: host workers *inside* each replay (deterministic epoch\n\
+                parallelism; stats are byte-identical at any count). Budget\n\
+                rule: jobs x intra-jobs is clamped to the host's cores."
     );
 }

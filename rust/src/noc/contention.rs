@@ -95,6 +95,77 @@ impl Server {
         self.free_at = start + service;
         start - arrival
     }
+
+    /// Serve `count` requests arriving at `now, now + stride, …`; returns
+    /// the total queueing delay — exactly `sum(request(now + i*stride))`.
+    ///
+    /// The bulk replay path issues one request per line with a fixed
+    /// inter-arrival stride (the uncontended per-line cost). Two regimes
+    /// have closed forms, which is what makes page-run batching O(1)
+    /// instead of O(lines):
+    ///
+    /// - **keeping up** (`stride >= service` and the first request finds
+    ///   the server idle): every request starts on arrival, total delay 0;
+    /// - **saturated** (`stride < service`): each request waits for the
+    ///   previous one's service; the backlog grows arithmetically by
+    ///   `service - stride` per request on top of any initial backlog.
+    ///
+    /// The mixed regime (initial backlog draining under `stride >=
+    /// service`) falls back to the per-request loop; it lasts at most
+    /// `backlog / (stride - service)` requests, so the fallback is rare
+    /// and short on the paths that matter.
+    fn request_batch(&mut self, now: u64, service: u64, stride: u64, count: u64) -> u64 {
+        if count == 0 {
+            return 0;
+        }
+        // Both closed forms need arrivals at exactly `now + i*stride`; a
+        // frontier ahead of `now` (stale-timestamp batch) would clamp the
+        // leading arrivals and break the arithmetic, so it takes the loop.
+        if self.last_arrival <= now {
+            if self.free_at <= now && stride >= service {
+                // Keeping up from an idle start: no request ever queues.
+                self.last_arrival = now + (count - 1) * stride;
+                self.free_at = self.last_arrival + service;
+                return 0;
+            }
+            if stride < service {
+                // Saturated: request i arrives at now + i*stride and starts
+                // at max(now, free_at) + i*service. Sum the arithmetic
+                // series of waits directly.
+                let start0 = now.max(self.free_at);
+                let base = start0 - now;
+                let step = service - stride;
+                // sum_{i=0}^{count-1} (base + i*step)
+                let total = count * base + step * (count * (count - 1) / 2);
+                self.last_arrival = now + (count - 1) * stride;
+                self.free_at = start0 + count * service;
+                return total;
+            }
+        }
+        // Mixed regime (backlog draining, or a stale arrival frontier):
+        // loop — bounded by the initial backlog / frontier gap.
+        let mut total = 0;
+        for i in 0..count {
+            total += self.request(now + i * stride, service);
+        }
+        total
+    }
+
+    /// Would `count` requests at `now, now + stride, …` all sail through
+    /// with zero queueing? True iff the server is idle at `now` (no
+    /// backlog, no future arrival frontier) and keeps up with the
+    /// arrival rate.
+    fn keeps_up(&self, now: u64, service: u64, stride: u64) -> bool {
+        self.last_arrival <= now && self.free_at <= now && service <= stride
+    }
+
+    /// Book the occupancy of a zero-queueing batch (caller checked
+    /// [`keeps_up`](Self::keeps_up)): state lands exactly where `count`
+    /// individual zero-delay requests would leave it.
+    fn book_batch(&mut self, now: u64, service: u64, stride: u64, count: u64) {
+        self.last_arrival = now + (count - 1) * stride;
+        self.free_at = self.last_arrival + service;
+    }
 }
 
 pub struct ContentionModel {
@@ -188,6 +259,88 @@ impl ContentionModel {
         let d = self.ctrls[c as usize].request(now, service);
         self.ctrl_delay_cycles += d;
         d
+    }
+
+    /// `count` requests to `home`'s L2 port arriving at `now, now + stride,
+    /// …`; returns the total queueing delay — identical to calling
+    /// [`home_request`](Self::home_request) `count` times, but O(1) in the
+    /// common regimes (see `Server::request_batch`). The bulk replay
+    /// path uses this to bill a whole page run in one call.
+    pub fn home_request_batch(
+        &mut self,
+        home: TileId,
+        now: u64,
+        service: u64,
+        stride: u64,
+        count: u64,
+    ) -> u64 {
+        if !self.cfg.enabled {
+            return 0;
+        }
+        let d = self.homes[home.index()].request_batch(now, service, stride, count);
+        self.home_delay_cycles += d;
+        d
+    }
+
+    /// `count` line requests to controller `c` arriving at `now, now +
+    /// stride, …`; the batch analogue of [`ctrl_request`](Self::ctrl_request).
+    pub fn ctrl_request_batch(
+        &mut self,
+        c: u32,
+        now: u64,
+        service: u64,
+        stride: u64,
+        count: u64,
+    ) -> u64 {
+        if !self.cfg.enabled {
+            return 0;
+        }
+        let d = self.ctrls[c as usize].request_batch(now, service, stride, count);
+        self.ctrl_delay_cycles += d;
+        d
+    }
+
+    /// Try to bill a whole uncached run in O(1): `count` line
+    /// transactions arriving at `now, now + stride, …`, each occupying
+    /// `home`'s L2 port (when `Some` — remote-homed runs) and controller
+    /// `c`. Commits and returns `true` only when *every* touched server
+    /// is idle at `now` and keeps up with the stride, i.e. when the
+    /// per-line walk would have billed exactly zero delay — which also
+    /// means the per-line arrival times (each fed by the previous line's
+    /// delay) degenerate to the fixed stride this probe assumes, so the
+    /// final server state is bit-identical to the walk's. On `false`
+    /// nothing changes and the caller must bill per line. Requires link
+    /// billing to be off: link servers are not modelled here.
+    #[allow(clippy::too_many_arguments)]
+    pub fn try_zero_delay_batch(
+        &mut self,
+        home: Option<TileId>,
+        home_service: u64,
+        c: u32,
+        ctrl_service: u64,
+        now: u64,
+        stride: u64,
+        count: u64,
+    ) -> bool {
+        if !self.cfg.enabled || count == 0 {
+            return true;
+        }
+        if self.links_enabled() {
+            return false;
+        }
+        if let Some(h) = home {
+            if !self.homes[h.index()].keeps_up(now, home_service, stride) {
+                return false;
+            }
+        }
+        if !self.ctrls[c as usize].keeps_up(now, ctrl_service, stride) {
+            return false;
+        }
+        if let Some(h) = home {
+            self.homes[h.index()].book_batch(now, home_service, stride, count);
+        }
+        self.ctrls[c as usize].book_batch(now, ctrl_service, stride, count);
+        true
     }
 
     /// Bill every directed link on the XY route `from → to` at time `now`;
@@ -695,6 +848,133 @@ mod tests {
         assert_eq!(m.reply_path_request(TileId(2), TileId(0), 0, 4), 14);
         // An east-bound reply over unit links keeps the scalar behaviour.
         assert_eq!(m.reply_path_request(TileId(61), TileId(63), 0, 4), 2);
+    }
+
+    /// Exhaustive pin: `request_batch` must equal the per-request loop in
+    /// total delay *and* leave the server in the same state, across every
+    /// regime — idle/keeping-up, saturated, draining backlog, and a stale
+    /// arrival frontier.
+    #[test]
+    fn batch_request_matches_per_request_loop() {
+        let cases: &[(u64, u64, u64, u64, u64, u64)] = &[
+            // (free_at, last_arrival, now, service, stride, count)
+            (0, 0, 100, 2, 4, 50),    // idle, keeping up -> closed form 0
+            (0, 0, 100, 2, 2, 50),    // stride == service boundary
+            (0, 0, 100, 4, 1, 100),   // saturated from idle
+            (500, 0, 100, 4, 1, 100), // saturated behind a backlog
+            (500, 0, 100, 2, 4, 300), // backlog draining -> loop fallback
+            (500, 0, 100, 2, 4, 10),  // backlog not fully drained
+            (0, 400, 100, 2, 4, 50),  // stale frontier -> loop fallback
+            (300, 400, 100, 3, 1, 40), // stale frontier + backlog, saturated
+            (0, 0, 0, 0, 0, 17),      // degenerate zero service/stride
+            (0, 0, 5, 3, 0, 25),      // simultaneous arrivals (stride 0)
+            (0, 0, 9, 2, 4, 1),       // single-request batch
+            (7, 3, 9, 2, 4, 0),       // empty batch is a no-op
+        ];
+        for &(free_at, last_arrival, now, service, stride, count) in cases {
+            let mut a = Server {
+                free_at,
+                last_arrival,
+            };
+            let mut b = a;
+            let batch = a.request_batch(now, service, stride, count);
+            let mut looped = 0;
+            for i in 0..count {
+                looped += b.request(now + i * stride, service);
+            }
+            assert_eq!(
+                batch, looped,
+                "delay mismatch: free_at={free_at} last={last_arrival} \
+                 now={now} svc={service} stride={stride} n={count}"
+            );
+            if count > 0 {
+                assert_eq!(a.free_at, b.free_at, "free_at diverged: n={count} svc={service}");
+                assert_eq!(
+                    a.last_arrival, b.last_arrival,
+                    "last_arrival diverged: n={count} svc={service}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn batch_entry_points_tally_like_singles() {
+        let mut batch = model();
+        let mut single = model();
+        let d = batch.home_request_batch(TileId(3), 0, 2, 1, 100);
+        let mut s = 0;
+        for i in 0..100 {
+            s += single.home_request(TileId(3), i, 2);
+        }
+        assert_eq!(d, s);
+        assert_eq!(batch.home_delay_cycles, single.home_delay_cycles);
+        let d = batch.ctrl_request_batch(1, 0, 4, 1, 64);
+        let mut s = 0;
+        for i in 0..64 {
+            s += single.ctrl_request(1, i, 4);
+        }
+        assert_eq!(d, s);
+        assert_eq!(batch.ctrl_delay_cycles, single.ctrl_delay_cycles);
+        // Disabled model: free and state-less, like the single-shot path.
+        let mut off = ContentionModel::new(
+            ContentionConfig {
+                enabled: false,
+                ..Default::default()
+            },
+            Arc::new(Machine::tilepro64()),
+        );
+        assert_eq!(off.home_request_batch(TileId(0), 0, 2, 0, 1_000), 0);
+        assert_eq!(off.ctrl_request_batch(0, 0, 2, 0, 1_000), 0);
+        assert_eq!(off.home_delay_cycles, 0);
+        assert_eq!(off.ctrl_delay_cycles, 0);
+    }
+
+    #[test]
+    fn zero_delay_batch_matches_idle_walk() {
+        let cfg = ContentionConfig {
+            enabled: true,
+            links: false,
+            coherence: false,
+        };
+        let mut a = model_on(Machine::tilepro64(), cfg);
+        let mut b = model_on(Machine::tilepro64(), cfg);
+        // Idle servers keeping up: the probe commits, and the per-line
+        // walk it replaces bills zero.
+        assert!(a.try_zero_delay_batch(Some(TileId(9)), 2, 1, 4, 100, 8, 50));
+        let mut walk = 0;
+        for i in 0..50u64 {
+            walk += b.home_request(TileId(9), 100 + i * 8, 2);
+            walk += b.ctrl_request(1, 100 + i * 8, 4);
+        }
+        assert_eq!(walk, 0);
+        // A follow-up request sees identical backlog on both models.
+        assert_eq!(
+            a.home_request(TileId(9), 0, 2),
+            b.home_request(TileId(9), 0, 2)
+        );
+        assert_eq!(a.ctrl_request(1, 0, 4), b.ctrl_request(1, 0, 4));
+        // Busy controller: refused, state untouched.
+        let mut m = model_on(Machine::tilepro64(), cfg);
+        m.ctrl_request(2, 0, 1_000);
+        assert!(!m.try_zero_delay_batch(None, 2, 2, 4, 10, 8, 50));
+        assert_eq!(m.ctrl_request(2, 10, 4), 990);
+        // Service exceeding the stride: the batch would queue — refused.
+        let mut m = model_on(Machine::tilepro64(), cfg);
+        assert!(!m.try_zero_delay_batch(Some(TileId(0)), 8, 0, 4, 0, 4, 2));
+        // Link billing on: link servers are unmodelled here — refused.
+        let mut m = model();
+        assert!(!m.try_zero_delay_batch(None, 2, 0, 4, 0, 100, 10));
+        // Contention disabled: trivially free either way.
+        let mut off = model_on(
+            Machine::tilepro64(),
+            ContentionConfig {
+                enabled: false,
+                links: true,
+                coherence: true,
+            },
+        );
+        assert!(off.try_zero_delay_batch(Some(TileId(0)), 2, 0, 4, 0, 1, 1_000));
+        assert_eq!(off.home_delay_cycles, 0);
     }
 
     #[test]

@@ -10,8 +10,14 @@
 use crate::arch::{Coord, Dir, Machine, TileId};
 
 /// Tiles traversed from `src` to `dst` under XY routing (X first, then Y),
-/// inclusive of both endpoints. Allocates — kept for tests and reports;
-/// the engine uses [`xy_links`].
+/// inclusive of both endpoints.
+///
+/// **Test-only support API.** This allocates a `Vec` per call and sits on
+/// no production path: every billed traversal in the engine and the
+/// contention model walks [`xy_links`] instead (allocation-free, and the
+/// two are pinned to agree by `integration_noc`/`prop_invariants`). It is
+/// not `#[cfg(test)]` only because the integration-test crates link
+/// against the library build. New engine code should never call it.
 pub fn xy_path(machine: &Machine, src: TileId, dst: TileId) -> Vec<TileId> {
     let a = machine.coord(src);
     let b = machine.coord(dst);

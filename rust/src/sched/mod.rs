@@ -21,6 +21,16 @@ pub trait Scheduler {
     fn maybe_migrate(&mut self, tid: usize, current: TileId, now_cycles: u64) -> Option<TileId>;
 
     fn label(&self) -> &'static str;
+
+    /// True iff this scheduler is stateless and never migrates:
+    /// `maybe_migrate` always returns `None` (with no side effects), so
+    /// skipping its per-quantum tick cannot change any observable state.
+    /// The intra-run parallel replay is only taken for static schedulers —
+    /// migrating threads between tiles mid-epoch would break the
+    /// tile-partitioned determinism argument.
+    fn is_static(&self) -> bool {
+        false
+    }
 }
 
 pub use static_map::StaticMapper;

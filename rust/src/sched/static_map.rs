@@ -44,6 +44,10 @@ impl Scheduler for StaticMapper {
     fn label(&self) -> &'static str {
         "static"
     }
+
+    fn is_static(&self) -> bool {
+        true
+    }
 }
 
 #[cfg(test)]

@@ -45,7 +45,7 @@ use crate::mem::{AllocKind, Allocator, LineId, MemConfig, PageAttr, Placement, R
 use crate::noc::{ContentionConfig, ContentionModel};
 use crate::sched::Scheduler;
 use crate::sim::stats::RunStats;
-use crate::sim::trace::{Loc, Op, Program};
+use crate::sim::trace::{Loc, Op, OpStream, Program};
 
 /// Hypervisor page-allocation overhead (per call + per page): `new int[n]`
 /// is not free, which is why localisation must *amortise* the copy+alloc
@@ -58,7 +58,7 @@ const FREE_BASE_CYCLES: u64 = 300;
 
 /// Max line events a thread processes per scheduling turn. Small enough to
 /// interleave threads faithfully, large enough to amortise heap traffic.
-const QUANTUM_LINES: u64 = 128;
+pub(crate) const QUANTUM_LINES: u64 = 128;
 
 const LINES_PER_PAGE: u64 = PAGE_BYTES / LINE_BYTES;
 
@@ -85,6 +85,16 @@ pub struct EngineConfig {
     /// non-default protocol is picked *and* coherence traffic is modelled
     /// on the links.
     pub protocol: ProtocolSpec,
+    /// Host worker threads replaying *this one run* (`--intra-jobs`).
+    /// 1 (the default) is the sequential engine. >1 shards the simulated
+    /// tiles across host cores in deterministic time-sliced epochs; the
+    /// resulting `RunStats` are byte-identical at every worker count. The
+    /// parallel path is an execution strategy, not a model parameter, so
+    /// it is deliberately *not* part of `RunSpec` identity — and it only
+    /// engages when [`plan_intra_workers`] says the run qualifies
+    /// (static scheduler, fused default protocol, caches on, no home
+    /// permutation); otherwise the run silently stays sequential.
+    pub intra_jobs: usize,
 }
 
 impl EngineConfig {
@@ -109,7 +119,15 @@ impl EngineConfig {
             caches_enabled: true,
             page_runs: true,
             protocol: ProtocolSpec::default(),
+            intra_jobs: 1,
         }
+    }
+
+    /// Replay this run with up to `n` host workers (`--intra-jobs`).
+    /// Statistics stay byte-identical at any value; 0 is clamped to 1.
+    pub fn with_intra_jobs(mut self, n: usize) -> Self {
+        self.intra_jobs = n.max(1);
+        self
     }
 
     /// Select the coherence protocol (`--protocol`). See
@@ -203,14 +221,52 @@ impl From<crate::sim::trace::ProgramError> for EngineError {
     }
 }
 
-struct ThreadState {
-    tile: TileId,
-    clock: u64,
+pub(crate) struct ThreadState {
+    pub(crate) tile: TileId,
+    pub(crate) clock: u64,
     /// The op currently executing (pulled from the thread's stream).
-    cur: Option<Op>,
+    pub(crate) cur: Option<Op>,
     /// Lines already processed within the current (partially done) op.
-    progress: u64,
-    done: bool,
+    pub(crate) progress: u64,
+    pub(crate) done: bool,
+}
+
+/// Continuation record for a quantum that an epoch worker had to *park*
+/// mid-way (see [`crate::sim::epoch`]): the worker hit a line whose cost is
+/// not locally decidable (cache miss, foreign sharer) and deferred the rest
+/// of the quantum — including a possibly half-executed line batch — to the
+/// sequential drain phase. The drain resumes at the exact heap pop the
+/// worker consumed (`key`), bypassing the staleness check (the thread's
+/// clock has already advanced past `key` by the lines it did execute).
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct ParkInfo {
+    /// Heap key of the pop the worker consumed for this quantum.
+    pub(crate) key: u64,
+    /// Quantum budget remaining *before* the parked op (re-)executes.
+    pub(crate) budget: u64,
+    /// Lines (`Read`/`Write`) or line pairs (`Copy`) of the current batch
+    /// the worker already executed and billed.
+    pub(crate) batch_done: u64,
+    /// Total size of that batch; 0 means no partial batch — the drain just
+    /// reruns the quantum loop and re-derives the batch deterministically.
+    pub(crate) batch_total: u64,
+}
+
+/// Everything `run` threads through the replay loop, bundled so the
+/// sequential drain ([`Engine::run_until`]) and the epoch driver
+/// ([`crate::sim::epoch`]) operate on the same state. The op streams borrow
+/// the program's sources for the duration of the run.
+pub(crate) struct RunCtx<'p> {
+    pub(crate) threads: Vec<ThreadState>,
+    pub(crate) streams: Vec<OpStream<'p>>,
+    pub(crate) slots: Vec<Option<Region>>,
+    pub(crate) signal_time: Vec<Option<u64>>,
+    pub(crate) waiters: Vec<Vec<usize>>,
+    /// Min-clock scheduling heap. Lazily pruned: entries whose key no
+    /// longer matches the thread's clock are skipped on pop.
+    pub(crate) heap: BinaryHeap<Reverse<(u64, usize)>>,
+    /// Pending mid-quantum continuations, keyed by thread id.
+    pub(crate) resume: Vec<Option<ParkInfo>>,
 }
 
 /// Cached page translation for interleaved streams (`Copy`): one
@@ -304,15 +360,19 @@ fn bill_store_line(
 /// allocated from tile 0 before threads start).
 pub struct Engine {
     pub alloc: Allocator,
-    caches: CacheSystem,
+    pub(crate) caches: CacheSystem,
     contention: ContentionModel,
-    machine: Arc<Machine>,
+    pub(crate) machine: Arc<Machine>,
     /// Copy of `machine.params` — the scalar latency terms are read on
     /// every line event; distance-dependent arithmetic goes through
     /// `machine.access_cycles`.
-    params: LatencyParams,
-    caches_enabled: bool,
-    page_runs: bool,
+    pub(crate) params: LatencyParams,
+    pub(crate) caches_enabled: bool,
+    pub(crate) page_runs: bool,
+    /// Requested intra-run host workers (`EngineConfig::intra_jobs`,
+    /// clamped to ≥ 1); the effective count comes from
+    /// [`plan_intra_workers`] once the scheduler is known.
+    intra_jobs: usize,
     /// The pluggable coherence state machine ([`crate::coherence`]).
     protocol: Box<dyn Protocol>,
     /// True when the trait's transitions drive billing: a non-default
@@ -323,7 +383,7 @@ pub struct Engine {
     /// `opaque` mode: a seeded permutation applied to every resolved home
     /// tile (per arXiv:2011.05422's randomised home mapping).
     home_perm: Option<HomePermutation>,
-    stats: RunStats,
+    pub(crate) stats: RunStats,
 }
 
 impl Engine {
@@ -349,6 +409,7 @@ impl Engine {
             params: machine.params.clone(),
             caches_enabled: cfg.caches_enabled,
             page_runs: cfg.page_runs,
+            intra_jobs: cfg.intra_jobs.max(1),
             protocol: cfg.protocol.build(),
             protocol_active,
             home_perm,
@@ -890,6 +951,12 @@ impl Engine {
                 };
             }
         }
+        if !self.caches_enabled {
+            if let Some(home) = attr.homing.uniform_page_home(first, self.machine.num_tiles()) {
+                let home = self.map_home(home);
+                return self.uncached_run(tile, first, count, write, attr.placement, home, clock0);
+            }
+        }
         // Hash-for-home pages (per-line homes) and the caches-off mode:
         // per-line walk, but still one translation per page.
         let mut cycles = 0u64;
@@ -991,6 +1058,76 @@ impl Engine {
         cycles
     }
 
+    /// Caches-off bulk path: a same-home run of uncached DRAM
+    /// transactions, chunked by striping boundary so the controller —
+    /// and with it the uncontended per-line cost — is constant per
+    /// chunk. Each chunk is billed through
+    /// [`ContentionModel::try_zero_delay_batch`]: when the home port and
+    /// controller are idle and keep up with the line stride, the whole
+    /// chunk is one O(1) booking (the common case for the bandwidth
+    /// microbenches this mode exists for); otherwise the chunk falls
+    /// back to the per-line [`uncached_line`](Self::uncached_line) walk,
+    /// so delays, stats, and server state stay cycle-exact with the
+    /// reference walk in every regime.
+    #[allow(clippy::too_many_arguments)]
+    fn uncached_run(
+        &mut self,
+        tile: TileId,
+        first: LineId,
+        count: u64,
+        write: bool,
+        placement: Placement,
+        home: TileId,
+        clock0: u64,
+    ) -> u64 {
+        const LINES_PER_STRIPE: u64 = crate::mem::STRIPE_BYTES / LINE_BYTES;
+        let num_ctrls = self.machine.num_controllers();
+        let mut cycles = 0u64;
+        let mut l = first.0;
+        let end = first.0 + count;
+        while l < end {
+            let line = LineId(l);
+            let ctrl = placement.controller_of(line.addr(), num_ctrls);
+            let chunk_end = match placement {
+                // Only striping varies the controller inside a page.
+                Placement::Striped => end.min((l / LINES_PER_STRIPE + 1) * LINES_PER_STRIPE),
+                _ => end,
+            };
+            let run = chunk_end - l;
+            let ctrl_attach = self.machine.controller(ctrl).attach;
+            let base = if write {
+                self.params.store_post
+            } else {
+                self.machine
+                    .access_cycles(tile, HitLevel::Ddr { ctrl_attach })
+            };
+            let now = clock0 + cycles;
+            let remote = (home != tile).then_some(home);
+            if self.contention.try_zero_delay_batch(
+                remote,
+                self.params.home_service,
+                ctrl,
+                self.params.ctrl_service,
+                now,
+                base,
+                run,
+            ) {
+                self.stats.ddr_accesses += run;
+                if home != tile {
+                    self.stats.tile_home_requests[home.index()] += run;
+                }
+                cycles += base * run;
+            } else {
+                for i in 0..run {
+                    cycles +=
+                        self.uncached_line(tile, LineId(l + i), home, ctrl, write, clock0 + cycles);
+                }
+            }
+            l = chunk_end;
+        }
+        cycles
+    }
+
     /// Fold a store run's batched counters into the run stats.
     fn fold_store_agg(&mut self, home: TileId, agg: &StoreAgg) {
         self.stats.l2_hits += agg.l2;
@@ -1022,9 +1159,13 @@ impl Engine {
             self.machine.name()
         );
 
-        let mut threads: Vec<ThreadState> = (0..n)
-            .map(|tid| {
-                let cur = program.threads[tid].next_op();
+        let mut streams: Vec<OpStream<'_>> =
+            program.threads.iter_mut().map(OpStream::new).collect();
+        let threads: Vec<ThreadState> = streams
+            .iter_mut()
+            .enumerate()
+            .map(|(tid, stream)| {
+                let cur = stream.next_op();
                 ThreadState {
                     tile: sched.initial_tile(tid),
                     clock: 0,
@@ -1034,69 +1175,38 @@ impl Engine {
                 }
             })
             .collect();
-        let mut slots: Vec<Option<Region>> = vec![None; program.num_slots as usize];
-        let mut signal_time: Vec<Option<u64>> = vec![None; program.num_events as usize];
-        let mut waiters: Vec<Vec<usize>> = vec![Vec::new(); program.num_events as usize];
-
-        let mut heap: BinaryHeap<Reverse<(u64, usize)>> = threads
+        let heap: BinaryHeap<Reverse<(u64, usize)>> = threads
             .iter()
             .enumerate()
             .filter(|(_, t)| !t.done)
             .map(|(tid, t)| Reverse((t.clock, tid)))
             .collect();
+        let mut ctx = RunCtx {
+            slots: vec![None; program.num_slots as usize],
+            signal_time: vec![None; program.num_events as usize],
+            waiters: vec![Vec::new(); program.num_events as usize],
+            resume: vec![None; n],
+            threads,
+            streams,
+            heap,
+        };
 
-        while let Some(Reverse((clock, tid))) = heap.pop() {
-            // Stale heap entry (thread was re-queued by a signal).
-            if threads[tid].done || threads[tid].clock != clock {
-                continue;
-            }
-
-            // Scheduler tick: Tile Linux may migrate the thread here.
-            if let Some(new_tile) = sched.maybe_migrate(tid, threads[tid].tile, clock) {
-                threads[tid].tile = new_tile;
-                threads[tid].clock += self.params.migration_cost;
-                self.stats.migrations += 1;
-                heap.push(Reverse((threads[tid].clock, tid)));
-                continue;
-            }
-
-            let mut budget = QUANTUM_LINES;
-            let mut blocked = false;
-            while budget > 0 && !threads[tid].done {
-                let op = threads[tid].cur.expect("live thread must hold an op");
-                match self.step_op(tid, &mut threads, &mut slots, &mut signal_time, op)? {
-                    StepResult::Progress(lines) => {
-                        budget = budget.saturating_sub(lines.max(1));
-                    }
-                    StepResult::Blocked(event) => {
-                        waiters[event as usize].push(tid);
-                        blocked = true;
-                        break;
-                    }
-                    StepResult::Signalled(event) => {
-                        budget = budget.saturating_sub(1);
-                        // Wake waiters: their clock joins the signal time.
-                        let now = signal_time[event as usize].unwrap();
-                        for w in waiters[event as usize].drain(..) {
-                            threads[w].clock = threads[w].clock.max(now);
-                            heap.push(Reverse((threads[w].clock, w)));
-                        }
-                    }
-                }
-                if threads[tid].cur.is_none() {
-                    // Current op retired: pull the next from the stream.
-                    threads[tid].cur = program.threads[tid].next_op();
-                    if threads[tid].cur.is_none() {
-                        threads[tid].done = true;
-                    }
-                }
-            }
-            if !threads[tid].done && !blocked {
-                heap.push(Reverse((threads[tid].clock, tid)));
-            }
+        let workers = plan_intra_workers(
+            self.intra_jobs,
+            self.machine.num_tiles(),
+            sched.is_static(),
+            self.protocol_active,
+            self.home_perm.is_some(),
+            self.caches_enabled,
+        );
+        if workers > 1 {
+            crate::sim::epoch::run_parallel(&mut self, &mut ctx, sched, workers)?;
+        } else {
+            self.run_until(&mut ctx, None, sched)?;
         }
 
-        let undone: Vec<usize> = threads
+        let undone: Vec<usize> = ctx
+            .threads
             .iter()
             .enumerate()
             .filter(|(_, t)| !t.done)
@@ -1106,8 +1216,8 @@ impl Engine {
             return Err(EngineError::Deadlock(undone));
         }
 
-        self.stats.makespan_cycles = threads.iter().map(|t| t.clock).max().unwrap_or(0);
-        self.stats.thread_cycles = threads.iter().map(|t| t.clock).collect();
+        self.stats.makespan_cycles = ctx.threads.iter().map(|t| t.clock).max().unwrap_or(0);
+        self.stats.thread_cycles = ctx.threads.iter().map(|t| t.clock).collect();
         self.stats.home_queue_cycles = self.contention.home_delay_cycles;
         self.stats.ctrl_queue_cycles = self.contention.ctrl_delay_cycles;
         if self.contention.links_enabled() {
@@ -1126,7 +1236,202 @@ impl Engine {
         Ok(self.stats)
     }
 
-    fn resolve(
+    /// Sequential pop loop, bounded: drain the heap until it holds no entry
+    /// below `window_end` (`None` = run to completion). This *is* the
+    /// original engine loop — the parallel epoch driver calls it per epoch
+    /// to drain whatever its workers could not prove independent, and the
+    /// single-worker path calls it once with no bound.
+    pub(crate) fn run_until(
+        &mut self,
+        ctx: &mut RunCtx<'_>,
+        window_end: Option<u64>,
+        sched: &mut dyn Scheduler,
+    ) -> Result<(), EngineError> {
+        loop {
+            match ctx.heap.peek() {
+                Some(&Reverse((clock, _))) if window_end.map_or(true, |we| clock < we) => {}
+                _ => return Ok(()),
+            }
+            let Reverse((clock, tid)) = ctx.heap.pop().expect("peeked above");
+
+            // Mid-batch continuation from a parked epoch quantum: resumes
+            // the exact pop the worker consumed. Checked *before* the
+            // staleness test — the thread's clock has already moved past
+            // the pop key by the lines the worker executed — and skips the
+            // scheduler tick, which the worker's quantum already earned
+            // (parallel replay only runs for static schedulers, whose tick
+            // is a no-op; see `Scheduler::is_static`).
+            let resume = match ctx.resume[tid] {
+                Some(info) if info.key == clock && !ctx.threads[tid].done => ctx.resume[tid].take(),
+                _ => None,
+            };
+            if resume.is_none() {
+                // Stale heap entry (thread was re-queued by a signal, an
+                // epoch, or a duplicate push).
+                if ctx.threads[tid].done || ctx.threads[tid].clock != clock {
+                    continue;
+                }
+                // Scheduler tick: Tile Linux may migrate the thread here.
+                if let Some(new_tile) = sched.maybe_migrate(tid, ctx.threads[tid].tile, clock) {
+                    ctx.threads[tid].tile = new_tile;
+                    ctx.threads[tid].clock += self.params.migration_cost;
+                    self.stats.migrations += 1;
+                    ctx.heap.push(Reverse((ctx.threads[tid].clock, tid)));
+                    continue;
+                }
+            }
+            self.run_quantum(ctx, tid, resume)?;
+        }
+    }
+
+    /// One scheduling quantum for `tid` (optionally resuming a parked
+    /// one). Mirrors the historical inline loop byte-for-byte.
+    fn run_quantum(
+        &mut self,
+        ctx: &mut RunCtx<'_>,
+        tid: usize,
+        resume: Option<ParkInfo>,
+    ) -> Result<(), EngineError> {
+        let mut budget = QUANTUM_LINES;
+        if let Some(info) = resume {
+            budget = info.budget;
+            if info.batch_total > 0 {
+                let spent = self.finish_parked_batch(ctx, tid, info)?;
+                budget = budget.saturating_sub(spent.max(1));
+                if ctx.threads[tid].cur.is_none() {
+                    ctx.threads[tid].cur = ctx.streams[tid].next_op();
+                    if ctx.threads[tid].cur.is_none() {
+                        ctx.threads[tid].done = true;
+                    }
+                }
+            }
+        }
+        let mut blocked = false;
+        while budget > 0 && !ctx.threads[tid].done {
+            let op = ctx.threads[tid].cur.expect("live thread must hold an op");
+            match self.step_op(tid, ctx, op)? {
+                StepResult::Progress(lines) => {
+                    budget = budget.saturating_sub(lines.max(1));
+                }
+                StepResult::Blocked(event) => {
+                    ctx.waiters[event as usize].push(tid);
+                    blocked = true;
+                    break;
+                }
+                StepResult::Signalled(event) => {
+                    budget = budget.saturating_sub(1);
+                    // Wake waiters: their clock joins the signal time.
+                    let now = ctx.signal_time[event as usize].unwrap();
+                    for w in ctx.waiters[event as usize].drain(..) {
+                        ctx.threads[w].clock = ctx.threads[w].clock.max(now);
+                        ctx.heap.push(Reverse((ctx.threads[w].clock, w)));
+                    }
+                }
+            }
+            if ctx.threads[tid].cur.is_none() {
+                // Current op retired: pull the next from the stream.
+                ctx.threads[tid].cur = ctx.streams[tid].next_op();
+                if ctx.threads[tid].cur.is_none() {
+                    ctx.threads[tid].done = true;
+                }
+            }
+        }
+        if !ctx.threads[tid].done && !blocked {
+            ctx.heap.push(Reverse((ctx.threads[tid].clock, tid)));
+        }
+        Ok(())
+    }
+
+    /// Complete a line batch an epoch worker left half-executed. The
+    /// worker billed the first `batch_done` lines (pairs for `Copy`) at
+    /// constant cache-hit cost and advanced the thread clock accordingly,
+    /// so billing the remainder from the *current* clock reproduces the
+    /// sequential arrival times exactly. Returns the budget units the full
+    /// batch consumes (lines, or 2× pairs for `Copy`), which the caller
+    /// deducts — the worker deliberately left `budget` untouched for the
+    /// parked op.
+    fn finish_parked_batch(
+        &mut self,
+        ctx: &mut RunCtx<'_>,
+        tid: usize,
+        info: ParkInfo,
+    ) -> Result<u64, EngineError> {
+        let op = ctx.threads[tid].cur.expect("parked thread must hold an op");
+        let (tile, clock0, progress) = {
+            let t = &ctx.threads[tid];
+            (t.tile, t.clock, t.progress)
+        };
+        let batch = info.batch_total;
+        debug_assert!(info.batch_done < batch, "a finished batch never parks");
+        match op {
+            Op::Read { loc, bytes } | Op::Write { loc, bytes } => {
+                let write = matches!(op, Op::Write { .. });
+                let addr = self.resolve(tid, &ctx.slots, loc)?;
+                let total_lines = crate::mem::line_count(addr, bytes);
+                let first = LineId(addr.line().0 + progress + info.batch_done);
+                let count = batch - info.batch_done;
+                let cycles = if self.page_runs {
+                    self.access_run(tile, first, count, write, clock0)?
+                } else {
+                    let mut c = 0u64;
+                    for l in first.0..first.0 + count {
+                        c += self.line_access(tile, LineId(l), write, clock0 + c)?;
+                    }
+                    c
+                };
+                let t = &mut ctx.threads[tid];
+                t.clock += cycles;
+                if progress + batch >= total_lines {
+                    t.progress = 0;
+                    t.cur = None;
+                } else {
+                    t.progress = progress + batch;
+                }
+                Ok(batch)
+            }
+            Op::Copy { src, dst, bytes } => {
+                let s = self.resolve(tid, &ctx.slots, src)?;
+                let d = self.resolve(tid, &ctx.slots, dst)?;
+                let total_lines = crate::mem::line_count(d, bytes);
+                let src_first = s.line().0 + progress + info.batch_done;
+                let dst_first = d.line().0 + progress + info.batch_done;
+                let count = batch - info.batch_done;
+                let mut cycles = 0u64;
+                if self.page_runs {
+                    let mut src_cursor = AttrCursor::new();
+                    let mut dst_cursor = AttrCursor::new();
+                    for i in 0..count {
+                        let sl = LineId(src_first + i);
+                        let sa = src_cursor.resolve(&mut self.alloc.table, sl, tile)?;
+                        cycles += self.fast_line(tile, sl, sa, false, clock0 + cycles);
+                        let dl = LineId(dst_first + i);
+                        let da = dst_cursor.resolve(&mut self.alloc.table, dl, tile)?;
+                        cycles += self.fast_line(tile, dl, da, true, clock0 + cycles);
+                    }
+                    self.stats.line_accesses += 2 * count;
+                } else {
+                    for i in 0..count {
+                        cycles +=
+                            self.line_access(tile, LineId(src_first + i), false, clock0 + cycles)?;
+                        cycles +=
+                            self.line_access(tile, LineId(dst_first + i), true, clock0 + cycles)?;
+                    }
+                }
+                let t = &mut ctx.threads[tid];
+                t.clock += cycles;
+                if progress + batch >= total_lines {
+                    t.progress = 0;
+                    t.cur = None;
+                } else {
+                    t.progress = progress + batch;
+                }
+                Ok(batch * 2)
+            }
+            _ => unreachable!("only line-batch ops park mid-batch"),
+        }
+    }
+
+    pub(crate) fn resolve(
         &self,
         tid: usize,
         slots: &[Option<Region>],
@@ -1143,19 +1448,17 @@ impl Engine {
     fn step_op(
         &mut self,
         tid: usize,
-        threads: &mut [ThreadState],
-        slots: &mut [Option<Region>],
-        signal_time: &mut [Option<u64>],
+        ctx: &mut RunCtx<'_>,
         op: Op,
     ) -> Result<StepResult, EngineError> {
         let (tile, clock0, progress) = {
-            let t = &threads[tid];
+            let t = &ctx.threads[tid];
             (t.tile, t.clock, t.progress)
         };
         match op {
             Op::Read { loc, bytes } | Op::Write { loc, bytes } => {
                 let write = matches!(op, Op::Write { .. });
-                let addr = self.resolve(tid, slots, loc)?;
+                let addr = self.resolve(tid, &ctx.slots, loc)?;
                 let total_lines = crate::mem::line_count(addr, bytes);
                 let remaining = total_lines - progress;
                 let batch = remaining.min(QUANTUM_LINES);
@@ -1172,7 +1475,7 @@ impl Engine {
                     }
                     c
                 };
-                let t = &mut threads[tid];
+                let t = &mut ctx.threads[tid];
                 t.clock += cycles;
                 if progress + batch >= total_lines {
                     t.progress = 0;
@@ -1186,8 +1489,8 @@ impl Engine {
                 // Per-line interleave of read+write, like memcpy. The fast
                 // path keeps the exact interleave (contention order!) but
                 // re-resolves the translation only on page crossings.
-                let s = self.resolve(tid, slots, src)?;
-                let d = self.resolve(tid, slots, dst)?;
+                let s = self.resolve(tid, &ctx.slots, src)?;
+                let d = self.resolve(tid, &ctx.slots, dst)?;
                 let total_lines = crate::mem::line_count(d, bytes);
                 let remaining = total_lines - progress;
                 let batch = remaining.min(QUANTUM_LINES / 2);
@@ -1222,7 +1525,7 @@ impl Engine {
                         )?;
                     }
                 }
-                let t = &mut threads[tid];
+                let t = &mut ctx.threads[tid];
                 t.clock += cycles;
                 if progress + batch >= total_lines {
                     t.progress = 0;
@@ -1233,7 +1536,7 @@ impl Engine {
                 Ok(StepResult::Progress(batch * 2))
             }
             Op::Compute { cycles } => {
-                let t = &mut threads[tid];
+                let t = &mut ctx.threads[tid];
                 t.clock += cycles;
                 self.stats.compute_cycles += cycles;
                 t.cur = None;
@@ -1246,15 +1549,15 @@ impl Engine {
                     .alloc
                     .alloc(tile, bytes, kind)
                     .map_err(|source| EngineError::Alloc { thread: tid, source })?;
-                slots[slot as usize] = Some(region);
+                ctx.slots[slot as usize] = Some(region);
                 let pages = bytes.div_ceil(crate::arch::PAGE_BYTES);
-                let t = &mut threads[tid];
+                let t = &mut ctx.threads[tid];
                 t.clock += ALLOC_BASE_CYCLES + ALLOC_PER_PAGE_CYCLES * pages;
                 t.cur = None;
                 Ok(StepResult::Progress(1))
             }
             Op::Free { slot } => {
-                let region = slots[slot as usize]
+                let region = ctx.slots[slot as usize]
                     .take()
                     .ok_or(EngineError::UnboundSlot { thread: tid, slot })?;
                 // Dirty owners in the dying range (MESI/MOESI silent
@@ -1290,21 +1593,21 @@ impl Engine {
                 let first = freed.addr.line();
                 let last = VAddr(freed.addr.0 + freed.bytes - 1).line();
                 self.caches.purge_line_range(first, last);
-                let t = &mut threads[tid];
+                let t = &mut ctx.threads[tid];
                 t.clock += FREE_BASE_CYCLES + flush;
                 t.cur = None;
                 Ok(StepResult::Progress(1))
             }
             Op::Signal { event } => {
-                let t = &mut threads[tid];
+                let t = &mut ctx.threads[tid];
                 t.cur = None;
-                signal_time[event as usize] = Some(t.clock);
+                ctx.signal_time[event as usize] = Some(t.clock);
                 Ok(StepResult::Signalled(event))
             }
             Op::Wait { event } => {
-                match signal_time[event as usize] {
+                match ctx.signal_time[event as usize] {
                     Some(s) => {
-                        let t = &mut threads[tid];
+                        let t = &mut ctx.threads[tid];
                         t.clock = t.clock.max(s);
                         t.cur = None;
                         Ok(StepResult::Progress(1))
@@ -1320,6 +1623,40 @@ enum StepResult {
     Progress(u64),
     Blocked(u32),
     Signalled(u32),
+}
+
+/// Effective intra-run worker count for a run. Pure, so tests can pin the
+/// gating table directly.
+///
+/// The parallel replay engages only when every precondition of its
+/// determinism argument holds:
+///
+/// - `requested > 1` — someone asked for it (`--intra-jobs`);
+/// - the scheduler is static ([`Scheduler::is_static`]): threads never
+///   migrate, so the tile partition is stable across an epoch;
+/// - the fused default protocol is in effect (`!protocol_active`): epoch
+///   workers mirror the fused read/write paths, not the pluggable
+///   transition tables;
+/// - homes are not permuted (no `opaque` mode): eligibility reasons about
+///   `uniform_page_home` directly;
+/// - caches are on: the caches-off mode routes every line through the
+///   shared controller/link servers, which serialise anyway.
+///
+/// Otherwise the run silently stays sequential — same stats, no speedup.
+/// The count is clamped to the tile count (workers own disjoint tile
+/// ranges, so extras would idle).
+pub fn plan_intra_workers(
+    requested: usize,
+    num_tiles: u32,
+    sched_static: bool,
+    protocol_active: bool,
+    permuted_homes: bool,
+    caches_enabled: bool,
+) -> usize {
+    if requested <= 1 || !sched_static || protocol_active || permuted_homes || !caches_enabled {
+        return 1;
+    }
+    requested.min(num_tiles as usize)
 }
 
 #[cfg(test)]

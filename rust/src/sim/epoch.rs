@@ -1,0 +1,879 @@
+//! Deterministic intra-run parallelism: shard one run's simulated tiles
+//! across host cores in time-sliced epochs.
+//!
+//! The sequential engine replays threads min-clock-first off one heap, so
+//! its statistics are a pure function of the program — the pinned-baseline
+//! guarantee every test leans on. This module parallelises *within* a run
+//! without giving that up. Each epoch:
+//!
+//! 1. **Window.** Take the earliest runnable clock `w0` and fix the window
+//!    `[w0, w0 + EPOCH_WINDOW_CYCLES)`.
+//! 2. **Scan.** For every live thread, walk the ops it *could* execute
+//!    inside the window (using conservative minimum op costs, plus one
+//!    quantum's worth of ops past the horizon — a quantum popped just
+//!    under the window end can overrun it). Classify the thread
+//!    *eligible* iff every scanned op is a plain `Read`/`Write`/`Copy`/
+//!    `Compute` over pages that are resolved and homed on the thread's
+//!    own tile, and no scanned write has a foreign sharer (its
+//!    invalidation would reach another tile). Otherwise collect the
+//!    thread's *footprint*: its own tile, every touched page's home tile,
+//!    and every tile sharing a line it may write.
+//! 3. **Fence.** Union the ineligible footprints. Tiles outside the fence
+//!    that host eligible threads form the parallel phase; everything they
+//!    do in the window is provably confined to their own tile's caches
+//!    and their own-homed directory lines.
+//! 4. **Phase A.** Partition the parallel tiles into contiguous ranges,
+//!    one scoped worker each (same `std::thread::scope` machinery as
+//!    `coordinator::batch`). Each worker replays its threads off a
+//!    private heap with the engine's exact quantum/batch/cost rules,
+//!    mutating only its own `TileCaches` slice, logging directory ops,
+//!    and accumulating a stats delta. Anything it cannot decide locally
+//!    (a cache miss, a foreign sharer) *parks*: the quantum stops at that
+//!    exact line and the whole tile goes sequential for the rest of the
+//!    window.
+//! 5. **Commit.** In canonical worker order: move thread states back,
+//!    replay the directory logs (disjoint line sets per worker), fold the
+//!    deltas, push heap entries and park continuations.
+//! 6. **Phase B.** `Engine::run_until(window_end)` — the sequential loop —
+//!    drains every remaining pop below the window end: fenced threads,
+//!    parked continuations, signals, allocation, migration.
+//!
+//! Because phase A executes exactly the pops the sequential loop would
+//! have executed, with identical per-tile cache-op sequences and identical
+//! costs, the resulting `RunStats` are byte-identical at every worker
+//! count — the property `prop_intra_run` pins. When nothing qualifies
+//! (hash-for-home, active protocol, dynamic scheduler), the fence covers
+//! the chip and every window runs sequentially: correct, just not faster.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::mem;
+
+use crate::arch::{LatencyParams, TileId, LINE_BYTES, PAGE_BYTES};
+use crate::cache::{Directory, TileCaches};
+use crate::mem::{line_count, Homing, LineId, Placement, Region, VAddr};
+use crate::sched::Scheduler;
+use crate::sim::engine::{Engine, EngineError, ParkInfo, RunCtx, ThreadState, QUANTUM_LINES};
+use crate::sim::trace::{Loc, Op, OpStream};
+
+/// Simulated-cycle width of one epoch window. Large enough to amortise the
+/// scan and the two barriers over many quanta (a quantum is ≲ 128 line
+/// events of a few cycles each), small enough that cross-thread coupling
+/// (signals, contention) stays confined to the sequential drain.
+pub(crate) const EPOCH_WINDOW_CYCLES: u64 = 1 << 17;
+
+/// Scan give-up threshold: a thread whose window coverage needs more ops
+/// than this is treated as opaque (fence everything). Keeps the planner
+/// O(small) even for degenerate zero-latency configurations.
+const MAX_SCAN_OPS: usize = 4096;
+
+/// Ops scanned *past* the point where the accumulated minimum cost covers
+/// the window. A quantum popped just below the window end still executes
+/// up to a full budget of ops (each costs ≥ 1 budget unit), so its ops
+/// must be scanned too. +2 is slack for the partially-complete first op.
+const SCAN_TAIL_OPS: usize = QUANTUM_LINES as usize + 2;
+
+const LINES_PER_PAGE: u64 = PAGE_BYTES / LINE_BYTES;
+
+/// A directory mutation recorded by a phase-A worker and replayed at
+/// commit. Workers only touch lines homed on their own tiles, so the line
+/// sets of different workers are disjoint and replay order across workers
+/// cannot matter; within a worker the log order is execution order.
+enum DirOp {
+    /// `Directory::add_sharer(line, tile)` — reads.
+    Share(LineId, TileId),
+    /// `Directory::claim_local(line, tile)` — writes with no foreign
+    /// sharer (the park check guarantees that precondition).
+    Claim(LineId, TileId),
+}
+
+/// Stats a worker accumulates locally; folded into `RunStats` at commit.
+/// Only counters a fenced-off tile can produce: everything else (home
+/// hits, DDR, queueing) implies leaving the tile, which parks.
+#[derive(Default)]
+struct StatsDelta {
+    line_accesses: u64,
+    l1_hits: u64,
+    l2_hits: u64,
+    compute_cycles: u64,
+}
+
+/// One thread checked out to a phase-A worker: its state, its op stream,
+/// and the heap key it was seeded with (`seed`) — used to avoid pushing a
+/// duplicate of the entry the global heap still holds.
+struct WorkItem<'a, 'p> {
+    tid: usize,
+    seed: u64,
+    st: ThreadState,
+    stream: &'a mut OpStream<'p>,
+}
+
+struct WorkerOut {
+    states: Vec<(usize, ThreadState)>,
+    log: Vec<DirOp>,
+    delta: StatsDelta,
+    /// Heap entries to add at commit (key, tid) — post-phase-A positions
+    /// that differ from the seed entry already in the global heap.
+    pushes: Vec<(u64, usize)>,
+    /// Park continuations for `Engine::run_until` to resume.
+    resume: Vec<(usize, ParkInfo)>,
+}
+
+enum QuantumEnd {
+    Completed,
+    Parked(ParkInfo),
+}
+
+/// Per-chunk plan: a contiguous tile range and the thread ids (sorted) it
+/// will replay.
+struct Chunk {
+    tile_lo: u32,
+    tile_hi: u32,
+    tids: Vec<usize>,
+}
+
+/// The epoch loop. `workers` ≥ 2 (the engine routes 0/1 to `run_until`).
+pub(crate) fn run_parallel(
+    eng: &mut Engine,
+    ctx: &mut RunCtx<'_>,
+    sched: &mut dyn Scheduler,
+    workers: usize,
+) -> Result<(), EngineError> {
+    // Reused across epochs: the fence / footprint / sharer-union bitmasks
+    // (one u64 word per 64 tiles) — allocation-free steady state.
+    let words = (eng.machine.num_tiles() as usize).div_ceil(64);
+    let mut fence = vec![0u64; words];
+    let mut foot = vec![0u64; words];
+    let mut sharer_scratch = vec![0u64; words];
+
+    loop {
+        // Establish the window start: the smallest *live* heap key.
+        let window_start = loop {
+            match ctx.heap.peek() {
+                None => {
+                    debug_assert!(ctx.resume.iter().all(Option::is_none));
+                    return Ok(());
+                }
+                Some(&Reverse((clock, tid))) => {
+                    if entry_live(ctx, clock, tid) {
+                        break clock;
+                    }
+                    ctx.heap.pop();
+                }
+            }
+        };
+        if window_start > u64::MAX - EPOCH_WINDOW_CYCLES {
+            // Clock saturation (degenerate): finish sequentially.
+            return eng.run_until(ctx, None, sched);
+        }
+        let window_end = window_start + EPOCH_WINDOW_CYCLES;
+
+        if let Some(chunks) = plan_epoch(
+            eng,
+            ctx,
+            window_end,
+            workers,
+            &mut fence,
+            &mut foot,
+            &mut sharer_scratch,
+        ) {
+            run_phase_a(eng, ctx, chunks, window_end);
+        }
+        // Phase B: drain everything below the window end sequentially —
+        // fenced threads, parked continuations, signals, page faults.
+        eng.run_until(ctx, Some(window_end), sched)?;
+        debug_assert!(
+            ctx.resume.iter().all(Option::is_none),
+            "park continuations are always below the window end"
+        );
+    }
+}
+
+/// Is this heap entry current? Mirrors `run_until`'s pop filter: a park
+/// continuation matches on its recorded key, everything else on the
+/// thread's clock.
+fn entry_live(ctx: &RunCtx<'_>, key: u64, tid: usize) -> bool {
+    if ctx.threads[tid].done {
+        return false;
+    }
+    match ctx.resume[tid] {
+        Some(info) => info.key == key || ctx.threads[tid].clock == key,
+        None => ctx.threads[tid].clock == key,
+    }
+}
+
+#[inline]
+fn set_bit(mask: &mut [u64], tile: TileId) {
+    mask[tile.index() / 64] |= 1u64 << (tile.index() % 64);
+}
+
+#[inline]
+fn get_bit(mask: &[u64], tile: TileId) -> bool {
+    mask[tile.index() / 64] & (1u64 << (tile.index() % 64)) != 0
+}
+
+fn resolve_loc(slots: &[Option<Region>], loc: Loc) -> Option<VAddr> {
+    match loc {
+        Loc::Abs(a) => Some(a),
+        Loc::Slot { slot, offset } => slots
+            .get(slot as usize)
+            .copied()
+            .flatten()
+            .map(|r| r.addr.offset(offset)),
+    }
+}
+
+/// Scan one thread's reachable window ops. Returns `Some(true)` if the
+/// thread is eligible for phase A, `Some(false)` if not (footprint OR'd
+/// into `foot`), `None` if the thread is opaque (footprint = whole chip).
+#[allow(clippy::too_many_arguments)]
+fn scan_thread(
+    eng: &Engine,
+    threads: &[ThreadState],
+    streams: &mut [OpStream<'_>],
+    slots: &[Option<Region>],
+    tid: usize,
+    window_end: u64,
+    foot: &mut [u64],
+    sharer_scratch: &mut [u64],
+) -> Option<bool> {
+    let t = &threads[tid];
+    let own = t.tile;
+    set_bit(foot, own);
+    let params = &eng.params;
+    let num_tiles = eng.machine.num_tiles();
+    let table = &eng.alloc.table;
+    let dir = &eng.caches.directory;
+    // Lower bound on what one line event costs: reads pay ≥ min(L1, L2),
+    // writes ≥ min(L2, posted-store). 0 (degenerate latencies) makes line
+    // ops free for horizon purposes — strictly conservative.
+    let lb = params.l1_hit.min(params.l2_hit).min(params.store_post);
+    let need = window_end - t.clock;
+    let mut eligible = true;
+    let mut accum = 0u64;
+    let mut stop_at: Option<usize> = None;
+    let mut idx = 0usize;
+    loop {
+        if let Some(s) = stop_at {
+            if idx >= s {
+                break;
+            }
+        }
+        if idx >= MAX_SCAN_OPS {
+            return None;
+        }
+        let op = if idx == 0 {
+            t.cur
+        } else {
+            streams[tid].peek(idx - 1)
+        };
+        let Some(op) = op else { break };
+        let progress = if idx == 0 { t.progress } else { 0 };
+        match op {
+            Op::Read { loc, bytes } | Op::Write { loc, bytes } => {
+                let Some(addr) = resolve_loc(slots, loc) else {
+                    // Unbound slot: the error surfaces in phase B.
+                    return None;
+                };
+                let lines = line_count(addr, bytes) - progress;
+                let first = LineId(addr.line().0 + progress);
+                let write = matches!(op, Op::Write { .. });
+                if !scan_range(
+                    table,
+                    dir,
+                    own,
+                    num_tiles,
+                    foot,
+                    sharer_scratch,
+                    &mut eligible,
+                    first,
+                    lines,
+                    write,
+                    executable_lines(lb, need, accum, lines),
+                ) {
+                    return None;
+                }
+                accum = accum.saturating_add(lines.saturating_mul(lb));
+            }
+            Op::Copy { src, dst, bytes } => {
+                let (Some(s), Some(d)) = (resolve_loc(slots, src), resolve_loc(slots, dst))
+                else {
+                    return None;
+                };
+                let lines = line_count(d, bytes) - progress;
+                let cap = executable_lines(lb.saturating_mul(2), need, accum, lines);
+                let sf = LineId(s.line().0 + progress);
+                let df = LineId(d.line().0 + progress);
+                if !scan_range(
+                    table, dir, own, num_tiles, foot, sharer_scratch, &mut eligible, sf, lines,
+                    false, cap,
+                ) || !scan_range(
+                    table, dir, own, num_tiles, foot, sharer_scratch, &mut eligible, df, lines,
+                    true, cap,
+                ) {
+                    return None;
+                }
+                accum = accum.saturating_add(lines.saturating_mul(2).saturating_mul(lb));
+            }
+            Op::Compute { cycles } => {
+                accum = accum.saturating_add(cycles);
+            }
+            Op::Signal { .. } | Op::Wait { .. } => {
+                // Cross-thread coupling: sequential-only, but costs no
+                // cycles and touches no memory — keep scanning so later
+                // ops still contribute to the footprint.
+                eligible = false;
+            }
+            Op::Alloc { .. } | Op::Free { .. } => {
+                // Page-table / allocator mutation and global cache purges:
+                // effects are not attributable to tiles ahead of time.
+                return None;
+            }
+        }
+        if stop_at.is_none() && accum >= need {
+            stop_at = Some(idx + 1 + SCAN_TAIL_OPS);
+        }
+        idx += 1;
+    }
+    Some(eligible)
+}
+
+/// Upper bound on how many lines of an op the thread can actually execute
+/// inside the window, given `accum` minimum cycles already accounted:
+/// bounds the per-line directory scan for huge ops. `per_line == 0` means
+/// no bound can be derived.
+fn executable_lines(per_line: u64, need: u64, accum: u64, lines: u64) -> u64 {
+    if per_line == 0 {
+        return lines;
+    }
+    lines.min((need.saturating_sub(accum)) / per_line + 2 * QUANTUM_LINES)
+}
+
+/// Scan one contiguous line range of one op: page homing checks into
+/// `foot`/`eligible`, plus (for writes) the invalidation-victim check over
+/// the first `cap` lines. Returns false if the range is opaque (unmapped
+/// or hash-for-home) and the whole thread scan should abort.
+#[allow(clippy::too_many_arguments)]
+fn scan_range(
+    table: &crate::mem::PageTable,
+    dir: &Directory,
+    own: TileId,
+    num_tiles: u32,
+    foot: &mut [u64],
+    sharer_scratch: &mut [u64],
+    eligible: &mut bool,
+    first: LineId,
+    lines: u64,
+    write: bool,
+    cap: u64,
+) -> bool {
+    let capped = lines.min(cap);
+    let mut l = first.0;
+    let end = first.0 + capped;
+    while l < end {
+        let page_end = (l / LINES_PER_PAGE + 1) * LINES_PER_PAGE;
+        let run = end.min(page_end) - l;
+        let line = LineId(l);
+        let Some(attr) = table.attr_of(line.page()) else {
+            // Unmapped: phase B will produce the exact error.
+            return false;
+        };
+        match attr.homing {
+            Homing::Single(_) | Homing::PageHash => {
+                let h = attr
+                    .homing
+                    .uniform_page_home(line, num_tiles)
+                    .expect("uniform by construction");
+                set_bit(foot, h);
+                if h != own {
+                    *eligible = false;
+                }
+            }
+            Homing::HashForHome => {
+                // Per-line homes span the chip.
+                return false;
+            }
+            Homing::FirstTouch => {
+                // Resolving homes the page on its first toucher — which
+                // is this thread or another thread that also scans the
+                // page as unresolved; either way the home lands on a tile
+                // already in some ineligible footprint. The page-table
+                // write itself forces phase B.
+                *eligible = false;
+            }
+        }
+        if matches!(attr.placement, Placement::FirstTouchNearest) {
+            // `resolve_page` would mutate the placement.
+            *eligible = false;
+        }
+        l += run;
+    }
+    if write && capped > 0 {
+        // Fence every tile whose cached copy this write would invalidate.
+        sharer_scratch.fill(0);
+        dir.union_sharers(first, capped, sharer_scratch);
+        sharer_scratch[own.index() / 64] &= !(1u64 << (own.index() % 64));
+        if sharer_scratch.iter().any(|&w| w != 0) {
+            *eligible = false;
+            for (f, s) in foot.iter_mut().zip(sharer_scratch.iter()) {
+                *f |= s;
+            }
+        }
+    }
+    true
+}
+
+/// Scan all live threads, build the fence, and carve the unfenced
+/// phase-A tiles into ≤ `workers` contiguous chunks balanced by thread
+/// count. `None` = nothing worth parallelising this window.
+#[allow(clippy::too_many_arguments)]
+fn plan_epoch(
+    eng: &Engine,
+    ctx: &mut RunCtx<'_>,
+    window_end: u64,
+    workers: usize,
+    fence: &mut Vec<u64>,
+    foot: &mut Vec<u64>,
+    sharer_scratch: &mut Vec<u64>,
+) -> Option<Vec<Chunk>> {
+    fence.iter_mut().for_each(|w| *w = 0);
+    let mut eligible_tids: Vec<usize> = Vec::new();
+    let n = ctx.threads.len();
+    for tid in 0..n {
+        if ctx.threads[tid].done || ctx.threads[tid].clock >= window_end {
+            continue;
+        }
+        foot.iter_mut().for_each(|w| *w = 0);
+        match scan_thread(
+            eng,
+            &ctx.threads,
+            &mut ctx.streams,
+            &ctx.slots,
+            tid,
+            window_end,
+            foot,
+            sharer_scratch,
+        ) {
+            Some(true) => eligible_tids.push(tid),
+            Some(false) => {
+                for (f, s) in fence.iter_mut().zip(foot.iter()) {
+                    *f |= s;
+                }
+            }
+            None => return None, // opaque thread fences the whole chip
+        }
+    }
+
+    // Eligible threads on unfenced tiles, grouped per tile (in tid order —
+    // ineligible threads always fence their own tile, so every thread
+    // left on an unfenced tile is in phase A).
+    let phase_a: Vec<usize> = eligible_tids
+        .into_iter()
+        .filter(|&tid| !get_bit(fence, ctx.threads[tid].tile))
+        .collect();
+    if phase_a.len() < 2 {
+        return None;
+    }
+
+    let num_tiles = eng.machine.num_tiles() as usize;
+    let mut per_tile: Vec<u32> = vec![0; num_tiles];
+    for &tid in &phase_a {
+        per_tile[ctx.threads[tid].tile.index()] += 1;
+    }
+    // Contiguous tile chunks with ≈ equal thread counts (contiguity lets
+    // the TileCaches array be handed out via split_at_mut).
+    let total = phase_a.len();
+    let target = total.div_ceil(workers) as u32;
+    let mut chunks: Vec<Chunk> = Vec::with_capacity(workers);
+    let mut lo = 0u32;
+    let mut count = 0u32;
+    for tile in 0..num_tiles {
+        count += per_tile[tile];
+        let last = tile + 1 == num_tiles;
+        if (count >= target && chunks.len() + 1 < workers) || last {
+            let hi = tile as u32 + 1;
+            if count > 0 {
+                chunks.push(Chunk {
+                    tile_lo: lo,
+                    tile_hi: hi,
+                    tids: Vec::new(),
+                });
+            }
+            lo = hi;
+            count = 0;
+        }
+    }
+    if chunks.len() < 2 {
+        return None;
+    }
+    for &tid in &phase_a {
+        let tile = ctx.threads[tid].tile.0;
+        let c = chunks
+            .iter_mut()
+            .find(|c| c.tile_lo <= tile && tile < c.tile_hi)
+            .expect("every phase-A tile is covered by a chunk");
+        c.tids.push(tid);
+    }
+    Some(chunks)
+}
+
+/// Check the phase-A threads out to scoped workers, run them, and commit
+/// the results in canonical worker order.
+fn run_phase_a(eng: &mut Engine, ctx: &mut RunCtx<'_>, chunks: Vec<Chunk>, window_end: u64) {
+    let placeholder = || ThreadState {
+        tile: TileId(0),
+        clock: 0,
+        cur: None,
+        progress: 0,
+        done: true,
+    };
+    let mut stream_refs: Vec<Option<&mut OpStream<'_>>> =
+        ctx.streams.iter_mut().map(Some).collect();
+    let mut work: Vec<Vec<WorkItem<'_, '_>>> = Vec::with_capacity(chunks.len());
+    for c in &chunks {
+        let mut items = Vec::with_capacity(c.tids.len());
+        for &tid in &c.tids {
+            let st = mem::replace(&mut ctx.threads[tid], placeholder());
+            let stream = stream_refs[tid].take().expect("each tid checked out once");
+            items.push(WorkItem {
+                tid,
+                seed: st.clock,
+                st,
+                stream,
+            });
+        }
+        work.push(items);
+    }
+
+    let (tiles, dir) = eng.caches.tiles_and_dir_mut();
+    let params = &eng.params;
+    let page_runs = eng.page_runs;
+    let slots = &ctx.slots[..];
+
+    let outs: Vec<WorkerOut> = std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(chunks.len());
+        let mut rest = tiles;
+        let mut base = 0u32;
+        for (c, items) in chunks.iter().zip(work.drain(..)) {
+            let (_skip, r) = rest.split_at_mut((c.tile_lo - base) as usize);
+            let (mine, r2) = r.split_at_mut((c.tile_hi - c.tile_lo) as usize);
+            rest = r2;
+            base = c.tile_hi;
+            let lo = c.tile_lo;
+            handles.push(s.spawn(move || {
+                phase_a_worker(mine, lo, dir, params, page_runs, slots, items, window_end)
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("epoch worker panicked"))
+            .collect()
+    });
+
+    for out in outs {
+        for (tid, st) in out.states {
+            ctx.threads[tid] = st;
+        }
+        for op in out.log {
+            match op {
+                DirOp::Share(line, tile) => eng.caches.directory.add_sharer(line, tile),
+                DirOp::Claim(line, tile) => eng.caches.directory.claim_local(line, tile),
+            }
+        }
+        eng.stats.line_accesses += out.delta.line_accesses;
+        eng.stats.l1_hits += out.delta.l1_hits;
+        eng.stats.l2_hits += out.delta.l2_hits;
+        eng.stats.compute_cycles += out.delta.compute_cycles;
+        for (key, tid) in out.pushes {
+            ctx.heap.push(Reverse((key, tid)));
+        }
+        for (tid, info) in out.resume {
+            ctx.resume[tid] = Some(info);
+        }
+    }
+}
+
+/// One worker's phase A: replay its threads off a private min-clock heap
+/// until every one is done, past the window, parked, or deferred behind a
+/// parked tile-mate.
+#[allow(clippy::too_many_arguments)]
+fn phase_a_worker(
+    tiles: &mut [TileCaches],
+    tile_base: u32,
+    dir: &Directory,
+    params: &LatencyParams,
+    page_runs: bool,
+    slots: &[Option<Region>],
+    mut items: Vec<WorkItem<'_, '_>>,
+    window_end: u64,
+) -> WorkerOut {
+    let mut out = WorkerOut {
+        states: Vec::with_capacity(items.len()),
+        log: Vec::new(),
+        delta: StatsDelta::default(),
+        pushes: Vec::new(),
+        resume: Vec::new(),
+    };
+    let mut heap: BinaryHeap<Reverse<(u64, usize)>> = items
+        .iter()
+        .map(|it| Reverse((it.st.clock, it.tid)))
+        .collect();
+    let mut parked_tile = vec![false; tiles.len()];
+    while let Some(Reverse((key, tid))) = heap.pop() {
+        let i = items
+            .binary_search_by_key(&tid, |it| it.tid)
+            .expect("popped tid belongs to this worker");
+        if items[i].st.done || items[i].st.clock != key {
+            continue;
+        }
+        let ti = (items[i].st.tile.0 - tile_base) as usize;
+        if parked_tile[ti] {
+            // A tile-mate parked earlier in this window: everything at or
+            // after the park point must keep sequential order (shared L1/
+            // L2), so this pop is deferred unexecuted to phase B.
+            if key != items[i].seed {
+                out.pushes.push((key, tid));
+            }
+            continue;
+        }
+        match worker_quantum(
+            &mut items[i],
+            &mut tiles[ti],
+            dir,
+            params,
+            page_runs,
+            slots,
+            &mut out.log,
+            &mut out.delta,
+            key,
+        ) {
+            QuantumEnd::Completed => {
+                let it = &items[i];
+                if it.st.done {
+                    // Seed entry in the global heap goes stale; the pop
+                    // filter skips it.
+                } else if it.st.clock < window_end {
+                    heap.push(Reverse((it.st.clock, it.tid)));
+                } else if it.st.clock != it.seed {
+                    out.pushes.push((it.st.clock, it.tid));
+                }
+            }
+            QuantumEnd::Parked(info) => {
+                parked_tile[ti] = true;
+                if info.key != items[i].seed {
+                    out.pushes.push((info.key, tid));
+                }
+                out.resume.push((tid, info));
+            }
+        }
+    }
+    for it in items {
+        out.states.push((it.tid, it.st));
+    }
+    out
+}
+
+/// One scheduling quantum inside a worker: the engine's exact budget and
+/// batch rules, with every line pre-checked to be locally decidable
+/// before any mutation. The first line that is not (cache miss → the home
+/// / DRAM / contention machinery; foreign sharer → invalidation fan-out)
+/// parks the quantum at that exact point.
+#[allow(clippy::too_many_arguments)]
+fn worker_quantum(
+    it: &mut WorkItem<'_, '_>,
+    tc: &mut TileCaches,
+    dir: &Directory,
+    params: &LatencyParams,
+    page_runs: bool,
+    slots: &[Option<Region>],
+    log: &mut Vec<DirOp>,
+    delta: &mut StatsDelta,
+    key: u64,
+) -> QuantumEnd {
+    let own = it.st.tile;
+    let mut budget = QUANTUM_LINES;
+    while budget > 0 && !it.st.done {
+        let op = it.st.cur.expect("live thread must hold an op");
+        let park0 = |budget| {
+            QuantumEnd::Parked(ParkInfo {
+                key,
+                budget,
+                batch_done: 0,
+                batch_total: 0,
+            })
+        };
+        match op {
+            Op::Read { loc, bytes } | Op::Write { loc, bytes } => {
+                let write = matches!(op, Op::Write { .. });
+                let Some(addr) = resolve_loc(slots, loc) else {
+                    return park0(budget);
+                };
+                let total = line_count(addr, bytes);
+                let progress = it.st.progress;
+                let batch = (total - progress).min(QUANTUM_LINES);
+                let first = addr.line().0 + progress;
+                for i in 0..batch {
+                    let line = LineId(first + i);
+                    let local = if write {
+                        !dir.has_foreign_sharer(line, own)
+                    } else {
+                        tc.l1.contains(line) || tc.l2.contains(line)
+                    };
+                    if !local {
+                        return QuantumEnd::Parked(ParkInfo {
+                            key,
+                            budget,
+                            batch_done: i,
+                            batch_total: if i == 0 { 0 } else { batch },
+                        });
+                    }
+                    it.st.clock += if write {
+                        write_line(tc, own, line, log, delta, params)
+                    } else if page_runs {
+                        read_line_bulk(tc, own, line, log, delta, params)
+                    } else {
+                        read_line_single(tc, own, line, log, delta, params)
+                    };
+                    delta.line_accesses += 1;
+                }
+                if progress + batch >= total {
+                    it.st.progress = 0;
+                    it.st.cur = None;
+                } else {
+                    it.st.progress = progress + batch;
+                }
+                budget = budget.saturating_sub(batch.max(1));
+            }
+            Op::Copy { src, dst, bytes } => {
+                let (Some(s), Some(d)) = (resolve_loc(slots, src), resolve_loc(slots, dst))
+                else {
+                    return park0(budget);
+                };
+                let total = line_count(d, bytes);
+                let progress = it.st.progress;
+                let batch = (total - progress).min(QUANTUM_LINES / 2);
+                let sfirst = s.line().0 + progress;
+                let dfirst = d.line().0 + progress;
+                for i in 0..batch {
+                    let sl = LineId(sfirst + i);
+                    let dl = LineId(dfirst + i);
+                    // Pair-boundary park: check both halves before
+                    // executing either (the src read cannot change the
+                    // dst's foreign-sharer bits, so checking up front is
+                    // sound).
+                    let local = (tc.l1.contains(sl) || tc.l2.contains(sl))
+                        && !dir.has_foreign_sharer(dl, own);
+                    if !local {
+                        return QuantumEnd::Parked(ParkInfo {
+                            key,
+                            budget,
+                            batch_done: i,
+                            batch_total: if i == 0 { 0 } else { batch },
+                        });
+                    }
+                    // `Copy` goes through `CacheSystem::read` in both
+                    // engine modes (the fast path's per-line interleave),
+                    // so the single-read mirror applies unconditionally.
+                    it.st.clock += read_line_single(tc, own, sl, log, delta, params);
+                    it.st.clock += write_line(tc, own, dl, log, delta, params);
+                    delta.line_accesses += 2;
+                }
+                if progress + batch >= total {
+                    it.st.progress = 0;
+                    it.st.cur = None;
+                } else {
+                    it.st.progress = progress + batch;
+                }
+                budget = budget.saturating_sub((batch * 2).max(1));
+            }
+            Op::Compute { cycles } => {
+                it.st.clock += cycles;
+                delta.compute_cycles += cycles;
+                it.st.cur = None;
+                budget = budget.saturating_sub(1);
+            }
+            // The scan proves phase-A threads only carry plain ops within
+            // the window horizon; anything else parks defensively and
+            // re-runs in phase B.
+            _ => return park0(budget),
+        }
+        if it.st.cur.is_none() {
+            it.st.cur = it.stream.next_op();
+            if it.st.cur.is_none() {
+                it.st.done = true;
+            }
+        }
+    }
+    QuantumEnd::Completed
+}
+
+/// Mirror of the `read_run` per-line walk (`home == req`) for a line the
+/// park check proved resident: L1 probe, else L2 touch + L1 fill + share.
+/// Note the bulk walk does *not* re-add the sharer bit on an L1 hit — the
+/// L1-resident ⇒ sharer-bit-set invariant — which is why this differs
+/// from the single-read mirror below.
+#[inline]
+fn read_line_bulk(
+    tc: &mut TileCaches,
+    own: TileId,
+    line: LineId,
+    log: &mut Vec<DirOp>,
+    delta: &mut StatsDelta,
+    params: &LatencyParams,
+) -> u64 {
+    if tc.l1.probe(line) {
+        delta.l1_hits += 1;
+        params.l1_hit
+    } else {
+        let hit = tc.l2.touch(line);
+        debug_assert!(hit, "park check guarantees L2 residency on L1 miss");
+        tc.l1.insert(line);
+        log.push(DirOp::Share(line, own));
+        delta.l2_hits += 1;
+        params.l2_hit
+    }
+}
+
+/// Mirror of `CacheSystem::read` (`home == req`) for a resident line:
+/// like the bulk walk but the sharer bit is recorded on *every* read,
+/// L1 hits included.
+#[inline]
+fn read_line_single(
+    tc: &mut TileCaches,
+    own: TileId,
+    line: LineId,
+    log: &mut Vec<DirOp>,
+    delta: &mut StatsDelta,
+    params: &LatencyParams,
+) -> u64 {
+    let cost = if tc.l1.probe(line) {
+        delta.l1_hits += 1;
+        params.l1_hit
+    } else {
+        let hit = tc.l2.probe(line);
+        debug_assert!(hit, "park check guarantees L2 residency on L1 miss");
+        tc.l1.insert(line);
+        delta.l2_hits += 1;
+        params.l2_hit
+    };
+    log.push(DirOp::Share(line, own));
+    cost
+}
+
+/// Mirror of the `write_run` per-line walk + `bill_store_line` for a
+/// locally-homed line with no foreign sharer: home L2 fill, directory
+/// claim, local-store cost.
+#[inline]
+fn write_line(
+    tc: &mut TileCaches,
+    own: TileId,
+    line: LineId,
+    log: &mut Vec<DirOp>,
+    delta: &mut StatsDelta,
+    params: &LatencyParams,
+) -> u64 {
+    tc.l2.insert(line);
+    log.push(DirOp::Claim(line, own));
+    delta.l2_hits += 1;
+    params.l2_hit
+}

@@ -1,11 +1,13 @@
 //! Cycle-approximate replay simulation: traces, the engine, and run stats.
 
 pub mod engine;
+pub(crate) mod epoch;
 pub mod stats;
 pub mod trace;
 
-pub use engine::{Engine, EngineConfig, EngineError};
+pub use engine::{plan_intra_workers, Engine, EngineConfig, EngineError};
 pub use stats::RunStats;
 pub use trace::{
-    Loc, Op, OpSource, Program, ProgramError, SegmentGen, SegmentSource, TraceBuilder, VecSource,
+    Loc, Op, OpSource, OpStream, Program, ProgramError, SegmentGen, SegmentSource, TraceBuilder,
+    VecSource,
 };

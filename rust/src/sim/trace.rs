@@ -73,7 +73,11 @@ pub enum Op {
 /// same op sequence is produced again. The engine relies on this — every
 /// run streams each source twice (a validation pass, then the replay), and
 /// the differential tests pin streamed == recorded.
-pub trait OpSource {
+///
+/// `Send` is a supertrait so the intra-run parallel replay can hand each
+/// thread's stream to a scoped worker; sources are plain data, so every
+/// existing impl satisfies it for free.
+pub trait OpSource: Send {
     /// The next op, or `None` when the stream is exhausted.
     fn next_op(&mut self) -> Option<Op>;
 
@@ -269,6 +273,46 @@ impl TraceBuilder {
 
     pub fn capacity(&self) -> usize {
         self.ops.capacity()
+    }
+}
+
+/// A peekable view over one thread's op stream, used by the replay loop.
+///
+/// The intra-run parallel engine plans each epoch by *looking ahead* into
+/// every thread's stream without consuming it; ops pulled for a peek are
+/// parked in `ahead` and handed out by [`next_op`](Self::next_op) in order,
+/// so the consumed sequence is identical whether or not any peeks happened
+/// (the byte-identical-stats contract across `--intra-jobs` rests on this).
+pub struct OpStream<'p> {
+    src: &'p mut Box<dyn OpSource>,
+    ahead: std::collections::VecDeque<Op>,
+}
+
+impl<'p> OpStream<'p> {
+    pub fn new(src: &'p mut Box<dyn OpSource>) -> Self {
+        OpStream {
+            src,
+            ahead: std::collections::VecDeque::new(),
+        }
+    }
+
+    /// The next op, consuming it (look-ahead buffer first, then source).
+    #[inline]
+    pub fn next_op(&mut self) -> Option<Op> {
+        match self.ahead.pop_front() {
+            Some(op) => Some(op),
+            None => self.src.next_op(),
+        }
+    }
+
+    /// The op `i` positions ahead of the consumption point (0 = the op
+    /// `next_op` would return), without consuming anything.
+    pub fn peek(&mut self, i: usize) -> Option<Op> {
+        while self.ahead.len() <= i {
+            let op = self.src.next_op()?;
+            self.ahead.push_back(op);
+        }
+        self.ahead.get(i).copied()
     }
 }
 

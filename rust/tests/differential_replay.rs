@@ -446,6 +446,77 @@ fn every_protocol_streamed_equals_recorded_equals_reference() {
 }
 
 #[test]
+fn parallel_engine_streamed_equals_recorded_equals_reference() {
+    // The intra-run parallel engine joins the equivalence triangle: a
+    // streamed replay sharded across 4 epoch workers, a recorded replay
+    // on 3 workers, and the sequential per-line reference walk must all
+    // produce byte-identical stats JSON and per-link class vectors. The
+    // reference walk stays the cycle-exactness oracle for the parallel
+    // engine, exactly as it is for the page-run fast path.
+    for policy in POLICIES {
+        for links in [false, true] {
+            let mk_cfg = || {
+                let mut c = cfg(policy);
+                c.contention.links = links;
+                c
+            };
+            let build = |e: &mut Engine| {
+                mergesort::build(
+                    e,
+                    &MergesortConfig {
+                        elems: 1 << 13,
+                        threads: 6,
+                        variant: Variant::NonLocalised,
+                    },
+                )
+            };
+            let mut e_par = Engine::new(mk_cfg().with_intra_jobs(4));
+            let mut streamed = build(&mut e_par);
+            let mut e_rec = Engine::new(mk_cfg().with_intra_jobs(3));
+            let _ = build(&mut e_rec);
+            let mut recorded =
+                Program::from_ops(streamed.record(), streamed.num_slots, streamed.num_events);
+            let mut e_ref = Engine::new(mk_cfg().without_page_runs());
+            let mut for_ref = build(&mut e_ref);
+
+            let s_par = e_par
+                .run(&mut streamed, &mut StaticMapper::new())
+                .unwrap_or_else(|e| panic!("parallel streamed (links={links}): {e}"));
+            let s_rec = e_rec
+                .run(&mut recorded, &mut StaticMapper::new())
+                .unwrap_or_else(|e| panic!("parallel recorded (links={links}): {e}"));
+            let s_ref = e_ref
+                .run(&mut for_ref, &mut StaticMapper::new())
+                .unwrap_or_else(|e| panic!("reference (links={links}): {e}"));
+
+            let js = s_par.to_json().encode();
+            assert_eq!(
+                js,
+                s_rec.to_json().encode(),
+                "({policy:?}, links={links}): parallel streamed vs parallel recorded"
+            );
+            assert_eq!(
+                js,
+                s_ref.to_json().encode(),
+                "({policy:?}, links={links}): parallel engine vs reference walk"
+            );
+            assert_eq!(
+                s_par.link_requests, s_ref.link_requests,
+                "({policy:?}, links={links}): per-link traffic diverged"
+            );
+            assert_eq!(
+                s_par.link_reply_requests, s_ref.link_reply_requests,
+                "({policy:?}, links={links}): reply-class traffic diverged"
+            );
+            assert_eq!(
+                s_par.link_inval_requests, s_ref.link_inval_requests,
+                "({policy:?}, links={links}): invalidation-class traffic diverged"
+            );
+        }
+    }
+}
+
+#[test]
 fn streamed_equals_recorded_under_migrating_scheduler() {
     // The pull-based loop must interleave identically when the scheduler
     // migrates threads mid-run (same seed ⇒ same migration schedule).

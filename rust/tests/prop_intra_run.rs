@@ -1,0 +1,273 @@
+//! Intra-run parallelism pins: the epoch driver (`--intra-jobs`) is an
+//! execution strategy, not a model change, so `RunStats` must be
+//! **byte-identical** — the full JSON record, including every per-link
+//! and per-class vector and all coherence counters — at *every* worker
+//! count, for every workload × protocol × links-on/off combination.
+//!
+//! Worker count 7 is deliberately prime and not a divisor of the tile
+//! count: chunk boundaries land mid-row, which is where a merge-order
+//! bug would show.
+
+use tilesim::coherence::ProtocolSpec;
+use tilesim::mem::{HashPolicy, MemConfig};
+use tilesim::sched::{StaticMapper, TileLinuxScheduler};
+use tilesim::sim::{plan_intra_workers, Engine, EngineConfig, Program};
+use tilesim::workloads::mergesort::{self, MergesortConfig, Variant};
+use tilesim::workloads::microbench::{self, MicrobenchConfig};
+use tilesim::workloads::pingpong::{self, PingPongConfig};
+use tilesim::workloads::radix::{self, RadixConfig};
+
+const WORKER_COUNTS: [usize; 4] = [1, 2, 4, 7];
+
+/// Replay `build`'s program at every worker count (on identically
+/// prepared engines) and require byte-identical stats JSON plus
+/// identical per-link class vectors against the sequential (1-worker)
+/// replay.
+fn assert_intra_identical(
+    label: &str,
+    mk_cfg: &dyn Fn() -> EngineConfig,
+    build: &dyn Fn(&mut Engine) -> Program,
+) {
+    let mut baseline: Option<(String, Vec<u64>, Vec<u64>, Vec<u64>)> = None;
+    for workers in WORKER_COUNTS {
+        let mut e = Engine::new(mk_cfg().with_intra_jobs(workers));
+        let mut p = build(&mut e);
+        let stats = e
+            .run(&mut p, &mut StaticMapper::new())
+            .unwrap_or_else(|err| panic!("{label} intra-jobs={workers}: {err}"));
+        let row = (
+            stats.to_json().encode(),
+            stats.link_requests.clone(),
+            stats.link_reply_requests.clone(),
+            stats.link_inval_requests.clone(),
+        );
+        match &baseline {
+            None => baseline = Some(row),
+            Some(b) => {
+                assert_eq!(
+                    b.0, row.0,
+                    "{label}: stats JSON diverged at intra-jobs={workers}"
+                );
+                assert_eq!(
+                    b.1, row.1,
+                    "{label}: per-link request traffic diverged at intra-jobs={workers}"
+                );
+                assert_eq!(
+                    b.2, row.2,
+                    "{label}: reply-class traffic diverged at intra-jobs={workers}"
+                );
+                assert_eq!(
+                    b.3, row.3,
+                    "{label}: invalidation-class traffic diverged at intra-jobs={workers}"
+                );
+            }
+        }
+    }
+}
+
+/// Every workload the paper replays, on the default protocol, links off
+/// and on: the full grid the issue pins.
+#[test]
+fn all_workloads_byte_identical_across_worker_counts() {
+    type Build = Box<dyn Fn(&mut Engine) -> Program>;
+    let builds: Vec<(&str, Build)> = vec![
+        (
+            "mergesort non-localised",
+            Box::new(|e: &mut Engine| {
+                mergesort::build(
+                    e,
+                    &MergesortConfig {
+                        elems: 1 << 13,
+                        threads: 6,
+                        variant: Variant::NonLocalised,
+                    },
+                )
+            }),
+        ),
+        (
+            "mergesort localised",
+            Box::new(|e: &mut Engine| {
+                mergesort::build(
+                    e,
+                    &MergesortConfig {
+                        elems: 1 << 13,
+                        threads: 6,
+                        variant: Variant::Localised,
+                    },
+                )
+            }),
+        ),
+        (
+            "microbench",
+            Box::new(|e: &mut Engine| {
+                microbench::build(
+                    e,
+                    &MicrobenchConfig {
+                        elems: 1 << 13,
+                        threads: 8,
+                        reps: 3,
+                        localised: false,
+                    },
+                )
+            }),
+        ),
+        (
+            "pingpong",
+            Box::new(|e: &mut Engine| {
+                pingpong::build(
+                    e,
+                    &PingPongConfig {
+                        elems: 1 << 12,
+                        threads: 8,
+                        passes: 3,
+                        localised: false,
+                    },
+                )
+            }),
+        ),
+        (
+            "radix",
+            Box::new(|e: &mut Engine| {
+                radix::build(
+                    e,
+                    &RadixConfig {
+                        elems: 1 << 12,
+                        threads: 4,
+                        digit_bits: 8,
+                        localised: true,
+                    },
+                )
+            }),
+        ),
+    ];
+    for policy in [HashPolicy::AllButStack, HashPolicy::None] {
+        for links in [false, true] {
+            for (label, build) in &builds {
+                let mk_cfg = move || {
+                    let mut c = EngineConfig::tilepro64(MemConfig {
+                        hash_policy: policy,
+                        striping: true,
+                    });
+                    c.contention.links = links;
+                    c
+                };
+                assert_intra_identical(
+                    &format!("{label} ({policy:?}, links={links})"),
+                    &mk_cfg,
+                    build,
+                );
+            }
+        }
+    }
+}
+
+/// Directory protocols force the run sequential (the gating table says
+/// so), but the contract is on the *output*: stats stay byte-identical
+/// at any requested worker count under every protocol too.
+#[test]
+fn protocols_byte_identical_across_worker_counts() {
+    for protocol in ProtocolSpec::all() {
+        let mk_cfg = move || {
+            let mut c = EngineConfig::tilepro64(MemConfig {
+                hash_policy: HashPolicy::AllButStack,
+                striping: true,
+            })
+            .with_protocol(protocol);
+            c.contention.links = true;
+            c.contention.coherence = true;
+            c
+        };
+        assert_intra_identical(
+            &format!("mergesort under {}", protocol.label()),
+            &mk_cfg,
+            &|e: &mut Engine| {
+                mergesort::build(
+                    e,
+                    &MergesortConfig {
+                        elems: 1 << 12,
+                        threads: 6,
+                        variant: Variant::NonLocalised,
+                    },
+                )
+            },
+        );
+    }
+}
+
+/// The caches-off bandwidth mode routes everything through shared
+/// servers; the planner keeps it sequential, and the stats must not
+/// notice a requested worker count.
+#[test]
+fn caches_off_byte_identical_across_worker_counts() {
+    let mk_cfg = || {
+        EngineConfig::tilepro64(MemConfig {
+            hash_policy: HashPolicy::None,
+            striping: true,
+        })
+        .without_caches()
+    };
+    assert_intra_identical("microbench caches-off", &mk_cfg, &|e: &mut Engine| {
+        microbench::build(
+            e,
+            &MicrobenchConfig {
+                elems: 1 << 13,
+                threads: 8,
+                reps: 3,
+                localised: false,
+            },
+        )
+    });
+}
+
+/// A migrating scheduler is dynamic: the run must fall back to the
+/// sequential engine (same seed ⇒ identical stats at every requested
+/// worker count).
+#[test]
+fn migrating_scheduler_forces_sequential_fallback() {
+    let build = |e: &mut Engine| {
+        mergesort::build(
+            e,
+            &MergesortConfig {
+                elems: 1 << 13,
+                threads: 8,
+                variant: Variant::Localised,
+            },
+        )
+    };
+    let mut baseline = None;
+    for workers in WORKER_COUNTS {
+        let mut e = Engine::new(
+            EngineConfig::tilepro64(MemConfig {
+                hash_policy: HashPolicy::None,
+                striping: true,
+            })
+            .with_intra_jobs(workers),
+        );
+        let mut p = build(&mut e);
+        let stats = e
+            .run(&mut p, &mut TileLinuxScheduler::with_seed(2014))
+            .unwrap();
+        let js = stats.to_json().encode();
+        match &baseline {
+            None => baseline = Some(js),
+            Some(b) => assert_eq!(b, &js, "migrating sched diverged at intra-jobs={workers}"),
+        }
+    }
+}
+
+/// The planner's gating table, pinned row by row: worker count 1 (or any
+/// violated precondition) routes through the sequential path.
+#[test]
+fn worker_planning_gating_table() {
+    // requested <= 1 never parallelises.
+    assert_eq!(plan_intra_workers(0, 64, true, false, false, true), 1);
+    assert_eq!(plan_intra_workers(1, 64, true, false, false, true), 1);
+    // All preconditions met: granted, clamped to the tile count.
+    assert_eq!(plan_intra_workers(4, 64, true, false, false, true), 4);
+    assert_eq!(plan_intra_workers(128, 64, true, false, false, true), 64);
+    // Each violated precondition alone forces sequential.
+    assert_eq!(plan_intra_workers(4, 64, false, false, false, true), 1);
+    assert_eq!(plan_intra_workers(4, 64, true, true, false, true), 1);
+    assert_eq!(plan_intra_workers(4, 64, true, false, true, true), 1);
+    assert_eq!(plan_intra_workers(4, 64, true, false, false, false), 1);
+}
