@@ -121,15 +121,20 @@ fn scan_replay_on_fabric(elems: u64, fabric: &str) -> RunStats {
 }
 
 /// One non-localised micro-benchmark replay under `protocol`, link and
-/// coherence billing on (the protocol lab's configuration): the directory
-/// protocols force per-line accounting, so this is the path whose cost
-/// BENCH_protocol.json tracks against the fused default.
-fn protocol_replay(elems: u64, protocol: ProtocolSpec) -> RunStats {
+/// coherence billing on (the protocol lab's configuration). Directory
+/// protocols now batch uniform same-page runs through the bulk transition
+/// hooks; `page_runs = false` forces the per-line reference walk, so the
+/// fast/reference pair is the protocol perf-cliff record
+/// (`protocol_fast_path` in BENCH_engine.json).
+fn protocol_replay(elems: u64, protocol: ProtocolSpec, page_runs: bool) -> RunStats {
     let mut cfg = EngineConfig::tilepro64(MemConfig {
         hash_policy: HashPolicy::AllButStack,
         striping: true,
     })
     .with_protocol(protocol);
+    if !page_runs {
+        cfg = cfg.without_page_runs();
+    }
     cfg.contention.links = true;
     cfg.contention.coherence = true;
     let mut e = Engine::new(cfg);
@@ -288,7 +293,9 @@ fn main() {
         ]));
     }
 
-    let engine_json = Json::obj(vec![
+    // Assembled into BENCH_engine.json after the protocol section below
+    // contributes its fast-path and intra × protocol rows.
+    let mut engine_fields = vec![
         ("bench", Json::str("replay_throughput")),
         ("workload", Json::str("seq-scan microbench")),
         ("elems", Json::num(scan_elems as f64)),
@@ -310,11 +317,7 @@ fn main() {
         ),
         ("intra_engine", Json::arr(intra_rows)),
         ("intra_speedup_4_workers", Json::num(intra_speedup_4w)),
-    ]);
-    let engine_path = std::env::var("TILESIM_BENCH_ENGINE_OUT")
-        .unwrap_or_else(|_| "BENCH_engine.json".into());
-    std::fs::write(&engine_path, engine_json.encode()).expect("write BENCH_engine.json");
-    println!("wrote {engine_path}");
+    ];
 
     // --- BENCH_noc.json: the link-contention throughput record (same
     // numbers as above, in the NoC-focused file the link PRs track).
@@ -401,27 +404,42 @@ fn main() {
     std::fs::write(&fabric_path, fabric_json.encode()).expect("write BENCH_fabric.json");
     println!("wrote {fabric_path}");
 
-    // --- BENCH_protocol.json: per-protocol replay throughput on the same
-    // micro-benchmark traffic, links + coherence billing on. The default
-    // column runs the fused write-invalidate path (page runs intact); the
-    // directory protocols pay the per-line forcing, which is the overhead
-    // this record tracks per PR.
+    // --- BENCH_protocol.json + the engine record's protocol_fast_path
+    // rows: per-protocol replay throughput on the same micro-benchmark
+    // traffic, links + coherence billing on, through the page-run fast
+    // path *and* the per-line reference walk. Stats equality is asserted
+    // here (the conformance suite pins it per workload too); the
+    // fast/reference ratio is the perf-cliff lift this record tracks.
     let proto_elems = elems / 8;
     let mut proto_rows = Vec::new();
+    let mut proto_fast_rows = Vec::new();
     let mut default_lps = 0.0_f64;
     for protocol in ProtocolSpec::all() {
-        let stats = protocol_replay(proto_elems, protocol);
+        let stats = protocol_replay(proto_elems, protocol, true);
+        assert_eq!(
+            stats.to_json().encode(),
+            protocol_replay(proto_elems, protocol, false).to_json().encode(),
+            "protocol {} fast path diverged from the reference walk",
+            protocol.label()
+        );
         let t_proto = time_it(0, 2, || {
-            std::hint::black_box(protocol_replay(proto_elems, protocol).makespan_cycles);
+            std::hint::black_box(protocol_replay(proto_elems, protocol, true).makespan_cycles);
+        });
+        let t_proto_ref = time_it(0, 2, || {
+            std::hint::black_box(protocol_replay(proto_elems, protocol, false).makespan_cycles);
         });
         let lps = stats.line_accesses as f64 / t_proto.min_s;
+        let ref_lps = stats.line_accesses as f64 / t_proto_ref.min_s;
         if protocol.is_default() {
             default_lps = lps;
         }
         println!(
-            "protocol {:>16}: {:>7.1} M lines/s ({:.2}x vs default){}",
+            "protocol {:>16}: {:>7.1} M lines/s fast vs {:>7.1} M reference = {:.2}x \
+             ({:.2}x vs default){}",
             protocol.label(),
             lps / 1e6,
+            ref_lps / 1e6,
+            lps / ref_lps,
             if default_lps > 0.0 { lps / default_lps } else { 1.0 },
             if protocol.is_default() { " [fused baseline]" } else { "" }
         );
@@ -436,6 +454,14 @@ fn main() {
             ),
             ("upgrade_hits", Json::num(stats.upgrade_hits as f64)),
         ]));
+        proto_fast_rows.push(Json::obj(vec![
+            ("protocol", Json::str(protocol.label())),
+            ("fast_min_s", Json::num(t_proto.min_s)),
+            ("fast_lines_per_sec", Json::num(lps)),
+            ("reference_min_s", Json::num(t_proto_ref.min_s)),
+            ("reference_lines_per_sec", Json::num(ref_lps)),
+            ("speedup_vs_per_line_walk", Json::num(lps / ref_lps)),
+        ]));
     }
     let protocol_json = Json::obj(vec![
         ("bench", Json::str("protocol_replay_throughput")),
@@ -448,6 +474,64 @@ fn main() {
         .unwrap_or_else(|_| "BENCH_protocol.json".into());
     std::fs::write(&protocol_path, protocol_json.encode()).expect("write BENCH_protocol.json");
     println!("wrote {protocol_path}");
+
+    // --- intra × protocol: the epoch driver now composes with directory
+    // protocols, so the engine record also tracks the parallel speedup of
+    // a protocol replay (byte-identity asserted, as always). Case 8 is
+    // localised + static-mapped: its own-homed pages are exactly what
+    // phase A admits, so the protocol quanta genuinely run in parallel.
+    let intra_proto_spec = RunSpec::new(
+        8,
+        tilesim::coordinator::batch::Workload::Microbench { reps: 4 },
+        proto_elems,
+        SCAN_THREADS,
+        experiment::DEFAULT_SEED,
+    )
+    .on_machine(tilesim::arch::MachineSpec::TilePro64, true, true)
+    .with_protocol(ProtocolSpec::parse("msi").expect("msi spec"));
+    let intra_proto_seq_json = intra_proto_spec.execute_intra(1).to_json().encode();
+    let mut intra_proto_rows = Vec::new();
+    let mut intra_proto_seq_lps = 0.0_f64;
+    for workers in [1usize, 4] {
+        let stats = intra_proto_spec.execute_intra(workers);
+        assert_eq!(
+            stats.to_json().encode(),
+            intra_proto_seq_json,
+            "msi intra-jobs {workers} diverged from the sequential engine"
+        );
+        let t_w = time_it(0, 2, || {
+            std::hint::black_box(intra_proto_spec.execute_intra(workers).makespan_cycles);
+        });
+        let lps = stats.line_accesses as f64 / t_w.min_s;
+        if workers == 1 {
+            intra_proto_seq_lps = lps;
+        }
+        println!(
+            "intra-run engine (msi): {workers} worker(s) = {:.1} M lines/s ({:.2}x vs sequential)",
+            lps / 1e6,
+            lps / intra_proto_seq_lps
+        );
+        intra_proto_rows.push(Json::obj(vec![
+            ("workers", Json::num(workers as f64)),
+            ("min_s", Json::num(t_w.min_s)),
+            ("lines_per_sec", Json::num(lps)),
+            ("speedup_vs_sequential", Json::num(lps / intra_proto_seq_lps)),
+        ]));
+    }
+    engine_fields.push(("protocol_fast_path", Json::arr(proto_fast_rows)));
+    engine_fields.push((
+        "intra_protocol",
+        Json::obj(vec![
+            ("protocol", Json::str("msi")),
+            ("workload", Json::str("microbench localised (case 8), links+coherence on")),
+            ("rows", Json::arr(intra_proto_rows)),
+        ]),
+    ));
+    let engine_json = Json::obj(engine_fields);
+    let engine_path = std::env::var("TILESIM_BENCH_ENGINE_OUT")
+        .unwrap_or_else(|_| "BENCH_engine.json".into());
+    std::fs::write(&engine_path, engine_json.encode()).expect("write BENCH_engine.json");
+    println!("wrote {engine_path}");
 
     // --- batch pool: full table1 sweep at 1 job vs all cores. The sweep
     // is the unit of work every figure replays, so this is the number the

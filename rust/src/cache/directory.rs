@@ -20,6 +20,9 @@ use std::sync::Arc;
 use crate::arch::{Machine, TileId};
 use crate::mem::LineId;
 
+/// Owner-column sentinel: no tile holds the line dirty.
+const NO_OWNER: u32 = u32::MAX;
+
 /// Sharer masks stored in a dense vector indexed by line id: the allocator
 /// bump-allocates a compact address space, and the workloads stream
 /// sequentially, so adjacent entries share (host) cache lines — an order of
@@ -36,6 +39,14 @@ pub struct Directory {
     /// `write_claim` that found other sharers, consumed by `fanout`.
     #[cfg(debug_assertions)]
     scratch_armed: bool,
+    /// Dirty-owner column of the ownership protocols (MESI/MOESI):
+    /// `owners[line]` is the owning tile or [`NO_OWNER`]. Flat SoA
+    /// alongside the sharer bitsets so the page-run uniformity scan
+    /// probes sharer mask and owner with two dense indexed loads and no
+    /// allocation; `owned_lines` keeps the default write-through
+    /// protocol's no-owner probe O(1).
+    owners: Vec<u32>,
+    owned_lines: usize,
     tracked: usize,
     pub invalidations_sent: u64,
 }
@@ -59,9 +70,69 @@ impl Directory {
             scratch: vec![0; words],
             #[cfg(debug_assertions)]
             scratch_armed: false,
+            owners: Vec::new(),
+            owned_lines: 0,
             tracked: 0,
             invalidations_sent: 0,
         }
+    }
+
+    /// The tile holding `line` dirty (M/O), if any. The `owned_lines`
+    /// early-out keeps this free for the default protocol, whose writes
+    /// never create owners.
+    #[inline]
+    pub fn owner_of(&self, line: LineId) -> Option<TileId> {
+        if self.owned_lines == 0 {
+            return None;
+        }
+        match self.owners.get(line.0 as usize) {
+            Some(&t) if t != NO_OWNER => Some(TileId(t)),
+            _ => None,
+        }
+    }
+
+    /// Record a silent-upgrade write: `tile` now holds `line` modified.
+    pub fn set_owner(&mut self, line: LineId, tile: TileId) {
+        let ix = line.0 as usize;
+        if ix >= self.owners.len() {
+            self.owners.resize(ix + 1, NO_OWNER);
+        }
+        if self.owners[ix] == NO_OWNER {
+            self.owned_lines += 1;
+        }
+        self.owners[ix] = tile.0;
+    }
+
+    /// Drop the dirty-owner record (writeback, invalidation, purge).
+    pub fn clear_owner(&mut self, line: LineId) -> Option<TileId> {
+        if self.owned_lines == 0 {
+            return None;
+        }
+        match self.owners.get_mut(line.0 as usize) {
+            Some(slot) if *slot != NO_OWNER => {
+                let t = TileId(*slot);
+                *slot = NO_OWNER;
+                self.owned_lines -= 1;
+                Some(t)
+            }
+            _ => None,
+        }
+    }
+
+    /// Dirty owners inside `[first, last]`, in line order — the
+    /// free-time writeback set the engine bills before purging a region.
+    pub fn owners_in_range(&self, first: LineId, last: LineId) -> Vec<(LineId, TileId)> {
+        if self.owned_lines == 0 {
+            return Vec::new();
+        }
+        let lo = (first.0 as usize).min(self.owners.len());
+        let hi = (last.0 as usize + 1).min(self.owners.len());
+        self.owners[lo..hi]
+            .iter()
+            .enumerate()
+            .filter(|&(_, &t)| t != NO_OWNER)
+            .map(|(i, &t)| (LineId((lo + i) as u64), TileId(t)))
+            .collect()
     }
 
     #[inline]
@@ -299,6 +370,16 @@ impl Directory {
                 slot.fill(0);
             }
         }
+        if self.owned_lines != 0 {
+            let lo = (first.0 as usize).min(self.owners.len());
+            let hi = (last.0 as usize + 1).min(self.owners.len());
+            for slot in &mut self.owners[lo..hi] {
+                if *slot != NO_OWNER {
+                    *slot = NO_OWNER;
+                    self.owned_lines -= 1;
+                }
+            }
+        }
     }
 
     pub fn tracked_lines(&self) -> usize {
@@ -424,6 +505,33 @@ mod tests {
         assert_eq!(d.sharers_of(LineId(9)), vec![TileId(70)]);
         // (0,0) -> (15,15) on a 16-wide grid = 30 hops.
         assert_eq!(f.max_hops_from_home, 30);
+    }
+
+    #[test]
+    fn owner_column_tracks_sets_clears_and_purges() {
+        let mut d = dir();
+        assert_eq!(d.owner_of(LineId(9)), None);
+        d.set_owner(LineId(9), TileId(3));
+        d.set_owner(LineId(11), TileId(4));
+        d.set_owner(LineId(40), TileId(5));
+        assert_eq!(d.owner_of(LineId(9)), Some(TileId(3)));
+        // Re-setting an owned line must not double-count it.
+        d.set_owner(LineId(9), TileId(7));
+        assert_eq!(d.owner_of(LineId(9)), Some(TileId(7)));
+        assert_eq!(
+            d.owners_in_range(LineId(0), LineId(20)),
+            vec![(LineId(9), TileId(7)), (LineId(11), TileId(4))]
+        );
+        assert_eq!(d.clear_owner(LineId(9)), Some(TileId(7)));
+        assert_eq!(d.clear_owner(LineId(9)), None);
+        assert_eq!(d.owner_of(LineId(9)), None);
+        // A region purge drops the owners it covers, keeps the rest.
+        d.purge_line_range(LineId(0), LineId(20));
+        assert_eq!(d.owner_of(LineId(11)), None);
+        assert_eq!(d.owner_of(LineId(40)), Some(TileId(5)));
+        // Probes past the column's end are owner-free, not a panic.
+        assert_eq!(d.owner_of(LineId(1 << 20)), None);
+        assert!(d.owners_in_range(LineId(100), LineId(1 << 20)).is_empty());
     }
 
     #[test]

@@ -72,12 +72,6 @@ pub struct WriteOutcome {
 pub struct CacheSystem {
     tiles: Vec<TileCaches>,
     pub directory: Directory,
-    /// Dirty-owner map of the ownership protocols (MESI/MOESI): which
-    /// tile holds a line modified without posting it home. Empty under
-    /// the default write-through protocol — the seed's hot path never
-    /// touches it. A `BTreeMap` so range scans (free-time writeback
-    /// billing) iterate in deterministic line order.
-    owners: std::collections::BTreeMap<u64, TileId>,
 }
 
 impl CacheSystem {
@@ -88,7 +82,6 @@ impl CacheSystem {
                 .map(|_| TileCaches::new(&geom))
                 .collect(),
             directory: Directory::new(machine),
-            owners: std::collections::BTreeMap::new(),
         }
     }
 
@@ -266,39 +259,37 @@ impl CacheSystem {
             t.l2.purge_line_range(first, last);
         }
         self.directory.purge_line_range(first, last);
-        if !self.owners.is_empty() {
-            self.owners.retain(|&l, _| l < first.0 || l > last.0);
-        }
     }
 
     // ---- protocol-lab hooks (dirty owners + non-invalidating stores) ----
+    //
+    // Owner state lives in the directory's flat SoA column (alongside
+    // the sharer bitsets) so the page-run uniformity scan reads both
+    // with dense indexed loads; these are thin delegations kept for the
+    // engine's existing call sites.
 
     /// The tile holding `line` dirty (M/O), if any.
     #[inline]
     pub fn owner_of(&self, line: LineId) -> Option<TileId> {
-        if self.owners.is_empty() {
-            return None;
-        }
-        self.owners.get(&line.0).copied()
+        self.directory.owner_of(line)
     }
 
     /// Record a silent-upgrade write: `tile` now holds `line` modified.
+    #[inline]
     pub fn set_owner(&mut self, line: LineId, tile: TileId) {
-        self.owners.insert(line.0, tile);
+        self.directory.set_owner(line, tile)
     }
 
     /// Drop the dirty-owner record (writeback, invalidation, purge).
+    #[inline]
     pub fn clear_owner(&mut self, line: LineId) -> Option<TileId> {
-        self.owners.remove(&line.0)
+        self.directory.clear_owner(line)
     }
 
     /// Dirty owners inside `[first, last]`, in line order — the free-time
     /// writeback set the engine bills before purging a region.
     pub fn owners_in_range(&self, first: LineId, last: LineId) -> Vec<(LineId, TileId)> {
-        self.owners
-            .range(first.0..=last.0)
-            .map(|(&l, &t)| (LineId(l), t))
-            .collect()
+        self.directory.owners_in_range(first, last)
     }
 
     /// Make a silently-upgraded line resident in the owner's private

@@ -22,8 +22,19 @@
 //! [`CoherenceAction`]s the engine must bill on the mesh via the existing
 //! `ContentionModel` traffic classes. Transitions are *pure*: all state
 //! lives in the directory sharer sets and the cache layer's dirty-owner
-//! map, so the conformance suite can drive every protocol through every
-//! ctx shape without an engine.
+//! column, so the conformance suite can drive every protocol through
+//! every ctx shape without an engine.
+//!
+//! The run-level bulk hooks
+//! ([`on_read_run`](Protocol::on_read_run) /
+//! [`on_write_run`](Protocol::on_write_run)) are how protocols ride the
+//! engine's page-run fast path: when every line of a same-page run has
+//! the same directory view, the engine evaluates one transition into an
+//! allocation-free [`ActionRun`] and applies it per line; any state
+//! divergence inside the run falls back to the per-line walk. The
+//! default implementation returns `None` (always correct); every
+//! shipped protocol overrides it with the same closed form its per-line
+//! hook uses, pinned action-for-action by the conformance unit tests.
 //!
 //! **Engagement contract:** when coherence-link billing is off
 //! (`ContentionConfig::coherence` or `links` cleared — including every
@@ -207,6 +218,55 @@ impl LineCtx {
     }
 }
 
+/// Upper bound on the actions one transition can emit (worst case is
+/// MSI's upgrade + owner writeback + post + fan-out + ack = 5; one slot
+/// of headroom for future protocols).
+pub const MAX_RUN_ACTIONS: usize = 6;
+
+/// Fixed-capacity action list returned by the run-level bulk hooks.
+///
+/// The page-run fast path evaluates **one** transition per same-page
+/// run and applies it line by line, so the result must not allocate —
+/// a `Vec` per run would put malloc back in the hot loop the fast path
+/// exists to avoid.
+#[derive(Clone, Copy, Debug)]
+pub struct ActionRun {
+    len: u8,
+    buf: [CoherenceAction; MAX_RUN_ACTIONS],
+}
+
+impl ActionRun {
+    pub fn new() -> Self {
+        ActionRun {
+            len: 0,
+            buf: [CoherenceAction::Ack; MAX_RUN_ACTIONS],
+        }
+    }
+
+    fn push(&mut self, a: CoherenceAction) {
+        self.buf[usize::from(self.len)] = a;
+        self.len += 1;
+    }
+
+    pub fn as_slice(&self) -> &[CoherenceAction] {
+        &self.buf[..usize::from(self.len)]
+    }
+
+    pub fn len(&self) -> usize {
+        usize::from(self.len)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+impl Default for ActionRun {
+    fn default() -> Self {
+        ActionRun::new()
+    }
+}
+
 /// One mesh-billable consequence of a transition. The engine maps each
 /// action onto the `ContentionModel` traffic class it occupies.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -267,6 +327,25 @@ pub trait Protocol {
 
     /// Transition for the requestor dropping its copy (purge/free).
     fn on_evict(&self, ctx: &LineCtx) -> Vec<CoherenceAction>;
+
+    /// Bulk run-level read hook: when every line of a same-page run has
+    /// the same directory view (`ctx` holds for all of them), the engine
+    /// evaluates **one** transition and applies it per line. `None`
+    /// means "no closed form — walk per line", which is the default and
+    /// always correct. An implementation returning `Some` must emit
+    /// exactly the actions [`on_read`](Protocol::on_read) would for the
+    /// same ctx (the conformance unit tests sweep a ctx grid to pin
+    /// this).
+    fn on_read_run(&self, _ctx: &LineCtx) -> Option<ActionRun> {
+        None
+    }
+
+    /// Bulk run-level write hook; same contract as
+    /// [`on_read_run`](Protocol::on_read_run) against
+    /// [`on_write`](Protocol::on_write).
+    fn on_write_run(&self, _ctx: &LineCtx) -> Option<ActionRun> {
+        None
+    }
 }
 
 /// Shared write transition of the invalidation-family protocols.
@@ -277,61 +356,113 @@ pub trait Protocol {
 /// explicit ownership round trip (MSI).
 /// `owner_forward`: a foreign dirty owner streams to the writer (MOESI)
 /// instead of flushing home (MESI).
-fn invalidating_write(
+fn invalidating_write_into(
     ctx: &LineCtx,
     silent_sole: bool,
     msi_upgrade: bool,
     owner_forward: bool,
-) -> Vec<CoherenceAction> {
+    push: &mut impl FnMut(CoherenceAction),
+) {
     if !ctx.links_on {
-        return Vec::new();
+        return;
     }
-    let mut a = Vec::new();
     let sole_rewrite = ctx.others == 0 && (ctx.was_sharer || ctx.owner == Some(ctx.requestor));
     if ctx.home != ctx.requestor && sole_rewrite {
         if silent_sole {
-            a.push(CoherenceAction::SilentUpgrade);
-            return a;
+            push(CoherenceAction::SilentUpgrade);
+            return;
         }
         if msi_upgrade {
-            a.push(CoherenceAction::UpgradeRoundTrip);
+            push(CoherenceAction::UpgradeRoundTrip);
         }
     }
     if let Some(o) = ctx.foreign_owner() {
-        a.push(if owner_forward {
+        push(if owner_forward {
             CoherenceAction::OwnerReply { owner: o }
         } else {
             CoherenceAction::WritebackToHome { owner: o }
         });
     }
     if ctx.home != ctx.requestor {
-        a.push(CoherenceAction::PostToHome);
+        push(CoherenceAction::PostToHome);
     }
     if ctx.others > 0 {
-        a.push(CoherenceAction::InvalidateFanout);
-        a.push(CoherenceAction::Ack);
+        push(CoherenceAction::InvalidateFanout);
+        push(CoherenceAction::Ack);
     }
+}
+
+fn invalidating_write(
+    ctx: &LineCtx,
+    silent_sole: bool,
+    msi_upgrade: bool,
+    owner_forward: bool,
+) -> Vec<CoherenceAction> {
+    let mut a = Vec::new();
+    invalidating_write_into(ctx, silent_sole, msi_upgrade, owner_forward, &mut |x| {
+        a.push(x)
+    });
     a
+}
+
+/// [`invalidating_write`] into an allocation-free [`ActionRun`] (the
+/// run-level bulk hooks).
+fn invalidating_write_run(
+    ctx: &LineCtx,
+    silent_sole: bool,
+    msi_upgrade: bool,
+    owner_forward: bool,
+) -> ActionRun {
+    let mut r = ActionRun::new();
+    invalidating_write_into(ctx, silent_sole, msi_upgrade, owner_forward, &mut |x| {
+        r.push(x)
+    });
+    r
 }
 
 /// Shared read transition: foreign dirty owners are flushed (or forward
 /// the data), then home serves remotely-homed lines.
-fn serve_read(ctx: &LineCtx, owner_forward: bool) -> Vec<CoherenceAction> {
+fn serve_read_into(ctx: &LineCtx, owner_forward: bool, push: &mut impl FnMut(CoherenceAction)) {
     if !ctx.links_on {
-        return Vec::new();
+        return;
     }
-    let mut a = Vec::new();
     if let Some(o) = ctx.foreign_owner() {
         if owner_forward {
-            a.push(CoherenceAction::OwnerReply { owner: o });
-            return a;
+            push(CoherenceAction::OwnerReply { owner: o });
+            return;
         }
-        a.push(CoherenceAction::WritebackToHome { owner: o });
+        push(CoherenceAction::WritebackToHome { owner: o });
     }
     if ctx.home != ctx.requestor {
-        a.push(CoherenceAction::DataReplyFromHome);
+        push(CoherenceAction::DataReplyFromHome);
     }
+}
+
+fn serve_read(ctx: &LineCtx, owner_forward: bool) -> Vec<CoherenceAction> {
+    let mut a = Vec::new();
+    serve_read_into(ctx, owner_forward, &mut |x| a.push(x));
     a
+}
+
+/// [`serve_read`] into an allocation-free [`ActionRun`].
+fn serve_read_run(ctx: &LineCtx, owner_forward: bool) -> ActionRun {
+    let mut r = ActionRun::new();
+    serve_read_into(ctx, owner_forward, &mut |x| r.push(x));
+    r
+}
+
+/// Write-update's store transition: post through, then stream the data
+/// to every other sharer (their copies stay valid).
+fn update_write_into(ctx: &LineCtx, push: &mut impl FnMut(CoherenceAction)) {
+    if !ctx.links_on {
+        return;
+    }
+    if ctx.home != ctx.requestor {
+        push(CoherenceAction::PostToHome);
+    }
+    if ctx.others > 0 {
+        push(CoherenceAction::UpdateFanout);
+    }
 }
 
 /// Eviction: only a dirty owner has anything to flush.
@@ -373,6 +504,12 @@ impl Protocol for WriteInvalidate {
     fn on_evict(&self, ctx: &LineCtx) -> Vec<CoherenceAction> {
         evict_dirty(ctx)
     }
+    fn on_read_run(&self, ctx: &LineCtx) -> Option<ActionRun> {
+        Some(serve_read_run(ctx, false))
+    }
+    fn on_write_run(&self, ctx: &LineCtx) -> Option<ActionRun> {
+        Some(invalidating_write_run(ctx, false, false, false))
+    }
 }
 
 /// Write-invalidate + explicit S→M upgrades: a sole sharer re-writing a
@@ -399,6 +536,12 @@ impl Protocol for Msi {
     }
     fn on_evict(&self, ctx: &LineCtx) -> Vec<CoherenceAction> {
         evict_dirty(ctx)
+    }
+    fn on_read_run(&self, ctx: &LineCtx) -> Option<ActionRun> {
+        Some(serve_read_run(ctx, false))
+    }
+    fn on_write_run(&self, ctx: &LineCtx) -> Option<ActionRun> {
+        Some(invalidating_write_run(ctx, false, true, false))
     }
 }
 
@@ -435,6 +578,12 @@ impl Protocol for Mesi {
     fn on_evict(&self, ctx: &LineCtx) -> Vec<CoherenceAction> {
         evict_dirty(ctx)
     }
+    fn on_read_run(&self, ctx: &LineCtx) -> Option<ActionRun> {
+        Some(serve_read_run(ctx, false))
+    }
+    fn on_write_run(&self, ctx: &LineCtx) -> Option<ActionRun> {
+        Some(invalidating_write_run(ctx, true, false, false))
+    }
 }
 
 /// Mesi + the O state: a foreign read is served owner→reader directly
@@ -462,6 +611,12 @@ impl Protocol for Moesi {
     fn on_evict(&self, ctx: &LineCtx) -> Vec<CoherenceAction> {
         evict_dirty(ctx)
     }
+    fn on_read_run(&self, ctx: &LineCtx) -> Option<ActionRun> {
+        Some(serve_read_run(ctx, true))
+    }
+    fn on_write_run(&self, ctx: &LineCtx) -> Option<ActionRun> {
+        Some(invalidating_write_run(ctx, true, false, true))
+    }
 }
 
 /// Stores post through to home as usual, but other sharers receive
@@ -480,20 +635,20 @@ impl Protocol for WriteUpdate {
         serve_read(ctx, false)
     }
     fn on_write(&self, ctx: &LineCtx) -> Vec<CoherenceAction> {
-        if !ctx.links_on {
-            return Vec::new();
-        }
         let mut a = Vec::new();
-        if ctx.home != ctx.requestor {
-            a.push(CoherenceAction::PostToHome);
-        }
-        if ctx.others > 0 {
-            a.push(CoherenceAction::UpdateFanout);
-        }
+        update_write_into(ctx, &mut |x| a.push(x));
         a
     }
     fn on_evict(&self, ctx: &LineCtx) -> Vec<CoherenceAction> {
         evict_dirty(ctx)
+    }
+    fn on_read_run(&self, ctx: &LineCtx) -> Option<ActionRun> {
+        Some(serve_read_run(ctx, false))
+    }
+    fn on_write_run(&self, ctx: &LineCtx) -> Option<ActionRun> {
+        let mut r = ActionRun::new();
+        update_write_into(ctx, &mut |x| r.push(x));
+        Some(r)
     }
 }
 
@@ -777,6 +932,51 @@ mod tests {
                 (0..tiles).any(|t| p.map(TileId(t)).0 != t),
                 "identity permutation on {tiles} tiles"
             );
+        }
+    }
+
+    #[test]
+    fn bulk_run_hooks_match_per_line_transitions() {
+        // The run-level contract: every shipped protocol answers the
+        // bulk hooks, and the one evaluated transition is action-for-
+        // action what the per-line hook returns, over a full ctx grid
+        // (links on/off × local/remote home × sharer counts × owner
+        // shapes). The engine's fast path leans on exactly this.
+        let mut shapes = Vec::new();
+        for links_on in [false, true] {
+            for (req, home) in [(0u32, 0u32), (1, 0), (3, 7)] {
+                for others in [0u32, 1, 3] {
+                    for was_sharer in [false, true] {
+                        for owner in [None, Some(req), Some(5)] {
+                            shapes.push(ctx(req, home, others, was_sharer, owner, links_on));
+                        }
+                    }
+                }
+            }
+        }
+        for p in protos() {
+            for c in &shapes {
+                let read = p
+                    .on_read_run(c)
+                    .unwrap_or_else(|| panic!("{:?} has no bulk read hook", p.kind()));
+                assert_eq!(
+                    read.as_slice(),
+                    p.on_read(c).as_slice(),
+                    "{:?} bulk read diverges on {c:?}",
+                    p.kind()
+                );
+                let write = p
+                    .on_write_run(c)
+                    .unwrap_or_else(|| panic!("{:?} has no bulk write hook", p.kind()));
+                assert_eq!(
+                    write.as_slice(),
+                    p.on_write(c).as_slice(),
+                    "{:?} bulk write diverges on {c:?}",
+                    p.kind()
+                );
+                assert!(read.len() <= MAX_RUN_ACTIONS && write.len() <= MAX_RUN_ACTIONS);
+                assert_eq!(read.is_empty(), read.len() == 0);
+            }
         }
     }
 

@@ -87,6 +87,11 @@ pub struct RunSpec {
     /// fused directory path byte-identically and is omitted from labels
     /// and JSON.
     pub protocol: ProtocolSpec,
+    /// Engine page-run fast path (`--no-page-runs` clears it). An
+    /// execution strategy like `intra_jobs`, except it *is* spec-visible
+    /// so CI can pin fast == reference on the same spec; stats are
+    /// byte-identical either way, so it stays out of labels and JSON.
+    pub page_runs: bool,
     pub seed: u64,
 }
 
@@ -108,6 +113,7 @@ impl RunSpec {
             coherence_links: false,
             fabric: None,
             protocol: ProtocolSpec::default(),
+            page_runs: true,
             seed,
         }
     }
@@ -161,6 +167,13 @@ impl RunSpec {
     /// Select the coherence protocol (`--protocol`).
     pub fn with_protocol(mut self, protocol: ProtocolSpec) -> RunSpec {
         self.protocol = protocol;
+        self
+    }
+
+    /// Force the per-line reference walk (`--no-page-runs`) — the oracle
+    /// the page-run fast path is pinned against.
+    pub fn without_page_runs(mut self) -> RunSpec {
+        self.page_runs = false;
         self
     }
 
@@ -246,6 +259,9 @@ impl RunSpec {
         cfg = cfg.with_protocol(self.protocol).with_intra_jobs(intra_jobs);
         if !self.caches {
             cfg = cfg.without_caches();
+        }
+        if !self.page_runs {
+            cfg = cfg.without_page_runs();
         }
         let mut engine = Engine::new(cfg);
         let mut program = match self.workload {

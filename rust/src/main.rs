@@ -74,6 +74,7 @@ const BOOL_FLAGS: &[&str] = &[
     "no-link-contention",
     "coherence-links",
     "no-coherence-links",
+    "no-page-runs",
 ];
 
 fn run(argv: &[String]) -> Result<(), Box<dyn std::error::Error>> {
@@ -98,7 +99,7 @@ fn run(argv: &[String]) -> Result<(), Box<dyn std::error::Error>> {
         "info" => info(),
         "microbench" => {
             let c = case(args.usize("case", 8)? as u8);
-            let spec = RunSpec::new(
+            let mut spec = RunSpec::new(
                 c.id,
                 Workload::Microbench {
                     reps: args.usize("reps", 16)? as u32,
@@ -110,6 +111,9 @@ fn run(argv: &[String]) -> Result<(), Box<dyn std::error::Error>> {
             .on_machine(target.machine, target.link_contention, target.coherence_links)
             .with_fabric(target.fabric.clone())
             .with_protocol(target.protocol);
+            if args.flag("no-page-runs") {
+                spec = spec.without_page_runs();
+            }
             spec.check_thread_capacity()?;
             emit_stats(
                 &args,
@@ -143,6 +147,9 @@ fn run(argv: &[String]) -> Result<(), Box<dyn std::error::Error>> {
             if args.flag("no-cache") {
                 spec = spec.without_caches();
             }
+            if args.flag("no-page-runs") {
+                spec = spec.without_page_runs();
+            }
             spec.check_thread_capacity()?;
             emit_stats(
                 &args,
@@ -155,7 +162,7 @@ fn run(argv: &[String]) -> Result<(), Box<dyn std::error::Error>> {
         }
         "radix" => {
             let c = case(args.usize("case", 8)? as u8);
-            let spec = RunSpec::new(
+            let mut spec = RunSpec::new(
                 c.id,
                 Workload::Radix {
                     digit_bits: args.usize("digit-bits", 8)? as u32,
@@ -168,6 +175,9 @@ fn run(argv: &[String]) -> Result<(), Box<dyn std::error::Error>> {
             .on_machine(target.machine, target.link_contention, target.coherence_links)
             .with_fabric(target.fabric.clone())
             .with_protocol(target.protocol);
+            if args.flag("no-page-runs") {
+                spec = spec.without_page_runs();
+            }
             spec.check_thread_capacity()?;
             let label = run_label(&format!("radix sort — {}", c.label()), &spec);
             emit_stats(
@@ -826,6 +836,11 @@ fn emit_stats(
     } else {
         println!("{label}");
         println!("  {}", stats.summary());
+        if let Some(why) = stats.intra_demoted {
+            // Requested --intra-jobs N > 1 but the run stayed sequential;
+            // say why instead of silently ignoring the flag.
+            println!("  note: --intra-jobs ran sequentially — {why}");
+        }
         if args.flag("heatmap") {
             // Render against the machine the run actually executed on —
             // fabric applied, so controller moves and service classes show.
@@ -896,9 +911,12 @@ fn print_usage() {
                    --coherence-links / --no-coherence-links (default: follows link contention)\n\
          flags: --size N --threads N --reps N --case 1..8 --seed S --variant v\n\
                 --digit-bits B --jobs N --intra-jobs N --no-striping --no-cache\n\
-                --heatmap --json --out DIR --sizes a,b,c\n\
+                --no-page-runs --heatmap --json --out DIR --sizes a,b,c\n\
          intra-jobs: host workers *inside* each replay (deterministic epoch\n\
-                parallelism; stats are byte-identical at any count). Budget\n\
-                rule: jobs x intra-jobs is clamped to the host's cores."
+                parallelism, every protocol included; stats are byte-identical\n\
+                at any count). Budget rule: jobs x intra-jobs is clamped to\n\
+                the host's cores.\n\
+         no-page-runs: force the per-line reference walk instead of the\n\
+                page-run fast path (same stats, slower — the CI oracle)."
     );
 }

@@ -431,6 +431,39 @@ impl ContentionModel {
         delay
     }
 
+    /// Single-victim specialization of
+    /// [`invalidation_fanout_request`](Self::invalidation_fanout_request):
+    /// one header packet requestor→home plus the ack return path. This is
+    /// the MSI upgrade round trip the page-run fast path bills once per
+    /// line of a batched run — a dedicated entry point so the hot loop
+    /// never builds a one-element slice. Arithmetic-identical to
+    /// `invalidation_fanout_request(home, &[victim], now)` (pinned by a
+    /// unit test).
+    #[inline]
+    pub fn invalidation_roundtrip_request(
+        &mut self,
+        home: TileId,
+        victim: TileId,
+        now: u64,
+    ) -> u64 {
+        if !self.coherence_enabled() {
+            return 0;
+        }
+        let mut delay = 0u64;
+        for hop in xy_links(&self.machine, home, victim) {
+            let ix = self.machine.link_index(hop.from, hop.dir);
+            delay += self.links[ix].request(now, self.link_service[ix]);
+            self.link_inval_requests[ix] += 1;
+        }
+        for hop in xy_links(&self.machine, victim, home) {
+            let ix = self.machine.link_index(hop.from, hop.dir);
+            delay += self.links[ix].request(now, self.link_service[ix]);
+            self.link_inval_requests[ix] += 1;
+        }
+        self.invalidation_link_cycles += delay;
+        delay
+    }
+
     /// Bill a write-update protocol's data fan-out at time `now`: a
     /// `flits`-flit update packet along the XY route home→sharer per
     /// victim — each link stays busy `flits × service` (data, not a
@@ -666,6 +699,41 @@ mod tests {
         // Forward requests still bill and queue.
         m.link_path_request(TileId(0), TileId(2), 0);
         assert!(m.link_path_request(TileId(0), TileId(2), 0) > 0);
+    }
+
+    #[test]
+    fn roundtrip_is_the_one_victim_fanout() {
+        // The fast path's dedicated upgrade round trip must be
+        // arithmetic-identical to the slice call it specialises: same
+        // delay, same per-link counters, same tally — on empty links,
+        // against a backlog, and on the degenerate victim == home route.
+        for (home, victim) in [(0u32, 9u32), (0, 63), (5, 5), (63, 0)] {
+            let mut a = model();
+            let mut b = model();
+            // Pre-load a shared link so queueing delays are exercised.
+            a.link_path_request(TileId(0), TileId(63), 0);
+            b.link_path_request(TileId(0), TileId(63), 0);
+            for now in [0u64, 3, 10] {
+                assert_eq!(
+                    a.invalidation_roundtrip_request(TileId(home), TileId(victim), now),
+                    b.invalidation_fanout_request(TileId(home), &[TileId(victim)], now),
+                    "home {home} victim {victim} now {now}"
+                );
+            }
+            assert_eq!(a.invalidation_link_cycles, b.invalidation_link_cycles);
+            assert_eq!(a.link_inval_requests, b.link_inval_requests);
+        }
+        // Coherence off: both entry points are free.
+        let mut m = ContentionModel::new(
+            ContentionConfig {
+                enabled: true,
+                links: true,
+                coherence: false,
+            },
+            Arc::new(Machine::tilepro64()),
+        );
+        assert_eq!(m.invalidation_roundtrip_request(TileId(0), TileId(9), 0), 0);
+        assert!(m.link_inval_requests.iter().all(|&n| n == 0));
     }
 
     #[test]

@@ -92,8 +92,9 @@ pub struct EngineConfig {
     /// parallel path is an execution strategy, not a model parameter, so
     /// it is deliberately *not* part of `RunSpec` identity — and it only
     /// engages when [`plan_intra_workers`] says the run qualifies
-    /// (static scheduler, fused default protocol, caches on, no home
-    /// permutation); otherwise the run silently stays sequential.
+    /// (static scheduler, caches on — every coherence protocol and the
+    /// opaque home permutation compose with the epoch driver); otherwise
+    /// the run stays sequential and `RunStats::intra_demoted` names why.
     pub intra_jobs: usize,
 }
 
@@ -378,11 +379,15 @@ pub struct Engine {
     /// True when the trait's transitions drive billing: a non-default
     /// protocol was selected *and* coherence traffic is modelled on the
     /// links. Otherwise the fused write-invalidate path runs unchanged
-    /// (the pinned-baseline guarantee).
-    protocol_active: bool,
+    /// (the pinned-baseline guarantee). The epoch driver reads it to pick
+    /// the read-walk mirror (protocols read via `CacheSystem::read`, not
+    /// the bulk probe/touch walk).
+    pub(crate) protocol_active: bool,
     /// `opaque` mode: a seeded permutation applied to every resolved home
-    /// tile (per arXiv:2011.05422's randomised home mapping).
-    home_perm: Option<HomePermutation>,
+    /// tile (per arXiv:2011.05422's randomised home mapping). The epoch
+    /// planner reads it too: the eligibility scan must judge the
+    /// *permuted* home, or opaque runs would fence the wrong tiles.
+    pub(crate) home_perm: Option<HomePermutation>,
     pub(crate) stats: RunStats,
 }
 
@@ -697,10 +702,31 @@ impl Engine {
             return self.bill_load(tile, line, home, place, ctrl, now);
         }
         let ctx = self.line_ctx(tile, line, home);
+        let actions = self.protocol.on_read(&ctx);
+        self.apply_read_actions(tile, line, home, place, ctrl, &actions, now)
+    }
+
+    /// Bill and apply a read transition's actions to one line. Shared by
+    /// the per-line walk ([`load_protocol`](Self::load_protocol)) and the
+    /// page-run bulk path ([`protocol_read_run`](Self::protocol_read_run)),
+    /// which evaluates the transition once per uniform run and hands the
+    /// same action aggregate in per line — billing order is identical by
+    /// construction.
+    #[allow(clippy::too_many_arguments)]
+    fn apply_read_actions(
+        &mut self,
+        tile: TileId,
+        line: LineId,
+        home: TileId,
+        place: crate::cache::ReadPlace,
+        ctrl: u32,
+        actions: &[CoherenceAction],
+        now: u64,
+    ) -> u64 {
         let line_flits = self.params.line_flits;
         let mut cycles = 0u64;
         let mut forwarded: Option<TileId> = None;
-        for action in self.protocol.on_read(&ctx) {
+        for &action in actions {
             match action {
                 CoherenceAction::WritebackToHome { owner } => {
                     // The dirty owner flushes a line of data to the home
@@ -748,12 +774,29 @@ impl Engine {
     fn store_protocol(&mut self, tile: TileId, line: LineId, home: TileId, now: u64) -> u64 {
         let ctx = self.line_ctx(tile, line, home);
         let actions = self.protocol.on_write(&ctx);
+        self.apply_write_actions(tile, line, home, &actions, now)
+    }
+
+    /// Bill and apply a write transition's actions to one line. Shared by
+    /// [`store_protocol`](Self::store_protocol) and the page-run bulk path
+    /// ([`protocol_write_run`](Self::protocol_write_run)); state mutation
+    /// is strictly per-line (claim/invalidate walk, owner hand-off,
+    /// write-update fan-out recompute their victims from the live
+    /// directory), so a run-hoisted action aggregate stays cycle-exact.
+    fn apply_write_actions(
+        &mut self,
+        tile: TileId,
+        line: LineId,
+        home: TileId,
+        actions: &[CoherenceAction],
+        now: u64,
+    ) -> u64 {
         let line_flits = self.params.line_flits;
         let mut cycles = 0u64;
         // Dirty-owner handoff first: the previous owner's line flushes to
         // the home (MESI) or forwards to the writer (MOESI) before the
         // write claims the line.
-        for &action in &actions {
+        for &action in actions {
             match action {
                 CoherenceAction::WritebackToHome { owner } => {
                     cycles += self.contention.reply_path_request(
@@ -796,7 +839,7 @@ impl Engine {
             cycles += self.params.noc_header + 2 * self.params.noc_hop * hops;
             cycles += self
                 .contention
-                .invalidation_fanout_request(home, &[tile], now + cycles);
+                .invalidation_roundtrip_request(home, tile, now + cycles);
         }
         if self.protocol.kind() == ProtocolKind::WriteUpdate {
             // Write-update: sharers keep their copies valid and receive
@@ -936,14 +979,23 @@ impl Engine {
         attr: PageAttr,
         clock0: u64,
     ) -> u64 {
-        // With an active protocol every line must run its own state
-        // transition, so bulk same-home runs are skipped and the per-line
-        // walk below (identical to the reference walk's dispatch) is
-        // forced — streamed, recorded, and reference replays then agree
-        // by construction.
-        if self.caches_enabled && !self.protocol_active {
+        // Same-home runs take the bulk path with caches on. Directory
+        // protocols batch too: the run is scanned for a uniform directory
+        // view, the state transition is evaluated once via the protocol's
+        // bulk hooks, and the action aggregate is applied per line — any
+        // divergence inside the run falls back to the per-line transition,
+        // so streamed, recorded, and reference replays agree by
+        // construction.
+        if self.caches_enabled {
             if let Some(home) = attr.homing.uniform_page_home(first, self.machine.num_tiles()) {
                 let home = self.map_home(home);
+                if self.protocol_active {
+                    return if write {
+                        self.protocol_write_run(tile, first, count, home, clock0)
+                    } else {
+                        self.protocol_read_run(tile, first, count, home, attr.placement, clock0)
+                    };
+                }
                 return if write {
                     self.write_run(tile, first, count, home, clock0)
                 } else {
@@ -1055,6 +1107,145 @@ impl Engine {
                     bill_store_line(params, contention, tile, home, out, victims, now, &mut agg);
             });
         self.fold_store_agg(home, &agg);
+        cycles
+    }
+
+    /// Whether every line of `[first, first+count)` shares the directory
+    /// view `ctx0` (pre-access state: sharer membership for the
+    /// requestor, foreign-sharer count, dirty owner). The protocol bulk
+    /// hooks are only sound over a uniform run — the single evaluated
+    /// transition embeds the owner tile and branches on the sharer
+    /// shape. Dense indexed probes over the directory's sharer bitsets
+    /// and SoA owner column; no allocation.
+    fn run_ctx_uniform(&self, tile: TileId, first: LineId, count: u64, ctx0: &LineCtx) -> bool {
+        let dir = &self.caches.directory;
+        for i in 1..count {
+            let line = LineId(first.0 + i);
+            let was_sharer = dir.is_sharer(line, tile);
+            if was_sharer != ctx0.was_sharer
+                || dir.sharer_count(line) - u32::from(was_sharer) != ctx0.others
+                || dir.owner_of(line) != ctx0.owner
+            {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Bulk store of a same-home run under an active protocol: scan the
+    /// run for a uniform directory view; when it holds (the common
+    /// private-stream case) the transition is evaluated **once** via
+    /// [`Protocol::on_write_run`] and its allocation-free action
+    /// aggregate applied per line; any divergence — mixed sharers, an
+    /// owner transition mid-run — falls back to the per-line transition.
+    /// Either way each line still claims/invalidates through the live
+    /// directory and bills contention at its in-run timestamp, so the
+    /// result is cycle-exact with the per-line reference walk.
+    fn protocol_write_run(
+        &mut self,
+        tile: TileId,
+        first: LineId,
+        count: u64,
+        home: TileId,
+        clock0: u64,
+    ) -> u64 {
+        let ctx0 = self.line_ctx(tile, first, home);
+        if self.run_ctx_uniform(tile, first, count, &ctx0) {
+            if let Some(acts) = self.protocol.on_write_run(&ctx0) {
+                let mut cycles = 0u64;
+                for i in 0..count {
+                    cycles += self.apply_write_actions(
+                        tile,
+                        LineId(first.0 + i),
+                        home,
+                        acts.as_slice(),
+                        clock0 + cycles,
+                    );
+                }
+                return cycles;
+            }
+        }
+        let mut cycles = 0u64;
+        for i in 0..count {
+            cycles += self.store_protocol(tile, LineId(first.0 + i), home, clock0 + cycles);
+        }
+        cycles
+    }
+
+    /// Bulk load of a same-home run under an active protocol. The
+    /// reference walk computes the read ctx *after* the cache probe has
+    /// recorded the requestor as a sharer, so the uniform ctx is built
+    /// from pre-read state (`was_sharer: true`, `others` = foreign
+    /// sharers, owner untouched by reads) and scanned before any probe
+    /// mutates the run. Per line the cache walk still runs — L1/L2 hits
+    /// bypass the transition exactly as
+    /// [`load_protocol`](Self::load_protocol) does; home/DDR placements
+    /// apply the hoisted aggregate.
+    fn protocol_read_run(
+        &mut self,
+        tile: TileId,
+        first: LineId,
+        count: u64,
+        home: TileId,
+        placement: Placement,
+        clock0: u64,
+    ) -> u64 {
+        let num_ctrls = self.machine.num_controllers();
+        let dir = &self.caches.directory;
+        let s0 = dir.is_sharer(first, tile);
+        let ctx0 = LineCtx {
+            requestor: tile,
+            home,
+            others: dir.sharer_count(first) - u32::from(s0),
+            was_sharer: true,
+            owner: dir.owner_of(first),
+            links_on: self.contention.coherence_enabled(),
+        };
+        // Pre-read uniformity: same foreign-sharer count and owner on
+        // every line (the requestor's own pre-read membership cancels
+        // out of the post-read ctx, so it need not match).
+        let uniform = (1..count).all(|i| {
+            let line = LineId(first.0 + i);
+            let s = dir.is_sharer(line, tile);
+            dir.sharer_count(line) - u32::from(s) == ctx0.others && dir.owner_of(line) == ctx0.owner
+        });
+        let acts = if uniform {
+            self.protocol.on_read_run(&ctx0)
+        } else {
+            None
+        };
+        let mut cycles = 0u64;
+        if let Some(acts) = acts {
+            for i in 0..count {
+                let line = LineId(first.0 + i);
+                let now = clock0 + cycles;
+                let place = self.caches.read(tile, line, home);
+                cycles += match place {
+                    crate::cache::ReadPlace::L1 | crate::cache::ReadPlace::L2 => {
+                        self.bill_load(tile, line, home, place, 0, now)
+                    }
+                    crate::cache::ReadPlace::Home { .. } => {
+                        self.apply_read_actions(tile, line, home, place, 0, acts.as_slice(), now)
+                    }
+                    crate::cache::ReadPlace::Ddr => {
+                        let ctrl = placement.controller_of(line.addr(), num_ctrls);
+                        self.apply_read_actions(tile, line, home, place, ctrl, acts.as_slice(), now)
+                    }
+                };
+            }
+            return cycles;
+        }
+        for i in 0..count {
+            let line = LineId(first.0 + i);
+            let now = clock0 + cycles;
+            let place = self.caches.read(tile, line, home);
+            let ctrl = if place == crate::cache::ReadPlace::Ddr {
+                placement.controller_of(line.addr(), num_ctrls)
+            } else {
+                0
+            };
+            cycles += self.load_protocol(tile, line, home, place, ctrl, now);
+        }
         cycles
     }
 
@@ -1199,6 +1390,18 @@ impl Engine {
             self.home_perm.is_some(),
             self.caches_enabled,
         );
+        if self.intra_jobs > 1 && workers == 1 {
+            // Surface the silent demotion: the run is still correct, just
+            // sequential. Diagnostic only — never serialized, so the
+            // byte-identity contract across worker counts is untouched.
+            self.stats.intra_demoted = Some(if !sched.is_static() {
+                "dynamic scheduler (migration breaks the epoch partition)"
+            } else if !self.caches_enabled {
+                "caches-off bandwidth mode (shared servers serialise)"
+            } else {
+                "single-tile machine"
+            });
+        }
         if workers > 1 {
             crate::sim::epoch::run_parallel(&mut self, &mut ctx, sched, workers)?;
         } else {
@@ -1634,17 +1837,26 @@ enum StepResult {
 /// - `requested > 1` — someone asked for it (`--intra-jobs`);
 /// - the scheduler is static ([`Scheduler::is_static`]): threads never
 ///   migrate, so the tile partition is stable across an epoch;
-/// - the fused default protocol is in effect (`!protocol_active`): epoch
-///   workers mirror the fused read/write paths, not the pluggable
-///   transition tables;
-/// - homes are not permuted (no `opaque` mode): eligibility reasons about
-///   `uniform_page_home` directly;
 /// - caches are on: the caches-off mode routes every line through the
 ///   shared controller/link servers, which serialise anyway.
 ///
-/// Otherwise the run silently stays sequential — same stats, no speedup.
-/// The count is clamped to the tile count (workers own disjoint tile
-/// ranges, so extras would idle).
+/// An active coherence protocol and the opaque home permutation used to
+/// force sequential; both now compose with the epoch driver. Phase-A
+/// eligibility already demands own-tile homes and (for writes) no
+/// foreign sharer, and under those preconditions every protocol's
+/// transition is action-free: `SilentUpgrade` requires a *remote* home,
+/// so an own-homed line is never self-owned, and a foreign owner implies
+/// a foreign sharer, which fences the quantum to phase B. Phase-A reads
+/// are L1/L2 hits that bypass the transition entirely. The opaque
+/// permutation is a pure tile bijection the eligibility scan applies
+/// before the own-home test (see `epoch::scan_range`), so the partition
+/// argument is unchanged. The parameters stay in the signature to keep
+/// the decision auditable from tests.
+///
+/// Otherwise the run stays sequential — same stats, no speedup — and
+/// [`RunStats::intra_demoted`](crate::sim::stats::RunStats) names the
+/// reason. The count is clamped to the tile count (workers own disjoint
+/// tile ranges, so extras would idle).
 pub fn plan_intra_workers(
     requested: usize,
     num_tiles: u32,
@@ -1653,7 +1865,10 @@ pub fn plan_intra_workers(
     permuted_homes: bool,
     caches_enabled: bool,
 ) -> usize {
-    if requested <= 1 || !sched_static || protocol_active || permuted_homes || !caches_enabled {
+    // Accepted-and-composable: kept as parameters so the gating table in
+    // the tests records that these are deliberate non-gates.
+    let _ = (protocol_active, permuted_homes);
+    if requested <= 1 || !sched_static || !caches_enabled {
         return 1;
     }
     requested.min(num_tiles as usize)

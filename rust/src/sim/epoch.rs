@@ -42,8 +42,33 @@
 //! have executed, with identical per-tile cache-op sequences and identical
 //! costs, the resulting `RunStats` are byte-identical at every worker
 //! count — the property `prop_intra_run` pins. When nothing qualifies
-//! (hash-for-home, active protocol, dynamic scheduler), the fence covers
-//! the chip and every window runs sequentially: correct, just not faster.
+//! (hash-for-home pages, a dynamic scheduler), the fence covers the chip
+//! and every window runs sequentially: correct, just not faster.
+//!
+//! ## Why directory protocols compose with phase A
+//!
+//! Phase-A eligibility already demands that every touched page is homed
+//! on the thread's own tile and that no scanned write has a foreign
+//! sharer. Under those preconditions every pluggable protocol's
+//! transition is **action-free**, so the workers' mirrors stay exact:
+//!
+//! - a dirty owner can only be installed by `SilentUpgrade`, which
+//!   requires a *remote* home — an own-homed line is never owned, so
+//!   reads have nothing to flush or forward;
+//! - `SilentUpgrade`/`UpgradeRoundTrip` likewise require a remote home,
+//!   so no phase-A write upgrades;
+//! - invalidation and update fan-outs require foreign sharers, which the
+//!   scan fences and the park check re-verifies line by line;
+//! - phase-A reads are L1/L2 hits (the park check proves residency),
+//!   which bypass `on_read` entirely;
+//! - write-update's store mutation (`CacheSystem::write_update`) with no
+//!   foreign sharer adds the writer as sole sharer and fills the home L2
+//!   — the same end state as the claim walk the `write_line` mirror logs.
+//!
+//! The opaque home permutation composes too: it is a pure tile bijection,
+//! so the eligibility scan simply judges the *permuted* home
+//! (`scan_range` maps through `Engine::home_perm` before the own-tile
+//! test) and the partition argument is unchanged.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -51,6 +76,7 @@ use std::mem;
 
 use crate::arch::{LatencyParams, TileId, LINE_BYTES, PAGE_BYTES};
 use crate::cache::{Directory, TileCaches};
+use crate::coherence::HomePermutation;
 use crate::mem::{line_count, Homing, LineId, Placement, Region, VAddr};
 use crate::sched::Scheduler;
 use crate::sim::engine::{Engine, EngineError, ParkInfo, RunCtx, ThreadState, QUANTUM_LINES};
@@ -244,6 +270,7 @@ fn scan_thread(
     let num_tiles = eng.machine.num_tiles();
     let table = &eng.alloc.table;
     let dir = &eng.caches.directory;
+    let perm = eng.home_perm.as_ref();
     // Lower bound on what one line event costs: reads pay ≥ min(L1, L2),
     // writes ≥ min(L2, posted-store). 0 (degenerate latencies) makes line
     // ops free for horizon purposes — strictly conservative.
@@ -281,6 +308,7 @@ fn scan_thread(
                 if !scan_range(
                     table,
                     dir,
+                    perm,
                     own,
                     num_tiles,
                     foot,
@@ -305,11 +333,11 @@ fn scan_thread(
                 let sf = LineId(s.line().0 + progress);
                 let df = LineId(d.line().0 + progress);
                 if !scan_range(
-                    table, dir, own, num_tiles, foot, sharer_scratch, &mut eligible, sf, lines,
-                    false, cap,
+                    table, dir, perm, own, num_tiles, foot, sharer_scratch, &mut eligible, sf,
+                    lines, false, cap,
                 ) || !scan_range(
-                    table, dir, own, num_tiles, foot, sharer_scratch, &mut eligible, df, lines,
-                    true, cap,
+                    table, dir, perm, own, num_tiles, foot, sharer_scratch, &mut eligible, df,
+                    lines, true, cap,
                 ) {
                     return None;
                 }
@@ -357,6 +385,7 @@ fn executable_lines(per_line: u64, need: u64, accum: u64, lines: u64) -> u64 {
 fn scan_range(
     table: &crate::mem::PageTable,
     dir: &Directory,
+    perm: Option<&HomePermutation>,
     own: TileId,
     num_tiles: u32,
     foot: &mut [u64],
@@ -384,6 +413,9 @@ fn scan_range(
                     .homing
                     .uniform_page_home(line, num_tiles)
                     .expect("uniform by construction");
+                // Opaque mode permutes every resolved home; eligibility
+                // must judge the tile the engine will actually bill.
+                let h = perm.map_or(h, |p| p.map(h));
                 set_bit(foot, h);
                 if h != own {
                     *eligible = false;
@@ -547,7 +579,11 @@ fn run_phase_a(eng: &mut Engine, ctx: &mut RunCtx<'_>, chunks: Vec<Chunk>, windo
 
     let (tiles, dir) = eng.caches.tiles_and_dir_mut();
     let params = &eng.params;
-    let page_runs = eng.page_runs;
+    // Which read walk to mirror: the bulk probe/touch walk only runs for
+    // the fused default protocol; active protocols (and the per-line
+    // engine mode) read via `CacheSystem::read`, sharer bit re-added on
+    // every read.
+    let bulk_reads = eng.page_runs && !eng.protocol_active;
     let slots = &ctx.slots[..];
 
     let outs: Vec<WorkerOut> = std::thread::scope(|s| {
@@ -561,7 +597,7 @@ fn run_phase_a(eng: &mut Engine, ctx: &mut RunCtx<'_>, chunks: Vec<Chunk>, windo
             base = c.tile_hi;
             let lo = c.tile_lo;
             handles.push(s.spawn(move || {
-                phase_a_worker(mine, lo, dir, params, page_runs, slots, items, window_end)
+                phase_a_worker(mine, lo, dir, params, bulk_reads, slots, items, window_end)
             }));
         }
         handles
@@ -602,7 +638,7 @@ fn phase_a_worker(
     tile_base: u32,
     dir: &Directory,
     params: &LatencyParams,
-    page_runs: bool,
+    bulk_reads: bool,
     slots: &[Option<Region>],
     mut items: Vec<WorkItem<'_, '_>>,
     window_end: u64,
@@ -641,7 +677,7 @@ fn phase_a_worker(
             &mut tiles[ti],
             dir,
             params,
-            page_runs,
+            bulk_reads,
             slots,
             &mut out.log,
             &mut out.delta,
@@ -684,7 +720,7 @@ fn worker_quantum(
     tc: &mut TileCaches,
     dir: &Directory,
     params: &LatencyParams,
-    page_runs: bool,
+    bulk_reads: bool,
     slots: &[Option<Region>],
     log: &mut Vec<DirOp>,
     delta: &mut StatsDelta,
@@ -729,7 +765,7 @@ fn worker_quantum(
                     }
                     it.st.clock += if write {
                         write_line(tc, own, line, log, delta, params)
-                    } else if page_runs {
+                    } else if bulk_reads {
                         read_line_bulk(tc, own, line, log, delta, params)
                     } else {
                         read_line_single(tc, own, line, log, delta, params)

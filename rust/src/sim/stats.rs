@@ -61,6 +61,12 @@ pub struct RunStats {
     pub link_reply_requests: Vec<u64>,
     /// Per-directed-link invalidation-class traffic (fan-out + acks).
     pub link_inval_requests: Vec<u64>,
+    /// Why a requested `--intra-jobs N` (N > 1) run stayed sequential, if
+    /// it did — e.g. a dynamic scheduler or the caches-off mode. `None`
+    /// when parallel replay engaged or was never requested. Diagnostic
+    /// only: **never serialized**, so stats JSON stays byte-identical
+    /// across worker counts (the `prop_intra_run` contract).
+    pub intra_demoted: Option<&'static str>,
 }
 
 impl Default for RunStats {
@@ -91,6 +97,7 @@ impl Default for RunStats {
             link_requests: Vec::new(),
             link_reply_requests: Vec::new(),
             link_inval_requests: Vec::new(),
+            intra_demoted: None,
         }
     }
 }
@@ -404,6 +411,19 @@ mod tests {
         assert!(line.contains("owner-replies 2"));
         assert!(line.contains("update-fanout 11"));
         assert!(!plain.summary().contains("upgrades"));
+    }
+
+    #[test]
+    fn intra_demotion_never_serializes() {
+        // The demotion note is a CLI diagnostic; if it leaked into the
+        // JSON, a demoted run's record would differ from the same run at
+        // `--intra-jobs 1`, breaking the byte-identity contract.
+        let s = RunStats {
+            intra_demoted: Some("dynamic scheduler"),
+            ..Default::default()
+        };
+        assert_eq!(s.to_json().encode(), RunStats::default().to_json().encode());
+        assert!(!s.summary().contains("dynamic scheduler"));
     }
 
     #[test]

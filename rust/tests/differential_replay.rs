@@ -339,11 +339,13 @@ fn heterogeneous_fabric_streamed_equals_recorded_equals_reference() {
 
 #[test]
 fn every_protocol_streamed_equals_recorded_equals_reference() {
-    // The protocol layer's equivalence story: when a directory protocol is
-    // active the engine forces per-line accounting (the bulk page-run path
-    // is skipped), so the streamed, recorded, and per-line reference
-    // replays must keep producing byte-identical stats and per-link class
-    // vectors for *every* protocol, not just the fused default.
+    // The protocol layer's equivalence story: directory protocols now ride
+    // the page-run fast path (one bulk transition per uniform same-page
+    // run, per-line fallback on divergence), so the streamed fast path,
+    // the recorded fast path, the per-line reference walk, *and* the
+    // intra-run parallel engine must all produce byte-identical stats and
+    // per-link class vectors for every protocol, not just the fused
+    // default.
     use tilesim::coherence::ProtocolSpec;
     use tilesim::workloads::pingpong::{self, PingPongConfig};
 
@@ -407,6 +409,8 @@ fn every_protocol_streamed_equals_recorded_equals_reference() {
                 Program::from_ops(streamed.record(), streamed.num_slots, streamed.num_events);
             let mut e_ref = Engine::new(mk_cfg().without_page_runs());
             let mut for_ref = build(&mut e_ref);
+            let mut e_par = Engine::new(mk_cfg().with_intra_jobs(4));
+            let mut for_par = build(&mut e_par);
 
             let s_stream = e_stream
                 .run(&mut streamed, &mut StaticMapper::new())
@@ -417,6 +421,9 @@ fn every_protocol_streamed_equals_recorded_equals_reference() {
             let s_ref = e_ref
                 .run(&mut for_ref, &mut StaticMapper::new())
                 .unwrap_or_else(|e| panic!("{label} reference: {e}"));
+            let s_par = e_par
+                .run(&mut for_par, &mut StaticMapper::new())
+                .unwrap_or_else(|e| panic!("{label} parallel: {e}"));
 
             let js = s_stream.to_json().encode();
             assert_eq!(
@@ -428,6 +435,11 @@ fn every_protocol_streamed_equals_recorded_equals_reference() {
                 js,
                 s_ref.to_json().encode(),
                 "{label}: fast path vs reference walk diverged"
+            );
+            assert_eq!(
+                js,
+                s_par.to_json().encode(),
+                "{label}: fast path vs intra-run parallel engine diverged"
             );
             assert_eq!(
                 s_stream.link_requests, s_ref.link_requests,

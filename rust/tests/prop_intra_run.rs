@@ -161,9 +161,11 @@ fn all_workloads_byte_identical_across_worker_counts() {
     }
 }
 
-/// Directory protocols force the run sequential (the gating table says
-/// so), but the contract is on the *output*: stats stay byte-identical
-/// at any requested worker count under every protocol too.
+/// Directory protocols now *compose* with the epoch driver (phase-A
+/// quanta are protocol-action-free by the eligibility preconditions), so
+/// this is a genuine parallel-vs-sequential pin: stats stay
+/// byte-identical at any requested worker count under every protocol —
+/// the opaque home permutation included.
 #[test]
 fn protocols_byte_identical_across_worker_counts() {
     for protocol in ProtocolSpec::all() {
@@ -187,6 +189,24 @@ fn protocols_byte_identical_across_worker_counts() {
                         elems: 1 << 12,
                         threads: 6,
                         variant: Variant::NonLocalised,
+                    },
+                )
+            },
+        );
+        // A localised, write-heavy workload too: its own-homed pages are
+        // exactly what phase A admits, so this leg actually runs protocol
+        // quanta in parallel rather than fencing everything to phase B.
+        assert_intra_identical(
+            &format!("localised microbench under {}", protocol.label()),
+            &mk_cfg,
+            &|e: &mut Engine| {
+                microbench::build(
+                    e,
+                    &MicrobenchConfig {
+                        elems: 1 << 13,
+                        threads: 8,
+                        reps: 3,
+                        localised: true,
                     },
                 )
             },
@@ -265,9 +285,13 @@ fn worker_planning_gating_table() {
     // All preconditions met: granted, clamped to the tile count.
     assert_eq!(plan_intra_workers(4, 64, true, false, false, true), 4);
     assert_eq!(plan_intra_workers(128, 64, true, false, false, true), 64);
-    // Each violated precondition alone forces sequential.
+    // Active protocols and the opaque home permutation are deliberate
+    // non-gates: phase-A quanta are protocol-action-free and the scan
+    // judges permuted homes, so both compose with the epoch driver.
+    assert_eq!(plan_intra_workers(4, 64, true, true, false, true), 4);
+    assert_eq!(plan_intra_workers(4, 64, true, false, true, true), 4);
+    assert_eq!(plan_intra_workers(4, 64, true, true, true, true), 4);
+    // Each genuinely violated precondition alone forces sequential.
     assert_eq!(plan_intra_workers(4, 64, false, false, false, true), 1);
-    assert_eq!(plan_intra_workers(4, 64, true, true, false, true), 1);
-    assert_eq!(plan_intra_workers(4, 64, true, false, true, true), 1);
     assert_eq!(plan_intra_workers(4, 64, true, false, false, false), 1);
 }

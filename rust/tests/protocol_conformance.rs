@@ -185,6 +185,115 @@ fn json_record_gates_the_new_counters() {
 }
 
 #[test]
+fn page_run_fast_path_matches_reference_walk_for_every_protocol() {
+    // The perf-cliff fix: directory protocols now batch uniform same-page
+    // runs through the bulk hooks (one directory view + one transition
+    // per run). The per-line walk stays the oracle — for every protocol ×
+    // workload the fast path must be byte-identical, per-link class
+    // vectors included. The workloads cover both regimes: microbench's
+    // private streams batch cleanly, while the non-localised ping-pong
+    // and mergesort interleave sharers so runs diverge mid-page and the
+    // per-line fallback must splice in without a cycle of drift.
+    type Runner = fn(ProtocolSpec, bool) -> RunStats;
+    let runners: [(&str, Runner); 3] = [
+        ("microbench", run_microbench),
+        ("pingpong", run_pingpong),
+        ("mergesort", run_mergesort),
+    ];
+    for p in ProtocolSpec::all() {
+        for (wl, runner) in runners {
+            let fast = runner(p, true);
+            let mut e = Engine::new(cfg(p, true).without_page_runs());
+            let reference = match wl {
+                "microbench" => {
+                    let mut prog = microbench::build(
+                        &mut e,
+                        &MicrobenchConfig {
+                            elems: 1 << 13,
+                            threads: 8,
+                            reps: 4,
+                            localised: false,
+                        },
+                    );
+                    e.run(&mut prog, &mut StaticMapper::new()).unwrap()
+                }
+                "pingpong" => {
+                    let mut prog = pingpong::build(
+                        &mut e,
+                        &PingPongConfig {
+                            elems: 1 << 11,
+                            threads: 8,
+                            passes: 4,
+                            localised: false,
+                        },
+                    );
+                    e.run(&mut prog, &mut StaticMapper::new()).unwrap()
+                }
+                _ => {
+                    let mut prog = mergesort::build(
+                        &mut e,
+                        &MergesortConfig {
+                            elems: 1 << 12,
+                            threads: 6,
+                            variant: Variant::NonLocalised,
+                        },
+                    );
+                    e.run(&mut prog, &mut StaticMapper::new()).unwrap()
+                }
+            };
+            let label = format!("{wl} under {}", p.label());
+            assert_eq!(
+                fast.to_json().encode(),
+                reference.to_json().encode(),
+                "{label}: page-run fast path vs per-line reference walk"
+            );
+            assert_eq!(
+                fast.link_requests, reference.link_requests,
+                "{label}: per-link traffic"
+            );
+            assert_eq!(
+                fast.link_reply_requests, reference.link_reply_requests,
+                "{label}: reply-class traffic"
+            );
+            assert_eq!(
+                fast.link_inval_requests, reference.link_inval_requests,
+                "{label}: invalidation-class traffic"
+            );
+        }
+    }
+}
+
+#[test]
+fn fast_path_keeps_protocol_counter_hygiene() {
+    // Batching must not double- or under-count the per-protocol counters:
+    // the bulk hooks emit one aggregate that is *applied per line*, so
+    // upgrade_hits / owner_replies / update_fanout_cycles match the
+    // per-line walk exactly — and the zero/absent JSON gates stay intact.
+    for p in ProtocolSpec::all() {
+        let fast = run_pingpong(p, true);
+        let mut e = Engine::new(cfg(p, true).without_page_runs());
+        let mut prog = pingpong::build(
+            &mut e,
+            &PingPongConfig {
+                elems: 1 << 11,
+                threads: 8,
+                passes: 4,
+                localised: false,
+            },
+        );
+        let reference = e.run(&mut prog, &mut StaticMapper::new()).unwrap();
+        let label = p.label();
+        assert_eq!(fast.upgrade_hits, reference.upgrade_hits, "{label}");
+        assert_eq!(fast.owner_replies, reference.owner_replies, "{label}");
+        assert_eq!(
+            fast.update_fanout_cycles, reference.update_fanout_cycles,
+            "{label}"
+        );
+        assert_eq!(fast.invalidations, reference.invalidations, "{label}");
+    }
+}
+
+#[test]
 fn opaque_is_a_pure_function_of_its_seed() {
     let a = run_mergesort(ProtocolSpec::parse("opaque").unwrap(), true);
     let b = run_mergesort(ProtocolSpec::parse("opaque").unwrap(), true);
