@@ -1,0 +1,140 @@
+//! §Perf: wall-clock throughput of the serve front-end itself — how fast
+//! the discrete-event driver pushes simulated requests through the chip,
+//! and how the scenario grid scales over the batch worker pool
+//! (BENCH_serve.json).
+//!
+//! This measures *our* implementation, not the simulated machine: the
+//! interesting ratios are simulated-requests-per-wall-second (the event
+//! loop + memoised service replays) and the pool speedup at grid scale,
+//! plus the memoisation amortisation (requests served per engine replay —
+//! the bound that keeps a million-request scenario affordable).
+//!
+//! Run: `cargo bench --bench perf_serve`
+//! Env: TILESIM_SERVE_SIZE (default 16384 ints/request),
+//!      TILESIM_SERVE_REQUESTS (default 400),
+//!      TILESIM_BENCH_SERVE_OUT (default BENCH_serve.json).
+
+use tilesim::arch::MachineSpec;
+use tilesim::coherence::ProtocolSpec;
+use tilesim::coordinator::batch::{BatchRunner, RunSpec};
+use tilesim::coordinator::experiment;
+use tilesim::harness::time_it;
+use tilesim::serve::{ArrivalSpec, BatchPolicy, ServeScenario, ServeSweep};
+use tilesim::util::json::Json;
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let elems = env_u64("TILESIM_SERVE_SIZE", 1 << 14);
+    let requests = env_u64("TILESIM_SERVE_REQUESTS", 400);
+    let template = experiment::serve_template(8, elems, 16, experiment::DEFAULT_SEED);
+
+    // --- one scenario, immediate policy: the event-loop + service-replay
+    // cost of a single ladder rung near saturation.
+    let rung = ServeScenario {
+        run: template.clone(),
+        arrival: ArrivalSpec::Poisson,
+        rho: 1.0,
+        requests,
+        queue_cap: 1 << 16,
+        policy: BatchPolicy::Immediate,
+    };
+    let r = rung.simulate(1);
+    assert_eq!(r.completed + r.dropped, requests, "serve bench sanity");
+    let t_rung = time_it(1, 3, || {
+        std::hint::black_box(rung.simulate(1).makespan_cycles);
+    });
+    println!("{}", t_rung.summary("serve: one rung, immediate, rho=1"));
+    println!(
+        "serve driver: {:.1} k requests/s simulated ({} requests, {} engine replays)",
+        requests as f64 / t_rung.min_s / 1e3,
+        requests,
+        r.batches
+    );
+
+    // --- same rung with batching: memoisation means the replay count is
+    // bounded by the batch cap, so requests-per-replay is the amortisation
+    // this record tracks.
+    let mut batched = rung.clone();
+    batched.policy = BatchPolicy::Batch { max: 8, wait: 0 };
+    batched.rho = 2.0;
+    let rb = batched.simulate(1);
+    let t_batched = time_it(1, 3, || {
+        std::hint::black_box(batched.simulate(1).makespan_cycles);
+    });
+    println!("{}", t_batched.summary("serve: one rung, batch8, rho=2"));
+    println!(
+        "serve batching: {:.1} k requests/s simulated, {:.1} requests/dispatch",
+        requests as f64 / t_batched.min_s / 1e3,
+        rb.completed as f64 / rb.batches.max(1) as f64
+    );
+
+    // --- the default `repro batch serve` grid over the pool: 1 job vs all
+    // cores. Scenario count = ladders x rungs; the pool shards scenarios,
+    // so this is the grid-scale number the serve PRs move.
+    let sweep = ServeSweep::grid(
+        &template,
+        &[MachineSpec::TilePro64],
+        &[ProtocolSpec::default()],
+        &experiment::serve_policies(),
+        ArrivalSpec::Poisson,
+        &experiment::serve_rhos(),
+        requests,
+        1 << 16,
+        false,
+    );
+    let n = sweep.scenarios.len();
+    let t_serial = time_it(0, 2, || {
+        std::hint::black_box(sweep.run(&BatchRunner::new(1)).len());
+    });
+    let pool = BatchRunner::new(0);
+    let t_pool = time_it(0, 2, || {
+        std::hint::black_box(sweep.run(&pool).len());
+    });
+    let pool_speedup = t_serial.min_s / t_pool.min_s;
+    println!("{}", t_serial.summary("serve: default grid, 1 job"));
+    println!(
+        "{}",
+        t_pool.summary(&format!("serve: default grid, {} jobs", pool.jobs()))
+    );
+    println!(
+        "serve grid: {n} scenarios/sweep, {:.2}x speedup on {} workers, \
+         {:.1} k simulated requests/s at pool width",
+        pool_speedup,
+        pool.jobs(),
+        n as u64 as f64 * requests as f64 / t_pool.min_s / 1e3
+    );
+
+    let bench_json = Json::obj(vec![
+        ("bench", Json::str("serve_front_end_throughput")),
+        ("workload", Json::str("mergesort case 8 per request, tilepro64")),
+        ("elems_per_request", Json::num(elems as f64)),
+        ("requests", Json::num(requests as f64)),
+        ("rung_min_s", Json::num(t_rung.min_s)),
+        (
+            "rung_requests_per_sec",
+            Json::num(requests as f64 / t_rung.min_s),
+        ),
+        ("rung_engine_replays", Json::num(r.batches as f64)),
+        ("batched_min_s", Json::num(t_batched.min_s)),
+        (
+            "batched_requests_per_sec",
+            Json::num(requests as f64 / t_batched.min_s),
+        ),
+        (
+            "batched_requests_per_dispatch",
+            Json::num(rb.completed as f64 / rb.batches.max(1) as f64),
+        ),
+        ("grid_scenarios", Json::num(n as f64)),
+        ("grid_serial_min_s", Json::num(t_serial.min_s)),
+        ("grid_pool_min_s", Json::num(t_pool.min_s)),
+        ("grid_pool_jobs", Json::num(pool.jobs() as f64)),
+        ("grid_pool_speedup", Json::num(pool_speedup)),
+    ]);
+    let path = std::env::var("TILESIM_BENCH_SERVE_OUT")
+        .unwrap_or_else(|_| "BENCH_serve.json".into());
+    std::fs::write(&path, bench_json.encode()).expect("write BENCH_serve.json");
+    println!("wrote {path}");
+}

@@ -714,22 +714,38 @@ impl Default for BatchRunner {
 /// Shard `runs` over `jobs` workers; results are index-aligned with the
 /// input regardless of which worker ran what.
 fn execute_all(runs: &[&RunSpec], jobs: usize, intra_jobs: usize) -> Vec<RunStats> {
-    let jobs = jobs.max(1).min(runs.len().max(1));
+    execute_indexed(runs, jobs, |_, r| r.execute_intra(intra_jobs))
+}
+
+/// The pool's generic core: shard any indexed workload over `jobs`
+/// scoped-thread workers (work-stealing over an atomic cursor) with
+/// results *index-aligned* to the input, independent of which worker ran
+/// what and in what order. [`BatchRunner::run`] shards `RunSpec`s through
+/// this; the serve front-end ([`crate::serve`]) shards whole scenario
+/// simulations — both inherit the byte-identical-at-any-`--jobs` contract
+/// from the index alignment alone.
+pub fn execute_indexed<T, R, F>(items: &[T], jobs: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let jobs = jobs.max(1).min(items.len().max(1));
     if jobs == 1 {
-        return runs.iter().map(|r| r.execute_intra(intra_jobs)).collect();
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
     }
     let next = AtomicUsize::new(0);
-    let per_worker: Vec<Vec<(usize, RunStats)>> = std::thread::scope(|s| {
+    let per_worker: Vec<Vec<(usize, R)>> = std::thread::scope(|s| {
         let workers: Vec<_> = (0..jobs)
             .map(|_| {
                 s.spawn(|| {
                     let mut local = Vec::new();
                     loop {
                         let i = next.fetch_add(1, Ordering::Relaxed);
-                        if i >= runs.len() {
+                        if i >= items.len() {
                             break;
                         }
-                        local.push((i, runs[i].execute_intra(intra_jobs)));
+                        local.push((i, f(i, &items[i])));
                     }
                     local
                 })
@@ -740,9 +756,9 @@ fn execute_all(runs: &[&RunSpec], jobs: usize, intra_jobs: usize) -> Vec<RunStat
             .map(|w| w.join().expect("batch worker panicked"))
             .collect()
     });
-    let mut out: Vec<Option<RunStats>> = vec![None; runs.len()];
-    for (i, stats) in per_worker.into_iter().flatten() {
-        out[i] = Some(stats);
+    let mut out: Vec<Option<R>> = items.iter().map(|_| None).collect();
+    for (i, r) in per_worker.into_iter().flatten() {
+        out[i] = Some(r);
     }
     out.into_iter()
         .map(|o| o.expect("worker pool dropped a run"))
@@ -819,6 +835,20 @@ mod tests {
         let seq = spec.execute_intra(1).to_json().encode();
         let par = spec.execute_intra(4).to_json().encode();
         assert_eq!(seq, par);
+    }
+
+    #[test]
+    fn execute_indexed_is_index_aligned_at_any_job_count() {
+        // The generic pool core: results line up with the input no matter
+        // how many workers raced over the cursor (serve leans on this).
+        let items: Vec<u64> = (0..37).collect();
+        let serial = execute_indexed(&items, 1, |i, &x| (i as u64) * 1000 + x);
+        for jobs in [2usize, 4, 16] {
+            let parallel = execute_indexed(&items, jobs, |i, &x| (i as u64) * 1000 + x);
+            assert_eq!(serial, parallel, "jobs={jobs}");
+        }
+        let empty: Vec<u64> = Vec::new();
+        assert!(execute_indexed(&empty, 4, |_, &x| x).is_empty());
     }
 
     #[test]

@@ -868,6 +868,41 @@ pub fn protocol_report_json(
     ])
 }
 
+// ---------------------------------------------------------------------------
+// Serve front-end — default ladders for `repro batch serve`
+// ---------------------------------------------------------------------------
+
+/// Default machine ladder for the serve grid: the paper's 8×8 only — one
+/// chip, one service curve; widen with `--machines` to compare chips.
+pub fn serve_machines() -> Vec<MachineSpec> {
+    vec![MachineSpec::TilePro64]
+}
+
+/// Default offered-load rungs (ρ = arrival rate × single-request service
+/// time): below the knee, near it, and past it — a ladder crossing ρ = 1
+/// must detect a saturation knee on a single-server queue, which is what
+/// the CI smoke pins.
+pub fn serve_rhos() -> Vec<f64> {
+    vec![0.5, 0.8, 1.2]
+}
+
+/// Default dispatch policies: pure FIFO against greedy 8-way coalescing —
+/// the pair that shows the batching trade (worse p50 at low load, higher
+/// sustained throughput past the knee).
+pub fn serve_policies() -> Vec<crate::serve::BatchPolicy> {
+    vec![
+        crate::serve::BatchPolicy::Immediate,
+        crate::serve::BatchPolicy::Batch { max: 8, wait: 0 },
+    ]
+}
+
+/// Default per-request workload for the serve grid: the paper's localised
+/// merge sort (Table 1 case 8) at a small request size — each request
+/// sorts `elems` keys, a batch of k sorts `k × elems` in one replay.
+pub fn serve_template(case_id: u8, elems: u64, threads: usize, seed: u64) -> RunSpec {
+    RunSpec::mergesort(case_id, elems, threads, seed)
+}
+
 /// §2's three homing classes head-to-head on the repeated-scan kernel:
 /// local homing (first touch by the worker), remote homing (one fixed
 /// other tile — the machine's far corner), and hash-for-home — plus the

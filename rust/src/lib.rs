@@ -18,7 +18,9 @@
 //! - **L3 (this crate)** — the coordinator: simulator substrates
 //!   ([`arch`], [`mem`], [`cache`], [`noc`], [`sim`], [`sched`]), the
 //!   localisation API and experiment matrix ([`coordinator`]), the paper's
-//!   workloads ([`workloads`]), and the PJRT runtime ([`runtime`]).
+//!   workloads ([`workloads`]), the open-loop serve front-end ([`serve`] —
+//!   seeded arrivals, bounded queueing, latency percentiles, saturation
+//!   knees), and the PJRT runtime ([`runtime`]).
 //! - **L2/L1 (python/compile)** — JAX chunked sorter calling Pallas bitonic
 //!   kernels, AOT-lowered to `artifacts/*.hlo.txt`, executed by
 //!   [`runtime`] with Python never on the request path.
@@ -35,6 +37,7 @@ pub mod metrics;
 pub mod noc;
 pub mod runtime;
 pub mod sched;
+pub mod serve;
 pub mod sim;
 pub mod util;
 pub mod workloads;

@@ -9,7 +9,7 @@
 //! mergesort  [flags]           one merge-sort run (Alg. 3/4)
 //! sort       [flags]           REAL sort via the AOT'd Pallas kernels
 //! experiment <fig1|fig2|fig3|fig4|table1|all> [flags]
-//! batch      <fig…|all|grid|gridscale|falseshare|placement|fabric|protocol>
+//! batch      <fig…|all|grid|gridscale|falseshare|placement|fabric|protocol|serve>
 //!                              parallel sweeps over the worker pool
 //! ```
 //!
@@ -22,8 +22,10 @@
 //! conflict-error path.
 
 use tilesim::arch::{CtrlPlacement, FabricSpec, MachineSpec};
+use tilesim::coherence::ProtocolSpec;
 use tilesim::coordinator::batch::{derive_seeds, BatchRunner, RunSpec, SweepSpec, Workload};
 use tilesim::coordinator::{case, experiment, table1};
+use tilesim::serve::{ArrivalSpec, BatchPolicy, ServeSweep};
 use tilesim::util::cli::{parse_usize, Args, TargetSpec};
 use tilesim::util::json::Json;
 use tilesim::workloads::mergesort::Variant;
@@ -62,6 +64,12 @@ const VALUE_FLAGS: &[&str] = &[
     "placements",
     "strengths",
     "protocol",
+    "protocols",
+    "rhos",
+    "policies",
+    "arrival",
+    "requests",
+    "queue-cap",
 ];
 const BOOL_FLAGS: &[&str] = &[
     "json",
@@ -364,7 +372,7 @@ fn reject_ladder_conflicts(
     Ok(())
 }
 
-/// `repro batch <fig…|all|grid|gridscale|falseshare|placement|fabric|protocol>`:
+/// `repro batch <fig…|all|grid|gridscale|falseshare|placement|fabric|protocol|serve>`:
 /// run sweeps through the worker pool and emit machine-readable results.
 /// `--jobs N` shards across N host threads (0 = all cores); output is
 /// byte-identical for every N.
@@ -381,6 +389,11 @@ fn batch_cmd(
         .get(1)
         .map(|s| s.as_str())
         .unwrap_or("all");
+    if which == "serve" {
+        // The serve front-end has its own record shape (scenarios +
+        // ladders + knee), not a SweepSpec — it branches off here.
+        return serve_cmd(args, seed);
+    }
     let runner = BatchRunner::new(args.usize("jobs", 0)?)
         .with_intra_jobs(args.usize("intra-jobs", 1)?);
     let out = args.get("out").map(|s| s.to_string());
@@ -509,6 +522,91 @@ fn batch_cmd(
             std::fs::write(&path, record.encode())?;
             eprintln!("saved {path}");
         }
+    }
+    Ok(())
+}
+
+/// `repro batch serve`: the open-loop request front-end. Builds the
+/// offered-load × batch-policy × machine × protocol scenario grid, shards
+/// it over the worker pool, and reports per-request latency percentiles,
+/// throughput-vs-offered-load ladders, and the saturation knee. `--json`
+/// emits the full record (byte-identical at any `--jobs`/`--intra-jobs`).
+fn serve_cmd(args: &Args, seed: u64) -> Result<(), Box<dyn std::error::Error>> {
+    reject_ladder_conflicts(
+        args,
+        "serve",
+        &[
+            ("machine", "use --machines a,b,c"),
+            ("fabric", "the serve grid compares uniform fabrics"),
+            ("placements", "use `batch placement` for placements"),
+            ("strengths", "use `batch fabric` to sweep strengths"),
+            ("protocol", "use --protocols a,b,c"),
+        ],
+    )?;
+    let machines = machines_arg(args, experiment::serve_machines)?;
+    let protocols: Vec<ProtocolSpec> = match args.get("protocols") {
+        None => vec![ProtocolSpec::default()],
+        Some(s) => s
+            .split(',')
+            .map(|p| ProtocolSpec::parse(p.trim()))
+            .collect::<Result<_, _>>()?,
+    };
+    let policies: Vec<BatchPolicy> = match args.get("policies") {
+        None => experiment::serve_policies(),
+        Some(s) => s
+            .split(',')
+            .map(|p| BatchPolicy::parse(p.trim()))
+            .collect::<Result<_, _>>()?,
+    };
+    let rhos: Vec<f64> = match args.get("rhos") {
+        None => experiment::serve_rhos(),
+        Some(s) => parse_list(s, |x| {
+            x.parse::<f64>().ok().filter(|r| *r > 0.0 && r.is_finite())
+        })
+        .ok_or("bad --rhos list: want positive offered-load fractions, e.g. 0.5,0.8,1.2")?,
+    };
+    let arrival = ArrivalSpec::parse(args.get("arrival").unwrap_or("poisson"))?;
+    let case_id = args.usize("case", 8)? as u8;
+    if !(1..=8).contains(&case_id) {
+        return Err(format!("bad --case {case_id}: want a Table 1 id in 1..8").into());
+    }
+    let elems = args.usize("size", 4096)? as u64;
+    let threads = args.usize("threads", 16)?;
+    let requests = args.u64("requests", 200)?;
+    let queue_cap = args.usize("queue-cap", 64)?;
+    let template = experiment::serve_template(case_id, elems, threads, seed);
+    let sweep = ServeSweep::grid(
+        &template,
+        &machines,
+        &protocols,
+        &policies,
+        arrival,
+        &rhos,
+        requests,
+        queue_cap,
+        args.flag("link-contention"),
+    );
+    sweep.check()?;
+    let runner = BatchRunner::new(args.usize("jobs", 0)?)
+        .with_intra_jobs(args.usize("intra-jobs", 1)?);
+    eprintln!(
+        "serve: {} scenario(s) on {} worker(s)",
+        sweep.scenarios.len(),
+        runner.jobs()
+    );
+    let reports = sweep.run(&runner);
+    let record = sweep.to_json(&reports);
+    if args.flag("json") {
+        println!("{}", record.encode());
+    } else {
+        println!("{}", sweep.table(&reports).render());
+    }
+    eprintln!("{}", sweep.report(&reports));
+    if let Some(dir) = args.get("out") {
+        sweep.table(&reports).save(dir, "serve")?;
+        let path = format!("{dir}/serve_runs.json");
+        std::fs::write(&path, record.encode())?;
+        eprintln!("saved {path}");
     }
     Ok(())
 }
@@ -888,7 +986,7 @@ fn print_usage() {
         "usage: repro <info|microbench|mergesort|radix|homing|sort|experiment|batch> [flags]\n\
          experiments: repro experiment <fig1|fig2|fig3|fig4|table1|all> [--size N] [--out DIR]\n\
          batch:       repro batch <fig1|fig2|fig3|fig4|table1|all|grid|gridscale|falseshare\n\
-                      |placement|fabric|protocol> [--jobs N] [--out DIR] [--json]\n\
+                      |placement|fabric|protocol|serve> [--jobs N] [--out DIR] [--json]\n\
                       grid axes: --cases 1,3,8 --sizes 1m,4m --threads-list 16,64\n\
                       --workload mergesort|microbench|radix --variant a,b --seeds K\n\
                       gridscale:  --machines 4x4:2,tilepro64,nuca256 --size N --threads N\n\
@@ -901,6 +999,12 @@ fn print_usage() {
                       protocol:   --machines tilepro64,nuca256 --size N --threads N --reps P\n\
                                   (microbench/ping-pong/mergesort under every coherence\n\
                                   protocol; reports winners and cross-machine flips)\n\
+                      serve:      --rhos 0.5,0.8,1.2 --policies immediate,batch8[@W]\n\
+                                  --arrival poisson|bursty[@K] --requests N --queue-cap N\n\
+                                  --machines a,b --protocols a,b --size N --threads N\n\
+                                  (open-loop request front-end; p50/p99/p999 latency,\n\
+                                  throughput vs offered load, saturation knee per ladder;\n\
+                                  rho = arrival rate x single-request service time)\n\
          machines: --machine tilepro64|epiphany16|nuca256|WxH[:ctrls] (default tilepro64)\n\
                    --fabric [machine:]ctrl=edges|sides|corners|interior|t+t[:base=N]\n\
                             [:express-row=Y@F][:express-col=X@F][:edge@F][:dir=D@F]\n\

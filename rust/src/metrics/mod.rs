@@ -323,6 +323,35 @@ pub fn home_concentration(stats: &RunStats) -> f64 {
     (max as f64 / total as f64 - 1.0 / n) / (1.0 - 1.0 / n)
 }
 
+/// Nearest-rank percentile of an **ascending-sorted** slice: the smallest
+/// element whose cumulative rank covers fraction `p` of the samples
+/// (`p` in `[0, 1]`). Integer in, integer out — no interpolation — so the
+/// serve layer's latency records stay byte-exact across worker counts.
+/// An empty slice reports 0 (the serve contract: an empty-arrival
+/// scenario yields an all-zero report, not a panic).
+///
+/// Nearest-rank is monotone in `p` by construction, which is what pins
+/// the `p50 ≤ p99 ≤ p999 ≤ max` ordering property in `prop_serve`.
+pub fn percentile(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let n = sorted.len();
+    let rank = ((p * n as f64).ceil() as usize).clamp(1, n);
+    sorted[rank - 1]
+}
+
+/// The serve layer's standard latency digest over an ascending-sorted
+/// sample: `(p50, p99, p999, max)` by nearest rank.
+pub fn latency_digest(sorted: &[u64]) -> (u64, u64, u64, u64) {
+    (
+        percentile(sorted, 0.50),
+        percentile(sorted, 0.99),
+        percentile(sorted, 0.999),
+        sorted.last().copied().unwrap_or(0),
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -523,5 +552,26 @@ mod tests {
         hot[0] = 1000;
         let spread = vec![16u64; 64];
         assert!(home_concentration(&stats_with(hot)) > home_concentration(&stats_with(spread)));
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile(&v, 0.50), 50);
+        assert_eq!(percentile(&v, 0.99), 99);
+        assert_eq!(percentile(&v, 0.999), 100);
+        assert_eq!(percentile(&v, 0.0), 1, "p0 clamps to the minimum");
+        assert_eq!(percentile(&v, 1.0), 100);
+        assert_eq!(percentile(&[], 0.5), 0, "empty sample reports zero");
+        assert_eq!(percentile(&[7], 0.999), 7);
+    }
+
+    #[test]
+    fn latency_digest_is_ordered() {
+        let v: Vec<u64> = (0..1000).map(|i| i * i).collect();
+        let (p50, p99, p999, max) = latency_digest(&v);
+        assert!(p50 <= p99 && p99 <= p999 && p999 <= max);
+        assert_eq!(max, 999 * 999);
+        assert_eq!(latency_digest(&[]), (0, 0, 0, 0));
     }
 }

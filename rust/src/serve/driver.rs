@@ -1,0 +1,420 @@
+//! The open-loop serve driver: one scenario = arrivals → bounded queue →
+//! dispatcher → the chip simulator as the service stage.
+//!
+//! A [`ServeScenario`] fixes the request workload (a [`RunSpec`] template
+//! — one request = one replay of that spec), the arrival shape and offered
+//! load, the queue bound, and the batching policy. [`ServeScenario::simulate`]
+//! runs the discrete-event loop over [`EventQueue`] and produces a
+//! [`ServeReport`]: per-request latency percentiles (p50/p99/p999/max by
+//! nearest rank, in exact cycles), completed-vs-offered throughput, drops,
+//! and batching shape.
+//!
+//! Offered load is expressed as **ρ** (`--rhos`): the arrival rate as a
+//! fraction of the single-request service rate, so `ρ = 1` is the
+//! single-server saturation point by construction and a ladder crossing 1
+//! must show the knee. The driver measures the single-request service time
+//! `s₁` by replaying the template once, then sets the mean inter-arrival
+//! gap to `s₁/ρ`.
+//!
+//! The dispatcher maps each batch onto the machine's tiles through the
+//! existing engine machinery: a batch of `k` requests is one replay of the
+//! template with `k×` the elements (the chunked sorter's contract — one
+//! dispatch sorts the concatenated keys). Batch service times are memoised
+//! per `k`, so a scenario costs at most `max_batch` engine replays no
+//! matter how many requests flow through it.
+//!
+//! Everything here is sequential and a pure function of the scenario +
+//! `intra_jobs`-independent stats, so reports are byte-identical at any
+//! `--jobs`/`--intra-jobs` (pinned by `rust/tests/serve_determinism.rs`).
+
+use crate::coordinator::batch::RunSpec;
+use crate::metrics::latency_digest;
+use crate::serve::arrivals::{ArrivalGen, ArrivalSpec};
+use crate::serve::queue::{BatchPolicy, RequestQueue};
+use crate::sim::devent::EventQueue;
+use crate::util::json::Json;
+
+/// One fully-specified serve cell: workload template × arrival process ×
+/// offered load × queue bound × batch policy.
+#[derive(Clone, Debug)]
+pub struct ServeScenario {
+    /// The per-request workload. `run.elems` is the size of ONE request;
+    /// a batch of `k` replays the template at `k * elems`.
+    pub run: RunSpec,
+    pub arrival: ArrivalSpec,
+    /// Offered load as a fraction of the single-request service rate.
+    pub rho: f64,
+    /// Open-loop arrival count (0 = empty scenario, all-zero report).
+    pub requests: u64,
+    /// Bounded queue depth; arrivals beyond it drop (drop-tail).
+    pub queue_cap: usize,
+    pub policy: BatchPolicy,
+}
+
+/// Events of the serve pipeline's discrete-event loop.
+enum Ev {
+    /// One request arrives.
+    Arrival,
+    /// The in-flight batch completes.
+    Done,
+    /// The oldest queued request's batch-fill timer expired.
+    Timeout,
+}
+
+impl ServeScenario {
+    /// Row label: `machine/policy/arrival rho=R` (protocol appended when
+    /// non-default, same gating as [`RunSpec::label`]).
+    pub fn label(&self) -> String {
+        let proto = if self.run.protocol.is_default() {
+            String::new()
+        } else {
+            format!(" proto={}", self.run.protocol.label())
+        };
+        format!(
+            "{}/{}/{} rho={}{}",
+            self.run.machine.label(),
+            self.policy.label(),
+            self.arrival.label(),
+            self.rho,
+            proto
+        )
+    }
+
+    /// Ladder key: everything but the offered load. Scenarios sharing this
+    /// key form one throughput-vs-load curve (where the knee is detected).
+    pub fn ladder_label(&self) -> String {
+        let proto = if self.run.protocol.is_default() {
+            String::new()
+        } else {
+            format!(" proto={}", self.run.protocol.label())
+        };
+        format!(
+            "{}/{}/{}{}",
+            self.run.machine.label(),
+            self.policy.label(),
+            self.arrival.label(),
+            proto
+        )
+    }
+
+    /// CLI-time validation: the template (at its largest batch size) must
+    /// fit the machine, and the scenario's knobs must be sane.
+    pub fn check(&self) -> Result<(), String> {
+        if !(self.rho > 0.0) {
+            return Err(format!("bad serve scenario: rho must be > 0, got {}", self.rho));
+        }
+        if self.queue_cap == 0 {
+            return Err("bad serve scenario: queue-cap must be >= 1".into());
+        }
+        if self.run.elems < 2 * self.run.threads as u64 {
+            return Err(format!(
+                "bad serve scenario: request size {} below 2x{} threads",
+                self.run.elems, self.run.threads
+            ));
+        }
+        self.run.check_thread_capacity()
+    }
+
+    /// Spec half of the scenario's JSON record (the report rides next to
+    /// it — see [`crate::serve::sweep`]).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("run", self.run.to_json()),
+            ("arrival", Json::str(self.arrival.label())),
+            ("rho", Json::num(self.rho)),
+            ("requests", Json::num(self.requests as f64)),
+            ("queue_cap", Json::num(self.queue_cap as f64)),
+            ("policy", Json::str(self.policy.label())),
+        ])
+    }
+
+    /// Service time in cycles for a batch of `k` requests: one replay of
+    /// the template at `k × elems`, memoised in `cache[k-1]`.
+    fn service_cycles(
+        &self,
+        cache: &mut [Option<(u64, f64)>],
+        k: usize,
+        intra_jobs: usize,
+    ) -> u64 {
+        if cache[k - 1].is_none() {
+            let mut r = self.run.clone();
+            r.elems = self.run.elems * k as u64;
+            let stats = r.execute_intra(intra_jobs);
+            cache[k - 1] = Some((stats.makespan_cycles, stats.clock_hz));
+        }
+        cache[k - 1].unwrap().0
+    }
+
+    /// Run the scenario's discrete-event loop to completion and digest it.
+    /// Deterministic at any `intra_jobs` (engine stats are byte-identical
+    /// across intra-run worker counts).
+    pub fn simulate(&self, intra_jobs: usize) -> ServeReport {
+        let mut report = ServeReport::zero(self);
+        if self.requests == 0 {
+            return report;
+        }
+        let max_batch = self.policy.max_batch() as usize;
+        let mut cache: Vec<Option<(u64, f64)>> = vec![None; max_batch];
+        let s1 = self.service_cycles(&mut cache, 1, intra_jobs);
+        let clock = cache[0].unwrap().1;
+        let mean_gap = (s1 as f64 / self.rho).max(1.0);
+        report.service_cycles_one = s1;
+        report.clock_hz = clock;
+
+        let mut events: EventQueue<Ev> = EventQueue::new();
+        let mut gen = ArrivalGen::new(self.arrival, mean_gap, self.run.seed);
+        let mut queue = RequestQueue::new(self.queue_cap);
+        let mut latencies: Vec<u64> = Vec::new();
+        let mut in_flight: Vec<u64> = Vec::new();
+        let mut busy = false;
+        let mut armed_timeout: Option<u64> = None;
+        let mut arrived = 0u64;
+        events.at(gen.next_gap(), Ev::Arrival);
+        while let Some((now, ev)) = events.pop() {
+            // Makespan tracks arrivals and completions; a stale fill timer
+            // popping after the last Done must not stretch the horizon.
+            if !matches!(ev, Ev::Timeout) {
+                report.makespan_cycles = now;
+            }
+            match ev {
+                Ev::Arrival => {
+                    arrived += 1;
+                    report.last_arrival_cycles = now;
+                    queue.offer(now);
+                    if arrived < self.requests {
+                        events.at(now + gen.next_gap(), Ev::Arrival);
+                    }
+                }
+                Ev::Done => {
+                    for a in in_flight.drain(..) {
+                        latencies.push(now - a);
+                    }
+                    busy = false;
+                }
+                Ev::Timeout => {}
+            }
+            if busy || queue.is_empty() {
+                continue;
+            }
+            let take = match self.policy {
+                BatchPolicy::Immediate => Some(1),
+                BatchPolicy::Batch { max, wait } => {
+                    let oldest = queue.front_arrival().expect("non-empty queue");
+                    if queue.len() >= max as usize
+                        || arrived == self.requests
+                        || now >= oldest + wait
+                    {
+                        Some(queue.len().min(max as usize))
+                    } else {
+                        // Hold for more arrivals; arm the fill timer once
+                        // per deadline (stale timers pop as no-ops).
+                        if armed_timeout != Some(oldest + wait) {
+                            events.at(oldest + wait, Ev::Timeout);
+                            armed_timeout = Some(oldest + wait);
+                        }
+                        None
+                    }
+                }
+            };
+            if let Some(k) = take {
+                in_flight = queue.take(k);
+                let svc = self.service_cycles(&mut cache, k, intra_jobs);
+                report.batches += 1;
+                report.max_batch_served = report.max_batch_served.max(k as u64);
+                busy = true;
+                armed_timeout = None;
+                events.at(now + svc, Ev::Done);
+            }
+        }
+
+        latencies.sort_unstable();
+        report.completed = latencies.len() as u64;
+        report.dropped = queue.dropped;
+        report.queue_peak = queue.peak_depth as u64;
+        let (p50, p99, p999, max) = latency_digest(&latencies);
+        report.p50_cycles = p50;
+        report.p99_cycles = p99;
+        report.p999_cycles = p999;
+        report.max_cycles = max;
+        report.mean_cycles = if latencies.is_empty() {
+            0.0
+        } else {
+            latencies.iter().map(|&l| l as u128).sum::<u128>() as f64 / latencies.len() as f64
+        };
+        report.offered_rps = rate_per_sec(arrived, report.last_arrival_cycles, clock);
+        report.completed_rps = rate_per_sec(report.completed, report.makespan_cycles, clock);
+        report
+    }
+}
+
+/// `n` events over `cycles` simulated cycles as a per-second rate. Both
+/// numerator and denominator are *empirical* (the measured stream, not the
+/// configured rate): `completed ≤ arrived` and `makespan ≥ last arrival`
+/// make `completed_rps ≤ offered_rps` an identity, which is the
+/// throughput-conservation property `prop_serve` pins.
+fn rate_per_sec(n: u64, cycles: u64, clock_hz: f64) -> f64 {
+    if cycles == 0 {
+        return 0.0;
+    }
+    n as f64 * clock_hz / cycles as f64
+}
+
+/// The digest of one simulated scenario. All cycle counts are exact
+/// integers; the derived f64 rates are pure functions of them.
+#[derive(Clone, Debug, Default)]
+pub struct ServeReport {
+    /// Requests the generator emitted (== the scenario's `requests`).
+    pub offered: u64,
+    pub completed: u64,
+    pub dropped: u64,
+    /// Engine replays dispatched and the largest batch one replay served.
+    pub batches: u64,
+    pub max_batch_served: u64,
+    pub queue_peak: u64,
+    /// Single-request service time (the ρ anchor) and the machine clock.
+    pub service_cycles_one: u64,
+    pub clock_hz: f64,
+    pub last_arrival_cycles: u64,
+    pub makespan_cycles: u64,
+    pub p50_cycles: u64,
+    pub p99_cycles: u64,
+    pub p999_cycles: u64,
+    pub max_cycles: u64,
+    pub mean_cycles: f64,
+    pub offered_rps: f64,
+    pub completed_rps: f64,
+}
+
+impl ServeReport {
+    fn zero(s: &ServeScenario) -> ServeReport {
+        ServeReport {
+            offered: s.requests,
+            ..ServeReport::default()
+        }
+    }
+
+    /// Latency in milliseconds for the table renderer (cycles stay the
+    /// record of truth in JSON).
+    pub fn ms(&self, cycles: u64) -> f64 {
+        if self.clock_hz == 0.0 {
+            0.0
+        } else {
+            cycles as f64 / self.clock_hz * 1e3
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("offered", Json::num(self.offered as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("dropped", Json::num(self.dropped as f64)),
+            ("batches", Json::num(self.batches as f64)),
+            ("max_batch_served", Json::num(self.max_batch_served as f64)),
+            ("queue_peak", Json::num(self.queue_peak as f64)),
+            ("service_cycles_one", Json::num(self.service_cycles_one as f64)),
+            ("last_arrival_cycles", Json::num(self.last_arrival_cycles as f64)),
+            ("makespan_cycles", Json::num(self.makespan_cycles as f64)),
+            ("p50_cycles", Json::num(self.p50_cycles as f64)),
+            ("p99_cycles", Json::num(self.p99_cycles as f64)),
+            ("p999_cycles", Json::num(self.p999_cycles as f64)),
+            ("max_cycles", Json::num(self.max_cycles as f64)),
+            ("mean_cycles", Json::num(self.mean_cycles)),
+            ("p50_ms", Json::num(self.ms(self.p50_cycles))),
+            ("p99_ms", Json::num(self.ms(self.p99_cycles))),
+            ("p999_ms", Json::num(self.ms(self.p999_cycles))),
+            ("offered_rps", Json::num(self.offered_rps)),
+            ("completed_rps", Json::num(self.completed_rps)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batch::RunSpec;
+
+    fn tiny(rho: f64, requests: u64, policy: BatchPolicy) -> ServeScenario {
+        ServeScenario {
+            run: RunSpec::mergesort(8, 1 << 10, 4, 42),
+            arrival: ArrivalSpec::Poisson,
+            rho,
+            requests,
+            queue_cap: 1 << 20,
+            policy,
+        }
+    }
+
+    #[test]
+    fn empty_scenario_is_all_zero_not_a_panic() {
+        let r = tiny(0.5, 0, BatchPolicy::Immediate).simulate(1);
+        assert_eq!(
+            (r.completed, r.dropped, r.batches, r.makespan_cycles),
+            (0, 0, 0, 0)
+        );
+        assert_eq!((r.p50_cycles, r.p999_cycles, r.max_cycles), (0, 0, 0));
+        assert_eq!(r.offered_rps, 0.0);
+        assert_eq!(r.completed_rps, 0.0);
+    }
+
+    #[test]
+    fn low_load_completes_everything_without_drops() {
+        let r = tiny(0.5, 40, BatchPolicy::Immediate).simulate(1);
+        assert_eq!(r.completed, 40);
+        assert_eq!(r.dropped, 0);
+        assert_eq!(r.batches, 40, "immediate policy: one replay per request");
+        assert!(r.service_cycles_one > 0);
+        assert!(r.p50_cycles >= r.service_cycles_one, "latency includes service");
+        assert!(r.makespan_cycles > r.last_arrival_cycles);
+    }
+
+    #[test]
+    fn batching_coalesces_under_pressure() {
+        let r = tiny(2.0, 60, BatchPolicy::Batch { max: 8, wait: 0 }).simulate(1);
+        assert_eq!(r.completed, 60);
+        assert!(r.batches < 60, "overload must coalesce: {} batches", r.batches);
+        assert!(r.max_batch_served > 1);
+        assert!(r.max_batch_served <= 8);
+    }
+
+    #[test]
+    fn bounded_queue_drops_under_overload() {
+        let mut s = tiny(4.0, 60, BatchPolicy::Immediate);
+        s.queue_cap = 2;
+        let r = s.simulate(1);
+        assert!(r.dropped > 0, "cap-2 queue at 4x load must drop");
+        assert_eq!(r.completed + r.dropped, 60);
+        assert!(r.queue_peak <= 2);
+    }
+
+    #[test]
+    fn report_is_deterministic_and_intra_jobs_invariant() {
+        let s = tiny(1.2, 30, BatchPolicy::Batch { max: 4, wait: 0 });
+        let a = s.simulate(1).to_json().encode();
+        let b = s.simulate(1).to_json().encode();
+        let c = s.simulate(2).to_json().encode();
+        assert_eq!(a, b, "same scenario, same bytes");
+        assert_eq!(a, c, "intra-run workers must not change the report");
+    }
+
+    #[test]
+    fn fill_timer_holds_then_flushes() {
+        // wait >> inter-arrival gap: batches should fill to max; the tail
+        // flushes partial when arrivals run out.
+        let s = tiny(1.0, 20, BatchPolicy::Batch { max: 4, wait: u64::MAX / 2 });
+        let r = s.simulate(1);
+        assert_eq!(r.completed, 20);
+        assert_eq!(r.max_batch_served, 4, "timer must let batches fill");
+    }
+
+    #[test]
+    fn scenario_check_catches_bad_knobs() {
+        assert!(tiny(0.0, 10, BatchPolicy::Immediate).check().is_err());
+        let mut s = tiny(1.0, 10, BatchPolicy::Immediate);
+        s.queue_cap = 0;
+        assert!(s.check().is_err());
+        let mut s = tiny(1.0, 10, BatchPolicy::Immediate);
+        s.run.elems = 4;
+        assert!(s.check().is_err(), "request below 2x threads");
+        assert!(tiny(1.0, 10, BatchPolicy::Immediate).check().is_ok());
+    }
+}

@@ -1,0 +1,47 @@
+//! The serve front-end: the ROADMAP's "serve heavy traffic from millions
+//! of users" layer, built on top of the simulator.
+//!
+//! The paper proves the *per-run* win: localisation makes one sort on one
+//! chip fast. This module asks the service question the manycore era
+//! actually poses — what offered load can that chip sustain, and what do
+//! the latency tails look like on the way to saturation? It models the
+//! request path as a deterministic discrete-event pipeline:
+//!
+//! ```text
+//!   open-loop arrivals        bounded FIFO           dispatcher            chip
+//!   (Poisson | bursty,   →   (drop-tail,       →   (immediate |     →   (Engine/RunSpec
+//!    seeded, rate = ρ/s₁)     --queue-cap)          batchN[@wait])        replay = service)
+//! ```
+//!
+//! - [`arrivals`] — seeded open-loop arrival generators ([`ArrivalSpec`]).
+//! - [`queue`] — the bounded request queue and batching policies
+//!   ([`BatchPolicy`]).
+//! - [`driver`] — one scenario's event loop and its latency/throughput
+//!   digest ([`ServeScenario`], [`ServeReport`]).
+//! - [`sweep`] — the `repro batch serve` grid (load × policy × machine ×
+//!   protocol), ladder structure, and saturation-knee detection
+//!   ([`ServeSweep`]).
+//!
+//! The chip simulator enters as *one component among queues*: a batch of
+//! `k` requests is served by one engine replay of the scenario's workload
+//! at `k×` the elements, so every service time is a real simulated
+//! makespan on real machine tiles — protocol, fabric, and contention
+//! effects included — while a scenario's cost stays bounded by memoising
+//! per batch size.
+//!
+//! Determinism is the same contract as the batch layer: reports are pure
+//! functions of their scenario, sharded by index over the worker pool —
+//! `repro batch serve --json` is byte-identical at any `--jobs` /
+//! `--intra-jobs` (`rust/tests/serve_determinism.rs`), and the properties
+//! (percentile ordering, throughput conservation, load monotonicity) are
+//! pinned in `rust/tests/prop_serve.rs`.
+
+pub mod arrivals;
+pub mod driver;
+pub mod queue;
+pub mod sweep;
+
+pub use arrivals::{ArrivalGen, ArrivalSpec};
+pub use driver::{ServeReport, ServeScenario};
+pub use queue::{BatchPolicy, RequestQueue};
+pub use sweep::{ServeSweep, KNEE_FRACTION};

@@ -1,0 +1,153 @@
+//! Bounded request queue and batching policies.
+//!
+//! Admission is drop-tail: a request arriving at a full queue is counted
+//! and discarded — the open-loop generator never blocks, so past the
+//! saturation knee the drop counter (not backpressure) is what gives.
+//! Dispatch policy decides how many queued requests one engine replay
+//! serves:
+//!
+//! - [`BatchPolicy::Immediate`] — one request per replay, pure FIFO.
+//! - [`BatchPolicy::Batch`] — coalesce up to `max` requests into one
+//!   replay (a batch of k sorts k× the keys in a single run, amortising
+//!   the per-replay fixed cost). `wait` caps how long the oldest request
+//!   may be held while the batch fills; `wait = 0` is greedy coalescing —
+//!   take whatever is queued whenever the server frees up.
+
+use std::collections::VecDeque;
+
+use crate::util::cli::parse_usize;
+
+/// How the dispatcher groups queued requests onto the chip (`--policies`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchPolicy {
+    /// One request per engine replay.
+    Immediate,
+    /// Up to `max` requests per replay; hold the oldest at most `wait`
+    /// cycles while the batch fills (0 = never hold).
+    Batch { max: u32, wait: u64 },
+}
+
+impl BatchPolicy {
+    /// Parse `immediate`, `batchN` (greedy), or `batchN@W` (fill timer of
+    /// `W` cycles, k/m/g suffixes accepted).
+    pub fn parse(s: &str) -> Result<BatchPolicy, String> {
+        if s == "immediate" {
+            return Ok(BatchPolicy::Immediate);
+        }
+        let err = || {
+            format!("bad batch policy '{s}': want immediate | batchN | batchN@W (N >= 2)")
+        };
+        let rest = s.strip_prefix("batch").ok_or_else(err)?;
+        let (n, wait) = match rest.split_once('@') {
+            None => (rest, 0u64),
+            Some((n, w)) => (n, parse_usize(w).ok_or_else(err)? as u64),
+        };
+        match n.parse::<u32>() {
+            Ok(max) if max >= 2 => Ok(BatchPolicy::Batch { max, wait }),
+            _ => Err(err()),
+        }
+    }
+
+    pub fn label(self) -> String {
+        match self {
+            BatchPolicy::Immediate => "immediate".into(),
+            BatchPolicy::Batch { max, wait: 0 } => format!("batch{max}"),
+            BatchPolicy::Batch { max, wait } => format!("batch{max}@{wait}"),
+        }
+    }
+
+    /// Largest batch one replay may serve under this policy.
+    pub fn max_batch(self) -> u32 {
+        match self {
+            BatchPolicy::Immediate => 1,
+            BatchPolicy::Batch { max, .. } => max,
+        }
+    }
+}
+
+/// Bounded FIFO of pending requests, each remembered by its arrival cycle.
+pub struct RequestQueue {
+    capacity: usize,
+    q: VecDeque<u64>,
+    /// Requests refused at a full queue (drop-tail admission).
+    pub dropped: u64,
+    /// High-water mark of the queue depth.
+    pub peak_depth: usize,
+}
+
+impl RequestQueue {
+    pub fn new(capacity: usize) -> RequestQueue {
+        RequestQueue {
+            capacity,
+            q: VecDeque::new(),
+            dropped: 0,
+            peak_depth: 0,
+        }
+    }
+
+    /// Admit a request that arrived at cycle `now`; returns `false` (and
+    /// counts the drop) when the queue is full.
+    pub fn offer(&mut self, now: u64) -> bool {
+        if self.q.len() >= self.capacity {
+            self.dropped += 1;
+            return false;
+        }
+        self.q.push_back(now);
+        self.peak_depth = self.peak_depth.max(self.q.len());
+        true
+    }
+
+    /// Arrival cycle of the oldest queued request.
+    pub fn front_arrival(&self) -> Option<u64> {
+        self.q.front().copied()
+    }
+
+    /// Dequeue the `n` oldest requests' arrival cycles (FIFO).
+    pub fn take(&mut self, n: usize) -> Vec<u64> {
+        self.q.drain(..n.min(self.q.len())).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_parse_round_trips() {
+        for s in ["immediate", "batch8", "batch4@512", "batch2@1k"] {
+            let p = BatchPolicy::parse(s).unwrap();
+            // 1k normalises to cycles in the label.
+            let back = BatchPolicy::parse(&p.label()).unwrap();
+            assert_eq!(p, back, "{s}");
+        }
+        assert_eq!(BatchPolicy::parse("batch8").unwrap().max_batch(), 8);
+        assert_eq!(BatchPolicy::parse("immediate").unwrap().max_batch(), 1);
+        for s in ["", "batch", "batch1", "batch0", "batch8@", "batch8@x", "b8"] {
+            assert!(BatchPolicy::parse(s).is_err(), "{s} must not parse");
+        }
+    }
+
+    #[test]
+    fn queue_is_fifo_and_bounded() {
+        let mut q = RequestQueue::new(3);
+        assert!(q.offer(10) && q.offer(20) && q.offer(30));
+        assert!(!q.offer(40), "fourth request must drop");
+        assert_eq!(q.dropped, 1);
+        assert_eq!(q.peak_depth, 3);
+        assert_eq!(q.front_arrival(), Some(10));
+        assert_eq!(q.take(2), vec![10, 20]);
+        assert_eq!(q.len(), 1);
+        // Room again after the take.
+        assert!(q.offer(50));
+        assert_eq!(q.take(10), vec![30, 50], "take clamps to queue length");
+        assert!(q.is_empty());
+    }
+}

@@ -1,0 +1,336 @@
+//! The serve scenario grid: offered load × batch policy × machine ×
+//! protocol, executed through the batch worker pool, digested into
+//! throughput-vs-offered-load ladders with saturation-knee detection.
+//!
+//! Grid order is row-major over (machine, protocol, policy, ρ) with ρ
+//! innermost and ascending, so scenarios sharing everything but ρ are
+//! contiguous — each such group is one **ladder** (one curve of the
+//! throughput-vs-load plot). The knee of a ladder is the first rung whose
+//! completed throughput falls below [`KNEE_FRACTION`] of its offered rate:
+//! below the knee the server keeps up (the drain after the last arrival is
+//! noise); past it the queue grows without bound over the horizon and
+//! completed throughput pins at the service capacity.
+//!
+//! JSON shape (`repro batch serve --json`):
+//!
+//! ```text
+//! {"title": …,
+//!  "scenarios": [{"spec": {…}, "report": {…}}, …],
+//!  "ladders": [{"label": "tilepro64/immediate/poisson",
+//!               "rows": [{"rho": 0.5, "offered_rps": …, "completed_rps": …,
+//!                         "p50_cycles": …, "p99_cycles": …, "p999_cycles": …}, …],
+//!               "knee": {"rho": 1.2, "offered_rps": …, "completed_rps": …} | null}, …],
+//!  "table": {…}}
+//! ```
+//!
+//! Determinism: scenarios are sharded over [`execute_indexed`] (results
+//! keyed by index), each report is a pure function of its scenario, and
+//! every Json object serialises with sorted keys — so the record is
+//! byte-identical at any `--jobs`/`--intra-jobs`.
+
+use crate::arch::MachineSpec;
+use crate::coherence::ProtocolSpec;
+use crate::coordinator::batch::{execute_indexed, BatchRunner, RunSpec};
+use crate::harness::SweepTable;
+use crate::serve::arrivals::ArrivalSpec;
+use crate::serve::driver::{ServeReport, ServeScenario};
+use crate::serve::queue::BatchPolicy;
+use crate::util::json::Json;
+
+/// A ladder keeps up while `completed_rps >= KNEE_FRACTION * offered_rps`;
+/// the first rung below is the saturation knee. 0.95 leaves room for the
+/// finite-horizon drain tail (the server finishing its queue after the
+/// last arrival) without ever absorbing a real ρ > 1 overload.
+pub const KNEE_FRACTION: f64 = 0.95;
+
+/// The full serve grid plus its ladder structure (scenario indices).
+pub struct ServeSweep {
+    pub title: String,
+    pub scenarios: Vec<ServeScenario>,
+    /// `(ladder label, scenario indices in ascending-ρ order)`.
+    pub ladders: Vec<(String, Vec<usize>)>,
+}
+
+impl ServeSweep {
+    /// Expand the grid. `template` fixes the per-request workload (case,
+    /// size, threads, seed); machine/protocol are overlaid per cell.
+    /// Rungs (`rhos`) are sorted ascending per ladder. Link + coherence
+    /// billing turn on for non-default protocols (a directory protocol
+    /// with the links off measures nothing — same rule as the protocol
+    /// lab); `links` forces them on everywhere.
+    pub fn grid(
+        template: &RunSpec,
+        machines: &[MachineSpec],
+        protocols: &[ProtocolSpec],
+        policies: &[BatchPolicy],
+        arrival: ArrivalSpec,
+        rhos: &[f64],
+        requests: u64,
+        queue_cap: usize,
+        links: bool,
+    ) -> ServeSweep {
+        assert!(
+            !machines.is_empty() && !protocols.is_empty() && !policies.is_empty(),
+            "empty serve grid axes"
+        );
+        assert!(!rhos.is_empty(), "need at least one --rhos rung");
+        let mut rhos = rhos.to_vec();
+        rhos.sort_by(|a, b| a.partial_cmp(b).expect("rho is never NaN"));
+        let mut scenarios = Vec::new();
+        let mut ladders = Vec::new();
+        for &m in machines {
+            for &p in protocols {
+                let billed = links || !p.is_default();
+                for &policy in policies {
+                    let start = scenarios.len();
+                    for &rho in &rhos {
+                        scenarios.push(ServeScenario {
+                            run: template
+                                .clone()
+                                .on_machine(m, billed, billed)
+                                .with_protocol(p),
+                            arrival,
+                            rho,
+                            requests,
+                            queue_cap,
+                            policy,
+                        });
+                    }
+                    let label = scenarios[start].ladder_label();
+                    ladders.push((label, (start..scenarios.len()).collect()));
+                }
+            }
+        }
+        ServeSweep {
+            title: format!(
+                "Serve front-end: {} request(s) of {} ints x {} thread(s) per replay, \
+                 {} arrivals ({} ladder(s) x {} rung(s))",
+                requests,
+                template.elems,
+                template.threads,
+                arrival.label(),
+                ladders.len(),
+                rhos.len()
+            ),
+            scenarios,
+            ladders,
+        }
+    }
+
+    /// CLI-time validation of every cell (see [`ServeScenario::check`]).
+    pub fn check(&self) -> Result<(), String> {
+        for s in &self.scenarios {
+            s.check()?;
+        }
+        Ok(())
+    }
+
+    /// Simulate every scenario through the batch pool. Reports are
+    /// index-aligned with `self.scenarios` at any worker count.
+    pub fn run(&self, runner: &BatchRunner) -> Vec<ServeReport> {
+        let intra = runner.intra_jobs();
+        execute_indexed(&self.scenarios, runner.jobs(), |_, s| s.simulate(intra))
+    }
+
+    /// One table row per scenario: the latency digest (ms) plus the
+    /// throughput pair — the human-readable half of the record.
+    pub fn table(&self, reports: &[ServeReport]) -> SweepTable {
+        let mut t = SweepTable::new(
+            &self.title,
+            "ladder rho=R",
+            ["p50_ms", "p99_ms", "p999_ms", "offered_rps", "completed_rps", "dropped"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+        );
+        for (s, r) in self.scenarios.iter().zip(reports) {
+            t.push_row(
+                s.label(),
+                vec![
+                    r.ms(r.p50_cycles),
+                    r.ms(r.p99_cycles),
+                    r.ms(r.p999_cycles),
+                    r.offered_rps,
+                    r.completed_rps,
+                    r.dropped as f64,
+                ],
+            );
+        }
+        t
+    }
+
+    /// Knee rung of one ladder: index *into the ladder's rows* of the
+    /// first rung that fails to keep up, or `None` if every rung keeps up.
+    fn knee(&self, rows: &[usize], reports: &[ServeReport]) -> Option<usize> {
+        rows.iter().position(|&i| {
+            let r = &reports[i];
+            r.offered_rps > 0.0 && r.completed_rps < KNEE_FRACTION * r.offered_rps
+        })
+    }
+
+    /// The headline stderr report: per ladder, the throughput curve and
+    /// where (whether) it saturates.
+    pub fn report(&self, reports: &[ServeReport]) -> String {
+        let mut out = String::from("serve: throughput-vs-offered-load ladders:\n");
+        for (label, rows) in &self.ladders {
+            let knee = self.knee(rows, reports);
+            out.push_str(&format!("  {label}:\n"));
+            for (j, &i) in rows.iter().enumerate() {
+                let s = &self.scenarios[i];
+                let r = &reports[i];
+                out.push_str(&format!(
+                    "    rho={:<5} offered {:>12.1} req/s, completed {:>12.1} req/s, \
+                     p99 {:.3} ms, dropped {}{}\n",
+                    s.rho,
+                    r.offered_rps,
+                    r.completed_rps,
+                    r.ms(r.p99_cycles),
+                    r.dropped,
+                    if knee == Some(j) { "   <-- saturation knee" } else { "" }
+                ));
+            }
+            match knee {
+                Some(j) => out.push_str(&format!(
+                    "    knee at rho={} (completed < {:.0}% of offered)\n",
+                    self.scenarios[rows[j]].rho,
+                    KNEE_FRACTION * 100.0
+                )),
+                None => out.push_str("    no knee inside this rho ladder\n"),
+            }
+        }
+        out
+    }
+
+    /// The full machine-readable record (see module docs for the shape).
+    pub fn to_json(&self, reports: &[ServeReport]) -> Json {
+        let scenarios = self
+            .scenarios
+            .iter()
+            .zip(reports)
+            .map(|(s, r)| Json::obj(vec![("spec", s.to_json()), ("report", r.to_json())]))
+            .collect::<Vec<_>>();
+        let ladders = self
+            .ladders
+            .iter()
+            .map(|(label, rows)| {
+                let knee = self.knee(rows, reports).map(|j| rows[j]);
+                let row_objs = rows
+                    .iter()
+                    .map(|&i| ladder_row(&self.scenarios[i], &reports[i]))
+                    .collect::<Vec<_>>();
+                Json::obj(vec![
+                    ("label", Json::str(label.clone())),
+                    ("rows", Json::arr(row_objs)),
+                    (
+                        "knee",
+                        match knee {
+                            Some(i) => ladder_row(&self.scenarios[i], &reports[i]),
+                            None => Json::Null,
+                        },
+                    ),
+                ])
+            })
+            .collect::<Vec<_>>();
+        Json::obj(vec![
+            ("title", Json::str(self.title.clone())),
+            ("scenarios", Json::arr(scenarios)),
+            ("ladders", Json::arr(ladders)),
+            ("table", self.table(reports).to_json()),
+        ])
+    }
+}
+
+/// One rung of a ladder's throughput-vs-load curve.
+fn ladder_row(s: &ServeScenario, r: &ServeReport) -> Json {
+    Json::obj(vec![
+        ("rho", Json::num(s.rho)),
+        ("offered_rps", Json::num(r.offered_rps)),
+        ("completed_rps", Json::num(r.completed_rps)),
+        ("p50_cycles", Json::num(r.p50_cycles as f64)),
+        ("p99_cycles", Json::num(r.p99_cycles as f64)),
+        ("p999_cycles", Json::num(r.p999_cycles as f64)),
+        ("dropped", Json::num(r.dropped as f64)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_sweep(rhos: &[f64]) -> ServeSweep {
+        ServeSweep::grid(
+            &RunSpec::mergesort(8, 1 << 10, 4, 42),
+            &[MachineSpec::TilePro64],
+            &[ProtocolSpec::default()],
+            &[BatchPolicy::Immediate, BatchPolicy::Batch { max: 4, wait: 0 }],
+            ArrivalSpec::Poisson,
+            rhos,
+            24,
+            1 << 20,
+            false,
+        )
+    }
+
+    #[test]
+    fn grid_shape_and_ladder_indices() {
+        let sw = tiny_sweep(&[1.3, 0.5]);
+        assert_eq!(sw.scenarios.len(), 4, "2 policies x 2 rhos");
+        assert_eq!(sw.ladders.len(), 2);
+        for (_, rows) in &sw.ladders {
+            assert_eq!(rows.len(), 2);
+            // Rungs sorted ascending even though input was descending.
+            assert!(sw.scenarios[rows[0]].rho < sw.scenarios[rows[1]].rho);
+        }
+        sw.check().unwrap();
+    }
+
+    #[test]
+    fn overload_rung_is_the_knee() {
+        let sw = tiny_sweep(&[0.4, 1.6]);
+        let reports = sw.run(&BatchRunner::new(2));
+        for (_, rows) in &sw.ladders {
+            let knee = sw.knee(rows, &reports);
+            assert_eq!(
+                knee,
+                Some(1),
+                "rho=1.6 must saturate while rho=0.4 keeps up"
+            );
+        }
+        let j = sw.to_json(&reports);
+        let ladders = j.get("ladders").and_then(|l| l.as_arr()).unwrap();
+        for l in ladders {
+            assert!(
+                !matches!(l.get("knee"), Some(&Json::Null) | None),
+                "knee must be reported in JSON"
+            );
+        }
+        assert!(sw.report(&reports).contains("saturation knee"));
+    }
+
+    #[test]
+    fn non_default_protocol_turns_billing_on() {
+        let sw = ServeSweep::grid(
+            &RunSpec::mergesort(8, 1 << 10, 4, 42),
+            &[MachineSpec::TilePro64],
+            &[ProtocolSpec::default(), ProtocolSpec::parse("mesi").unwrap()],
+            &[BatchPolicy::Immediate],
+            ArrivalSpec::Poisson,
+            &[0.5],
+            8,
+            64,
+            false,
+        );
+        assert!(!sw.scenarios[0].run.link_contention, "default stays baseline");
+        assert!(sw.scenarios[1].run.link_contention);
+        assert!(sw.scenarios[1].run.coherence_links);
+        assert_ne!(sw.ladders[0].0, sw.ladders[1].0, "protocol in ladder label");
+    }
+
+    #[test]
+    fn reports_identical_across_pool_widths() {
+        let sw = tiny_sweep(&[0.6, 1.2]);
+        let a = sw.to_json(&sw.run(&BatchRunner::new(1))).encode();
+        let b = sw.to_json(&sw.run(&BatchRunner::new(4))).encode();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,132 @@
+//! Deterministic discrete-event scheduling primitives.
+//!
+//! The serve front-end ([`crate::serve`]) models a request pipeline —
+//! arrival generator, bounded queue, dispatcher, the chip simulator as the
+//! service stage — as components exchanging timestamped events. The only
+//! piece they need from the simulator layer is a *deterministic* event
+//! queue: a min-time priority queue whose tie-break is insertion order
+//! (FIFO among same-cycle events), so a serve scenario replays the exact
+//! same event sequence on every run and at every worker count.
+//!
+//! `std::collections::BinaryHeap` alone is not enough — it is a max-heap
+//! and makes no ordering promise for equal keys — so [`EventQueue`] wraps
+//! it with a reversed `(time, seq)` key. The payload type `E` needs no
+//! ordering of its own.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// A timestamped event queue: `pop` returns events in non-decreasing time
+/// order, with same-time events delivered in the order they were pushed.
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Entry<E>>,
+    seq: u64,
+}
+
+struct Entry<E> {
+    time: u64,
+    seq: u64,
+    ev: E,
+}
+
+// Ordering ignores the payload entirely: the heap key is (time, seq),
+// reversed so the std max-heap pops the *earliest* entry first.
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<E> Eq for Entry<E> {}
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        (other.time, other.seq).cmp(&(self.time, self.seq))
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> EventQueue<E> {
+        EventQueue {
+            heap: BinaryHeap::new(),
+            seq: 0,
+        }
+    }
+
+    /// Schedule `ev` at absolute cycle `time`.
+    pub fn at(&mut self, time: u64, ev: E) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Entry { time, seq, ev });
+    }
+
+    /// Earliest pending event, FIFO among ties.
+    pub fn pop(&mut self) -> Option<(u64, E)> {
+        self.heap.pop().map(|e| (e.time, e.ev))
+    }
+
+    /// Timestamp of the earliest pending event.
+    pub fn peek_time(&self) -> Option<u64> {
+        self.heap.peek().map(|e| e.time)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        EventQueue::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.at(30, "c");
+        q.at(10, "a");
+        q.at(20, "b");
+        assert_eq!(q.peek_time(), Some(10));
+        assert_eq!(q.pop(), Some((10, "a")));
+        assert_eq!(q.pop(), Some((20, "b")));
+        assert_eq!(q.pop(), Some((30, "c")));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn same_cycle_events_are_fifo() {
+        let mut q = EventQueue::new();
+        for i in 0..16 {
+            q.at(5, i);
+        }
+        for i in 0..16 {
+            assert_eq!(q.pop(), Some((5, i)), "tie-break must be push order");
+        }
+    }
+
+    #[test]
+    fn interleaved_push_pop_stays_ordered() {
+        let mut q = EventQueue::new();
+        q.at(4, 'x');
+        q.at(1, 'y');
+        assert_eq!(q.pop(), Some((1, 'y')));
+        // A later push at an earlier time than the pending entry wins.
+        q.at(2, 'z');
+        assert_eq!(q.pop(), Some((2, 'z')));
+        assert_eq!(q.pop(), Some((4, 'x')));
+        assert!(q.is_empty());
+        assert_eq!(q.len(), 0);
+    }
+}

@@ -1,10 +1,13 @@
-//! Cycle-approximate replay simulation: traces, the engine, and run stats.
+//! Cycle-approximate replay simulation: traces, the engine, run stats, and
+//! the discrete-event primitives the serve front-end schedules with.
 
+pub mod devent;
 pub mod engine;
 pub(crate) mod epoch;
 pub mod stats;
 pub mod trace;
 
+pub use devent::EventQueue;
 pub use engine::{plan_intra_workers, Engine, EngineConfig, EngineError};
 pub use stats::RunStats;
 pub use trace::{

@@ -1,0 +1,143 @@
+//! Property tests for the serve front-end (own driver — see util::prop).
+//!
+//! Each case simulates a full scenario, so case counts stay modest; the
+//! properties themselves are exact (no statistical tolerance):
+//!
+//! - percentiles are ordered: p50 ≤ p99 ≤ p999 ≤ max (nearest rank over
+//!   one sorted vector is monotone in p);
+//! - completed throughput never exceeds offered (both rates are empirical:
+//!   completed ≤ arrived and makespan ≥ last arrival);
+//! - latency is pointwise monotone in offered load for a fixed FIFO
+//!   scenario (same seed ⇒ same uniform draws ⇒ higher ρ rescales every
+//!   gap down ⇒ every request waits at least as long);
+//! - an empty-arrival scenario is an all-zero report, not a panic.
+
+use tilesim::coordinator::batch::RunSpec;
+use tilesim::serve::{ArrivalSpec, BatchPolicy, ServeScenario};
+use tilesim::util::prop::{self, assert_holds};
+use tilesim::util::rng::Rng;
+
+/// A random but valid scenario, small enough that one case is a handful of
+/// engine replays (service times are memoised per batch size).
+fn random_scenario(rng: &mut Rng) -> ServeScenario {
+    let threads = if rng.chance(0.5) { 2 } else { 4 };
+    let elems = if rng.chance(0.5) { 1 << 9 } else { 1 << 10 };
+    let policy = if rng.chance(0.5) {
+        BatchPolicy::Immediate
+    } else {
+        BatchPolicy::Batch {
+            max: rng.range(2, 8) as u32,
+            wait: rng.below(1 << 14),
+        }
+    };
+    let arrival = if rng.chance(0.5) {
+        ArrivalSpec::Poisson
+    } else {
+        ArrivalSpec::Bursty {
+            burst: rng.range(2, 8) as u32,
+        }
+    };
+    ServeScenario {
+        run: RunSpec::mergesort(8, elems, threads, rng.next_u64()),
+        arrival,
+        rho: 0.2 + rng.f64() * 2.3,
+        requests: rng.below(48),
+        queue_cap: 1 + rng.below(64) as usize,
+        policy,
+    }
+}
+
+#[test]
+fn prop_percentiles_are_ordered_and_requests_conserved() {
+    prop::check("serve percentile ordering", 12, |rng| {
+        let s = random_scenario(rng);
+        s.check().map_err(|e| e.to_string())?;
+        let r = s.simulate(1);
+        assert_holds(r.p50_cycles <= r.p99_cycles, "p50 > p99")?;
+        assert_holds(r.p99_cycles <= r.p999_cycles, "p99 > p999")?;
+        assert_holds(r.p999_cycles <= r.max_cycles, "p999 > max")?;
+        assert_holds(
+            r.completed + r.dropped == s.requests,
+            "every request must complete or drop",
+        )?;
+        assert_holds(
+            r.max_batch_served <= s.policy.max_batch() as u64,
+            "batch above the policy cap",
+        )
+    });
+}
+
+#[test]
+fn prop_completed_throughput_never_exceeds_offered() {
+    prop::check("serve throughput conservation", 12, |rng| {
+        let s = random_scenario(rng);
+        let r = s.simulate(1);
+        // Exact, not approximate: completed ≤ arrived, makespan ≥ last
+        // arrival, and f64 multiply/divide round monotonically.
+        assert_holds(
+            r.completed_rps <= r.offered_rps,
+            &format!("completed {} > offered {}", r.completed_rps, r.offered_rps),
+        )
+    });
+}
+
+#[test]
+fn prop_latency_is_monotone_in_offered_load() {
+    prop::check("serve load monotonicity", 10, |rng| {
+        // Fixed FIFO scenario (no drops, no batching) at two loads sharing
+        // a seed: the higher load's latency digest dominates rung by rung.
+        let lo = ServeScenario {
+            run: RunSpec::mergesort(8, 1 << 9, 4, rng.next_u64()),
+            arrival: if rng.chance(0.5) {
+                ArrivalSpec::Poisson
+            } else {
+                ArrivalSpec::Bursty { burst: 4 }
+            },
+            rho: 0.2 + rng.f64() * 1.2,
+            requests: 24,
+            queue_cap: 1 << 20,
+            policy: BatchPolicy::Immediate,
+        };
+        let mut hi = lo.clone();
+        hi.rho = lo.rho + 0.1 + rng.f64() * 1.5;
+        let rl = lo.simulate(1);
+        let rh = hi.simulate(1);
+        assert_holds(rl.dropped == 0 && rh.dropped == 0, "unbounded queue dropped")?;
+        for (a, b, what) in [
+            (rl.p50_cycles, rh.p50_cycles, "p50"),
+            (rl.p99_cycles, rh.p99_cycles, "p99"),
+            (rl.p999_cycles, rh.p999_cycles, "p999"),
+            (rl.max_cycles, rh.max_cycles, "max"),
+        ] {
+            assert_holds(
+                a <= b,
+                &format!("{what} fell from {a} to {b} as rho rose {} -> {}", lo.rho, hi.rho),
+            )?;
+        }
+        assert_holds(
+            rl.mean_cycles <= rh.mean_cycles,
+            "mean latency fell under higher load",
+        )
+    });
+}
+
+#[test]
+fn prop_empty_arrivals_yield_all_zero_report() {
+    prop::check("serve empty scenario", 32, |rng| {
+        let mut s = random_scenario(rng);
+        s.requests = 0;
+        let r = s.simulate(1);
+        assert_holds(
+            r.completed == 0
+                && r.dropped == 0
+                && r.batches == 0
+                && r.makespan_cycles == 0
+                && r.p50_cycles == 0
+                && r.max_cycles == 0
+                && r.mean_cycles == 0.0
+                && r.offered_rps == 0.0
+                && r.completed_rps == 0.0,
+            "empty scenario must be the zero report",
+        )
+    });
+}

@@ -1,0 +1,107 @@
+//! The serve front-end's core contract (same shape as
+//! `batch_determinism.rs` for the sweep layer): an identical scenario grid
+//! + seed must yield a byte-identical JSON record at `--jobs 1` and
+//! `--jobs N`, at any `--intra-jobs`, and across repeated runs — and the
+//! record must actually carry the latency/throughput/knee content the
+//! acceptance bar names.
+
+use tilesim::coherence::ProtocolSpec;
+use tilesim::coordinator::batch::{BatchRunner, RunSpec};
+use tilesim::coordinator::experiment;
+use tilesim::serve::{ArrivalGen, ArrivalSpec, BatchPolicy, ServeSweep};
+use tilesim::util::json::{parse, Json};
+
+const SEED: u64 = experiment::DEFAULT_SEED;
+
+fn small_sweep() -> ServeSweep {
+    ServeSweep::grid(
+        &RunSpec::mergesort(8, 1 << 10, 4, SEED),
+        &experiment::serve_machines(),
+        &[ProtocolSpec::default()],
+        &[BatchPolicy::Immediate, BatchPolicy::Batch { max: 4, wait: 0 }],
+        ArrivalSpec::Poisson,
+        &[0.6, 1.4],
+        32,
+        1 << 10,
+        false,
+    )
+}
+
+#[test]
+fn serve_record_identical_across_jobs() {
+    let sweep = small_sweep();
+    let serial = sweep.to_json(&sweep.run(&BatchRunner::new(1))).encode();
+    for jobs in [2usize, 4, 8] {
+        let parallel = sweep.to_json(&sweep.run(&BatchRunner::new(jobs))).encode();
+        assert_eq!(serial, parallel, "jobs={jobs} changed the serve record");
+    }
+}
+
+#[test]
+fn serve_record_identical_across_intra_jobs() {
+    let sweep = small_sweep();
+    let base = sweep
+        .to_json(&sweep.run(&BatchRunner::new(1)))
+        .encode();
+    let intra = sweep
+        .to_json(&sweep.run(&BatchRunner::new(1).with_intra_jobs(4)))
+        .encode();
+    assert_eq!(base, intra, "intra-run workers changed the serve record");
+}
+
+#[test]
+fn repeated_serve_runs_are_bit_identical() {
+    let sweep = small_sweep();
+    let runner = BatchRunner::new(4);
+    let a = sweep.to_json(&sweep.run(&runner)).encode();
+    let b = sweep.to_json(&sweep.run(&runner)).encode();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn arrival_streams_are_reproducible_at_integration_level() {
+    // The generator is the only stochastic component; its event sequence
+    // must be a pure function of (spec, seed) — repeated construction
+    // included.
+    for spec in [ArrivalSpec::Poisson, ArrivalSpec::Bursty { burst: 4 }] {
+        let a = ArrivalGen::arrival_times(spec, 700.0, SEED, 4096);
+        let b = ArrivalGen::arrival_times(spec, 700.0, SEED, 4096);
+        assert_eq!(a, b, "{}", spec.label());
+    }
+}
+
+#[test]
+fn record_round_trips_and_carries_the_acceptance_content() {
+    // The emitted record must parse back (it is what CI's jq smoke reads)
+    // and contain: percentile latencies, throughput-vs-load rows, and a
+    // detected saturation knee for the tilepro64 ladder (rho=1.4 cannot
+    // keep up on a single-server queue).
+    let sweep = small_sweep();
+    let record = sweep.to_json(&sweep.run(&BatchRunner::new(2)));
+    let parsed = parse(&record.encode()).expect("record must round-trip");
+    let scenarios = parsed.get("scenarios").and_then(|s| s.as_arr()).unwrap();
+    assert_eq!(scenarios.len(), 4);
+    for s in scenarios {
+        let rep = s.get("report").unwrap();
+        for key in ["p50_cycles", "p99_cycles", "p999_cycles", "offered_rps", "completed_rps"] {
+            assert!(rep.get(key).is_some(), "report missing {key}");
+        }
+    }
+    let ladders = parsed.get("ladders").and_then(|l| l.as_arr()).unwrap();
+    assert_eq!(ladders.len(), 2);
+    for l in ladders {
+        let label = l.get("label").and_then(|x| x.as_str()).unwrap();
+        assert!(label.starts_with("tilepro64/"), "{label}");
+        assert_eq!(l.get("rows").and_then(|r| r.as_arr()).unwrap().len(), 2);
+        assert!(
+            !matches!(l.get("knee"), Some(&Json::Null) | None),
+            "ladder {label} must detect its knee at rho=1.4"
+        );
+        let knee_rho = l
+            .get("knee")
+            .and_then(|k| k.get("rho"))
+            .and_then(|r| r.as_f64())
+            .unwrap();
+        assert_eq!(knee_rho, 1.4);
+    }
+}
