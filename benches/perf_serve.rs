@@ -14,12 +14,12 @@
 //!      TILESIM_SERVE_REQUESTS (default 400),
 //!      TILESIM_BENCH_SERVE_OUT (default BENCH_serve.json).
 
-use tilesim::arch::MachineSpec;
+use tilesim::arch::{MachineSpec, PartitionSpec};
 use tilesim::coherence::ProtocolSpec;
 use tilesim::coordinator::batch::{BatchRunner, RunSpec};
 use tilesim::coordinator::experiment;
 use tilesim::harness::time_it;
-use tilesim::serve::{ArrivalSpec, BatchPolicy, ServeScenario, ServeSweep};
+use tilesim::serve::{Admission, ArrivalSpec, BatchPolicy, ServeScenario, ServeSweep, SizeMix};
 use tilesim::util::json::Json;
 
 fn env_u64(name: &str, default: u64) -> u64 {
@@ -33,14 +33,14 @@ fn main() {
 
     // --- one scenario, immediate policy: the event-loop + service-replay
     // cost of a single ladder rung near saturation.
-    let rung = ServeScenario {
-        run: template.clone(),
-        arrival: ArrivalSpec::Poisson,
-        rho: 1.0,
+    let rung = ServeScenario::new(
+        template.clone(),
+        ArrivalSpec::Poisson,
+        1.0,
         requests,
-        queue_cap: 1 << 16,
-        policy: BatchPolicy::Immediate,
-    };
+        1 << 16,
+        BatchPolicy::Immediate,
+    );
     let r = rung.simulate(1);
     assert_eq!(r.completed + r.dropped, requests, "serve bench sanity");
     let t_rung = time_it(1, 3, || {
@@ -71,6 +71,41 @@ fn main() {
         rb.completed as f64 / rb.batches.max(1) as f64
     );
 
+    // --- spatial multi-server scaling: the partitioned dispatcher vs the
+    // whole chip under overload. The ratios are *simulated* completed
+    // req/s (the capacity claim), plus the wall cost of the partitioned
+    // event loop itself. At rho=2 a 4-way split is arrival-bound — its
+    // ratio tracks the 2x offered rate from below; at rho=4 both sides
+    // are capacity-bound and the >= 2x capacity ratio shows directly.
+    let partitioned = |spec: &str, rho: f64| {
+        ServeScenario::new(
+            template.clone(),
+            ArrivalSpec::Poisson,
+            rho,
+            requests,
+            1 << 16,
+            BatchPolicy::Immediate,
+        )
+        .with_partitions(PartitionSpec::parse(spec).expect("valid partition spec"))
+    };
+    let quad_rung = partitioned("4", 2.0);
+    let whole2 = partitioned("whole", 2.0).simulate(1);
+    let half2 = partitioned("2", 2.0).simulate(1);
+    let quad2 = quad_rung.simulate(1);
+    let whole4 = partitioned("whole", 4.0).simulate(1);
+    let quad4 = partitioned("4", 4.0).simulate(1);
+    let t_quad = time_it(1, 3, || {
+        std::hint::black_box(quad_rung.simulate(1).makespan_cycles);
+    });
+    println!("{}", t_quad.summary("serve: one rung, 4 partitions, immediate, rho=2"));
+    println!(
+        "serve partitions: completed req/s vs whole chip — 2-way {:.2}x and 4-way {:.2}x \
+         at rho=2 (arrival-bound), 4-way {:.2}x at rho=4 (capacity-bound)",
+        half2.completed_rps / whole2.completed_rps,
+        quad2.completed_rps / whole2.completed_rps,
+        quad4.completed_rps / whole4.completed_rps
+    );
+
     // --- the default `repro batch serve` grid over the pool: 1 job vs all
     // cores. Scenario count = ladders x rungs; the pool shards scenarios,
     // so this is the grid-scale number the serve PRs move.
@@ -84,6 +119,9 @@ fn main() {
         requests,
         1 << 16,
         false,
+        &PartitionSpec::Whole,
+        Admission::Fifo,
+        &SizeMix::single(elems),
     );
     let n = sweep.scenarios.len();
     let t_serial = time_it(0, 2, || {
@@ -126,6 +164,23 @@ fn main() {
         (
             "batched_requests_per_dispatch",
             Json::num(rb.completed as f64 / rb.batches.max(1) as f64),
+        ),
+        ("partition_rung_min_s", Json::num(t_quad.min_s)),
+        (
+            "partition_requests_per_sec",
+            Json::num(requests as f64 / t_quad.min_s),
+        ),
+        (
+            "partition_ratio_2way_rho2",
+            Json::num(half2.completed_rps / whole2.completed_rps),
+        ),
+        (
+            "partition_ratio_4way_rho2",
+            Json::num(quad2.completed_rps / whole2.completed_rps),
+        ),
+        (
+            "partition_ratio_4way_rho4",
+            Json::num(quad4.completed_rps / whole4.completed_rps),
         ),
         ("grid_scenarios", Json::num(n as f64)),
         ("grid_serial_min_s", Json::num(t_serial.min_s)),

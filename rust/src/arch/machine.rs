@@ -278,6 +278,41 @@ impl Machine {
         })
     }
 
+    /// A `w`×`h` sub-grid *view* of this machine, the replay target of one
+    /// spatial partition ([`crate::arch::PartitionSpec`]): the partition's
+    /// dimensions, this machine's latency/geometry parameter set (clock
+    /// included — a quadrant of a nuca256 keeps nuca256 physics, not the
+    /// `Custom`-machine TILEPro defaults), a proportional share of this
+    /// machine's controllers placed `EdgesEven` (the partition's own
+    /// homing/memory domain), and a uniform fabric at the scalar
+    /// `link_service` (partition replays never carry a heterogeneous
+    /// fabric). The view is a pure function of `(w, h)` and this machine —
+    /// positions don't enter — which is what lets the serve dispatcher
+    /// memoise service times per partition *shape*. The full-grid view is
+    /// this machine itself, so a whole-chip partition replays
+    /// byte-identically to an unpartitioned run.
+    pub fn subgrid_view(&self, w: u32, h: u32) -> Result<Machine, MachineError> {
+        if (w, h) == (self.grid_w, self.grid_h) {
+            return Ok(self.clone());
+        }
+        let share = self.num_controllers() as u64 * (w * h) as u64;
+        let ctrls = (share.div_ceil(self.num_tiles() as u64) as u32)
+            .clamp(1, Machine::controller_capacity(w, h));
+        Machine::validate(w, h, ctrls)?;
+        let cs = CtrlPlacement::EdgesEven
+            .controllers(w, h, ctrls)
+            .expect("validated above: EdgesEven capacity == controller_capacity");
+        Ok(Machine {
+            spec: MachineSpec::Custom { w, h, ctrls },
+            grid_w: w,
+            grid_h: h,
+            controllers: cs,
+            fabric: Fabric::uniform((4 * w * h) as usize, self.params.link_service),
+            params: self.params.clone(),
+            geometry: self.geometry,
+        })
+    }
+
     /// Re-derive this machine with a [`FabricSpec`] applied: the
     /// controller list is rebuilt when the spec names a placement (named
     /// strategies keep this machine's controller count, so striping stays

@@ -7,15 +7,19 @@
 //! tile/coordinate primitives plus the TILEPro64 preset's constants (which
 //! survive only as that preset's values); [`params`] holds the latency and
 //! capacity parameter sets; [`fabric`] holds the per-link service tables,
-//! controller-placement strategies, and the `FabricSpec` parser.
+//! controller-placement strategies, and the `FabricSpec` parser;
+//! [`partition`] carves a machine into disjoint rectangular sub-grids
+//! (the spatial multi-server serving domains).
 
 pub mod fabric;
 pub mod machine;
 pub mod params;
+pub mod partition;
 pub mod topology;
 
 pub use fabric::{CtrlPlacement, Fabric, FabricError, FabricSpec, LinkRegion, LinkRule};
 pub use machine::{Machine, MachineError, MachineSpec};
+pub use partition::{Partition, PartitionError, PartitionSpec, Rect};
 pub use params::{CacheGeometry, HitLevel, LatencyParams, CLOCK_HZ, LINE_BYTES, PAGE_BYTES};
 pub use topology::{
     controllers, hops, nearest_controller, Controller, Coord, Dir, TileId, GRID_H, GRID_W,

@@ -1,0 +1,563 @@
+//! Spatial partitioning: carve a [`Machine`] into disjoint rectangular
+//! sub-grids that serve concurrent requests without sharing anything.
+//!
+//! The paper's localisation argument is that speed-up comes from keeping a
+//! computation's pages homed on nearby tiles. A [`Partition`] is the
+//! serving-layer expression of that: each in-flight batch replays on its
+//! own rectangle, and because homing, page table, and directory are
+//! constructed over the partition's *view* (a [`Machine`] with the
+//! partition's dimensions and its own controller set), every page of a
+//! request homes inside the partition's tiles **by construction** — there
+//! is no cross-request directory sharing or link interference to model
+//! away, the address spaces simply never meet.
+//!
+//! Two geometric facts make the local-coordinate replay exact in global
+//! coordinates:
+//!
+//! 1. **Rectangles are XY-closed.** XY dimension-order routing between two
+//!    tiles of an axis-aligned rectangle only visits tiles whose x lies
+//!    between the endpoints' x and whose y lies between the endpoints' y —
+//!    all inside the rectangle. No route of a partition-confined replay
+//!    ever leaves the partition.
+//! 2. **XY routing is translation-invariant.** Shifting both endpoints by
+//!    `(x0, y0)` shifts every tile of the route by `(x0, y0)`. So a link
+//!    billed at local `(x, y, dir)` is exactly the parent link at
+//!    `(x + x0, y + y0, dir)` — [`Partition::global_link_index`] is that
+//!    translation, and per-partition link maps compose onto the parent
+//!    grid without double counting (partitions are disjoint).
+//!
+//! A corollary the serve dispatcher leans on: the view is a pure function
+//! of the partition's *shape* (dims + the parent's parameter set), not its
+//! position, so two same-shaped partitions have identical service times
+//! and replays memoise per (shape, batch size) — a P-way ladder costs at
+//! most `distinct_shapes x max_batch` engine replays.
+
+use super::machine::{Machine, MachineError};
+use super::topology::{Coord, Dir, TileId};
+
+/// An axis-aligned tile rectangle in parent-grid coordinates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Rect {
+    pub x0: u32,
+    pub y0: u32,
+    pub w: u32,
+    pub h: u32,
+}
+
+impl Rect {
+    fn contains(&self, c: Coord) -> bool {
+        c.x >= self.x0 && c.x < self.x0 + self.w && c.y >= self.y0 && c.y < self.y0 + self.h
+    }
+
+    fn overlaps(&self, o: &Rect) -> bool {
+        self.x0 < o.x0 + o.w && o.x0 < self.x0 + self.w && self.y0 < o.y0 + o.h
+            && o.y0 < self.y0 + self.h
+    }
+
+    fn label(&self) -> String {
+        format!("{},{},{}x{}", self.x0, self.y0, self.w, self.h)
+    }
+}
+
+/// How to carve a machine into partitions (`--partitions`).
+#[derive(Clone, Debug, PartialEq, Eq, Default)]
+pub enum PartitionSpec {
+    /// One partition covering the whole chip — the single-server baseline.
+    #[default]
+    Whole,
+    /// `N` partitions in the axis-aligned grid of N cells closest to
+    /// square that divides the machine (`--partitions 4` on 8x8 = `2x2`).
+    Auto(u32),
+    /// `PXxPY` cells: PX columns of partitions by PY rows.
+    Grid { px: u32, py: u32 },
+    /// `rowsN`: N full-width horizontal bands.
+    Rows(u32),
+    /// `colsN`: N full-height vertical bands.
+    Cols(u32),
+    /// `explicit:x,y,WxH;...` — hand-placed disjoint rectangles (need not
+    /// cover the chip; uncovered tiles simply serve nothing).
+    Explicit(Vec<Rect>),
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PartitionError {
+    BadSpec(String),
+    /// The spec does not divide the machine's grid evenly.
+    DoesNotDivide { spec: String, w: u32, h: u32 },
+    /// An explicit rectangle leaves the grid or has zero area.
+    OutOfBounds { rect: String, w: u32, h: u32 },
+    /// Two explicit rectangles share a tile.
+    Overlap { a: String, b: String },
+    /// The carved sub-grid is not a valid machine (e.g. zero tiles).
+    BadView(MachineError),
+}
+
+impl std::fmt::Display for PartitionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PartitionError::BadSpec(s) => write!(
+                f,
+                "bad partition spec '{s}' (want whole | N | PXxPY | rowsN | colsN | \
+                 explicit:x,y,WxH;...)"
+            ),
+            PartitionError::DoesNotDivide { spec, w, h } => {
+                write!(f, "partition spec '{spec}' does not divide a {w}x{h} grid evenly")
+            }
+            PartitionError::OutOfBounds { rect, w, h } => {
+                write!(f, "partition rect '{rect}' leaves the {w}x{h} grid (or is empty)")
+            }
+            PartitionError::Overlap { a, b } => {
+                write!(f, "partition rects '{a}' and '{b}' overlap: partitions must be disjoint")
+            }
+            PartitionError::BadView(e) => write!(f, "partition view: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for PartitionError {}
+
+impl PartitionSpec {
+    /// Parse a `--partitions` argument. Labels round-trip:
+    ///
+    /// ```
+    /// use tilesim::arch::PartitionSpec;
+    ///
+    /// for s in ["whole", "4", "2x2", "rows4", "cols2", "explicit:0,0,4x4;4,0,4x4"] {
+    ///     assert_eq!(PartitionSpec::parse(s).unwrap().label(), s);
+    /// }
+    /// ```
+    pub fn parse(s: &str) -> Result<PartitionSpec, PartitionError> {
+        let err = || PartitionError::BadSpec(s.to_string());
+        if s == "whole" {
+            return Ok(PartitionSpec::Whole);
+        }
+        if let Some(n) = s.strip_prefix("rows") {
+            let n = n.parse::<u32>().map_err(|_| err())?;
+            return if n >= 1 { Ok(PartitionSpec::Rows(n)) } else { Err(err()) };
+        }
+        if let Some(n) = s.strip_prefix("cols") {
+            let n = n.parse::<u32>().map_err(|_| err())?;
+            return if n >= 1 { Ok(PartitionSpec::Cols(n)) } else { Err(err()) };
+        }
+        if let Some(rects) = s.strip_prefix("explicit:") {
+            let rects = rects
+                .split(';')
+                .map(|r| {
+                    // x,y,WxH
+                    let mut parts = r.splitn(3, ',');
+                    let x0 = parts.next().and_then(|v| v.parse().ok())?;
+                    let y0 = parts.next().and_then(|v| v.parse().ok())?;
+                    let (w, h) = parts.next()?.split_once('x')?;
+                    let (w, h) = (w.parse().ok()?, h.parse().ok()?);
+                    Some(Rect { x0, y0, w, h })
+                })
+                .collect::<Option<Vec<_>>>()
+                .ok_or_else(err)?;
+            return if rects.is_empty() { Err(err()) } else { Ok(PartitionSpec::Explicit(rects)) };
+        }
+        if let Some((px, py)) = s.split_once('x') {
+            let (px, py) = (
+                px.parse::<u32>().map_err(|_| err())?,
+                py.parse::<u32>().map_err(|_| err())?,
+            );
+            return if px >= 1 && py >= 1 {
+                Ok(PartitionSpec::Grid { px, py })
+            } else {
+                Err(err())
+            };
+        }
+        match s.parse::<u32>() {
+            Ok(n) if n >= 1 => Ok(PartitionSpec::Auto(n)),
+            _ => Err(err()),
+        }
+    }
+
+    /// Stable label (round-trips through [`parse`](Self::parse)).
+    pub fn label(&self) -> String {
+        match self {
+            PartitionSpec::Whole => "whole".into(),
+            PartitionSpec::Auto(n) => format!("{n}"),
+            PartitionSpec::Grid { px, py } => format!("{px}x{py}"),
+            PartitionSpec::Rows(n) => format!("rows{n}"),
+            PartitionSpec::Cols(n) => format!("cols{n}"),
+            PartitionSpec::Explicit(rects) => format!(
+                "explicit:{}",
+                rects.iter().map(Rect::label).collect::<Vec<_>>().join(";")
+            ),
+        }
+    }
+
+    /// Whether this spec carves exactly one partition covering the whole
+    /// chip of *any* machine — the configurations whose serve records must
+    /// stay byte-identical to the single-server driver's.
+    pub fn is_whole(&self) -> bool {
+        matches!(
+            self,
+            PartitionSpec::Whole
+                | PartitionSpec::Auto(1)
+                | PartitionSpec::Grid { px: 1, py: 1 }
+                | PartitionSpec::Rows(1)
+                | PartitionSpec::Cols(1)
+        )
+    }
+
+    /// Carve `machine` into disjoint partitions, indexed row-major over
+    /// the carving grid (explicit rects keep their written order). Every
+    /// grid-style spec must divide the machine evenly.
+    pub fn carve(&self, machine: &Machine) -> Result<Vec<Partition>, PartitionError> {
+        let (w, h) = (machine.grid_w(), machine.grid_h());
+        let grid = |px: u32, py: u32| -> Result<Vec<Partition>, PartitionError> {
+            if px == 0 || py == 0 || w % px != 0 || h % py != 0 {
+                return Err(PartitionError::DoesNotDivide { spec: self.label(), w, h });
+            }
+            let (pw, ph) = (w / px, h / py);
+            Ok((0..py)
+                .flat_map(|cy| (0..px).map(move |cx| (cx, cy)))
+                .enumerate()
+                .map(|(index, (cx, cy))| Partition {
+                    index,
+                    rect: Rect { x0: cx * pw, y0: cy * ph, w: pw, h: ph },
+                })
+                .collect())
+        };
+        match self {
+            PartitionSpec::Whole => grid(1, 1),
+            PartitionSpec::Grid { px, py } => grid(*px, *py),
+            PartitionSpec::Rows(n) => grid(1, *n),
+            PartitionSpec::Cols(n) => grid(*n, 1),
+            PartitionSpec::Auto(n) => {
+                // Squarest ordered factorisation (px, py) of n that divides
+                // the grid: minimise the cell aspect gap |w/px - h/py|,
+                // tie-break on more columns — fully deterministic.
+                let mut best: Option<(u32, u32)> = None;
+                for px in 1..=*n {
+                    if n % px != 0 {
+                        continue;
+                    }
+                    let py = n / px;
+                    if w % px != 0 || h % py != 0 {
+                        continue;
+                    }
+                    let gap = (w / px).abs_diff(h / py);
+                    if best
+                        .map(|(bx, by)| {
+                            let bgap = (w / bx).abs_diff(h / by);
+                            (gap, u32::MAX - px) < (bgap, u32::MAX - bx)
+                        })
+                        .unwrap_or(true)
+                    {
+                        best = Some((px, py));
+                    }
+                }
+                let (px, py) = best
+                    .ok_or(PartitionError::DoesNotDivide { spec: self.label(), w, h })?;
+                grid(px, py)
+            }
+            PartitionSpec::Explicit(rects) => {
+                for r in rects {
+                    if r.w == 0
+                        || r.h == 0
+                        || r.x0 + r.w > w
+                        || r.y0 + r.h > h
+                    {
+                        return Err(PartitionError::OutOfBounds { rect: r.label(), w, h });
+                    }
+                }
+                for (i, a) in rects.iter().enumerate() {
+                    for b in &rects[i + 1..] {
+                        if a.overlaps(b) {
+                            return Err(PartitionError::Overlap {
+                                a: a.label(),
+                                b: b.label(),
+                            });
+                        }
+                    }
+                }
+                Ok(rects
+                    .iter()
+                    .enumerate()
+                    .map(|(index, &rect)| Partition { index, rect })
+                    .collect())
+            }
+        }
+    }
+}
+
+/// One carved sub-grid of a parent machine: a server of the spatial
+/// multi-server dispatcher. Coordinates are parent-grid; the replay view
+/// ([`Partition::view`]) is local (its tile 0 is this rect's corner).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Partition {
+    /// Dispatch index (the deterministic round-robin/tie-break key).
+    pub index: usize,
+    pub rect: Rect,
+}
+
+impl Partition {
+    #[inline]
+    pub fn width(&self) -> u32 {
+        self.rect.w
+    }
+
+    #[inline]
+    pub fn height(&self) -> u32 {
+        self.rect.h
+    }
+
+    #[inline]
+    pub fn num_tiles(&self) -> u32 {
+        self.rect.w * self.rect.h
+    }
+
+    /// The memoisation key: same-shaped partitions of the same parent have
+    /// identical views, hence identical service times.
+    #[inline]
+    pub fn shape(&self) -> (u32, u32) {
+        (self.rect.w, self.rect.h)
+    }
+
+    /// Server label for reports, e.g. `p0:4x4@0,0`.
+    pub fn label(&self) -> String {
+        format!(
+            "p{}:{}x{}@{},{}",
+            self.index, self.rect.w, self.rect.h, self.rect.x0, self.rect.y0
+        )
+    }
+
+    /// Whether a parent-grid tile lies inside this partition.
+    pub fn contains(&self, parent: &Machine, t: TileId) -> bool {
+        self.rect.contains(parent.coord(t))
+    }
+
+    /// Translate a view-local tile to the parent-grid tile it models.
+    #[inline]
+    pub fn global_tile(&self, parent: &Machine, local: TileId) -> TileId {
+        let x = local.0 % self.rect.w;
+        let y = local.0 / self.rect.w;
+        parent.tile_at(Coord { x: x + self.rect.x0, y: y + self.rect.y0 })
+    }
+
+    /// Parent-grid tiles of this partition, in view-local id order.
+    pub fn tiles<'a>(&'a self, parent: &'a Machine) -> impl Iterator<Item = TileId> + 'a {
+        (0..self.num_tiles()).map(move |i| self.global_tile(parent, TileId(i)))
+    }
+
+    /// Translate a view-local directed-link index to the parent-grid link
+    /// it models — the XY translation-invariance of the module docs made
+    /// concrete. Composing per-partition link maps through this is exact:
+    /// disjoint partitions never map onto the same parent link.
+    pub fn global_link_index(&self, parent: &Machine, local_index: usize) -> usize {
+        let n = self.num_tiles() as usize;
+        let dir = Dir::ALL[local_index / n];
+        let local = TileId((local_index % n) as u32);
+        parent.link_index(self.global_tile(parent, local), dir)
+    }
+
+    /// The partition's replay view: a [`Machine`] with this rect's
+    /// dimensions, the parent's latency/geometry/clock, a proportional
+    /// share of the parent's controllers (its own homing/memory domain),
+    /// and a uniform fabric at the parent's scalar link service. A
+    /// whole-chip partition's view *is* the parent (clone), so `P = 1`
+    /// collapses to the single-server driver exactly.
+    pub fn view(&self, parent: &Machine) -> Result<Machine, PartitionError> {
+        parent
+            .subgrid_view(self.rect.w, self.rect.h)
+            .map_err(PartitionError::BadView)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m8x8() -> Machine {
+        Machine::tilepro64()
+    }
+
+    #[test]
+    fn spec_parse_label_round_trips() {
+        for s in [
+            "whole",
+            "2",
+            "4",
+            "2x2",
+            "4x1",
+            "rows4",
+            "cols2",
+            "explicit:0,0,4x4;4,0,4x4",
+            "explicit:1,2,3x4",
+        ] {
+            let spec = PartitionSpec::parse(s).unwrap();
+            assert_eq!(spec.label(), s);
+            assert_eq!(PartitionSpec::parse(&spec.label()).unwrap(), spec);
+        }
+        for s in [
+            "", "0", "rows0", "cols", "2x0", "0x2", "axb", "explicit:", "explicit:0,0",
+            "explicit:0,0,4", "explicit:0,0,4x", "wholes",
+        ] {
+            assert!(PartitionSpec::parse(s).is_err(), "'{s}' must not parse");
+        }
+    }
+
+    #[test]
+    fn whole_like_specs_are_detected() {
+        for s in ["whole", "1", "1x1", "rows1", "cols1"] {
+            assert!(PartitionSpec::parse(s).unwrap().is_whole(), "{s}");
+        }
+        for s in ["2", "2x1", "rows2", "explicit:0,0,8x8"] {
+            assert!(!PartitionSpec::parse(s).unwrap().is_whole(), "{s}");
+        }
+    }
+
+    #[test]
+    fn grid_carve_covers_disjointly() {
+        let m = m8x8();
+        for spec in ["2x2", "4", "rows4", "cols2", "8", "4x2"] {
+            let parts = PartitionSpec::parse(spec).unwrap().carve(&m).unwrap();
+            let mut seen = std::collections::HashSet::new();
+            for p in &parts {
+                for t in p.tiles(&m) {
+                    assert!(seen.insert(t), "{spec}: tile {t:?} in two partitions");
+                    assert!(p.contains(&m, t));
+                }
+            }
+            assert_eq!(seen.len(), 64, "{spec}: grid carves must cover the chip");
+            // Indices are dense and ordered.
+            for (i, p) in parts.iter().enumerate() {
+                assert_eq!(p.index, i);
+            }
+        }
+    }
+
+    #[test]
+    fn auto_picks_the_squarest_division() {
+        let m = m8x8();
+        let parts = PartitionSpec::Auto(4).carve(&m).unwrap();
+        assert_eq!(parts.len(), 4);
+        assert_eq!(parts[0].shape(), (4, 4), "4 on 8x8 must carve 2x2 quadrants");
+        let parts = PartitionSpec::Auto(2).carve(&m).unwrap();
+        assert_eq!(parts[0].shape(), (4, 8), "2 on 8x8 splits columns first");
+        // A grid the count cannot divide is an error, not a silent remainder.
+        let m5 = Machine::custom(5, 7, 2).unwrap();
+        assert!(PartitionSpec::Auto(4).carve(&m5).is_err());
+        assert!(PartitionSpec::parse("3x3").unwrap().carve(&m).is_err());
+    }
+
+    #[test]
+    fn explicit_rects_validate_bounds_and_overlap() {
+        let m = m8x8();
+        let ok = PartitionSpec::parse("explicit:0,0,4x8;4,0,4x4").unwrap();
+        let parts = ok.carve(&m).unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[1].rect, Rect { x0: 4, y0: 0, w: 4, h: 4 });
+        assert!(matches!(
+            PartitionSpec::parse("explicit:6,0,4x4").unwrap().carve(&m),
+            Err(PartitionError::OutOfBounds { .. })
+        ));
+        assert!(matches!(
+            PartitionSpec::parse("explicit:0,0,4x4;3,3,2x2").unwrap().carve(&m),
+            Err(PartitionError::Overlap { .. })
+        ));
+    }
+
+    #[test]
+    fn tile_translation_round_trips() {
+        let m = m8x8();
+        let parts = PartitionSpec::parse("2x2").unwrap().carve(&m).unwrap();
+        let p = &parts[3]; // bottom-right quadrant
+        assert_eq!(p.rect, Rect { x0: 4, y0: 4, w: 4, h: 4 });
+        // Local tile 0 is the rect corner; local row-major order holds.
+        assert_eq!(p.global_tile(&m, TileId(0)), m.tile_at(Coord { x: 4, y: 4 }));
+        assert_eq!(p.global_tile(&m, TileId(5)), m.tile_at(Coord { x: 5, y: 5 }));
+        let view = p.view(&m).unwrap();
+        for local in view.tiles() {
+            let g = p.global_tile(&m, local);
+            assert!(p.contains(&m, g));
+            // Coordinates translate by the rect origin.
+            let lc = view.coord(local);
+            let gc = m.coord(g);
+            assert_eq!((gc.x, gc.y), (lc.x + 4, lc.y + 4));
+        }
+    }
+
+    #[test]
+    fn link_translation_preserves_direction_and_stays_inside() {
+        let m = m8x8();
+        let parts = PartitionSpec::parse("4").unwrap().carve(&m).unwrap();
+        for p in &parts {
+            let view = p.view(&m).unwrap();
+            let mut seen = std::collections::HashSet::new();
+            for local in view.tiles() {
+                for dir in Dir::ALL {
+                    let ix = p.global_link_index(&m, view.link_index(local, dir));
+                    assert_eq!(ix, m.link_index(p.global_tile(&m, local), dir));
+                    assert!(seen.insert(ix), "local links map to distinct parent links");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn xy_routes_inside_a_rect_translate_exactly() {
+        // The invariance the global-coordinate billing story rests on:
+        // route the view, route the parent between the translated
+        // endpoints — same links modulo translation.
+        use crate::noc::routing::xy_path;
+        let m = m8x8();
+        let parts = PartitionSpec::parse("2x2").unwrap().carve(&m).unwrap();
+        let p = &parts[2];
+        let view = p.view(&m).unwrap();
+        for a in view.tiles() {
+            for b in [TileId(0), TileId(5), TileId(15)] {
+                let local: Vec<TileId> = xy_path(&view, a, b);
+                let global: Vec<TileId> =
+                    xy_path(&m, p.global_tile(&m, a), p.global_tile(&m, b));
+                assert_eq!(local.len(), global.len());
+                for (l, g) in local.iter().zip(&global) {
+                    assert_eq!(p.global_tile(&m, *l), *g);
+                    assert!(p.contains(&m, *g), "XY route left the rectangle");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn whole_partition_view_is_the_parent() {
+        let m = m8x8();
+        let parts = PartitionSpec::Whole.carve(&m).unwrap();
+        assert_eq!(parts.len(), 1);
+        let v = parts[0].view(&m).unwrap();
+        assert_eq!(v.spec(), m.spec());
+        assert_eq!(v.controllers(), m.controllers());
+        assert_eq!(v.params.clock_hz, m.params.clock_hz);
+    }
+
+    #[test]
+    fn views_inherit_parent_params_and_scale_controllers() {
+        let m = Machine::nuca256(); // non-TILEPro params: inheritance visible
+        let parts = PartitionSpec::parse("2x2").unwrap().carve(&m).unwrap();
+        for p in &parts {
+            let v = p.view(&m).unwrap();
+            assert_eq!((v.grid_w(), v.grid_h()), (8, 8));
+            // nuca256 params, not the Custom-machine TILEPro defaults.
+            assert_eq!(v.params.clock_hz, m.params.clock_hz);
+            assert_eq!(v.params.ddr, m.params.ddr);
+            // 8 controllers over 4 equal partitions: 2 each.
+            assert_eq!(v.num_controllers(), 2);
+            for c in v.controllers() {
+                assert!(c.attach.0 < v.num_tiles());
+            }
+        }
+    }
+
+    #[test]
+    fn same_shape_means_same_view() {
+        // The memoisation contract: shape determines the view.
+        let m = m8x8();
+        let parts = PartitionSpec::parse("2x2").unwrap().carve(&m).unwrap();
+        let a = parts[0].view(&m).unwrap();
+        let b = parts[3].view(&m).unwrap();
+        assert_eq!(a.controllers(), b.controllers());
+        assert_eq!((a.grid_w(), a.grid_h()), (b.grid_w(), b.grid_h()));
+    }
+}

@@ -252,8 +252,38 @@ impl RunSpec {
     /// execution strategy, deliberately not part of the spec: stats are
     /// byte-identical at every count, so records never mention it.
     pub fn execute_intra(&self, intra_jobs: usize) -> RunStats {
+        self.execute_on(self.build_machine(), intra_jobs)
+    }
+
+    /// Replay this spec confined to one spatial partition of `parent`: the
+    /// engine runs on the partition's sub-grid view
+    /// ([`crate::arch::Partition::view`] — parent params and clock, the
+    /// partition's own controller set), so homing, page table, and
+    /// directory confine every page of the request to the partition's
+    /// tiles by construction. Stats come back in view-local coordinates;
+    /// [`crate::arch::Partition::global_link_index`] translates per-link
+    /// vectors onto the parent grid (XY routes are translation-invariant,
+    /// so the translation is exact). The spec's own `machine`/`fabric`
+    /// fields are ignored here — the partition decides the chip.
+    pub fn on_partition(
+        &self,
+        part: &crate::arch::Partition,
+        parent: &crate::arch::Machine,
+        intra_jobs: usize,
+    ) -> RunStats {
+        debug_assert!(self.fabric.is_none(), "partition replays are uniform-fabric");
+        let view = part.view(parent).expect("partition carved from this parent");
+        self.execute_on(std::sync::Arc::new(view), intra_jobs)
+    }
+
+    /// The shared replay core: run this spec's workload on an
+    /// already-built machine (the spec's own, or a partition view).
+    fn execute_on(
+        &self,
+        machine: std::sync::Arc<crate::arch::Machine>,
+        intra_jobs: usize,
+    ) -> RunStats {
         let c = case(self.case_id);
-        let machine = self.build_machine();
         let mut cfg = c.engine_config_on(machine.clone(), self.striping, self.link_contention);
         cfg.contention.coherence = self.coherence_links;
         cfg = cfg.with_protocol(self.protocol).with_intra_jobs(intra_jobs);

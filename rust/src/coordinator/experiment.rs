@@ -903,6 +903,18 @@ pub fn serve_template(case_id: u8, elems: u64, threads: usize, seed: u64) -> Run
     RunSpec::mergesort(case_id, elems, threads, seed)
 }
 
+/// Default partition ladder for multi-server scaling (the perf bench and
+/// CI smoke): whole chip, two halves, four quadrants. Every rung shares
+/// the whole-chip ρ anchor, so the same arrival stream hits each — the
+/// knee shift and capacity ratio are like-for-like.
+pub fn serve_partition_ladder() -> Vec<crate::arch::PartitionSpec> {
+    vec![
+        crate::arch::PartitionSpec::Whole,
+        crate::arch::PartitionSpec::Auto(2),
+        crate::arch::PartitionSpec::Auto(4),
+    ]
+}
+
 /// §2's three homing classes head-to-head on the repeated-scan kernel:
 /// local homing (first touch by the worker), remote homing (one fixed
 /// other tile — the machine's far corner), and hash-for-home — plus the

@@ -21,11 +21,11 @@
 //! [`tilesim::util::cli::TargetSpec`] so every subcommand shares one
 //! conflict-error path.
 
-use tilesim::arch::{CtrlPlacement, FabricSpec, MachineSpec};
+use tilesim::arch::{CtrlPlacement, FabricSpec, MachineSpec, PartitionSpec};
 use tilesim::coherence::ProtocolSpec;
 use tilesim::coordinator::batch::{derive_seeds, BatchRunner, RunSpec, SweepSpec, Workload};
 use tilesim::coordinator::{case, experiment, table1};
-use tilesim::serve::{ArrivalSpec, BatchPolicy, ServeSweep};
+use tilesim::serve::{Admission, ArrivalSpec, BatchPolicy, ServeSweep, SizeMix};
 use tilesim::util::cli::{parse_usize, Args, TargetSpec};
 use tilesim::util::json::Json;
 use tilesim::workloads::mergesort::Variant;
@@ -70,6 +70,8 @@ const VALUE_FLAGS: &[&str] = &[
     "arrival",
     "requests",
     "queue-cap",
+    "partitions",
+    "admission",
 ];
 const BOOL_FLAGS: &[&str] = &[
     "json",
@@ -529,8 +531,11 @@ fn batch_cmd(
 /// `repro batch serve`: the open-loop request front-end. Builds the
 /// offered-load × batch-policy × machine × protocol scenario grid, shards
 /// it over the worker pool, and reports per-request latency percentiles,
-/// throughput-vs-offered-load ladders, and the saturation knee. `--json`
-/// emits the full record (byte-identical at any `--jobs`/`--intra-jobs`).
+/// throughput-vs-offered-load ladders, and the saturation knee.
+/// `--partitions` carves the chip into disjoint sub-grids serving
+/// concurrent batches, `--admission sjf` takes smallest-first, and
+/// `--size` accepts a percentage mix (`80%4ki,20%64ki`). `--json` emits
+/// the full record (byte-identical at any `--jobs`/`--intra-jobs`).
 fn serve_cmd(args: &Args, seed: u64) -> Result<(), Box<dyn std::error::Error>> {
     reject_ladder_conflicts(
         args,
@@ -570,11 +575,20 @@ fn serve_cmd(args: &Args, seed: u64) -> Result<(), Box<dyn std::error::Error>> {
     if !(1..=8).contains(&case_id) {
         return Err(format!("bad --case {case_id}: want a Table 1 id in 1..8").into());
     }
-    let elems = args.usize("size", 4096)? as u64;
+    let sizes = SizeMix::parse(args.get("size").unwrap_or("4096"))?;
+    let admission = Admission::parse(args.get("admission").unwrap_or("fifo"))?;
+    let partitions = PartitionSpec::parse(args.get("partitions").unwrap_or("whole"))?;
+    if admission == Admission::Sjf && sizes.is_single() {
+        return Err(
+            "--admission sjf has nothing to reorder in a single-size stream; \
+             pair it with a --size mix like 80%4ki,20%64ki"
+                .into(),
+        );
+    }
     let threads = args.usize("threads", 16)?;
     let requests = args.u64("requests", 200)?;
     let queue_cap = args.usize("queue-cap", 64)?;
-    let template = experiment::serve_template(case_id, elems, threads, seed);
+    let template = experiment::serve_template(case_id, sizes.mean_elems(), threads, seed);
     let sweep = ServeSweep::grid(
         &template,
         &machines,
@@ -585,6 +599,9 @@ fn serve_cmd(args: &Args, seed: u64) -> Result<(), Box<dyn std::error::Error>> {
         requests,
         queue_cap,
         args.flag("link-contention"),
+        &partitions,
+        admission,
+        &sizes,
     );
     sweep.check()?;
     let runner = BatchRunner::new(args.usize("jobs", 0)?)
@@ -1001,10 +1018,14 @@ fn print_usage() {
                                   protocol; reports winners and cross-machine flips)\n\
                       serve:      --rhos 0.5,0.8,1.2 --policies immediate,batch8[@W]\n\
                                   --arrival poisson|bursty[@K] --requests N --queue-cap N\n\
-                                  --machines a,b --protocols a,b --size N --threads N\n\
+                                  --machines a,b --protocols a,b --threads N\n\
+                                  --size N | 80%4ki,20%64ki (request-size mix)\n\
+                                  --partitions whole|P|PXxPY|rowsN|colsN|explicit:x,y,WxH;..\n\
+                                  (spatial multi-server: one server per sub-grid)\n\
+                                  --admission fifo|sjf (sjf needs a --size mix)\n\
                                   (open-loop request front-end; p50/p99/p999 latency,\n\
                                   throughput vs offered load, saturation knee per ladder;\n\
-                                  rho = arrival rate x single-request service time)\n\
+                                  rho = arrival rate x whole-chip single-request service)\n\
          machines: --machine tilepro64|epiphany16|nuca256|WxH[:ctrls] (default tilepro64)\n\
                    --fabric [machine:]ctrl=edges|sides|corners|interior|t+t[:base=N]\n\
                             [:express-row=Y@F][:express-col=X@F][:edge@F][:dir=D@F]\n\

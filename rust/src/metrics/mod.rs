@@ -12,7 +12,7 @@
 //! requests, data/ack replies, and invalidation fan-out — so a saturated
 //! mesh can be attributed to the coherence traffic that caused it.
 
-use crate::arch::{Dir, Machine, TileId};
+use crate::arch::{Dir, Machine, Partition, TileId};
 use crate::sim::RunStats;
 
 const RAMP: &[u8] = b" .:-=+*#%@";
@@ -305,6 +305,54 @@ pub fn link_class_heatmap(
         "  {} {} packets total\n",
         counts.iter().sum::<u64>(),
         class.label()
+    ));
+    Ok(out)
+}
+
+/// Compose per-partition link traffic into one parent-grid heatmap. A
+/// partition replay bills its *view-local* links; [`Partition::global_link_index`]
+/// maps each onto the parent mesh link it models — exactly, because XY
+/// routes inside a rectangle stay inside it and disjoint rectangles never
+/// share a parent link, so composition is pure addition with no
+/// double-counting. `Ok` with an empty string when no slice modelled link
+/// contention; an error when a stats vector does not match its
+/// partition's shape.
+pub fn partitioned_link_heatmap(
+    slices: &[(&Partition, &RunStats)],
+    parent: &Machine,
+) -> Result<String, MetricsError> {
+    let mut links = vec![0u64; parent.num_links()];
+    let mut modelled = false;
+    for (p, stats) in slices {
+        if !stats.links_modelled() {
+            continue;
+        }
+        check_len(
+            "partition link_requests",
+            stats.link_requests.len(),
+            4 * p.num_tiles() as usize,
+            parent,
+        )?;
+        modelled = true;
+        for (i, &n) in stats.link_requests.iter().enumerate() {
+            links[p.global_link_index(parent, i)] += n;
+        }
+    }
+    if !modelled {
+        return Ok(String::new());
+    }
+    let mut out = String::new();
+    out.push_str(&format!(
+        "mesh-link traffic per tile (max outgoing link), {} partition server(s) on {}x{} {}:\n",
+        slices.len(),
+        parent.grid_w(),
+        parent.grid_h(),
+        parent.name()
+    ));
+    link_grid(&links, parent, &mut out);
+    out.push_str(&format!(
+        "  {} packets total across partition replays\n",
+        links.iter().sum::<u64>()
     ));
     Ok(out)
 }

@@ -18,6 +18,7 @@
 //! load for a FIFO scenario (`prop_serve` pins it) rather than only
 //! statistically so.
 
+use crate::util::cli::parse_usize;
 use crate::util::rng::Rng;
 
 /// Which arrival shape a serve scenario drives (`--arrival`).
@@ -56,6 +57,131 @@ impl ArrivalSpec {
 impl Default for ArrivalSpec {
     fn default() -> Self {
         ArrivalSpec::Poisson
+    }
+}
+
+/// The request-size distribution of a serve scenario (`--size`): either a
+/// single fixed size (the classic stream) or a percentage mix such as
+/// `80%4ki,20%64ki` — each arrival draws its element count from the mix.
+///
+/// Determinism contract: size draws come from their **own** forked rng
+/// stream ([`SizeMix::rng_for`]), never from the arrival-gap stream, so
+/// adding a mix to a scenario does not move a single arrival time — and a
+/// degenerate single-size mix consumes no draws at all, keeping
+/// fixed-size records byte-identical to the pre-mix driver.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SizeMix {
+    /// `(percent, elems)` clauses; percentages sum to 100. A single
+    /// clause at 100% is the fixed-size stream.
+    clauses: Vec<(u32, u64)>,
+}
+
+impl SizeMix {
+    /// The fixed-size stream every scenario starts from.
+    pub fn single(elems: u64) -> SizeMix {
+        SizeMix { clauses: vec![(100, elems)] }
+    }
+
+    /// Parse a `--size` argument: a plain element count (`4096`, `16ki`)
+    /// or a mix of `PCT%ELEMS` clauses summing to 100
+    /// (`80%4ki,20%64ki`). Labels round-trip (sizes normalise to digits).
+    pub fn parse(s: &str) -> Result<SizeMix, String> {
+        let err = || {
+            format!(
+                "bad --size '{s}': want ELEMS or a mix PCT%ELEMS,... summing to 100 \
+                 (e.g. 80%4ki,20%64ki)"
+            )
+        };
+        if !s.contains('%') {
+            let elems = parse_usize(s).filter(|&e| e > 0).ok_or_else(err)?;
+            return Ok(SizeMix::single(elems as u64));
+        }
+        let clauses = s
+            .split(',')
+            .map(|c| {
+                let (pct, elems) = c.split_once('%')?;
+                let pct = pct.parse::<u32>().ok().filter(|&p| p > 0)?;
+                let elems = parse_usize(elems).filter(|&e| e > 0)? as u64;
+                Some((pct, elems))
+            })
+            .collect::<Option<Vec<_>>>()
+            .ok_or_else(err)?;
+        if clauses.iter().map(|&(p, _)| p as u64).sum::<u64>() != 100 {
+            return Err(format!(
+                "bad --size '{s}': mix percentages must sum to 100"
+            ));
+        }
+        Ok(SizeMix { clauses })
+    }
+
+    /// Stable label (round-trips through [`parse`](Self::parse)); a
+    /// single-size mix labels as the bare element count.
+    pub fn label(&self) -> String {
+        if self.is_single() {
+            return format!("{}", self.clauses[0].1);
+        }
+        self.clauses
+            .iter()
+            .map(|(p, e)| format!("{p}%{e}"))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// Whether every arrival has the same size (no draws consumed).
+    pub fn is_single(&self) -> bool {
+        self.clauses.len() == 1
+    }
+
+    pub fn clauses(&self) -> &[(u32, u64)] {
+        &self.clauses
+    }
+
+    /// Smallest clause size — the bound `ServeScenario::check` holds
+    /// against the workload's `2 x threads` floor.
+    pub fn min_elems(&self) -> u64 {
+        self.clauses.iter().map(|&(_, e)| e).min().expect("non-empty mix")
+    }
+
+    /// Exact integer expected size, `sum(pct x elems) / 100` rounded
+    /// down — the ρ anchor of a mixed stream (for a single size this *is*
+    /// the size).
+    pub fn mean_elems(&self) -> u64 {
+        let weighted: u128 = self
+            .clauses
+            .iter()
+            .map(|&(p, e)| p as u128 * e as u128)
+            .sum();
+        (weighted / 100) as u64
+    }
+
+    /// The dedicated size-draw stream for a scenario seed. A different
+    /// fork constant from the arrival stream's (`0x5e7e`), so gaps and
+    /// sizes can never collide.
+    pub fn rng_for(seed: u64) -> Rng {
+        Rng::new(seed).fork(0x512e)
+    }
+
+    /// Size of the next arrival. Single-size mixes return the size
+    /// without touching the rng (fixed-size streams stay byte-identical
+    /// to the pre-mix driver); true mixes consume exactly one draw.
+    pub fn draw(&self, rng: &mut Rng) -> u64 {
+        if self.is_single() {
+            return self.clauses[0].1;
+        }
+        let mut roll = rng.below(100) as u32;
+        for &(pct, elems) in &self.clauses {
+            if roll < pct {
+                return elems;
+            }
+            roll -= pct;
+        }
+        unreachable!("mix percentages sum to 100")
+    }
+}
+
+impl Default for SizeMix {
+    fn default() -> Self {
+        SizeMix::single(4096)
     }
 }
 
@@ -192,6 +318,61 @@ mod tests {
                 spec.label()
             );
         }
+    }
+
+    #[test]
+    fn size_mix_parse_label_round_trips() {
+        for s in ["4096", "80%4096,20%65536", "50%1024,30%2048,20%4096"] {
+            let m = SizeMix::parse(s).unwrap();
+            assert_eq!(m.label(), s);
+            assert_eq!(SizeMix::parse(&m.label()).unwrap(), m);
+        }
+        // Suffixes normalise to digits in the label.
+        assert_eq!(SizeMix::parse("4ki").unwrap().label(), "4096");
+        assert_eq!(SizeMix::parse("80%4ki,20%64ki").unwrap().label(), "80%4096,20%65536");
+        for s in ["", "0", "x", "80%4096", "80%4096,30%1024", "0%4,100%8", "50%0,50%8"] {
+            assert!(SizeMix::parse(s).is_err(), "'{s}' must not parse");
+        }
+    }
+
+    #[test]
+    fn size_mix_stats_are_exact() {
+        let m = SizeMix::parse("75%1000,25%3000").unwrap();
+        assert!(!m.is_single());
+        assert_eq!(m.min_elems(), 1000);
+        assert_eq!(m.mean_elems(), 1500);
+        let s = SizeMix::single(4096);
+        assert!(s.is_single());
+        assert_eq!(s.mean_elems(), 4096);
+    }
+
+    #[test]
+    fn size_draws_are_seeded_and_match_the_mix() {
+        let m = SizeMix::parse("80%1024,20%8192").unwrap();
+        let draw_n = |seed: u64, n: usize| -> Vec<u64> {
+            let mut rng = SizeMix::rng_for(seed);
+            (0..n).map(|_| m.draw(&mut rng)).collect()
+        };
+        let a = draw_n(42, 4000);
+        assert_eq!(a, draw_n(42, 4000), "same seed, same size stream");
+        assert_ne!(a, draw_n(43, 4000), "a different seed must move the stream");
+        let small = a.iter().filter(|&&e| e == 1024).count();
+        assert!(a.iter().all(|&e| e == 1024 || e == 8192));
+        // 80% of 4000 ± a loose statistical band.
+        assert!((2900..=3500).contains(&small), "small count {small}");
+    }
+
+    #[test]
+    fn single_size_mix_consumes_no_draws() {
+        // The byte-identity keystone: a fixed-size stream must leave its
+        // rng untouched, whatever the seed.
+        let m = SizeMix::single(2048);
+        let mut a = SizeMix::rng_for(7);
+        let mut b = SizeMix::rng_for(7);
+        for _ in 0..10 {
+            assert_eq!(m.draw(&mut a), 2048);
+        }
+        assert_eq!(a.next_u64(), b.next_u64(), "draw() must not advance the rng");
     }
 
     #[test]

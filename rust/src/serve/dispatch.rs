@@ -1,0 +1,429 @@
+//! Spatial multi-server dispatch: P partitions serving concurrent batches.
+//!
+//! The single-server driver ([`crate::serve::driver`]) replays every batch
+//! on the whole chip, one at a time. This module carves the machine by the
+//! scenario's [`PartitionSpec`] and runs one logical server per partition:
+//! a shared bounded queue feeds a free-partition list, and a batch
+//! dispatched to partition `i` replays on that partition's sub-grid view
+//! ([`RunSpec::on_partition`]) while the other partitions keep serving —
+//! the queue drains whenever *any* server frees. Requests never share
+//! directory homes or links across partitions (the partition view confines
+//! every page by construction), so concurrent service needs no new
+//! contention model: the cost of a batch is exactly its partition replay.
+//!
+//! Server assignment is locality-aware and deterministic: a free partition
+//! whose previous batch led with the same request size is preferred
+//! (lowest partition index among matches — its working-set shape is
+//! already "warm" in the memo sense), falling back to round-robin over
+//! free partitions with the cursor advancing only on fallback picks.
+//!
+//! Service times are memoised per `(partition shape, total batch elems)`:
+//! same-shaped partitions share a view ([`Machine::subgrid_view`] is a
+//! pure function of shape), so a P-way ladder costs at most
+//! `distinct_shapes x max_batch` distinct engine replays — the same
+//! amortisation bound as the single-server per-k memo.
+//!
+//! The ρ anchor stays the **whole-chip** single-request service time `s₁`
+//! whatever P is, so a P-ladder at fixed ρ shares its arrival stream
+//! across every rung — that is what makes throughput monotone in P
+//! testable pointwise, and what the knee-shift claim (knee moves right
+//! ~P×) is measured against.
+//!
+//! A whole-chip partition's view is the parent machine itself and this
+//! loop degenerates to the single-server event loop exactly, so a `P = 1`
+//! record is byte-identical to the plain driver's (`serve_partition.rs`
+//! and the CI smoke pin this).
+
+use std::collections::HashMap;
+
+use crate::arch::{Machine, Partition};
+use crate::coordinator::batch::RunSpec;
+use crate::metrics::latency_digest;
+use crate::serve::arrivals::{ArrivalGen, SizeMix};
+use crate::serve::driver::{rate_per_sec, ServeReport, ServeScenario};
+use crate::serve::queue::{BatchPolicy, RequestQueue};
+use crate::sim::devent::EventQueue;
+use crate::util::json::Json;
+
+/// Per-server digest of one multi-server scenario: which partition, how
+/// much it served, and how busy it was over the scenario horizon.
+#[derive(Clone, Debug, Default)]
+pub struct ServerSlice {
+    /// Partition label, e.g. `p0:4x4@0,0`.
+    pub partition: String,
+    pub batches: u64,
+    pub completed: u64,
+    pub max_batch_served: u64,
+    /// Cycles this server spent replaying batches.
+    pub busy_cycles: u64,
+    /// Single mean-size request service time on this partition's shape —
+    /// the per-server capacity anchor (bigger than the whole-chip `s₁`:
+    /// fewer tiles serve the same request).
+    pub service_cycles_one: u64,
+    /// `busy_cycles / makespan` — the busy/idle accounting.
+    pub utilisation: f64,
+}
+
+impl ServerSlice {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("partition", Json::str(self.partition.clone())),
+            ("batches", Json::num(self.batches as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("max_batch_served", Json::num(self.max_batch_served as f64)),
+            ("busy_cycles", Json::num(self.busy_cycles as f64)),
+            ("service_cycles_one", Json::num(self.service_cycles_one as f64)),
+            ("utilisation", Json::num(self.utilisation)),
+        ])
+    }
+}
+
+/// Events of the multi-server discrete-event loop.
+enum Ev {
+    /// One request arrives.
+    Arrival,
+    /// Server `i`'s in-flight batch completes.
+    Done(usize),
+    /// The oldest queued request's batch-fill timer expired.
+    Timeout,
+}
+
+/// Mutable per-server state during the loop.
+#[derive(Default)]
+struct Server {
+    busy: bool,
+    /// Head-request size of the last dispatched batch (locality key).
+    last_size: Option<u64>,
+    /// Arrival cycles of the in-flight batch's requests.
+    in_flight: Vec<u64>,
+    busy_cycles: u64,
+    batches: u64,
+    completed: u64,
+    max_batch: u64,
+}
+
+/// Replay cost of a batch totalling `elems` on a partition, memoised per
+/// `(shape, elems)` — position never enters (same-shape views are equal).
+fn service_cycles(
+    run: &RunSpec,
+    part: &Partition,
+    parent: &Machine,
+    elems: u64,
+    intra_jobs: usize,
+    memo: &mut HashMap<(u32, u32, u64), u64>,
+) -> u64 {
+    *memo
+        .entry((part.width(), part.height(), elems))
+        .or_insert_with(|| {
+            let mut r = run.clone();
+            r.elems = elems;
+            r.on_partition(part, parent, intra_jobs).makespan_cycles
+        })
+}
+
+/// Pick the server for the batch whose head request has `head` elements:
+/// the lowest-indexed free server whose last batch led with the same size,
+/// else round-robin from the cursor (which advances only on fallback, so
+/// affinity hits don't skew the rotation). `None` when every server is
+/// busy.
+fn pick_server(servers: &[Server], rr_cursor: &mut usize, head: u64) -> Option<usize> {
+    if let Some(i) = servers
+        .iter()
+        .position(|s| !s.busy && s.last_size == Some(head))
+    {
+        return Some(i);
+    }
+    let p = servers.len();
+    for off in 0..p {
+        let i = (*rr_cursor + off) % p;
+        if !servers[i].busy {
+            *rr_cursor = (i + 1) % p;
+            return Some(i);
+        }
+    }
+    None
+}
+
+/// Run a partitioned scenario's discrete-event loop to completion. The
+/// single-server semantics (batch-take rule, fill-timer arming, the
+/// makespan-excludes-stale-timers rule) are preserved verbatim; only the
+/// server count changed.
+pub(crate) fn simulate(s: &ServeScenario, intra_jobs: usize) -> ServeReport {
+    let mut report = ServeReport::zero(s);
+    let parent = s.run.machine.build();
+    let parts = s
+        .partitions
+        .carve(&parent)
+        .expect("partition spec validated by ServeScenario::check");
+    if s.requests == 0 {
+        return report;
+    }
+
+    // The ρ anchor: whole-chip single-request service time, exactly the
+    // plain driver's `cache[0]` replay. Seed the memo with it so a
+    // whole-chip partition never re-replays the anchor size.
+    let anchor = s.run.execute_intra(intra_jobs);
+    let s1 = anchor.makespan_cycles;
+    let clock = anchor.clock_hz;
+    report.service_cycles_one = s1;
+    report.clock_hz = clock;
+    let mean_gap = (s1 as f64 / s.rho).max(1.0);
+    let mut memo: HashMap<(u32, u32, u64), u64> = HashMap::new();
+    memo.insert((parent.grid_w(), parent.grid_h(), s.run.elems), s1);
+
+    let mut events: EventQueue<Ev> = EventQueue::new();
+    let mut gen = ArrivalGen::new(s.arrival, mean_gap, s.run.seed);
+    let mut size_rng = SizeMix::rng_for(s.run.seed);
+    let mut queue = RequestQueue::new(s.queue_cap);
+    let mut latencies: Vec<u64> = Vec::new();
+    let mut servers: Vec<Server> = parts.iter().map(|_| Server::default()).collect();
+    let mut armed_timeout: Option<u64> = None;
+    let mut arrived = 0u64;
+    let mut rr_cursor = 0usize;
+    events.at(gen.next_gap(), Ev::Arrival);
+    while let Some((now, ev)) = events.pop() {
+        // Makespan tracks arrivals and completions; a stale fill timer
+        // popping after the last Done must not stretch the horizon.
+        if !matches!(ev, Ev::Timeout) {
+            report.makespan_cycles = now;
+        }
+        match ev {
+            Ev::Arrival => {
+                arrived += 1;
+                report.last_arrival_cycles = now;
+                let elems = s.sizes.draw(&mut size_rng);
+                queue.offer(now, elems);
+                if arrived < s.requests {
+                    events.at(now + gen.next_gap(), Ev::Arrival);
+                }
+            }
+            Ev::Done(i) => {
+                let srv = &mut servers[i];
+                for a in srv.in_flight.drain(..) {
+                    latencies.push(now - a);
+                }
+                srv.busy = false;
+            }
+            Ev::Timeout => {}
+        }
+        // Dispatch loop: the queue drains onto every free server the
+        // policy allows — server k+1 starts in the same cycle server k
+        // did when enough requests are queued.
+        loop {
+            if queue.is_empty() || servers.iter().all(|srv| srv.busy) {
+                break;
+            }
+            let take = match s.policy {
+                BatchPolicy::Immediate => Some(1),
+                BatchPolicy::Batch { max, wait } => {
+                    let oldest = queue.front_arrival().expect("non-empty queue");
+                    if queue.len() >= max as usize
+                        || arrived == s.requests
+                        || now >= oldest + wait
+                    {
+                        Some(queue.len().min(max as usize))
+                    } else {
+                        // Hold for more arrivals; arm the fill timer once
+                        // per deadline (stale timers pop as no-ops).
+                        if armed_timeout != Some(oldest + wait) {
+                            events.at(oldest + wait, Ev::Timeout);
+                            armed_timeout = Some(oldest + wait);
+                        }
+                        None
+                    }
+                }
+            };
+            let Some(k) = take else { break };
+            let head = queue.head_elems(s.admission).expect("non-empty queue");
+            let i = pick_server(&servers, &mut rr_cursor, head)
+                .expect("a free server exists: checked above");
+            let batch = queue.take(k, s.admission);
+            let total: u64 = batch.iter().map(|r| r.elems).sum();
+            let svc = service_cycles(&s.run, &parts[i], &parent, total, intra_jobs, &mut memo);
+            let srv = &mut servers[i];
+            srv.in_flight = batch.iter().map(|r| r.arrival).collect();
+            srv.last_size = Some(head);
+            srv.busy = true;
+            srv.busy_cycles += svc;
+            srv.batches += 1;
+            srv.completed += batch.len() as u64;
+            srv.max_batch = srv.max_batch.max(batch.len() as u64);
+            report.batches += 1;
+            report.max_batch_served = report.max_batch_served.max(batch.len() as u64);
+            armed_timeout = None;
+            events.at(now + svc, Ev::Done(i));
+        }
+    }
+
+    latencies.sort_unstable();
+    report.completed = latencies.len() as u64;
+    report.dropped = queue.dropped;
+    report.queue_peak = queue.peak_depth as u64;
+    let (p50, p99, p999, max) = latency_digest(&latencies);
+    report.p50_cycles = p50;
+    report.p99_cycles = p99;
+    report.p999_cycles = p999;
+    report.max_cycles = max;
+    report.mean_cycles = if latencies.is_empty() {
+        0.0
+    } else {
+        latencies.iter().map(|&l| l as u128).sum::<u128>() as f64 / latencies.len() as f64
+    };
+    report.offered_rps = rate_per_sec(arrived, report.last_arrival_cycles, clock);
+    report.completed_rps = rate_per_sec(report.completed, report.makespan_cycles, clock);
+    // Per-server digests only when there is more than one server: a
+    // single-server record (partitioned or not) keeps the plain driver's
+    // bytes.
+    if parts.len() > 1 {
+        report.servers = parts
+            .iter()
+            .zip(&servers)
+            .map(|(p, srv)| ServerSlice {
+                partition: p.label(),
+                batches: srv.batches,
+                completed: srv.completed,
+                max_batch_served: srv.max_batch,
+                busy_cycles: srv.busy_cycles,
+                service_cycles_one: service_cycles(
+                    &s.run, p, &parent, s.run.elems, intra_jobs, &mut memo,
+                ),
+                utilisation: if report.makespan_cycles == 0 {
+                    0.0
+                } else {
+                    srv.busy_cycles as f64 / report.makespan_cycles as f64
+                },
+            })
+            .collect();
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::PartitionSpec;
+    use crate::serve::arrivals::ArrivalSpec;
+    use crate::serve::queue::Admission;
+
+    fn partitioned(
+        partitions: &str,
+        rho: f64,
+        requests: u64,
+        policy: BatchPolicy,
+    ) -> ServeScenario {
+        ServeScenario::new(
+            RunSpec::mergesort(8, 1 << 10, 4, 42),
+            ArrivalSpec::Poisson,
+            rho,
+            requests,
+            1 << 20,
+            policy,
+        )
+        .with_partitions(PartitionSpec::parse(partitions).unwrap())
+    }
+
+    #[test]
+    fn four_partitions_serve_concurrently() {
+        let s = partitioned("4", 2.0, 60, BatchPolicy::Immediate);
+        s.check().unwrap();
+        let r = s.simulate(1);
+        assert_eq!(r.completed + r.dropped, 60);
+        assert_eq!(r.servers.len(), 4);
+        let spread = r.servers.iter().filter(|sv| sv.batches > 0).count();
+        assert!(spread >= 2, "overload must use more than one partition");
+        assert_eq!(
+            r.servers.iter().map(|sv| sv.completed).sum::<u64>(),
+            r.completed,
+            "per-server completions must sum to the aggregate"
+        );
+        assert_eq!(r.servers.iter().map(|sv| sv.batches).sum::<u64>(), r.batches);
+        for sv in &r.servers {
+            assert!(sv.utilisation >= 0.0 && sv.utilisation <= 1.0, "{}", sv.partition);
+            assert!(sv.busy_cycles <= r.makespan_cycles);
+            assert!(
+                sv.service_cycles_one > r.service_cycles_one,
+                "a quadrant serves a request slower than the whole chip"
+            );
+        }
+    }
+
+    #[test]
+    fn partitions_scale_overload_throughput() {
+        // At rho=2 the quad is arrival-bound: its completed req/s tracks
+        // the offered rate (= 2x the single server's capacity), so the
+        // measured ratio approaches 2 from below as the horizon grows —
+        // 1.8 leaves room for the finite-horizon tails. At rho=4 both
+        // sides are capacity-bound and the 4-partition capacity ratio
+        // shows directly: comfortably >= 2x.
+        let at = |partitions: &str, rho: f64| {
+            partitioned(partitions, rho, 80, BatchPolicy::Immediate).simulate(1)
+        };
+        let (s2, q2) = (at("whole", 2.0), at("4", 2.0));
+        assert!(
+            q2.completed_rps >= 1.8 * s2.completed_rps,
+            "4 partitions at rho=2 must track the 2x offered rate: {} vs {}",
+            q2.completed_rps,
+            s2.completed_rps
+        );
+        let (s4, q4) = (at("whole", 4.0), at("4", 4.0));
+        assert!(
+            q4.completed_rps >= 2.0 * s4.completed_rps,
+            "4 partitions at rho=4 must at least double capacity: {} vs {}",
+            q4.completed_rps,
+            s4.completed_rps
+        );
+    }
+
+    #[test]
+    fn round_robin_rotates_and_affinity_prefers_matches() {
+        let mut servers: Vec<Server> = (0..3).map(|_| Server::default()).collect();
+        let mut rr = 0usize;
+        // No affinity yet: strict rotation.
+        assert_eq!(pick_server(&servers, &mut rr, 64), Some(0));
+        servers[0].busy = true;
+        servers[0].last_size = Some(64);
+        assert_eq!(pick_server(&servers, &mut rr, 64), Some(1));
+        servers[1].busy = true;
+        servers[1].last_size = Some(512);
+        // Server 0 frees; a 64-sized head prefers it over cursor order.
+        servers[0].busy = false;
+        assert_eq!(pick_server(&servers, &mut rr, 64), Some(0), "affinity match");
+        // Cursor was not advanced by the affinity hit: fallback resumes at 2.
+        assert_eq!(pick_server(&servers, &mut rr, 99), Some(2));
+        servers[2].busy = true;
+        servers[0].busy = true;
+        servers[1].busy = true;
+        assert_eq!(pick_server(&servers, &mut rr, 64), None, "all busy");
+    }
+
+    #[test]
+    fn sjf_admission_reorders_under_a_mix() {
+        let mix = SizeMix::parse("50%1024,50%8192").unwrap();
+        let fifo = partitioned("2", 3.0, 40, BatchPolicy::Immediate).with_sizes(mix.clone());
+        let sjf = fifo.clone().with_admission(Admission::Sjf);
+        fifo.check().unwrap();
+        sjf.check().unwrap();
+        let rf = fifo.simulate(1);
+        let rs = sjf.simulate(1);
+        assert_eq!(rf.completed + rf.dropped, 40);
+        assert_eq!(rs.completed + rs.dropped, 40);
+        // At 3x overload the queue holds mixed sizes, so SJF's take order
+        // (and therefore the latency record) must diverge from FIFO's.
+        assert_ne!(
+            rf.to_json().encode(),
+            rs.to_json().encode(),
+            "SJF must reorder a backlogged size mix"
+        );
+    }
+
+    #[test]
+    fn dispatch_report_is_deterministic_and_intra_jobs_invariant() {
+        let s = partitioned("2x2", 1.5, 30, BatchPolicy::Batch { max: 4, wait: 0 })
+            .with_sizes(SizeMix::parse("75%1024,25%4096").unwrap());
+        let a = s.simulate(1).to_json().encode();
+        let b = s.simulate(1).to_json().encode();
+        let c = s.simulate(2).to_json().encode();
+        assert_eq!(a, b, "same scenario, same bytes");
+        assert_eq!(a, c, "intra-run workers must not change the report");
+    }
+}

@@ -27,28 +27,48 @@
 //! `intra_jobs`-independent stats, so reports are byte-identical at any
 //! `--jobs`/`--intra-jobs` (pinned by `rust/tests/serve_determinism.rs`).
 
+use crate::arch::PartitionSpec;
 use crate::coordinator::batch::RunSpec;
 use crate::metrics::latency_digest;
-use crate::serve::arrivals::{ArrivalGen, ArrivalSpec};
-use crate::serve::queue::{BatchPolicy, RequestQueue};
+use crate::serve::arrivals::{ArrivalGen, ArrivalSpec, SizeMix};
+use crate::serve::dispatch::{self, ServerSlice};
+use crate::serve::queue::{Admission, BatchPolicy, RequestQueue};
 use crate::sim::devent::EventQueue;
 use crate::util::json::Json;
 
 /// One fully-specified serve cell: workload template × arrival process ×
-/// offered load × queue bound × batch policy.
+/// offered load × queue bound × batch policy, plus the spatial axes
+/// (partitioning, admission order, request-size mix).
+///
+/// Build with [`ServeScenario::new`] plus the `with_*` builders — the
+/// struct is `#[non_exhaustive]` so new axes can land without breaking
+/// out-of-crate constructors (the same contract as [`RunSpec`]).
 #[derive(Clone, Debug)]
+#[non_exhaustive]
 pub struct ServeScenario {
-    /// The per-request workload. `run.elems` is the size of ONE request;
-    /// a batch of `k` replays the template at `k * elems`.
+    /// The per-request workload. `run.elems` is the *mean* request size
+    /// (== the fixed size for a single-size stream); a batch replays the
+    /// template at the batch's total element count.
     pub run: RunSpec,
     pub arrival: ArrivalSpec,
-    /// Offered load as a fraction of the single-request service rate.
+    /// Offered load as a fraction of the whole-chip single-request
+    /// service rate (the anchor stays whole-chip even when partitioned,
+    /// so a P-ladder shares its arrival stream across every rung).
     pub rho: f64,
     /// Open-loop arrival count (0 = empty scenario, all-zero report).
     pub requests: u64,
     /// Bounded queue depth; arrivals beyond it drop (drop-tail).
     pub queue_cap: usize,
     pub policy: BatchPolicy,
+    /// Spatial partitioning (`--partitions`): `Whole` is the
+    /// single-server baseline and keeps the pre-partition record bytes.
+    pub partitions: PartitionSpec,
+    /// Dispatch take order (`--admission`): FIFO or shortest-job-first.
+    pub admission: Admission,
+    /// Request-size distribution (`--size`); single-size by construction
+    /// from [`ServeScenario::new`], kept in sync with `run.elems` by
+    /// [`with_sizes`](Self::with_sizes).
+    pub sizes: SizeMix,
 }
 
 /// Events of the serve pipeline's discrete-event loop.
@@ -62,43 +82,102 @@ enum Ev {
 }
 
 impl ServeScenario {
-    /// Row label: `machine/policy/arrival rho=R` (protocol appended when
-    /// non-default, same gating as [`RunSpec::label`]).
+    /// The baseline cell: single whole-chip server, FIFO admission, a
+    /// fixed request size of `run.elems`. Layer the spatial axes on with
+    /// the `with_*` builders.
+    pub fn new(
+        run: RunSpec,
+        arrival: ArrivalSpec,
+        rho: f64,
+        requests: u64,
+        queue_cap: usize,
+        policy: BatchPolicy,
+    ) -> ServeScenario {
+        let sizes = SizeMix::single(run.elems);
+        ServeScenario {
+            run,
+            arrival,
+            rho,
+            requests,
+            queue_cap,
+            policy,
+            partitions: PartitionSpec::Whole,
+            admission: Admission::Fifo,
+            sizes,
+        }
+    }
+
+    /// Carve the chip (`--partitions`).
+    pub fn with_partitions(mut self, partitions: PartitionSpec) -> ServeScenario {
+        self.partitions = partitions;
+        self
+    }
+
+    /// Select the dispatch take order (`--admission`).
+    pub fn with_admission(mut self, admission: Admission) -> ServeScenario {
+        self.admission = admission;
+        self
+    }
+
+    /// Drive a request-size mix (`--size 80%4ki,20%64ki`). Re-anchors the
+    /// template at the mix's exact mean size so `run.elems` (the ρ
+    /// anchor) and the drawn stream stay consistent.
+    pub fn with_sizes(mut self, sizes: SizeMix) -> ServeScenario {
+        self.run.elems = sizes.mean_elems();
+        self.sizes = sizes;
+        self
+    }
+
+    /// Gated suffix shared by [`label`](Self::label) and
+    /// [`ladder_label`](Self::ladder_label): each spatial axis appears
+    /// only when it deviates from the baseline, so pre-partition labels
+    /// keep their bytes.
+    fn label_suffix(&self) -> String {
+        let mut s = String::new();
+        if !self.run.protocol.is_default() {
+            s.push_str(&format!(" proto={}", self.run.protocol.label()));
+        }
+        if !self.partitions.is_whole() {
+            s.push_str(&format!(" part={}", self.partitions.label()));
+        }
+        if !self.admission.is_default() {
+            s.push_str(&format!(" adm={}", self.admission.label()));
+        }
+        if !self.sizes.is_single() {
+            s.push_str(&format!(" mix={}", self.sizes.label()));
+        }
+        s
+    }
+
+    /// Row label: `machine/policy/arrival rho=R` plus the gated deviation
+    /// suffix (protocol/partitions/admission/mix — same gating as
+    /// [`RunSpec::label`]).
     pub fn label(&self) -> String {
-        let proto = if self.run.protocol.is_default() {
-            String::new()
-        } else {
-            format!(" proto={}", self.run.protocol.label())
-        };
         format!(
             "{}/{}/{} rho={}{}",
             self.run.machine.label(),
             self.policy.label(),
             self.arrival.label(),
             self.rho,
-            proto
+            self.label_suffix()
         )
     }
 
     /// Ladder key: everything but the offered load. Scenarios sharing this
     /// key form one throughput-vs-load curve (where the knee is detected).
     pub fn ladder_label(&self) -> String {
-        let proto = if self.run.protocol.is_default() {
-            String::new()
-        } else {
-            format!(" proto={}", self.run.protocol.label())
-        };
         format!(
             "{}/{}/{}{}",
             self.run.machine.label(),
             self.policy.label(),
             self.arrival.label(),
-            proto
+            self.label_suffix()
         )
     }
 
     /// CLI-time validation: the template (at its largest batch size) must
-    /// fit the machine, and the scenario's knobs must be sane.
+    /// fit the machine — and, when partitioned, every partition — and the
+    /// scenario's knobs must be sane.
     pub fn check(&self) -> Result<(), String> {
         if !(self.rho > 0.0) {
             return Err(format!("bad serve scenario: rho must be > 0, got {}", self.rho));
@@ -106,26 +185,66 @@ impl ServeScenario {
         if self.queue_cap == 0 {
             return Err("bad serve scenario: queue-cap must be >= 1".into());
         }
-        if self.run.elems < 2 * self.run.threads as u64 {
+        if self.sizes.min_elems() < 2 * self.run.threads as u64 {
             return Err(format!(
                 "bad serve scenario: request size {} below 2x{} threads",
-                self.run.elems, self.run.threads
+                self.sizes.min_elems(),
+                self.run.threads
             ));
         }
-        self.run.check_thread_capacity()
+        if self.run.elems != self.sizes.mean_elems() {
+            return Err(format!(
+                "bad serve scenario: template size {} is not the size mix's mean {} \
+                 (build with ServeScenario::with_sizes)",
+                self.run.elems,
+                self.sizes.mean_elems()
+            ));
+        }
+        self.run.check_thread_capacity()?;
+        let machine = self.run.machine.build();
+        let parts = self
+            .partitions
+            .carve(&machine)
+            .map_err(|e| format!("bad serve scenario: {e}"))?;
+        for p in &parts {
+            if self.run.threads > 4 * p.num_tiles() as usize {
+                return Err(format!(
+                    "bad serve scenario: {} threads exceed partition {} \
+                     ({} tiles x 4 thread contexts)",
+                    self.run.threads,
+                    p.label(),
+                    p.num_tiles()
+                ));
+            }
+            p.view(&machine).map_err(|e| format!("bad serve scenario: {e}"))?;
+        }
+        Ok(())
     }
 
     /// Spec half of the scenario's JSON record (the report rides next to
-    /// it — see [`crate::serve::sweep`]).
+    /// it — see [`crate::serve::sweep`]). The spatial axes are emitted
+    /// only when they deviate from the baseline, so pre-partition records
+    /// keep their bytes — and a whole-chip `--partitions` run is
+    /// byte-identical to the plain driver's record.
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("run", self.run.to_json()),
             ("arrival", Json::str(self.arrival.label())),
             ("rho", Json::num(self.rho)),
             ("requests", Json::num(self.requests as f64)),
             ("queue_cap", Json::num(self.queue_cap as f64)),
             ("policy", Json::str(self.policy.label())),
-        ])
+        ];
+        if !self.partitions.is_whole() {
+            fields.push(("partitions", Json::str(self.partitions.label())));
+        }
+        if !self.admission.is_default() {
+            fields.push(("admission", Json::str(self.admission.label())));
+        }
+        if !self.sizes.is_single() {
+            fields.push(("size_mix", Json::str(self.sizes.label())));
+        }
+        Json::obj(fields)
     }
 
     /// Service time in cycles for a batch of `k` requests: one replay of
@@ -145,10 +264,33 @@ impl ServeScenario {
         cache[k - 1].unwrap().0
     }
 
+    /// True when none of the spatial axes deviate from the baseline —
+    /// the scenario routes through the original single-server loop.
+    /// Note the comparison is against `PartitionSpec::Whole` *exactly*:
+    /// an explicit `--partitions 1x1` routes through the multi-server
+    /// dispatcher, which `rust/tests/serve_partition.rs` exploits to pin
+    /// byte-identity across the two loops.
+    fn is_plain(&self) -> bool {
+        self.partitions == PartitionSpec::Whole
+            && self.admission.is_default()
+            && self.sizes.is_single()
+    }
+
     /// Run the scenario's discrete-event loop to completion and digest it.
     /// Deterministic at any `intra_jobs` (engine stats are byte-identical
     /// across intra-run worker counts).
     pub fn simulate(&self, intra_jobs: usize) -> ServeReport {
+        if self.is_plain() {
+            self.simulate_plain(intra_jobs)
+        } else {
+            dispatch::simulate(self, intra_jobs)
+        }
+    }
+
+    /// The original single-server event loop: one whole-chip server, FIFO
+    /// admission, fixed request size. Kept verbatim as the byte-identity
+    /// baseline the partitioned dispatcher is checked against.
+    fn simulate_plain(&self, intra_jobs: usize) -> ServeReport {
         let mut report = ServeReport::zero(self);
         if self.requests == 0 {
             return report;
@@ -180,7 +322,7 @@ impl ServeScenario {
                 Ev::Arrival => {
                     arrived += 1;
                     report.last_arrival_cycles = now;
-                    queue.offer(now);
+                    queue.offer(now, self.run.elems);
                     if arrived < self.requests {
                         events.at(now + gen.next_gap(), Ev::Arrival);
                     }
@@ -217,7 +359,7 @@ impl ServeScenario {
                 }
             };
             if let Some(k) = take {
-                in_flight = queue.take(k);
+                in_flight = queue.take(k, Admission::Fifo).iter().map(|r| r.arrival).collect();
                 let svc = self.service_cycles(&mut cache, k, intra_jobs);
                 report.batches += 1;
                 report.max_batch_served = report.max_batch_served.max(k as u64);
@@ -252,7 +394,7 @@ impl ServeScenario {
 /// configured rate): `completed ≤ arrived` and `makespan ≥ last arrival`
 /// make `completed_rps ≤ offered_rps` an identity, which is the
 /// throughput-conservation property `prop_serve` pins.
-fn rate_per_sec(n: u64, cycles: u64, clock_hz: f64) -> f64 {
+pub(crate) fn rate_per_sec(n: u64, cycles: u64, clock_hz: f64) -> f64 {
     if cycles == 0 {
         return 0.0;
     }
@@ -283,10 +425,14 @@ pub struct ServeReport {
     pub mean_cycles: f64,
     pub offered_rps: f64,
     pub completed_rps: f64,
+    /// Per-server slices when the chip is partitioned into more than one
+    /// server (empty — and absent from JSON — otherwise, so single-server
+    /// records keep their bytes).
+    pub servers: Vec<ServerSlice>,
 }
 
 impl ServeReport {
-    fn zero(s: &ServeScenario) -> ServeReport {
+    pub(crate) fn zero(s: &ServeScenario) -> ServeReport {
         ServeReport {
             offered: s.requests,
             ..ServeReport::default()
@@ -304,7 +450,7 @@ impl ServeReport {
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("offered", Json::num(self.offered as f64)),
             ("completed", Json::num(self.completed as f64)),
             ("dropped", Json::num(self.dropped as f64)),
@@ -324,7 +470,14 @@ impl ServeReport {
             ("p999_ms", Json::num(self.ms(self.p999_cycles))),
             ("offered_rps", Json::num(self.offered_rps)),
             ("completed_rps", Json::num(self.completed_rps)),
-        ])
+        ];
+        if !self.servers.is_empty() {
+            fields.push((
+                "servers",
+                Json::arr(self.servers.iter().map(ServerSlice::to_json).collect()),
+            ));
+        }
+        Json::obj(fields)
     }
 }
 
@@ -334,14 +487,14 @@ mod tests {
     use crate::coordinator::batch::RunSpec;
 
     fn tiny(rho: f64, requests: u64, policy: BatchPolicy) -> ServeScenario {
-        ServeScenario {
-            run: RunSpec::mergesort(8, 1 << 10, 4, 42),
-            arrival: ArrivalSpec::Poisson,
+        ServeScenario::new(
+            RunSpec::mergesort(8, 1 << 10, 4, 42),
+            ArrivalSpec::Poisson,
             rho,
             requests,
-            queue_cap: 1 << 20,
+            1 << 20,
             policy,
-        }
+        )
     }
 
     #[test]
@@ -412,9 +565,17 @@ mod tests {
         let mut s = tiny(1.0, 10, BatchPolicy::Immediate);
         s.queue_cap = 0;
         assert!(s.check().is_err());
-        let mut s = tiny(1.0, 10, BatchPolicy::Immediate);
-        s.run.elems = 4;
+        let s = tiny(1.0, 10, BatchPolicy::Immediate).with_sizes(SizeMix::single(4));
         assert!(s.check().is_err(), "request below 2x threads");
+        let mut s = tiny(1.0, 10, BatchPolicy::Immediate);
+        s.run.elems = 999;
+        assert!(s.check().is_err(), "template size out of sync with the mix's mean");
+        let s = tiny(1.0, 10, BatchPolicy::Immediate)
+            .with_partitions(PartitionSpec::parse("3x3").unwrap());
+        assert!(s.check().is_err(), "8x8 grid does not divide 3x3");
+        let s = tiny(1.0, 10, BatchPolicy::Immediate)
+            .with_partitions(PartitionSpec::parse("16").unwrap());
+        assert!(s.check().is_ok(), "4 threads fit a 2x2-tile partition");
         assert!(tiny(1.0, 10, BatchPolicy::Immediate).check().is_ok());
     }
 }

@@ -8,19 +8,25 @@
 //! request path as a deterministic discrete-event pipeline:
 //!
 //! ```text
-//!   open-loop arrivals        bounded FIFO           dispatcher            chip
-//!   (Poisson | bursty,   →   (drop-tail,       →   (immediate |     →   (Engine/RunSpec
-//!    seeded, rate = ρ/s₁)     --queue-cap)          batchN[@wait])        replay = service)
+//!   open-loop arrivals        bounded queue          dispatcher           chip
+//!   (Poisson | bursty,   →   (drop-tail,       →   (immediate |     →   (P partition
+//!    seeded, rate = ρ/s₁,     --queue-cap,          batchN[@wait],        servers; replay
+//!    sized by --size)         fifo | sjf take)      free-server pick)     = service)
 //! ```
 //!
-//! - [`arrivals`] — seeded open-loop arrival generators ([`ArrivalSpec`]).
-//! - [`queue`] — the bounded request queue and batching policies
-//!   ([`BatchPolicy`]).
+//! - [`arrivals`] — seeded open-loop arrival generators ([`ArrivalSpec`])
+//!   and the request-size mix they draw from ([`SizeMix`]).
+//! - [`queue`] — the bounded request queue, batching policies
+//!   ([`BatchPolicy`]), and the dispatch take order ([`Admission`]).
 //! - [`driver`] — one scenario's event loop and its latency/throughput
 //!   digest ([`ServeScenario`], [`ServeReport`]).
+//! - [`dispatch`] — the spatial multi-server loop: `--partitions` carves
+//!   the chip ([`crate::arch::PartitionSpec`]) and one logical server per
+//!   partition serves concurrent batches on disjoint tile sets
+//!   ([`ServerSlice`] is its per-server digest).
 //! - [`sweep`] — the `repro batch serve` grid (load × policy × machine ×
-//!   protocol), ladder structure, and saturation-knee detection
-//!   ([`ServeSweep`]).
+//!   protocol × partitioning), ladder structure, and saturation-knee
+//!   detection ([`ServeSweep`]).
 //!
 //! The chip simulator enters as *one component among queues*: a batch of
 //! `k` requests is served by one engine replay of the scenario's workload
@@ -37,11 +43,13 @@
 //! pinned in `rust/tests/prop_serve.rs`.
 
 pub mod arrivals;
+pub mod dispatch;
 pub mod driver;
 pub mod queue;
 pub mod sweep;
 
-pub use arrivals::{ArrivalGen, ArrivalSpec};
+pub use arrivals::{ArrivalGen, ArrivalSpec, SizeMix};
+pub use dispatch::ServerSlice;
 pub use driver::{ServeReport, ServeScenario};
-pub use queue::{BatchPolicy, RequestQueue};
+pub use queue::{Admission, BatchPolicy, RequestQueue};
 pub use sweep::{ServeSweep, KNEE_FRACTION};

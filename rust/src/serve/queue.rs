@@ -1,4 +1,4 @@
-//! Bounded request queue and batching policies.
+//! Bounded request queue, batching policies, and admission order.
 //!
 //! Admission is drop-tail: a request arriving at a full queue is counted
 //! and discarded — the open-loop generator never blocks, so past the
@@ -12,6 +12,13 @@
 //!   the per-replay fixed cost). `wait` caps how long the oldest request
 //!   may be held while the batch fills; `wait = 0` is greedy coalescing —
 //!   take whatever is queued whenever the server frees up.
+//!
+//! [`Admission`] decides *which* queued requests a dispatch takes:
+//! arrival order ([`Admission::Fifo`], the default) or smallest request
+//! first ([`Admission::Sjf`] — shortest-job-first by element count,
+//! arrival sequence as the deterministic tie-break). SJF only bites when
+//! the arrival stream mixes sizes (`--size 80%4ki,20%64ki`); with one
+//! size it degenerates to FIFO, which is why the CLI rejects that combo.
 
 use std::collections::VecDeque;
 
@@ -65,10 +72,53 @@ impl BatchPolicy {
     }
 }
 
-/// Bounded FIFO of pending requests, each remembered by its arrival cycle.
+/// Which queued requests a dispatch takes (`--admission`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Admission {
+    /// Arrival order.
+    #[default]
+    Fifo,
+    /// Shortest job first by element count; arrival sequence breaks ties,
+    /// so equal-sized requests still go in FIFO order.
+    Sjf,
+}
+
+impl Admission {
+    pub fn parse(s: &str) -> Result<Admission, String> {
+        match s {
+            "fifo" => Ok(Admission::Fifo),
+            "sjf" => Ok(Admission::Sjf),
+            _ => Err(format!("bad --admission '{s}': want fifo | sjf")),
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Admission::Fifo => "fifo",
+            Admission::Sjf => "sjf",
+        }
+    }
+
+    pub fn is_default(self) -> bool {
+        self == Admission::Fifo
+    }
+}
+
+/// One queued request: when it arrived, how big it is, and its admission
+/// sequence number (the SJF tie-break).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QueuedRequest {
+    pub arrival: u64,
+    pub elems: u64,
+    pub seq: u64,
+}
+
+/// Bounded queue of pending requests, FIFO by admission; [`Admission`]
+/// decides the *take* order at dispatch time.
 pub struct RequestQueue {
     capacity: usize,
-    q: VecDeque<u64>,
+    q: VecDeque<QueuedRequest>,
+    next_seq: u64,
     /// Requests refused at a full queue (drop-tail admission).
     pub dropped: u64,
     /// High-water mark of the queue depth.
@@ -80,31 +130,61 @@ impl RequestQueue {
         RequestQueue {
             capacity,
             q: VecDeque::new(),
+            next_seq: 0,
             dropped: 0,
             peak_depth: 0,
         }
     }
 
-    /// Admit a request that arrived at cycle `now`; returns `false` (and
-    /// counts the drop) when the queue is full.
-    pub fn offer(&mut self, now: u64) -> bool {
+    /// Admit a request of `elems` elements that arrived at cycle `now`;
+    /// returns `false` (and counts the drop) when the queue is full.
+    pub fn offer(&mut self, now: u64, elems: u64) -> bool {
         if self.q.len() >= self.capacity {
             self.dropped += 1;
             return false;
         }
-        self.q.push_back(now);
+        self.q.push_back(QueuedRequest { arrival: now, elems, seq: self.next_seq });
+        self.next_seq += 1;
         self.peak_depth = self.peak_depth.max(self.q.len());
         true
     }
 
-    /// Arrival cycle of the oldest queued request.
+    /// Arrival cycle of the oldest queued request (the batch-fill timer's
+    /// anchor, whatever the admission order — holding is about how stale
+    /// the queue is, not which request goes first).
     pub fn front_arrival(&self) -> Option<u64> {
-        self.q.front().copied()
+        self.q.front().map(|r| r.arrival)
     }
 
-    /// Dequeue the `n` oldest requests' arrival cycles (FIFO).
-    pub fn take(&mut self, n: usize) -> Vec<u64> {
-        self.q.drain(..n.min(self.q.len())).collect()
+    /// Size of the request a dispatch under `admission` would serve
+    /// first — the locality-affinity key of the multi-server dispatcher.
+    pub fn head_elems(&self, admission: Admission) -> Option<u64> {
+        match admission {
+            Admission::Fifo => self.q.front().map(|r| r.elems),
+            Admission::Sjf => self.q.iter().min_by_key(|r| (r.elems, r.seq)).map(|r| r.elems),
+        }
+    }
+
+    /// Dequeue `n` requests in `admission` order: the `n` oldest (FIFO)
+    /// or the `n` smallest by `(elems, seq)` (SJF). Clamps to the queue
+    /// length; the returned batch is in take order.
+    pub fn take(&mut self, n: usize, admission: Admission) -> Vec<QueuedRequest> {
+        let n = n.min(self.q.len());
+        match admission {
+            Admission::Fifo => self.q.drain(..n).collect(),
+            Admission::Sjf => {
+                let mut order: Vec<usize> = (0..self.q.len()).collect();
+                order.sort_by_key(|&i| (self.q[i].elems, self.q[i].seq));
+                order.truncate(n);
+                let batch: Vec<QueuedRequest> = order.iter().map(|&i| self.q[i]).collect();
+                // Remove back-to-front so earlier indices stay valid.
+                order.sort_unstable_by(|a, b| b.cmp(a));
+                for i in order {
+                    self.q.remove(i);
+                }
+                batch
+            }
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -136,18 +216,70 @@ mod tests {
     }
 
     #[test]
+    fn admission_parse_round_trips() {
+        for s in ["fifo", "sjf"] {
+            assert_eq!(Admission::parse(s).unwrap().label(), s);
+        }
+        assert!(Admission::parse("fifo").unwrap().is_default());
+        assert!(!Admission::parse("sjf").unwrap().is_default());
+        for s in ["", "FIFO", "shortest", "sjf2"] {
+            assert!(Admission::parse(s).is_err(), "{s} must not parse");
+        }
+    }
+
+    fn arrivals(q: &[QueuedRequest]) -> Vec<u64> {
+        q.iter().map(|r| r.arrival).collect()
+    }
+
+    #[test]
     fn queue_is_fifo_and_bounded() {
         let mut q = RequestQueue::new(3);
-        assert!(q.offer(10) && q.offer(20) && q.offer(30));
-        assert!(!q.offer(40), "fourth request must drop");
+        assert!(q.offer(10, 64) && q.offer(20, 64) && q.offer(30, 64));
+        assert!(!q.offer(40, 64), "fourth request must drop");
         assert_eq!(q.dropped, 1);
         assert_eq!(q.peak_depth, 3);
         assert_eq!(q.front_arrival(), Some(10));
-        assert_eq!(q.take(2), vec![10, 20]);
+        assert_eq!(q.head_elems(Admission::Fifo), Some(64));
+        assert_eq!(arrivals(&q.take(2, Admission::Fifo)), vec![10, 20]);
         assert_eq!(q.len(), 1);
         // Room again after the take.
-        assert!(q.offer(50));
-        assert_eq!(q.take(10), vec![30, 50], "take clamps to queue length");
+        assert!(q.offer(50, 64));
+        assert_eq!(
+            arrivals(&q.take(10, Admission::Fifo)),
+            vec![30, 50],
+            "take clamps to queue length"
+        );
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn sjf_takes_smallest_with_fifo_tie_break() {
+        let mut q = RequestQueue::new(8);
+        q.offer(1, 512);
+        q.offer(2, 64);
+        q.offer(3, 512);
+        q.offer(4, 64);
+        q.offer(5, 128);
+        // Head under SJF is the earliest 64; FIFO head is the 512.
+        assert_eq!(q.head_elems(Admission::Sjf), Some(64));
+        assert_eq!(q.head_elems(Admission::Fifo), Some(512));
+        // Fill-timer anchor stays the oldest arrival either way.
+        assert_eq!(q.front_arrival(), Some(1));
+        let batch = q.take(3, Admission::Sjf);
+        assert_eq!(arrivals(&batch), vec![2, 4, 5], "both 64s (in order), then 128");
+        // The two 512s remain, still in arrival order.
+        assert_eq!(arrivals(&q.take(10, Admission::Sjf)), vec![1, 3]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn seq_numbers_survive_interleaved_takes() {
+        let mut q = RequestQueue::new(8);
+        q.offer(1, 100);
+        q.offer(2, 100);
+        q.take(1, Admission::Sjf);
+        q.offer(3, 100);
+        // Ties break by admission sequence even across takes.
+        assert_eq!(arrivals(&q.take(2, Admission::Sjf)), vec![2, 3]);
     }
 }

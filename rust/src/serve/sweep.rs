@@ -1,11 +1,16 @@
 //! The serve scenario grid: offered load × batch policy × machine ×
-//! protocol, executed through the batch worker pool, digested into
-//! throughput-vs-offered-load ladders with saturation-knee detection.
+//! protocol × chip partitioning, executed through the batch worker pool,
+//! digested into throughput-vs-offered-load ladders with saturation-knee
+//! detection.
 //!
-//! Grid order is row-major over (machine, protocol, policy, ρ) with ρ
-//! innermost and ascending, so scenarios sharing everything but ρ are
-//! contiguous — each such group is one **ladder** (one curve of the
-//! throughput-vs-load plot). The knee of a ladder is the first rung whose
+//! Grid order is row-major over (machine, protocol, partitioning, policy,
+//! ρ) with ρ innermost and ascending, so scenarios sharing everything but
+//! ρ are contiguous — each such group is one **ladder** (one curve of the
+//! throughput-vs-load plot). Because the ρ anchor stays the whole-chip
+//! `s₁` whatever the partitioning (see [`crate::serve::dispatch`]), the
+//! ladders of a `--partitions` ladder-of-ladders share their arrival
+//! streams rung-for-rung: the knee moving right with P is a like-for-like
+//! comparison. The knee of a ladder is the first rung whose
 //! completed throughput falls below [`KNEE_FRACTION`] of its offered rate:
 //! below the knee the server keeps up (the drain after the last arrival is
 //! noise); past it the queue grows without bound over the horizon and
@@ -28,13 +33,13 @@
 //! every Json object serialises with sorted keys — so the record is
 //! byte-identical at any `--jobs`/`--intra-jobs`.
 
-use crate::arch::MachineSpec;
+use crate::arch::{MachineSpec, PartitionSpec};
 use crate::coherence::ProtocolSpec;
 use crate::coordinator::batch::{execute_indexed, BatchRunner, RunSpec};
 use crate::harness::SweepTable;
-use crate::serve::arrivals::ArrivalSpec;
+use crate::serve::arrivals::{ArrivalSpec, SizeMix};
 use crate::serve::driver::{ServeReport, ServeScenario};
-use crate::serve::queue::BatchPolicy;
+use crate::serve::queue::{Admission, BatchPolicy};
 use crate::util::json::Json;
 
 /// A ladder keeps up while `completed_rps >= KNEE_FRACTION * offered_rps`;
@@ -53,11 +58,12 @@ pub struct ServeSweep {
 
 impl ServeSweep {
     /// Expand the grid. `template` fixes the per-request workload (case,
-    /// size, threads, seed); machine/protocol are overlaid per cell.
-    /// Rungs (`rhos`) are sorted ascending per ladder. Link + coherence
-    /// billing turn on for non-default protocols (a directory protocol
-    /// with the links off measures nothing — same rule as the protocol
-    /// lab); `links` forces them on everywhere.
+    /// size, threads, seed); machine/protocol are overlaid per cell, and
+    /// the spatial axes (`partitions`, `admission`, `sizes`) apply to
+    /// every cell. Rungs (`rhos`) are sorted ascending per ladder. Link +
+    /// coherence billing turn on for non-default protocols (a directory
+    /// protocol with the links off measures nothing — same rule as the
+    /// protocol lab); `links` forces them on everywhere.
     pub fn grid(
         template: &RunSpec,
         machines: &[MachineSpec],
@@ -68,6 +74,9 @@ impl ServeSweep {
         requests: u64,
         queue_cap: usize,
         links: bool,
+        partitions: &PartitionSpec,
+        admission: Admission,
+        sizes: &SizeMix,
     ) -> ServeSweep {
         assert!(
             !machines.is_empty() && !protocols.is_empty() && !policies.is_empty(),
@@ -84,33 +93,48 @@ impl ServeSweep {
                 for &policy in policies {
                     let start = scenarios.len();
                     for &rho in &rhos {
-                        scenarios.push(ServeScenario {
-                            run: template
-                                .clone()
-                                .on_machine(m, billed, billed)
-                                .with_protocol(p),
-                            arrival,
-                            rho,
-                            requests,
-                            queue_cap,
-                            policy,
-                        });
+                        scenarios.push(
+                            ServeScenario::new(
+                                template
+                                    .clone()
+                                    .on_machine(m, billed, billed)
+                                    .with_protocol(p),
+                                arrival,
+                                rho,
+                                requests,
+                                queue_cap,
+                                policy,
+                            )
+                            .with_partitions(partitions.clone())
+                            .with_admission(admission)
+                            .with_sizes(sizes.clone()),
+                        );
                     }
                     let label = scenarios[start].ladder_label();
                     ladders.push((label, (start..scenarios.len()).collect()));
                 }
             }
         }
+        let mut extras = String::new();
+        if !partitions.is_whole() {
+            extras.push_str(&format!(", partitions {}", partitions.label()));
+        }
+        if !admission.is_default() {
+            extras.push_str(&format!(", admission {}", admission.label()));
+        }
         ServeSweep {
+            // `sizes.label()` prints a single size as bare digits, so
+            // pre-partition titles keep their bytes.
             title: format!(
                 "Serve front-end: {} request(s) of {} ints x {} thread(s) per replay, \
-                 {} arrivals ({} ladder(s) x {} rung(s))",
+                 {} arrivals ({} ladder(s) x {} rung(s)){}",
                 requests,
-                template.elems,
+                sizes.label(),
                 template.threads,
                 arrival.label(),
                 ladders.len(),
-                rhos.len()
+                rhos.len(),
+                extras
             ),
             scenarios,
             ladders,
@@ -268,6 +292,9 @@ mod tests {
             24,
             1 << 20,
             false,
+            &PartitionSpec::Whole,
+            Admission::Fifo,
+            &SizeMix::single(1 << 10),
         )
     }
 
@@ -319,11 +346,46 @@ mod tests {
             8,
             64,
             false,
+            &PartitionSpec::Whole,
+            Admission::Fifo,
+            &SizeMix::single(1 << 10),
         );
         assert!(!sw.scenarios[0].run.link_contention, "default stays baseline");
         assert!(sw.scenarios[1].run.link_contention);
         assert!(sw.scenarios[1].run.coherence_links);
         assert_ne!(sw.ladders[0].0, sw.ladders[1].0, "protocol in ladder label");
+    }
+
+    #[test]
+    fn partitioned_grid_carries_the_spatial_axes() {
+        let sw = ServeSweep::grid(
+            &RunSpec::mergesort(8, 1 << 10, 4, 42),
+            &[MachineSpec::TilePro64],
+            &[ProtocolSpec::default()],
+            &[BatchPolicy::Immediate],
+            ArrivalSpec::Poisson,
+            &[0.5, 2.0],
+            12,
+            1 << 20,
+            false,
+            &PartitionSpec::parse("2x2").unwrap(),
+            Admission::Sjf,
+            &SizeMix::parse("50%1024,50%4096").unwrap(),
+        );
+        sw.check().unwrap();
+        assert!(sw.title.contains("partitions 2x2"), "{}", sw.title);
+        assert!(sw.title.contains("admission sjf"), "{}", sw.title);
+        let label = &sw.ladders[0].0;
+        assert!(label.contains("part=2x2"), "{label}");
+        assert!(label.contains("adm=sjf"), "{label}");
+        assert!(label.contains("mix=50%1024,50%4096"), "{label}");
+        assert_eq!(
+            sw.scenarios[0].run.elems,
+            2560,
+            "template re-anchored at the mix's mean size"
+        );
+        let reports = sw.run(&BatchRunner::new(2));
+        assert_eq!(reports[0].servers.len(), 4, "per-server slices in the report");
     }
 
     #[test]

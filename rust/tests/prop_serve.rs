@@ -37,14 +37,14 @@ fn random_scenario(rng: &mut Rng) -> ServeScenario {
             burst: rng.range(2, 8) as u32,
         }
     };
-    ServeScenario {
-        run: RunSpec::mergesort(8, elems, threads, rng.next_u64()),
+    ServeScenario::new(
+        RunSpec::mergesort(8, elems, threads, rng.next_u64()),
         arrival,
-        rho: 0.2 + rng.f64() * 2.3,
-        requests: rng.below(48),
-        queue_cap: 1 + rng.below(64) as usize,
+        0.2 + rng.f64() * 2.3,
+        rng.below(48),
+        1 + rng.below(64) as usize,
         policy,
-    }
+    )
 }
 
 #[test]
@@ -86,18 +86,18 @@ fn prop_latency_is_monotone_in_offered_load() {
     prop::check("serve load monotonicity", 10, |rng| {
         // Fixed FIFO scenario (no drops, no batching) at two loads sharing
         // a seed: the higher load's latency digest dominates rung by rung.
-        let lo = ServeScenario {
-            run: RunSpec::mergesort(8, 1 << 9, 4, rng.next_u64()),
-            arrival: if rng.chance(0.5) {
+        let lo = ServeScenario::new(
+            RunSpec::mergesort(8, 1 << 9, 4, rng.next_u64()),
+            if rng.chance(0.5) {
                 ArrivalSpec::Poisson
             } else {
                 ArrivalSpec::Bursty { burst: 4 }
             },
-            rho: 0.2 + rng.f64() * 1.2,
-            requests: 24,
-            queue_cap: 1 << 20,
-            policy: BatchPolicy::Immediate,
-        };
+            0.2 + rng.f64() * 1.2,
+            24,
+            1 << 20,
+            BatchPolicy::Immediate,
+        );
         let mut hi = lo.clone();
         hi.rho = lo.rho + 0.1 + rng.f64() * 1.5;
         let rl = lo.simulate(1);

@@ -5,10 +5,11 @@
 //! record must actually carry the latency/throughput/knee content the
 //! acceptance bar names.
 
+use tilesim::arch::PartitionSpec;
 use tilesim::coherence::ProtocolSpec;
 use tilesim::coordinator::batch::{BatchRunner, RunSpec};
 use tilesim::coordinator::experiment;
-use tilesim::serve::{ArrivalGen, ArrivalSpec, BatchPolicy, ServeSweep};
+use tilesim::serve::{Admission, ArrivalGen, ArrivalSpec, BatchPolicy, ServeSweep, SizeMix};
 use tilesim::util::json::{parse, Json};
 
 const SEED: u64 = experiment::DEFAULT_SEED;
@@ -24,6 +25,9 @@ fn small_sweep() -> ServeSweep {
         32,
         1 << 10,
         false,
+        &PartitionSpec::Whole,
+        Admission::Fifo,
+        &SizeMix::single(1 << 10),
     )
 }
 

@@ -1,0 +1,201 @@
+//! Spatial multi-server serving: the partition/dispatch contracts named by
+//! the acceptance bar.
+//!
+//! - the JSON record is byte-identical at any `--jobs`/`--intra-jobs`
+//!   when the chip is partitioned (P > 1, with an admission order and a
+//!   request-size mix in play);
+//! - per-server accounting conserves requests: server slices sum to the
+//!   aggregate, and aggregate completed + dropped == offered;
+//! - an explicit single whole-chip partition (`--partitions 1x1`) routes
+//!   through the multi-server dispatcher yet reproduces the plain
+//!   single-server driver's bytes exactly — the two event loops are
+//!   equivalent, not merely similar;
+//! - at fixed ρ the completed throughput is monotone non-decreasing in
+//!   the partition count (every rung shares the whole-chip ρ anchor, so
+//!   the arrival streams are identical request-for-request);
+//! - carving is a true partition: sub-grids are pairwise disjoint, cover
+//!   exactly the chip, and their link maps compose injectively into the
+//!   parent mesh (XY routes never leave a rectangle).
+
+use std::collections::HashSet;
+
+use tilesim::arch::{Machine, PartitionSpec};
+use tilesim::coherence::ProtocolSpec;
+use tilesim::coordinator::batch::{BatchRunner, RunSpec};
+use tilesim::coordinator::experiment;
+use tilesim::metrics::partitioned_link_heatmap;
+use tilesim::serve::{Admission, ArrivalSpec, BatchPolicy, ServeScenario, ServeSweep, SizeMix};
+
+const SEED: u64 = experiment::DEFAULT_SEED;
+
+fn scenario(partitions: &str, rho: f64, requests: u64) -> ServeScenario {
+    ServeScenario::new(
+        RunSpec::mergesort(8, 1 << 10, 4, SEED),
+        ArrivalSpec::Poisson,
+        rho,
+        requests,
+        1 << 20,
+        BatchPolicy::Immediate,
+    )
+    .with_partitions(PartitionSpec::parse(partitions).unwrap())
+}
+
+#[test]
+fn partitioned_record_is_byte_identical_across_jobs_and_intra_jobs() {
+    let sweep = ServeSweep::grid(
+        &RunSpec::mergesort(8, 1 << 10, 4, SEED),
+        &experiment::serve_machines(),
+        &[ProtocolSpec::default()],
+        &[BatchPolicy::Immediate, BatchPolicy::Batch { max: 4, wait: 0 }],
+        ArrivalSpec::Poisson,
+        &[0.7, 2.0],
+        28,
+        1 << 10,
+        false,
+        &PartitionSpec::parse("2x2").unwrap(),
+        Admission::Sjf,
+        &SizeMix::parse("75%1024,25%4096").unwrap(),
+    );
+    sweep.check().unwrap();
+    let serial = sweep.to_json(&sweep.run(&BatchRunner::new(1))).encode();
+    for jobs in [2usize, 4] {
+        let parallel = sweep.to_json(&sweep.run(&BatchRunner::new(jobs))).encode();
+        assert_eq!(serial, parallel, "jobs={jobs} changed the partitioned record");
+    }
+    let intra = sweep
+        .to_json(&sweep.run(&BatchRunner::new(1).with_intra_jobs(4)))
+        .encode();
+    assert_eq!(serial, intra, "intra-run workers changed the partitioned record");
+}
+
+#[test]
+fn per_server_accounting_conserves_requests() {
+    let r = scenario("4", 2.5, 64).simulate(1);
+    assert_eq!(r.completed + r.dropped, 64, "every request completes or drops");
+    assert_eq!(r.servers.len(), 4);
+    assert_eq!(
+        r.servers.iter().map(|s| s.completed).sum::<u64>(),
+        r.completed,
+        "server slices must sum to the aggregate completions"
+    );
+    assert_eq!(r.servers.iter().map(|s| s.batches).sum::<u64>(), r.batches);
+    for s in &r.servers {
+        assert!(s.busy_cycles <= r.makespan_cycles, "{}", s.partition);
+        assert!((0.0..=1.0).contains(&s.utilisation), "{}", s.partition);
+        assert!(s.max_batch_served <= 1, "immediate policy serves one per batch");
+    }
+}
+
+#[test]
+fn single_partition_is_byte_identical_to_the_plain_driver() {
+    // `1x1` is a whole-chip carve that is NOT `PartitionSpec::Whole`, so
+    // it runs the multi-server event loop; its spec JSON still omits the
+    // partitions field (a whole-chip carve is the baseline). Both report
+    // and spec must reproduce the plain driver's bytes exactly.
+    for (rho, policy) in [
+        (0.6, BatchPolicy::Immediate),
+        (1.4, BatchPolicy::Batch { max: 4, wait: 0 }),
+        (1.4, BatchPolicy::Batch { max: 4, wait: 1 << 14 }),
+    ] {
+        let plain = ServeScenario::new(
+            RunSpec::mergesort(8, 1 << 10, 4, SEED),
+            ArrivalSpec::Poisson,
+            rho,
+            40,
+            1 << 20,
+            policy,
+        );
+        let routed = plain.clone().with_partitions(PartitionSpec::parse("1x1").unwrap());
+        assert_eq!(
+            plain.to_json().encode(),
+            routed.to_json().encode(),
+            "whole-chip carve must keep the spec bytes"
+        );
+        assert_eq!(
+            plain.simulate(1).to_json().encode(),
+            routed.simulate(1).to_json().encode(),
+            "dispatch loop must reproduce the plain driver at P=1 (rho={rho})"
+        );
+    }
+}
+
+#[test]
+fn throughput_is_monotone_in_partition_count_at_fixed_load() {
+    // Same whole-chip ρ anchor ⇒ same arrival stream on every rung; more
+    // servers can only drain it sooner.
+    for rho in [2.0, 4.0] {
+        let whole = scenario("whole", rho, 72).simulate(1);
+        let half = scenario("2", rho, 72).simulate(1);
+        let quad = scenario("4", rho, 72).simulate(1);
+        assert_eq!(whole.offered_rps, half.offered_rps, "shared arrival stream");
+        assert_eq!(whole.offered_rps, quad.offered_rps, "shared arrival stream");
+        assert!(
+            half.completed_rps >= whole.completed_rps,
+            "rho={rho}: 2 partitions slower than 1 ({} < {})",
+            half.completed_rps,
+            whole.completed_rps
+        );
+        assert!(
+            quad.completed_rps >= half.completed_rps,
+            "rho={rho}: 4 partitions slower than 2 ({} < {})",
+            quad.completed_rps,
+            half.completed_rps
+        );
+    }
+}
+
+#[test]
+fn carving_is_disjoint_and_covers_the_chip() {
+    let machines = [Machine::tilepro64(), Machine::nuca256()];
+    for m in &machines {
+        for spec in ["2", "4", "8", "16", "2x2", "4x2", "rows2", "rows4", "cols2", "1x1"] {
+            let parts = PartitionSpec::parse(spec).unwrap().carve(m).unwrap();
+            let mut seen: HashSet<u32> = HashSet::new();
+            for p in &parts {
+                for t in p.tiles(m) {
+                    assert!(
+                        seen.insert(t.0),
+                        "{spec} on {}: tile {} in two partitions",
+                        m.name(),
+                        t.0
+                    );
+                }
+            }
+            assert_eq!(
+                seen.len() as u32,
+                m.num_tiles(),
+                "{spec} on {}: carve must cover every tile exactly once",
+                m.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn partition_link_maps_compose_injectively_into_the_parent() {
+    // Geometry half: every view-local link of every partition maps to a
+    // parent link rooted at a tile inside that partition, and no two
+    // (partition, local-link) pairs collide — composition is exact
+    // addition, never double-counting.
+    let m = Machine::tilepro64();
+    let parts = PartitionSpec::parse("2x2").unwrap().carve(&m).unwrap();
+    let mut seen: HashSet<usize> = HashSet::new();
+    for p in &parts {
+        let local_links = 4 * p.num_tiles() as usize;
+        for i in 0..local_links {
+            let g = p.global_link_index(&m, i);
+            assert!(g < m.num_links());
+            assert!(seen.insert(g), "{}: parent link {g} mapped twice", p.label());
+        }
+    }
+
+    // Replay half: run each partition's replay with link billing on and
+    // compose the maps into one parent heatmap.
+    let mut run = RunSpec::mergesort(8, 1 << 10, 4, SEED);
+    run.link_contention = true;
+    let stats: Vec<_> = parts.iter().map(|p| run.on_partition(p, &m, 1)).collect();
+    let slices: Vec<_> = parts.iter().zip(stats.iter()).collect();
+    let map = partitioned_link_heatmap(&slices, &m).unwrap();
+    assert!(map.contains("4 partition server(s)"), "{map}");
+    assert!(map.contains("packets total"), "{map}");
+}
